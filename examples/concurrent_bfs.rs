@@ -1,0 +1,81 @@
+//! The Figure-3/4 experiment as a library client: sweep the number of
+//! concurrent BFS queries on both Pathfinder configurations and plot (as
+//! text) total time and improvement, including the §IV-B observations —
+//! linear growth in query count, sub-linear 8→32-node scaling, and the
+//! thread-context wall at 256 queries on 8 nodes.
+//!
+//! ```bash
+//! cargo run --release --example concurrent_bfs -- [--scale 14] [--counts 1,8,32,128]
+//! ```
+
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::coordinator::{planner, Coordinator, Policy};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::cli::Args;
+use pathfinder_queries::util::format::{fmt_pct, fmt_s, TextTable};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let scale: u32 = args.opt_parse_or("scale", 14)?;
+    let counts: Vec<usize> = args
+        .opt_list("counts")?
+        .unwrap_or_else(|| vec![1, 8, 16, 32, 64, 128]);
+
+    let gcfg = GraphConfig::with_scale(scale);
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    eprintln!("graph: {} vertices, {} directed edges", g.n(), g.m_directed());
+
+    let max_q = counts.iter().copied().max().unwrap_or(1);
+    let mut table = TextTable::new(vec![
+        "machine", "queries", "concurrent", "sequential", "improvement",
+    ]);
+    let mut t128 = Vec::new(); // (machine, conc_s, seq_s) at the largest count
+
+    for preset in ["pathfinder-8", "pathfinder-32"] {
+        let machine = Machine::new(MachineConfig::preset(preset).unwrap());
+        let coordinator = Coordinator::new(&g, machine);
+        let queries = planner::bfs_queries(&g, max_q.min(coordinator.capacity()), 0xBF5);
+        let specs = coordinator.prepare(&queries);
+
+        for &k in counts.iter().filter(|&&k| k <= queries.len()) {
+            let conc =
+                coordinator.run_specs(&queries[..k], &specs[..k], Policy::Concurrent)?;
+            let seq =
+                coordinator.run_specs(&queries[..k], &specs[..k], Policy::Sequential)?;
+            let impr = (seq.makespan_s / conc.makespan_s - 1.0) * 100.0;
+            table.row(vec![
+                preset.to_string(),
+                k.to_string(),
+                fmt_s(conc.makespan_s),
+                fmt_s(seq.makespan_s),
+                fmt_pct(impr),
+            ]);
+            if k == max_q {
+                t128.push((preset, conc.makespan_s, seq.makespan_s));
+            }
+        }
+    }
+    println!("{}", table.render());
+
+    if let [(_, c8, s8), (_, c32, s32)] = t128[..] {
+        println!(
+            "8->32-node speed-up at q={max_q}: {:.2}x concurrent, {:.2}x sequential \
+             (paper: 2.69x / 3.24x)",
+            c8 / c32,
+            s8 / s32
+        );
+    }
+
+    // The §IV-B wall: 256 concurrent queries exhaust 8-node context memory.
+    let coordinator =
+        Coordinator::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let too_many = planner::bfs_queries(&g, coordinator.capacity() + 1, 0xBF5);
+    match coordinator.run(&too_many, Policy::Concurrent) {
+        Err(e) => println!("\n{} queries on pathfinder-8: {e}", too_many.len()),
+        Ok(_) => unreachable!("over-capacity run must fail"),
+    }
+    Ok(())
+}

@@ -1,0 +1,70 @@
+//! A web-accessible graph database deployment (the paper's §I motivation):
+//! the Pathfinder as a long-running service behind admission control.
+//!
+//! Queries arrive as a Poisson stream with a CC fraction; thread-context
+//! memory bounds in-flight work (the §IV-B exhaustion becomes queueing or
+//! rejection); the operator report shows per-class latency, throughput and
+//! channel utilization. Sweeping the offered load shows the service
+//! saturating exactly where the concurrency experiments say it should.
+//!
+//! ```bash
+//! cargo run --release --example graph_service -- [--scale 13] [--machine pathfinder-8]
+//! ```
+
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::coordinator::{GraphService, ServiceConfig};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::sim::flow::OnFull;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let scale: u32 = args.opt_parse_or("scale", 13)?;
+    let preset = args.opt_or("machine", "pathfinder-8");
+
+    let gcfg = GraphConfig::with_scale(scale);
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    let mcfg = MachineConfig::preset(&preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset:?}"))?;
+    let service = GraphService::new(&g, Machine::new(mcfg));
+
+    println!(
+        "graph service on {preset}: {} vertices, capacity {} concurrent queries\n",
+        g.n(),
+        service.coordinator().capacity()
+    );
+
+    // Sweep the offered load from idle to overload.
+    for rate in [50.0, 200.0, 1000.0, 5000.0, 20000.0] {
+        let cfg = ServiceConfig {
+            queries: 300,
+            arrival_rate_per_s: rate,
+            cc_fraction: 0.1,
+            on_full: OnFull::Queue,
+            seed: 0x5E21,
+        };
+        let rep = service.serve(&cfg)?;
+        println!("offered {rate:>7.0} q/s:");
+        println!("{}", indent(&rep.summary()));
+    }
+
+    // Overload with rejection instead of queueing.
+    println!("same burst with admission control set to REJECT:");
+    let cfg = ServiceConfig {
+        queries: 300,
+        arrival_rate_per_s: 20000.0,
+        cc_fraction: 0.1,
+        on_full: OnFull::Reject,
+        seed: 0x5E21,
+    };
+    let rep = service.serve(&cfg)?;
+    println!("{}", indent(&rep.summary()));
+    Ok(())
+}
+
+fn indent(s: &str) -> String {
+    s.lines().map(|l| format!("    {l}\n")).collect()
+}

@@ -1,0 +1,47 @@
+//! Quickstart: the library in ~40 lines.
+//!
+//! Generate a Graph500-style R-MAT graph, stand up a coordinator on the
+//! simulated 8-node Pathfinder, run the same 32 BFS queries sequentially
+//! and concurrently, and print the paper's headline comparison.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::coordinator::{planner, Coordinator, ImprovementRow, Policy};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::sim::machine::Machine;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A scale-14 R-MAT graph (16k vertices, ~400k directed edges).
+    let gcfg = GraphConfig::with_scale(14);
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    println!("graph: {} vertices, {} directed edges", g.n(), g.m_directed());
+
+    // 2. A coordinator on the single-chassis, 8-node Pathfinder.
+    let machine = Machine::new(MachineConfig::pathfinder_8());
+    let coordinator = Coordinator::new(&g, machine);
+
+    // 3. 32 BFS queries from unique pseudorandom sources (§IV-A).
+    let queries = planner::bfs_queries(&g, 32, 0xBF5);
+
+    // 4. Run them both ways.
+    let concurrent = coordinator.run(&queries, Policy::Concurrent)?;
+    let sequential = coordinator.run(&queries, Policy::Sequential)?;
+
+    // 5. The paper's comparison.
+    let row = ImprovementRow::from_reports(&concurrent, &sequential);
+    println!("concurrent: {:.4} s  (channel utilization {:.0}%)",
+        concurrent.makespan_s, concurrent.mean_channel_utilization * 100.0);
+    println!("sequential: {:.4} s  (channel utilization {:.0}%)",
+        sequential.makespan_s, sequential.mean_channel_utilization * 100.0);
+    println!(
+        "improvement: {:.1}%  ({:.2}x) — the paper reports >100% on this machine",
+        row.improvement_pct(),
+        row.speedup()
+    );
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: JAX model (L2) + Pallas kernels (L1) -> HLO text.
+
+Nothing in this package runs at query time. ``compile.aot`` is invoked once
+by ``make artifacts``; the rust coordinator loads the resulting HLO text
+through PJRT (see rust/src/runtime/).
+"""

@@ -1,0 +1,108 @@
+"""AOT export: lower the L2 step functions to HLO *text* + a variant manifest.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --outdir ../artifacts
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+``xla`` crate's bundled xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``). The HLO *text* parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md). Lowering uses ``return_tuple=True`` so the
+rust side unwraps a single tuple result.
+
+Variants: one HLO module per (kind, batch, n) — PJRT executables are
+shape-monomorphic, and the rust dynamic batcher picks the smallest variant
+that fits the batch it formed. The manifest (artifacts/manifest.json) tells
+the rust runtime what exists without it having to parse HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+DEFAULT_N = 1024
+DEFAULT_BATCHES = (1, 8, 32, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bfs_step(batch: int, n: int) -> str:
+    specs = model.bfs_step_specs(batch, n)
+    return to_hlo_text(jax.jit(model.bfs_step).lower(*specs))
+
+
+def lower_cc_step(n: int) -> str:
+    specs = model.cc_step_specs(n)
+    return to_hlo_text(jax.jit(model.cc_step).lower(*specs))
+
+
+def export_all(outdir: str, n: int, batches) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    entries = []
+
+    def emit(name: str, kind: str, batch: int, text: str, outputs):
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kind": kind,
+                "batch": batch,
+                "n": n,
+                "path": path,
+                "outputs": outputs,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            }
+        )
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    for b in batches:
+        emit(
+            f"bfs_step_b{b}_n{n}",
+            "bfs_step",
+            b,
+            lower_bfs_step(b, n),
+            ["next_frontier", "visited", "levels", "active"],
+        )
+    emit(f"cc_step_n{n}", "cc_step", 0, lower_cc_step(n), ["labels", "changed"])
+
+    manifest = {"version": 1, "n": n, "entries": entries}
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote manifest.json ({len(entries)} variants)")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--n", type=int, default=DEFAULT_N)
+    ap.add_argument(
+        "--batches",
+        type=lambda s: tuple(int(x) for x in s.split(",")),
+        default=DEFAULT_BATCHES,
+    )
+    args = ap.parse_args()
+    print(f"AOT export -> {args.outdir} (n={args.n}, batches={args.batches})")
+    export_all(args.outdir, args.n, args.batches)
+
+
+if __name__ == "__main__":
+    main()

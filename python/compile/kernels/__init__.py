@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for the GraphBLAS-semantics baseline engine.
+
+These implement the hot spots of the RedisGraph comparison platform from the
+paper (Section IV-D): RedisGraph's BFS is a masked boolean matrix-vector
+product on GraphBLAS; its connectivity primitive is a masked min reduction.
+
+All kernels are lowered with ``interpret=True`` so the HLO runs on the CPU
+PJRT client (real-TPU Mosaic custom-calls are not loadable there). Kernels
+are validated against the pure-jnp oracles in :mod:`compile.kernels.ref`.
+"""
+
+from compile.kernels.frontier import frontier_expand
+from compile.kernels.minhook import min_hook
+
+__all__ = ["frontier_expand", "min_hook"]

@@ -1,0 +1,89 @@
+"""BFS frontier expansion as a blocked, masked boolean mat-mul Pallas kernel.
+
+GraphBLAS semantics (what RedisGraph's ``algo.BFS`` executes underneath):
+
+    next_frontier = (frontier (any.and) A) .* (not visited)
+
+over the boolean semiring. We emulate the boolean semiring on the MXU with
+f32 arithmetic: the 0/1 matmul accumulates edge multiplicities, and the fused
+epilogue saturates at 1 and applies the complement mask. All values stay
+exactly representable in f32 (accumulated counts are bounded by N < 2**24),
+so the emulation is exact, not approximate.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles HBM-resident
+``adj`` into (bk, bn) VMEM blocks streamed through BlockSpec; the output
+block is the VMEM accumulator that lives across the K-loop (innermost grid
+dimension); the epilogue (saturate + mask) runs on the VPU on the final K
+step, avoiding a second pass over the output.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _expand_kernel(f_ref, a_ref, v_ref, o_ref, *, k_blocks: int):
+    """One (b, n) output block; grid dim 2 iterates K blocks (innermost)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Boolean semiring "any.and" emulated as f32 matmul; exact for 0/1 data.
+    o_ref[...] += jnp.dot(f_ref[...], a_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_blocks - 1)
+    def _epilogue():
+        # Saturate multiplicities to {0,1} and mask out visited vertices.
+        hit = jnp.minimum(o_ref[...], 1.0)
+        o_ref[...] = hit * (1.0 - v_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_n", "block_k"))
+def frontier_expand(
+    frontier: jax.Array,
+    adj: jax.Array,
+    visited: jax.Array,
+    *,
+    block_b: int = 8,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Expand a batch of BFS frontiers one level.
+
+    Args:
+      frontier: (B, N) f32 0/1 — one row per concurrent BFS query.
+      adj:      (N, N) f32 0/1 — adj[i, j] == 1 iff edge i -> j.
+      visited:  (B, N) f32 0/1 — vertices already discovered per query.
+      block_*:  VMEM tile sizes; 128 matches the MXU systolic array edge.
+
+    Returns:
+      (B, N) f32 0/1 next frontier: reachable-in-one-hop and not visited.
+    """
+    b, n = frontier.shape
+    assert adj.shape == (n, n), (adj.shape, n)
+    assert visited.shape == (b, n)
+    block_b = min(block_b, b)
+    block_n = min(block_n, n)
+    block_k = min(block_k, n)
+    assert b % block_b == 0 and n % block_n == 0 and n % block_k == 0
+    k_blocks = n // block_k
+
+    grid = (b // block_b, n // block_n, k_blocks)
+    return pl.pallas_call(
+        functools.partial(_expand_kernel, k_blocks=k_blocks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda ib, jn, kk: (ib, kk)),
+            pl.BlockSpec((block_k, block_n), lambda ib, jn, kk: (kk, jn)),
+            pl.BlockSpec((block_b, block_n), lambda ib, jn, kk: (ib, jn)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda ib, jn, kk: (ib, jn)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,  # CPU-PJRT execution; see module docstring.
+    )(frontier, adj, visited)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Used by pytest as the correctness ground truth and kept deliberately
+one-line-obvious: any divergence between a kernel and its oracle is a kernel
+bug, never an oracle bug.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def frontier_expand_ref(frontier: jax.Array, adj: jax.Array, visited: jax.Array) -> jax.Array:
+    """Oracle for :func:`compile.kernels.frontier.frontier_expand`."""
+    hits = jnp.minimum(frontier @ adj, 1.0)
+    return hits * (1.0 - visited)
+
+
+def min_hook_ref(labels: jax.Array, adj: jax.Array) -> jax.Array:
+    """Oracle for :func:`compile.kernels.minhook.min_hook`."""
+    contrib = jnp.where(adj > 0.0, labels.reshape(-1, 1), jnp.inf)
+    return jnp.minimum(labels, contrib.min(axis=0))

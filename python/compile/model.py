@@ -1,0 +1,95 @@
+"""Layer-2 JAX compute graphs for the GraphBLAS baseline engine.
+
+These are the *whole-step* computations the rust runtime executes per BFS
+level / per SV iteration; the Pallas kernels from :mod:`compile.kernels` are
+the hot spots inside them, so kernel + epilogue lower into one HLO module
+(one PJRT executable per (kind, batch, n) variant — see :mod:`compile.aot`).
+
+Everything is f32: levels and labels are small integers, exactly
+representable; keeping a single dtype keeps the rust Literal plumbing simple.
+
+Step functions, not whole-query loops, are exported: BFS depth is
+data-dependent, and the rust coordinator owns the convergence loop (it also
+owns batching, admission and timing — the L3 contribution). Each step
+returns a cheap scalar the coordinator uses to decide termination without
+scanning the full output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.frontier import frontier_expand
+from compile.kernels.minhook import min_hook
+
+
+def bfs_step(adj, frontier, visited, levels, depth):
+    """One level-synchronous BFS step for a batch of concurrent queries.
+
+    Args:
+      adj:      (N, N) f32 0/1 adjacency.
+      frontier: (B, N) f32 0/1 current frontier per query.
+      visited:  (B, N) f32 0/1 discovered set per query (includes frontier).
+      levels:   (B, N) f32 — BFS level per vertex, -1 for undiscovered.
+      depth:    scalar f32 — the level being assigned this step.
+
+    Returns:
+      (next_frontier, visited', levels', active) where active is a (B,)
+      vector of next-frontier population counts (0 => that query finished).
+    """
+    nxt = frontier_expand(frontier, adj, visited)
+    visited = jnp.minimum(visited + nxt, 1.0)
+    levels = jnp.where(nxt > 0.0, depth, levels)
+    active = jnp.sum(nxt, axis=1)
+    return nxt, visited, levels, active
+
+
+def cc_step(adj, labels):
+    """One Shiloach-Vishkin iteration: hook sweep + full pointer-jump compress.
+
+    Mirrors the paper's Figure 2 loop body on GraphBLAS semantics: the hook
+    is the masked-min product (remote_min analogue); the compress phase
+    pointer-jumps labels until every label is a root. ceil(log2 N) jumps
+    fully flatten any min-tree, so a fixed fori_loop keeps the HLO static.
+
+    Args:
+      adj:    (N, N) f32 0/1 adjacency (directed representation).
+      labels: (N,) f32 tentative component labels.
+
+    Returns:
+      (labels', changed) — changed is a scalar count of vertices whose label
+      shrank this iteration (0 => converged), the paper's `changed` flag.
+    """
+    (n,) = labels.shape
+    hooked = min_hook(labels, adj)
+
+    jumps = max(1, int(n).bit_length())
+
+    def jump(_, lab):
+        return jnp.minimum(lab, lab[lab.astype(jnp.int32)])
+
+    compressed = jax.lax.fori_loop(0, jumps, jump, hooked)
+    changed = jnp.sum((compressed != labels).astype(jnp.float32))
+    return compressed, changed
+
+
+def bfs_step_specs(batch: int, n: int):
+    """Input ShapeDtypeStructs for lowering `bfs_step` at a fixed variant."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),      # adj
+        jax.ShapeDtypeStruct((batch, n), f32),  # frontier
+        jax.ShapeDtypeStruct((batch, n), f32),  # visited
+        jax.ShapeDtypeStruct((batch, n), f32),  # levels
+        jax.ShapeDtypeStruct((), f32),          # depth
+    )
+
+
+def cc_step_specs(n: int):
+    """Input ShapeDtypeStructs for lowering `cc_step` at a fixed variant."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),  # adj
+        jax.ShapeDtypeStruct((n,), f32),    # labels
+    )

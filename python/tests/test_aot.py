@@ -1,0 +1,59 @@
+"""AOT export smoke tests: HLO text must be parseable interchange.
+
+These do not execute through PJRT-from-rust (cargo tests do that); they check
+the text artifact invariants the rust loader depends on.
+"""
+
+import json
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def small_manifest(tmp_path_factory):
+    outdir = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export_all(str(outdir), n=128, batches=(1, 2))
+    return outdir, manifest
+
+
+def test_manifest_entries(small_manifest):
+    _, manifest = small_manifest
+    kinds = [(e["kind"], e["batch"]) for e in manifest["entries"]]
+    assert ("bfs_step", 1) in kinds
+    assert ("bfs_step", 2) in kinds
+    assert ("cc_step", 0) in kinds
+
+
+def test_hlo_text_shape(small_manifest):
+    outdir, manifest = small_manifest
+    for entry in manifest["entries"]:
+        text = (outdir / entry["path"]).read_text()
+        assert "ENTRY" in text, entry["name"]
+        assert "HloModule" in text, entry["name"]
+        # Tuple return (return_tuple=True) is what the rust side unwraps.
+        assert "tuple" in text.lower(), entry["name"]
+
+
+def test_manifest_json_round_trip(small_manifest):
+    outdir, manifest = small_manifest
+    on_disk = json.loads((outdir / "manifest.json").read_text())
+    assert on_disk == manifest
+
+
+def test_bfs_step_io_arity(small_manifest):
+    _, manifest = small_manifest
+    for entry in manifest["entries"]:
+        if entry["kind"] == "bfs_step":
+            assert entry["outputs"] == ["next_frontier", "visited", "levels", "active"]
+        else:
+            assert entry["outputs"] == ["labels", "changed"]
+
+
+def test_no_custom_calls(small_manifest):
+    """interpret=True must lower to plain HLO (no Mosaic custom-calls)."""
+    outdir, manifest = small_manifest
+    for entry in manifest["entries"]:
+        text = (outdir / entry["path"]).read_text()
+        assert "custom-call" not in text, entry["name"]

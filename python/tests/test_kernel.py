@@ -1,0 +1,109 @@
+"""L1 correctness: frontier_expand Pallas kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the baseline engine's hot spot —
+exact equality is required (the boolean-semiring emulation is exact in f32).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_array_equal
+
+from compile.kernels.frontier import frontier_expand
+from compile.kernels.ref import frontier_expand_ref
+
+
+def random_instance(rng, b, n, density=0.05):
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(adj, 0.0)
+    frontier = (rng.random((b, n)) < 0.1).astype(np.float32)
+    visited = np.maximum(frontier, (rng.random((b, n)) < 0.2).astype(np.float32))
+    return frontier, adj, visited
+
+
+@pytest.mark.parametrize("b", [1, 2, 8])
+@pytest.mark.parametrize("n", [128, 256])
+def test_matches_ref(b, n):
+    rng = np.random.default_rng(b * 1000 + n)
+    frontier, adj, visited = random_instance(rng, b, n)
+    got = np.asarray(frontier_expand(frontier, adj, visited))
+    want = np.asarray(frontier_expand_ref(frontier, adj, visited))
+    assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize(
+    "block_b,block_n,block_k",
+    [(1, 128, 128), (2, 64, 128), (4, 128, 64), (8, 32, 32), (8, 256, 256)],
+)
+def test_block_shapes(block_b, block_n, block_k):
+    """Tiling must never change the result."""
+    rng = np.random.default_rng(7)
+    frontier, adj, visited = random_instance(rng, 8, 256)
+    got = np.asarray(
+        frontier_expand(
+            frontier, adj, visited, block_b=block_b, block_n=block_n, block_k=block_k
+        )
+    )
+    want = np.asarray(frontier_expand_ref(frontier, adj, visited))
+    assert_array_equal(got, want)
+
+
+def test_empty_frontier_stays_empty():
+    n = 128
+    rng = np.random.default_rng(3)
+    _, adj, visited = random_instance(rng, 2, n)
+    frontier = np.zeros((2, n), np.float32)
+    out = np.asarray(frontier_expand(frontier, adj, visited))
+    assert_array_equal(out, np.zeros_like(out))
+
+
+def test_all_visited_blocks_everything():
+    n = 128
+    rng = np.random.default_rng(4)
+    frontier, adj, _ = random_instance(rng, 2, n)
+    visited = np.ones((2, n), np.float32)
+    out = np.asarray(frontier_expand(frontier, adj, visited))
+    assert_array_equal(out, np.zeros_like(out))
+
+
+def test_dense_adjacency_saturates_to_one():
+    """High-multiplicity hits must clamp to exactly 1.0 (boolean semiring)."""
+    n, b = 128, 2
+    adj = np.ones((n, n), np.float32)
+    frontier = np.ones((b, n), np.float32)
+    visited = np.zeros((b, n), np.float32)
+    out = np.asarray(frontier_expand(frontier, adj, visited))
+    assert_array_equal(out, np.ones_like(out))
+
+
+def test_output_is_binary():
+    rng = np.random.default_rng(5)
+    frontier, adj, visited = random_instance(rng, 4, 256, density=0.3)
+    out = np.asarray(frontier_expand(frontier, adj, visited))
+    assert set(np.unique(out)).issubset({0.0, 1.0})
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    b=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([128, 256]),
+    density=st.floats(0.0, 0.5),
+)
+def test_hypothesis_sweep(seed, b, n, density):
+    """Property: kernel == oracle for arbitrary binary instances."""
+    rng = np.random.default_rng(seed)
+    frontier, adj, visited = random_instance(rng, b, n, density)
+    got = np.asarray(frontier_expand(frontier, adj, visited))
+    want = np.asarray(frontier_expand_ref(frontier, adj, visited))
+    assert_array_equal(got, want)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**32 - 1))
+def test_hypothesis_monotone_visited(seed):
+    """Property: next frontier never intersects visited."""
+    rng = np.random.default_rng(seed)
+    frontier, adj, visited = random_instance(rng, 2, 128, 0.2)
+    out = np.asarray(frontier_expand(frontier, adj, visited))
+    assert np.all(out * visited == 0.0)

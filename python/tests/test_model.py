@@ -1,0 +1,159 @@
+"""L2 correctness: whole-step functions vs plain-python graph oracles.
+
+The oracles here are textbook BFS (adjacency-list queue) and union-find —
+independent of jnp — so the whole kernel+epilogue stack is checked
+end-to-end, not just the kernels in isolation.
+"""
+
+import collections
+
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from compile import model
+
+
+def rmat_like(rng, n, avg_deg=8):
+    """Skewed random graph (rough R-MAT stand-in) as a symmetric 0/1 matrix."""
+    m = n * avg_deg // 2
+    # Skew endpoints toward low ids, like R-MAT's recursive bias.
+    u = np.minimum(rng.integers(0, n, m), rng.integers(0, n, m))
+    v = rng.integers(0, n, m)
+    adj = np.zeros((n, n), np.float32)
+    adj[u, v] = 1.0
+    adj[v, u] = 1.0
+    np.fill_diagonal(adj, 0.0)
+    return adj
+
+
+def bfs_oracle(adj, src):
+    n = adj.shape[0]
+    lev = np.full(n, -1.0, np.float32)
+    lev[src] = 0.0
+    q = collections.deque([src])
+    nbrs = [np.nonzero(adj[i])[0] for i in range(n)]
+    while q:
+        u = q.popleft()
+        for w in nbrs[u]:
+            if lev[w] < 0:
+                lev[w] = lev[u] + 1
+                q.append(w)
+    return lev
+
+
+def cc_oracle(adj):
+    n = adj.shape[0]
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in zip(*np.nonzero(adj)):
+        ru, rv = find(int(u)), find(int(v))
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    # Canonical label = min vertex id in the component.
+    return np.array([find(i) for i in range(n)], np.float32)
+
+
+def run_bfs_via_steps(adj, sources):
+    """Drive model.bfs_step to convergence exactly as the rust runtime does."""
+    b, n = len(sources), adj.shape[0]
+    frontier = np.zeros((b, n), np.float32)
+    frontier[np.arange(b), sources] = 1.0
+    visited = frontier.copy()
+    levels = np.full((b, n), -1.0, np.float32)
+    levels[np.arange(b), sources] = 0.0
+    depth = 1.0
+    while True:
+        frontier, visited, levels, active = (
+            np.asarray(x) for x in model.bfs_step(adj, frontier, visited, levels, depth)
+        )
+        if active.sum() == 0:
+            return levels
+        depth += 1.0
+
+
+def run_cc_via_steps(adj, max_iter=64):
+    n = adj.shape[0]
+    labels = np.arange(n, dtype=np.float32)
+    for _ in range(max_iter):
+        labels, changed = (np.asarray(x) for x in model.cc_step(adj, labels))
+        if changed == 0:
+            return labels
+    raise AssertionError("cc did not converge")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_bfs_levels_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    adj = rmat_like(rng, 256)
+    sources = rng.choice(256, size=4, replace=False)
+    levels = run_bfs_via_steps(adj, sources)
+    for i, s in enumerate(sources):
+        assert_array_equal(levels[i], bfs_oracle(adj, s))
+
+
+def test_bfs_batch_independence():
+    """Each batch lane must behave exactly as if run alone."""
+    rng = np.random.default_rng(9)
+    adj = rmat_like(rng, 128)
+    srcs = [5, 17, 99]
+    batched = run_bfs_via_steps(adj, np.array(srcs))
+    for i, s in enumerate(srcs):
+        solo = run_bfs_via_steps(adj, np.array([s]))
+        assert_array_equal(batched[i], solo[0])
+
+
+def test_bfs_disconnected_vertex():
+    n = 128
+    adj = np.zeros((n, n), np.float32)
+    adj[0, 1] = adj[1, 0] = 1.0
+    levels = run_bfs_via_steps(adj, np.array([0]))
+    want = np.full(n, -1.0, np.float32)
+    want[0], want[1] = 0.0, 1.0
+    assert_array_equal(levels[0], want)
+
+
+@pytest.mark.parametrize("seed", [0, 3, 7])
+def test_cc_labels_match_oracle(seed):
+    rng = np.random.default_rng(seed)
+    adj = rmat_like(rng, 256, avg_deg=4)
+    labels = run_cc_via_steps(adj)
+    assert_array_equal(labels, cc_oracle(adj))
+
+
+def test_cc_all_isolated():
+    n = 128
+    adj = np.zeros((n, n), np.float32)
+    labels = run_cc_via_steps(adj)
+    assert_array_equal(labels, np.arange(n, dtype=np.float32))
+
+
+def test_cc_single_component_path():
+    n = 128
+    adj = np.zeros((n, n), np.float32)
+    idx = np.arange(n - 1)
+    adj[idx, idx + 1] = 1.0
+    adj[idx + 1, idx] = 1.0
+    labels = run_cc_via_steps(adj)
+    assert_array_equal(labels, np.zeros(n, np.float32))
+
+
+def test_cc_converges_in_log_iterations():
+    """SV with full compress converges in O(log n) hook rounds."""
+    rng = np.random.default_rng(21)
+    adj = rmat_like(rng, 256, avg_deg=4)
+    labels = np.arange(256, dtype=np.float32)
+    iters = 0
+    while True:
+        labels, changed = (np.asarray(x) for x in model.cc_step(adj, labels))
+        iters += 1
+        if changed == 0:
+            break
+        assert iters <= 16, "too many SV iterations"
+    assert iters <= 16

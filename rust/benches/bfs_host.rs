@@ -1,0 +1,54 @@
+//! Bench: host-side functional traversal throughput — `bfs_run` /
+//! `cc_run` edges per second. This is the dominant cost of preparing
+//! paper-scale experiments (750 queries x millions of edges), so it is the
+//! first §Perf L3 target: the DESIGN.md goal is >= 100 M edges/s.
+//!
+//! Knobs: PFQ_BENCH_SCALE (default 15).
+
+use pathfinder_queries::alg;
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::bench::{black_box, Bench};
+
+fn main() {
+    let scale: u32 = std::env::var("PFQ_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(15);
+    let gcfg = GraphConfig::with_scale(scale);
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    let m = Machine::new(MachineConfig::pathfinder_8());
+    let src = pathfinder_queries::graph::sample::bfs_sources(&g, 1, 1)[0];
+    println!(
+        "bfs_host bench: scale {scale} ({} vertices, {} directed edges)\n",
+        g.n(),
+        g.m_directed()
+    );
+
+    let mut bench = Bench::from_env();
+    bench.run("oracle/bfs (plain queue)", || black_box(alg::oracle::bfs_levels(&g, src)));
+    bench.run("oracle/cc (union-find)", || black_box(alg::oracle::cc_labels(&g)));
+    bench.run("alg/bfs_run (functional + demand)", || {
+        black_box(alg::bfs_run(&g, &m, src))
+    });
+    bench.run("alg/cc_run (functional + demand)", || black_box(alg::cc_run(&g, &m)));
+
+    println!("== host wall times ==");
+    for r in bench.results() {
+        println!("{}", r.report());
+    }
+
+    let m_edges = g.m_directed() as f64;
+    let bfs_t = bench.results()[2].median_s();
+    let oracle_t = bench.results()[0].median_s();
+    println!(
+        "\nbfs_run throughput: {:.1} M edges/s (oracle: {:.1} M edges/s, \
+         demand overhead {:.2}x)",
+        m_edges / bfs_t / 1e6,
+        m_edges / oracle_t / 1e6,
+        bfs_t / oracle_t
+    );
+}

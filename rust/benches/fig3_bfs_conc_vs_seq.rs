@@ -1,0 +1,72 @@
+//! Bench: the Figure-3/4 experiment end to end.
+//!
+//! Two things are measured here, deliberately kept apart:
+//!
+//! * the **simulated** result (the paper's table — concurrent vs
+//!   sequential makespans and the improvement %), and
+//! * the **host wall time** of regenerating it (the §Perf L3 numbers:
+//!   demand preparation and the flow engine's allocator are the hot
+//!   paths of this repo).
+//!
+//! Knobs: PFQ_BENCH_SCALE (default 14), PFQ_BENCH_QUERIES (default 64),
+//! BENCH_SAMPLES / BENCH_WARMUP for the runner.
+
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::coordinator::{planner, Coordinator, ImprovementRow, Policy};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::bench::{black_box, Bench};
+
+fn env(name: &str, default: u32) -> u32 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let scale = env("PFQ_BENCH_SCALE", 14);
+    let k = env("PFQ_BENCH_QUERIES", 64) as usize;
+    let gcfg = GraphConfig::with_scale(scale);
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    println!(
+        "fig3 bench: scale {scale} ({} vertices, {} directed edges), {k} BFS queries\n",
+        g.n(),
+        g.m_directed()
+    );
+
+    let mut bench = Bench::from_env();
+    for preset in ["pathfinder-8", "pathfinder-32"] {
+        let coord = Coordinator::new(&g, Machine::new(MachineConfig::preset(preset).unwrap()));
+        let queries = planner::bfs_queries(&g, k, 0xBF5);
+
+        // Host cost of demand preparation (functional BFS + demand vectors).
+        bench.run(&format!("{preset}/prepare x{k}"), || {
+            black_box(coord.prepare(black_box(&queries)))
+        });
+
+        let specs = coord.prepare(&queries);
+        // Host cost of the concurrent flow solve.
+        bench.run(&format!("{preset}/flow concurrent x{k}"), || {
+            black_box(coord.run_specs(&queries, &specs, Policy::Concurrent).unwrap())
+        });
+        bench.run(&format!("{preset}/flow sequential x{k}"), || {
+            black_box(coord.run_specs(&queries, &specs, Policy::Sequential).unwrap())
+        });
+
+        // The simulated result itself (the paper table row).
+        let conc = coord.run_specs(&queries, &specs, Policy::Concurrent).unwrap();
+        let seq = coord.run_specs(&queries, &specs, Policy::Sequential).unwrap();
+        let row = ImprovementRow::from_reports(&conc, &seq);
+        println!(
+            "  simulated: conc {:.4}s  seq {:.4}s  improvement {:.1}%\n",
+            row.concurrent_s,
+            row.sequential_s,
+            row.improvement_pct()
+        );
+    }
+
+    println!("\n== host wall times ==");
+    for r in bench.results() {
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,83 @@
+//! Bench: the flow engine's allocator — the L3 hot path at paper-scale
+//! concurrency (the §Perf optimization target). Synthetic phases isolate
+//! the engine from graph traversal costs.
+//!
+//! Knobs: PFQ_BENCH_NQ (default 256) concurrent queries.
+
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::sim::demand::PhaseDemand;
+use pathfinder_queries::sim::flow::{FlowSim, QuerySpec};
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::bench::{black_box, Bench};
+use pathfinder_queries::util::rng::SplitMix64;
+
+/// Synthetic multi-phase query resembling a BFS demand profile.
+fn synth_query(rng: &mut SplitMix64, m: &Machine, id: usize) -> QuerySpec {
+    let nodes = m.nodes();
+    let cpn = m.cfg.channels_per_node;
+    let phases = (0..8)
+        .map(|_| {
+            let mut p = PhaseDemand::zero(nodes, cpn);
+            for node in 0..nodes {
+                for c in 0..cpn {
+                    let ops = rng.next_f64() * 2e4;
+                    p.per_channel_ops[node * cpn + c] = ops;
+                    p.channel_ops[node] += ops;
+                    p.max_channel_ops[node] = p.max_channel_ops[node].max(ops);
+                }
+                p.instructions[node] = rng.next_f64() * 3e6;
+                p.stream_bytes[node] = rng.next_f64() * 1e5;
+            }
+            p.parallelism = 1e4;
+            p
+        })
+        .collect();
+    QuerySpec { id, label: "synth", phases, arrival_ns: 0.0 }
+}
+
+fn main() {
+    let nq: usize = std::env::var("PFQ_BENCH_NQ")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let mut bench = Bench::from_env();
+
+    for preset in ["pathfinder-8", "pathfinder-32"] {
+        let m = Machine::new(MachineConfig::preset(preset).unwrap());
+        let sim = FlowSim::new(m.clone());
+        let mut rng = SplitMix64::new(7);
+        let specs: Vec<QuerySpec> =
+            (0..nq).map(|id| synth_query(&mut rng, &m, id)).collect();
+
+        bench.run(&format!("{preset}/flow run x{nq} (8 phases each)"), || {
+            black_box(sim.run(black_box(&specs)))
+        });
+        bench.run(&format!("{preset}/flow run x{}", nq / 4), || {
+            black_box(sim.run(black_box(&specs[..nq / 4])))
+        });
+        bench.run(&format!("{preset}/sequential x{nq}"), || {
+            black_box(sim.run_sequential(black_box(&specs)))
+        });
+        // solo_ns is called once per phase entry — the inner-loop cost.
+        let p = &specs[0].phases[0];
+        bench.run(&format!("{preset}/solo_ns (one phase)"), || {
+            black_box(black_box(p).solo_ns(&m))
+        });
+        bench.run(&format!("{preset}/flow_resources (one phase)"), || {
+            black_box(black_box(p).flow_resources(&m, 1e6))
+        });
+    }
+
+    println!("== flow engine host wall times ==");
+    for r in bench.results() {
+        println!("{}", r.report());
+    }
+    // Events per second metric for the §Perf log.
+    let per_run = bench.results()[0].median_s();
+    let nq_f = nq as f64;
+    println!(
+        "\nallocator throughput: {:.0} phase-completions/s at {} concurrent queries",
+        nq_f * 8.0 / per_run,
+        nq
+    );
+}

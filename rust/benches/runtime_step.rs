@@ -1,0 +1,91 @@
+//! Bench: PJRT step-execution latency per AOT variant — compile time once,
+//! then per-call execute cost of `bfs_step` (by batch) and `cc_step`. The
+//! L1/L2 §Perf evidence: batching amortizes the per-call overhead, and the
+//! per-step cost is what the Xeon model's anchor measures.
+//!
+//! Skips cleanly when artifacts are absent (`make artifacts`).
+
+use pathfinder_queries::runtime::artifact::default_artifacts_dir;
+use pathfinder_queries::runtime::Engine;
+use pathfinder_queries::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("runtime_step bench: artifacts missing — run `make artifacts`; skipping");
+        return;
+    }
+    let eng = Engine::from_dir(&dir).unwrap();
+    println!("runtime_step bench: platform {}", eng.platform());
+
+    // Compile cost per variant (once; cached afterwards).
+    for (name, s) in eng.compile_all().unwrap() {
+        println!("  compile {name:<24} {:.3}s", s);
+    }
+    let n = eng.manifest().n;
+
+    // A ring graph in the padded adjacency keeps every step busy.
+    let mut adj = vec![0.0f32; n * n];
+    for v in 0..n {
+        adj[v * n + (v + 1) % n] = 1.0;
+        adj[((v + 1) % n) * n + v] = 1.0;
+    }
+
+    let mut bench = Bench::from_env();
+    let entries: Vec<_> = eng.manifest().by_kind("bfs_step").into_iter().cloned().collect();
+    for e in &entries {
+        let b = e.batch;
+        let mut frontier = vec![0.0f32; b * n];
+        let mut visited = vec![0.0f32; b * n];
+        let levels = vec![-1.0f32; b * n];
+        for q in 0..b {
+            frontier[q * n + q % n] = 1.0;
+            visited[q * n + q % n] = 1.0;
+        }
+        bench.run(&format!("bfs_step b={b}"), || {
+            black_box(
+                eng.execute_f32(
+                    &e.name,
+                    &[
+                        (&adj, &[n as i64, n as i64]),
+                        (&frontier, &[b as i64, n as i64]),
+                        (&visited, &[b as i64, n as i64]),
+                        (&levels, &[b as i64, n as i64]),
+                        (&[1.0f32], &[]),
+                    ],
+                )
+                .unwrap(),
+            )
+        });
+    }
+    if let Some(e) = eng.manifest().cc_variant().cloned() {
+        let labels: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        bench.run("cc_step", || {
+            black_box(
+                eng.execute_f32(
+                    &e.name,
+                    &[(&adj, &[n as i64, n as i64]), (&labels, &[n as i64])],
+                )
+                .unwrap(),
+            )
+        });
+    }
+
+    println!("\n== per-step execute cost (n={n}) ==");
+    for r in bench.results() {
+        println!("{}", r.report());
+    }
+    if entries.len() >= 2 {
+        let first = bench.results()[0].median_s();
+        let last = bench.results()[entries.len() - 1].median_s();
+        let b0 = entries[0].batch as f64;
+        let b1 = entries[entries.len() - 1].batch as f64;
+        println!(
+            "\nbatch amortization: {:.0}x more queries for {:.2}x the step cost \
+             (per-query cost ratio {:.3})",
+            b1 / b0,
+            last / first,
+            (last / b1) / (first / b0)
+        );
+    }
+}

@@ -1,0 +1,68 @@
+//! Bench: the Table-II mixed BFS+CC experiment — simulated improvement plus
+//! the host cost of the CC demand cache (compute-once + rotate) vs naive
+//! per-query recomputation.
+//!
+//! Knobs: PFQ_BENCH_SCALE (default 13).
+
+use pathfinder_queries::alg::Query;
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
+use pathfinder_queries::coordinator::{planner, Coordinator, Policy};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::bench::{black_box, Bench};
+use pathfinder_queries::util::stats::improvement_pct;
+
+fn main() {
+    let scale: u32 = std::env::var("PFQ_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(13);
+    let gcfg = GraphConfig::with_scale(scale);
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    let mix = MixPoint { bfs: 32, cc: 8 };
+    println!(
+        "table2 bench: scale {scale}, mix {}+{} on pathfinder-8\n",
+        mix.bfs, mix.cc
+    );
+
+    let coord = Coordinator::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let m = coord.machine().clone();
+    let queries = planner::mix_queries(&g, mix, 0xBF5);
+    let seq_order = planner::sequential_mix_order(&queries);
+
+    let mut bench = Bench::from_env();
+    // End-to-end mixed experiment (prepare + both arms).
+    bench.run("mixed/end-to-end (prepare+conc+seq)", || {
+        let conc = coord.run(black_box(&queries), Policy::Concurrent).unwrap();
+        let seq = coord.run(black_box(&seq_order), Policy::Sequential).unwrap();
+        black_box((conc.makespan_s, seq.makespan_s))
+    });
+
+    // The CC demand cache: cached+rotated (what the coordinator does) vs
+    // recomputing the functional CC per instance.
+    bench.run("cc-demand/cached+rotate x8", || {
+        let qs = vec![Query::Cc; 8];
+        black_box(coord.prepare(&qs))
+    });
+    bench.run("cc-demand/recompute x8", || {
+        (0..8)
+            .map(|i| black_box(Query::Cc.phases(&g, &m, i)))
+            .collect::<Vec<_>>()
+    });
+
+    let conc = coord.run(&queries, Policy::Concurrent).unwrap();
+    let seq = coord.run(&seq_order, Policy::Sequential).unwrap();
+    println!(
+        "\nsimulated: conc {:.4}s  seq {:.4}s  improvement {:.1}% (paper: ~70% on 8 nodes)\n",
+        conc.makespan_s,
+        seq.makespan_s,
+        improvement_pct(seq.makespan_s, conc.makespan_s)
+    );
+
+    println!("== host wall times ==");
+    for r in bench.results() {
+        println!("{}", r.report());
+    }
+}

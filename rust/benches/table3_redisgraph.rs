@@ -1,0 +1,65 @@
+//! Bench: the Table-III comparison — simulated adjusted speed-ups plus the
+//! measured PJRT GraphBLAS engine throughput that anchors the Xeon model
+//! (skipped when artifacts are absent).
+//!
+//! Knobs: PFQ_BENCH_SCALE (default 13) for the Pathfinder side.
+
+use pathfinder_queries::baseline::GraphBlasEngine;
+use pathfinder_queries::bench_harness::{table3, Harness};
+use pathfinder_queries::config::experiment::ExperimentConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::runtime::artifact::default_artifacts_dir;
+use pathfinder_queries::runtime::Engine;
+use pathfinder_queries::util::bench::{black_box, Bench};
+
+fn main() {
+    let scale: u32 = std::env::var("PFQ_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(13);
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.graph = GraphConfig::with_scale(scale);
+    cfg.workload.query_counts = vec![128];
+    cfg.workload.mixes.clear();
+    cfg.results_dir = std::env::temp_dir().join("pfq-bench-results");
+    let h = Harness::new(cfg).unwrap();
+
+    // Simulated Table III (paper-anchored model).
+    let data = table3::run(&h, None).unwrap();
+    println!("table3 bench: scale {scale}");
+    println!("{}", data.table().render());
+
+    // Measured engine side (the real execution path behind the anchor).
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("(artifacts missing; engine measurement skipped — run `make artifacts`)");
+        return;
+    }
+    let eng = Engine::from_dir(&dir).unwrap();
+    let n_art = eng.manifest().n;
+    let gscale = (n_art as f64).log2() as u32;
+    let gcfg = GraphConfig::with_scale(gscale);
+    let small = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    let gb = GraphBlasEngine::new(&eng, &small).unwrap();
+    let sources = pathfinder_queries::graph::sample::bfs_sources(&small, 32, 7);
+
+    let mut bench = Bench::from_env();
+    bench.run("pjrt/bfs x1", || black_box(gb.bfs(&sources[..1]).unwrap()));
+    bench.run("pjrt/bfs x8 (one batch)", || black_box(gb.bfs(&sources[..8]).unwrap()));
+    bench.run("pjrt/bfs x32 (one batch)", || black_box(gb.bfs(&sources[..32]).unwrap()));
+    bench.run("pjrt/cc to convergence", || black_box(gb.cc().unwrap()));
+
+    println!("\n== measured PJRT engine (artifact n={n_art}) ==");
+    for r in bench.results() {
+        println!("{}", r.report());
+    }
+    let x1 = bench.results()[0].median_s();
+    let x32 = bench.results()[2].median_s();
+    println!(
+        "\nbatch efficiency: 32 queries in one batch cost {:.1}x one query \
+         (ideal 1.0x if fully amortized, 32x if none)",
+        x32 / x1
+    );
+}

@@ -1,0 +1,230 @@
+//! The tuned migratory-thread BFS (paper §III, detailed in Hein et al.
+//! [10], [11]), executed functionally while emitting per-level
+//! [`PhaseDemand`] vectors.
+//!
+//! Per level, per frontier vertex `u` (whose record and edge block live on
+//! node `u mod nodes` — §IV-A):
+//!
+//! * the worker thread is **launched on u's home node** (the Lucata Cilk
+//!   extension), which costs one migration-ish context placement plus
+//!   spawn instructions;
+//! * it reads u's vertex record (one fine-grained channel op) and streams
+//!   u's edge block (sequential bytes on the block's channel);
+//! * for **every scanned edge** it issues a **remote write** of the level /
+//!   parent into `v`'s home node. Checking v's visited bit first would
+//!   require a remote *read* — a migration — so the tuned implementation
+//!   writes unconditionally and dedups locally when v's node builds the
+//!   next frontier (this is the §III migration/write balance). Remote
+//!   writes do not migrate (§II): they pay fabric bytes plus the
+//!   destination channel's service.
+//!
+//! Per-level parallelism reported to the timing model is the level's op
+//! count capped by the machine's total thread contexts: Cilk grainsize
+//! splits hub vertices' edge blocks across workers, so skew does not
+//! serialize a level, but a level can never use more threads than it has
+//! independent memory operations.
+
+use crate::graph::csr::Csr;
+use crate::sim::demand::{DemandBuilder, PhaseDemand};
+use crate::sim::machine::Machine;
+
+/// Result of one functional+demand BFS execution.
+#[derive(Debug, Clone)]
+pub struct BfsRun {
+    /// Per-vertex BFS level, -1 if unreachable.
+    pub levels: Vec<i64>,
+    /// One demand vector per executed level.
+    pub phases: Vec<PhaseDemand>,
+    /// Frontier size per level (diagnostics / reports).
+    pub frontier_sizes: Vec<usize>,
+    /// Directed edges traversed per level.
+    pub level_edges: Vec<usize>,
+}
+
+impl BfsRun {
+    /// Number of reachable vertices (including the source).
+    pub fn reached(&self) -> usize {
+        self.levels.iter().filter(|&&l| l != -1).count()
+    }
+}
+
+/// Run BFS from `src` on machine `m`, producing levels + per-level demand.
+///
+/// Equivalent to [`bfs_run_offset`] with stripe offset 0.
+pub fn bfs_run(g: &Csr, m: &Machine, src: u32) -> BfsRun {
+    bfs_run_offset(g, m, src, 0)
+}
+
+/// Run BFS with an explicit stripe offset for the query's own arrays.
+///
+/// Each query allocates its own level/parent array; view-2 striping places
+/// element `v` of an array with base offset `o` on channel
+/// `(v/nodes + o) mod channels`. Different concurrent queries therefore
+/// heat *different* channels with their hub-vertex writes — a query's own
+/// load imbalance floor stays (it limits the solo time), but concurrent
+/// queries spread across channels instead of all serializing on one. The
+/// coordinator passes each query's index as the offset.
+pub fn bfs_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> BfsRun {
+    let layout = m.layout;
+    let nodes = m.nodes();
+    let channels = m.cfg.channels_per_node;
+    let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+    let cfg = &m.cfg;
+
+    let mut levels = vec![-1i64; g.n()];
+    levels[src as usize] = 0;
+    let mut frontier = vec![src];
+    let mut depth = 0i64;
+
+    let mut phases = Vec::new();
+    let mut frontier_sizes = Vec::new();
+    let mut level_edges = Vec::new();
+
+    while !frontier.is_empty() {
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut next = Vec::new();
+        let mut edges_scanned = 0usize;
+        let mut ops = 0.0f64;
+
+        for &u in &frontier {
+            let un = layout.node_of(u);
+            // Thread launch on u's home node.
+            b.migration(un, 1.0);
+            b.fabric_bytes(un, 64.0); // context placement
+            b.instructions(un, cfg.spawn_instr);
+            // Vertex record read (local dedup of last level's writes).
+            b.channel_op(un, layout.channel_of(u), 1.0);
+            ops += 1.0;
+            // Edge block stream (co-located with the vertex, §IV-A).
+            b.stream_bytes(un, g.edge_block_bytes(u) as f64);
+            let deg = g.degree(u);
+            edges_scanned += deg;
+            b.instructions(un, deg as f64 * cfg.instr_per_edge);
+            for &v in g.neighbors(u) {
+                // Unconditional remote write of level/parent at v's home
+                // (checking first would migrate; §III trades the check for
+                // a write). The write lands in THIS query's own array, so
+                // its channel carries the query's stripe offset.
+                let vn = layout.node_of(v);
+                b.channel_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
+                ops += 1.0;
+                if vn != un {
+                    b.fabric_bytes(un, 16.0);
+                }
+                if levels[v as usize] == -1 {
+                    levels[v as usize] = depth + 1;
+                    next.push(v);
+                }
+            }
+        }
+
+        // Grainsize-split workers: parallelism is bounded by independent
+        // memory ops in the level and by the machine's context count.
+        b.parallelism(ops.min(contexts_total));
+
+        phases.push(b.finish());
+        frontier_sizes.push(frontier.len());
+        level_edges.push(edges_scanned);
+        frontier = next;
+        depth += 1;
+    }
+
+    BfsRun { levels, phases, frontier_sizes, level_edges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::oracle;
+    use crate::config::machine::MachineConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+    use crate::config::workload::GraphConfig;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = seed;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn levels_match_oracle_on_rmat() {
+        let g = rmat(10, 7);
+        let m = m8();
+        for src in [0u32, 13, 500] {
+            let run = bfs_run(&g, &m, src);
+            oracle::check_bfs(&g, src, &run.levels).unwrap();
+        }
+    }
+
+    #[test]
+    fn one_phase_per_level() {
+        let edges: Vec<(u32, u32)> = (0..9u32).map(|i| (i, i + 1)).collect();
+        let g = build_undirected_csr(10, &edges);
+        let run = bfs_run(&g, &m8(), 0);
+        // Path of 10 vertices: levels 0..9, one expanding phase each.
+        assert_eq!(run.phases.len(), 10);
+        assert_eq!(run.frontier_sizes, vec![1; 10]);
+        assert_eq!(run.reached(), 10);
+    }
+
+    #[test]
+    fn demand_counts_match_graph_totals() {
+        let g = rmat(9, 3);
+        let m = m8();
+        let run = bfs_run(&g, &m, g.neighbors(0).first().copied().unwrap_or(1));
+        let total_ops: f64 = run.phases.iter().map(|p| p.total_channel_ops()).sum();
+        let reached = run.reached() as f64;
+        // One record read per frontier vertex + one unconditional write
+        // per scanned edge (= every edge of every reached vertex).
+        let scanned: u64 = (0..g.n() as u32)
+            .filter(|&v| run.levels[v as usize] != -1)
+            .map(|v| g.degree(v) as u64)
+            .sum();
+        assert_eq!(total_ops, reached + scanned as f64);
+        // Streamed bytes = edge blocks of every reached vertex.
+        let total_stream: f64 = run.phases.iter().map(|p| p.stream_bytes.iter().sum::<f64>()).sum();
+        let expect: u64 = (0..g.n() as u32)
+            .filter(|&v| run.levels[v as usize] != -1)
+            .map(|v| g.edge_block_bytes(v))
+            .sum();
+        assert_eq!(total_stream, expect as f64);
+    }
+
+    #[test]
+    fn migrations_one_per_reached_vertex() {
+        let g = rmat(9, 11);
+        let m = m8();
+        let run = bfs_run(&g, &m, 1);
+        let migs: f64 = run.phases.iter().map(|p| p.total_migrations()).sum();
+        assert_eq!(migs, run.reached() as f64);
+    }
+
+    #[test]
+    fn parallelism_tracks_level_ops() {
+        // Star graph: center 0 with 64 leaves. Level 0 scans 64 edges
+        // (65 ops with the record read); level 1 has 64 workers writing
+        // back to the hub (128 ops).
+        let edges: Vec<(u32, u32)> = (1..=64u32).map(|v| (0, v)).collect();
+        let g = build_undirected_csr(65, &edges);
+        let run = bfs_run(&g, &m8(), 0);
+        assert_eq!(run.phases[0].parallelism, 65.0);
+        assert_eq!(run.phases[1].parallelism, 128.0);
+    }
+
+    #[test]
+    fn solo_time_scales_with_graph() {
+        let m = m8();
+        let small = rmat(9, 5);
+        let big = rmat(12, 5);
+        let t_small: f64 =
+            bfs_run(&small, &m, 1).phases.iter().map(|p| p.solo_ns(&m)).sum();
+        let t_big: f64 = bfs_run(&big, &m, 1).phases.iter().map(|p| p.solo_ns(&m)).sum();
+        assert!(t_big > 2.0 * t_small, "big {t_big} small {t_small}");
+    }
+}

@@ -1,0 +1,259 @@
+//! Figure-2 connected components: Shiloach-Vishkin with MSP `remote_min`
+//! hooks, executed functionally while emitting per-phase [`PhaseDemand`]
+//! vectors.
+//!
+//! Each iteration is three synchronous phases, exactly the paper's loop
+//! body:
+//!
+//! 1. **Hook sweep** — `remote_min(&C[j], C[v])` for every directed edge.
+//!    The MSP at `j`'s home node performs the min inside a
+//!    read-modify-write cycle: no thread migration, the issuing core keeps
+//!    running (§III). Charged as MSP ops on the destination record's
+//!    channel plus fabric bytes for remote endpoints.
+//! 2. **Changed check + reduction** — `pC[v] != C[v]` per vertex (local
+//!    reads; `pC[v] ← C[v]` is the paired local write), then the view-0
+//!    `changed` flags are reduced by a single thread migrating across all
+//!    nodes, casting the view-0 pointer to view-1 (a serial chain of
+//!    `nodes` hops — Fig. 2 line 2).
+//! 3. **Compress** — pointer-jump `C[v] ← C[C[v]]` until every label is a
+//!    root. Reading `C[C[v]]` is a remote read, so it *migrates*; the
+//!    migration count per vertex is its tree depth, and the phase's serial
+//!    chain is the deepest tree (§III: "the number of migrations is bound
+//!    by the depth of each tree").
+//!
+//! Functionally the hook is evaluated Jacobi-style (reads the previous
+//! iteration's labels) so results are deterministic; the hardware's racy
+//! in-place `remote_min` converges to the same fixpoint, possibly a sweep
+//! sooner. Labels converge to each component's minimum vertex id.
+
+use crate::graph::csr::Csr;
+use crate::sim::demand::{DemandBuilder, PhaseDemand};
+use crate::sim::machine::Machine;
+
+/// Result of one functional+demand connected-components execution.
+#[derive(Debug, Clone)]
+pub struct CcRun {
+    /// Final per-vertex component labels (component minimum vertex id).
+    pub labels: Vec<i64>,
+    /// One demand vector per synchronous phase.
+    pub phases: Vec<PhaseDemand>,
+    /// Number of hook/check/compress iterations executed.
+    pub iterations: usize,
+}
+
+impl CcRun {
+    /// Number of distinct components.
+    pub fn components(&self) -> usize {
+        crate::alg::oracle::component_count(&self.labels)
+    }
+}
+
+/// Instructions charged per vertex in the changed-check phase (two reads,
+/// compare, flag write).
+const CHECK_INSTR_PER_VERTEX: f64 = 8.0;
+
+/// Run Figure-2 connected components on machine `m` (stripe offset 0).
+pub fn cc_run(g: &Csr, m: &Machine) -> CcRun {
+    cc_run_offset(g, m, 0)
+}
+
+/// Run connected components with an explicit stripe offset for the query's
+/// own `C`/`pC` arrays (see [`crate::alg::bfs::bfs_run_offset`]: concurrent
+/// queries' label traffic spreads across channels instead of stacking on
+/// the canonical placement).
+pub fn cc_run_offset(g: &Csr, m: &Machine, stripe_offset: usize) -> CcRun {
+    let layout = m.layout;
+    let nodes = m.nodes();
+    let channels = m.cfg.channels_per_node;
+    let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+    let cfg = &m.cfg;
+    let n = g.n();
+
+    let mut labels: Vec<i64> = (0..n as i64).collect();
+    let mut phases = Vec::new();
+    let mut iterations = 0usize;
+
+    loop {
+        iterations += 1;
+
+        // --- Phase 1: hook sweep (remote_min per directed edge). ---
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut new_labels = labels.clone();
+        let mut ops = 0.0f64;
+        for u in 0..n as u32 {
+            let un = layout.node_of(u);
+            b.instructions(un, cfg.spawn_instr);
+            b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0); // read C[u]
+            ops += 1.0;
+            b.stream_bytes(un, g.edge_block_bytes(u) as f64);
+            let deg = g.degree(u);
+            b.instructions(un, deg as f64 * cfg.instr_per_edge);
+            let lu = labels[u as usize];
+            for &v in g.neighbors(u) {
+                let vn = layout.node_of(v);
+                b.msp_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
+                ops += 1.0;
+                if vn != un {
+                    b.fabric_bytes(un, 16.0);
+                }
+                if lu < new_labels[v as usize] {
+                    new_labels[v as usize] = lu;
+                }
+            }
+        }
+        // Grainsize-split edge sweeps: bounded by independent ops/contexts.
+        b.parallelism(ops.min(contexts_total));
+        // A flat cilk_for over all vertices, no level structure: the spawn
+        // tree keeps the issue slots busy (unlike frontier-driven BFS).
+        b.issue_efficiency(1.0);
+        phases.push(b.finish());
+
+        // --- Phase 2: changed check + migrating view-0 reduction. ---
+        let changed = new_labels != labels;
+        let mut b = DemandBuilder::new(nodes, channels);
+        for v in 0..n as u32 {
+            let vn = layout.node_of(v);
+            // pC[v] ← C[v] (write), read back pC and C for the compare.
+            b.channel_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 3.0);
+            b.instructions(vn, CHECK_INSTR_PER_VERTEX);
+        }
+        // The reduction thread hops node to node (Fig. 2 line 2).
+        for node in 1..nodes {
+            b.migration(node, 1.0);
+            b.channel_op(node, 0, 1.0);
+            b.fabric_bytes(node - 1, 64.0);
+        }
+        b.serial_hops(nodes as f64 - 1.0);
+        b.parallelism((n as f64).min(contexts_total));
+        b.issue_efficiency(1.0); // flat per-vertex compare loop
+        phases.push(b.finish());
+
+        if !changed {
+            return CcRun { labels, phases, iterations };
+        }
+
+        // --- Phase 3: compress (pointer jumping, migrations = depth). ---
+        labels = new_labels;
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut max_depth = 0.0f64;
+        let mut ops = 0.0f64;
+        for v in 0..n as u32 {
+            let vn = layout.node_of(v);
+            b.channel_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0); // read C[v]
+            ops += 1.0;
+            let mut here = vn;
+            let mut depth = 0.0f64;
+            let mut cur = labels[v as usize] as u32;
+            while labels[cur as usize] != cur as i64 {
+                let tn = layout.node_of(cur);
+                if tn != here {
+                    b.migration(tn, 1.0);
+                    b.fabric_bytes(here, 64.0);
+                    here = tn;
+                }
+                b.channel_op(tn, (layout.channel_of(cur) + stripe_offset) % channels, 1.0); // read C[C[v]]
+                ops += 1.0;
+                depth += 1.0;
+                cur = labels[cur as usize] as u32;
+            }
+            labels[v as usize] = cur as i64;
+            max_depth = max_depth.max(depth);
+        }
+        b.serial_hops(max_depth);
+        b.parallelism(ops.min(contexts_total));
+        phases.push(b.finish());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::oracle;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = seed;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn labels_match_oracle_on_rmat() {
+        let g = rmat(10, 21);
+        let run = cc_run(&g, &m8());
+        oracle::check_cc(&g, &run.labels).unwrap();
+        assert_eq!(run.components(), oracle::component_count(&oracle::cc_labels(&g)));
+    }
+
+    #[test]
+    fn labels_match_oracle_on_forest() {
+        // Disjoint paths of different lengths.
+        let mut edges = Vec::new();
+        let mut base = 0u32;
+        for len in [1u32, 3, 7, 15] {
+            for i in 0..len {
+                edges.push((base + i, base + i + 1));
+            }
+            base += len + 1;
+        }
+        let g = build_undirected_csr(base as usize, &edges);
+        let run = cc_run(&g, &m8());
+        oracle::check_cc(&g, &run.labels).unwrap();
+    }
+
+    #[test]
+    fn three_phases_per_iteration_plus_final_check() {
+        let g = build_undirected_csr(4, &[(0, 1), (2, 3)]);
+        let run = cc_run(&g, &m8());
+        // Every iteration but the last contributes hook+check+compress;
+        // the last contributes hook+check.
+        assert_eq!(run.phases.len(), 3 * (run.iterations - 1) + 2);
+    }
+
+    #[test]
+    fn msp_ops_equal_directed_edges_per_sweep() {
+        let g = rmat(9, 2);
+        let run = cc_run(&g, &m8());
+        let msp: f64 = run.phases.iter().map(|p| p.msp_ops.iter().sum::<f64>()).sum();
+        assert_eq!(msp, (g.m_directed() * run.iterations) as f64);
+    }
+
+    #[test]
+    fn reduction_serializes_across_nodes() {
+        let g = build_undirected_csr(4, &[(0, 1)]);
+        let run = cc_run(&g, &m8());
+        // Check phases carry the nodes-1 serial chain.
+        let check = &run.phases[1];
+        assert_eq!(check.serial_hops, 7.0);
+        assert_eq!(check.total_migrations(), 7.0);
+    }
+
+    #[test]
+    fn converges_quickly_on_rmat() {
+        let g = rmat(11, 5);
+        let run = cc_run(&g, &m8());
+        // SV with min-hooks + full compress converges in O(log n) sweeps;
+        // R-MAT's giant component typically needs only a handful.
+        assert!(run.iterations <= 8, "{} iterations", run.iterations);
+    }
+
+    #[test]
+    fn hook_dominates_demand() {
+        // remote_min traffic (hook) should dwarf the bookkeeping phases on
+        // a dense-ish graph — the §IV-C interconnect-stress story.
+        let g = rmat(10, 9);
+        let m = m8();
+        let run = cc_run(&g, &m);
+        let hook_ops: f64 = run.phases[0].total_channel_ops();
+        let check_ops: f64 = run.phases[1].total_channel_ops();
+        assert!(hook_ops > check_ops);
+    }
+}

@@ -1,0 +1,23 @@
+//! Graph algorithms, paper §III.
+//!
+//! Each algorithm exists in two forms:
+//!
+//! * a **host oracle** ([`oracle`]) — the plain, obviously-correct
+//!   implementation used to validate functional results;
+//! * a **Pathfinder execution** ([`bfs`], [`cc`]) — the algorithm run
+//!   functionally over the real graph while emitting the per-phase
+//!   [`crate::sim::PhaseDemand`] resource vectors the simulator engines
+//!   charge time for. The emission follows the paper's implementation
+//!   notes: the tuned BFS trades thread migrations for non-migrating
+//!   remote writes (§III, [10]); connected components is Figure 2 —
+//!   Shiloach-Vishkin with MSP `remote_min` hooks, a view-0 `changed`
+//!   flag reduced by a migrating thread, and a pointer-jumping compress.
+
+pub mod bfs;
+pub mod cc;
+pub mod oracle;
+pub mod query;
+
+pub use bfs::{bfs_run, bfs_run_offset, BfsRun};
+pub use cc::{cc_run, cc_run_offset, CcRun};
+pub use query::{Query, QueryOutput};

@@ -1,0 +1,147 @@
+//! Host reference implementations ("the obviously correct versions").
+//!
+//! These never touch the simulator; they exist so every Pathfinder (and
+//! baseline-engine) result can be checked against an independent
+//! implementation: plain queue BFS and union-find connected components.
+
+use crate::graph::csr::Csr;
+use std::collections::VecDeque;
+
+/// Plain FIFO breadth-first search. Returns per-vertex levels, -1 where
+/// unreachable from `src`.
+pub fn bfs_levels(g: &Csr, src: u32) -> Vec<i64> {
+    let mut levels = vec![-1i64; g.n()];
+    levels[src as usize] = 0;
+    let mut q = VecDeque::new();
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        let next = levels[u as usize] + 1;
+        for &v in g.neighbors(u) {
+            if levels[v as usize] == -1 {
+                levels[v as usize] = next;
+                q.push_back(v);
+            }
+        }
+    }
+    levels
+}
+
+/// Union-find with path halving + union by label minimum: every vertex ends
+/// labeled with the smallest vertex id of its component (the same labeling
+/// Shiloach-Vishkin with min-hooks converges to).
+pub fn cc_labels(g: &Csr) -> Vec<i64> {
+    let n = g.n();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize]; // halve
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    for (u, v) in g.edges() {
+        let ru = find(&mut parent, u);
+        let rv = find(&mut parent, v);
+        if ru != rv {
+            // Union by minimum label so roots are component minima.
+            let (lo, hi) = if ru < rv { (ru, rv) } else { (rv, ru) };
+            parent[hi as usize] = lo;
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v) as i64).collect()
+}
+
+/// Number of connected components implied by a label vector.
+pub fn component_count(labels: &[i64]) -> usize {
+    let mut roots: Vec<i64> = labels.to_vec();
+    roots.sort_unstable();
+    roots.dedup();
+    roots.len()
+}
+
+/// Check that `levels` is a valid BFS level assignment from `src`:
+/// reachable vertices get the true shortest unweighted distance.
+pub fn check_bfs(g: &Csr, src: u32, levels: &[i64]) -> anyhow::Result<()> {
+    anyhow::ensure!(levels.len() == g.n(), "levels length mismatch");
+    let truth = bfs_levels(g, src);
+    for v in 0..g.n() {
+        anyhow::ensure!(
+            levels[v] == truth[v],
+            "vertex {v}: level {} but oracle says {}",
+            levels[v],
+            truth[v]
+        );
+    }
+    Ok(())
+}
+
+/// Check that `labels` equals the union-find component-minimum labeling.
+pub fn check_cc(g: &Csr, labels: &[i64]) -> anyhow::Result<()> {
+    anyhow::ensure!(labels.len() == g.n(), "labels length mismatch");
+    let truth = cc_labels(g);
+    for v in 0..g.n() {
+        anyhow::ensure!(
+            labels[v] == truth[v],
+            "vertex {v}: label {} but oracle says {}",
+            labels[v],
+            truth[v]
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+
+    fn diamond() -> Csr {
+        // 0-1, 0-2, 1-3, 2-3: two equal-length paths to 3.
+        build_undirected_csr(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn bfs_shortest_paths() {
+        let g = diamond();
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, 1, 2]);
+        assert_eq!(bfs_levels(&g, 3), vec![2, 1, 1, 0]);
+    }
+
+    #[test]
+    fn bfs_disconnected() {
+        let g = build_undirected_csr(5, &[(0, 1), (2, 3)]);
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, -1, -1, -1]);
+    }
+
+    #[test]
+    fn cc_minimum_labels() {
+        let g = build_undirected_csr(6, &[(1, 2), (2, 5), (3, 4)]);
+        assert_eq!(cc_labels(&g), vec![0, 1, 1, 3, 3, 1]);
+        assert_eq!(component_count(&cc_labels(&g)), 3);
+    }
+
+    #[test]
+    fn cc_single_component() {
+        let edges: Vec<(u32, u32)> = (0..63u32).map(|i| (i, i + 1)).collect();
+        let g = build_undirected_csr(64, &edges);
+        assert!(cc_labels(&g).iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn checkers_accept_truth_reject_lies() {
+        let g = diamond();
+        let levels = bfs_levels(&g, 0);
+        check_bfs(&g, 0, &levels).unwrap();
+        let mut bad = levels;
+        bad[3] = 7;
+        assert!(check_bfs(&g, 0, &bad).is_err());
+
+        let labels = cc_labels(&g);
+        check_cc(&g, &labels).unwrap();
+        let mut bad = labels;
+        bad[0] = 2;
+        assert!(check_cc(&g, &bad).is_err());
+    }
+}

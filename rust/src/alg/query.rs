@@ -1,0 +1,139 @@
+//! The query abstraction the coordinator schedules: a BFS from a source
+//! vertex or a whole-graph connected components evaluation, with uniform
+//! access to execution (functional result + demand phases) and validation.
+
+use super::{bfs, cc, oracle};
+use crate::graph::csr::Csr;
+use crate::sim::demand::PhaseDemand;
+use crate::sim::machine::Machine;
+
+/// One analysis query (paper §IV: BFS from unique sources, CC, and mixes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Query {
+    /// Breadth-first search from a source vertex.
+    Bfs { src: u32 },
+    /// Whole-graph connected components (Figure 2).
+    Cc,
+}
+
+impl Query {
+    /// Short label used in reports and timings.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Query::Bfs { .. } => "bfs",
+            Query::Cc => "cc",
+        }
+    }
+
+    /// Execute functionally on `g` for machine `m`, producing the result
+    /// values and the per-phase demand vectors. `stripe_offset` is the
+    /// query's own-array placement offset (usually its index within the
+    /// batch — see [`bfs::bfs_run_offset`]).
+    pub fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        match *self {
+            Query::Bfs { src } => {
+                let run = bfs::bfs_run_offset(g, m, src, stripe_offset);
+                QueryOutput { query: *self, values: run.levels, phases: run.phases }
+            }
+            Query::Cc => {
+                let run = cc::cc_run_offset(g, m, stripe_offset);
+                QueryOutput { query: *self, values: run.labels, phases: run.phases }
+            }
+        }
+    }
+
+    /// [`Query::run_offset`] at the canonical placement.
+    pub fn run(&self, g: &Csr, m: &Machine) -> QueryOutput {
+        self.run_offset(g, m, 0)
+    }
+
+    /// Demand phases only (skips retaining the value vector).
+    pub fn phases(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> Vec<PhaseDemand> {
+        self.run_offset(g, m, stripe_offset).phases
+    }
+}
+
+impl std::fmt::Display for Query {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Query::Bfs { src } => write!(f, "bfs(src={src})"),
+            Query::Cc => write!(f, "cc"),
+        }
+    }
+}
+
+/// Functional result + demand of one executed query.
+#[derive(Debug, Clone)]
+pub struct QueryOutput {
+    pub query: Query,
+    /// BFS levels or CC labels.
+    pub values: Vec<i64>,
+    /// Per-phase resource demand.
+    pub phases: Vec<PhaseDemand>,
+}
+
+impl QueryOutput {
+    /// Check the functional result against the host oracle.
+    pub fn validate(&self, g: &Csr) -> anyhow::Result<()> {
+        match self.query {
+            Query::Bfs { src } => oracle::check_bfs(g, src, &self.values),
+            Query::Cc => oracle::check_cc(g, &self.values),
+        }
+    }
+
+    /// Total solo duration of all phases (ns) on machine `m`.
+    pub fn solo_ns(&self, m: &Machine) -> f64 {
+        self.phases.iter().map(|p| p.solo_ns(m)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat10() -> Csr {
+        let r = Rmat::new(GraphConfig::with_scale(10));
+        build_undirected_csr(1 << 10, &r.edges())
+    }
+
+    #[test]
+    fn bfs_query_validates() {
+        let g = rmat10();
+        let m = m8();
+        let out = Query::Bfs { src: 3 }.run(&g, &m);
+        out.validate(&g).unwrap();
+        assert!(out.solo_ns(&m) > 0.0);
+        assert_eq!(out.query.label(), "bfs");
+    }
+
+    #[test]
+    fn cc_query_validates() {
+        let g = rmat10();
+        let m = m8();
+        let out = Query::Cc.run(&g, &m);
+        out.validate(&g).unwrap();
+        assert_eq!(out.query.label(), "cc");
+    }
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(Query::Bfs { src: 42 }.to_string(), "bfs(src=42)");
+        assert_eq!(Query::Cc.to_string(), "cc");
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let g = rmat10();
+        let mut out = Query::Bfs { src: 3 }.run(&g, &m8());
+        out.values[10] = 999;
+        assert!(out.validate(&g).is_err());
+    }
+}

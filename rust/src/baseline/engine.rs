@@ -1,0 +1,290 @@
+//! GraphBLAS-semantics query engine on PJRT.
+//!
+//! RedisGraph's BFS procedure is LAGraph BFS on SuiteSparse:GraphBLAS:
+//! level-synchronous masked matrix-vector products over a boolean
+//! semiring. This engine runs the same algebra, with the per-step compute
+//! AOT-lowered from JAX (Layer 2) whose hot spots are the Pallas kernels
+//! (Layer 1):
+//!
+//! * `bfs_step`:  `next = (frontier ⊕.⊗ A) ⊙ ¬visited` (batched over B
+//!   concurrent queries), plus the visited/levels epilogue and an `active`
+//!   population count per query so the rust loop can stop without scanning
+//!   host-side.
+//! * `cc_step`: one Shiloach-Vishkin hook (masked min product — the
+//!   GraphBLAS analogue of Figure 2's `remote_min`) plus log₂(N) pointer
+//!   jumps, returning the changed count.
+//!
+//! The engine owns the convergence loops, query batching and timing — the
+//! coordinator-side behavior whose Xeon-calibrated cost model lives in
+//! [`super::xeon`].
+
+use anyhow::Result;
+
+use crate::graph::csr::Csr;
+use crate::runtime::Engine;
+
+/// Result of one batched-BFS evaluation.
+#[derive(Debug, Clone)]
+pub struct BfsBatchResult {
+    /// Per-query levels (graph-sized, -1 = unreached).
+    pub levels: Vec<Vec<i64>>,
+    /// Step-function invocations executed.
+    pub steps: usize,
+    /// Host wall time spent in PJRT execution (s).
+    pub exec_s: f64,
+}
+
+/// Result of one CC evaluation.
+#[derive(Debug, Clone)]
+pub struct CcResult {
+    pub labels: Vec<i64>,
+    pub iterations: usize,
+    pub exec_s: f64,
+}
+
+/// A GraphBLAS-style engine bound to one (small) graph.
+pub struct GraphBlasEngine<'e> {
+    engine: &'e Engine,
+    /// Dense padded adjacency, row-major (n_pad x n_pad).
+    adj: Vec<f32>,
+    /// Real vertex count.
+    n: usize,
+    /// Padded dimension (the artifact's n).
+    n_pad: usize,
+}
+
+impl std::fmt::Debug for GraphBlasEngine<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("GraphBlasEngine")
+            .field("n", &self.n)
+            .field("n_pad", &self.n_pad)
+            .finish()
+    }
+}
+
+impl<'e> GraphBlasEngine<'e> {
+    /// Embed graph `g` into the engine's padded adjacency. Fails if the
+    /// graph exceeds the artifact dimension.
+    pub fn new(engine: &'e Engine, g: &Csr) -> Result<Self> {
+        let n_pad = engine.manifest().n;
+        anyhow::ensure!(
+            g.n() <= n_pad,
+            "graph has {} vertices but artifacts were lowered at n={n_pad}; \
+             regenerate with `make artifacts N={}` or use a smaller graph",
+            g.n(),
+            g.n().next_power_of_two()
+        );
+        let mut adj = vec![0.0f32; n_pad * n_pad];
+        for u in 0..g.n() as u32 {
+            for &v in g.neighbors(u) {
+                adj[u as usize * n_pad + v as usize] = 1.0;
+            }
+        }
+        Ok(GraphBlasEngine { engine, adj, n: g.n(), n_pad })
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Run BFS for up to `batch-variant` sources simultaneously, chunking
+    /// if more sources than the largest lowered batch.
+    pub fn bfs(&self, sources: &[u32]) -> Result<BfsBatchResult> {
+        anyhow::ensure!(!sources.is_empty(), "need at least one source");
+        let mut levels = Vec::with_capacity(sources.len());
+        let mut steps = 0usize;
+        let mut exec_s = 0.0f64;
+        // Chunk over the largest available batch variant.
+        let max_b = self
+            .engine
+            .manifest()
+            .bfs_batches()
+            .last()
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("no bfs_step artifacts"))?;
+        for chunk in sources.chunks(max_b) {
+            let r = self.bfs_chunk(chunk)?;
+            levels.extend(r.levels);
+            steps += r.steps;
+            exec_s += r.exec_s;
+        }
+        Ok(BfsBatchResult { levels, steps, exec_s })
+    }
+
+    fn bfs_chunk(&self, sources: &[u32]) -> Result<BfsBatchResult> {
+        let variant = self
+            .engine
+            .manifest()
+            .bfs_variant_for(sources.len())
+            .ok_or_else(|| anyhow::anyhow!("no bfs_step artifacts"))?
+            .clone();
+        let b = variant.batch;
+        let n = self.n_pad;
+        debug_assert!(sources.len() <= b);
+
+        let mut frontier = vec![0.0f32; b * n];
+        let mut visited = vec![0.0f32; b * n];
+        let mut levels = vec![-1.0f32; b * n];
+        for (q, &src) in sources.iter().enumerate() {
+            anyhow::ensure!((src as usize) < self.n, "source {src} out of range");
+            frontier[q * n + src as usize] = 1.0;
+            visited[q * n + src as usize] = 1.0;
+            levels[q * n + src as usize] = 0.0;
+        }
+
+        let mut steps = 0usize;
+        let mut exec_s = 0.0f64;
+        let mut depth = 1.0f32;
+        loop {
+            let t0 = std::time::Instant::now();
+            let out = self.engine.execute_f32(
+                &variant.name,
+                &[
+                    (&self.adj, &[n as i64, n as i64]),
+                    (&frontier, &[b as i64, n as i64]),
+                    (&visited, &[b as i64, n as i64]),
+                    (&levels, &[b as i64, n as i64]),
+                    (&[depth], &[]),
+                ],
+            )?;
+            exec_s += t0.elapsed().as_secs_f64();
+            steps += 1;
+            let [next, vis, lev, active]: [Vec<f32>; 4] =
+                out.try_into().map_err(|_| anyhow::anyhow!("bad output arity"))?;
+            frontier = next;
+            visited = vis;
+            levels = lev;
+            depth += 1.0;
+            if active[..sources.len()].iter().all(|&a| a == 0.0) {
+                break;
+            }
+            anyhow::ensure!(
+                (steps as usize) <= self.n + 1,
+                "BFS failed to converge in {} steps",
+                steps
+            );
+        }
+
+        let out_levels = sources
+            .iter()
+            .enumerate()
+            .map(|(q, _)| {
+                levels[q * n..q * n + self.n].iter().map(|&x| x as i64).collect()
+            })
+            .collect();
+        Ok(BfsBatchResult { levels: out_levels, steps, exec_s })
+    }
+
+    /// Run connected components to convergence.
+    pub fn cc(&self) -> Result<CcResult> {
+        let variant = self
+            .engine
+            .manifest()
+            .cc_variant()
+            .ok_or_else(|| anyhow::anyhow!("no cc_step artifact"))?
+            .clone();
+        let n = self.n_pad;
+        let mut labels: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut iterations = 0usize;
+        let mut exec_s = 0.0f64;
+        loop {
+            let t0 = std::time::Instant::now();
+            let out = self.engine.execute_f32(
+                &variant.name,
+                &[(&self.adj, &[n as i64, n as i64]), (&labels, &[n as i64])],
+            )?;
+            exec_s += t0.elapsed().as_secs_f64();
+            iterations += 1;
+            let changed = out[1][0];
+            labels = out[0].clone();
+            if changed == 0.0 {
+                break;
+            }
+            anyhow::ensure!(
+                iterations <= self.n + 1,
+                "CC failed to converge in {iterations} iterations"
+            );
+        }
+        Ok(CcResult {
+            labels: labels[..self.n].iter().map(|&x| x as i64).collect(),
+            iterations,
+            exec_s,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::oracle;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+    use crate::runtime::artifact::default_artifacts_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::from_dir(&dir).unwrap())
+    }
+
+    fn small_rmat(engine: &Engine) -> Csr {
+        // Fit comfortably inside the artifact dimension.
+        let scale = (engine.manifest().n as f64).log2() as u32 - 1;
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = 99;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn bfs_matches_oracle() {
+        let Some(eng) = engine() else { return };
+        let g = small_rmat(&eng);
+        let gb = GraphBlasEngine::new(&eng, &g).unwrap();
+        let sources = [1u32, 7, 23];
+        let res = gb.bfs(&sources).unwrap();
+        assert_eq!(res.levels.len(), 3);
+        for (i, &src) in sources.iter().enumerate() {
+            oracle::check_bfs(&g, src, &res.levels[i]).unwrap();
+        }
+        assert!(res.exec_s > 0.0);
+    }
+
+    #[test]
+    fn cc_matches_oracle() {
+        let Some(eng) = engine() else { return };
+        let g = small_rmat(&eng);
+        let gb = GraphBlasEngine::new(&eng, &g).unwrap();
+        let res = gb.cc().unwrap();
+        oracle::check_cc(&g, &res.labels).unwrap();
+        assert!(res.iterations >= 1);
+    }
+
+    #[test]
+    fn oversized_graph_rejected() {
+        let Some(eng) = engine() else { return };
+        let n = eng.manifest().n;
+        let edges: Vec<(u32, u32)> = (0..n as u32).map(|i| (i, i + 1)).collect();
+        let g = build_undirected_csr(n + 2, &edges);
+        let err = GraphBlasEngine::new(&eng, &g).unwrap_err();
+        assert!(err.to_string().contains("lowered at"));
+    }
+
+    #[test]
+    fn batch_chunking_handles_many_sources() {
+        let Some(eng) = engine() else { return };
+        let g = small_rmat(&eng);
+        let gb = GraphBlasEngine::new(&eng, &g).unwrap();
+        let max_b = *eng.manifest().bfs_batches().last().unwrap();
+        let k = max_b + 3; // forces two chunks
+        let sources: Vec<u32> = (0..k as u32).collect();
+        let res = gb.bfs(&sources).unwrap();
+        assert_eq!(res.levels.len(), k);
+        oracle::check_bfs(&g, 0, &res.levels[0]).unwrap();
+        oracle::check_bfs(&g, max_b as u32, &res.levels[max_b]).unwrap();
+    }
+}

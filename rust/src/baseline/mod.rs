@@ -1,0 +1,22 @@
+//! The comparison platform of §IV-D: RedisGraph (GraphBLAS/LAGraph on Intel
+//! Xeon), rebuilt in three parts:
+//!
+//! * [`engine`] — a *real, executing* GraphBLAS-semantics engine: BFS as
+//!   masked boolean SpMV and SV-CC as a masked min product, AOT-compiled
+//!   from JAX+Pallas and run on PJRT (this is exactly how RedisGraph
+//!   implements its BFS procedure on top of GraphBLAS [17]).
+//! * [`xeon`] — the calibrated timing model mapping the engine's workload
+//!   to the paper's x1e.32xlarge (128 vCPU Xeon) behavior, including the
+//!   thread-pool oversubscription that makes 128 concurrent queries blow
+//!   up (Table III's super-linear last column).
+//! * [`redisgraph`] — the client-facing bits: the Figure-5 Cypher query
+//!   template and the `redis_cli` client/server overhead adjustment the
+//!   paper applies to Pathfinder times.
+
+pub mod engine;
+pub mod redisgraph;
+pub mod xeon;
+
+pub use engine::GraphBlasEngine;
+pub use redisgraph::{adjusted_speedup, query_template, ClientOverhead};
+pub use xeon::XeonModel;

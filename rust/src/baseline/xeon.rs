@@ -1,0 +1,144 @@
+//! Calibrated RedisGraph-on-Xeon timing model (paper §IV-D).
+//!
+//! We cannot rent the paper's x1e.32xlarge + Redis Enterprise setup, so
+//! Table III's RedisGraph column is reproduced by a model with two factors:
+//!
+//! * a **base rate**: the per-query service time of RedisGraph's
+//!   GraphBLAS BFS at the paper's graph size. Our PJRT engine
+//!   ([`super::engine`]) measures the same algebra end-to-end at artifact
+//!   scale; `anchor_measured` rescales the model to such a measurement so
+//!   the whole column can be regenerated from an actual execution.
+//! * a **contention curve**: per-query slow-down as a function of
+//!   concurrent queries on a 64-core / 128-hardware-thread box —
+//!   memory-bandwidth contention up to ~32 queries, hyper-thread sharing
+//!   to 128, and preemptive oversubscription past the hardware thread
+//!   count ("some of the threads will be preempted for other tasks like
+//!   keeping the client-server connections alive"). The curve's knots are
+//!   calibrated once against the published Table III column (that table is
+//!   the only ground truth available for this machine) and interpolated
+//!   log-linearly elsewhere, so the model also predicts query counts the
+//!   paper did not measure.
+
+/// Per-query contention factor knots: (concurrent queries, slow-down).
+/// Derived from the paper's Table III RedisGraph row divided by q x t(1).
+const CONTENTION_KNOTS: &[(f64, f64)] = &[
+    (1.0, 1.0),
+    (8.0, 1.0),
+    (16.0, 1.74),
+    (32.0, 1.73),
+    (64.0, 1.91),
+    (128.0, 2.67),
+];
+
+/// Growth exponent applied beyond the last knot (oversubscription past the
+/// machine's 128 hardware threads: preemption grows the per-query cost
+/// roughly linearly in q).
+const OVERSUB_EXPONENT: f64 = 1.0;
+
+/// The Xeon/RedisGraph cost model.
+#[derive(Debug, Clone)]
+pub struct XeonModel {
+    /// Service time of one isolated BFS query (s), client overhead
+    /// excluded. Paper anchor: t(1) = 5 s on the scale-25 graph.
+    pub base_query_s: f64,
+    /// Hardware threads (128 vCPUs on the x1e.32xlarge).
+    pub hw_threads: usize,
+}
+
+impl XeonModel {
+    /// The paper's configuration: scale-25 graph, 5 s single query.
+    pub fn paper() -> Self {
+        XeonModel { base_query_s: 5.0, hw_threads: 128 }
+    }
+
+    /// Anchor the model to a measured single-query time of our PJRT
+    /// GraphBLAS engine, scaled from artifact-sized graph to the target
+    /// graph by directed edge count (SpMV work is O(m) per level sweep and
+    /// level count grows slowly).
+    pub fn anchor_measured(measured_s: f64, measured_m: usize, target_m: usize) -> Self {
+        assert!(measured_s > 0.0 && measured_m > 0);
+        XeonModel {
+            base_query_s: measured_s * target_m as f64 / measured_m as f64,
+            hw_threads: 128,
+        }
+    }
+
+    /// Per-query contention factor at `q` concurrent queries.
+    pub fn contention(&self, q: usize) -> f64 {
+        let q = q.max(1) as f64;
+        let knots = CONTENTION_KNOTS;
+        if q <= knots[0].0 {
+            return knots[0].1;
+        }
+        for w in knots.windows(2) {
+            let (q0, c0) = w[0];
+            let (q1, c1) = w[1];
+            if q <= q1 {
+                // Log-linear interpolation in q.
+                let f = (q.ln() - q0.ln()) / (q1.ln() - q0.ln());
+                return c0 + f * (c1 - c0);
+            }
+        }
+        // Beyond the last knot: preemptive oversubscription.
+        let (q_last, c_last) = *knots.last().unwrap();
+        c_last * (q / q_last).powf(OVERSUB_EXPONENT)
+    }
+
+    /// Total wall time for `q` concurrent BFS queries (s), Table III row.
+    pub fn total_s(&self, q: usize) -> f64 {
+        q as f64 * self.base_query_s * self.contention(q)
+    }
+
+    /// Mean per-query service time at concurrency `q` (s).
+    pub fn per_query_s(&self, q: usize) -> f64 {
+        self.base_query_s * self.contention(q)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reproduces_table3_redisgraph_row() {
+        let m = XeonModel::paper();
+        // Paper row: 5, 40, 139, 276, 610, 1707 (s).
+        let expect = [(1, 5.0), (8, 40.0), (16, 139.0), (32, 276.0), (64, 610.0), (128, 1707.0)];
+        for (q, t) in expect {
+            let got = m.total_s(q);
+            assert!(
+                (got - t).abs() / t < 0.02,
+                "q={q}: modeled {got:.1}s vs paper {t}s"
+            );
+        }
+    }
+
+    #[test]
+    fn contention_monotone_after_warmup() {
+        let m = XeonModel::paper();
+        assert!(m.contention(1) <= m.contention(16) + 1e-9);
+        assert!(m.contention(64) < m.contention(128));
+        // Past the hardware threads it keeps degrading.
+        assert!(m.contention(256) > 1.5 * m.contention(128) * 0.9);
+    }
+
+    #[test]
+    fn interpolates_between_knots() {
+        let m = XeonModel::paper();
+        let c12 = m.contention(12);
+        assert!(c12 > m.contention(8) && c12 < m.contention(16));
+    }
+
+    #[test]
+    fn anchoring_scales_by_edges() {
+        let m = XeonModel::anchor_measured(0.01, 10_000, 1_000_000);
+        assert!((m.base_query_s - 1.0).abs() < 1e-12);
+        // Shape identical to the paper model.
+        let p = XeonModel::paper();
+        for q in [1usize, 16, 128] {
+            let ratio_m = m.total_s(q) / m.total_s(1);
+            let ratio_p = p.total_s(q) / p.total_s(1);
+            assert!((ratio_m - ratio_p).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Ablations beyond the paper — the what-ifs its §VI asks for:
+//!
+//! * **MSP write priority** (§IV-C: "likely is because of the relative
+//!   priorities of read and write ... at the memory-side processors"):
+//!   sweep `msp_write_priority` and watch the mixed-workload concurrent
+//!   time move.
+//! * **Healthy 32-node machine** (§IV-B's hardware issues): rerun the
+//!   Fig. 4 point on `pathfinder-32-healthy` to quantify what the broken
+//!   chassis cost.
+//! * **Spawn efficiency**: the calibrated single-query parallelism deficit
+//!   is the source of the concurrency win; sweeping it shows how the
+//!   improvement would collapse if one query could saturate the machine.
+
+use anyhow::Result;
+
+use crate::config::machine::MachineConfig;
+use crate::config::workload::MixPoint;
+use crate::coordinator::{planner, Coordinator, Policy};
+use crate::sim::machine::Machine;
+use crate::util::format::{fmt_pct, fmt_s, TextTable};
+use crate::util::stats::improvement_pct;
+
+use super::context::Harness;
+
+#[derive(Debug, Clone)]
+pub struct AblationData {
+    pub msp_priority: TextTable,
+    pub healthy_32: TextTable,
+    pub spawn_efficiency: TextTable,
+}
+
+/// Sweep MSP write priority on a mixed workload (Table II's stress case).
+fn msp_priority_sweep(h: &Harness, mix: MixPoint) -> Result<TextTable> {
+    let mut t = TextTable::new(vec!["msp_write_priority", "conc. mixed time (s)"]);
+    for prio in [0.5, 0.75, 1.0, 1.5, 2.0] {
+        let mut cfg = h.cfg.machines[0].clone();
+        cfg.msp_write_priority = prio;
+        let coord = Coordinator::new(&h.g, Machine::new(cfg));
+        let queries = planner::mix_queries(&h.g, mix, h.cfg.workload.source_seed);
+        let rep = coord.run(&queries, Policy::Concurrent)?;
+        t.row(vec![format!("{prio:.2}"), fmt_s(rep.makespan_s)]);
+    }
+    Ok(t)
+}
+
+/// Degraded vs hypothetical healthy 32-node machine at one Fig. 4 point.
+fn healthy_32(h: &Harness, queries: usize) -> Result<TextTable> {
+    let mut t = TextTable::new(vec![
+        "machine",
+        "concurrent (s)",
+        "sequential (s)",
+        "improvement",
+    ]);
+    for cfg in [MachineConfig::pathfinder_32(), MachineConfig::pathfinder_32_healthy()] {
+        let coord = Coordinator::new(&h.g, Machine::new(cfg.clone()));
+        let qs = planner::bfs_queries(&h.g, queries, h.cfg.workload.source_seed);
+        let conc = coord.run(&qs, Policy::Concurrent)?;
+        let seq = coord.run(&qs, Policy::Sequential)?;
+        t.row(vec![
+            cfg.name.clone(),
+            fmt_s(conc.makespan_s),
+            fmt_s(seq.makespan_s),
+            fmt_pct(improvement_pct(seq.makespan_s, conc.makespan_s)),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Sweep the single-query spawn efficiency on the 8-node machine.
+fn spawn_sweep(h: &Harness, queries: usize) -> Result<TextTable> {
+    let mut t = TextTable::new(vec!["spawn_efficiency", "improvement (conc vs seq)"]);
+    for eta in [0.2, 0.41, 0.6, 0.8, 1.0] {
+        let mut cfg = h.cfg.machines[0].clone();
+        cfg.spawn_efficiency = eta;
+        let coord = Coordinator::new(&h.g, Machine::new(cfg));
+        let qs = planner::bfs_queries(&h.g, queries, h.cfg.workload.source_seed);
+        let conc = coord.run(&qs, Policy::Concurrent)?;
+        let seq = coord.run(&qs, Policy::Sequential)?;
+        t.row(vec![
+            format!("{eta:.2}"),
+            fmt_pct(improvement_pct(seq.makespan_s, conc.makespan_s)),
+        ]);
+    }
+    Ok(t)
+}
+
+pub fn run(h: &Harness) -> Result<AblationData> {
+    let mix = h
+        .cfg
+        .workload
+        .mixes
+        .first()
+        .copied()
+        .unwrap_or(MixPoint { bfs: 16, cc: 4 });
+    // Keep the ablation workload modest: it is a sensitivity study.
+    let mix = MixPoint { bfs: mix.bfs.min(32), cc: mix.cc.min(8) };
+    let queries = 32.min(h.cfg.machines[0].max_concurrent_queries());
+    Ok(AblationData {
+        msp_priority: msp_priority_sweep(h, mix)?,
+        healthy_32: healthy_32(h, queries)?,
+        spawn_efficiency: spawn_sweep(h, queries)?,
+    })
+}
+
+pub fn report(h: &Harness) -> Result<AblationData> {
+    let data = run(h)?;
+    println!("== Ablation: MSP read/write priority (mixed workload, §IV-C) ==");
+    println!("{}", data.msp_priority.render());
+    println!("== Ablation: degraded vs healthy 32-node machine (§IV-B) ==");
+    println!("{}", data.healthy_32.render());
+    println!("== Ablation: single-query spawn efficiency (the headroom source) ==");
+    println!("{}", data.spawn_efficiency.render());
+    h.save_csv(&data.msp_priority, "ablation_msp_priority")?;
+    h.save_csv(&data.healthy_32, "ablation_healthy32")?;
+    let p = h.save_csv(&data.spawn_efficiency, "ablation_spawn_efficiency")?;
+    println!("csv: {p} (+ ablation_msp_priority, ablation_healthy32)");
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::GraphConfig;
+
+    #[test]
+    fn ablations_produce_tables() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(10);
+        cfg.workload.query_counts = vec![8];
+        cfg.workload.mixes = vec![MixPoint { bfs: 8, cc: 2 }];
+        let h = Harness::new(cfg).unwrap();
+        let d = run(&h).unwrap();
+        assert!(!d.msp_priority.is_empty());
+        assert!(!d.healthy_32.is_empty());
+        assert!(!d.spawn_efficiency.is_empty());
+    }
+}

@@ -1,0 +1,99 @@
+//! Calibration report: the anchors tying the simulator's free parameters
+//! to the paper's published numbers (EXPERIMENTS.md §Calibration).
+//!
+//! Paper anchors (scale-25 graph, 522 M undirected edges):
+//!
+//! * 8-node solo BFS           = 3.47 s   (Table III column 1)
+//! * 8-node 128 concurrent BFS = 226.30 s (Table III) → 1.77 s/query
+//! * solo/concurrent-throughput ratio ≈ 2.0 on 8 nodes
+//! * 32-node solo BFS          = 1.04 s
+//! * improvement bands: >100 % (8 nodes), 81–97 % (32 nodes)
+//!
+//! This report prints the simulator's equivalents at the configured scale
+//! (absolute values scale with the graph; the *ratios* are the contract).
+
+use anyhow::Result;
+
+use crate::coordinator::Policy;
+use crate::util::format::{fmt_s, TextTable};
+
+use super::context::Harness;
+
+#[derive(Debug, Clone)]
+pub struct CalibrationData {
+    pub table: TextTable,
+    /// (machine, solo_s, conc_per_query_s, ratio).
+    pub ratios: Vec<(String, f64, f64, f64)>,
+}
+
+pub fn run(h: &Harness) -> Result<CalibrationData> {
+    let mut t = TextTable::new(vec![
+        "machine",
+        "solo BFS (s)",
+        "128-conc/query (s)",
+        "solo/conc ratio",
+        "channel util (conc)",
+    ]);
+    let mut ratios = Vec::new();
+    for bench in h.benches() {
+        let k = 128.min(bench.specs.len());
+        let solo = bench
+            .coordinator
+            .run_specs(&bench.queries[..1], &bench.specs[..1], Policy::Concurrent)?
+            .makespan_s;
+        let conc = bench.coordinator.run_specs(
+            &bench.queries[..k],
+            &bench.specs[..k],
+            Policy::Concurrent,
+        )?;
+        let per_query = conc.makespan_s / k as f64;
+        let ratio = solo / per_query;
+        t.row(vec![
+            bench.name().to_string(),
+            fmt_s(solo),
+            fmt_s(per_query),
+            format!("{ratio:.2}"),
+            format!("{:.0}%", conc.mean_channel_utilization * 100.0),
+        ]);
+        ratios.push((bench.name().to_string(), solo, per_query, ratio));
+    }
+    Ok(CalibrationData { table: t, ratios })
+}
+
+pub fn report(h: &Harness) -> Result<CalibrationData> {
+    let data = run(h)?;
+    println!("== Calibration anchors (paper: 8n ratio ~2.0, 32n ratio ~1.6-1.9) ==");
+    println!("{}", data.table.render());
+    println!(
+        "graph: scale {} ({} vertices, {} directed edges); paper: scale 25",
+        h.cfg.workload.graph.scale,
+        h.g.n(),
+        h.g.m_directed()
+    );
+    let p = h.save_csv(&data.table, "calibration")?;
+    println!("csv: {p}");
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::GraphConfig;
+
+    #[test]
+    fn solo_concurrent_ratio_near_paper() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(12);
+        cfg.workload.query_counts = vec![64];
+        cfg.workload.mixes.clear();
+        let h = Harness::new(cfg).unwrap();
+        let d = run(&h).unwrap();
+        let (_, _, _, ratio8) = d.ratios[0];
+        // Paper: 3.47 / 1.77 ~= 1.96 on 8 nodes. At scale 12 the
+        // level-sync/latency terms still dominate and inflate the ratio;
+        // the tight band is asserted at scale >= 14 in rust/tests/
+        // e2e_tests.rs — here we only guard the plumbing and direction.
+        assert!(ratio8 > 1.5 && ratio8 < 5.0, "8-node ratio {ratio8:.2}");
+    }
+}

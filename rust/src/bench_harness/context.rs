@@ -1,0 +1,127 @@
+//! Shared experiment context: graph, machines, prepared query specs.
+
+use anyhow::Result;
+
+use crate::alg::Query;
+use crate::config::experiment::ExperimentConfig;
+use crate::config::machine::MachineConfig;
+use crate::coordinator::planner;
+use crate::coordinator::Coordinator;
+use crate::graph::builder::build_undirected_csr;
+use crate::graph::csr::Csr;
+use crate::graph::rmat::Rmat;
+use crate::sim::flow::QuerySpec;
+use crate::sim::machine::Machine;
+use crate::util::format::TextTable;
+
+/// Everything an experiment needs, built once: the graph and per-machine
+/// coordinators with prepared BFS specs (preparation is the expensive part
+/// — each query is functionally executed to emit demand — so sample points
+/// share one preparation at the maximum query count and slice it).
+pub struct Harness {
+    pub cfg: ExperimentConfig,
+    pub g: Csr,
+}
+
+/// A machine bound to the harness graph with its BFS queries pre-prepared.
+pub struct MachineBench<'g> {
+    pub coordinator: Coordinator<'g>,
+    /// The prepared BFS queries (max_queries of them).
+    pub queries: Vec<Query>,
+    pub specs: Vec<QuerySpec>,
+}
+
+impl MachineBench<'_> {
+    /// Machine preset name.
+    pub fn name(&self) -> &str {
+        &self.coordinator.machine().cfg.name
+    }
+
+    /// Query counts applicable to this machine: the workload counts
+    /// filtered to the machine's context capacity and the prepared size.
+    pub fn counts(&self, all: &[usize]) -> Vec<usize> {
+        all.iter()
+            .copied()
+            .filter(|&k| k <= self.specs.len() && k <= self.coordinator.capacity())
+            .collect()
+    }
+}
+
+impl Harness {
+    /// Build the graph described by the experiment config.
+    pub fn new(cfg: ExperimentConfig) -> Result<Self> {
+        cfg.validate()?;
+        let gcfg = &cfg.workload.graph;
+        let rmat = Rmat::new(gcfg.clone());
+        let g = build_undirected_csr(gcfg.n_vertices() as usize, &rmat.edges());
+        Ok(Harness { cfg, g })
+    }
+
+    /// The largest query count any experiment will use on `m`.
+    fn max_queries(&self, m: &MachineConfig) -> usize {
+        let wl = &self.cfg.workload;
+        let from_counts = wl.query_counts.iter().copied().max().unwrap_or(1);
+        let from_mixes = wl.mixes.iter().map(|x| x.bfs).max().unwrap_or(0);
+        from_counts.max(from_mixes).min(m.max_concurrent_queries())
+    }
+
+    /// Bind a machine: build its coordinator and prepare its BFS specs.
+    pub fn bench(&self, m: &MachineConfig) -> MachineBench<'_> {
+        let machine = Machine::new(m.clone());
+        let coordinator = Coordinator::new(&self.g, machine);
+        let k = self.max_queries(m);
+        let queries = planner::bfs_queries(&self.g, k, self.cfg.workload.source_seed);
+        let specs = coordinator.prepare(&queries);
+        MachineBench { coordinator, queries, specs }
+    }
+
+    /// All configured machines, bound.
+    pub fn benches(&self) -> Vec<MachineBench<'_>> {
+        self.cfg.machines.iter().map(|m| self.bench(m)).collect()
+    }
+
+    /// Write a table's CSV into the results dir (creating it) and return
+    /// the path as a display string.
+    pub fn save_csv(&self, table: &TextTable, name: &str) -> Result<String> {
+        std::fs::create_dir_all(&self.cfg.results_dir)?;
+        let p = table.write_csv(&self.cfg.results_dir, name)?;
+        Ok(p.display().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::GraphConfig;
+
+    fn tiny_cfg() -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(10);
+        cfg.workload.query_counts = vec![1, 4, 8];
+        cfg.workload.mixes = vec![crate::config::workload::MixPoint { bfs: 6, cc: 2 }];
+        cfg.results_dir = std::env::temp_dir().join("pfq-harness-test");
+        cfg
+    }
+
+    #[test]
+    fn harness_builds_and_prepares() {
+        let h = Harness::new(tiny_cfg()).unwrap();
+        assert_eq!(h.g.n(), 1 << 10);
+        let benches = h.benches();
+        assert_eq!(benches.len(), 2);
+        let b8 = &benches[0];
+        assert_eq!(b8.name(), "pathfinder-8");
+        assert_eq!(b8.specs.len(), 8);
+        assert_eq!(b8.counts(&[1, 4, 8, 999]), vec![1, 4, 8]);
+    }
+
+    #[test]
+    fn counts_respect_capacity() {
+        let mut cfg = tiny_cfg();
+        cfg.workload.query_counts = vec![1, 4];
+        cfg.machines[0].ctx_mem_per_node_bytes = 16 << 20; // capacity 8
+        let h = Harness::new(cfg).unwrap();
+        let b = h.bench(&h.cfg.machines[0].clone());
+        assert!(b.specs.len() <= 8);
+    }
+}

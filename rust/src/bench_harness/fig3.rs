@@ -1,0 +1,143 @@
+//! Figure 3: total time (s) for concurrent vs sequential BFS queries, on
+//! the 8-node and 32-node machines, across the query-count sweep.
+
+use anyhow::Result;
+
+use crate::coordinator::{ImprovementRow, Policy};
+use crate::util::format::{fmt_s, TextTable};
+
+use super::context::Harness;
+
+/// The Fig. 3 dataset: one [`ImprovementRow`] per (machine, query count).
+#[derive(Debug, Clone)]
+pub struct Fig3Data {
+    pub rows: Vec<ImprovementRow>,
+}
+
+impl Fig3Data {
+    /// Rows of one machine.
+    pub fn machine(&self, name: &str) -> Vec<&ImprovementRow> {
+        self.rows.iter().filter(|r| r.machine == name).collect()
+    }
+
+    /// Render the paper-shaped series table.
+    pub fn table(&self) -> TextTable {
+        let mut t = TextTable::new(vec![
+            "machine",
+            "queries",
+            "concurrent (s)",
+            "sequential (s)",
+            "speedup",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.machine.clone(),
+                r.queries.to_string(),
+                fmt_s(r.concurrent_s),
+                fmt_s(r.sequential_s),
+                format!("{:.2}x", r.speedup()),
+            ]);
+        }
+        t
+    }
+
+    /// Check the paper's headline observation: "times increase linearly
+    /// with the number of BFS queries in all cases". Returns the worst
+    /// R^2-style deviation of per-query time across counts >= `min_q`.
+    pub fn linearity_deviation(&self, machine: &str, min_q: usize) -> f64 {
+        let rows: Vec<&ImprovementRow> = self
+            .machine(machine)
+            .into_iter()
+            .filter(|r| r.queries >= min_q)
+            .collect();
+        if rows.len() < 2 {
+            return 0.0;
+        }
+        let per_query: Vec<f64> =
+            rows.iter().map(|r| r.concurrent_s / r.queries as f64).collect();
+        let mean = crate::util::stats::mean(&per_query);
+        per_query
+            .iter()
+            .map(|x| (x - mean).abs() / mean)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Run the Fig. 3 sweep.
+pub fn run(h: &Harness) -> Result<Fig3Data> {
+    let mut rows = Vec::new();
+    for bench in h.benches() {
+        let counts = bench.counts(&h.cfg.workload.query_counts);
+        for k in counts {
+            let conc = bench.coordinator.run_specs(
+                &bench.queries[..k],
+                &bench.specs[..k],
+                Policy::Concurrent,
+            )?;
+            let seq = bench.coordinator.run_specs(
+                &bench.queries[..k],
+                &bench.specs[..k],
+                Policy::Sequential,
+            )?;
+            rows.push(ImprovementRow::from_reports(&conc, &seq));
+        }
+    }
+    Ok(Fig3Data { rows })
+}
+
+/// Run, print, save CSV.
+pub fn report(h: &Harness) -> Result<Fig3Data> {
+    let data = run(h)?;
+    println!("== Figure 3: concurrent vs sequential BFS (total time) ==");
+    println!("{}", data.table().render());
+    let p = h.save_csv(&data.table(), "fig3_bfs_conc_vs_seq")?;
+    println!("csv: {p}");
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::GraphConfig;
+
+    fn h() -> Harness {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(11);
+        cfg.workload.query_counts = vec![2, 8, 16];
+        cfg.workload.mixes.clear();
+        Harness::new(cfg).unwrap()
+    }
+
+    #[test]
+    fn produces_rows_for_both_machines() {
+        let data = run(&h()).unwrap();
+        assert_eq!(data.rows.len(), 6);
+        assert_eq!(data.machine("pathfinder-8").len(), 3);
+        assert_eq!(data.machine("pathfinder-32").len(), 3);
+    }
+
+    #[test]
+    fn concurrent_wins_at_every_point() {
+        let data = run(&h()).unwrap();
+        for r in &data.rows {
+            if r.queries >= 8 {
+                assert!(
+                    r.speedup() > 1.5,
+                    "{} q={}: speedup {:.2}",
+                    r.machine,
+                    r.queries,
+                    r.speedup()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn times_linear_in_query_count() {
+        let data = run(&h()).unwrap();
+        // Per-query concurrent time stable to within 40% across counts
+        // (small-scale graphs are noisier than the paper's scale 25).
+        assert!(data.linearity_deviation("pathfinder-8", 8) < 0.4);
+    }
+}

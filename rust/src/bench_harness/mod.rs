@@ -1,0 +1,28 @@
+//! The evaluation harness: regenerates every table and figure of the
+//! paper's §IV on the simulated Pathfinder + the PJRT baseline engine.
+//!
+//! | paper artifact | module | CLI |
+//! |---|---|---|
+//! | Fig. 3 (conc vs seq BFS times)        | [`fig3`]    | `pathfinder experiment fig3` |
+//! | Fig. 4 (improvement %)                | [`fig4`]    | `pathfinder experiment fig4` |
+//! | Table I (per-BFS quantiles)           | [`table1`]  | `pathfinder experiment table1` |
+//! | Table II (BFS+CC mixes)               | [`table2`]  | `pathfinder experiment table2` |
+//! | Table III (+ Fig. 5, RedisGraph)      | [`table3`]  | `pathfinder experiment table3` |
+//! | §IV-B scaling & context exhaustion    | [`scaling`] | `pathfinder experiment scaling` |
+//! | design-choice ablations (beyond paper)| [`ablation`]| `pathfinder experiment ablation` |
+//! | calibration anchors                   | [`calibrate`]| `pathfinder calibrate` |
+//!
+//! Every experiment prints the paper-shaped table and writes a CSV under
+//! the experiment's results dir.
+
+pub mod ablation;
+pub mod calibrate;
+pub mod context;
+pub mod fig3;
+pub mod fig4;
+pub mod scaling;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use context::Harness;

@@ -1,0 +1,138 @@
+//! §IV-B scaling anecdotes:
+//!
+//! * the 128-query 8→32-node speed-ups (paper: 2.69x concurrent, 3.24x
+//!   sequential — decidedly sub-linear on the degraded machine);
+//! * the 256-queries-on-8-nodes thread-context exhaustion, reproduced as
+//!   an admission failure plus the graceful queued alternative.
+
+use anyhow::Result;
+
+use crate::coordinator::Policy;
+use crate::sim::flow::OnFull;
+use crate::util::format::{fmt_s, TextTable};
+
+use super::context::Harness;
+
+#[derive(Debug, Clone)]
+pub struct ScalingData {
+    pub queries: usize,
+    /// (machine, concurrent s, sequential s).
+    pub rows: Vec<(String, f64, f64)>,
+    /// 8→32 node speed-ups (concurrent, sequential), if both machines ran.
+    pub speedups: Option<(f64, f64)>,
+    /// The context-exhaustion demo: (attempted queries, capacity,
+    /// error text, queued-makespan s).
+    pub exhaustion: Option<(usize, usize, String, f64)>,
+}
+
+impl ScalingData {
+    pub fn table(&self) -> TextTable {
+        let mut t = TextTable::new(vec!["machine", "concurrent (s)", "sequential (s)"]);
+        for (m, c, s) in &self.rows {
+            t.row(vec![m.clone(), fmt_s(*c), fmt_s(*s)]);
+        }
+        t
+    }
+}
+
+pub fn run(h: &Harness, queries: usize) -> Result<ScalingData> {
+    let mut rows = Vec::new();
+    for bench in h.benches() {
+        let k = queries.min(bench.specs.len()).min(bench.coordinator.capacity());
+        if k < queries {
+            continue;
+        }
+        let conc = bench.coordinator.run_specs(
+            &bench.queries[..k],
+            &bench.specs[..k],
+            Policy::Concurrent,
+        )?;
+        let seq = bench.coordinator.run_specs(
+            &bench.queries[..k],
+            &bench.specs[..k],
+            Policy::Sequential,
+        )?;
+        rows.push((bench.name().to_string(), conc.makespan_s, seq.makespan_s));
+    }
+    let speedups = (rows.len() >= 2).then(|| (rows[0].1 / rows[1].1, rows[0].2 / rows[1].2));
+
+    // Context exhaustion on the smallest machine: submit capacity+1
+    // queries (the paper hit this wall at 256 on 8 nodes).
+    let exhaustion = match h.cfg.machines.iter().min_by_key(|m| m.nodes) {
+        Some(mcfg) => {
+            let machine = crate::sim::machine::Machine::new(mcfg.clone());
+            let coord = crate::coordinator::Coordinator::new(&h.g, machine);
+            let cap = coord.capacity();
+            let attempt = cap + 1;
+            let qs = crate::coordinator::planner::bfs_queries(
+                &h.g,
+                attempt,
+                h.cfg.workload.source_seed,
+            );
+            let specs = coord.prepare(&qs);
+            let err = coord
+                .run_specs(&qs, &specs, Policy::Concurrent)
+                .expect_err("over-capacity run must fail")
+                .to_string();
+            let queued = coord.run_specs(
+                &qs,
+                &specs,
+                Policy::ConcurrentAdmitted { on_full: OnFull::Queue },
+            )?;
+            Some((attempt, cap, err, queued.makespan_s))
+        }
+        None => None,
+    };
+
+    Ok(ScalingData { queries, rows, speedups, exhaustion })
+}
+
+pub fn report(h: &Harness, queries: usize) -> Result<ScalingData> {
+    let data = run(h, queries)?;
+    println!("== §IV-B scaling: {} BFS queries across machines ==", data.queries);
+    println!("{}", data.table().render());
+    if let Some((conc, seq)) = data.speedups {
+        println!(
+            "8->32-node speed-up: {conc:.2}x concurrent, {seq:.2}x sequential \
+             (paper: 2.69x / 3.24x — sub-linear on the degraded machine)"
+        );
+    }
+    if let Some((attempt, cap, err, queued_s)) = &data.exhaustion {
+        println!();
+        println!("context exhaustion: {attempt} concurrent queries vs capacity {cap}:");
+        println!("  unadmitted: ERROR — {err}");
+        println!("  with admission(queue): completes in {}", fmt_s(*queued_s));
+    }
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::GraphConfig;
+
+    #[test]
+    fn sublinear_scaling_and_exhaustion() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(11);
+        cfg.workload.query_counts = vec![32];
+        cfg.workload.mixes.clear();
+        // Shrink 8-node capacity so the exhaustion demo triggers quickly.
+        cfg.machines[0].ctx_mem_per_node_bytes = 32 << 20; // capacity 16
+        let h = Harness::new(cfg).unwrap();
+        let d = run(&h, 16).unwrap();
+        assert_eq!(d.rows.len(), 2);
+        let (conc_sp, seq_sp) = d.speedups.unwrap();
+        // More nodes help, but far less than 4x on the degraded machine.
+        // (16 queries at scale 11 barely load the 32-node box; the paper's
+        // 2.69x/3.24x point is asserted at scale >= 14 in e2e_tests.rs.)
+        assert!(conc_sp > 1.05 && conc_sp < 4.0, "conc {conc_sp}");
+        assert!(seq_sp > 1.05 && seq_sp < 4.2, "seq {seq_sp}");
+        let (attempt, cap, err, queued_s) = d.exhaustion.unwrap();
+        assert_eq!(cap, 16);
+        assert_eq!(attempt, 17);
+        assert!(err.contains("thread-context memory"));
+        assert!(queued_s > 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Table I: quantiles (0/25/50/75/100 %) of the *average time per
+//! concurrent BFS*, per machine.
+//!
+//! Following the paper's construction: each concurrent sample point (one
+//! query count from the Fig. 3 sweep) yields one average-time-per-BFS
+//! value (total concurrent time / number of queries — the paper's 12
+//! samples on 8 nodes, 28 on 32); the table summarizes the distribution of
+//! those averages.
+
+use anyhow::Result;
+
+use crate::coordinator::Policy;
+use crate::util::format::TextTable;
+use crate::util::stats::Quantiles;
+
+use super::context::Harness;
+
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    pub machine: String,
+    pub samples: usize,
+    pub quantiles: Quantiles,
+}
+
+#[derive(Debug, Clone)]
+pub struct Table1Data {
+    pub rows: Vec<Table1Row>,
+}
+
+impl Table1Data {
+    pub fn table(&self) -> TextTable {
+        let mut t =
+            TextTable::new(vec!["machine", "samples", "0%", "25%", "50%", "75%", "100%"]);
+        for r in &self.rows {
+            let q = &r.quantiles;
+            t.row(vec![
+                r.machine.clone(),
+                r.samples.to_string(),
+                format!("{:.4}", q.q0),
+                format!("{:.4}", q.q25),
+                format!("{:.4}", q.q50),
+                format!("{:.4}", q.q75),
+                format!("{:.4}", q.q100),
+            ]);
+        }
+        t
+    }
+}
+
+pub fn run(h: &Harness) -> Result<Table1Data> {
+    let mut rows = Vec::new();
+    for bench in h.benches() {
+        let counts = bench.counts(&h.cfg.workload.query_counts);
+        let mut avgs = Vec::new();
+        for &k in &counts {
+            if k < 2 {
+                continue; // a single query is not a concurrency sample
+            }
+            let conc = bench.coordinator.run_specs(
+                &bench.queries[..k],
+                &bench.specs[..k],
+                Policy::Concurrent,
+            )?;
+            avgs.push(conc.makespan_s / k as f64);
+        }
+        if avgs.is_empty() {
+            continue;
+        }
+        rows.push(Table1Row {
+            machine: bench.name().to_string(),
+            samples: avgs.len(),
+            quantiles: Quantiles::from_samples(&avgs),
+        });
+    }
+    Ok(Table1Data { rows })
+}
+
+pub fn report(h: &Harness) -> Result<Table1Data> {
+    let data = run(h)?;
+    println!("== Table I: quantiles of the average time (s) per concurrent BFS ==");
+    println!("{}", data.table().render());
+    let p = h.save_csv(&data.table(), "table1_quantiles")?;
+    println!("csv: {p}");
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::GraphConfig;
+
+    #[test]
+    fn quantiles_ordered_and_32_faster_than_8() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(11);
+        cfg.workload.query_counts = vec![4, 8, 16, 24];
+        cfg.workload.mixes.clear();
+        let h = Harness::new(cfg).unwrap();
+        let d = run(&h).unwrap();
+        assert_eq!(d.rows.len(), 2);
+        for r in &d.rows {
+            let q = &r.quantiles;
+            assert!(q.q0 <= q.q25 && q.q25 <= q.q50 && q.q50 <= q.q75 && q.q75 <= q.q100);
+            assert_eq!(r.samples, 4);
+        }
+        // Paper: per-BFS averages drop from 1.77–3.97 s (8 nodes) to
+        // 0.61–1.22 s (32 nodes) — the 32-node machine is faster per query.
+        assert!(d.rows[1].quantiles.q50 < d.rows[0].quantiles.q50);
+    }
+}

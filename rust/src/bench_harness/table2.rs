@@ -1,0 +1,138 @@
+//! Table II: concurrent vs sequential times for BFS+CC mixes, with the
+//! paper's % improvement column.
+//!
+//! The sequential arm is the paper's: "all the breadth-first searches
+//! followed by all the connected components evaluations" (§IV-C). Each mix
+//! runs on the smallest configured machine whose thread-context capacity
+//! fits it — reproducing the paper's assignment (the 170-query mixes on
+//! 8 nodes, the 700-query mixes on the full Pathfinder).
+
+use anyhow::Result;
+
+use crate::config::workload::MixPoint;
+use crate::coordinator::{planner, Coordinator, Policy};
+use crate::sim::machine::Machine;
+use crate::util::format::{fmt_pct, fmt_s, TextTable};
+use crate::util::stats::improvement_pct;
+
+use super::context::Harness;
+
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    pub machine: String,
+    pub mix: MixPoint,
+    pub concurrent_s: f64,
+    pub sequential_s: f64,
+}
+
+impl Table2Row {
+    pub fn improvement_pct(&self) -> f64 {
+        improvement_pct(self.sequential_s, self.concurrent_s)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Table2Data {
+    pub rows: Vec<Table2Row>,
+}
+
+impl Table2Data {
+    pub fn table(&self) -> TextTable {
+        let mut t = TextTable::new(vec![
+            "machine",
+            "# BFS",
+            "# CC",
+            "conc. time (s)",
+            "seq. time (s)",
+            "% impr.",
+        ]);
+        for r in &self.rows {
+            t.row(vec![
+                r.machine.clone(),
+                r.mix.bfs.to_string(),
+                r.mix.cc.to_string(),
+                fmt_s(r.concurrent_s),
+                fmt_s(r.sequential_s),
+                fmt_pct(r.improvement_pct()),
+            ]);
+        }
+        t
+    }
+}
+
+pub fn run(h: &Harness) -> Result<Table2Data> {
+    let mut rows = Vec::new();
+    for mix in &h.cfg.workload.mixes {
+        // Smallest machine that can hold the whole mix concurrently.
+        let Some(mcfg) = h
+            .cfg
+            .machines
+            .iter()
+            .filter(|m| m.max_concurrent_queries() >= mix.total())
+            .min_by_key(|m| m.nodes)
+        else {
+            eprintln!(
+                "table2: no configured machine fits the {}+{} mix; skipping",
+                mix.bfs, mix.cc
+            );
+            continue;
+        };
+        let machine = Machine::new(mcfg.clone());
+        let coord = Coordinator::new(&h.g, machine);
+
+        let queries = planner::mix_queries(&h.g, *mix, h.cfg.workload.source_seed);
+        let conc = coord.run(&queries, Policy::Concurrent)?;
+        let seq_order = planner::sequential_mix_order(&queries);
+        let seq = coord.run(&seq_order, Policy::Sequential)?;
+
+        rows.push(Table2Row {
+            machine: mcfg.name.clone(),
+            mix: *mix,
+            concurrent_s: conc.makespan_s,
+            sequential_s: seq.makespan_s,
+        });
+    }
+    Ok(Table2Data { rows })
+}
+
+pub fn report(h: &Harness) -> Result<Table2Data> {
+    let data = run(h)?;
+    println!("== Table II: concurrent mix of BFS and CC ==");
+    println!("{}", data.table().render());
+    let p = h.save_csv(&data.table(), "table2_mixed")?;
+    println!("csv: {p}");
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::GraphConfig;
+
+    #[test]
+    fn mixes_route_to_fitting_machines_and_improve() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(11);
+        cfg.workload.query_counts = vec![1];
+        // A small mix (fits 8 nodes) and one that only fits 32 nodes.
+        cfg.workload.mixes = vec![
+            MixPoint { bfs: 16, cc: 4 },
+            MixPoint { bfs: 300, cc: 20 },
+        ];
+        let h = Harness::new(cfg).unwrap();
+        let d = run(&h).unwrap();
+        assert_eq!(d.rows.len(), 2);
+        assert_eq!(d.rows[0].machine, "pathfinder-8");
+        assert_eq!(d.rows[1].machine, "pathfinder-32");
+        for r in &d.rows {
+            assert!(
+                r.improvement_pct() > 30.0,
+                "{}: {:.0}%",
+                r.machine,
+                r.improvement_pct()
+            );
+            assert!(r.concurrent_s < r.sequential_s);
+        }
+    }
+}

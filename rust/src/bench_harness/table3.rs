@@ -1,0 +1,180 @@
+//! Table III: concurrent-BFS times for RedisGraph Enterprise (modeled,
+//! optionally anchored to a real PJRT GraphBLAS measurement) vs the
+//! Pathfinder (simulated), with the paper's client-overhead-adjusted
+//! speed-ups. Prints Figure 5's query template alongside.
+
+use anyhow::Result;
+
+use crate::baseline::redisgraph::{adjusted_speedup, query_template, ClientOverhead};
+use crate::baseline::xeon::XeonModel;
+use crate::coordinator::Policy;
+use crate::util::format::{fmt_s, TextTable};
+
+use super::context::Harness;
+
+/// Query counts of the paper's Table III columns.
+pub const COLUMNS: [usize; 6] = [1, 8, 16, 32, 64, 128];
+
+#[derive(Debug, Clone)]
+pub struct Table3Data {
+    pub counts: Vec<usize>,
+    /// Modeled RedisGraph totals (s).
+    pub redisgraph_s: Vec<f64>,
+    /// Simulated Pathfinder totals (s), one row per machine.
+    pub pathfinder: Vec<(String, Vec<f64>)>,
+    /// The client/server overhead applied to the adjusted speed-ups.
+    pub overhead: ClientOverhead,
+    /// If the PJRT engine was run to anchor the model: (measured single
+    /// query s at artifact scale, artifact-graph directed edges).
+    pub anchor: Option<(f64, usize)>,
+}
+
+impl Table3Data {
+    pub fn table(&self) -> TextTable {
+        let mut header = vec!["".to_string()];
+        header.extend(self.counts.iter().map(|q| q.to_string()));
+        let mut t = TextTable::new(header);
+        let mut rg_row = vec!["RedisGraph (modeled)".to_string()];
+        rg_row.extend(self.redisgraph_s.iter().map(|&s| fmt_s(s)));
+        t.row(rg_row);
+        for (name, times) in &self.pathfinder {
+            let mut row = vec![format!("{name} (simulated)")];
+            row.extend(times.iter().map(|&s| fmt_s(s)));
+            t.row(row);
+        }
+        for (name, times) in &self.pathfinder {
+            let mut row = vec![format!("{name} adj. speed-up")];
+            row.extend(
+                times
+                    .iter()
+                    .zip(&self.redisgraph_s)
+                    .map(|(&pf, &rg)| {
+                        format!("{:.2}", adjusted_speedup(rg, pf, self.overhead))
+                    }),
+            );
+            t.row(row);
+        }
+        t
+    }
+
+    /// Adjusted speed-up of one machine at one column.
+    pub fn speedup(&self, machine: &str, q: usize) -> Option<f64> {
+        let col = self.counts.iter().position(|&c| c == q)?;
+        let (_, times) = self.pathfinder.iter().find(|(n, _)| n == machine)?;
+        Some(adjusted_speedup(self.redisgraph_s[col], times[col], self.overhead))
+    }
+}
+
+/// Run Table III. If `engine` is supplied, the Xeon model's absolute scale
+/// is anchored to a real single-query measurement of the PJRT GraphBLAS
+/// engine on an artifact-sized slice of the workload graph.
+pub fn run(h: &Harness, engine: Option<&crate::runtime::Engine>) -> Result<Table3Data> {
+    // --- RedisGraph column. ---
+    let (xeon, anchor) = match engine {
+        Some(eng) => {
+            let n_art = eng.manifest().n;
+            // Generate a small R-MAT matching the artifact dimension.
+            let scale = (n_art as f64).log2() as u32;
+            let gcfg = crate::config::workload::GraphConfig {
+                scale: scale.min(h.cfg.workload.graph.scale),
+                ..h.cfg.workload.graph.clone()
+            };
+            let rmat = crate::graph::rmat::Rmat::new(gcfg.clone());
+            let small = crate::graph::builder::build_undirected_csr(
+                gcfg.n_vertices() as usize,
+                &rmat.edges(),
+            );
+            let gb = crate::baseline::GraphBlasEngine::new(eng, &small)?;
+            let src = crate::graph::sample::bfs_sources(&small, 1, 7)[0];
+            let res = gb.bfs(&[src])?;
+            let anchor = (res.exec_s, small.m_directed());
+            (
+                XeonModel::anchor_measured(res.exec_s, small.m_directed(), h.g.m_directed()),
+                Some(anchor),
+            )
+        }
+        None => (
+            // Unanchored: the paper's own absolute scale, rescaled from
+            // the paper's graph to ours by directed edge count.
+            XeonModel {
+                base_query_s: 5.0 * h.g.m_directed() as f64 / 1_044_951_226.0,
+                hw_threads: 128,
+            },
+            None,
+        ),
+    };
+
+    let counts: Vec<usize> = COLUMNS.to_vec();
+    let redisgraph_s: Vec<f64> = counts.iter().map(|&q| xeon.total_s(q)).collect();
+    let overhead = ClientOverhead::from_single_query(xeon.total_s(1));
+
+    // --- Pathfinder rows (simulated). ---
+    let mut pathfinder = Vec::new();
+    for bench in h.benches() {
+        let mut times = Vec::with_capacity(counts.len());
+        for &q in &counts {
+            anyhow::ensure!(
+                q <= bench.specs.len(),
+                "table3 needs {q} prepared queries on {}; increase query_counts",
+                bench.name()
+            );
+            let rep = bench.coordinator.run_specs(
+                &bench.queries[..q],
+                &bench.specs[..q],
+                Policy::Concurrent,
+            )?;
+            times.push(rep.makespan_s);
+        }
+        pathfinder.push((bench.name().to_string(), times));
+    }
+
+    Ok(Table3Data { counts, redisgraph_s, pathfinder, overhead, anchor })
+}
+
+pub fn report(h: &Harness, engine: Option<&crate::runtime::Engine>) -> Result<Table3Data> {
+    let data = run(h, engine)?;
+    println!("== Table III: RedisGraph vs Pathfinder, concurrent BFS (s) ==");
+    println!("(Fig. 5 query: {})", query_template(42));
+    if let Some((s, m)) = data.anchor {
+        println!(
+            "Xeon model anchored to PJRT GraphBLAS engine: {:.4}s / query at {m} directed edges",
+            s
+        );
+    }
+    println!("{}", data.table().render());
+    let p = h.save_csv(&data.table(), "table3_redisgraph")?;
+    println!("csv: {p}");
+    Ok(data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::experiment::ExperimentConfig;
+    use crate::config::workload::GraphConfig;
+
+    #[test]
+    fn speedups_grow_with_concurrency_like_the_paper() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.workload.graph = GraphConfig::with_scale(11);
+        cfg.workload.query_counts = vec![128];
+        cfg.workload.mixes.clear();
+        let h = Harness::new(cfg).unwrap();
+        let d = run(&h, None).unwrap();
+
+        // Shape checks against the paper's Table III:
+        // 32 nodes beats 8 nodes at every column.
+        for (i, _) in d.counts.iter().enumerate() {
+            assert!(d.pathfinder[1].1[i] < d.pathfinder[0].1[i]);
+        }
+        // The adjusted speed-up grows with concurrency and the 128-query
+        // column is the largest (RedisGraph oversubscribes).
+        let s32: Vec<f64> =
+            d.counts.iter().map(|&q| d.speedup("pathfinder-32", q).unwrap()).collect();
+        assert!(s32.windows(2).all(|w| w[0] <= w[1] + 1e-9), "{s32:?}");
+        assert!(s32.last().unwrap() > &s32[1]);
+        // At a single query the adjusted ratio is near or below 1
+        // (the paper reports 0.59 / 0.83 — RedisGraph competitive).
+        assert!(d.speedup("pathfinder-8", 1).unwrap() < 1.2);
+    }
+}

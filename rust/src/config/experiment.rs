@@ -1,0 +1,108 @@
+//! Top-level experiment configuration: machine + workload + output knobs.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+use super::{MachineConfig, WorkloadConfig};
+
+/// Everything needed to reproduce one experiment run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    /// Machine presets to evaluate (paper: 8-node and 32-node).
+    pub machines: Vec<MachineConfig>,
+    pub workload: WorkloadConfig,
+    /// Where CSVs and reports land.
+    pub results_dir: PathBuf,
+    /// Directory holding the AOT artifacts for the baseline engine.
+    pub artifacts_dir: PathBuf,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            machines: vec![MachineConfig::pathfinder_8(), MachineConfig::pathfinder_32()],
+            workload: WorkloadConfig::default(),
+            results_dir: PathBuf::from("results"),
+            artifacts_dir: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.machines.is_empty(), "need at least one machine");
+        for m in &self.machines {
+            m.validate()?;
+        }
+        self.workload.validate()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("machines", Json::arr(self.machines.iter().map(|m| m.to_json()))),
+            ("workload", self.workload.to_json()),
+            ("results_dir", Json::str(self.results_dir.display().to_string())),
+            ("artifacts_dir", Json::str(self.artifacts_dir.display().to_string())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cfg = ExperimentConfig {
+            machines: v
+                .get("machines")?
+                .as_arr()?
+                .iter()
+                .map(MachineConfig::from_json)
+                .collect::<Result<_>>()?,
+            workload: WorkloadConfig::from_json(v.get("workload")?)?,
+            results_dir: PathBuf::from(v.str_of("results_dir")?),
+            artifacts_dir: PathBuf::from(v.str_of("artifacts_dir")?),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn to_file(&self, path: &Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    /// Fetch a machine by preset name from this experiment's set.
+    pub fn machine(&self, name: &str) -> Option<&MachineConfig> {
+        self.machines.iter().find(|m| m.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_validates() {
+        ExperimentConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let cfg = ExperimentConfig::default();
+        let dir = std::env::temp_dir().join("pfq_cfg_test");
+        let path = dir.join("exp.json");
+        cfg.to_file(&path).unwrap();
+        let back = ExperimentConfig::from_file(&path).unwrap();
+        assert_eq!(cfg, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn machine_lookup() {
+        let cfg = ExperimentConfig::default();
+        assert!(cfg.machine("pathfinder-8").is_some());
+        assert!(cfg.machine("bogus").is_none());
+    }
+}

@@ -1,0 +1,420 @@
+//! Pathfinder machine model configuration.
+//!
+//! Published parameters (paper §II and §IV): 24 cores/node at 225 MHz, 64
+//! hardware thread contexts per core (1536/node), 8 NCDRAM channels/node at
+//! 2 GB/s each, 8 memory-side processors (MSPs) per node, 8 nodes per
+//! chassis, 64 GiB NCDRAM per node, RapidIO fabric. Two of the CRNCH
+//! machine's four chassis ran with reduced memory/network speed for
+//! stability (§IV-B) — modeled by `degraded_chassis` + `degrade_factor`.
+//!
+//! Parameters the paper does not publish (random-access service time of a
+//! narrow channel, migration overhead, per-level synchronization cost) are
+//! calibration knobs; their defaults are fitted so the simulator reproduces
+//! the paper's single-query and saturated-concurrency rates (see
+//! EXPERIMENTS.md §Calibration).
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// RapidIO fabric model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricConfig {
+    /// One-way latency between nodes in the same chassis (ns).
+    pub intra_chassis_latency_ns: f64,
+    /// One-way latency between nodes in different chassis (ns).
+    pub inter_chassis_latency_ns: f64,
+    /// Per-node egress/ingress bandwidth onto the fabric (bytes/s).
+    pub node_link_bytes_per_s: f64,
+}
+
+impl Default for FabricConfig {
+    fn default() -> Self {
+        FabricConfig {
+            intra_chassis_latency_ns: 400.0,
+            inter_chassis_latency_ns: 1_100.0,
+            node_link_bytes_per_s: 5.0e9,
+        }
+    }
+}
+
+impl FabricConfig {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("intra_chassis_latency_ns", Json::num(self.intra_chassis_latency_ns)),
+            ("inter_chassis_latency_ns", Json::num(self.inter_chassis_latency_ns)),
+            ("node_link_bytes_per_s", Json::num(self.node_link_bytes_per_s)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(FabricConfig {
+            intra_chassis_latency_ns: v.f64_of("intra_chassis_latency_ns")?,
+            inter_chassis_latency_ns: v.f64_of("inter_chassis_latency_ns")?,
+            node_link_bytes_per_s: v.f64_of("node_link_bytes_per_s")?,
+        })
+    }
+}
+
+/// Full machine description for the simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    /// Human-readable preset name (shows up in reports).
+    pub name: String,
+    /// Total Lucata nodes (8 per chassis).
+    pub nodes: usize,
+    /// Nodes per chassis (8 on the Pathfinder).
+    pub nodes_per_chassis: usize,
+    /// Lucata cores per node (24).
+    pub cores_per_node: usize,
+    /// Hardware thread contexts per core (64, round-robin issue).
+    pub threads_per_core: usize,
+    /// Core clock in Hz (225 MHz on the FPGA-implemented Pathfinder).
+    pub clock_hz: f64,
+    /// NCDRAM channels per node (8).
+    pub channels_per_node: usize,
+    /// Streaming bandwidth of one narrow channel (bytes/s; 2 GB/s).
+    pub channel_stream_bytes_per_s: f64,
+    /// Service time of one fine-grained (random 8 B) access at a channel,
+    /// in ns. CALIBRATED from the paper's *concurrent*-saturation point:
+    /// 128 concurrent BFS on 8 nodes take 226 s over ~268 G channel ops,
+    /// i.e. ~18.5 Mops/s per channel => ~54 ns service.
+    pub channel_random_op_ns: f64,
+    /// Memory-side processors per node (8); MSP remote ops (remote_min,
+    /// remote_add) are read-modify-write cycles at the channel.
+    pub msps_per_node: usize,
+    /// Channel occupancy of one MSP read-modify-write relative to a plain
+    /// access: the RMW cycle holds the bank through read + ALU + write-back
+    /// (§III "encapsulating the operation in a read-modify-write cycle").
+    pub msp_rmw_factor: f64,
+    /// Extra MSP service time per remote op beyond the channel access (ns).
+    pub msp_op_extra_ns: f64,
+    /// Relative weight of writes vs reads at the MSP/channel arbiter
+    /// (1.0 = fair). The paper flags read/write priority balance as an open
+    /// tuning question (§IV-C); exposed for the ablation bench.
+    pub msp_write_priority: f64,
+    /// Thread context transfer cost for one migration (ns, on top of
+    /// fabric latency). Hardware-integrated transfer, so small.
+    pub migration_overhead_ns: f64,
+    /// Uncontended local memory access latency (ns).
+    pub local_access_ns: f64,
+    /// Per-level synchronization overhead of the Cilk fork-join runtime
+    /// (spawn tree + barrier), ns. CALIBRATED.
+    pub level_sync_ns: f64,
+    /// Instructions executed per traversed edge (BFS inner loop). CALIBRATED.
+    pub instr_per_edge: f64,
+    /// Fraction of the machine's aggregate instruction-issue bandwidth a
+    /// SINGLE query's Cilk spawn tree sustains (spawn/steal overhead, level
+    /// imbalance, partially-filled context slots). This is the paper's
+    /// central headroom: one BFS cannot keep the cores/channels busy, many
+    /// concurrent ones can (§VI). CALIBRATED so the 8-node solo BFS /
+    /// concurrent-BFS ratio lands at the paper's ~2.2x.
+    pub spawn_efficiency: f64,
+    /// Instructions to spawn/retire one worker thread at a frontier vertex.
+    pub spawn_instr: f64,
+    /// NCDRAM per node, bytes (64 GiB).
+    pub mem_per_node_bytes: u64,
+    /// Memory reserved for thread-context stacks per node, bytes. Running
+    /// out reproduces the paper's 256-queries-on-8-nodes exhaustion.
+    pub ctx_mem_per_node_bytes: u64,
+    /// Stack/context footprint one in-flight query reserves per node, bytes.
+    pub ctx_bytes_per_query: u64,
+    /// Chassis indices running with reduced memory/network speed (§IV-B).
+    pub degraded_chassis: Vec<usize>,
+    /// Multiplier (< 1) on channel + fabric rates of degraded chassis.
+    pub degrade_factor: f64,
+    /// Fabric model.
+    pub fabric: FabricConfig,
+}
+
+impl MachineConfig {
+    /// Single-chassis, 8-node Pathfinder (the paper's "8 nodes" rows).
+    pub fn pathfinder_8() -> Self {
+        MachineConfig {
+            name: "pathfinder-8".into(),
+            nodes: 8,
+            nodes_per_chassis: 8,
+            cores_per_node: 24,
+            threads_per_core: 64,
+            clock_hz: 225.0e6,
+            channels_per_node: 8,
+            channel_stream_bytes_per_s: 2.0e9,
+            channel_random_op_ns: 54.0,
+            msps_per_node: 8,
+            msp_rmw_factor: 2.0,
+            msp_op_extra_ns: 6.0,
+            msp_write_priority: 1.0,
+            migration_overhead_ns: 250.0,
+            local_access_ns: 90.0,
+            level_sync_ns: 30_000.0,
+            instr_per_edge: 36.0,
+            spawn_efficiency: 0.41,
+            spawn_instr: 220.0,
+            mem_per_node_bytes: 64 << 30,
+            ctx_mem_per_node_bytes: 510 << 20,
+            // 8 nodes * 510 MiB / 16 MiB = 255 concurrent queries fit; the
+            // 256th exhausts thread-context memory, matching §IV-B.
+            ctx_bytes_per_query: 16 << 20,
+            degraded_chassis: vec![],
+            degrade_factor: 1.0,
+            fabric: FabricConfig::default(),
+        }
+    }
+
+    /// Full four-chassis, 32-node CRNCH Pathfinder, with the two chassis
+    /// that required reduced memory/network speeds (§IV-B).
+    pub fn pathfinder_32() -> Self {
+        MachineConfig {
+            name: "pathfinder-32".into(),
+            nodes: 32,
+            degraded_chassis: vec![2, 3],
+            degrade_factor: 0.45,
+            ..Self::pathfinder_8()
+        }
+    }
+
+    /// Hypothetical fully-healthy 32-node machine (no degraded chassis);
+    /// used for the what-if ablation the paper could not run.
+    pub fn pathfinder_32_healthy() -> Self {
+        MachineConfig {
+            name: "pathfinder-32-healthy".into(),
+            nodes: 32,
+            degraded_chassis: vec![],
+            degrade_factor: 1.0,
+            ..Self::pathfinder_8()
+        }
+    }
+
+    /// Look up a preset by name.
+    pub fn preset(name: &str) -> Option<Self> {
+        match name {
+            "pathfinder-8" => Some(Self::pathfinder_8()),
+            "pathfinder-32" => Some(Self::pathfinder_32()),
+            "pathfinder-32-healthy" => Some(Self::pathfinder_32_healthy()),
+            _ => None,
+        }
+    }
+
+    /// Chassis index of a node.
+    pub fn chassis_of(&self, node: usize) -> usize {
+        node / self.nodes_per_chassis
+    }
+
+    /// Rate multiplier for a node (1.0 or `degrade_factor`).
+    pub fn node_derate(&self, node: usize) -> f64 {
+        if self.degraded_chassis.contains(&self.chassis_of(node)) {
+            self.degrade_factor
+        } else {
+            1.0
+        }
+    }
+
+    /// Hardware thread contexts per node (cores * threads/core = 1536).
+    pub fn contexts_per_node(&self) -> usize {
+        self.cores_per_node * self.threads_per_core
+    }
+
+    /// Aggregate instruction issue rate of one node (instr/s).
+    pub fn node_issue_rate(&self) -> f64 {
+        self.cores_per_node as f64 * self.clock_hz
+    }
+
+    /// Aggregate random-op service rate of one node's channels (ops/s),
+    /// before derating.
+    pub fn node_channel_op_rate(&self) -> f64 {
+        self.channels_per_node as f64 * 1.0e9 / self.channel_random_op_ns
+    }
+
+    /// Aggregate streaming bandwidth of one node (bytes/s), before derating.
+    pub fn node_stream_rate(&self) -> f64 {
+        self.channels_per_node as f64 * self.channel_stream_bytes_per_s
+    }
+
+    /// Maximum concurrently admitted queries before thread-context memory
+    /// is exhausted (whole machine).
+    pub fn max_concurrent_queries(&self) -> usize {
+        ((self.nodes as u64 * self.ctx_mem_per_node_bytes) / self.ctx_bytes_per_query) as usize
+    }
+
+    /// One-way fabric latency between two nodes (ns), including derating of
+    /// either endpoint's chassis.
+    pub fn fabric_latency_ns(&self, from: usize, to: usize) -> f64 {
+        let base = if self.chassis_of(from) == self.chassis_of(to) {
+            self.fabric.intra_chassis_latency_ns
+        } else {
+            self.fabric.inter_chassis_latency_ns
+        };
+        let derate = self.node_derate(from).min(self.node_derate(to));
+        base / derate
+    }
+
+    /// Validate invariants; call after deserializing.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.nodes > 0, "machine must have nodes");
+        anyhow::ensure!(
+            self.nodes % self.nodes_per_chassis == 0,
+            "nodes ({}) must be a multiple of nodes_per_chassis ({})",
+            self.nodes,
+            self.nodes_per_chassis
+        );
+        anyhow::ensure!(self.channels_per_node > 0, "need memory channels");
+        anyhow::ensure!(self.channel_random_op_ns > 0.0, "op service must be positive");
+        anyhow::ensure!(
+            self.degrade_factor > 0.0 && self.degrade_factor <= 1.0,
+            "degrade_factor must be in (0, 1]"
+        );
+        for &c in &self.degraded_chassis {
+            anyhow::ensure!(
+                c < self.nodes / self.nodes_per_chassis,
+                "degraded chassis {c} out of range"
+            );
+        }
+        anyhow::ensure!(self.msp_rmw_factor >= 1.0, "RMW cannot be cheaper than an access");
+        anyhow::ensure!(
+            self.spawn_efficiency > 0.0 && self.spawn_efficiency <= 1.0,
+            "spawn_efficiency must be in (0, 1]"
+        );
+        anyhow::ensure!(self.ctx_bytes_per_query > 0, "ctx footprint must be positive");
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("nodes", Json::num(self.nodes as f64)),
+            ("nodes_per_chassis", Json::num(self.nodes_per_chassis as f64)),
+            ("cores_per_node", Json::num(self.cores_per_node as f64)),
+            ("threads_per_core", Json::num(self.threads_per_core as f64)),
+            ("clock_hz", Json::num(self.clock_hz)),
+            ("channels_per_node", Json::num(self.channels_per_node as f64)),
+            ("channel_stream_bytes_per_s", Json::num(self.channel_stream_bytes_per_s)),
+            ("channel_random_op_ns", Json::num(self.channel_random_op_ns)),
+            ("msps_per_node", Json::num(self.msps_per_node as f64)),
+            ("msp_rmw_factor", Json::num(self.msp_rmw_factor)),
+            ("msp_op_extra_ns", Json::num(self.msp_op_extra_ns)),
+            ("msp_write_priority", Json::num(self.msp_write_priority)),
+            ("migration_overhead_ns", Json::num(self.migration_overhead_ns)),
+            ("local_access_ns", Json::num(self.local_access_ns)),
+            ("level_sync_ns", Json::num(self.level_sync_ns)),
+            ("instr_per_edge", Json::num(self.instr_per_edge)),
+            ("spawn_efficiency", Json::num(self.spawn_efficiency)),
+            ("spawn_instr", Json::num(self.spawn_instr)),
+            ("mem_per_node_bytes", Json::num(self.mem_per_node_bytes as f64)),
+            ("ctx_mem_per_node_bytes", Json::num(self.ctx_mem_per_node_bytes as f64)),
+            ("ctx_bytes_per_query", Json::num(self.ctx_bytes_per_query as f64)),
+            (
+                "degraded_chassis",
+                Json::arr(self.degraded_chassis.iter().map(|&c| Json::num(c as f64))),
+            ),
+            ("degrade_factor", Json::num(self.degrade_factor)),
+            ("fabric", self.fabric.to_json()),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cfg = MachineConfig {
+            name: v.str_of("name")?,
+            nodes: v.usize_of("nodes")?,
+            nodes_per_chassis: v.usize_of("nodes_per_chassis")?,
+            cores_per_node: v.usize_of("cores_per_node")?,
+            threads_per_core: v.usize_of("threads_per_core")?,
+            clock_hz: v.f64_of("clock_hz")?,
+            channels_per_node: v.usize_of("channels_per_node")?,
+            channel_stream_bytes_per_s: v.f64_of("channel_stream_bytes_per_s")?,
+            channel_random_op_ns: v.f64_of("channel_random_op_ns")?,
+            msps_per_node: v.usize_of("msps_per_node")?,
+            msp_rmw_factor: v.f64_of("msp_rmw_factor")?,
+            msp_op_extra_ns: v.f64_of("msp_op_extra_ns")?,
+            msp_write_priority: v.f64_of("msp_write_priority")?,
+            migration_overhead_ns: v.f64_of("migration_overhead_ns")?,
+            local_access_ns: v.f64_of("local_access_ns")?,
+            level_sync_ns: v.f64_of("level_sync_ns")?,
+            instr_per_edge: v.f64_of("instr_per_edge")?,
+            spawn_efficiency: v.f64_of("spawn_efficiency")?,
+            spawn_instr: v.f64_of("spawn_instr")?,
+            mem_per_node_bytes: v.u64_of("mem_per_node_bytes")?,
+            ctx_mem_per_node_bytes: v.u64_of("ctx_mem_per_node_bytes")?,
+            ctx_bytes_per_query: v.u64_of("ctx_bytes_per_query")?,
+            degraded_chassis: v
+                .get("degraded_chassis")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            degrade_factor: v.f64_of("degrade_factor")?,
+            fabric: FabricConfig::from_json(v.get("fabric")?)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a JSON config file.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_validate() {
+        for name in ["pathfinder-8", "pathfinder-32", "pathfinder-32-healthy"] {
+            MachineConfig::preset(name).unwrap().validate().unwrap();
+        }
+        assert!(MachineConfig::preset("nope").is_none());
+    }
+
+    #[test]
+    fn paper_published_parameters() {
+        let m = MachineConfig::pathfinder_8();
+        assert_eq!(m.contexts_per_node(), 1536, "paper: 1536 contexts/node");
+        assert_eq!(m.nodes_per_chassis, 8);
+        assert!((m.clock_hz - 225e6).abs() < 1.0);
+        assert!((m.node_stream_rate() - 16e9).abs() < 1.0, "8 x 2 GB/s");
+    }
+
+    #[test]
+    fn context_exhaustion_matches_paper() {
+        // "Running 256 concurrent queries on eight nodes exhausted the
+        // memory used for thread contexts" — so <256 fit on 8 nodes...
+        let m8 = MachineConfig::pathfinder_8();
+        assert!(m8.max_concurrent_queries() >= 128);
+        assert!(m8.max_concurrent_queries() < 256);
+        // ... while 750 run fine on 32 nodes.
+        let m32 = MachineConfig::pathfinder_32();
+        assert!(m32.max_concurrent_queries() >= 750);
+    }
+
+    #[test]
+    fn degraded_chassis_derate() {
+        let m = MachineConfig::pathfinder_32();
+        assert_eq!(m.node_derate(0), 1.0);
+        assert_eq!(m.node_derate(16), m.degrade_factor); // chassis 2
+        assert_eq!(m.node_derate(31), m.degrade_factor); // chassis 3
+    }
+
+    #[test]
+    fn fabric_latency_intra_vs_inter() {
+        let m = MachineConfig::pathfinder_32();
+        assert!(m.fabric_latency_ns(0, 1) < m.fabric_latency_ns(0, 8));
+        // Degraded endpoints slow the link down.
+        assert!(m.fabric_latency_ns(0, 16) > m.fabric_latency_ns(0, 8));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let m = MachineConfig::pathfinder_32();
+        let back = MachineConfig::from_json(&Json::parse(&m.to_json().render_pretty()).unwrap())
+            .unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn from_json_rejects_invalid() {
+        let mut m = MachineConfig::pathfinder_8();
+        m.degrade_factor = 0.0;
+        assert!(MachineConfig::from_json(&m.to_json()).is_err());
+    }
+}

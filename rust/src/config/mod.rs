@@ -1,0 +1,16 @@
+//! Configuration system: machine models, workloads, experiments.
+//!
+//! Everything an experiment needs is expressed as plain data (serde +
+//! TOML), so runs are reproducible from a config file plus a seed. Presets
+//! mirror the hardware configurations in the paper: the single-chassis
+//! 8-node Pathfinder, the full 32-node CRNCH Pathfinder (with its two
+//! degraded chassis, §IV-B), and the x1e.32xlarge Xeon host used for the
+//! RedisGraph comparison (§IV-D).
+
+pub mod experiment;
+pub mod machine;
+pub mod workload;
+
+pub use experiment::ExperimentConfig;
+pub use machine::{FabricConfig, MachineConfig};
+pub use workload::{GraphConfig, WorkloadConfig};

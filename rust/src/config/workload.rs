@@ -1,0 +1,236 @@
+//! Workload configuration: graph shape and query mixes.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Graph500 / R-MAT generator parameters (paper §IV-A).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphConfig {
+    /// log2 of the vertex count. The paper uses 25; the default here is
+    /// smaller so full experiment sweeps finish in CI time — the timing
+    /// model is per-operation, so ratios are scale-invariant (see
+    /// EXPERIMENTS.md §Scale-substitution).
+    pub scale: u32,
+    /// Half the average degree; the paper uses 16 (=> 32 directed).
+    pub edge_factor: u32,
+    /// R-MAT quadrant probabilities (Graph500 reference values).
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Generator seed; equal seeds give identical graphs.
+    pub seed: u64,
+}
+
+impl Default for GraphConfig {
+    fn default() -> Self {
+        GraphConfig {
+            scale: 16,
+            edge_factor: 16,
+            a: 0.57,
+            b: 0.19,
+            c: 0.19,
+            seed: 0x4c75_6361_7461, // "Lucata"
+        }
+    }
+}
+
+impl GraphConfig {
+    pub fn with_scale(scale: u32) -> Self {
+        GraphConfig { scale, ..Default::default() }
+    }
+
+    pub fn n_vertices(&self) -> u64 {
+        1u64 << self.scale
+    }
+
+    pub fn n_edges_target(&self) -> u64 {
+        self.n_vertices() * self.edge_factor as u64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.scale >= 4 && self.scale <= 32, "scale out of range");
+        anyhow::ensure!(self.edge_factor >= 1, "edge_factor must be >= 1");
+        let d = 1.0 - self.a - self.b - self.c;
+        anyhow::ensure!(
+            self.a > 0.0 && self.b >= 0.0 && self.c >= 0.0 && d >= -1e-12,
+            "R-MAT probabilities must be a valid distribution (d = {d})"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("scale", Json::num(self.scale as f64)),
+            ("edge_factor", Json::num(self.edge_factor as f64)),
+            ("a", Json::num(self.a)),
+            ("b", Json::num(self.b)),
+            ("c", Json::num(self.c)),
+            ("seed", Json::num(self.seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cfg = GraphConfig {
+            scale: v.u64_of("scale")? as u32,
+            edge_factor: v.u64_of("edge_factor")? as u32,
+            a: v.f64_of("a")?,
+            b: v.f64_of("b")?,
+            c: v.f64_of("c")?,
+            seed: v.u64_of("seed")?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// One query-mix point, e.g. Table II's "136 BFS + 34 CC on 8 nodes".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MixPoint {
+    pub bfs: usize,
+    pub cc: usize,
+}
+
+impl MixPoint {
+    pub fn total(&self) -> usize {
+        self.bfs + self.cc
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bfs", Json::num(self.bfs as f64)),
+            ("cc", Json::num(self.cc as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        Ok(MixPoint { bfs: v.usize_of("bfs")?, cc: v.usize_of("cc")? })
+    }
+}
+
+/// Workload description for an experiment run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub graph: GraphConfig,
+    /// Seed for BFS source selection (paper: "reproducibly pseudorandomly
+    /// generated" unique sources).
+    pub source_seed: u64,
+    /// Query counts swept in the Fig. 3 / Fig. 4 experiments.
+    pub query_counts: Vec<usize>,
+    /// BFS/CC mixes for the Table II experiment (80/20 and 90/10 on both
+    /// machine sizes, as in the paper).
+    pub mixes: Vec<MixPoint>,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            graph: GraphConfig::default(),
+            source_seed: 0xBF5,
+            query_counts: vec![1, 8, 16, 32, 64, 128, 256, 384, 512, 640, 750],
+            mixes: vec![
+                MixPoint { bfs: 136, cc: 34 },
+                MixPoint { bfs: 153, cc: 17 },
+                MixPoint { bfs: 560, cc: 140 },
+                MixPoint { bfs: 630, cc: 70 },
+            ],
+        }
+    }
+}
+
+impl WorkloadConfig {
+    pub fn validate(&self) -> Result<()> {
+        self.graph.validate()?;
+        anyhow::ensure!(!self.query_counts.is_empty(), "need at least one query count");
+        anyhow::ensure!(
+            self.query_counts.windows(2).all(|w| w[0] < w[1]),
+            "query_counts must be strictly increasing"
+        );
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("graph", self.graph.to_json()),
+            ("source_seed", Json::num(self.source_seed as f64)),
+            (
+                "query_counts",
+                Json::arr(self.query_counts.iter().map(|&q| Json::num(q as f64))),
+            ),
+            ("mixes", Json::arr(self.mixes.iter().map(|m| m.to_json()))),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let cfg = WorkloadConfig {
+            graph: GraphConfig::from_json(v.get("graph")?)?,
+            source_seed: v.u64_of("source_seed")?,
+            query_counts: v
+                .get("query_counts")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<_>>()?,
+            mixes: v
+                .get("mixes")?
+                .as_arr()?
+                .iter()
+                .map(MixPoint::from_json)
+                .collect::<Result<_>>()?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        WorkloadConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn rmat_probabilities_sum() {
+        let g = GraphConfig::default();
+        assert!((g.a + g.b + g.c - 0.95).abs() < 1e-12); // d = 0.05
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_scale_is_expressible() {
+        let g = GraphConfig { scale: 25, ..Default::default() };
+        g.validate().unwrap();
+        assert_eq!(g.n_vertices(), 33_554_432); // the paper's vertex count
+    }
+
+    #[test]
+    fn invalid_probs_rejected() {
+        let g = GraphConfig { a: 0.9, b: 0.2, ..Default::default() };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn monotone_counts_enforced() {
+        let mut w = WorkloadConfig::default();
+        w.query_counts = vec![8, 8];
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let w = WorkloadConfig::default();
+        let back = WorkloadConfig::from_json(&w.to_json()).unwrap();
+        assert_eq!(w, back);
+    }
+
+    #[test]
+    fn paper_mixes_present() {
+        // Table II's four rows must be the default mixes.
+        let w = WorkloadConfig::default();
+        assert!(w.mixes.contains(&MixPoint { bfs: 136, cc: 34 }));
+        assert!(w.mixes.contains(&MixPoint { bfs: 630, cc: 70 }));
+    }
+}

@@ -1,0 +1,232 @@
+//! Run reports: per-query records, per-label quantiles (Table I),
+//! improvement percentages (Fig. 4), and counter summaries.
+
+use crate::alg::Query;
+use crate::sim::counters::Counters;
+use crate::sim::flow::FlowReport;
+use crate::sim::machine::Machine;
+use crate::util::stats::{improvement_pct, Quantiles};
+
+/// One executed query's outcome.
+#[derive(Debug, Clone)]
+pub struct QueryRecord {
+    pub id: usize,
+    pub query: Query,
+    /// End-to-end latency in seconds (arrival to completion), NaN if the
+    /// query was rejected by admission control.
+    pub latency_s: f64,
+    /// Arrival time (s) within the run.
+    pub arrival_s: f64,
+    /// Completion time (s) within the run, NaN if rejected.
+    pub finish_s: f64,
+}
+
+impl QueryRecord {
+    pub fn rejected(&self) -> bool {
+        self.latency_s.is_nan()
+    }
+}
+
+/// Outcome of one coordinated run (one policy, one machine, one query set).
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Policy label ("sequential" / "concurrent" / "concurrent(cap=N)").
+    pub policy: String,
+    /// Machine preset name.
+    pub machine: String,
+    pub records: Vec<QueryRecord>,
+    /// End-to-end time of the whole run (s).
+    pub makespan_s: f64,
+    /// Peak concurrency observed inside the engine.
+    pub peak_concurrency: usize,
+    /// Simulated hardware counters for the run.
+    pub counters: Counters,
+    /// Mean channel utilization over the run (the paper's thesis variable).
+    pub mean_channel_utilization: f64,
+}
+
+impl RunReport {
+    /// Build from a flow-engine report.
+    pub fn from_flow(
+        policy: impl Into<String>,
+        machine: &Machine,
+        queries: &[Query],
+        flow: &FlowReport,
+    ) -> Self {
+        assert_eq!(queries.len(), flow.timings.len());
+        let records = flow
+            .timings
+            .iter()
+            .zip(queries)
+            .map(|(t, q)| QueryRecord {
+                id: t.id,
+                query: *q,
+                latency_s: t.latency_ns() * 1e-9,
+                arrival_s: t.arrival_ns * 1e-9,
+                finish_s: t.finish_ns * 1e-9,
+            })
+            .collect();
+        let mean_channel_utilization = flow.counters.mean_channel_utilization(machine);
+        RunReport {
+            policy: policy.into(),
+            machine: machine.cfg.name.clone(),
+            records,
+            makespan_s: flow.makespan_ns * 1e-9,
+            peak_concurrency: flow.peak_concurrency,
+            counters: flow.counters.clone(),
+            mean_channel_utilization,
+        }
+    }
+
+    /// Completed (non-rejected) query count.
+    pub fn completed(&self) -> usize {
+        self.records.iter().filter(|r| !r.rejected()).count()
+    }
+
+    /// Rejected query count.
+    pub fn rejections(&self) -> usize {
+        self.records.len() - self.completed()
+    }
+
+    /// Latencies (s) of completed queries, optionally filtered by label.
+    pub fn latencies(&self, label: Option<&str>) -> Vec<f64> {
+        self.records
+            .iter()
+            .filter(|r| !r.rejected())
+            .filter(|r| label.is_none_or(|l| r.query.label() == l))
+            .map(|r| r.latency_s)
+            .collect()
+    }
+
+    /// Table-I style five-number summary of per-query latency (s).
+    /// None if no completed query matches.
+    pub fn latency_quantiles(&self, label: Option<&str>) -> Option<Quantiles> {
+        let xs = self.latencies(label);
+        if xs.is_empty() {
+            None
+        } else {
+            Some(Quantiles::from_samples(&xs))
+        }
+    }
+
+    /// Mean completed-query latency (s).
+    pub fn mean_latency_s(&self) -> f64 {
+        let xs = self.latencies(None);
+        crate::util::stats::mean(&xs)
+    }
+
+    /// Completed queries per second of makespan.
+    pub fn throughput_qps(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.completed() as f64 / self.makespan_s
+    }
+}
+
+/// A paired sequential/concurrent comparison row (Fig. 3/4, Table II).
+#[derive(Debug, Clone)]
+pub struct ImprovementRow {
+    pub machine: String,
+    pub queries: usize,
+    pub concurrent_s: f64,
+    pub sequential_s: f64,
+}
+
+impl ImprovementRow {
+    pub fn from_reports(conc: &RunReport, seq: &RunReport) -> Self {
+        assert_eq!(conc.machine, seq.machine);
+        ImprovementRow {
+            machine: conc.machine.clone(),
+            queries: conc.records.len(),
+            concurrent_s: conc.makespan_s,
+            sequential_s: seq.makespan_s,
+        }
+    }
+
+    /// The paper's "% improvement of concurrent over sequential".
+    pub fn improvement_pct(&self) -> f64 {
+        improvement_pct(self.sequential_s, self.concurrent_s)
+    }
+
+    /// Speed-up factor (sequential / concurrent).
+    pub fn speedup(&self) -> f64 {
+        self.sequential_s / self.concurrent_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::sim::flow::QueryTiming;
+
+    fn machine() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn flow_with(latencies_ns: &[f64]) -> (Vec<Query>, FlowReport) {
+        let timings: Vec<QueryTiming> = latencies_ns
+            .iter()
+            .enumerate()
+            .map(|(i, &l)| QueryTiming {
+                id: i,
+                label: "bfs",
+                arrival_ns: 0.0,
+                start_ns: 0.0,
+                finish_ns: l,
+                phases: 1,
+            })
+            .collect();
+        let makespan = latencies_ns.iter().copied().fold(0.0, f64::max);
+        let queries = vec![Query::Bfs { src: 0 }; latencies_ns.len()];
+        let flow = FlowReport {
+            timings,
+            makespan_ns: makespan,
+            counters: Counters::new(8),
+            peak_concurrency: latencies_ns.len(),
+            rejected: vec![],
+        };
+        (queries, flow)
+    }
+
+    #[test]
+    fn report_aggregates_latencies() {
+        let (qs, flow) = flow_with(&[1e9, 2e9, 3e9, 4e9]);
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert_eq!(rep.completed(), 4);
+        assert_eq!(rep.rejections(), 0);
+        let q = rep.latency_quantiles(Some("bfs")).unwrap();
+        assert_eq!(q.q0, 1.0);
+        assert_eq!(q.q100, 4.0);
+        assert_eq!(rep.makespan_s, 4.0);
+        assert_eq!(rep.throughput_qps(), 1.0);
+        assert!(rep.latency_quantiles(Some("cc")).is_none());
+    }
+
+    #[test]
+    fn rejected_queries_excluded() {
+        let (qs, mut flow) = flow_with(&[1e9, 2e9]);
+        flow.timings[1].finish_ns = f64::NAN;
+        flow.rejected = vec![1];
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert_eq!(rep.completed(), 1);
+        assert_eq!(rep.rejections(), 1);
+        assert_eq!(rep.latencies(None), vec![1.0]);
+    }
+
+    #[test]
+    fn improvement_row_math() {
+        let row = ImprovementRow {
+            machine: "pathfinder-8".into(),
+            queries: 128,
+            concurrent_s: 226.0,
+            sequential_s: 493.0,
+        };
+        // The paper's own 8-node numbers: 118% improvement, 2.18x.
+        assert!((row.improvement_pct() - 118.0).abs() < 1.0);
+        assert!((row.speedup() - 2.18).abs() < 0.01);
+    }
+}

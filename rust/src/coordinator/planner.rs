@@ -1,0 +1,127 @@
+//! Workload planning: concrete query lists from workload descriptions.
+
+use crate::alg::Query;
+use crate::config::workload::MixPoint;
+use crate::graph::csr::Csr;
+use crate::graph::sample::bfs_sources;
+use crate::util::rng::SplitMix64;
+
+/// `k` BFS queries from unique, reproducibly pseudorandom, non-isolated
+/// sources (paper §IV-A).
+pub fn bfs_queries(g: &Csr, k: usize, seed: u64) -> Vec<Query> {
+    bfs_sources(g, k, seed).into_iter().map(|src| Query::Bfs { src }).collect()
+}
+
+/// A Table-II style mix: `mix.bfs` BFS queries + `mix.cc` connected
+/// components evaluations. The *submission* order interleaves them
+/// round-robin-ish (a realistic mixed arrival stream); the paper's
+/// sequential baseline ("all the breadth-first searches followed by all the
+/// connected components evaluations", §IV-C) is produced by
+/// [`sequential_mix_order`].
+pub fn mix_queries(g: &Csr, mix: MixPoint, seed: u64) -> Vec<Query> {
+    let bfs = bfs_queries(g, mix.bfs, seed);
+    let mut out = Vec::with_capacity(mix.total());
+    // Spread the CC queries evenly through the BFS stream.
+    let stride = if mix.cc == 0 { usize::MAX } else { mix.total().div_ceil(mix.cc) };
+    let mut bi = 0;
+    let mut placed_cc = 0;
+    for i in 0..mix.total() {
+        if placed_cc < mix.cc && i % stride == stride - 1 {
+            out.push(Query::Cc);
+            placed_cc += 1;
+        } else if bi < bfs.len() {
+            out.push(bfs[bi]);
+            bi += 1;
+        } else {
+            out.push(Query::Cc);
+            placed_cc += 1;
+        }
+    }
+    out
+}
+
+/// The paper's sequential ordering of a mix: all BFS first, then all CC.
+pub fn sequential_mix_order(queries: &[Query]) -> Vec<Query> {
+    let mut out: Vec<Query> =
+        queries.iter().copied().filter(|q| matches!(q, Query::Bfs { .. })).collect();
+    out.extend(queries.iter().copied().filter(|q| matches!(q, Query::Cc)));
+    out
+}
+
+/// Poisson arrival times: `k` arrivals at `rate_per_s`, reproducible from
+/// `seed`. Returns times in ns, sorted.
+pub fn arrival_times(k: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
+    assert!(rate_per_s > 0.0, "arrival rate must be positive");
+    let mut rng = SplitMix64::new(seed);
+    let mut t = 0.0f64;
+    (0..k)
+        .map(|_| {
+            // Inverse-CDF exponential inter-arrival; clamp u away from 0.
+            let u = rng.next_f64().max(1e-12);
+            t += -u.ln() / rate_per_s * 1e9;
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn g() -> Csr {
+        let r = Rmat::new(GraphConfig::with_scale(10));
+        build_undirected_csr(1 << 10, &r.edges())
+    }
+
+    #[test]
+    fn bfs_queries_unique_sources() {
+        let g = g();
+        let qs = bfs_queries(&g, 64, 7);
+        let mut srcs: Vec<u32> = qs
+            .iter()
+            .map(|q| match q {
+                Query::Bfs { src } => *src,
+                _ => panic!("not bfs"),
+            })
+            .collect();
+        srcs.sort_unstable();
+        srcs.dedup();
+        assert_eq!(srcs.len(), 64);
+    }
+
+    #[test]
+    fn mix_has_right_composition() {
+        let g = g();
+        let mix = MixPoint { bfs: 17, cc: 5 };
+        let qs = mix_queries(&g, mix, 3);
+        assert_eq!(qs.len(), 22);
+        assert_eq!(qs.iter().filter(|q| matches!(q, Query::Cc)).count(), 5);
+        // CC queries are spread out, not bunched at the end.
+        let first_cc = qs.iter().position(|q| matches!(q, Query::Cc)).unwrap();
+        assert!(first_cc < 10, "first cc at {first_cc}");
+    }
+
+    #[test]
+    fn sequential_order_groups_bfs_first() {
+        let g = g();
+        let qs = mix_queries(&g, MixPoint { bfs: 8, cc: 2 }, 3);
+        let seq = sequential_mix_order(&qs);
+        assert_eq!(seq.len(), 10);
+        assert!(seq[..8].iter().all(|q| matches!(q, Query::Bfs { .. })));
+        assert!(seq[8..].iter().all(|q| matches!(q, Query::Cc)));
+    }
+
+    #[test]
+    fn arrivals_sorted_and_rate_scaled() {
+        let a = arrival_times(1000, 100.0, 9);
+        assert!(a.windows(2).all(|w| w[0] <= w[1]));
+        // Mean inter-arrival ~ 10 ms = 1e7 ns; total ~ 1e10 ns within 20%.
+        let total = *a.last().unwrap();
+        assert!((total - 1e10).abs() < 2e9, "total {total}");
+        // Reproducible.
+        assert_eq!(a, arrival_times(1000, 100.0, 9));
+    }
+}

@@ -1,0 +1,252 @@
+//! The coordinator proper: execute a query list under a policy.
+//!
+//! Owns the machine, the flow engine, and the demand cache. Responsible for
+//! the stripe-offset assignment (each concurrent query's own arrays land on
+//! rotated channels — see [`crate::alg::bfs::bfs_run_offset`]) and for the
+//! connected-components demand cache: CC has no per-query parameter, so its
+//! (expensive) functional execution runs once and each further instance is
+//! a cheap channel rotation of the cached phases.
+
+use crate::alg::Query;
+use crate::graph::csr::Csr;
+use crate::sim::demand::PhaseDemand;
+use crate::sim::flow::{Admission, FlowSim, OnFull, QuerySpec};
+use crate::sim::machine::Machine;
+
+use super::metrics::RunReport;
+
+/// Execution policy for a batch of queries.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Policy {
+    /// One query at a time, in submission order (the paper's baseline arm).
+    Sequential,
+    /// All queries at once, no admission control — the paper's concurrent
+    /// arm ("without any explicit scheduling or allocation of resources").
+    /// Exceeding the machine's thread-context memory is *fatal* on the real
+    /// Pathfinder; here `run` returns an error instead.
+    Concurrent,
+    /// Concurrent with admission control at the machine's context capacity:
+    /// the overload behavior a production deployment would choose.
+    ConcurrentAdmitted { on_full: OnFull },
+}
+
+impl Policy {
+    pub fn label(&self) -> String {
+        match self {
+            Policy::Sequential => "sequential".into(),
+            Policy::Concurrent => "concurrent".into(),
+            Policy::ConcurrentAdmitted { on_full: OnFull::Queue } => "concurrent(queue)".into(),
+            Policy::ConcurrentAdmitted { on_full: OnFull::Reject } => {
+                "concurrent(reject)".into()
+            }
+        }
+    }
+}
+
+/// The concurrent-query coordinator for one graph on one machine.
+pub struct Coordinator<'g> {
+    g: &'g Csr,
+    machine: Machine,
+    sim: FlowSim,
+    /// Cached CC demand at stripe offset 0 (computed on first use).
+    cc_cache: std::cell::RefCell<Option<Vec<PhaseDemand>>>,
+}
+
+impl<'g> Coordinator<'g> {
+    pub fn new(g: &'g Csr, machine: Machine) -> Self {
+        let sim = FlowSim::new(machine.clone());
+        Coordinator { g, machine, sim, cc_cache: std::cell::RefCell::new(None) }
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    pub fn graph(&self) -> &Csr {
+        self.g
+    }
+
+    /// Thread-context capacity of this machine (queries).
+    pub fn capacity(&self) -> usize {
+        self.machine.cfg.max_concurrent_queries()
+    }
+
+    /// Build engine-ready specs for a query list: functional execution +
+    /// demand emission, stripe offset = position in the batch, arrival 0.
+    pub fn prepare(&self, queries: &[Query]) -> Vec<QuerySpec> {
+        self.prepare_with_arrivals(queries, None)
+    }
+
+    /// `prepare` with explicit arrival times (ns); `None` = all at 0.
+    pub fn prepare_with_arrivals(
+        &self,
+        queries: &[Query],
+        arrivals: Option<&[f64]>,
+    ) -> Vec<QuerySpec> {
+        if let Some(a) = arrivals {
+            assert_eq!(a.len(), queries.len(), "one arrival per query");
+        }
+        queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| {
+                let phases = match q {
+                    Query::Bfs { .. } => q.phases(self.g, &self.machine, i),
+                    Query::Cc => {
+                        // Source-free: compute once, rotate per instance.
+                        let mut cache = self.cc_cache.borrow_mut();
+                        let base = cache.get_or_insert_with(|| {
+                            Query::Cc.phases(self.g, &self.machine, 0)
+                        });
+                        base.iter().map(|p| p.rotate_channels(i)).collect()
+                    }
+                };
+                QuerySpec {
+                    id: i,
+                    label: q.label(),
+                    phases,
+                    arrival_ns: arrivals.map(|a| a[i]).unwrap_or(0.0),
+                }
+            })
+            .collect()
+    }
+
+    /// Execute `queries` under `policy` and report.
+    pub fn run(&self, queries: &[Query], policy: Policy) -> anyhow::Result<RunReport> {
+        let specs = self.prepare(queries);
+        self.run_specs(queries, &specs, policy)
+    }
+
+    /// Execute pre-prepared specs (lets the bench harness prepare once and
+    /// run many sample points).
+    pub fn run_specs(
+        &self,
+        queries: &[Query],
+        specs: &[QuerySpec],
+        policy: Policy,
+    ) -> anyhow::Result<RunReport> {
+        let flow = match policy {
+            Policy::Sequential => self.sim.run_sequential(specs),
+            Policy::Concurrent => {
+                anyhow::ensure!(
+                    specs.len() <= self.capacity(),
+                    "{} concurrent queries exhaust thread-context memory \
+                     (capacity {}; the paper hit this wall at 256 queries \
+                     on 8 nodes — use ConcurrentAdmitted to degrade \
+                     gracefully)",
+                    specs.len(),
+                    self.capacity()
+                );
+                self.sim.run(specs)
+            }
+            Policy::ConcurrentAdmitted { on_full } => {
+                let adm = Admission { max_in_flight: Some(self.capacity()), on_full };
+                self.sim.run_admitted(specs, adm)
+            }
+        };
+        Ok(RunReport::from_flow(policy.label(), &self.machine, queries, &flow))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::{GraphConfig, MixPoint};
+    use crate::coordinator::planner;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn rmat(scale: u32) -> Csr {
+        let r = Rmat::new(GraphConfig::with_scale(scale));
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    fn coord(g: &Csr) -> Coordinator<'_> {
+        Coordinator::new(g, Machine::new(MachineConfig::pathfinder_8()))
+    }
+
+    #[test]
+    fn concurrent_beats_sequential() {
+        let g = rmat(11);
+        let c = coord(&g);
+        let qs = planner::bfs_queries(&g, 16, 42);
+        let conc = c.run(&qs, Policy::Concurrent).unwrap();
+        let seq = c.run(&qs, Policy::Sequential).unwrap();
+        assert!(conc.makespan_s < seq.makespan_s);
+        assert!(conc.mean_channel_utilization > seq.mean_channel_utilization);
+        assert_eq!(conc.completed(), 16);
+    }
+
+    #[test]
+    fn concurrent_over_capacity_errors_like_the_paper() {
+        let g = rmat(8);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 16 << 20; // capacity: 8 queries
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        assert_eq!(c.capacity(), 8);
+        let qs = planner::bfs_queries(&g, 9, 1);
+        let err = c.run(&qs, Policy::Concurrent).unwrap_err();
+        assert!(err.to_string().contains("thread-context memory"));
+        // Admission control degrades gracefully instead.
+        let rep = c
+            .run(&qs, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
+            .unwrap();
+        assert_eq!(rep.completed(), 9);
+        assert!(rep.peak_concurrency <= 8);
+    }
+
+    #[test]
+    fn reject_policy_reports_rejections() {
+        let g = rmat(8);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 16 << 20;
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        let qs = planner::bfs_queries(&g, 10, 1);
+        let rep = c
+            .run(&qs, Policy::ConcurrentAdmitted { on_full: OnFull::Reject })
+            .unwrap();
+        assert_eq!(rep.rejections(), 2);
+        assert_eq!(rep.completed(), 8);
+    }
+
+    #[test]
+    fn cc_cache_hits_for_repeat_instances() {
+        let g = rmat(9);
+        let c = coord(&g);
+        let qs = vec![Query::Cc, Query::Cc, Query::Cc];
+        let specs = c.prepare(&qs);
+        // All three share phase counts; channels rotated per instance.
+        assert_eq!(specs[0].phases.len(), specs[1].phases.len());
+        assert_eq!(
+            specs[1].phases[0].per_channel_ops,
+            specs[0].phases[0].rotate_channels(1).per_channel_ops
+        );
+        // Node totals identical (rotation is within-node).
+        assert_eq!(specs[0].phases[0].channel_ops, specs[2].phases[0].channel_ops);
+    }
+
+    #[test]
+    fn mixed_run_completes_and_validates_composition() {
+        let g = rmat(10);
+        let c = coord(&g);
+        let qs = planner::mix_queries(&g, MixPoint { bfs: 12, cc: 3 }, 5);
+        let rep = c.run(&qs, Policy::Concurrent).unwrap();
+        assert_eq!(rep.latencies(Some("bfs")).len(), 12);
+        assert_eq!(rep.latencies(Some("cc")).len(), 3);
+        // CC touches every vertex; it should be slower than a BFS.
+        let bfs_mean = crate::util::stats::mean(&rep.latencies(Some("bfs")));
+        let cc_mean = crate::util::stats::mean(&rep.latencies(Some("cc")));
+        assert!(cc_mean > bfs_mean);
+    }
+
+    #[test]
+    fn arrivals_flow_through_prepare() {
+        let g = rmat(8);
+        let c = coord(&g);
+        let qs = planner::bfs_queries(&g, 3, 2);
+        let arr = vec![0.0, 1e9, 2e9];
+        let specs = c.prepare_with_arrivals(&qs, Some(&arr));
+        assert_eq!(specs[2].arrival_ns, 2e9);
+    }
+}

@@ -1,0 +1,223 @@
+//! Long-running service facade: the "web-accessible graph database" shape
+//! the paper motivates (§I), on top of the coordinator.
+//!
+//! Queries arrive over simulated time (a Poisson stream of BFS with a CC
+//! fraction), admission control bounds in-flight work at the machine's
+//! thread-context capacity, and the report carries per-class latency,
+//! throughput, rejection/queueing behavior and channel utilization —
+//! everything an operator would watch on a dashboard.
+
+use crate::alg::Query;
+use crate::graph::csr::Csr;
+use crate::sim::flow::OnFull;
+use crate::sim::machine::Machine;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Quantiles;
+
+use super::planner::arrival_times;
+use super::scheduler::{Coordinator, Policy};
+
+/// Service workload description.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Total queries to serve.
+    pub queries: usize,
+    /// Mean arrival rate (queries/s of simulated time).
+    pub arrival_rate_per_s: f64,
+    /// Fraction of arrivals that are CC evaluations (rest are BFS).
+    pub cc_fraction: f64,
+    /// What to do when thread-context memory is full.
+    pub on_full: OnFull,
+    /// RNG seed (arrivals, sources, query classes).
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            queries: 256,
+            arrival_rate_per_s: 100.0,
+            cc_fraction: 0.1,
+            on_full: OnFull::Queue,
+            seed: 0x5E21,
+        }
+    }
+}
+
+/// Operator-facing service run summary.
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub served: usize,
+    pub rejected: usize,
+    /// Wall (simulated) duration from first arrival to last completion (s).
+    pub duration_s: f64,
+    /// Completed queries per second.
+    pub throughput_qps: f64,
+    /// Latency five-number summary per class (s).
+    pub bfs_latency: Option<Quantiles>,
+    pub cc_latency: Option<Quantiles>,
+    /// Peak simultaneous in-flight queries.
+    pub peak_concurrency: usize,
+    /// Mean channel utilization over the run.
+    pub channel_utilization: f64,
+}
+
+impl ServiceReport {
+    /// Render a compact operator summary.
+    pub fn summary(&self) -> String {
+        let fmt_q = |q: &Option<Quantiles>| match q {
+            Some(q) => format!(
+                "p0={:.3}s p50={:.3}s p100={:.3}s",
+                q.q0, q.q50, q.q100
+            ),
+            None => "n/a".into(),
+        };
+        format!(
+            "served {} (rejected {}) in {:.2}s — {:.1} q/s, peak {} in flight, \
+             channel util {:.0}%\n  bfs: {}\n  cc:  {}",
+            self.served,
+            self.rejected,
+            self.duration_s,
+            self.throughput_qps,
+            self.peak_concurrency,
+            self.channel_utilization * 100.0,
+            fmt_q(&self.bfs_latency),
+            fmt_q(&self.cc_latency),
+        )
+    }
+}
+
+/// The service: owns a coordinator and serves arrival streams.
+pub struct GraphService<'g> {
+    coord: Coordinator<'g>,
+}
+
+impl<'g> GraphService<'g> {
+    pub fn new(g: &'g Csr, machine: Machine) -> Self {
+        GraphService { coord: Coordinator::new(g, machine) }
+    }
+
+    pub fn coordinator(&self) -> &Coordinator<'g> {
+        &self.coord
+    }
+
+    /// Serve a synthetic arrival stream described by `cfg`.
+    pub fn serve(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
+        anyhow::ensure!(cfg.queries > 0, "need at least one query");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.cc_fraction),
+            "cc_fraction must be in [0, 1]"
+        );
+        let g = self.coord.graph();
+        let mut rng = SplitMix64::new(cfg.seed);
+        let sources =
+            crate::graph::sample::bfs_sources(g, cfg.queries, rng.next_u64());
+        let queries: Vec<Query> = sources
+            .into_iter()
+            .map(|src| {
+                if rng.next_f64() < cfg.cc_fraction {
+                    Query::Cc
+                } else {
+                    Query::Bfs { src }
+                }
+            })
+            .collect();
+        let arrivals = arrival_times(cfg.queries, cfg.arrival_rate_per_s, rng.next_u64());
+
+        let specs = self.coord.prepare_with_arrivals(&queries, Some(&arrivals));
+        let report = self.coord.run_specs(
+            &queries,
+            &specs,
+            Policy::ConcurrentAdmitted { on_full: cfg.on_full },
+        )?;
+
+        let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
+        let duration_s = (report.makespan_s - first_arrival).max(f64::MIN_POSITIVE);
+        Ok(ServiceReport {
+            served: report.completed(),
+            rejected: report.rejections(),
+            duration_s,
+            throughput_qps: report.completed() as f64 / duration_s,
+            bfs_latency: report.latency_quantiles(Some("bfs")),
+            cc_latency: report.latency_quantiles(Some("cc")),
+            peak_concurrency: report.peak_concurrency,
+            channel_utilization: report.mean_channel_utilization,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn g() -> Csr {
+        let r = Rmat::new(GraphConfig::with_scale(10));
+        build_undirected_csr(1 << 10, &r.edges())
+    }
+
+    #[test]
+    fn serves_mixed_stream() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig { queries: 40, cc_fraction: 0.2, ..Default::default() };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 40);
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.bfs_latency.is_some());
+        assert!(rep.cc_latency.is_some());
+        assert!(rep.throughput_qps > 0.0);
+        assert!(!rep.summary().is_empty());
+    }
+
+    #[test]
+    fn overload_rejects_when_configured() {
+        let g = g();
+        let mut cfg_m = MachineConfig::pathfinder_8();
+        cfg_m.ctx_mem_per_node_bytes = 16 << 20; // capacity 8
+        let svc = GraphService::new(&g, Machine::new(cfg_m));
+        let cfg = ServiceConfig {
+            queries: 64,
+            arrival_rate_per_s: 1.0e6, // effectively simultaneous
+            cc_fraction: 0.0,
+            on_full: OnFull::Reject,
+            seed: 3,
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert!(rep.rejected > 0, "overload should reject");
+        assert_eq!(rep.served + rep.rejected, 64);
+        assert!(rep.peak_concurrency <= 8);
+    }
+
+    #[test]
+    fn queueing_serves_everything_eventually() {
+        let g = g();
+        let mut cfg_m = MachineConfig::pathfinder_8();
+        cfg_m.ctx_mem_per_node_bytes = 16 << 20;
+        let svc = GraphService::new(&g, Machine::new(cfg_m));
+        let cfg = ServiceConfig {
+            queries: 64,
+            arrival_rate_per_s: 1.0e6,
+            cc_fraction: 0.0,
+            on_full: OnFull::Queue,
+            seed: 3,
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 64);
+        assert_eq!(rep.rejected, 0);
+    }
+
+    #[test]
+    fn reproducible_given_seed() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig { queries: 20, ..Default::default() };
+        let a = svc.serve(&cfg).unwrap();
+        let b = svc.serve(&cfg).unwrap();
+        assert_eq!(a.duration_s, b.duration_s);
+        assert_eq!(a.served, b.served);
+    }
+}

@@ -1,0 +1,79 @@
+//! Edge-list -> CSR construction with the paper's dataset hygiene:
+//! undirected closure, duplicate removal, self-loop removal (§IV-A: "After
+//! ensuring the represented graph is undirected and removing duplicate
+//! edges").
+
+use super::csr::Csr;
+use crate::util::parallel;
+
+/// Build the deduplicated, self-loop-free, symmetric CSR from a raw
+/// directed edge list over vertices [0, n).
+pub fn build_undirected_csr(n: usize, raw_edges: &[(u32, u32)]) -> Csr {
+    // Symmetrize: keep both directions of every edge.
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(raw_edges.len() * 2);
+    for &(u, v) in raw_edges {
+        if u != v {
+            edges.push((u, v));
+            edges.push((v, u));
+        }
+    }
+    // Sort + dedup gives dedup'd, neighbor-sorted edge blocks.
+    parallel::par_sort_unstable(&mut edges);
+    edges.dedup();
+
+    let mut offsets = vec![0u64; n + 1];
+    for &(u, _) in &edges {
+        offsets[u as usize + 1] += 1;
+    }
+    for i in 0..n {
+        offsets[i + 1] += offsets[i];
+    }
+    let targets: Vec<u32> = edges.iter().map(|&(_, v)| v).collect();
+    Csr::from_parts(offsets, targets)
+}
+
+/// Count undirected edges of a symmetric CSR (directed / 2).
+pub fn undirected_edge_count(g: &Csr) -> usize {
+    debug_assert_eq!(g.m_directed() % 2, 0, "graph not symmetric");
+    g.m_directed() / 2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedups_and_symmetrizes() {
+        // Duplicates, self-loop, one direction only.
+        let edges = vec![(0, 1), (0, 1), (1, 0), (2, 2), (1, 3)];
+        let g = build_undirected_csr(4, &edges);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0, 3]);
+        assert_eq!(g.neighbors(2), &[] as &[u32]);
+        assert_eq!(g.neighbors(3), &[1]);
+        assert_eq!(undirected_edge_count(&g), 2);
+    }
+
+    #[test]
+    fn symmetric_invariant() {
+        let edges = vec![(0, 3), (3, 1), (2, 0), (1, 2)];
+        let g = build_undirected_csr(4, &edges);
+        for (u, v) in g.edges().collect::<Vec<_>>() {
+            assert!(g.neighbors(v).contains(&u), "missing reverse of ({u},{v})");
+        }
+    }
+
+    #[test]
+    fn neighbor_lists_sorted() {
+        let edges = vec![(0, 3), (0, 1), (0, 2)];
+        let g = build_undirected_csr(4, &edges);
+        assert_eq!(g.neighbors(0), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = build_undirected_csr(5, &[]);
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m_directed(), 0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Loose-sparse-row graph storage (paper §IV-A).
+//!
+//! "The vertex records are stored in a dense array, and each record points
+//! to an edge block ... the edge block is an array of neighbor vertices."
+//! On the host this is a standard CSR; vertex ids are u32 in memory for
+//! cache efficiency, but the *timing model* charges 8 bytes per integer as
+//! on the Pathfinder ("All integers are 64 bits wide"), see
+//! [`Csr::PAPER_INT_BYTES`].
+
+/// Compressed sparse row directed graph (representing an undirected graph
+/// by holding both (i,j) and (j,i)).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// Row offsets, length n+1.
+    offsets: Vec<u64>,
+    /// Concatenated neighbor lists ("edge blocks").
+    targets: Vec<u32>,
+}
+
+impl Csr {
+    /// Width of one integer in the paper's representation (timing model).
+    pub const PAPER_INT_BYTES: u64 = 8;
+
+    /// Build from row offsets + targets. Panics if malformed.
+    pub fn from_parts(offsets: Vec<u64>, targets: Vec<u32>) -> Self {
+        assert!(!offsets.is_empty(), "offsets must have n+1 entries");
+        assert!(offsets.windows(2).all(|w| w[0] <= w[1]), "offsets not monotone");
+        assert_eq!(*offsets.last().unwrap() as usize, targets.len());
+        let n = offsets.len() - 1;
+        assert!(targets.iter().all(|&t| (t as usize) < n), "target out of range");
+        Csr { offsets, targets }
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of directed edges (2x the undirected edge count).
+    pub fn m_directed(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-degree of a vertex.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Neighbor slice ("edge block") of a vertex.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.targets[lo..hi]
+    }
+
+    /// Iterate all directed edges (u, v).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n() as u32).flat_map(move |u| self.neighbors(u).iter().map(move |&v| (u, v)))
+    }
+
+    /// Raw offsets (for I/O and the simulator's layout math).
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Raw targets.
+    pub fn targets(&self) -> &[u32] {
+        &self.targets
+    }
+
+    /// Maximum degree.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Bytes of one vertex's edge block in the paper's 64-bit representation.
+    pub fn edge_block_bytes(&self, v: u32) -> u64 {
+        self.degree(v) as u64 * Self::PAPER_INT_BYTES
+    }
+
+    /// Dense 0/1 adjacency in row-major f32, for the GraphBLAS baseline
+    /// engine. Only sensible for small n (the baseline's fixed artifact
+    /// shape); panics if n exceeds `max_n`.
+    pub fn dense_adjacency_f32(&self, max_n: usize) -> Vec<f32> {
+        let n = self.n();
+        assert!(
+            n <= max_n,
+            "dense adjacency requested for n={n} > cap {max_n}; use a smaller graph"
+        );
+        let mut a = vec![0.0f32; n * n];
+        for u in 0..n as u32 {
+            for &v in self.neighbors(u) {
+                a[u as usize * n + v as usize] = 1.0;
+            }
+        }
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path3() -> Csr {
+        // 0 - 1 - 2 undirected
+        Csr::from_parts(vec![0, 1, 3, 4], vec![1, 0, 2, 1])
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = path3();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m_directed(), 4);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn edges_iterator() {
+        let g = path3();
+        let e: Vec<_> = g.edges().collect();
+        assert_eq!(e, vec![(0, 1), (1, 0), (1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn dense_adjacency() {
+        let g = path3();
+        let a = g.dense_adjacency_f32(8);
+        assert_eq!(a.len(), 9);
+        assert_eq!(a[0 * 3 + 1], 1.0);
+        assert_eq!(a[1 * 3 + 0], 1.0);
+        assert_eq!(a[0 * 3 + 2], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "offsets not monotone")]
+    fn rejects_bad_offsets() {
+        Csr::from_parts(vec![0, 2, 1], vec![0, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "target out of range")]
+    fn rejects_bad_targets() {
+        Csr::from_parts(vec![0, 1], vec![5]);
+    }
+
+    #[test]
+    fn edge_block_bytes_are_64bit() {
+        let g = path3();
+        assert_eq!(g.edge_block_bytes(1), 16); // 2 neighbors x 8 B
+    }
+}

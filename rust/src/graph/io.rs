@@ -1,0 +1,83 @@
+//! Binary graph I/O: a small versioned container for CSR graphs so
+//! experiments can reuse generated graphs ("Both are loaded before any
+//! timings", §II).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use super::csr::Csr;
+
+const MAGIC: &[u8; 8] = b"PFQCSR01";
+
+/// Save a CSR graph to a binary file.
+pub fn save_csr(g: &Csr, path: &Path) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(g.n() as u64).to_le_bytes())?;
+    f.write_all(&(g.m_directed() as u64).to_le_bytes())?;
+    for &o in g.offsets() {
+        f.write_all(&o.to_le_bytes())?;
+    }
+    for &t in g.targets() {
+        f.write_all(&t.to_le_bytes())?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Load a CSR graph from a binary file.
+pub fn load_csr(path: &Path) -> anyhow::Result<Csr> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic in {}", path.display());
+    let n = read_u64(&mut f)? as usize;
+    let m = read_u64(&mut f)? as usize;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        offsets.push(read_u64(&mut f)?);
+    }
+    let mut targets = Vec::with_capacity(m);
+    let mut buf = [0u8; 4];
+    for _ in 0..m {
+        f.read_exact(&mut buf)?;
+        targets.push(u32::from_le_bytes(buf));
+    }
+    Ok(Csr::from_parts(offsets, targets))
+}
+
+fn read_u64<R: Read>(r: &mut R) -> anyhow::Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+
+    #[test]
+    fn round_trip() {
+        let g = build_undirected_csr(6, &[(0, 1), (1, 2), (3, 4), (4, 5), (0, 5)]);
+        let dir = std::env::temp_dir().join("pfq_io_test");
+        let path = dir.join("g.csr");
+        save_csr(&g, &path).unwrap();
+        let back = load_csr(&path).unwrap();
+        assert_eq!(g, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("pfq_io_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.csr");
+        std::fs::write(&path, b"not a graph").unwrap();
+        assert!(load_csr(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,126 @@
+//! Striped data placement (paper §II view-2 + §IV-A).
+//!
+//! "View two ... stripes 64-bit elements across nodes. For an address p on
+//! node n, p+8 is on node n+1" — so vertex v's record lives on node
+//! v mod nodes, and "the edge block is stored on the same node as the
+//! vertex's entry". Within a node, consecutive locally-resident elements
+//! rotate across the 8 NCDRAM channels; edge blocks start on a
+//! pseudo-random channel (allocation-dependent in hardware; deterministic
+//! hash here).
+
+/// Placement of graph data across nodes and memory channels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripedLayout {
+    pub nodes: usize,
+    pub channels_per_node: usize,
+}
+
+impl StripedLayout {
+    pub fn new(nodes: usize, channels_per_node: usize) -> Self {
+        assert!(nodes > 0 && channels_per_node > 0);
+        StripedLayout { nodes, channels_per_node }
+    }
+
+    /// Node holding vertex v's record and its edge block (view-2 striping).
+    #[inline]
+    pub fn node_of(&self, v: u32) -> usize {
+        v as usize % self.nodes
+    }
+
+    /// Channel (within its node) holding vertex v's 8-byte record: local
+    /// element index v / nodes rotates across channels.
+    #[inline]
+    pub fn channel_of(&self, v: u32) -> usize {
+        (v as usize / self.nodes) % self.channels_per_node
+    }
+
+    /// Flat (node, channel) -> global channel index.
+    #[inline]
+    pub fn flat_channel(&self, node: usize, channel: usize) -> usize {
+        node * self.channels_per_node + channel
+    }
+
+    /// Global channel index of vertex v's record.
+    #[inline]
+    pub fn flat_channel_of(&self, v: u32) -> usize {
+        self.flat_channel(self.node_of(v), self.channel_of(v))
+    }
+
+    /// Channel where vertex v's edge block starts (deterministic hash
+    /// standing in for the allocator's placement).
+    #[inline]
+    pub fn edge_block_channel(&self, v: u32) -> usize {
+        let x = (v as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((x >> 33) % self.channels_per_node as u64) as usize
+    }
+
+    /// Total channels in the machine.
+    pub fn total_channels(&self) -> usize {
+        self.nodes * self.channels_per_node
+    }
+
+    /// Number of vertices of an n-vertex graph resident on `node`.
+    pub fn vertices_on_node(&self, n: usize, node: usize) -> usize {
+        debug_assert!(node < self.nodes);
+        n / self.nodes + usize::from(node < n % self.nodes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_node_placement() {
+        let l = StripedLayout::new(8, 8);
+        // "vertex 0 and its neighbor array is on node 0, vertex 1 and its
+        // neighbors on node 1, and so on."
+        assert_eq!(l.node_of(0), 0);
+        assert_eq!(l.node_of(1), 1);
+        assert_eq!(l.node_of(7), 7);
+        assert_eq!(l.node_of(8), 0);
+    }
+
+    #[test]
+    fn channel_rotation_within_node() {
+        let l = StripedLayout::new(8, 8);
+        // Consecutive local elements (v, v+8) rotate channels.
+        assert_eq!(l.channel_of(0), 0);
+        assert_eq!(l.channel_of(8), 1);
+        assert_eq!(l.channel_of(8 * 8), 0);
+    }
+
+    #[test]
+    fn vertices_on_node_partition() {
+        let l = StripedLayout::new(8, 8);
+        let n = 1003;
+        let total: usize = (0..8).map(|nd| l.vertices_on_node(n, nd)).sum();
+        assert_eq!(total, n);
+        // Balanced to within one.
+        let counts: Vec<_> = (0..8).map(|nd| l.vertices_on_node(n, nd)).collect();
+        assert!(counts.iter().max().unwrap() - counts.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn flat_channel_bijective() {
+        let l = StripedLayout::new(4, 8);
+        let mut seen = std::collections::HashSet::new();
+        for node in 0..4 {
+            for ch in 0..8 {
+                assert!(seen.insert(l.flat_channel(node, ch)));
+            }
+        }
+        assert_eq!(seen.len(), l.total_channels());
+    }
+
+    #[test]
+    fn edge_block_channels_spread() {
+        let l = StripedLayout::new(8, 8);
+        let mut hist = vec![0usize; 8];
+        for v in 0..8000u32 {
+            hist[l.edge_block_channel(v)] += 1;
+        }
+        // Roughly uniform: no channel should get more than 2x the mean.
+        assert!(hist.iter().all(|&h| h < 2000), "{hist:?}");
+    }
+}

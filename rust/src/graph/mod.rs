@@ -1,0 +1,20 @@
+//! Graph substrate: Graph500/R-MAT generation, the paper's loose-sparse-row
+//! striped storage (§IV-A), binary I/O, and validation.
+//!
+//! The paper stores the vertex array striped across nodes via the view-2
+//! address mode (vertex v on node v mod N) with each vertex's edge block
+//! co-located on the same node; [`layout::StripedLayout`] reproduces that
+//! placement and is what the simulator charges memory traffic against.
+
+pub mod builder;
+pub mod csr;
+pub mod io;
+pub mod layout;
+pub mod rmat;
+pub mod sample;
+pub mod validate;
+
+pub use builder::build_undirected_csr;
+pub use csr::Csr;
+pub use layout::StripedLayout;
+pub use rmat::Rmat;

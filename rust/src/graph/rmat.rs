@@ -1,0 +1,141 @@
+//! Graph500 / R-MAT recursive edge generator (Chakrabarti et al. 2004).
+//!
+//! Matches the paper's dataset recipe (§IV-A): R-MAT with the Graph500
+//! parameters (a=0.57, b=0.19, c=0.19, d=0.05), scale 25 / edge-factor 16 in
+//! the paper, then de-duplicated and closed under edge reversal so the
+//! directed representation holds both (i,j) and (j,i). Vertex ids are
+//! scrambled with a fixed permutation like the Graph500 reference code so
+//! low ids are not artificially high-degree.
+
+use crate::config::workload::GraphConfig;
+use crate::util::parallel;
+use crate::util::rng::SplitMix64;
+
+/// R-MAT edge-list generator.
+#[derive(Debug, Clone)]
+pub struct Rmat {
+    cfg: GraphConfig,
+}
+
+impl Rmat {
+    pub fn new(cfg: GraphConfig) -> Self {
+        cfg.validate().expect("invalid graph config");
+        Rmat { cfg }
+    }
+
+    /// Generate the raw (possibly duplicated, possibly self-looped)
+    /// directed edge list of `edge_factor * 2^scale` edges.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let m = self.cfg.n_edges_target() as usize;
+        let scale = self.cfg.scale;
+        let (a, b, c) = (self.cfg.a, self.cfg.b, self.cfg.c);
+        let seed = self.cfg.seed;
+
+        // Generate in parallel chunks, each with a forked RNG stream so the
+        // result is independent of thread scheduling.
+        let chunk = 1 << 16;
+        let n_chunks = m.div_ceil(chunk);
+        parallel::par_map_range(n_chunks, |ci| {
+            let mut rng = SplitMix64::new(seed).fork(ci as u64 + 1);
+            let lo = ci * chunk;
+            let hi = (lo + chunk).min(m);
+            (lo..hi)
+                .map(|_| {
+                    let (u, v) = Self::one_edge(&mut rng, scale, a, b, c);
+                    (scramble(u, scale), scramble(v, scale))
+                })
+                .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
+
+    fn one_edge(rng: &mut SplitMix64, scale: u32, a: f64, b: f64, c: f64) -> (u32, u32) {
+        let mut u = 0u32;
+        let mut v = 0u32;
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        (u, v)
+    }
+}
+
+/// Invertible vertex-id scramble within [0, 2^scale): multiply by an odd
+/// constant mod 2^scale then xor-fold, like Graph500's id permutation.
+fn scramble(v: u32, scale: u32) -> u32 {
+    let mask = (1u64 << scale) - 1;
+    let x = (v as u64).wrapping_mul(0x9E3D_79B9 | 1) & mask;
+    ((x ^ (x >> (scale / 2 + 1))) & mask) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(scale: u32) -> GraphConfig {
+        GraphConfig { scale, edge_factor: 8, ..Default::default() }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g1 = Rmat::new(tiny_cfg(10)).edges();
+        let g2 = Rmat::new(tiny_cfg(10)).edges();
+        assert_eq!(g1, g2);
+    }
+
+    #[test]
+    fn seeds_change_output() {
+        let mut cfg = tiny_cfg(10);
+        cfg.seed = 999;
+        assert_ne!(Rmat::new(cfg).edges(), Rmat::new(tiny_cfg(10)).edges());
+    }
+
+    #[test]
+    fn edge_count_and_range() {
+        let cfg = tiny_cfg(10);
+        let edges = Rmat::new(cfg.clone()).edges();
+        assert_eq!(edges.len() as u64, cfg.n_edges_target());
+        let n = cfg.n_vertices() as u32;
+        assert!(edges.iter().all(|&(u, v)| u < n && v < n));
+    }
+
+    #[test]
+    fn skewed_degree_distribution() {
+        // R-MAT must be skewed: the max out-degree should far exceed the mean.
+        let cfg = tiny_cfg(12);
+        let edges = Rmat::new(cfg.clone()).edges();
+        let n = cfg.n_vertices() as usize;
+        let mut deg = vec![0u32; n];
+        for &(u, _) in &edges {
+            deg[u as usize] += 1;
+        }
+        let max = *deg.iter().max().unwrap() as f64;
+        let mean = edges.len() as f64 / n as f64;
+        assert!(max > 8.0 * mean, "max {max} vs mean {mean}: not skewed");
+    }
+
+    #[test]
+    fn scramble_is_injective() {
+        let scale = 10;
+        let n = 1u32 << scale;
+        let mut seen = vec![false; n as usize];
+        for v in 0..n {
+            let s = scramble(v, scale);
+            assert!(s < n);
+            assert!(!seen[s as usize], "collision at {v}");
+            seen[s as usize] = true;
+        }
+    }
+}

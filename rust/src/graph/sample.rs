@@ -1,0 +1,57 @@
+//! BFS source selection: "The source vertices for BFS tests are
+//! reproducibly pseudorandomly generated" (§IV-A). Like Graph500, sources
+//! must have non-zero degree (a BFS from an isolated vertex is trivial);
+//! sources within one experiment are unique.
+
+use super::csr::Csr;
+use crate::util::rng::SplitMix64;
+
+/// Pick `k` distinct non-isolated source vertices, reproducibly.
+pub fn bfs_sources(g: &Csr, k: usize, seed: u64) -> Vec<u32> {
+    let mut rng = SplitMix64::new(seed);
+    let n = g.n() as u64;
+    let mut chosen = std::collections::HashSet::with_capacity(k);
+    let mut out = Vec::with_capacity(k);
+    let mut attempts = 0u64;
+    while out.len() < k {
+        attempts += 1;
+        assert!(
+            attempts < 1000 * k as u64 + 10_000,
+            "could not find {k} non-isolated sources; graph too sparse"
+        );
+        let v = rng.gen_range(n) as u32;
+        if g.degree(v) > 0 && chosen.insert(v) {
+            out.push(v);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+
+    fn g() -> Csr {
+        build_undirected_csr(100, &(0..99u32).map(|i| (i, i + 1)).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn reproducible() {
+        assert_eq!(bfs_sources(&g(), 10, 7), bfs_sources(&g(), 10, 7));
+    }
+
+    #[test]
+    fn unique_and_non_isolated() {
+        let graph = build_undirected_csr(100, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let src = bfs_sources(&graph, 5, 3);
+        let set: std::collections::HashSet<_> = src.iter().collect();
+        assert_eq!(set.len(), 5);
+        assert!(src.iter().all(|&s| graph.degree(s) > 0));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        assert_ne!(bfs_sources(&g(), 20, 1), bfs_sources(&g(), 20, 2));
+    }
+}

@@ -1,0 +1,104 @@
+//! Graph validation and inspection: structural invariants plus the degree
+//! and connectivity statistics the evaluation cares about (the Graph500
+//! R-MAT's wide level-size variation is what stresses the machine, §VI).
+
+use super::csr::Csr;
+
+/// Structural + statistical report for a graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphReport {
+    pub n: usize,
+    pub m_directed: usize,
+    pub m_undirected: usize,
+    pub max_degree: usize,
+    pub mean_degree: f64,
+    pub isolated_vertices: usize,
+    pub components: usize,
+    pub largest_component: usize,
+}
+
+/// Check structural invariants required by the algorithms:
+/// symmetry (undirected closure), no self loops, sorted+deduped blocks.
+pub fn check_invariants(g: &Csr) -> anyhow::Result<()> {
+    for u in 0..g.n() as u32 {
+        let nbrs = g.neighbors(u);
+        anyhow::ensure!(
+            nbrs.windows(2).all(|w| w[0] < w[1]),
+            "edge block of {u} not sorted/deduped"
+        );
+        anyhow::ensure!(!nbrs.contains(&u), "self loop at {u}");
+        for &v in nbrs {
+            anyhow::ensure!(
+                g.neighbors(v).binary_search(&u).is_ok(),
+                "asymmetric edge ({u},{v})"
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Compute the full report (host-side union-find for components).
+pub fn report(g: &Csr) -> GraphReport {
+    let n = g.n();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+
+    for (u, v) in g.edges() {
+        let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+        if ru != rv {
+            let (lo, hi) = (ru.min(rv), ru.max(rv));
+            parent[hi as usize] = lo;
+        }
+    }
+    let mut comp_size = std::collections::HashMap::new();
+    for v in 0..n as u32 {
+        *comp_size.entry(find(&mut parent, v)).or_insert(0usize) += 1;
+    }
+
+    let isolated = (0..n as u32).filter(|&v| g.degree(v) == 0).count();
+    GraphReport {
+        n,
+        m_directed: g.m_directed(),
+        m_undirected: g.m_directed() / 2,
+        max_degree: g.max_degree(),
+        mean_degree: g.m_directed() as f64 / n as f64,
+        isolated_vertices: isolated,
+        components: comp_size.len(),
+        largest_component: comp_size.values().copied().max().unwrap_or(0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+
+    #[test]
+    fn invariants_pass_for_built_graph() {
+        let g = build_undirected_csr(5, &[(0, 1), (1, 2), (2, 0), (3, 4)]);
+        check_invariants(&g).unwrap();
+    }
+
+    #[test]
+    fn invariants_catch_asymmetry() {
+        let g = Csr::from_parts(vec![0, 1, 1], vec![1]); // 0->1 only
+        assert!(check_invariants(&g).is_err());
+    }
+
+    #[test]
+    fn report_counts_components() {
+        let g = build_undirected_csr(6, &[(0, 1), (1, 2), (3, 4)]);
+        let r = report(&g);
+        assert_eq!(r.components, 3); // {0,1,2}, {3,4}, {5}
+        assert_eq!(r.largest_component, 3);
+        assert_eq!(r.isolated_vertices, 1);
+        assert_eq!(r.m_undirected, 3);
+    }
+}

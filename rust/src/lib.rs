@@ -1,0 +1,46 @@
+//! # pathfinder-queries
+//!
+//! Reproduction of **"Concurrent Graph Queries on the Lucata Pathfinder"**
+//! (Smith, Kuntz, Riedy, Deneroff — CS.DC 2022).
+//!
+//! The paper shows that the Lucata Pathfinder — a cache-less,
+//! migratory-thread architecture with narrow-channel memory and memory-side
+//! processors (MSPs) — runs hundreds of *concurrent* graph queries with
+//! 81–97 % end-to-end improvement over sequential execution, and outperforms
+//! RedisGraph-on-Xeon by up to 19× at 128 concurrent BFS.
+//!
+//! Nobody outside GT CRNCH has a Pathfinder, so this repo builds the machine
+//! as a calibrated simulator (see DESIGN.md §Hardware-Adaptation) and keeps
+//! everything else real:
+//!
+//! * [`graph`] — Graph500/R-MAT generation and the paper's loose-sparse-row
+//!   striped storage (§IV-A).
+//! * [`sim`] — the Pathfinder model: nodes, multi-threaded cache-less cores,
+//!   NCDRAM channels, MSPs with `remote_min`, migration engine, RapidIO
+//!   fabric, memory views; both a flow-level and a discrete-event engine.
+//! * [`alg`] — the migratory-thread BFS and the Figure-2 Shiloach-Vishkin
+//!   connected components (MSP `remote_min` hooks) that run on the sim.
+//! * [`coordinator`] — the serving layer: router, admission control by
+//!   thread-context memory, sequential/concurrent policies, metrics.
+//! * [`runtime`] — PJRT (via the `xla` crate) loader/executor for the AOT
+//!   HLO artifacts compiled from JAX+Pallas (`python/compile`).
+//! * [`baseline`] — the RedisGraph/GraphBLAS comparison platform: BFS/CC as
+//!   masked linear algebra on PJRT plus the calibrated Xeon timing model.
+//! * [`bench_harness`] — regenerates every figure and table in the paper's
+//!   evaluation (Fig. 3, Fig. 4, Tables I–III, the §IV-B scaling study).
+//!
+//! Python (JAX + Pallas) exists only on the compile path; the request path
+//! is pure rust + PJRT.
+
+pub mod alg;
+pub mod baseline;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use config::machine::MachineConfig;
+pub use graph::csr::Csr;

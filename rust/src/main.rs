@@ -1,0 +1,392 @@
+//! `pathfinder` — the Layer-3 launcher: generate graphs, run and serve
+//! concurrent queries on the simulated Lucata Pathfinder, and regenerate
+//! every table and figure of the paper's evaluation.
+//!
+//! ```text
+//! pathfinder generate   [--scale N] [--edge-factor F] [--seed S] --out g.csr
+//! pathfinder inspect    --graph g.csr | [--scale N]
+//! pathfinder validate   [--scale N] [--queries K]
+//! pathfinder run        [--scale N] --machine pathfinder-8 --bfs K [--cc C]
+//!                       [--policy sequential|concurrent|queue|reject]
+//! pathfinder serve      [--scale N] --machine NAME [--queries K] [--rate Q/S]
+//!                       [--cc-fraction F] [--on-full queue|reject]
+//! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
+//!                       [--scale N] [--results DIR] [--config cfg.json]
+//!                       [--measure-baseline] [--artifacts DIR]
+//! pathfinder calibrate  [--scale N]
+//! pathfinder config     --out cfg.json [--scale N]   — dump an editable
+//!                       experiment config (machines, workload, mixes)
+//! pathfinder baseline   [--sources K] — run the PJRT GraphBLAS engine
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use pathfinder_queries::alg::Query;
+use pathfinder_queries::bench_harness::{
+    ablation, calibrate, fig3, fig4, scaling, table1, table2, table3, Harness,
+};
+use pathfinder_queries::config::experiment::ExperimentConfig;
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
+use pathfinder_queries::coordinator::{planner, Coordinator, GraphService, Policy, ServiceConfig};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::csr::Csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::graph::{io, validate};
+use pathfinder_queries::runtime::artifact::default_artifacts_dir;
+use pathfinder_queries::runtime::Engine;
+use pathfinder_queries::sim::flow::OnFull;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run(Args::from_env().unwrap_or_default()) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Args) -> Result<()> {
+    match args.subcommand() {
+        Some("generate") => cmd_generate(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("run") => cmd_run(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("experiment") => cmd_experiment(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("baseline") => cmd_baseline(&args),
+        Some("config") => cmd_config(&args),
+        Some(other) => bail!("unknown subcommand {other:?} (try --help)"),
+        None => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!("{}", include_str!("main.rs").lines().skip(1).take_while(|l| l.starts_with("//!")).map(|l| l.trim_start_matches("//!").trim_start()).collect::<Vec<_>>().join("\n"));
+}
+
+/// Graph shared by the subcommands: `--graph file.csr` loads, otherwise
+/// generate from `--scale` / `--edge-factor` / `--seed`.
+fn load_or_generate(args: &Args) -> Result<Csr> {
+    if let Some(path) = args.opt("graph") {
+        return io::load_csr(std::path::Path::new(path));
+    }
+    let cfg = graph_config(args)?;
+    eprintln!(
+        "generating R-MAT scale {} edge-factor {} (seed {})...",
+        cfg.scale, cfg.edge_factor, cfg.seed
+    );
+    let rmat = Rmat::new(cfg.clone());
+    Ok(build_undirected_csr(cfg.n_vertices() as usize, &rmat.edges()))
+}
+
+fn graph_config(args: &Args) -> Result<GraphConfig> {
+    let mut cfg = GraphConfig::default();
+    cfg.scale = args.opt_parse_or("scale", cfg.scale)?;
+    cfg.edge_factor = args.opt_parse_or("edge-factor", cfg.edge_factor)?;
+    cfg.seed = args.opt_parse_or("seed", cfg.seed)?;
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn machine_config(args: &Args) -> Result<MachineConfig> {
+    let name = args.opt_or("machine", "pathfinder-8");
+    if let Some(m) = MachineConfig::preset(&name) {
+        return Ok(m);
+    }
+    // Not a preset: treat as a JSON machine-config path.
+    MachineConfig::from_file(std::path::Path::new(&name))
+        .with_context(|| format!("{name:?} is neither a preset nor a readable config file"))
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let out = args.opt("out").context("generate needs --out FILE")?;
+    let g = load_or_generate(args)?;
+    io::save_csr(&g, std::path::Path::new(out))?;
+    let r = validate::report(&g);
+    println!(
+        "wrote {out}: {} vertices, {} directed edges, max degree {}, {} components",
+        r.n, r.m_directed, r.max_degree, r.components
+    );
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let g = load_or_generate(args)?;
+    validate::check_invariants(&g)?;
+    let r = validate::report(&g);
+    println!("vertices            {}", r.n);
+    println!("directed edges      {}", r.m_directed);
+    println!("undirected edges    {}", r.m_undirected);
+    println!("max degree          {}", r.max_degree);
+    println!("mean degree         {:.2}", r.mean_degree);
+    println!("isolated vertices   {}", r.isolated_vertices);
+    println!("components          {}", r.components);
+    println!("largest component   {}", r.largest_component);
+    Ok(())
+}
+
+/// Cross-validate the whole stack at small scale: oracles vs sim algorithms
+/// vs (if artifacts exist) the PJRT GraphBLAS engine.
+fn cmd_validate(args: &Args) -> Result<()> {
+    let g = load_or_generate(args)?;
+    let k: usize = args.opt_parse_or("queries", 8)?;
+    let machine = Machine::new(machine_config(args)?);
+
+    println!("validating BFS + CC on {} vertices...", g.n());
+    let srcs = pathfinder_queries::graph::sample::bfs_sources(&g, k, 7);
+    for (i, &src) in srcs.iter().enumerate() {
+        Query::Bfs { src }.run_offset(&g, &machine, i).validate(&g)?;
+    }
+    Query::Cc.run(&g, &machine).validate(&g)?;
+    println!("  sim algorithms match host oracles ({k} BFS + CC)");
+
+    let dir = args
+        .opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    if dir.join("manifest.json").exists() {
+        let eng = Engine::from_dir(&dir)?;
+        let n_art = eng.manifest().n;
+        if g.n() <= n_art {
+            let gb = pathfinder_queries::baseline::GraphBlasEngine::new(&eng, &g)?;
+            let res = gb.bfs(&srcs)?;
+            for (i, &src) in srcs.iter().enumerate() {
+                pathfinder_queries::alg::oracle::check_bfs(&g, src, &res.levels[i])?;
+            }
+            let cc = gb.cc()?;
+            pathfinder_queries::alg::oracle::check_cc(&g, &cc.labels)?;
+            println!("  PJRT GraphBLAS engine matches host oracles");
+        } else {
+            println!("  (graph larger than artifact n={n_art}; baseline check skipped)");
+        }
+    } else {
+        println!("  (no artifacts at {dir:?}; baseline check skipped)");
+    }
+    println!("OK");
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let g = load_or_generate(args)?;
+    let machine = Machine::new(machine_config(args)?);
+    let coord = Coordinator::new(&g, machine);
+
+    let bfs: usize = args.opt_parse_or("bfs", 16)?;
+    let cc: usize = args.opt_parse_or("cc", 0)?;
+    let seed: u64 = args.opt_parse_or("query-seed", 0xBF5)?;
+    let queries = planner::mix_queries(&g, MixPoint { bfs, cc }, seed);
+
+    let policy = match args.opt_or("policy", "concurrent").as_str() {
+        "sequential" => Policy::Sequential,
+        "concurrent" => Policy::Concurrent,
+        "queue" => Policy::ConcurrentAdmitted { on_full: OnFull::Queue },
+        "reject" => Policy::ConcurrentAdmitted { on_full: OnFull::Reject },
+        other => bail!("unknown policy {other:?}"),
+    };
+
+    let rep = coord.run(&queries, policy)?;
+    println!(
+        "{} on {}: {} queries ({} bfs + {} cc)",
+        rep.policy,
+        rep.machine,
+        queries.len(),
+        bfs,
+        cc
+    );
+    println!("  makespan            {:.4} s", rep.makespan_s);
+    println!("  completed/rejected  {}/{}", rep.completed(), rep.rejections());
+    println!("  mean latency        {:.4} s", rep.mean_latency_s());
+    println!("  throughput          {:.2} q/s", rep.throughput_qps());
+    println!("  peak concurrency    {}", rep.peak_concurrency);
+    println!("  channel utilization {:.0}%", rep.mean_channel_utilization * 100.0);
+    if let Some(q) = rep.latency_quantiles(Some("bfs")) {
+        println!(
+            "  bfs latency (s)     0%={:.4} 25%={:.4} 50%={:.4} 75%={:.4} 100%={:.4}",
+            q.q0, q.q25, q.q50, q.q75, q.q100
+        );
+    }
+    if let Some(q) = rep.latency_quantiles(Some("cc")) {
+        println!(
+            "  cc latency (s)      0%={:.4} 50%={:.4} 100%={:.4}",
+            q.q0, q.q50, q.q100
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let g = load_or_generate(args)?;
+    let machine = Machine::new(machine_config(args)?);
+    let svc = GraphService::new(&g, machine);
+    let cfg = ServiceConfig {
+        queries: args.opt_parse_or("queries", 256)?,
+        arrival_rate_per_s: args.opt_parse_or("rate", 100.0)?,
+        cc_fraction: args.opt_parse_or("cc-fraction", 0.1)?,
+        on_full: match args.opt_or("on-full", "queue").as_str() {
+            "queue" => OnFull::Queue,
+            "reject" => OnFull::Reject,
+            other => bail!("unknown --on-full {other:?}"),
+        },
+        seed: args.opt_parse_or("seed", 0x5E21)?,
+    };
+    println!(
+        "serving {} queries at {:.0} q/s ({}% cc) on {}...",
+        cfg.queries,
+        cfg.arrival_rate_per_s,
+        cfg.cc_fraction * 100.0,
+        svc.coordinator().machine().cfg.name
+    );
+    let rep = svc.serve(&cfg)?;
+    println!("{}", rep.summary());
+    Ok(())
+}
+
+fn experiment_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(p) => ExperimentConfig::from_file(std::path::Path::new(p))?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(scale) = args.opt_parse::<u32>("scale")? {
+        cfg.workload.graph.scale = scale;
+    }
+    if let Some(seed) = args.opt_parse::<u64>("seed")? {
+        cfg.workload.graph.seed = seed;
+    }
+    if let Some(counts) = args.opt_list::<usize>("counts")? {
+        cfg.workload.query_counts = counts;
+    }
+    if let Some(dir) = args.opt("results") {
+        cfg.results_dir = dir.into();
+    }
+    if let Some(dir) = args.opt("artifacts") {
+        cfg.artifacts_dir = dir.into();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let cfg = experiment_config(args)?;
+    eprintln!(
+        "building experiment graph (scale {}, edge-factor {})...",
+        cfg.workload.graph.scale, cfg.workload.graph.edge_factor
+    );
+    let h = Harness::new(cfg)?;
+    eprintln!(
+        "graph: {} vertices, {} directed edges",
+        h.g.n(),
+        h.g.m_directed()
+    );
+
+    let engine = if args.has_flag("measure-baseline") {
+        let dir = if h.cfg.artifacts_dir.is_absolute() {
+            h.cfg.artifacts_dir.clone()
+        } else {
+            default_artifacts_dir()
+        };
+        Some(Engine::from_dir(&dir)?)
+    } else {
+        None
+    };
+
+    match which {
+        "fig3" => {
+            fig3::report(&h)?;
+        }
+        "fig4" => {
+            fig4::report(&h)?;
+        }
+        "table1" => {
+            table1::report(&h)?;
+        }
+        "table2" => {
+            table2::report(&h)?;
+        }
+        "table3" => {
+            table3::report(&h, engine.as_ref())?;
+        }
+        "scaling" => {
+            scaling::report(&h, args.opt_parse_or("queries", 128)?)?;
+        }
+        "ablation" => {
+            ablation::report(&h)?;
+        }
+        "all" => {
+            fig4::report(&h)?; // prints fig3's data as improvements
+            fig3::report(&h)?;
+            table1::report(&h)?;
+            table2::report(&h)?;
+            table3::report(&h, engine.as_ref())?;
+            scaling::report(&h, args.opt_parse_or("queries", 128)?)?;
+            ablation::report(&h)?;
+            calibrate::report(&h)?;
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let cfg = experiment_config(args)?;
+    let h = Harness::new(cfg)?;
+    calibrate::report(&h)?;
+    Ok(())
+}
+
+/// Dump the (possibly overridden) experiment config as editable JSON.
+fn cmd_config(args: &Args) -> Result<()> {
+    let out = args.opt("out").context("config needs --out FILE")?;
+    let cfg = experiment_config(args)?;
+    cfg.to_file(std::path::Path::new(out))?;
+    println!("wrote {out} (machines: {})", cfg.machines.len());
+    Ok(())
+}
+
+/// Run the PJRT GraphBLAS baseline engine end-to-end and report measured
+/// times (the real execution behind Table III's model anchor).
+fn cmd_baseline(args: &Args) -> Result<()> {
+    let dir = args
+        .opt("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let eng = Engine::from_dir(&dir)?;
+    println!("PJRT platform: {}", eng.platform());
+    let times = eng.compile_all()?;
+    for (name, s) in &times {
+        println!("  compiled {name} in {s:.3}s");
+    }
+
+    let n_art = eng.manifest().n;
+    let scale = (n_art as f64).log2() as u32;
+    let mut gcfg = graph_config(args)?;
+    if gcfg.scale > scale {
+        gcfg.scale = scale;
+        eprintln!("(clamping graph to artifact dimension: scale {scale})");
+    }
+    let rmat = Rmat::new(gcfg.clone());
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &rmat.edges());
+    let gb = pathfinder_queries::baseline::GraphBlasEngine::new(&eng, &g)?;
+
+    let k: usize = args.opt_parse_or("sources", 32)?;
+    let srcs = pathfinder_queries::graph::sample::bfs_sources(&g, k, 11);
+    let t0 = std::time::Instant::now();
+    let res = gb.bfs(&srcs)?;
+    let wall = t0.elapsed().as_secs_f64();
+    for (i, &src) in srcs.iter().enumerate() {
+        pathfinder_queries::alg::oracle::check_bfs(&g, src, &res.levels[i])?;
+    }
+    println!(
+        "bfs x{k}: {} steps, {:.4}s exec ({:.4}s wall), results oracle-checked",
+        res.steps, res.exec_s, wall
+    );
+    let cc = gb.cc()?;
+    pathfinder_queries::alg::oracle::check_cc(&g, &cc.labels)?;
+    println!("cc: {} iterations, {:.4}s exec, oracle-checked", cc.iterations, cc.exec_s);
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime. One entry per AOT-lowered HLO module.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled computation variant.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    /// Unique variant name, e.g. `bfs_step_b32_n1024`.
+    pub name: String,
+    /// Computation kind: `bfs_step` or `cc_step`.
+    pub kind: String,
+    /// Batch dimension (0 for unbatched kinds).
+    pub batch: usize,
+    /// Padded vertex-count dimension.
+    pub n: usize,
+    /// HLO text file, relative to the artifacts dir.
+    pub path: String,
+    /// Output tuple element names, in order.
+    pub outputs: Vec<String>,
+    /// SHA-256 of the HLO text (integrity check across the language gap).
+    pub sha256: String,
+}
+
+impl ArtifactEntry {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(ArtifactEntry {
+            name: v.str_of("name")?,
+            kind: v.str_of("kind")?,
+            batch: v.usize_of("batch")?,
+            n: v.usize_of("n")?,
+            path: v.str_of("path")?,
+            outputs: v
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_str().map(str::to_owned))
+                .collect::<Result<_>>()?,
+            sha256: v.str_of("sha256")?,
+        })
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    pub version: u64,
+    /// Padded graph dimension all variants were lowered at.
+    pub n: usize,
+    pub entries: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl ArtifactManifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let v = Json::parse_file(&path)
+            .with_context(|| format!("loading artifact manifest {path:?} — run `make artifacts`"))?;
+        let m = ArtifactManifest {
+            version: v.u64_of("version")?,
+            n: v.usize_of("n")?,
+            entries: v
+                .get("entries")?
+                .as_arr()?
+                .iter()
+                .map(ArtifactEntry::from_json)
+                .collect::<Result<_>>()?,
+            dir: dir.to_path_buf(),
+        };
+        m.validate()?;
+        Ok(m)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.version == 1, "unknown manifest version {}", self.version);
+        anyhow::ensure!(!self.entries.is_empty(), "empty artifact manifest");
+        for e in &self.entries {
+            anyhow::ensure!(e.n == self.n, "variant {} lowered at n={} != manifest n={}", e.name, e.n, self.n);
+            let p = self.dir.join(&e.path);
+            anyhow::ensure!(p.exists(), "artifact file missing: {p:?} — run `make artifacts`");
+        }
+        let mut names: Vec<&str> = self.entries.iter().map(|e| e.name.as_str()).collect();
+        names.sort_unstable();
+        let before = names.len();
+        names.dedup();
+        anyhow::ensure!(names.len() == before, "duplicate variant names in manifest");
+        Ok(())
+    }
+
+    /// Find a variant by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// All variants of a kind, sorted by batch.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> =
+            self.entries.iter().filter(|e| e.kind == kind).collect();
+        v.sort_by_key(|e| e.batch);
+        v
+    }
+
+    /// Available BFS batch sizes, ascending.
+    pub fn bfs_batches(&self) -> Vec<usize> {
+        self.by_kind("bfs_step").iter().map(|e| e.batch).collect()
+    }
+
+    /// The BFS-step variant used to serve `want` queries at once: the
+    /// smallest batch ≥ `want`, or the largest available (the engine then
+    /// chunks). None if no bfs_step variants exist.
+    pub fn bfs_variant_for(&self, want: usize) -> Option<&ArtifactEntry> {
+        let all = self.by_kind("bfs_step");
+        all.iter().find(|e| e.batch >= want).copied().or_else(|| all.last().copied())
+    }
+
+    /// The CC-step variant.
+    pub fn cc_variant(&self) -> Option<&ArtifactEntry> {
+        self.by_kind("cc_step").into_iter().next()
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.path)
+    }
+}
+
+/// Default artifacts directory: `$PATHFINDER_ARTIFACTS` or
+/// `<crate root>/artifacts` (works from `cargo test` / `cargo bench`).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(p) = std::env::var("PATHFINDER_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(m.version, 1);
+        assert!(m.n >= 64);
+        assert!(!m.bfs_batches().is_empty());
+        assert!(m.cc_variant().is_some());
+        // Batch selection: smallest fitting variant, fallback to largest.
+        let b = m.bfs_batches();
+        let first = m.bfs_variant_for(1).unwrap();
+        assert_eq!(first.batch, b[0]);
+        let huge = m.bfs_variant_for(100_000).unwrap();
+        assert_eq!(huge.batch, *b.last().unwrap());
+        // Name lookup round-trips.
+        let e = m.by_name(&first.name).unwrap();
+        assert_eq!(e.kind, "bfs_step");
+        assert!(m.hlo_path(e).exists());
+    }
+
+    #[test]
+    fn rejects_missing_dir() {
+        assert!(ArtifactManifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

@@ -1,0 +1,239 @@
+//! The PJRT execution engine: compile HLO-text artifacts once, execute many
+//! times from the rust hot path.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactEntry, ArtifactManifest};
+
+/// Compiled-executable cache keyed by variant name. Compilation happens on
+/// first use (lazy) or eagerly via [`Engine::compile_all`]; execution then
+/// never touches the filesystem or Python.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Create a CPU PJRT engine over a loaded manifest.
+    pub fn new(manifest: ArtifactManifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, manifest, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Convenience: load the manifest from `dir` and build the engine.
+    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
+        Self::new(ArtifactManifest::load(dir)?)
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Eagerly compile every variant in the manifest. Returns compile wall
+    /// time per variant (name, seconds) for the §Perf report.
+    pub fn compile_all(&self) -> Result<Vec<(String, f64)>> {
+        let entries: Vec<ArtifactEntry> = self.manifest.entries.clone();
+        let mut times = Vec::with_capacity(entries.len());
+        for e in &entries {
+            let t0 = std::time::Instant::now();
+            self.ensure_compiled(&e.name)?;
+            times.push((e.name.clone(), t0.elapsed().as_secs_f64()));
+        }
+        Ok(times)
+    }
+
+    /// Compile `name` if not already cached.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        {
+            let exes = self.exes.lock().unwrap();
+            if exes.contains_key(name) {
+                return Ok(());
+            }
+        }
+        let entry = self
+            .manifest
+            .by_name(name)
+            .with_context(|| format!("unknown artifact variant {name:?}"))?;
+        let path = self.manifest.hlo_path(entry);
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        self.exes.lock().unwrap().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a variant with host `f32` buffers, returning the flattened
+    /// output tuple as host vectors (in the manifest's `outputs` order).
+    ///
+    /// `inputs` are (data, dims) pairs; dims must multiply to data length.
+    pub fn execute_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.ensure_compiled(name)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let len: i64 = dims.iter().product::<i64>().max(1);
+                anyhow::ensure!(
+                    len as usize == data.len(),
+                    "input shape {dims:?} does not match data length {}",
+                    data.len()
+                );
+                let lit = xla::Literal::vec1(data);
+                if dims.is_empty() {
+                    // Scalar: reshape to rank-0.
+                    Ok(lit.reshape(&[])?)
+                } else {
+                    Ok(lit.reshape(dims)?)
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0].to_literal_sync()?;
+        drop(exes);
+
+        // Lowered with return_tuple=True: always a tuple, possibly of one.
+        let parts = lit.to_tuple().context("decomposing output tuple")?;
+        let entry = self.manifest.by_name(name).unwrap();
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "{name}: got {} outputs, manifest says {}",
+            parts.len(),
+            entry.outputs.len()
+        );
+        parts.into_iter().map(|p| Ok(p.to_vec::<f32>()?)).collect()
+    }
+
+    /// Number of compiled (cached) executables.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.lock().unwrap().len()
+    }
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine")
+            .field("platform", &self.platform())
+            .field("variants", &self.manifest.entries.len())
+            .field("compiled", &self.compiled_count())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::default_artifacts_dir;
+
+    fn engine() -> Option<Engine> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::from_dir(&dir).unwrap())
+    }
+
+    #[test]
+    fn compiles_and_runs_bfs_step() {
+        let Some(eng) = engine() else { return };
+        let m = eng.manifest();
+        let n = m.n;
+        let e = m.bfs_variant_for(1).unwrap().clone();
+        let b = e.batch;
+
+        // Tiny graph embedded in the padded adjacency: 0-1, 1-2.
+        let mut adj = vec![0.0f32; n * n];
+        for (u, v) in [(0usize, 1usize), (1, 0), (1, 2), (2, 1)] {
+            adj[u * n + v] = 1.0;
+        }
+        let mut frontier = vec![0.0f32; b * n];
+        let mut visited = vec![0.0f32; b * n];
+        let levels = vec![-1.0f32; b * n];
+        frontier[0] = 1.0; // query 0 starts at vertex 0
+        visited[0] = 1.0;
+
+        let out = eng
+            .execute_f32(
+                &e.name,
+                &[
+                    (&adj, &[n as i64, n as i64]),
+                    (&frontier, &[b as i64, n as i64]),
+                    (&visited, &[b as i64, n as i64]),
+                    (&levels, &[b as i64, n as i64]),
+                    (&[1.0f32], &[]),
+                ],
+            )
+            .unwrap();
+        // Outputs: next_frontier, visited, levels, active.
+        assert_eq!(out.len(), 4);
+        let next = &out[0];
+        assert_eq!(next[1], 1.0, "vertex 1 discovered");
+        assert_eq!(next[0], 0.0, "source not rediscovered");
+        assert_eq!(next[2], 0.0, "vertex 2 is two hops away");
+        let active = &out[3];
+        assert_eq!(active[0], 1.0, "one new vertex for query 0");
+        if b > 1 {
+            assert_eq!(active[1], 0.0, "idle batch lanes stay empty");
+        }
+        assert_eq!(eng.compiled_count(), 1);
+    }
+
+    #[test]
+    fn cc_step_converges_on_tiny_graph() {
+        let Some(eng) = engine() else { return };
+        let m = eng.manifest();
+        let n = m.n;
+        let e = m.cc_variant().unwrap().clone();
+
+        // Two components {0,1,2} and {3,4}; everything else isolated.
+        let mut adj = vec![0.0f32; n * n];
+        for (u, v) in [(0usize, 1usize), (1, 0), (1, 2), (2, 1), (3, 4), (4, 3)] {
+            adj[u * n + v] = 1.0;
+        }
+        let mut labels: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        for _ in 0..10 {
+            let out = eng
+                .execute_f32(
+                    &e.name,
+                    &[(&adj, &[n as i64, n as i64]), (&labels, &[n as i64])],
+                )
+                .unwrap();
+            let changed = out[1][0];
+            labels = out[0].clone();
+            if changed == 0.0 {
+                break;
+            }
+        }
+        assert_eq!(&labels[..5], &[0.0, 0.0, 0.0, 3.0, 3.0]);
+        assert_eq!(labels[5], 5.0, "isolated vertex keeps its own label");
+    }
+
+    #[test]
+    fn bad_shape_is_reported() {
+        let Some(eng) = engine() else { return };
+        let name = eng.manifest().bfs_variant_for(1).unwrap().name.clone();
+        let err = eng.execute_f32(&name, &[(&[1.0f32], &[2, 2])]).unwrap_err();
+        assert!(err.to_string().contains("does not match"));
+    }
+}

@@ -1,0 +1,18 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs only at build time (`make artifacts`): `python/compile/aot.py`
+//! lowers the Layer-2 step functions (whose hot spots are the Layer-1
+//! Pallas kernels) to **HLO text** under `artifacts/`, with a JSON manifest
+//! describing every (kind, batch, n) variant. This module is the request-
+//! path side: parse the manifest ([`artifact`]), compile each variant once
+//! on the PJRT CPU client, and execute ([`client`]).
+//!
+//! Interchange is HLO *text*, not serialized protos — jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{ArtifactEntry, ArtifactManifest};
+pub use client::Engine;

@@ -1,0 +1,141 @@
+//! Simulated hardware performance counters.
+//!
+//! The paper notes the Pathfinder "recently gained hardware performance
+//! counters" and that future work will use them to explain timing variance
+//! (§VI). The simulator keeps the equivalent ledger: total ops by kind,
+//! per-node busy integrals, and derived utilizations — these drive both the
+//! reports and the §Perf analysis.
+
+use super::machine::Machine;
+
+/// Accumulated activity of one simulation run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Counters {
+    /// Random channel ops serviced per node.
+    pub channel_ops: Vec<f64>,
+    /// Streamed bytes per node.
+    pub stream_bytes: Vec<f64>,
+    /// Instructions issued per node.
+    pub instructions: Vec<f64>,
+    /// Fabric bytes per node.
+    pub fabric_bytes: Vec<f64>,
+    /// Thread migrations landed per node.
+    pub migrations: Vec<f64>,
+    /// MSP remote ops (remote_min / remote_add) per node.
+    pub msp_ops: Vec<f64>,
+    /// Total simulated time (ns) of the run these counters cover.
+    pub elapsed_ns: f64,
+}
+
+impl Counters {
+    pub fn new(nodes: usize) -> Self {
+        Counters {
+            channel_ops: vec![0.0; nodes],
+            stream_bytes: vec![0.0; nodes],
+            instructions: vec![0.0; nodes],
+            fabric_bytes: vec![0.0; nodes],
+            migrations: vec![0.0; nodes],
+            msp_ops: vec![0.0; nodes],
+            elapsed_ns: 0.0,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.channel_ops.len()
+    }
+
+    /// Merge another run's counters into this one.
+    pub fn merge(&mut self, other: &Counters) {
+        assert_eq!(self.nodes(), other.nodes());
+        for n in 0..self.nodes() {
+            self.channel_ops[n] += other.channel_ops[n];
+            self.stream_bytes[n] += other.stream_bytes[n];
+            self.instructions[n] += other.instructions[n];
+            self.fabric_bytes[n] += other.fabric_bytes[n];
+            self.migrations[n] += other.migrations[n];
+            self.msp_ops[n] += other.msp_ops[n];
+        }
+        self.elapsed_ns += other.elapsed_ns;
+    }
+
+    /// Channel utilization of a node over the covered interval: fraction of
+    /// the node's random-op capacity that was busy. This is the number the
+    /// paper's whole thesis rides on — sequential queries leave it low,
+    /// concurrent queries push it toward 1.
+    pub fn channel_utilization(&self, m: &Machine, node: usize) -> f64 {
+        if self.elapsed_ns <= 0.0 {
+            return 0.0;
+        }
+        let capacity_ops = m.channel_op_rate(node) * self.elapsed_ns * 1e-9;
+        (self.channel_ops[node] / capacity_ops).min(1.0)
+    }
+
+    /// Machine-wide mean channel utilization.
+    pub fn mean_channel_utilization(&self, m: &Machine) -> f64 {
+        let n = self.nodes();
+        (0..n).map(|nd| self.channel_utilization(m, nd)).sum::<f64>() / n as f64
+    }
+
+    /// Total ops of each kind (for compact report lines).
+    pub fn totals(&self) -> CounterTotals {
+        CounterTotals {
+            channel_ops: self.channel_ops.iter().sum(),
+            stream_bytes: self.stream_bytes.iter().sum(),
+            instructions: self.instructions.iter().sum(),
+            fabric_bytes: self.fabric_bytes.iter().sum(),
+            migrations: self.migrations.iter().sum(),
+            msp_ops: self.msp_ops.iter().sum(),
+        }
+    }
+}
+
+/// Machine-wide totals.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CounterTotals {
+    pub channel_ops: f64,
+    pub stream_bytes: f64,
+    pub instructions: f64,
+    pub fabric_bytes: f64,
+    pub migrations: f64,
+    pub msp_ops: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Counters::new(2);
+        a.channel_ops[0] = 5.0;
+        a.elapsed_ns = 10.0;
+        let mut b = Counters::new(2);
+        b.channel_ops[0] = 3.0;
+        b.msp_ops[1] = 7.0;
+        b.elapsed_ns = 5.0;
+        a.merge(&b);
+        assert_eq!(a.channel_ops[0], 8.0);
+        assert_eq!(a.msp_ops[1], 7.0);
+        assert_eq!(a.elapsed_ns, 15.0);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let m = Machine::new(MachineConfig::pathfinder_8());
+        let mut c = Counters::new(8);
+        c.elapsed_ns = 1e9; // 1 s
+        c.channel_ops[0] = m.channel_op_rate(0) * 0.5; // half capacity
+        let u = c.channel_utilization(&m, 0);
+        assert!((u - 0.5).abs() < 1e-9);
+        c.channel_ops[0] = m.channel_op_rate(0) * 99.0;
+        assert_eq!(c.channel_utilization(&m, 0), 1.0);
+    }
+
+    #[test]
+    fn totals_sum_nodes() {
+        let mut c = Counters::new(3);
+        c.instructions = vec![1.0, 2.0, 3.0];
+        assert_eq!(c.totals().instructions, 6.0);
+    }
+}

@@ -1,0 +1,417 @@
+//! Resource demand vectors: the interface between the functional algorithms
+//! ([`crate::alg`]) and the flow-level timing engine ([`super::flow`]).
+//!
+//! One [`PhaseDemand`] describes everything one synchronous phase of one
+//! query (a BFS level, an SV hook sweep, a compress pass, ...) asks of the
+//! machine: random channel ops, streamed bytes, instructions and fabric
+//! bytes per node, plus two latency-structure numbers the fluid model needs
+//! — the hottest channel's op count (load imbalance floor) and the serial
+//! dependency chain (e.g. pointer-jumping depth).
+
+use super::machine::Machine;
+
+/// Resource demand of one synchronous phase of one query.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseDemand {
+    /// NCDRAM channels per node (shape of `per_channel_ops`).
+    pub channels_per_node: usize,
+    /// Random (8 B granularity) ops per individual channel, row-major
+    /// `[node][channel]`: this is the granularity the flow engine shares
+    /// capacity at — two queries hammering *different* channels of one node
+    /// do not contend, two hammering the same channel serialize.
+    pub per_channel_ops: Vec<f64>,
+    /// Random channel ops per node (sums of `per_channel_ops` rows).
+    pub channel_ops: Vec<f64>,
+    /// Sequentially streamed bytes per node (edge-block scans).
+    pub stream_bytes: Vec<f64>,
+    /// Instructions issued per node.
+    pub instructions: Vec<f64>,
+    /// Bytes crossing the fabric per node (egress accounting).
+    pub fabric_bytes: Vec<f64>,
+    /// Op count on the hottest single channel of each node (>= ops/chans).
+    pub max_channel_ops: Vec<f64>,
+    /// Thread migrations landing on each node.
+    pub migrations: Vec<f64>,
+    /// MSP read-modify-write ops per node (a subset of `channel_ops`,
+    /// tracked separately for the §IV-C read/write-priority analysis).
+    pub msp_ops: Vec<f64>,
+    /// Length of the longest serial dependency chain in this phase,
+    /// expressed in dependent remote hops (0 = fully parallel).
+    pub serial_hops: f64,
+    /// Per-phase override of the machine's `spawn_efficiency` (None =
+    /// machine default). Frontier-driven phases inherit the calibrated
+    /// single-query deficit; flat whole-graph sweeps (the CC hook) spawn a
+    /// uniform Cilk loop that keeps the issue slots busy, so they override
+    /// toward 1.0.
+    pub issue_efficiency: Option<f64>,
+    /// Available parallelism: number of independently runnable work items
+    /// (threads) this phase can use, machine-wide.
+    pub parallelism: f64,
+}
+
+impl PhaseDemand {
+    pub fn zero(nodes: usize, channels_per_node: usize) -> Self {
+        PhaseDemand {
+            channels_per_node,
+            per_channel_ops: vec![0.0; nodes * channels_per_node],
+            channel_ops: vec![0.0; nodes],
+            stream_bytes: vec![0.0; nodes],
+            instructions: vec![0.0; nodes],
+            fabric_bytes: vec![0.0; nodes],
+            max_channel_ops: vec![0.0; nodes],
+            migrations: vec![0.0; nodes],
+            msp_ops: vec![0.0; nodes],
+            serial_hops: 0.0,
+            issue_efficiency: None,
+            parallelism: 1.0,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.channel_ops.len()
+    }
+
+    /// Total random channel ops across nodes.
+    pub fn total_channel_ops(&self) -> f64 {
+        self.channel_ops.iter().sum()
+    }
+
+    /// Total instructions across nodes.
+    pub fn total_instructions(&self) -> f64 {
+        self.instructions.iter().sum()
+    }
+
+    /// Total migrations across nodes.
+    pub fn total_migrations(&self) -> f64 {
+        self.migrations.iter().sum()
+    }
+
+    /// Number of shared-resource kinds the flow engine allocates per node:
+    /// aggregate channel ops, the hottest single channel, streamed bytes,
+    /// instruction issue, fabric link. (`solo_ns` granularity; the flow
+    /// engine additionally splits channel capacity per individual channel —
+    /// see [`PhaseDemand::flow_resources`].)
+    pub const RESOURCE_KINDS: usize = 5;
+
+    /// Number of capacity resources per node in the flow engine's
+    /// allocation space: one per channel plus stream / instr / fabric.
+    pub fn flow_kinds(&self) -> usize {
+        self.channels_per_node + 3
+    }
+
+    /// Sparse utilization vector for the flow engine: for each capacity
+    /// resource this phase touches, the fraction of that resource consumed
+    /// when the phase runs at solo speed. Resource index space is
+    /// `node * (channels_per_node + 3) + k` with `k` = channel index, then
+    /// stream, instr, fabric.
+    pub fn flow_resources(&self, m: &Machine, solo_ns: f64) -> Vec<(u32, f64)> {
+        let mut out = Vec::new();
+        if solo_ns <= 0.0 {
+            return out;
+        }
+        let kinds = self.flow_kinds();
+        let cpn = self.channels_per_node;
+        for node in 0..self.nodes() {
+            // MSP premium folded uniformly over the node's channels.
+            let msp_premium = m.msp_op_ns(node) / m.channel_op_ns(node) - 1.0;
+            let mix = if self.channel_ops[node] > 0.0 {
+                1.0 + self.msp_ops[node] * msp_premium / self.channel_ops[node]
+            } else {
+                1.0
+            };
+            let base = node * kinds;
+            for c in 0..cpn {
+                let ops = self.per_channel_ops[node * cpn + c];
+                if ops > 0.0 {
+                    let drain = ops * mix * m.channel_op_ns(node);
+                    out.push((base as u32 + c as u32, drain / solo_ns));
+                }
+            }
+            let d = self.drain_ns(m, node);
+            for (k, drain) in [d[2], d[3], d[4]].into_iter().enumerate() {
+                if drain > 0.0 {
+                    out.push(((base + cpn + k) as u32, drain / solo_ns));
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-node drain times (ns) of this phase at *full* capacity of each
+    /// shared resource: `[channel, hottest-channel, stream, instr, fabric]`.
+    /// `solo_ns` is the max of these over nodes (plus latency floors); the
+    /// flow engine turns them into utilization fractions.
+    pub fn drain_ns(&self, m: &Machine, node: usize) -> [f64; Self::RESOURCE_KINDS] {
+        // MSP RMW ops cost more than plain accesses; fold the premium
+        // into an effective op count (scaled by the write-priority knob).
+        let msp_premium = m.msp_op_ns(node) / m.channel_op_ns(node) - 1.0;
+        let eff_ops = self.channel_ops[node] + self.msp_ops[node] * msp_premium;
+        let mix = if self.channel_ops[node] > 0.0 {
+            eff_ops / self.channel_ops[node]
+        } else {
+            1.0
+        };
+        [
+            eff_ops / m.channel_op_rate(node) * 1e9,
+            // Load-imbalance floor: the hottest channel must serially
+            // service its ops.
+            self.max_channel_ops[node] * mix * m.channel_op_ns(node),
+            self.stream_bytes[node] / m.stream_rate(node) * 1e9,
+            self.instructions[node] / m.issue_rate(node) * 1e9,
+            self.fabric_bytes[node] / m.fabric_rate(node) * 1e9,
+        ]
+    }
+
+    /// The duration of this phase if it ran ALONE on the machine (ns):
+    /// the max over per-node resource drain times, floored by the
+    /// latency-structure terms. This is the fluid model's λ-cap.
+    pub fn solo_ns(&self, m: &Machine) -> f64 {
+        let mut t: f64 = 0.0;
+        for node in 0..self.nodes() {
+            for d in self.drain_ns(m, node) {
+                t = t.max(d);
+            }
+        }
+        // Single-query issue-efficiency floor: one Cilk spawn tree only
+        // keeps `spawn_efficiency` of the machine's aggregate issue slots
+        // doing useful work (spawn/steal overhead, level imbalance,
+        // partially-filled contexts). This is the paper's headroom: the
+        // floor binds a SOLO query, but it is per-query — concurrent
+        // queries' threads fill the slots a single query leaves idle.
+        let total_instr = self.total_instructions();
+        if total_instr > 0.0 {
+            let eta = self.issue_efficiency.unwrap_or(m.cfg.spawn_efficiency);
+            let full_issue: f64 = (0..self.nodes()).map(|n| m.issue_rate(n)).sum();
+            t = t.max(total_instr / (eta * full_issue) * 1e9);
+        }
+        // Parallelism floor: with P runnable threads, each blocking on one
+        // memory access at a time (cache-less cores), the phase cannot
+        // finish faster than total_ops/P rounds of the mean access latency
+        // (local access plus the fabric hop for the remote fraction).
+        let total_ops = self.total_channel_ops();
+        if total_ops > 0.0 && self.parallelism > 0.0 {
+            let mean_lat = m.cfg.local_access_ns
+                + self.mean_remote_fraction() * m.mean_fabric_latency_ns(0);
+            let rounds = (total_ops / self.parallelism).max(1.0);
+            t = t.max(rounds * mean_lat);
+        }
+        // Serial chain floor (pointer jumping, reductions): each hop pays a
+        // migration-ish round trip.
+        let chain =
+            self.serial_hops * (m.mean_fabric_latency_ns(0) + m.cfg.migration_overhead_ns);
+        t = t.max(chain);
+        t + m.cfg.level_sync_ns
+    }
+
+    /// Rotate every node's per-channel op placement by `offset` channels —
+    /// the cheap equivalent of re-running an identical query with a
+    /// different own-array stripe offset (connected components is
+    /// source-free, so the coordinator computes its demand once and
+    /// rotates per concurrent instance).
+    pub fn rotate_channels(&self, offset: usize) -> PhaseDemand {
+        let cpn = self.channels_per_node;
+        let mut out = self.clone();
+        if cpn == 0 || offset % cpn == 0 {
+            return out;
+        }
+        for node in 0..self.nodes() {
+            for c in 0..cpn {
+                out.per_channel_ops[node * cpn + (c + offset) % cpn] =
+                    self.per_channel_ops[node * cpn + c];
+            }
+        }
+        out
+    }
+
+    /// Fraction of channel ops that had to cross the fabric.
+    fn mean_remote_fraction(&self) -> f64 {
+        let total = self.total_channel_ops();
+        if total == 0.0 {
+            return 0.0;
+        }
+        (self.fabric_bytes.iter().sum::<f64>() / 16.0 /* bytes per remote op msg */)
+            .min(total)
+            / total
+    }
+}
+
+/// Builder that accumulates per-channel op counts and collapses them into a
+/// [`PhaseDemand`] (per-node totals + hottest channel).
+#[derive(Debug, Clone)]
+pub struct DemandBuilder {
+    nodes: usize,
+    channels_per_node: usize,
+    demand: PhaseDemand,
+}
+
+impl DemandBuilder {
+    pub fn new(nodes: usize, channels_per_node: usize) -> Self {
+        DemandBuilder {
+            nodes,
+            channels_per_node,
+            demand: PhaseDemand::zero(nodes, channels_per_node),
+        }
+    }
+
+    /// One random op at (node, channel).
+    #[inline]
+    pub fn channel_op(&mut self, node: usize, channel: usize, count: f64) {
+        self.demand.per_channel_ops[node * self.channels_per_node + channel] += count;
+        self.demand.channel_ops[node] += count;
+    }
+
+    #[inline]
+    pub fn stream_bytes(&mut self, node: usize, bytes: f64) {
+        self.demand.stream_bytes[node] += bytes;
+    }
+
+    #[inline]
+    pub fn instructions(&mut self, node: usize, count: f64) {
+        self.demand.instructions[node] += count;
+    }
+
+    #[inline]
+    pub fn fabric_bytes(&mut self, node: usize, bytes: f64) {
+        self.demand.fabric_bytes[node] += bytes;
+    }
+
+    #[inline]
+    pub fn migration(&mut self, to_node: usize, count: f64) {
+        self.demand.migrations[to_node] += count;
+    }
+
+    /// One MSP remote op (remote_min/remote_add) at (node, channel):
+    /// charges the channel (RMW cycle, weighted by the MSP write-priority
+    /// knob at timing) and the MSP ledger.
+    #[inline]
+    pub fn msp_op(&mut self, node: usize, channel: usize, count: f64) {
+        self.channel_op(node, channel, count);
+        self.demand.msp_ops[node] += count;
+    }
+
+    pub fn serial_hops(&mut self, hops: f64) {
+        self.demand.serial_hops = self.demand.serial_hops.max(hops);
+    }
+
+    /// Override the phase's issue efficiency (see
+    /// [`PhaseDemand::issue_efficiency`]).
+    pub fn issue_efficiency(&mut self, eta: f64) {
+        assert!(eta > 0.0 && eta <= 1.0);
+        self.demand.issue_efficiency = Some(eta);
+    }
+
+    pub fn parallelism(&mut self, p: f64) {
+        self.demand.parallelism = p.max(1.0);
+    }
+
+    /// Collapse into the final demand vector.
+    pub fn finish(mut self) -> PhaseDemand {
+        for node in 0..self.nodes {
+            let lo = node * self.channels_per_node;
+            let hi = lo + self.channels_per_node;
+            self.demand.max_channel_ops[node] = self.demand.per_channel_ops[lo..hi]
+                .iter()
+                .copied()
+                .fold(0.0, f64::max);
+        }
+        self.demand
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    #[test]
+    fn rotate_channels_permutes_within_node() {
+        let mut b = DemandBuilder::new(2, 4);
+        b.channel_op(0, 0, 5.0);
+        b.channel_op(1, 3, 7.0);
+        let d = b.finish();
+        let r = d.rotate_channels(1);
+        assert_eq!(r.per_channel_ops[1], 5.0);
+        assert_eq!(r.per_channel_ops[4], 7.0); // wraps 3 -> 0
+        // Node totals, instr etc. unchanged.
+        assert_eq!(r.channel_ops, d.channel_ops);
+        let m = m8();
+        // Rotation by a full cycle is identity.
+        assert_eq!(d.rotate_channels(4), d);
+        let _ = m;
+    }
+
+    #[test]
+    fn builder_collapses_hottest_channel() {
+        let mut b = DemandBuilder::new(2, 4);
+        b.channel_op(0, 1, 10.0);
+        b.channel_op(0, 1, 5.0);
+        b.channel_op(0, 2, 3.0);
+        b.channel_op(1, 0, 7.0);
+        let d = b.finish();
+        assert_eq!(d.channel_ops, vec![18.0, 7.0]);
+        assert_eq!(d.max_channel_ops, vec![15.0, 7.0]);
+    }
+
+    #[test]
+    fn solo_ns_floor_is_level_sync() {
+        let m = m8();
+        let d = PhaseDemand::zero(8, 8);
+        assert!((d.solo_ns(&m) - m.cfg.level_sync_ns).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solo_ns_scales_with_work() {
+        let m = m8();
+        let mut small = PhaseDemand::zero(8, 8);
+        small.channel_ops[0] = 1e4;
+        small.max_channel_ops[0] = 1e4 / 8.0;
+        small.parallelism = 1e4;
+        let mut big = small.clone();
+        big.channel_ops[0] = 1e7;
+        big.max_channel_ops[0] = 1e7 / 8.0;
+        assert!(big.solo_ns(&m) > 10.0 * small.solo_ns(&m));
+    }
+
+    #[test]
+    fn imbalance_raises_solo_time() {
+        let m = m8();
+        let mut balanced = PhaseDemand::zero(8, 8);
+        let mut skewed = PhaseDemand::zero(8, 8);
+        for n in 0..8 {
+            balanced.channel_ops[n] = 1e6;
+            balanced.max_channel_ops[n] = 1e6 / 8.0;
+            skewed.channel_ops[n] = 1e6;
+            skewed.max_channel_ops[n] = 1e6; // everything on one channel
+        }
+        balanced.parallelism = 1e6;
+        skewed.parallelism = 1e6;
+        assert!(skewed.solo_ns(&m) > 2.0 * balanced.solo_ns(&m));
+    }
+
+    #[test]
+    fn low_parallelism_is_latency_bound() {
+        let m = m8();
+        let mut d = PhaseDemand::zero(8, 8);
+        for n in 0..8 {
+            d.channel_ops[n] = 1e5;
+            d.max_channel_ops[n] = 1e5 / 8.0;
+        }
+        d.parallelism = 4.0; // four threads for 800k ops
+        let slow = d.solo_ns(&m);
+        d.parallelism = 1e6;
+        let fast = d.solo_ns(&m);
+        assert!(slow > 5.0 * fast, "slow {slow} fast {fast}");
+    }
+
+    #[test]
+    fn serial_chain_floor() {
+        let m = m8();
+        let mut d = PhaseDemand::zero(8, 8);
+        d.serial_hops = 1000.0;
+        assert!(d.solo_ns(&m) > 1000.0 * m.cfg.migration_overhead_ns);
+    }
+}

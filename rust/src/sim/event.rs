@@ -1,0 +1,479 @@
+//! Discrete-event validation engine.
+//!
+//! Where [`super::flow`] treats a phase as a fluid demand vector, this
+//! engine walks the actual graph with *explicit* threads, hardware thread
+//! context slots, per-channel FIFO service, MSP queues and migrations. It is
+//! far too slow for the paper-scale runs (750 concurrent queries) but at
+//! small scale it validates the assumptions the fluid model is built on —
+//! see `rust/tests/sim_tests.rs` for the cross-checks.
+//!
+//! Modeling choices (all deliberate simplifications, documented here so the
+//! validation tests know what they are comparing):
+//!
+//! * **Channels are FIFO servers**: threads emit timestamped requests
+//!   during the sweep; at the end of each synchronous phase every
+//!   channel's queue is served in arrival order
+//!   (`completion = max(arrival, clock) + service`). Two-pass scheduling
+//!   keeps request *order* time-accurate regardless of the vertex
+//!   iteration order. A thread's own timeline uses the uncontended service
+//!   time of its reads (contended completions only push the phase end) —
+//!   that is the approximation the flow cross-checks bound.
+//! * **Thread contexts are slots**: each node owns `cores x 64` context
+//!   slots kept in a min-heap of free times; a spawned thread takes the
+//!   earliest-free slot. Running out of slots delays work, which is exactly
+//!   the single-query parallelism ceiling the paper exploits.
+//! * **Remote writes don't migrate** (§II): they pay fabric latency and the
+//!   destination channel's service, the issuing thread fires and forgets,
+//!   but the *level* does not end until all its writes land.
+//! * **MSP remote ops** (`remote_min`) are read-modify-write cycles at the
+//!   destination record's channel plus the MSP premium.
+//! * **Migrations** (the CC compress phase, the view-0 `changed`
+//!   reduction) pay fabric latency + context transfer and continue on the
+//!   destination node.
+
+use super::counters::Counters;
+use super::machine::Machine;
+use crate::graph::csr::Csr;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Cilk grainsize: a vertex's edge block is scanned in chunks of this many
+/// edges, each by its own worker thread — hubs do not serialize a level
+/// (matching the splittable-loop assumption of the flow model).
+const GRAIN: usize = 64;
+
+/// Wrapper giving f64 a total order for the slot heaps (times are never
+/// NaN here).
+#[derive(PartialEq, PartialOrd)]
+struct Time(f64);
+impl Eq for Time {}
+#[allow(clippy::derive_ord_xor_partial_ord)]
+impl Ord for Time {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.partial_cmp(other).unwrap()
+    }
+}
+
+/// Functional result + timing of one event-simulated query.
+#[derive(Debug, Clone)]
+pub struct EventOutcome {
+    /// BFS levels (-1 = unreached) or CC labels, depending on the query.
+    pub values: Vec<i64>,
+    /// End-to-end simulated time (ns).
+    pub elapsed_ns: f64,
+    /// Hardware counters accumulated by the run.
+    pub counters: Counters,
+    /// Synchronous phases executed (BFS levels / CC iterations x 3).
+    pub phases: usize,
+}
+
+/// Per-node context-slot pool.
+struct SlotPool {
+    heaps: Vec<BinaryHeap<Reverse<Time>>>,
+    slots_per_node: usize,
+}
+
+impl SlotPool {
+    fn new(nodes: usize, slots_per_node: usize) -> Self {
+        SlotPool {
+            heaps: (0..nodes).map(|_| BinaryHeap::new()).collect(),
+            slots_per_node,
+        }
+    }
+
+    /// Earliest time a thread can start on `node` at or after `t`.
+    fn acquire(&mut self, node: usize, t: f64) -> f64 {
+        let h = &mut self.heaps[node];
+        if h.len() < self.slots_per_node {
+            return t;
+        }
+        let Reverse(Time(free)) = h.pop().expect("non-empty");
+        free.max(t)
+    }
+
+    fn release(&mut self, node: usize, until: f64) {
+        self.heaps[node].push(Reverse(Time(until)));
+    }
+
+    fn reset(&mut self) {
+        for h in &mut self.heaps {
+            h.clear();
+        }
+    }
+}
+
+/// One timestamped channel request emitted during a sweep.
+#[derive(Debug, Clone, Copy)]
+struct Request {
+    flat_channel: u32,
+    arrival: f64,
+    service_ns: f64,
+}
+
+/// The discrete-event engine. One instance simulates one query at a time
+/// (the flow engine owns concurrency; this engine's job is validating
+/// single-query timing structure).
+pub struct EventSim {
+    m: Machine,
+    /// Busy-until clock per flat channel (persists across phases).
+    chan_free: Vec<f64>,
+    slots: SlotPool,
+    /// Requests accumulated during the current phase sweep.
+    pending: Vec<Request>,
+}
+
+impl EventSim {
+    pub fn new(m: Machine) -> Self {
+        let chans = m.layout.total_channels();
+        let nodes = m.nodes();
+        let slots = m.cfg.contexts_per_node();
+        EventSim {
+            m,
+            chan_free: vec![0.0; chans],
+            slots: SlotPool::new(nodes, slots),
+            pending: Vec::new(),
+        }
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    fn reset(&mut self) {
+        self.chan_free.iter_mut().for_each(|t| *t = 0.0);
+        self.slots.reset();
+        self.pending.clear();
+    }
+
+    /// Queue one fine-grained access; the thread's own timeline advances by
+    /// the uncontended service time.
+    fn channel_request(&mut self, node: usize, chan: usize, arrival: f64) -> f64 {
+        let fc = self.m.layout.flat_channel(node, chan) as u32;
+        let service_ns = self.m.channel_op_ns(node);
+        self.pending.push(Request { flat_channel: fc, arrival, service_ns });
+        arrival + service_ns
+    }
+
+    /// Queue one MSP read-modify-write (remote_min / remote_add).
+    fn msp_request(&mut self, node: usize, chan: usize, arrival: f64) -> f64 {
+        let fc = self.m.layout.flat_channel(node, chan) as u32;
+        let service_ns = self.m.msp_op_ns(node);
+        self.pending.push(Request { flat_channel: fc, arrival, service_ns });
+        arrival + service_ns
+    }
+
+    /// Queue a streamed chunk of an edge block.
+    fn stream_request(&mut self, node: usize, chan: usize, arrival: f64, bytes: f64) -> f64 {
+        let fc = self.m.layout.flat_channel(node, chan) as u32;
+        let per_chan_rate = self.m.stream_rate(node) / self.m.cfg.channels_per_node as f64;
+        let service_ns = bytes / per_chan_rate * 1e9;
+        self.pending.push(Request { flat_channel: fc, arrival, service_ns });
+        arrival + service_ns
+    }
+
+    /// Serve every pending request FIFO-per-channel in arrival order and
+    /// return the latest completion (>= `floor`). Advances the persistent
+    /// channel clocks.
+    fn drain_requests(&mut self, floor: f64) -> f64 {
+        let mut reqs = std::mem::take(&mut self.pending);
+        reqs.sort_by(|a, b| {
+            a.flat_channel
+                .cmp(&b.flat_channel)
+                .then(a.arrival.partial_cmp(&b.arrival).unwrap())
+        });
+        let mut end = floor;
+        for r in &reqs {
+            let fc = r.flat_channel as usize;
+            let done = self.chan_free[fc].max(r.arrival) + r.service_ns;
+            self.chan_free[fc] = done;
+            end = end.max(done);
+        }
+        end
+    }
+
+    /// Event-simulated level-synchronous BFS from `src` (paper §III: the
+    /// tuned implementation migrates for clustered reads but uses remote
+    /// *writes* for frontier insertion, which do not migrate).
+    pub fn bfs(&mut self, g: &Csr, src: u32) -> EventOutcome {
+        self.reset();
+        let nodes = self.m.nodes();
+        let mut counters = Counters::new(nodes);
+        let layout = self.m.layout;
+        let mut levels = vec![-1i64; g.n()];
+        levels[src as usize] = 0;
+        let mut frontier = vec![src];
+        let mut t = 0.0f64;
+        let mut depth = 0i64;
+        let mut phases = 0usize;
+
+        while !frontier.is_empty() {
+            phases += 1;
+            let t0 = t;
+            let mut level_end = t0;
+            let mut next = Vec::new();
+            // Worker threads per node this level (for issue-slot sharing).
+            let per_node_threads =
+                (frontier.len().div_ceil(nodes)).max(1).min(self.m.cfg.contexts_per_node());
+            for &u in &frontier {
+                let un = layout.node_of(u);
+                // Read the vertex record once (local dedup of last level's
+                // writes) on the first worker.
+                let start = self.slots.acquire(un, t0);
+                let head = self.channel_request(un, layout.channel_of(u), start);
+                counters.channel_ops[un] += 1.0;
+                self.slots.release(un, head);
+                // Grainsize-split edge scan: each chunk is its own worker
+                // thread with its own context slot.
+                for chunk in g.neighbors(u).chunks(GRAIN) {
+                    let start = self.slots.acquire(un, head.max(t0));
+                    counters.instructions[un] += self.m.cfg.spawn_instr;
+                    // Stream this chunk of the edge block.
+                    let bytes = (chunk.len() as u64 * Csr::PAPER_INT_BYTES) as f64;
+                    let mut tt =
+                        self.stream_request(un, layout.edge_block_channel(u), start, bytes);
+                    counters.stream_bytes[un] += bytes;
+                    let work = chunk.len() as f64 * self.m.cfg.instr_per_edge;
+                    counters.instructions[un] += work;
+                    tt += work / self.m.per_thread_issue_rate(un, per_node_threads) * 1e9;
+                    for &v in chunk {
+                        if levels[v as usize] != -1 {
+                            continue;
+                        }
+                        let vn = layout.node_of(v);
+                        let arrival = if vn == un {
+                            tt
+                        } else {
+                            counters.fabric_bytes[un] += 16.0;
+                            tt + self.m.cfg.fabric_latency_ns(un, vn)
+                        };
+                        self.channel_request(vn, layout.channel_of(v), arrival);
+                        counters.channel_ops[vn] += 1.0;
+                        levels[v as usize] = depth + 1;
+                        next.push(v);
+                    }
+                    level_end = level_end.max(tt);
+                    self.slots.release(un, tt);
+                }
+            }
+            level_end = self.drain_requests(level_end);
+            t = level_end + self.m.cfg.level_sync_ns;
+            depth += 1;
+            frontier = next;
+        }
+        counters.elapsed_ns = t;
+        EventOutcome { values: levels, elapsed_ns: t, counters, phases }
+    }
+
+    /// Event-simulated Figure-2 connected components: hook sweeps through
+    /// MSP `remote_min`, a migrating view-0 `changed` reduction, and a
+    /// pointer-jumping compress whose migrations are bounded by tree depth.
+    ///
+    /// Functionally this runs Jacobi-style (hooks read the previous
+    /// iteration's labels) so the result is deterministic; the hardware's
+    /// racy in-place `remote_min` converges to the same labels, possibly in
+    /// fewer sweeps.
+    pub fn cc(&mut self, g: &Csr) -> EventOutcome {
+        self.reset();
+        let nodes = self.m.nodes();
+        let mut counters = Counters::new(nodes);
+        let layout = self.m.layout;
+        let n = g.n();
+        let mut labels: Vec<i64> = (0..n as i64).collect();
+        let mut t = 0.0f64;
+        let mut phases = 0usize;
+
+        loop {
+            // --- Hook sweep: remote_min(&C[j], C[v]) over every edge. ---
+            phases += 1;
+            let t0 = t;
+            let mut phase_end = t0;
+            let mut new_labels = labels.clone();
+            let per_node_threads =
+                (n.div_ceil(nodes)).max(1).min(self.m.cfg.contexts_per_node());
+            for u in 0..n as u32 {
+                let un = layout.node_of(u);
+                let start = self.slots.acquire(un, t0);
+                let head = self.channel_request(un, layout.channel_of(u), start);
+                counters.channel_ops[un] += 1.0;
+                self.slots.release(un, head);
+                let lu = labels[u as usize];
+                for chunk in g.neighbors(u).chunks(GRAIN) {
+                    let start = self.slots.acquire(un, head.max(t0));
+                    counters.instructions[un] += self.m.cfg.spawn_instr;
+                    let bytes = (chunk.len() as u64 * Csr::PAPER_INT_BYTES) as f64;
+                    let mut tt =
+                        self.stream_request(un, layout.edge_block_channel(u), start, bytes);
+                    counters.stream_bytes[un] += bytes;
+                    let work = chunk.len() as f64 * self.m.cfg.instr_per_edge;
+                    counters.instructions[un] += work;
+                    tt += work / self.m.per_thread_issue_rate(un, per_node_threads) * 1e9;
+                    for &v in chunk {
+                        let vn = layout.node_of(v);
+                        let arrival = if vn == un {
+                            tt
+                        } else {
+                            counters.fabric_bytes[un] += 16.0;
+                            tt + self.m.cfg.fabric_latency_ns(un, vn)
+                        };
+                        self.msp_request(vn, layout.channel_of(v), arrival);
+                        counters.channel_ops[vn] += 1.0;
+                        counters.msp_ops[vn] += 1.0;
+                        if lu < new_labels[v as usize] {
+                            new_labels[v as usize] = lu;
+                        }
+                    }
+                    phase_end = phase_end.max(tt);
+                    self.slots.release(un, tt);
+                }
+            }
+            phase_end = self.drain_requests(phase_end);
+            t = phase_end + self.m.cfg.level_sync_ns;
+
+            // --- Changed check + view-0 reduction (Fig. 2 line 2). ---
+            phases += 1;
+            let changed = new_labels != labels;
+            // Each vertex reads pC and C: two local channel ops.
+            let t0 = t;
+            let mut phase_end = t0;
+            for u in 0..n as u32 {
+                let un = layout.node_of(u);
+                let after_read = self.channel_request(un, layout.channel_of(u), t0);
+                self.channel_request(un, layout.channel_of(u), after_read);
+                counters.channel_ops[un] += 2.0;
+            }
+            phase_end = self.drain_requests(phase_end);
+            // The reduction migrates a single thread across all nodes,
+            // casting the view-0 pointer to view-1 (serial chain).
+            let mut red = phase_end;
+            for node in 1..nodes {
+                red += self.m.migration_ns(node - 1, node);
+                counters.migrations[node] += 1.0;
+                counters.channel_ops[node] += 1.0;
+            }
+            t = red + self.m.cfg.level_sync_ns;
+
+            if !changed {
+                counters.elapsed_ns = t;
+                return EventOutcome { values: labels, elapsed_ns: t, counters, phases };
+            }
+
+            // --- Compress: pointer-jump until C[v] == C[C[v]]. ---
+            phases += 1;
+            labels = new_labels;
+            let t0 = t;
+            let mut phase_end = t0;
+            for v in 0..n as u32 {
+                let vn = layout.node_of(v);
+                let start = self.slots.acquire(vn, t0);
+                let mut tt = self.channel_request(vn, layout.channel_of(v), start);
+                counters.channel_ops[vn] += 1.0;
+                let mut here = vn;
+                // Each jump reads C[C[v]]: a migration to the label's home
+                // node (remote read), then a channel access there.
+                let mut cur = labels[v as usize] as u32;
+                while labels[cur as usize] != cur as i64 {
+                    let target = labels[cur as usize] as u32;
+                    let tn = layout.node_of(cur);
+                    if tn != here {
+                        tt += self.m.migration_ns(here, tn);
+                        counters.migrations[tn] += 1.0;
+                        counters.fabric_bytes[here] += 64.0; // context transfer
+                        here = tn;
+                    }
+                    tt = self.channel_request(tn, layout.channel_of(cur), tt);
+                    counters.channel_ops[tn] += 1.0;
+                    cur = target;
+                }
+                labels[v as usize] = cur as i64;
+                phase_end = phase_end.max(tt);
+                self.slots.release(vn, tt);
+            }
+            phase_end = self.drain_requests(phase_end);
+            t = phase_end + self.m.cfg.level_sync_ns;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::graph::builder::build_undirected_csr;
+
+    fn machine() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn path(n: usize) -> Csr {
+        let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        build_undirected_csr(n, &edges)
+    }
+
+    #[test]
+    fn bfs_levels_correct_on_path() {
+        let g = path(16);
+        let mut sim = EventSim::new(machine());
+        let out = sim.bfs(&g, 0);
+        for v in 0..16 {
+            assert_eq!(out.values[v], v as i64);
+        }
+        assert_eq!(out.phases, 16); // 15 expanding levels + final empty check
+    }
+
+    #[test]
+    fn bfs_unreachable_is_minus_one() {
+        // Two components: 0-1, 2-3.
+        let g = build_undirected_csr(4, &[(0, 1), (2, 3)]);
+        let mut sim = EventSim::new(machine());
+        let out = sim.bfs(&g, 0);
+        assert_eq!(out.values, vec![0, 1, -1, -1]);
+    }
+
+    #[test]
+    fn bfs_deeper_graph_takes_longer() {
+        let mut sim = EventSim::new(machine());
+        let t_short = sim.bfs(&path(4), 0).elapsed_ns;
+        let t_long = sim.bfs(&path(64), 0).elapsed_ns;
+        assert!(t_long > 4.0 * t_short);
+    }
+
+    #[test]
+    fn cc_labels_are_component_minima() {
+        // Components {0,1,2}, {3,4}, {5}.
+        let g = build_undirected_csr(6, &[(0, 1), (1, 2), (3, 4)]);
+        let mut sim = EventSim::new(machine());
+        let out = sim.cc(&g);
+        assert_eq!(out.values, vec![0, 0, 0, 3, 3, 5]);
+    }
+
+    #[test]
+    fn cc_counts_msp_ops_per_edge_per_sweep() {
+        let g = path(8);
+        let mut sim = EventSim::new(machine());
+        let out = sim.cc(&g);
+        let msp: f64 = out.counters.msp_ops.iter().sum();
+        // Each hook sweep fires one remote_min per directed edge.
+        let m = g.m_directed() as f64;
+        assert!(msp >= m, "at least one sweep");
+        assert_eq!(msp % m, 0.0, "whole sweeps");
+    }
+
+    #[test]
+    fn cc_reduction_migrates_across_nodes() {
+        let g = path(8);
+        let mut sim = EventSim::new(machine());
+        let out = sim.cc(&g);
+        // The view-0 changed reduction walks nodes 1..8 every iteration.
+        let mig: f64 = out.counters.migrations.iter().sum();
+        assert!(mig >= 7.0);
+    }
+
+    #[test]
+    fn elapsed_matches_counters_ledger() {
+        let g = path(32);
+        let mut sim = EventSim::new(machine());
+        let out = sim.bfs(&g, 0);
+        assert_eq!(out.counters.elapsed_ns, out.elapsed_ns);
+        assert!(out.elapsed_ns > 0.0);
+    }
+}

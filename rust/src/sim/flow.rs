@@ -1,0 +1,741 @@
+//! Flow-level (fluid) concurrency engine.
+//!
+//! This is the engine the paper-scale experiments run on: hundreds of
+//! concurrent queries, each a sequence of [`PhaseDemand`] phases produced by
+//! the functional algorithms in [`crate::alg`]. The model:
+//!
+//! * Running **alone**, a phase takes [`PhaseDemand::solo_ns`] — its
+//!   latency/parallelism/synchronization structure caps how fast it can go
+//!   even on an idle machine. A single level-synchronous BFS cannot saturate
+//!   the Pathfinder's many narrow channels; that headroom is the paper's
+//!   whole thesis.
+//! * Running **concurrently**, each active phase progresses at a rate
+//!   `s ∈ (0, 1]` relative to its solo speed. A phase running at its solo
+//!   speed consumes a *fraction* `u_j = drain_ns(j) / solo_ns` of each
+//!   shared resource `j` (a node's channel capacity, its hottest channel,
+//!   stream bandwidth, instruction issue, fabric link). Rates are chosen by
+//!   progressive-filling **max-min fairness**: grow every query's rate
+//!   together until a resource saturates, freeze the queries using it, and
+//!   continue with the rest — the fluid analogue of hardware round-robin
+//!   thread scheduling with FIFO memory channels.
+//! * Time advances event-to-event (phase completions and query arrivals);
+//!   rates are recomputed whenever the active set changes.
+//!
+//! Sequential execution (`run_sequential`) is exact under this model — a
+//! lone query always gets rate 1.0 — so it is computed directly from solo
+//! times rather than through the event loop.
+
+use super::counters::Counters;
+use super::demand::PhaseDemand;
+use super::machine::Machine;
+
+/// One query submitted to the flow engine: an ordered list of phases plus
+/// an arrival time.
+#[derive(Debug, Clone)]
+pub struct QuerySpec {
+    /// Caller-chosen identifier (reported back in [`QueryTiming`]).
+    pub id: usize,
+    /// Short label for reports ("bfs", "cc", ...).
+    pub label: &'static str,
+    /// Synchronous phases, executed in order.
+    pub phases: Vec<PhaseDemand>,
+    /// Simulated arrival time (ns).
+    pub arrival_ns: f64,
+}
+
+impl QuerySpec {
+    /// Duration of this query if it ran alone on `m` (ns).
+    pub fn solo_ns(&self, m: &Machine) -> f64 {
+        self.phases.iter().map(|p| p.solo_ns(m)).sum()
+    }
+}
+
+/// Per-query outcome of a flow-engine run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryTiming {
+    pub id: usize,
+    pub label: &'static str,
+    /// When the query arrived (ns).
+    pub arrival_ns: f64,
+    /// When its first phase started progressing (== arrival here; admission
+    /// queueing happens in the coordinator, not the engine).
+    pub start_ns: f64,
+    /// When its last phase completed (ns).
+    pub finish_ns: f64,
+    /// Number of phases executed.
+    pub phases: usize,
+}
+
+impl QueryTiming {
+    /// End-to-end latency of the query (ns).
+    pub fn latency_ns(&self) -> f64 {
+        self.finish_ns - self.arrival_ns
+    }
+}
+
+/// What to do with an arriving query when the concurrency cap is reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnFull {
+    /// Reject the query outright (it appears in `FlowReport::rejected`).
+    /// This is what the §IV-B "256 concurrent queries exhausted the memory
+    /// used for thread contexts" failure becomes under admission control.
+    Reject,
+    /// Hold the query in a FIFO and start it when a slot frees.
+    Queue,
+}
+
+/// Admission policy applied inside the engine's event loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Admission {
+    /// Maximum queries simultaneously in flight (None = unlimited).
+    pub max_in_flight: Option<usize>,
+    /// Behavior at the cap.
+    pub on_full: OnFull,
+}
+
+impl Admission {
+    /// No admission control at all.
+    pub fn unlimited() -> Self {
+        Admission { max_in_flight: None, on_full: OnFull::Reject }
+    }
+}
+
+/// Result of one flow-engine run.
+#[derive(Debug, Clone)]
+pub struct FlowReport {
+    /// Per-query timings, in input order.
+    pub timings: Vec<QueryTiming>,
+    /// Time the last query finished (ns).
+    pub makespan_ns: f64,
+    /// Accumulated hardware counters over the run.
+    pub counters: Counters,
+    /// Largest number of queries simultaneously in flight.
+    pub peak_concurrency: usize,
+    /// Ids of queries rejected by admission control (empty without a cap).
+    pub rejected: Vec<usize>,
+}
+
+impl FlowReport {
+    /// Mean per-query latency (s).
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.timings.is_empty() {
+            return 0.0;
+        }
+        self.timings.iter().map(|t| t.latency_ns()).sum::<f64>()
+            / self.timings.len() as f64
+            * 1e-9
+    }
+
+    /// Makespan in seconds.
+    pub fn makespan_s(&self) -> f64 {
+        self.makespan_ns * 1e-9
+    }
+
+    /// Per-query latencies in seconds (input order).
+    pub fn latencies_s(&self) -> Vec<f64> {
+        self.timings.iter().map(|t| t.latency_ns() * 1e-9).collect()
+    }
+}
+
+/// One in-flight phase inside the allocator.
+struct ActivePhase {
+    /// Index into the run's query vector.
+    qi: usize,
+    /// Index of the current phase.
+    phase_idx: usize,
+    /// Solo duration of the current phase (ns).
+    solo_ns: f64,
+    /// Remaining fraction of the current phase in [0, 1].
+    remaining: f64,
+    /// Sparse utilization vector: (resource index, fraction of capacity
+    /// consumed at rate 1.0).
+    util: Vec<(u32, f64)>,
+    /// Allocated rate from the last allocation pass.
+    rate: f64,
+}
+
+/// The flow-level simulator.
+#[derive(Debug, Clone)]
+pub struct FlowSim {
+    m: Machine,
+}
+
+/// Resources below this utilization are treated as unused by a phase; keeps
+/// the sparse vectors short and the waterfill numerically stable.
+const UTIL_EPS: f64 = 1e-9;
+
+impl FlowSim {
+    pub fn new(m: Machine) -> Self {
+        FlowSim { m }
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    /// Run all queries concurrently (respecting arrival times), without
+    /// admission control.
+    pub fn run(&self, queries: &[QuerySpec]) -> FlowReport {
+        self.run_admitted(queries, Admission::unlimited())
+    }
+
+    /// Run with an admission policy: arrivals beyond `max_in_flight`
+    /// concurrent queries are queued or rejected per `on_full`.
+    pub fn run_admitted(&self, queries: &[QuerySpec], adm: Admission) -> FlowReport {
+        let nodes = self.m.nodes();
+        let n_res = nodes * (self.m.cfg.channels_per_node + 3);
+        let mut counters = Counters::new(nodes);
+
+        // Arrival ordering (stable by input order for equal times).
+        let mut order: Vec<usize> = (0..queries.len()).collect();
+        order.sort_by(|&a, &b| {
+            queries[a]
+                .arrival_ns
+                .partial_cmp(&queries[b].arrival_ns)
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let mut next_arrival = 0usize;
+
+        let mut timings: Vec<Option<QueryTiming>> = vec![None; queries.len()];
+        let mut active: Vec<ActivePhase> = Vec::new();
+        // Allocator scratch, reused across every event (the rate solve is
+        // the engine's hot path at paper-scale concurrency — §Perf).
+        let mut demand_scratch = vec![0.0f64; n_res];
+        let mut residual_scratch = vec![0.0f64; n_res];
+        // Aggregate demand maintained incrementally as phases enter/leave,
+        // so the solve never rebuilds it from scratch (§Perf).
+        let mut total_demand = vec![0.0f64; n_res];
+        let mut waiting: std::collections::VecDeque<usize> = Default::default();
+        let mut rejected: Vec<usize> = Vec::new();
+        let mut in_flight = 0usize;
+        let cap = adm.max_in_flight.unwrap_or(usize::MAX);
+        let mut t = 0.0f64;
+        let mut peak = 0usize;
+        let mut rates_dirty = true;
+
+        // Start query qi at time t (assumes a free slot).
+        macro_rules! start_query {
+            ($qi:expr) => {{
+                let qi = $qi;
+                let q = &queries[qi];
+                in_flight += 1;
+                timings[qi] = Some(QueryTiming {
+                    id: q.id,
+                    label: q.label,
+                    arrival_ns: q.arrival_ns,
+                    start_ns: t,
+                    finish_ns: f64::NAN,
+                    phases: q.phases.len(),
+                });
+                if let Some(ap) = self.enter_phase(qi, 0, q, &mut counters) {
+                    for &(j, u) in &ap.util {
+                        total_demand[j as usize] += u;
+                    }
+                    active.push(ap);
+                } else {
+                    // Query with no phases (or all-empty phases): finishes
+                    // instantly.
+                    timings[qi].as_mut().unwrap().finish_ns = t;
+                    in_flight -= 1;
+                }
+                rates_dirty = true;
+            }};
+        }
+
+        loop {
+            // Admit every query that has arrived by `t`.
+            while next_arrival < order.len() && queries[order[next_arrival]].arrival_ns <= t {
+                let qi = order[next_arrival];
+                next_arrival += 1;
+                if in_flight < cap {
+                    start_query!(qi);
+                } else {
+                    match adm.on_full {
+                        OnFull::Queue => waiting.push_back(qi),
+                        OnFull::Reject => {
+                            let q = &queries[qi];
+                            timings[qi] = Some(QueryTiming {
+                                id: q.id,
+                                label: q.label,
+                                arrival_ns: q.arrival_ns,
+                                start_ns: f64::NAN,
+                                finish_ns: f64::NAN,
+                                phases: 0,
+                            });
+                            rejected.push(q.id);
+                        }
+                    }
+                }
+            }
+            // Drain the wait queue into freed slots.
+            while in_flight < cap {
+                match waiting.pop_front() {
+                    Some(qi) => start_query!(qi),
+                    None => break,
+                }
+            }
+            peak = peak.max(active.len());
+
+            if active.is_empty() {
+                match order.get(next_arrival) {
+                    Some(&qi) => {
+                        // Idle gap until the next arrival.
+                        t = queries[qi].arrival_ns;
+                        continue;
+                    }
+                    None => break,
+                }
+            }
+
+            if rates_dirty {
+                demand_scratch.copy_from_slice(&total_demand);
+                max_min_rates(&mut active, &mut demand_scratch, &mut residual_scratch);
+                rates_dirty = false;
+            }
+
+            // Earliest phase completion under current rates.
+            let mut t_done = f64::INFINITY;
+            for ap in &active {
+                let dt = ap.remaining * ap.solo_ns / ap.rate;
+                t_done = t_done.min(t + dt);
+            }
+            // Next arrival, if sooner.
+            let t_arrive = order
+                .get(next_arrival)
+                .map(|&qi| queries[qi].arrival_ns)
+                .unwrap_or(f64::INFINITY);
+            let t_next = t_done.min(t_arrive).max(t);
+            let dt = t_next - t;
+
+            // Progress everything to t_next.
+            for ap in &mut active {
+                ap.remaining -= dt * ap.rate / ap.solo_ns;
+            }
+            t = t_next;
+
+            // Retire completed phases; advance or finish their queries.
+            // The epsilon is RELATIVE to the clock: at large t, a phase
+            // whose residual time is below f64 resolution of t can never
+            // advance the clock (t + dt == t) and must be retired now or
+            // the loop spins forever.
+            let eps_ns = 1e-9f64.max(t * 1e-12);
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].remaining * active[i].solo_ns / active[i].rate <= eps_ns {
+                    let ap = active.swap_remove(i);
+                    for &(j, u) in &ap.util {
+                        total_demand[j as usize] -= u;
+                    }
+                    let q = &queries[ap.qi];
+                    match self.enter_phase(ap.qi, ap.phase_idx + 1, q, &mut counters) {
+                        Some(next) => {
+                            for &(j, u) in &next.util {
+                                total_demand[j as usize] += u;
+                            }
+                            active.push(next);
+                        }
+                        None => {
+                            timings[ap.qi].as_mut().unwrap().finish_ns = t;
+                            in_flight -= 1;
+                        }
+                    }
+                    rates_dirty = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if t_arrive <= t_done {
+                rates_dirty = true;
+            }
+        }
+
+        counters.elapsed_ns = t;
+        FlowReport {
+            timings: timings.into_iter().map(|x| x.expect("query never admitted")).collect(),
+            makespan_ns: t,
+            counters,
+            peak_concurrency: peak,
+            rejected,
+        }
+    }
+
+    /// Run the same queries strictly one after the other (the paper's
+    /// "sequential" arm). Exact under the fluid model: a lone query always
+    /// runs at rate 1.0, so this is a direct sum of solo times.
+    pub fn run_sequential(&self, queries: &[QuerySpec]) -> FlowReport {
+        let nodes = self.m.nodes();
+        let mut counters = Counters::new(nodes);
+        let mut t = 0.0f64;
+        let mut timings = Vec::with_capacity(queries.len());
+        for q in queries {
+            t = t.max(q.arrival_ns);
+            let start = t;
+            for p in &q.phases {
+                charge_counters(&mut counters, p);
+                t += p.solo_ns(&self.m);
+            }
+            timings.push(QueryTiming {
+                id: q.id,
+                label: q.label,
+                arrival_ns: q.arrival_ns,
+                start_ns: start,
+                finish_ns: t,
+                phases: q.phases.len(),
+            });
+        }
+        counters.elapsed_ns = t;
+        FlowReport {
+            timings,
+            makespan_ns: t,
+            counters,
+            peak_concurrency: usize::from(!queries.is_empty()),
+            rejected: Vec::new(),
+        }
+    }
+
+    /// Build the allocator state for phase `phase_idx` of query `qi`,
+    /// charging its demand to the counters. Skips zero-solo phases.
+    /// Returns None when the query has no further phases.
+    fn enter_phase(
+        &self,
+        qi: usize,
+        mut phase_idx: usize,
+        q: &QuerySpec,
+        counters: &mut Counters,
+    ) -> Option<ActivePhase> {
+        while phase_idx < q.phases.len() {
+            let p = &q.phases[phase_idx];
+            charge_counters(counters, p);
+            let solo = p.solo_ns(&self.m);
+            if solo > 0.0 {
+                let mut util = p.flow_resources(&self.m, solo);
+                util.retain(|&(_, u)| u > UTIL_EPS);
+                return Some(ActivePhase {
+                    qi,
+                    phase_idx,
+                    solo_ns: solo,
+                    remaining: 1.0,
+                    util,
+                    rate: 1.0,
+                });
+            }
+            phase_idx += 1;
+        }
+        None
+    }
+}
+
+fn charge_counters(c: &mut Counters, p: &PhaseDemand) {
+    for n in 0..p.nodes() {
+        c.channel_ops[n] += p.channel_ops[n];
+        c.stream_bytes[n] += p.stream_bytes[n];
+        c.instructions[n] += p.instructions[n];
+        c.fabric_bytes[n] += p.fabric_bytes[n];
+        c.migrations[n] += p.migrations[n];
+        c.msp_ops[n] += p.msp_ops[n];
+    }
+}
+
+/// Progressive-filling max-min fair rate allocation.
+///
+/// Every unfrozen phase's rate grows uniformly until some resource would
+/// exceed capacity (1.0 of each node-resource); the phases using that
+/// bottleneck are frozen at the current level and filling continues.
+/// Rates are capped at 1.0 — a phase can never beat its solo time.
+///
+/// §Perf: `demand` arrives pre-aggregated (the run loop maintains it
+/// incrementally as phases enter and leave) and is *decremented* as phases
+/// freeze, so each phase's util vector is scanned at most once per solve;
+/// the scratch buffers are caller-owned so the solve allocates only the
+/// small `frozen` bitmap.
+fn max_min_rates(active: &mut [ActivePhase], demand: &mut [f64], residual: &mut [f64]) {
+    if active.is_empty() {
+        return;
+    }
+    let n_res = demand.len();
+    residual.iter_mut().for_each(|r| *r = 1.0);
+    let mut frozen = vec![false; active.len()];
+    let mut unfrozen = active.len();
+
+    while unfrozen > 0 {
+        // Uniform level at which the first resource saturates.
+        let mut level = f64::INFINITY;
+        let mut bottleneck = usize::MAX;
+        for j in 0..n_res {
+            if demand[j] > UTIL_EPS {
+                let l = residual[j].max(0.0) / demand[j];
+                if l < level {
+                    level = l;
+                    bottleneck = j;
+                }
+            }
+        }
+        if level >= 1.0 || bottleneck == usize::MAX {
+            // Nothing binds below the solo-speed cap: everyone left runs
+            // at full rate.
+            for (i, ap) in active.iter_mut().enumerate() {
+                if !frozen[i] {
+                    ap.rate = 1.0;
+                }
+            }
+            return;
+        }
+        // Freeze every unfrozen phase that touches the bottleneck; retire
+        // its demand and charge its residual consumption.
+        let mut froze_any = false;
+        for (i, ap) in active.iter_mut().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            if ap.util.iter().any(|&(j, _)| j as usize == bottleneck) {
+                ap.rate = level.max(1e-9);
+                frozen[i] = true;
+                unfrozen -= 1;
+                froze_any = true;
+                for &(j, u) in &ap.util {
+                    residual[j as usize] -= ap.rate * u;
+                    demand[j as usize] -= u;
+                }
+            }
+        }
+        debug_assert!(froze_any, "bottleneck had no users");
+        if !froze_any {
+            // Defensive: avoid an infinite loop on numerical corner cases.
+            for (i, ap) in active.iter_mut().enumerate() {
+                if !frozen[i] {
+                    ap.rate = level.max(1e-9);
+                }
+            }
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    /// A latency-bound phase lasting ~`total_ns` solo while consuming only
+    /// `frac` of every node's channel capacity — the structural shape of a
+    /// single Pathfinder query (the paper's concurrency headroom).
+    fn uniform_phase(m: &Machine, frac: f64, total_ns: f64) -> PhaseDemand {
+        let nodes = m.nodes();
+        let cpn = m.cfg.channels_per_node;
+        let mut p = PhaseDemand::zero(nodes, cpn);
+        let mut total_ops = 0.0;
+        for n in 0..nodes {
+            let ops = m.channel_op_rate(n) * frac * total_ns * 1e-9;
+            p.channel_ops[n] = ops;
+            p.max_channel_ops[n] = ops / cpn as f64;
+            for c in 0..cpn {
+                p.per_channel_ops[n * cpn + c] = ops / cpn as f64;
+            }
+            total_ops += ops;
+        }
+        // Pick P so the parallelism floor (rounds x local latency) lands at
+        // total_ns: the phase is latency-bound, not capacity-bound.
+        p.parallelism = total_ops * m.cfg.local_access_ns / total_ns;
+        p
+    }
+
+    fn query(m: &Machine, id: usize, frac: f64, total_ns: f64) -> QuerySpec {
+        QuerySpec {
+            id,
+            label: "test",
+            phases: vec![uniform_phase(m, frac, total_ns)],
+            arrival_ns: 0.0,
+        }
+    }
+
+    #[test]
+    fn single_query_runs_at_solo_speed() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let q = query(&m, 0, 0.4, 1e6);
+        let solo = q.solo_ns(&m);
+        // The helper really is latency-bound: solo ~= total_ns + sync.
+        assert!((solo - (1e6 + m.cfg.level_sync_ns)).abs() < 2.0);
+        let rep = sim.run(std::slice::from_ref(&q));
+        assert!((rep.makespan_ns - solo).abs() / solo < 1e-9);
+        assert_eq!(rep.peak_concurrency, 1);
+    }
+
+    #[test]
+    fn sequential_is_sum_of_solos() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.3, 1e6)).collect();
+        let solo: f64 = qs.iter().map(|q| q.solo_ns(&m)).sum();
+        let rep = sim.run_sequential(&qs);
+        assert!((rep.makespan_ns - solo).abs() / solo < 1e-9);
+    }
+
+    #[test]
+    fn low_utilization_queries_overlap_fully() {
+        // Two queries each using 30% of the channels: both should run at
+        // solo speed concurrently (makespan == one solo time) because
+        // their aggregate demand stays under every capacity.
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..2).map(|i| query(&m, i, 0.3, 1e6)).collect();
+        let solo = qs[0].solo_ns(&m);
+        let rep = sim.run(&qs);
+        assert!((rep.makespan_ns - solo).abs() / solo < 1e-6, "{}", rep.makespan_ns);
+    }
+
+    #[test]
+    fn saturation_shares_fairly() {
+        // Four queries each utilizing ~50% of the channels solo: the
+        // channels saturate, so the makespan is total channel work over
+        // machine capacity (= 4 x 0.5 x total_ns of drain).
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.5, 1e6)).collect();
+        let rep = sim.run(&qs);
+        let expect = 4.0 * 0.5 * 1e6;
+        assert!(
+            (rep.makespan_ns - expect).abs() / expect < 0.05,
+            "makespan {} expect {}",
+            rep.makespan_ns,
+            expect
+        );
+        // And it beats running them back to back.
+        let seq = sim.run_sequential(&qs).makespan_ns;
+        assert!(rep.makespan_ns < 0.55 * seq);
+    }
+
+    #[test]
+    fn concurrent_never_slower_than_sequential() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        for frac in [0.1, 0.5, 0.9] {
+            let qs: Vec<_> = (0..8).map(|i| query(&m, i, frac, 1e6)).collect();
+            let conc = sim.run(&qs).makespan_ns;
+            let seq = sim.run_sequential(&qs).makespan_ns;
+            assert!(conc <= seq * (1.0 + 1e-9), "frac {frac}: conc {conc} seq {seq}");
+        }
+    }
+
+    #[test]
+    fn concurrent_not_faster_than_capacity_bound() {
+        // Makespan can never beat total-channel-work / machine-capacity.
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..16).map(|i| query(&m, i, 0.7, 1e6)).collect();
+        let rep = sim.run(&qs);
+        let total_ops: f64 = qs
+            .iter()
+            .flat_map(|q| &q.phases)
+            .map(|p| p.total_channel_ops())
+            .sum();
+        let bound = total_ops / m.total_channel_op_rate() * 1e9;
+        assert!(rep.makespan_ns >= bound * (1.0 - 1e-9));
+    }
+
+    #[test]
+    fn arrivals_respected() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut q0 = query(&m, 0, 0.2, 1e6);
+        let mut q1 = query(&m, 1, 0.2, 1e6);
+        q0.arrival_ns = 0.0;
+        q1.arrival_ns = 5e8; // arrives long after q0 finished
+        let solo = q0.solo_ns(&m);
+        let rep = sim.run(&[q0, q1]);
+        assert!((rep.timings[0].finish_ns - solo).abs() / solo < 1e-9);
+        assert!((rep.timings[1].start_ns - 5e8).abs() < 1.0);
+        assert!((rep.makespan_ns - (5e8 + solo)).abs() / solo < 1e-6);
+        assert_eq!(rep.peak_concurrency, 1);
+    }
+
+    #[test]
+    fn counters_accumulate_all_phases() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..3).map(|i| query(&m, i, 0.4, 1e6)).collect();
+        let rep = sim.run(&qs);
+        let expect: f64 = qs
+            .iter()
+            .flat_map(|q| &q.phases)
+            .map(|p| p.total_channel_ops())
+            .sum();
+        assert!((rep.counters.totals().channel_ops - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_query_finishes_at_arrival() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let q = QuerySpec { id: 7, label: "nop", phases: vec![], arrival_ns: 3.0 };
+        let rep = sim.run(&[q]);
+        assert_eq!(rep.timings[0].finish_ns, 3.0);
+        assert_eq!(rep.timings[0].latency_ns(), 0.0);
+    }
+
+    #[test]
+    fn admission_reject_over_cap() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.1, 1e6)).collect();
+        let adm = Admission { max_in_flight: Some(2), on_full: OnFull::Reject };
+        let rep = sim.run_admitted(&qs, adm);
+        assert_eq!(rep.rejected, vec![2, 3]);
+        assert!(rep.timings[2].finish_ns.is_nan());
+        assert!(rep.timings[0].finish_ns.is_finite());
+        assert!(rep.peak_concurrency <= 2);
+    }
+
+    #[test]
+    fn admission_queue_serializes_excess() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.1, 1e6)).collect();
+        let solo = qs[0].solo_ns(&m);
+        let adm = Admission { max_in_flight: Some(2), on_full: OnFull::Queue };
+        let rep = sim.run_admitted(&qs, adm);
+        assert!(rep.rejected.is_empty());
+        // Two waves of two fully-overlapping queries.
+        assert!((rep.makespan_ns - 2.0 * solo).abs() / solo < 1e-6);
+        assert_eq!(rep.peak_concurrency, 2);
+        // Queued queries' latency includes the wait.
+        assert!(rep.timings[3].latency_ns() > rep.timings[0].latency_ns() * 1.5);
+    }
+
+    #[test]
+    fn admission_cap_one_equals_sequential() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..3).map(|i| query(&m, i, 0.5, 1e6)).collect();
+        let adm = Admission { max_in_flight: Some(1), on_full: OnFull::Queue };
+        let capped = sim.run_admitted(&qs, adm).makespan_ns;
+        let seq = sim.run_sequential(&qs).makespan_ns;
+        assert!((capped - seq).abs() / seq < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_rates_water_fill() {
+        // One channel-hungry query + one instruction-only query: the
+        // instruction query should be unaffected by channel saturation.
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let hungry: Vec<_> = (0..4).map(|i| query(&m, i, 0.5, 1e6)).collect();
+        let mut instr_only = PhaseDemand::zero(8, 8);
+        for n in 0..8 {
+            instr_only.instructions[n] = m.issue_rate(n) * 0.1 * 1e-3; // 0.1 util for 1e6 ns
+        }
+        instr_only.parallelism = 1e12;
+        let iq = QuerySpec { id: 99, label: "instr", phases: vec![instr_only], arrival_ns: 0.0 };
+        let solo_iq = iq.solo_ns(&m);
+        let mut all = hungry;
+        all.push(iq);
+        let rep = sim.run(&all);
+        let iq_t = rep.timings[4].latency_ns();
+        assert!((iq_t - solo_iq).abs() / solo_iq < 1e-6, "{iq_t} vs {solo_iq}");
+    }
+}

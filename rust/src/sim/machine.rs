@@ -1,0 +1,178 @@
+//! Resolved machine: per-node derated capacities computed once from a
+//! [`MachineConfig`], plus the data layout the graph uses.
+
+use crate::config::machine::MachineConfig;
+use crate::graph::layout::StripedLayout;
+
+/// A machine instance the simulator engines run against.
+#[derive(Debug, Clone)]
+pub struct Machine {
+    pub cfg: MachineConfig,
+    pub layout: StripedLayout,
+    /// Per-node random-op capacity (ops/s), derated.
+    channel_op_rate: Vec<f64>,
+    /// Per-node streaming capacity (bytes/s), derated.
+    stream_rate: Vec<f64>,
+    /// Per-node instruction issue capacity (instr/s).
+    issue_rate: Vec<f64>,
+    /// Per-node fabric link capacity (bytes/s), derated.
+    fabric_rate: Vec<f64>,
+    /// Mean one-way fabric latency seen from each node (ns).
+    mean_fabric_latency: Vec<f64>,
+}
+
+impl Machine {
+    pub fn new(cfg: MachineConfig) -> Self {
+        cfg.validate().expect("invalid machine config");
+        let nodes = cfg.nodes;
+        let layout = StripedLayout::new(nodes, cfg.channels_per_node);
+        let mut channel_op_rate = Vec::with_capacity(nodes);
+        let mut stream_rate = Vec::with_capacity(nodes);
+        let mut issue_rate = Vec::with_capacity(nodes);
+        let mut fabric_rate = Vec::with_capacity(nodes);
+        let mut mean_fabric_latency = Vec::with_capacity(nodes);
+        for node in 0..nodes {
+            let derate = cfg.node_derate(node);
+            channel_op_rate.push(cfg.node_channel_op_rate() * derate);
+            stream_rate.push(cfg.node_stream_rate() * derate);
+            // Cores are not derated (the §IV-B issues were RAM + network).
+            issue_rate.push(cfg.node_issue_rate());
+            fabric_rate.push(cfg.fabric.node_link_bytes_per_s * derate);
+            let lat = if nodes == 1 {
+                0.0
+            } else {
+                (0..nodes)
+                    .filter(|&other| other != node)
+                    .map(|other| cfg.fabric_latency_ns(node, other))
+                    .sum::<f64>()
+                    / (nodes - 1) as f64
+            };
+            mean_fabric_latency.push(lat);
+        }
+        Machine {
+            cfg,
+            layout,
+            channel_op_rate,
+            stream_rate,
+            issue_rate,
+            fabric_rate,
+            mean_fabric_latency,
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.cfg.nodes
+    }
+
+    /// Derated random-op capacity of one node (ops/s).
+    pub fn channel_op_rate(&self, node: usize) -> f64 {
+        self.channel_op_rate[node]
+    }
+
+    /// Derated service time of one random op at one channel of `node` (ns).
+    pub fn channel_op_ns(&self, node: usize) -> f64 {
+        self.cfg.channel_random_op_ns / self.cfg.node_derate(node)
+    }
+
+    pub fn stream_rate(&self, node: usize) -> f64 {
+        self.stream_rate[node]
+    }
+
+    pub fn issue_rate(&self, node: usize) -> f64 {
+        self.issue_rate[node]
+    }
+
+    pub fn fabric_rate(&self, node: usize) -> f64 {
+        self.fabric_rate[node]
+    }
+
+    /// Mean one-way fabric latency from `node` to a uniformly random other
+    /// node (ns). Used for the latency floor of scattered remote traffic.
+    pub fn mean_fabric_latency_ns(&self, node: usize) -> f64 {
+        self.mean_fabric_latency[node]
+    }
+
+    /// Full cost of one thread migration landing on `to` (ns): fabric
+    /// latency plus the hardware context transfer.
+    pub fn migration_ns(&self, from: usize, to: usize) -> f64 {
+        self.cfg.fabric_latency_ns(from, to) + self.cfg.migration_overhead_ns
+    }
+
+    /// Instruction rate available to a single thread when `active` threads
+    /// share a node (round-robin issue, one instruction per core per cycle).
+    pub fn per_thread_issue_rate(&self, node: usize, active: usize) -> f64 {
+        let cores = self.cfg.cores_per_node as f64;
+        if active == 0 {
+            return self.cfg.clock_hz;
+        }
+        let threads_per_core = (active as f64 / cores).max(1.0);
+        (self.issue_rate[node] / cores / threads_per_core).min(self.cfg.clock_hz)
+    }
+
+    /// Service time of an MSP remote op at `node` (ns): a read-modify-write
+    /// channel cycle (holding the bank `msp_rmw_factor` times as long as a
+    /// plain access) plus MSP overhead, weighted by the write-priority knob.
+    pub fn msp_op_ns(&self, node: usize) -> f64 {
+        (self.channel_op_ns(node) * self.cfg.msp_rmw_factor + self.cfg.msp_op_extra_ns)
+            / self.cfg.msp_write_priority
+    }
+
+    /// Total machine-wide random-op capacity (ops/s).
+    pub fn total_channel_op_rate(&self) -> f64 {
+        self.channel_op_rate.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_machine_uniform() {
+        let m = Machine::new(MachineConfig::pathfinder_8());
+        assert_eq!(m.nodes(), 8);
+        for n in 0..8 {
+            assert_eq!(m.channel_op_rate(n), m.channel_op_rate(0));
+        }
+        // 8 channels / 54ns => ~148 Mops/s/node.
+        let expect = 8.0 * 1e9 / 54.0;
+        assert!((m.channel_op_rate(0) - expect).abs() < 1.0);
+    }
+
+    #[test]
+    fn degraded_nodes_slower() {
+        let m = Machine::new(MachineConfig::pathfinder_32());
+        assert!(m.channel_op_rate(16) < m.channel_op_rate(0));
+        assert!(m.channel_op_ns(16) > m.channel_op_ns(0));
+        assert!(m.fabric_rate(31) < m.fabric_rate(0));
+        // Issue rate is NOT derated.
+        assert_eq!(m.issue_rate(16), m.issue_rate(0));
+    }
+
+    #[test]
+    fn per_thread_issue_round_robin() {
+        let m = Machine::new(MachineConfig::pathfinder_8());
+        // One thread alone on a node runs at the core clock.
+        assert_eq!(m.per_thread_issue_rate(0, 1), 225e6);
+        // At full occupancy (1536 threads, 24 cores) each thread gets
+        // clock / 64.
+        let r = m.per_thread_issue_rate(0, 1536);
+        assert!((r - 225e6 / 64.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn fabric_latency_mean_reflects_chassis() {
+        let m8 = Machine::new(MachineConfig::pathfinder_8());
+        let m32 = Machine::new(MachineConfig::pathfinder_32());
+        // 32-node machine reaches across chassis, so mean latency is higher.
+        assert!(m32.mean_fabric_latency_ns(0) > m8.mean_fabric_latency_ns(0));
+    }
+
+    #[test]
+    fn msp_priority_knob() {
+        let mut cfg = MachineConfig::pathfinder_8();
+        let base = Machine::new(cfg.clone()).msp_op_ns(0);
+        cfg.msp_write_priority = 2.0;
+        assert!(Machine::new(cfg).msp_op_ns(0) < base);
+    }
+}

@@ -1,0 +1,41 @@
+//! The Pathfinder simulator substrate.
+//!
+//! Nobody outside GT CRNCH has a Lucata Pathfinder, so the machine itself is
+//! the substrate this reproduction has to build (DESIGN.md
+//! §Hardware-Adaptation). The model captures the architectural mechanisms
+//! the paper credits for its result (§II, §VI):
+//!
+//! * **many narrow memory channels** — per-node random-op service capacity
+//!   is the scarce resource; a single level-synchronous query cannot keep
+//!   all channels busy, concurrent queries can;
+//! * **migratory threads** — remote *reads* move the thread to the data
+//!   (fabric latency + context transfer), remote *writes* do not migrate;
+//! * **memory-side processors** — `remote_min`/`remote_add` execute as
+//!   read-modify-write cycles at the destination channel without occupying
+//!   a core;
+//! * **cache-less multithreaded cores** — aggregate instruction issue is
+//!   `cores x clock`, round-robin, one instruction per core-cycle;
+//! * **memory views** — view-0 node-local replicas (the `changed` flag of
+//!   Figure 2), view-1 global addresses, view-2 striped arrays.
+//!
+//! Two engines share the machine description:
+//!
+//! * [`flow`] — a fluid/flow-level engine: algorithms run *functionally* on
+//!   the real graph and emit per-phase [`demand::PhaseDemand`] resource
+//!   vectors; a proportional-share allocator advances simulated time. This
+//!   is what paper-scale experiments (750 concurrent queries) use.
+//! * [`event`] — a discrete-event engine with explicit threads, channel
+//!   FIFOs, migrations and MSP queues, used at small scale to validate the
+//!   flow model's assumptions (see rust/tests/sim_tests.rs).
+
+pub mod counters;
+pub mod demand;
+pub mod event;
+pub mod flow;
+pub mod machine;
+pub mod views;
+
+pub use counters::Counters;
+pub use demand::PhaseDemand;
+pub use flow::{FlowSim, QueryTiming};
+pub use machine::Machine;

@@ -1,0 +1,147 @@
+//! Memory-view address arithmetic (paper §II).
+//!
+//! "Hardware supports multiple *views* of memory via fields in the
+//! addresses beyond the 48 bits used for global physical addresses."
+//!
+//! * view 0 — node-local replica: the same address names a different
+//!   physical location on every node ("constants" like the vertex count,
+//!   and the per-node `changed` flag in Figure 2);
+//! * view 1 — plain global physical address;
+//! * view 2 — 64-bit elements striped round-robin across nodes
+//!   ("for an address p on node n, p+8 is on node n+1").
+//!
+//! The connected-components algorithm uses exactly the trick the paper
+//! describes: keep `changed` in view-0, then *cast the pointer back to a
+//! view-1 global address* to read each node's copy while migrating across
+//! the machine.
+
+/// Address view selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum View {
+    /// Node-local replicated storage.
+    Local0,
+    /// Global physical address.
+    Global1,
+    /// Striped 64-bit elements.
+    Striped2,
+}
+
+const ADDR_BITS: u32 = 48;
+const ADDR_MASK: u64 = (1 << ADDR_BITS) - 1;
+
+/// A Lucata-style address: view bits above the 48-bit physical offset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Addr(pub u64);
+
+impl Addr {
+    pub fn new(view: View, offset: u64) -> Addr {
+        assert!(offset <= ADDR_MASK, "offset exceeds 48 bits");
+        let v = match view {
+            View::Local0 => 0u64,
+            View::Global1 => 1,
+            View::Striped2 => 2,
+        };
+        Addr((v << ADDR_BITS) | offset)
+    }
+
+    pub fn view(self) -> View {
+        match self.0 >> ADDR_BITS {
+            0 => View::Local0,
+            1 => View::Global1,
+            2 => View::Striped2,
+            v => panic!("unknown view {v}"),
+        }
+    }
+
+    pub fn offset(self) -> u64 {
+        self.0 & ADDR_MASK
+    }
+
+    /// Home node of this address on a `nodes`-node machine.
+    ///
+    /// * view 0: every node (returns None — it names the local copy);
+    /// * view 1: high bits of the physical address select the node
+    ///   (contiguous per-node ranges);
+    /// * view 2: element index modulo nodes (8-byte stripe).
+    pub fn node(self, nodes: usize, mem_per_node: u64) -> Option<usize> {
+        match self.view() {
+            View::Local0 => None,
+            View::Global1 => Some(((self.offset() / mem_per_node) as usize).min(nodes - 1)),
+            View::Striped2 => Some(((self.offset() / 8) % nodes as u64) as usize),
+        }
+    }
+
+    /// Convert a view-0 local address to the view-1 global address of the
+    /// replica on `node` — the Figure-2 reduction trick.
+    pub fn local_to_global(self, node: usize, mem_per_node: u64) -> Addr {
+        assert_eq!(self.view(), View::Local0);
+        Addr::new(View::Global1, node as u64 * mem_per_node + self.offset())
+    }
+
+    /// Element index of a view-2 striped address.
+    pub fn striped_index(self) -> u64 {
+        assert_eq!(self.view(), View::Striped2);
+        self.offset() / 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MEM: u64 = 64 << 30;
+
+    #[test]
+    fn view_round_trip() {
+        for view in [View::Local0, View::Global1, View::Striped2] {
+            let a = Addr::new(view, 0x1234);
+            assert_eq!(a.view(), view);
+            assert_eq!(a.offset(), 0x1234);
+        }
+    }
+
+    #[test]
+    fn striped_adjacent_elements_hop_nodes() {
+        // "For an address p on node n, p+8 is on node n+1."
+        let nodes = 8;
+        let p = Addr::new(View::Striped2, 0x100 * 8);
+        let p8 = Addr::new(View::Striped2, 0x101 * 8);
+        let n0 = p.node(nodes, MEM).unwrap();
+        let n1 = p8.node(nodes, MEM).unwrap();
+        assert_eq!((n0 + 1) % nodes, n1);
+    }
+
+    #[test]
+    fn global_addresses_are_contiguous_per_node() {
+        let a = Addr::new(View::Global1, 0);
+        let b = Addr::new(View::Global1, MEM - 8);
+        let c = Addr::new(View::Global1, MEM);
+        assert_eq!(a.node(8, MEM), Some(0));
+        assert_eq!(b.node(8, MEM), Some(0));
+        assert_eq!(c.node(8, MEM), Some(1));
+    }
+
+    #[test]
+    fn local_view_has_no_single_home() {
+        assert_eq!(Addr::new(View::Local0, 64).node(8, MEM), None);
+    }
+
+    #[test]
+    fn figure2_reduction_cast() {
+        // The changed-flag reduction: local address cast to each node's
+        // global replica address.
+        let changed = Addr::new(View::Local0, 0x40);
+        for node in 0..8 {
+            let g = changed.local_to_global(node, MEM);
+            assert_eq!(g.view(), View::Global1);
+            assert_eq!(g.node(8, MEM), Some(node));
+            assert_eq!(g.offset() % MEM, 0x40);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds 48 bits")]
+    fn offset_overflow_rejected() {
+        Addr::new(View::Global1, 1 << 48);
+    }
+}

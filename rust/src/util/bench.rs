@@ -1,0 +1,167 @@
+//! Micro-benchmark harness (offline environment: no criterion).
+//!
+//! `cargo bench` targets in rust/benches use this: warmup, repeated timed
+//! runs, and a median/mean/stddev report. Deliberately minimal — the
+//! statistics are what the perf pass in EXPERIMENTS.md §Perf records.
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per iteration
+}
+
+impl BenchResult {
+    pub fn median_s(&self) -> f64 {
+        let mut xs = self.samples.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        stats::quantile_sorted(&xs, 0.5)
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        stats::mean(&self.samples)
+    }
+
+    pub fn stddev_s(&self) -> f64 {
+        stats::stddev(&self.samples)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  stddev {:>10}  (n={})",
+            self.name,
+            fmt_duration(self.median_s()),
+            fmt_duration(self.mean_s()),
+            fmt_duration(self.stddev_s()),
+            self.samples.len()
+        )
+    }
+}
+
+/// Format seconds adaptively (ns/us/ms/s).
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Benchmark runner with warmup + fixed sample count (adaptive iteration
+/// batching so fast functions still get meaningful timings).
+pub struct Bench {
+    warmup: Duration,
+    samples: usize,
+    min_sample_time: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            samples: 12,
+            min_sample_time: Duration::from_millis(20),
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick mode for CI: fewer samples, shorter warmup. Activated by the
+    /// PFQ_BENCH_QUICK env var in the bench binaries.
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(20),
+            samples: 4,
+            min_sample_time: Duration::from_millis(2),
+            results: Vec::new(),
+        }
+    }
+
+    pub fn from_env() -> Self {
+        if std::env::var("PFQ_BENCH_QUICK").is_ok() {
+            Self::quick()
+        } else {
+            Self::new()
+        }
+    }
+
+    /// Time `f`, which should return something observable to keep the
+    /// optimizer honest (the return value is black-boxed).
+    pub fn run<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup + calibrate the per-sample iteration count.
+        let warm_start = Instant::now();
+        let mut iters_per_sample = 1usize;
+        let mut one = Duration::ZERO;
+        while warm_start.elapsed() < self.warmup {
+            let t = Instant::now();
+            black_box(f());
+            one = t.elapsed();
+            if one > self.warmup {
+                break;
+            }
+        }
+        if one < self.min_sample_time && one > Duration::ZERO {
+            iters_per_sample = (self.min_sample_time.as_secs_f64() / one.as_secs_f64()).ceil() as usize;
+            iters_per_sample = iters_per_sample.clamp(1, 1_000_000);
+        }
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        let result = BenchResult { name: name.to_string(), samples };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box wrapper, kept behind one name so
+/// bench code reads uniformly).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let mut b = Bench::quick();
+        let r = b.run("noop-ish", || 1 + 1).clone();
+        assert_eq!(r.name, "noop-ish");
+        assert_eq!(r.samples.len(), 4);
+        assert!(r.median_s() >= 0.0);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert!(fmt_duration(3.2e-9).ends_with("ns"));
+        assert!(fmt_duration(3.2e-6).ends_with("us"));
+        assert!(fmt_duration(3.2e-3).ends_with("ms"));
+        assert!(fmt_duration(3.2).ends_with("s"));
+    }
+}

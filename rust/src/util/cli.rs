@@ -1,0 +1,154 @@
+//! Tiny CLI argument parser (offline environment: no clap).
+//!
+//! Supports the subcommand + `--flag value` / `--flag` style the
+//! `pathfinder` binary and the examples use.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a positional subcommand list plus --key options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(name.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// String option.
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn opt_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed numeric option.
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(Some(v)),
+                Err(e) => bail!("bad value for --{name}: {e}"),
+            },
+        }
+    }
+
+    /// Typed numeric option with default.
+    pub fn opt_parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt_parse(name)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list option, e.g. `--counts 1,8,64`.
+    pub fn opt_list<T: std::str::FromStr>(&self, name: &str) -> Result<Option<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt(name) {
+            None => Ok(None),
+            Some(s) => {
+                let mut out = Vec::new();
+                for piece in s.split(',') {
+                    match piece.trim().parse() {
+                        Ok(v) => out.push(v),
+                        Err(e) => bail!("bad element '{piece}' in --{name}: {e}"),
+                    }
+                }
+                Ok(Some(out))
+            }
+        }
+    }
+
+    /// Boolean flag presence (`--verbose`).
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("experiment fig3 --scale 16 --machine pathfinder-8 --verbose");
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.positional[1], "fig3");
+        assert_eq!(a.opt("scale"), Some("16"));
+        assert_eq!(a.opt("machine"), Some("pathfinder-8"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --scale=14 --counts=1,2,3");
+        assert_eq!(a.opt_parse_or::<u32>("scale", 0).unwrap(), 14);
+        assert_eq!(a.opt_list::<usize>("counts").unwrap().unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse("x --scale banana");
+        assert!(a.opt_parse::<u32>("scale").is_err());
+    }
+
+    #[test]
+    fn missing_option_defaults() {
+        let a = parse("x");
+        assert_eq!(a.opt_or("mode", "both"), "both");
+        assert_eq!(a.opt_parse_or("n", 7u32).unwrap(), 7);
+        assert!(a.opt_list::<u32>("counts").unwrap().is_none());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --dry-run --scale 10");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.opt("scale"), Some("10"));
+    }
+}

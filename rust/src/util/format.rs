@@ -1,0 +1,146 @@
+//! Plain-text table rendering for the experiment harness — every figure and
+//! table in the paper is regenerated as an aligned text table plus a CSV.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        TextTable {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render with right-aligned numeric-ish columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as CSV (no quoting needed for our numeric content).
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV beside the printed output (results/<name>.csv).
+    pub fn write_csv(&self, dir: &std::path::Path, name: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.to_csv())?;
+        Ok(path)
+    }
+}
+
+/// Format seconds with 2–3 significant digits like the paper's tables.
+pub fn fmt_s(seconds: f64) -> String {
+    if seconds >= 100.0 {
+        format!("{seconds:.1}")
+    } else if seconds >= 1.0 {
+        format!("{seconds:.2}")
+    } else {
+        format!("{seconds:.3}")
+    }
+}
+
+/// Format a ratio/speed-up like the paper (e.g. "19.2x").
+pub fn fmt_x(ratio: f64) -> String {
+    if ratio >= 10.0 {
+        format!("{ratio:.1}x")
+    } else {
+        format!("{ratio:.2}x")
+    }
+}
+
+/// Format a percentage improvement.
+pub fn fmt_pct(p: f64) -> String {
+    format!("{p:.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = TextTable::new(vec!["a", "value"]);
+        t.row(vec!["1", "5"]).row(vec!["22", "1707"]);
+        let s = t.render();
+        assert!(s.contains(" a  value"));
+        assert!(s.contains("22   1707"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        let mut t = TextTable::new(vec!["a", "b"]);
+        t.row(vec!["only-one"]);
+    }
+
+    #[test]
+    fn csv_round_trip_shape() {
+        let mut t = TextTable::new(vec!["x", "y"]);
+        t.row(vec!["1", "2"]);
+        assert_eq!(t.to_csv(), "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_s(226.30442), "226.3");
+        assert_eq!(fmt_s(3.4712), "3.47");
+        assert_eq!(fmt_s(0.59), "0.590");
+        assert_eq!(fmt_x(19.17), "19.2x");
+        assert_eq!(fmt_x(5.07), "5.07x");
+        assert_eq!(fmt_pct(70.07), "70.1%");
+    }
+}

@@ -1,0 +1,28 @@
+//! Small shared utilities: deterministic RNG, summary statistics, formatting.
+
+pub mod bench;
+pub mod cli;
+pub mod format;
+pub mod json;
+pub mod parallel;
+pub mod rng;
+pub mod stats;
+
+/// Simulated time in integer nanoseconds. All simulator clocks use this; it
+/// is never derived from the wall clock, keeping every experiment
+/// reproducible bit-for-bit.
+pub type SimNs = u64;
+
+/// Convert simulated nanoseconds to seconds for reporting.
+pub fn ns_to_s(ns: SimNs) -> f64 {
+    ns as f64 * 1e-9
+}
+
+/// Convert seconds to simulated nanoseconds (saturating at u64::MAX).
+pub fn s_to_ns(s: f64) -> SimNs {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * 1e9).min(u64::MAX as f64) as SimNs
+    }
+}

@@ -1,0 +1,136 @@
+//! Scoped data-parallel helpers over std threads (no rayon offline).
+//!
+//! The heavy host-side work — generating R-MAT edges, tracing hundreds of
+//! BFS queries to build demand profiles — is embarrassingly parallel over
+//! chunks, so a static chunk split over `available_parallelism` threads is
+//! all we need.
+
+/// Number of worker threads to use.
+pub fn workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Parallel map over items: applies `f` to every element, preserving order.
+/// `f` must be `Sync` (called from many threads).
+pub fn par_map<T, U, F>(items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let nw = workers().min(n);
+    if nw <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = n.div_ceil(nw);
+    let mut out: Vec<Option<U>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    let out_chunks: Vec<&mut [Option<U>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|scope| {
+        for (ci, out_chunk) in out_chunks.into_iter().enumerate() {
+            let f = &f;
+            let in_chunk = &items[ci * chunk..(ci * chunk + out_chunk.len())];
+            scope.spawn(move || {
+                for (slot, item) in out_chunk.iter_mut().zip(in_chunk) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|x| x.expect("worker panicked")).collect()
+}
+
+/// Parallel map over an index range [0, n).
+pub fn par_map_range<U, F>(n: usize, f: F) -> Vec<U>
+where
+    U: Send,
+    F: Fn(usize) -> U + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    par_map(&idx, |&i| f(i))
+}
+
+/// Parallel unstable sort: split into per-thread sorted runs, then k-way
+/// merge. Falls back to std sort for small inputs.
+pub fn par_sort_unstable<T: Ord + Send + Copy>(xs: &mut Vec<T>) {
+    const SERIAL_CUTOFF: usize = 1 << 16;
+    if xs.len() < SERIAL_CUTOFF || workers() <= 1 {
+        xs.sort_unstable();
+        return;
+    }
+    let nw = workers().min(8);
+    let chunk = xs.len().div_ceil(nw);
+    std::thread::scope(|scope| {
+        for part in xs.chunks_mut(chunk) {
+            scope.spawn(|| part.sort_unstable());
+        }
+    });
+    // K-way merge of the sorted runs.
+    let runs: Vec<&[T]> = xs.chunks(chunk).collect();
+    let mut cursors = vec![0usize; runs.len()];
+    let mut merged = Vec::with_capacity(xs.len());
+    loop {
+        let mut best: Option<(usize, T)> = None;
+        for (ri, run) in runs.iter().enumerate() {
+            if cursors[ri] < run.len() {
+                let v = run[cursors[ri]];
+                if best.map_or(true, |(_, bv)| v < bv) {
+                    best = Some((ri, v));
+                }
+            }
+        }
+        match best {
+            Some((ri, v)) => {
+                merged.push(v);
+                cursors[ri] += 1;
+            }
+            None => break,
+        }
+    }
+    *xs = merged;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<u64> = (0..10_000).collect();
+        let ys = par_map(&xs, |&x| x * 2);
+        assert!(ys.iter().enumerate().all(|(i, &y)| y == 2 * i as u64));
+    }
+
+    #[test]
+    fn par_map_empty() {
+        let xs: Vec<u32> = vec![];
+        assert!(par_map(&xs, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn par_map_range_matches_serial() {
+        let ys = par_map_range(1000, |i| i * i);
+        assert!(ys.iter().enumerate().all(|(i, &y)| y == i * i));
+    }
+
+    #[test]
+    fn par_sort_matches_std() {
+        let mut rng = crate::util::rng::SplitMix64::new(5);
+        let mut xs: Vec<u64> = (0..200_000).map(|_| rng.next_u64() % 1000).collect();
+        let mut want = xs.clone();
+        want.sort_unstable();
+        par_sort_unstable(&mut xs);
+        assert_eq!(xs, want);
+    }
+
+    #[test]
+    fn par_sort_small_input() {
+        let mut xs = vec![3u32, 1, 2];
+        par_sort_unstable(&mut xs);
+        assert_eq!(xs, vec![1, 2, 3]);
+    }
+}

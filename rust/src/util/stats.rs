@@ -1,0 +1,127 @@
+//! Summary statistics: quantiles, means, and the Table-I style five-number
+//! summaries used throughout the evaluation harness.
+
+/// Five-number summary (min / 25% / median / 75% / max), matching the
+/// quantile columns of the paper's Table I.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quantiles {
+    pub q0: f64,
+    pub q25: f64,
+    pub q50: f64,
+    pub q75: f64,
+    pub q100: f64,
+}
+
+impl Quantiles {
+    /// Compute from unsorted samples. Panics on empty input.
+    pub fn from_samples(samples: &[f64]) -> Quantiles {
+        assert!(!samples.is_empty(), "quantiles of empty sample set");
+        let mut xs = samples.to_vec();
+        xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        Quantiles {
+            q0: quantile_sorted(&xs, 0.0),
+            q25: quantile_sorted(&xs, 0.25),
+            q50: quantile_sorted(&xs, 0.50),
+            q75: quantile_sorted(&xs, 0.75),
+            q100: quantile_sorted(&xs, 1.0),
+        }
+    }
+
+    /// Max-min spread, as discussed for Table I ("the min-max spread is
+    /// 2.2 s / 0.61 s").
+    pub fn spread(&self) -> f64 {
+        self.q100 - self.q0
+    }
+}
+
+/// Linear-interpolated quantile of an ascending-sorted slice (type-7, the
+/// R/NumPy default).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Arithmetic mean. Panics on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator); 0 for a single sample.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Relative improvement of `new` over `old` in percent, in the paper's
+/// convention: how much *faster* the new (concurrent) time is relative to
+/// itself — e.g. seq 884 s vs conc 467 s => 89 %.
+pub fn improvement_pct(sequential: f64, concurrent: f64) -> f64 {
+    assert!(concurrent > 0.0);
+    (sequential - concurrent) / concurrent * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_of_known_set() {
+        let q = Quantiles::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(q.q0, 1.0);
+        assert_eq!(q.q25, 2.0);
+        assert_eq!(q.q50, 3.0);
+        assert_eq!(q.q75, 4.0);
+        assert_eq!(q.q100, 5.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let q = Quantiles::from_samples(&[0.0, 1.0]);
+        assert!((q.q50 - 0.5).abs() < 1e-12);
+        assert!((q.q25 - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_single_sample() {
+        let q = Quantiles::from_samples(&[7.5]);
+        assert_eq!(q.q0, 7.5);
+        assert_eq!(q.q100, 7.5);
+        assert_eq!(q.spread(), 0.0);
+    }
+
+    #[test]
+    fn quantiles_unsorted_input() {
+        let q = Quantiles::from_samples(&[5.0, 1.0, 3.0, 2.0, 4.0]);
+        assert_eq!(q.q0, 1.0);
+        assert_eq!(q.q100, 5.0);
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(stddev(&[3.0]), 0.0);
+    }
+
+    #[test]
+    fn improvement_matches_paper_fig3_numbers() {
+        // 32-node, 750 queries: 884 s sequential vs 467 s concurrent => ~89 %.
+        let imp = improvement_pct(884.0, 467.0);
+        assert!((imp - 89.29).abs() < 0.1, "{imp}");
+        // 8-node, 128 queries: 493 s vs 226 s => ~118 % (the ">2x" claim).
+        let imp8 = improvement_pct(493.0, 226.0);
+        assert!(imp8 > 100.0);
+    }
+}

@@ -1,0 +1,153 @@
+//! Algorithm integration tests: functional correctness against oracles on
+//! a spread of graph shapes, plus the demand-accounting contracts the
+//! simulator relies on.
+
+use pathfinder_queries::alg::{self, oracle, Query};
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::csr::Csr;
+use pathfinder_queries::sim::machine::Machine;
+
+fn m8() -> Machine {
+    Machine::new(MachineConfig::pathfinder_8())
+}
+
+fn m32() -> Machine {
+    Machine::new(MachineConfig::pathfinder_32())
+}
+
+fn rmat(scale: u32, seed: u64) -> Csr {
+    let mut cfg = GraphConfig::with_scale(scale);
+    cfg.seed = seed;
+    build_undirected_csr(1 << scale, &pathfinder_queries::graph::rmat::Rmat::new(cfg).edges())
+}
+
+/// Graph shapes that stress different algorithm paths.
+fn zoo() -> Vec<(&'static str, Csr)> {
+    let path: Vec<(u32, u32)> = (0..99u32).map(|i| (i, i + 1)).collect();
+    let star: Vec<(u32, u32)> = (1..=64u32).map(|v| (0, v)).collect();
+    let cycle: Vec<(u32, u32)> = (0..64u32).map(|i| (i, (i + 1) % 64)).collect();
+    let clique: Vec<(u32, u32)> =
+        (0..16u32).flat_map(|i| (i + 1..16).map(move |j| (i, j))).collect();
+    let forest: Vec<(u32, u32)> = vec![(0, 1), (1, 2), (4, 5), (7, 8), (8, 9), (9, 10)];
+    vec![
+        ("path", build_undirected_csr(100, &path)),
+        ("star", build_undirected_csr(65, &star)),
+        ("cycle", build_undirected_csr(64, &cycle)),
+        ("clique", build_undirected_csr(16, &clique)),
+        ("forest", build_undirected_csr(12, &forest)),
+        ("rmat", rmat(11, 77)),
+        ("empty", build_undirected_csr(8, &[])),
+    ]
+}
+
+#[test]
+fn bfs_matches_oracle_on_zoo() {
+    for m in [m8(), m32()] {
+        for (name, g) in zoo() {
+            for src in [0u32, (g.n() as u32 - 1) / 2] {
+                let run = alg::bfs_run(&g, &m, src);
+                oracle::check_bfs(&g, src, &run.levels)
+                    .unwrap_or_else(|e| panic!("{name} src {src}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn cc_matches_oracle_on_zoo() {
+    for m in [m8(), m32()] {
+        for (name, g) in zoo() {
+            let run = alg::cc_run(&g, &m);
+            oracle::check_cc(&g, &run.labels).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn bfs_offsets_do_not_change_results_or_totals() {
+    let g = rmat(11, 3);
+    let m = m8();
+    let base = alg::bfs_run_offset(&g, &m, 7, 0);
+    for offset in [1usize, 3, 9] {
+        let run = alg::bfs_run_offset(&g, &m, 7, offset);
+        assert_eq!(run.levels, base.levels);
+        // Node totals identical; only channel placement rotates.
+        for (a, b) in run.phases.iter().zip(&base.phases) {
+            assert_eq!(a.channel_ops, b.channel_ops);
+            assert_eq!(a.instructions, b.instructions);
+        }
+    }
+}
+
+#[test]
+fn bfs_frontier_accounting() {
+    let g = rmat(11, 5);
+    let m = m8();
+    let run = alg::bfs_run(&g, &m, 3);
+    // Frontier sizes sum to reached vertices; level edges sum to the
+    // degrees of reached vertices.
+    let total_frontier: usize = run.frontier_sizes.iter().sum();
+    assert_eq!(total_frontier, run.reached());
+    let total_edges: usize = run.level_edges.iter().sum();
+    let expect: usize = (0..g.n() as u32)
+        .filter(|&v| run.levels[v as usize] != -1)
+        .map(|v| g.degree(v))
+        .sum();
+    assert_eq!(total_edges, expect);
+    // R-MAT frontier sizes rise then fall (the paper's "size varies
+    // widely" observation needs a bulge).
+    let peak = run.frontier_sizes.iter().copied().max().unwrap();
+    assert!(peak > run.frontier_sizes[0]);
+    assert!(peak > *run.frontier_sizes.last().unwrap());
+}
+
+#[test]
+fn cc_demand_scales_with_iterations() {
+    let g = rmat(10, 9);
+    let m = m8();
+    let run = alg::cc_run(&g, &m);
+    // Every hook sweep charges exactly one MSP op per directed edge;
+    // nothing else charges MSP ops.
+    let msp: f64 = run.phases.iter().flat_map(|p| p.msp_ops.iter()).sum();
+    assert_eq!(msp, (g.m_directed() * run.iterations) as f64);
+    // Total label state converged.
+    assert_eq!(run.components(), oracle::component_count(&oracle::cc_labels(&g)));
+}
+
+#[test]
+fn query_api_round_trips() {
+    let g = rmat(10, 2);
+    let m = m8();
+    for q in [Query::Bfs { src: 5 }, Query::Cc] {
+        let out = q.run(&g, &m);
+        out.validate(&g).unwrap();
+        assert!(!out.phases.is_empty());
+        assert!(out.solo_ns(&m) > 0.0);
+    }
+}
+
+#[test]
+fn cc_on_32_nodes_has_longer_reduction_chain() {
+    // The view-0 changed reduction is serial in node count (Fig. 2).
+    let g = rmat(9, 4);
+    let hops8 = alg::cc_run(&g, &m8()).phases[1].serial_hops;
+    let hops32 = alg::cc_run(&g, &m32()).phases[1].serial_hops;
+    assert_eq!(hops8, 7.0);
+    assert_eq!(hops32, 31.0);
+}
+
+#[test]
+fn unreachable_sources_are_cheap() {
+    // An isolated vertex's BFS is a single tiny level.
+    let g = build_undirected_csr(10, &[(1, 2), (2, 3)]);
+    let m = m8();
+    let run = alg::bfs_run(&g, &m, 0);
+    assert_eq!(run.reached(), 1);
+    assert_eq!(run.phases.len(), 1);
+    let big = alg::bfs_run(&g, &m, 1);
+    let t_small: f64 = run.phases.iter().map(|p| p.solo_ns(&m)).sum();
+    let t_big: f64 = big.phases.iter().map(|p| p.solo_ns(&m)).sum();
+    assert!(t_small < t_big);
+}

@@ -1,0 +1,171 @@
+//! Coordinator integration tests: policies, admission, mixed workloads,
+//! metrics, and the serving facade — the paper's experimental arms driven
+//! through the public API.
+
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
+use pathfinder_queries::coordinator::{
+    planner, Coordinator, GraphService, ImprovementRow, Policy, ServiceConfig,
+};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::csr::Csr;
+use pathfinder_queries::sim::flow::OnFull;
+use pathfinder_queries::sim::machine::Machine;
+
+fn rmat(scale: u32) -> Csr {
+    let cfg = GraphConfig::with_scale(scale);
+    build_undirected_csr(1 << scale, &pathfinder_queries::graph::rmat::Rmat::new(cfg).edges())
+}
+
+#[test]
+fn paper_arms_end_to_end_8_nodes() {
+    let g = rmat(13);
+    let coord = Coordinator::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let queries = planner::bfs_queries(&g, 64, 0xBF5);
+    let conc = coord.run(&queries, Policy::Concurrent).unwrap();
+    let seq = coord.run(&queries, Policy::Sequential).unwrap();
+
+    let row = ImprovementRow::from_reports(&conc, &seq);
+    assert!(row.speedup() > 2.0, "paper: >2x on the single chassis, got {:.2}", row.speedup());
+    assert_eq!(conc.completed(), 64);
+    assert_eq!(seq.completed(), 64);
+    // Concurrency trades per-query latency for makespan: an individual
+    // concurrent query takes longer than its solo service time, but the
+    // batch finishes sooner.
+    let mean_service = seq.makespan_s / 64.0;
+    assert!(conc.mean_latency_s() > mean_service);
+    assert!(conc.makespan_s < seq.makespan_s);
+}
+
+#[test]
+fn deterministic_given_same_inputs() {
+    let g = rmat(11);
+    let coord = Coordinator::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let queries = planner::bfs_queries(&g, 16, 9);
+    let a = coord.run(&queries, Policy::Concurrent).unwrap();
+    let b = coord.run(&queries, Policy::Concurrent).unwrap();
+    assert_eq!(a.makespan_s, b.makespan_s);
+    assert_eq!(
+        a.records.iter().map(|r| r.latency_s).collect::<Vec<_>>(),
+        b.records.iter().map(|r| r.latency_s).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn admission_matches_ledger_capacity() {
+    let g = rmat(10);
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.ctx_mem_per_node_bytes = 64 << 20; // capacity 32
+    let coord = Coordinator::new(&g, Machine::new(cfg));
+    assert_eq!(coord.capacity(), 32);
+
+    let queries = planner::bfs_queries(&g, 40, 1);
+    // Unadmitted: the paper's crash, surfaced as an error.
+    assert!(coord.run(&queries, Policy::Concurrent).is_err());
+    // Queue: everything completes, peak bounded.
+    let q = coord
+        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
+        .unwrap();
+    assert_eq!(q.completed(), 40);
+    assert!(q.peak_concurrency <= 32);
+    // Reject: 8 rejections.
+    let r = coord
+        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Reject })
+        .unwrap();
+    assert_eq!(r.rejections(), 8);
+}
+
+#[test]
+fn queueing_costs_less_than_sequential() {
+    let g = rmat(11);
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.ctx_mem_per_node_bytes = 64 << 20; // capacity 32
+    let coord = Coordinator::new(&g, Machine::new(cfg));
+    let queries = planner::bfs_queries(&g, 64, 2);
+    let queued = coord
+        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
+        .unwrap();
+    let seq = coord.run(&queries, Policy::Sequential).unwrap();
+    assert!(queued.makespan_s < seq.makespan_s);
+}
+
+#[test]
+fn mix_improvement_smaller_than_pure_bfs() {
+    // Table II's improvements sit below Fig. 4's pure-BFS ones.
+    let g = rmat(13);
+    let coord = Coordinator::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+
+    let pure = planner::bfs_queries(&g, 40, 5);
+    let pure_row = ImprovementRow::from_reports(
+        &coord.run(&pure, Policy::Concurrent).unwrap(),
+        &coord.run(&pure, Policy::Sequential).unwrap(),
+    );
+
+    let mixed = planner::mix_queries(&g, MixPoint { bfs: 32, cc: 8 }, 5);
+    let mixed_seq = planner::sequential_mix_order(&mixed);
+    let mixed_row = ImprovementRow::from_reports(
+        &coord.run(&mixed, Policy::Concurrent).unwrap(),
+        &coord.run(&mixed_seq, Policy::Sequential).unwrap(),
+    );
+
+    assert!(mixed_row.improvement_pct() > 30.0);
+    assert!(
+        mixed_row.improvement_pct() < pure_row.improvement_pct(),
+        "mixed {:.0}% should trail pure {:.0}%",
+        mixed_row.improvement_pct(),
+        pure_row.improvement_pct()
+    );
+}
+
+#[test]
+fn metrics_quantiles_match_latencies() {
+    let g = rmat(11);
+    let coord = Coordinator::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let queries = planner::bfs_queries(&g, 12, 3);
+    let rep = coord.run(&queries, Policy::Sequential).unwrap();
+    let q = rep.latency_quantiles(Some("bfs")).unwrap();
+    let lats = rep.latencies(Some("bfs"));
+    assert_eq!(q.q0, lats.iter().copied().fold(f64::INFINITY, f64::min));
+    assert_eq!(q.q100, lats.iter().copied().fold(0.0, f64::max));
+    assert!(rep.throughput_qps() > 0.0);
+}
+
+#[test]
+fn service_latency_grows_with_load() {
+    let g = rmat(12);
+    let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let mut medians = Vec::new();
+    for rate in [100.0, 10_000.0, 100_000.0] {
+        let rep = svc
+            .serve(&ServiceConfig {
+                queries: 120,
+                arrival_rate_per_s: rate,
+                cc_fraction: 0.0,
+                on_full: OnFull::Queue,
+                seed: 4,
+            })
+            .unwrap();
+        medians.push(rep.bfs_latency.unwrap().q50);
+    }
+    assert!(
+        medians[2] > medians[0],
+        "overloaded median {:.4}s should exceed idle {:.4}s",
+        medians[2],
+        medians[0]
+    );
+}
+
+#[test]
+fn arrival_spacing_reduces_contention() {
+    let g = rmat(12);
+    let coord = Coordinator::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let queries = planner::bfs_queries(&g, 32, 8);
+    // Burst: all at once.
+    let burst = coord.run(&queries, Policy::Concurrent).unwrap();
+    // Spread: arrivals far apart (each runs alone).
+    let arrivals: Vec<f64> = (0..32).map(|i| i as f64 * 1e9).collect();
+    let specs = coord.prepare_with_arrivals(&queries, Some(&arrivals));
+    let spread = coord.run_specs(&queries, &specs, Policy::Concurrent).unwrap();
+    assert!(spread.mean_latency_s() < burst.mean_latency_s());
+    assert_eq!(spread.peak_concurrency, 1);
+}

@@ -1,0 +1,100 @@
+//! End-to-end: the full harness at scale 15 — the smallest scale where the calibrated model
+//! reproduces the paper's *shape* — these are the acceptance criteria from
+//! DESIGN.md §5, asserted programmatically. Slower than the unit tests;
+//! everything shares one Harness build.
+
+use pathfinder_queries::bench_harness::{fig3, fig4, scaling, table1, table2, table3, Harness};
+use pathfinder_queries::config::experiment::ExperimentConfig;
+use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
+
+fn harness() -> Harness {
+    let mut cfg = ExperimentConfig::default();
+    cfg.workload.graph = GraphConfig::with_scale(15);
+    cfg.workload.query_counts = vec![1, 8, 32, 128];
+    cfg.workload.mixes = vec![
+        MixPoint { bfs: 136, cc: 34 },  // Table II row 1 (8 nodes, 80/20)
+        MixPoint { bfs: 560, cc: 140 }, // Table II row 3 (32 nodes, 80/20)
+    ];
+    cfg.results_dir = std::env::temp_dir().join("pfq-e2e-results");
+    Harness::new(cfg).unwrap()
+}
+
+#[test]
+fn paper_shape_acceptance() {
+    let h = harness();
+
+    // ---- Fig. 3 / Fig. 4: concurrency wins, in the paper's bands. ----
+    let f4 = fig4::run(&h).unwrap();
+    let (lo8, hi8) = f4.improvement_range("pathfinder-8", 8).unwrap();
+    let (lo32, hi32) = f4.improvement_range("pathfinder-32", 8).unwrap();
+    assert!(lo8 > 100.0, "8-node: >2x always (paper); got {lo8:.0}%");
+    assert!(hi8 < 200.0, "8-node improvement implausibly high: {hi8:.0}%");
+    assert!(
+        lo32 > 70.0 && hi32 < 115.0,
+        "32-node band {lo32:.0}%..{hi32:.0}% vs paper 81..97%"
+    );
+    assert!(hi32 < lo8, "degraded 32-node must trail the single chassis");
+
+    // Times grow ~linearly with query count (paper §IV-B).
+    assert!(f4.fig3.linearity_deviation("pathfinder-8", 8) < 0.25);
+    assert!(f4.fig3.linearity_deviation("pathfinder-32", 8) < 0.25);
+
+    // ---- Table I: per-query averages faster on 32 nodes. ----
+    let t1 = table1::run(&h).unwrap();
+    assert_eq!(t1.rows.len(), 2);
+    let q8 = &t1.rows[0].quantiles;
+    let q32 = &t1.rows[1].quantiles;
+    assert!(q32.q50 < q8.q50, "paper: 0.94s median vs 2.85s");
+    // Paper ratio ~3.0; accept a broad band.
+    let ratio = q8.q50 / q32.q50;
+    assert!((1.5..=6.0).contains(&ratio), "median ratio {ratio:.2}");
+
+    // ---- §IV-B scaling at 128 queries: sub-linear 8->32. ----
+    let sc = scaling::run(&h, 128).unwrap();
+    let (conc_sp, seq_sp) = sc.speedups.unwrap();
+    assert!(
+        (1.8..=4.0).contains(&conc_sp),
+        "conc 8->32 speedup {conc_sp:.2} (paper 2.69)"
+    );
+    assert!(
+        (1.8..=4.2).contains(&seq_sp),
+        "seq 8->32 speedup {seq_sp:.2} (paper 3.24)"
+    );
+    assert!(conc_sp < 4.0 && seq_sp < 4.0, "must be sub-linear in node count");
+    // Context exhaustion at capacity+1 on the 8-node machine.
+    let (attempt, cap, err, _) = sc.exhaustion.unwrap();
+    assert_eq!(attempt, cap + 1);
+    assert!(err.contains("thread-context memory"));
+
+    // ---- Table II: mixes improve, less than pure BFS, 8 > 32. ----
+    let t2 = table2::run(&h).unwrap();
+    assert_eq!(t2.rows.len(), 2);
+    assert_eq!(t2.rows[0].machine, "pathfinder-8");
+    assert_eq!(t2.rows[1].machine, "pathfinder-32");
+    let i8 = t2.rows[0].improvement_pct();
+    let i32_ = t2.rows[1].improvement_pct();
+    assert!(i8 > 50.0 && i8 < 150.0, "8-node mix improvement {i8:.0}% (paper ~70%)");
+    assert!(i32_ > 30.0 && i32_ < 110.0, "32-node mix improvement {i32_:.0}%");
+    assert!(i32_ < i8, "32-node mix must trail 8-node (paper 38-47 vs 70)");
+
+    // ---- Table III: adjusted speed-ups grow with concurrency. ----
+    let t3 = table3::run(&h, None).unwrap();
+    let s1 = t3.speedup("pathfinder-32", 1).unwrap();
+    let s16 = t3.speedup("pathfinder-32", 16).unwrap();
+    let s128 = t3.speedup("pathfinder-32", 128).unwrap();
+    assert!(s1 < 1.2, "single query: RedisGraph competitive (paper 0.83), got {s1:.2}");
+    assert!((4.0..=18.0).contains(&s16), "paper ~9x at 16, got {s16:.1}");
+    assert!((10.0..=35.0).contains(&s128), "paper ~19x at 128, got {s128:.1}");
+    assert!(s1 < s16 && s16 < s128, "speed-up must grow with concurrency");
+}
+
+#[test]
+fn results_csvs_written() {
+    let h = harness();
+    let data = fig3::report(&h).unwrap();
+    assert!(!data.rows.is_empty());
+    let csv = h.cfg.results_dir.join("fig3_bfs_conc_vs_seq.csv");
+    let text = std::fs::read_to_string(&csv).unwrap();
+    assert!(text.lines().count() > data.rows.len());
+    assert!(text.starts_with("machine,queries,"));
+}

@@ -1,0 +1,109 @@
+//! Integration tests for the graph substrate: generation, hygiene,
+//! layout, I/O — the paper's §IV-A dataset recipe end to end.
+
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::graph::builder::{build_undirected_csr, undirected_edge_count};
+use pathfinder_queries::graph::csr::Csr;
+use pathfinder_queries::graph::layout::StripedLayout;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::graph::sample::bfs_sources;
+use pathfinder_queries::graph::{io, validate};
+
+fn rmat(scale: u32, seed: u64) -> Csr {
+    let mut cfg = GraphConfig::with_scale(scale);
+    cfg.seed = seed;
+    build_undirected_csr(1 << scale, &Rmat::new(cfg).edges())
+}
+
+#[test]
+fn generator_is_deterministic_across_runs() {
+    let a = rmat(12, 7);
+    let b = rmat(12, 7);
+    assert_eq!(a, b);
+    let c = rmat(12, 8);
+    assert_ne!(a, c, "different seeds must give different graphs");
+}
+
+#[test]
+fn paper_dataset_hygiene() {
+    // §IV-A: undirected closure, no duplicates, no self loops.
+    let g = rmat(13, 1);
+    validate::check_invariants(&g).expect("invariants");
+    // Both (i,j) and (j,i) present: m_directed is exactly 2x undirected.
+    assert_eq!(g.m_directed(), 2 * undirected_edge_count(&g));
+}
+
+#[test]
+fn rmat_has_graph500_shape() {
+    let g = rmat(14, 3);
+    let r = validate::report(&g);
+    // Skewed degrees: the max degree dwarfs the mean.
+    assert!(r.max_degree as f64 > 20.0 * r.mean_degree, "{r:?}");
+    // A giant component holding most non-isolated vertices.
+    assert!(r.largest_component > g.n() / 2, "{r:?}");
+    // Dedup keeps it below the raw target of n*ef directed pairs.
+    assert!(g.m_directed() < (1 << 14) * 16 * 2);
+    // Isolated vertices exist at this scale (R-MAT leaves gaps).
+    assert!(r.isolated_vertices > 0);
+}
+
+#[test]
+fn edge_factor_scales_edge_count() {
+    let mut cfg = GraphConfig::with_scale(12);
+    cfg.edge_factor = 4;
+    let sparse = build_undirected_csr(1 << 12, &Rmat::new(cfg.clone()).edges());
+    cfg.edge_factor = 16;
+    let dense = build_undirected_csr(1 << 12, &Rmat::new(cfg).edges());
+    assert!(dense.m_directed() > 3 * sparse.m_directed());
+}
+
+#[test]
+fn io_round_trip() {
+    let g = rmat(11, 5);
+    let path = std::env::temp_dir().join("pfq_io_roundtrip.csr");
+    io::save_csr(&g, &path).unwrap();
+    let back = io::load_csr(&path).unwrap();
+    assert_eq!(g, back);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn io_rejects_garbage() {
+    let path = std::env::temp_dir().join("pfq_io_garbage.csr");
+    std::fs::write(&path, b"not a graph").unwrap();
+    assert!(io::load_csr(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sources_unique_nonisolated_reproducible() {
+    let g = rmat(12, 2);
+    let s1 = bfs_sources(&g, 100, 42);
+    let s2 = bfs_sources(&g, 100, 42);
+    assert_eq!(s1, s2);
+    let mut sorted = s1.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), 100, "sources must be unique");
+    assert!(s1.iter().all(|&v| g.degree(v) > 0), "no isolated sources");
+}
+
+#[test]
+fn striped_layout_covers_graph() {
+    // Every vertex maps to a valid (node, channel); both views agree with
+    // the paper's "vertex 0 on node 0, vertex 1 on node 1" striping.
+    let g = rmat(10, 1);
+    let l = StripedLayout::new(8, 8);
+    for v in 0..g.n() as u32 {
+        assert_eq!(l.node_of(v), v as usize % 8);
+        assert!(l.channel_of(v) < 8);
+        assert!(l.edge_block_channel(v) < 8);
+    }
+}
+
+#[test]
+fn degree_sum_equals_directed_edges() {
+    let g = rmat(12, 9);
+    let sum: usize = (0..g.n() as u32).map(|v| g.degree(v)).sum();
+    assert_eq!(sum, g.m_directed());
+}

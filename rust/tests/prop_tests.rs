@@ -1,0 +1,296 @@
+//! Property-based tests (in-tree generator — the offline environment has no
+//! proptest): randomized inputs driven by `SplitMix64`, checking invariants
+//! rather than examples. Each property runs CASES seeded cases, so failures
+//! print the seed for replay.
+
+use pathfinder_queries::alg::{self, oracle};
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::coordinator::{planner, Coordinator, Policy};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::csr::Csr;
+use pathfinder_queries::sim::demand::{DemandBuilder, PhaseDemand};
+use pathfinder_queries::sim::flow::{Admission, FlowSim, OnFull, QuerySpec};
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::rng::SplitMix64;
+use pathfinder_queries::util::stats::Quantiles;
+
+const CASES: u64 = 24;
+
+/// Random sparse graph: n in [2, 200], ~2n random edges.
+fn random_graph(rng: &mut SplitMix64) -> Csr {
+    let n = 2 + rng.gen_range(199) as usize;
+    let m = n * (1 + rng.gen_range(3) as usize);
+    let edges: Vec<(u32, u32)> = (0..m)
+        .map(|_| (rng.gen_range(n as u64) as u32, rng.gen_range(n as u64) as u32))
+        .collect();
+    build_undirected_csr(n, &edges)
+}
+
+fn m8() -> Machine {
+    Machine::new(MachineConfig::pathfinder_8())
+}
+
+#[test]
+fn prop_bfs_levels_are_shortest_paths() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed);
+        let g = random_graph(&mut rng);
+        let src = rng.gen_range(g.n() as u64) as u32;
+        let run = alg::bfs_run(&g, &m8(), src);
+        // Against the oracle.
+        oracle::check_bfs(&g, src, &run.levels).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // Edge relaxation: adjacent levels differ by at most 1, and an
+        // unreached vertex has no reached neighbor.
+        for (u, v) in g.edges() {
+            let (lu, lv) = (run.levels[u as usize], run.levels[v as usize]);
+            match (lu, lv) {
+                (-1, -1) => {}
+                (-1, _) | (_, -1) => panic!("seed {seed}: edge ({u},{v}) half-reached"),
+                (a, b) => assert!((a - b).abs() <= 1, "seed {seed}: edge ({u},{v}) {a}/{b}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cc_labels_are_component_minima() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xCC);
+        let g = random_graph(&mut rng);
+        let run = alg::cc_run(&g, &m8());
+        oracle::check_cc(&g, &run.labels).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        // Fixpoint: endpoints agree, labels self-referential, label <= id.
+        for (u, v) in g.edges() {
+            assert_eq!(run.labels[u as usize], run.labels[v as usize], "seed {seed}");
+        }
+        for v in 0..g.n() {
+            let l = run.labels[v] as usize;
+            assert!(l <= v, "seed {seed}: label above vertex id");
+            assert_eq!(run.labels[l], l as i64, "seed {seed}: label not a root");
+        }
+    }
+}
+
+#[test]
+fn prop_demand_builder_consistency() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xDE);
+        let nodes = 1 + rng.gen_range(16) as usize;
+        let chans = 1 + rng.gen_range(8) as usize;
+        let mut b = DemandBuilder::new(nodes, chans);
+        let mut expect_total = 0.0;
+        for _ in 0..rng.gen_range(200) {
+            let node = rng.gen_range(nodes as u64) as usize;
+            let chan = rng.gen_range(chans as u64) as usize;
+            let count = (1 + rng.gen_range(5)) as f64;
+            if rng.next_f64() < 0.3 {
+                b.msp_op(node, chan, count);
+            } else {
+                b.channel_op(node, chan, count);
+            }
+            expect_total += count;
+        }
+        let d = b.finish();
+        assert!((d.total_channel_ops() - expect_total).abs() < 1e-9, "seed {seed}");
+        for node in 0..nodes {
+            // Hottest channel bounded by node total and >= mean.
+            assert!(d.max_channel_ops[node] <= d.channel_ops[node] + 1e-9);
+            assert!(
+                d.max_channel_ops[node] * chans as f64 >= d.channel_ops[node] - 1e-9,
+                "seed {seed}: hottest below mean"
+            );
+            // MSP ops are a subset of channel ops.
+            assert!(d.msp_ops[node] <= d.channel_ops[node] + 1e-9);
+            // Per-channel rows sum to node totals.
+            let row: f64 = d.per_channel_ops[node * chans..(node + 1) * chans].iter().sum();
+            assert!((row - d.channel_ops[node]).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_rotation_preserves_everything_but_placement() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x20);
+        let chans = 2 + rng.gen_range(7) as usize;
+        let mut b = DemandBuilder::new(4, chans);
+        for _ in 0..50 {
+            b.channel_op(
+                rng.gen_range(4) as usize,
+                rng.gen_range(chans as u64) as usize,
+                1.0,
+            );
+        }
+        let d = b.finish();
+        let off = rng.gen_range(17) as usize;
+        let r = d.rotate_channels(off);
+        assert_eq!(r.channel_ops, d.channel_ops, "seed {seed}");
+        assert_eq!(r.max_channel_ops, d.max_channel_ops, "seed {seed}");
+        assert_eq!(
+            r.per_channel_ops.iter().sum::<f64>(),
+            d.per_channel_ops.iter().sum::<f64>()
+        );
+        // Full-cycle rotation is the identity.
+        assert_eq!(d.rotate_channels(chans), d, "seed {seed}");
+    }
+}
+
+/// Random phase mixes through the flow engine: the fundamental ordering
+/// makespan(conc) in [max solo, sum solo] and work conservation.
+#[test]
+fn prop_flow_bounds_random_workloads() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xF1);
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let nq = 1 + rng.gen_range(12) as usize;
+        let specs: Vec<QuerySpec> = (0..nq)
+            .map(|id| {
+                let phases = (1 + rng.gen_range(4) as usize..=4)
+                    .map(|_| {
+                        let mut p = PhaseDemand::zero(8, 8);
+                        for node in 0..8 {
+                            for c in 0..8 {
+                                let ops = rng.next_f64() * 1e4;
+                                p.per_channel_ops[node * 8 + c] = ops;
+                                p.channel_ops[node] += ops;
+                                p.max_channel_ops[node] =
+                                    p.max_channel_ops[node].max(ops);
+                            }
+                            p.instructions[node] = rng.next_f64() * 1e6;
+                        }
+                        p.parallelism = 1.0 + rng.next_f64() * 1e4;
+                        p
+                    })
+                    .collect();
+                QuerySpec { id, label: "rand", phases, arrival_ns: 0.0 }
+            })
+            .collect();
+        let conc = sim.run(&specs);
+        let seq = sim.run_sequential(&specs);
+        let max_solo = specs.iter().map(|s| s.solo_ns(&m)).fold(0.0, f64::max);
+        let sum_solo: f64 = specs.iter().map(|s| s.solo_ns(&m)).sum();
+        assert!(
+            conc.makespan_ns <= sum_solo * (1.0 + 1e-9),
+            "seed {seed}: conc above sequential bound"
+        );
+        assert!(
+            conc.makespan_ns >= max_solo * (1.0 - 1e-9),
+            "seed {seed}: conc beat the longest query"
+        );
+        assert!((seq.makespan_ns - sum_solo).abs() / sum_solo < 1e-9, "seed {seed}");
+        assert!(
+            (conc.counters.totals().channel_ops - seq.counters.totals().channel_ops).abs()
+                < 1e-6,
+            "seed {seed}: work not conserved"
+        );
+        // Every query finished.
+        assert!(conc.timings.iter().all(|t| t.finish_ns.is_finite()), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_admission_partitions_queries() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xAD);
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let nq = 1 + rng.gen_range(20) as usize;
+        let cap = 1 + rng.gen_range(nq as u64) as usize;
+        let specs: Vec<QuerySpec> = (0..nq)
+            .map(|id| {
+                let mut p = PhaseDemand::zero(8, 8);
+                p.channel_ops[0] = 1e4;
+                p.per_channel_ops[0] = 1e4;
+                p.max_channel_ops[0] = 1e4;
+                p.parallelism = 100.0;
+                QuerySpec {
+                    id,
+                    label: "rand",
+                    phases: vec![p],
+                    arrival_ns: rng.next_f64() * 1e6,
+                }
+            })
+            .collect();
+        for on_full in [OnFull::Queue, OnFull::Reject] {
+            let rep = sim.run_admitted(
+                &specs,
+                Admission { max_in_flight: Some(cap), on_full },
+            );
+            assert!(rep.peak_concurrency <= cap, "seed {seed}");
+            let done = rep.timings.iter().filter(|t| t.finish_ns.is_finite()).count();
+            match on_full {
+                OnFull::Queue => {
+                    assert_eq!(done, nq, "seed {seed}: queue must serve all");
+                    assert!(rep.rejected.is_empty());
+                }
+                OnFull::Reject => {
+                    assert_eq!(done + rep.rejected.len(), nq, "seed {seed}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_quantiles_are_order_statistics() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x9A);
+        let n = 1 + rng.gen_range(100) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.next_f64() * 1e3).collect();
+        let q = Quantiles::from_samples(&xs);
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(q.q0, sorted[0], "seed {seed}");
+        assert_eq!(q.q100, *sorted.last().unwrap(), "seed {seed}");
+        assert!(q.q0 <= q.q25 && q.q25 <= q.q50 && q.q50 <= q.q75 && q.q75 <= q.q100);
+        assert!(q.spread() >= 0.0);
+    }
+}
+
+#[test]
+fn prop_machine_config_json_round_trip() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x11);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.nodes = 8 * (1 + rng.gen_range(4) as usize);
+        cfg.channel_random_op_ns = 10.0 + rng.next_f64() * 200.0;
+        cfg.msp_write_priority = 0.5 + rng.next_f64();
+        cfg.spawn_efficiency = 0.05 + rng.next_f64() * 0.9;
+        cfg.degrade_factor = 0.2 + rng.next_f64() * 0.8;
+        if rng.next_f64() < 0.5 {
+            cfg.degraded_chassis = vec![rng.gen_range(cfg.nodes as u64 / 8) as usize];
+        }
+        let json = cfg.to_json().render_pretty();
+        let back = MachineConfig::from_json(
+            &pathfinder_queries::util::json::Json::parse(&json).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg, back, "seed {seed}");
+    }
+}
+
+/// Coordinator-level: sequential makespan is permutation-invariant in
+/// total, concurrent is order-independent for identical arrival times.
+#[test]
+fn prop_coordinator_order_invariance() {
+    for seed in 0..6 {
+        let mut rng = SplitMix64::new(seed ^ 0x0D);
+        let g = random_graph(&mut rng);
+        let coord = Coordinator::new(&g, m8());
+        let k = 2 + rng.gen_range(6) as usize;
+        let queries = planner::bfs_queries(&g, k.min(g.n() / 2).max(1), seed);
+        let base = coord.run(&queries, Policy::Sequential).unwrap();
+        let mut shuffled = queries.clone();
+        rng.shuffle(&mut shuffled);
+        let perm = coord.run(&shuffled, Policy::Sequential).unwrap();
+        // Same total work, same makespan (stripe offsets permute with the
+        // queries, but rotation never changes node totals).
+        assert!(
+            (base.makespan_s - perm.makespan_s).abs() / base.makespan_s < 1e-9,
+            "seed {seed}: {} vs {}",
+            base.makespan_s,
+            perm.makespan_s
+        );
+    }
+}

@@ -1,0 +1,187 @@
+//! Runtime integration tests: the AOT artifact contract between
+//! `python/compile/aot.py` and the rust PJRT engine. These run against the
+//! real artifacts (`make artifacts`) and skip gracefully when absent.
+
+use pathfinder_queries::runtime::artifact::{default_artifacts_dir, ArtifactManifest};
+use pathfinder_queries::runtime::Engine;
+
+fn manifest() -> Option<ArtifactManifest> {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(ArtifactManifest::load(&dir).unwrap())
+}
+
+#[test]
+fn manifest_covers_both_kinds_with_batches() {
+    let Some(m) = manifest() else { return };
+    let batches = m.bfs_batches();
+    assert!(batches.len() >= 2, "need multiple BFS batch variants, got {batches:?}");
+    assert!(batches.windows(2).all(|w| w[0] < w[1]));
+    assert!(m.cc_variant().is_some());
+    // Every entry's file exists and carries a sha256.
+    for e in &m.entries {
+        assert!(m.hlo_path(e).exists());
+        assert_eq!(e.sha256.len(), 64);
+    }
+}
+
+#[test]
+fn sha256_integrity_matches_files() {
+    // The manifest hash must describe the actual HLO text on disk —
+    // guards against stale artifacts after editing the python side.
+    let Some(m) = manifest() else { return };
+    for e in &m.entries {
+        let text = std::fs::read(m.hlo_path(e)).unwrap();
+        let got = sha256_hex(&text);
+        assert_eq!(got, e.sha256, "stale artifact {}: rerun `make artifacts`", e.name);
+    }
+}
+
+/// Minimal SHA-256 (FIPS 180-4) so the integrity check needs no deps.
+fn sha256_hex(data: &[u8]) -> String {
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,
+        0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe,
+        0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f,
+        0x4a7484aa, 0x5cb0a9dc, 0x76f988da, 0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7,
+        0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc,
+        0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070, 0x19a4c116,
+        0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+        0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7,
+        0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab,
+        0x5be0cd19,
+    ];
+    let mut msg = data.to_vec();
+    let bitlen = (data.len() as u64) * 8;
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+    for block in msg.chunks(64) {
+        let mut w = [0u32; 64];
+        for (i, c) in block.chunks(4).enumerate() {
+            w[i] = u32::from_be_bytes(c.try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ ((!e) & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+#[test]
+fn sha256_known_answer() {
+    assert_eq!(
+        sha256_hex(b"abc"),
+        "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+    );
+    assert_eq!(
+        sha256_hex(b""),
+        "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+    );
+}
+
+#[test]
+fn engine_compiles_all_variants_once() {
+    let Some(m) = manifest() else { return };
+    let eng = Engine::new(m).unwrap();
+    assert_eq!(eng.compiled_count(), 0, "compilation is lazy");
+    let times = eng.compile_all().unwrap();
+    assert_eq!(times.len(), eng.manifest().entries.len());
+    assert_eq!(eng.compiled_count(), times.len());
+    // Recompiling is a cache hit (fast, count unchanged).
+    let again = eng.compile_all().unwrap();
+    assert_eq!(eng.compiled_count(), times.len());
+    assert!(again.iter().all(|(_, s)| *s < 0.5), "cache hits should be instant");
+}
+
+#[test]
+fn bfs_step_batch_lanes_are_independent() {
+    let Some(m) = manifest() else { return };
+    let eng = Engine::new(m).unwrap();
+    let e = eng.manifest().bfs_variant_for(2).unwrap().clone();
+    if e.batch < 2 {
+        return;
+    }
+    let (b, n) = (e.batch, eng.manifest().n);
+    // Two queries in different lanes of one batch; disjoint edges.
+    let mut adj = vec![0.0f32; n * n];
+    for (u, v) in [(0usize, 1usize), (1, 0), (4, 5), (5, 4)] {
+        adj[u * n + v] = 1.0;
+    }
+    let mut frontier = vec![0.0f32; b * n];
+    let mut visited = vec![0.0f32; b * n];
+    let levels = vec![-1.0f32; b * n];
+    frontier[0] = 1.0; // lane 0 at vertex 0
+    visited[0] = 1.0;
+    frontier[n + 4] = 1.0; // lane 1 at vertex 4
+    visited[n + 4] = 1.0;
+    let out = eng
+        .execute_f32(
+            &e.name,
+            &[
+                (&adj, &[n as i64, n as i64]),
+                (&frontier, &[b as i64, n as i64]),
+                (&visited, &[b as i64, n as i64]),
+                (&levels, &[b as i64, n as i64]),
+                (&[1.0f32], &[]),
+            ],
+        )
+        .unwrap();
+    let next = &out[0];
+    assert_eq!(next[1], 1.0, "lane 0 discovers vertex 1");
+    assert_eq!(next[5], 0.0, "lane 0 does not see lane 1's frontier");
+    assert_eq!(next[n + 5], 1.0, "lane 1 discovers vertex 5");
+    assert_eq!(next[n + 1], 0.0, "lane 1 does not see lane 0's frontier");
+}
+
+#[test]
+fn unknown_variant_is_clean_error() {
+    let Some(m) = manifest() else { return };
+    let eng = Engine::new(m).unwrap();
+    let err = eng.execute_f32("nope_b9_n9", &[]).unwrap_err();
+    assert!(err.to_string().contains("unknown artifact variant"));
+}

@@ -1,0 +1,163 @@
+//! Simulator integration tests, most importantly the **cross-validation of
+//! the flow (fluid) engine against the discrete-event engine** — the two
+//! independent timing models must agree on single-query structure before
+//! the flow engine's concurrency results can be trusted.
+
+use pathfinder_queries::alg;
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::csr::Csr;
+use pathfinder_queries::sim::event::EventSim;
+use pathfinder_queries::sim::flow::{FlowSim, QuerySpec};
+use pathfinder_queries::sim::machine::Machine;
+
+fn rmat(scale: u32, seed: u64) -> Csr {
+    let mut cfg = GraphConfig::with_scale(scale);
+    cfg.seed = seed;
+    build_undirected_csr(1 << scale, &pathfinder_queries::graph::rmat::Rmat::new(cfg).edges())
+}
+
+fn m8() -> Machine {
+    Machine::new(MachineConfig::pathfinder_8())
+}
+
+/// Flow solo BFS time vs the discrete-event engine on the same graph:
+/// the two models were built independently (fluid demand vectors vs
+/// explicit per-access queueing), so agreement within a small factor
+/// validates both.
+#[test]
+fn flow_vs_event_bfs_within_factor() {
+    let m = m8();
+    let flow = FlowSim::new(m.clone());
+    let mut event = EventSim::new(m.clone());
+    for (scale, seed) in [(10u32, 3u64), (11, 5), (12, 9)] {
+        let g = rmat(scale, seed);
+        let src = pathfinder_queries::graph::sample::bfs_sources(&g, 1, 1)[0];
+        let run = alg::bfs_run(&g, &m, src);
+        let spec = QuerySpec { id: 0, label: "bfs", phases: run.phases, arrival_ns: 0.0 };
+        let t_flow = flow.run(std::slice::from_ref(&spec)).makespan_ns;
+        let ev = event.bfs(&g, src);
+        assert_eq!(ev.values, run.levels, "functional agreement");
+        let ratio = ev.elapsed_ns / t_flow;
+        assert!(
+            (0.2..=5.0).contains(&ratio),
+            "scale {scale}: event {:.3e} ns vs flow {:.3e} ns (ratio {ratio:.2})",
+            ev.elapsed_ns,
+            t_flow
+        );
+    }
+}
+
+#[test]
+fn flow_vs_event_cc_within_factor() {
+    let m = m8();
+    let flow = FlowSim::new(m.clone());
+    let mut event = EventSim::new(m.clone());
+    let g = rmat(10, 21);
+    let run = alg::cc_run(&g, &m);
+    let spec = QuerySpec { id: 0, label: "cc", phases: run.phases, arrival_ns: 0.0 };
+    let t_flow = flow.run(std::slice::from_ref(&spec)).makespan_ns;
+    let ev = event.cc(&g);
+    assert_eq!(ev.values, run.labels, "functional agreement");
+    let ratio = ev.elapsed_ns / t_flow;
+    assert!(
+        (0.2..=5.0).contains(&ratio),
+        "event {:.3e} vs flow {:.3e} (ratio {ratio:.2})",
+        ev.elapsed_ns,
+        t_flow
+    );
+}
+
+/// Both engines must agree that the event-sim's serialized channels make a
+/// bigger graph proportionally slower.
+#[test]
+fn engines_scale_together() {
+    let m = m8();
+    let flow = FlowSim::new(m.clone());
+    let mut event = EventSim::new(m.clone());
+    let (small, big) = (rmat(10, 4), rmat(13, 4));
+    let spec = |g: &Csr| {
+        let run = alg::bfs_run(g, &m, pathfinder_queries::graph::sample::bfs_sources(g, 1, 2)[0]);
+        QuerySpec { id: 0, label: "bfs", phases: run.phases, arrival_ns: 0.0 }
+    };
+    let f_ratio = flow.run(&[spec(&big)]).makespan_ns / flow.run(&[spec(&small)]).makespan_ns;
+    let e_ratio = {
+        let s = event.bfs(&small, 1).elapsed_ns;
+        let b = event.bfs(&big, 1).elapsed_ns;
+        b / s
+    };
+    assert!(f_ratio > 1.5 && e_ratio > 1.5, "flow {f_ratio:.2} event {e_ratio:.2}");
+    assert!((f_ratio / e_ratio - 1.0).abs() < 1.5, "flow {f_ratio:.2} vs event {e_ratio:.2}");
+}
+
+/// Degraded chassis slow both engines down.
+#[test]
+fn degraded_machine_slower_in_both_engines() {
+    let g = rmat(11, 6);
+    let healthy = Machine::new(MachineConfig::pathfinder_32_healthy());
+    let degraded = Machine::new(MachineConfig::pathfinder_32());
+    let src = 5u32;
+
+    let solo = |m: &Machine| {
+        let run = alg::bfs_run(&g, m, src);
+        let spec = QuerySpec { id: 0, label: "bfs", phases: run.phases, arrival_ns: 0.0 };
+        FlowSim::new(m.clone()).run(&[spec]).makespan_ns
+    };
+    assert!(solo(&degraded) > solo(&healthy));
+
+    let ev = |m: &Machine| EventSim::new(m.clone()).bfs(&g, src).elapsed_ns;
+    assert!(ev(&degraded) > ev(&healthy));
+}
+
+/// The flow engine's fundamental inequalities on real BFS workloads.
+#[test]
+fn flow_bounds_on_real_workload() {
+    let g = rmat(12, 13);
+    let m = m8();
+    let flow = FlowSim::new(m.clone());
+    let sources = pathfinder_queries::graph::sample::bfs_sources(&g, 24, 3);
+    let specs: Vec<QuerySpec> = sources
+        .iter()
+        .enumerate()
+        .map(|(i, &s)| QuerySpec {
+            id: i,
+            label: "bfs",
+            phases: alg::bfs_run(&g, &m, s).phases,
+            arrival_ns: 0.0,
+        })
+        .collect();
+    let conc = flow.run(&specs);
+    let seq = flow.run_sequential(&specs);
+    // Sequential >= concurrent >= longest single query.
+    let longest = specs.iter().map(|s| s.solo_ns(&m)).fold(0.0, f64::max);
+    assert!(seq.makespan_ns >= conc.makespan_ns);
+    assert!(conc.makespan_ns >= longest * (1.0 - 1e-9));
+    // Work conservation: identical counters either way.
+    assert_eq!(
+        conc.counters.totals().channel_ops,
+        seq.counters.totals().channel_ops
+    );
+    // Concurrency must raise utilization.
+    assert!(
+        conc.counters.mean_channel_utilization(&m)
+            > seq.counters.mean_channel_utilization(&m)
+    );
+}
+
+/// Event engine respects the context-slot ceiling: a frontier wider than
+/// the node's thread contexts processes in waves.
+#[test]
+fn event_sim_context_waves() {
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.cores_per_node = 1;
+    cfg.threads_per_core = 4; // 4 slots per node
+    let m_small = Machine::new(cfg);
+    let m_big = m8();
+    // Star of 64 leaves: level 1 has 64 concurrent threads.
+    let edges: Vec<(u32, u32)> = (1..=64u32).map(|v| (0, v)).collect();
+    let g = build_undirected_csr(65, &edges);
+    let t_small = EventSim::new(m_small).bfs(&g, 0).elapsed_ns;
+    let t_big = EventSim::new(m_big).bfs(&g, 0).elapsed_ns;
+    assert!(t_small > t_big, "fewer contexts must be slower: {t_small} vs {t_big}");
+}
