@@ -1,11 +1,13 @@
 //! A web-accessible graph database deployment (the paper's §I motivation):
 //! the Pathfinder as a long-running service behind admission control.
 //!
-//! Queries arrive as a Poisson stream with a CC fraction; thread-context
-//! memory bounds in-flight work (the §IV-B exhaustion becomes queueing or
-//! rejection); the operator report shows per-class latency, throughput and
-//! channel utilization. Sweeping the offered load shows the service
-//! saturating exactly where the concurrency experiments say it should.
+//! Queries arrive as a Poisson stream drawn from a declarative
+//! `WorkloadSpec` — here the four-class mix of BFS, k-hop neighborhoods,
+//! SSSP and connected components; thread-context memory bounds in-flight
+//! work (the §IV-B exhaustion becomes queueing or rejection); the operator
+//! report shows per-class p50/p95/p99 latency, throughput and channel
+//! utilization. Sweeping the offered load shows the service saturating
+//! exactly where the concurrency experiments say it should.
 //!
 //! ```bash
 //! cargo run --release --example graph_service -- [--scale 13] [--machine pathfinder-8]
@@ -13,7 +15,7 @@
 
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
-use pathfinder_queries::coordinator::{GraphService, ServiceConfig};
+use pathfinder_queries::coordinator::{GraphService, ServiceConfig, WorkloadSpec};
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::rmat::Rmat;
 use pathfinder_queries::sim::flow::OnFull;
@@ -37,12 +39,13 @@ fn main() -> anyhow::Result<()> {
         service.coordinator().capacity()
     );
 
-    // Sweep the offered load from idle to overload.
+    // Sweep the offered load from idle to overload, serving all four
+    // analysis classes.
     for rate in [50.0, 200.0, 1000.0, 5000.0, 20000.0] {
         let cfg = ServiceConfig {
             queries: 300,
             arrival_rate_per_s: rate,
-            cc_fraction: 0.1,
+            workload: WorkloadSpec::four_class(),
             on_full: OnFull::Queue,
             seed: 0x5E21,
         };
@@ -56,7 +59,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = ServiceConfig {
         queries: 300,
         arrival_rate_per_s: 20000.0,
-        cc_fraction: 0.1,
+        workload: WorkloadSpec::four_class(),
         on_full: OnFull::Reject,
         seed: 0x5E21,
     };

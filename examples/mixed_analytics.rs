@@ -1,17 +1,18 @@
-//! Mixed analytics (Table II as a library client): run an 80/20 mix of BFS
-//! and Figure-2 connected components concurrently vs sequentially, then
-//! drill into what the two algorithms do to the machine — BFS is
-//! read-and-remote-write heavy, CC hammers the memory-side processors with
-//! `remote_min`, and the §IV-C counters show it.
+//! Mixed analytics (Table II generalized as a library client): run a
+//! four-class mix — BFS, Figure-2 connected components, delta-stepping
+//! SSSP and 2-hop neighborhoods — concurrently vs sequentially through the
+//! open `Analysis` API, then drill into what the classes do to the machine:
+//! BFS/k-hop are read-and-remote-write heavy, CC and SSSP hammer the
+//! memory-side processors with `remote_min`, and the §IV-C counters show it.
 //!
 //! ```bash
-//! cargo run --release --example mixed_analytics -- [--scale 14] [--bfs 40] [--cc 10]
+//! cargo run --release --example mixed_analytics -- \
+//!     [--scale 14] [--bfs 40] [--cc 10] [--sssp 10] [--khop 20]
 //! ```
 
 use pathfinder_queries::config::machine::MachineConfig;
-use pathfinder_queries::config::workload::MixPoint;
 use pathfinder_queries::config::workload::GraphConfig;
-use pathfinder_queries::coordinator::{planner, Coordinator, Policy};
+use pathfinder_queries::coordinator::{planner, Coordinator, Policy, QueryRequest};
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::rmat::Rmat;
 use pathfinder_queries::sim::machine::Machine;
@@ -21,10 +22,10 @@ use pathfinder_queries::util::stats::improvement_pct;
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     let scale: u32 = args.opt_parse_or("scale", 14)?;
-    let mix = MixPoint {
-        bfs: args.opt_parse_or("bfs", 40)?,
-        cc: args.opt_parse_or("cc", 10)?,
-    };
+    let bfs: usize = args.opt_parse_or("bfs", 40)?;
+    let cc: usize = args.opt_parse_or("cc", 10)?;
+    let sssp: usize = args.opt_parse_or("sssp", 10)?;
+    let khop: usize = args.opt_parse_or("khop", 20)?;
 
     let gcfg = GraphConfig::with_scale(scale);
     let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
@@ -32,49 +33,49 @@ fn main() -> anyhow::Result<()> {
     let coordinator = Coordinator::new(&g, machine);
 
     println!(
-        "mix: {} BFS + {} CC on {} ({} vertices, {} directed edges)",
-        mix.bfs,
-        mix.cc,
+        "mix: {bfs} bfs + {cc} cc + {sssp} sssp + {khop} khop on {} \
+         ({} vertices, {} directed edges)",
         coordinator.machine().cfg.name,
         g.n(),
         g.m_directed()
     );
 
-    // Concurrent: the interleaved stream, all at once.
-    let queries = planner::mix_queries(&g, mix, 0xBF5);
+    // Concurrent: the four classes interleaved into one stream, all at once.
+    let classes: Vec<Vec<QueryRequest>> = vec![
+        planner::bfs_queries(&g, bfs, 0xBF5),
+        planner::cc_queries(cc),
+        planner::sssp_queries(&g, sssp, 0xBF5 ^ 0x55),
+        planner::khop_queries(&g, khop, 2, 0xBF5 ^ 0xAA),
+    ];
+    let queries = planner::interleave_classes(classes);
     let conc = coordinator.run(&queries, Policy::Concurrent)?;
-    // Sequential: the paper's arm — all BFS, then all CC (§IV-C).
+    // Sequential: the paper's arm generalized — whole classes back to back.
     let seq_order = planner::sequential_mix_order(&queries);
     let seq = coordinator.run(&seq_order, Policy::Sequential)?;
 
     println!("concurrent: {:.4} s", conc.makespan_s);
     println!("sequential: {:.4} s", seq.makespan_s);
     println!(
-        "improvement: {:.1}% (paper Table II: ~70% on the single chassis)",
+        "improvement: {:.1}% (paper Table II: ~70% for the 80/20 two-class mix)",
         improvement_pct(seq.makespan_s, conc.makespan_s)
     );
 
-    // Per-class latency.
-    for label in ["bfs", "cc"] {
-        if let Some(q) = conc.latency_quantiles(Some(label)) {
-            println!(
-                "  {label:>3} latency: min {:.4}s  median {:.4}s  max {:.4}s",
-                q.q0, q.q50, q.q100
-            );
-        }
+    // Per-class latency, p50/p95/p99 included.
+    for (label, q) in conc.per_class_quantiles() {
+        println!("  {label:>5} latency: {}", q.latency_line());
     }
 
     // The §IV-C machine story, from the simulated hardware counters.
     let totals = conc.counters.totals();
     println!("\nhardware counters (concurrent run):");
     println!("  channel ops     {:>14.0}", totals.channel_ops);
-    println!("  MSP remote_min  {:>14.0}  <- the CC hook traffic", totals.msp_ops);
+    println!("  MSP remote_min  {:>14.0}  <- CC hook + SSSP relaxation traffic", totals.msp_ops);
     println!("  migrations      {:>14.0}", totals.migrations);
     println!("  fabric bytes    {:>14.0}", totals.fabric_bytes);
     println!("  channel util    {:>13.0}%", conc.mean_channel_utilization * 100.0);
     println!(
-        "  msp share of channel traffic: {:.0}% — mixing read-heavy BFS with \
-         remote_min-heavy CC is what stresses the §IV-C read/write balance",
+        "  msp share of channel traffic: {:.0}% — mixing read-heavy traversals \
+         with remote_min-heavy analyses is what stresses the §IV-C read/write balance",
         100.0 * totals.msp_ops / totals.channel_ops
     );
     Ok(())

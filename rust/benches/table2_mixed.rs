@@ -4,7 +4,7 @@
 //!
 //! Knobs: PFQ_BENCH_SCALE (default 13).
 
-use pathfinder_queries::alg::Query;
+use pathfinder_queries::alg::{Analysis, Cc};
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
 use pathfinder_queries::coordinator::{planner, Coordinator, Policy};
@@ -40,15 +40,16 @@ fn main() {
         black_box((conc.makespan_s, seq.makespan_s))
     });
 
-    // The CC demand cache: cached+rotated (what the coordinator does) vs
-    // recomputing the functional CC per instance.
+    // The per-kind demand cache: cached+rotated (what the coordinator does
+    // for any analysis declaring `cacheable_demand`) vs recomputing the
+    // functional CC per instance.
     bench.run("cc-demand/cached+rotate x8", || {
-        let qs = vec![Query::Cc; 8];
+        let qs = pathfinder_queries::coordinator::planner::cc_queries(8);
         black_box(coord.prepare(&qs))
     });
     bench.run("cc-demand/recompute x8", || {
         (0..8)
-            .map(|i| black_box(Query::Cc.phases(&g, &m, i)))
+            .map(|i| black_box(Cc.phases(&g, &m, i)))
             .collect::<Vec<_>>()
     });
 

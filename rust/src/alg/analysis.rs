@@ -1,0 +1,172 @@
+//! The open query API: any graph analysis the coordinator can schedule.
+//!
+//! The paper's experiments use two workloads (BFS, connected components),
+//! but its thesis — a data center serving many concurrent, heterogeneous
+//! analyses — is not two-workload-shaped. [`Analysis`] is the extension
+//! point: implement it and the planner, scheduler, admission control,
+//! metrics and service all pick the new workload up without modification
+//! (they key on [`Analysis::label`], never on a closed type).
+//!
+//! An analysis has two duties:
+//!
+//! * **functional execution** ([`Analysis::run_offset`]) over the real
+//!   graph, emitting the per-phase [`PhaseDemand`] vectors the simulator
+//!   charges time for;
+//! * **self-validation** ([`Analysis::validate`]) against an independent
+//!   host oracle, so every scheduled result can be checked.
+//!
+//! Two optional hooks feed the coordinator:
+//!
+//! * [`Analysis::cacheable_demand`] generalizes the connected-components
+//!   demand cache: a parameter-free analysis returns a cache key, and the
+//!   coordinator computes its (expensive) demand once per key, serving
+//!   further instances as cheap channel rotations.
+//! * [`Analysis::ctx_mem_bytes`] lets an analysis declare a non-default
+//!   thread-context footprint, which admission accounting sums instead of
+//!   assuming the machine's per-query reservation.
+
+use crate::graph::csr::Csr;
+use crate::sim::demand::PhaseDemand;
+use crate::sim::machine::Machine;
+
+/// One schedulable graph analysis (see module docs). Object safe: the
+/// coordinator holds `Arc<dyn Analysis>`.
+pub trait Analysis: std::fmt::Debug + Send + Sync {
+    /// Class label ("bfs", "cc", "sssp", "khop", ...). Everything
+    /// per-class — metrics quantiles, demand-cache keys, workload specs —
+    /// keys on this.
+    fn label(&self) -> &'static str;
+
+    /// Human-readable instance description, e.g. `bfs(src=42)`.
+    fn describe(&self) -> String {
+        self.label().to_string()
+    }
+
+    /// Execute functionally on `g` for machine `m`, producing the result
+    /// values and the per-phase demand vectors. `stripe_offset` is the
+    /// query's own-array placement offset (usually its index within the
+    /// batch — see [`crate::alg::bfs::bfs_run_offset`]).
+    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput;
+
+    /// Check a functional result against this analysis's host oracle.
+    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()>;
+
+    /// Per-query thread-context memory reservation (bytes, whole machine),
+    /// or `None` to use the machine's default per-query footprint.
+    fn ctx_mem_bytes(&self, g: &Csr) -> Option<u64> {
+        let _ = g;
+        None
+    }
+
+    /// If `Some(key)`, this instance's demand at stripe offset 0 is
+    /// identical to every other instance returning the same key (no
+    /// per-query parameter affects demand), so the coordinator may compute
+    /// it once and rotate channels per concurrent instance.
+    fn cacheable_demand(&self) -> Option<String> {
+        None
+    }
+
+    /// [`Analysis::run_offset`] at the canonical placement.
+    fn run(&self, g: &Csr, m: &Machine) -> QueryOutput {
+        self.run_offset(g, m, 0)
+    }
+
+    /// Demand phases only (skips retaining the value vector).
+    fn phases(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> Vec<PhaseDemand> {
+        self.run_offset(g, m, stripe_offset).phases
+    }
+}
+
+/// Functional result + demand of one executed analysis.
+#[derive(Debug, Clone)]
+pub struct QueryOutput {
+    /// Class label of the analysis that produced this output.
+    pub label: &'static str,
+    /// Per-vertex result values (BFS levels, CC labels, SSSP distances,
+    /// k-hop levels; -1 = unreached where applicable).
+    pub values: Vec<i64>,
+    /// Per-phase resource demand.
+    pub phases: Vec<PhaseDemand>,
+}
+
+impl QueryOutput {
+    /// Total solo duration of all phases (ns) on machine `m`.
+    pub fn solo_ns(&self, m: &Machine) -> f64 {
+        self.phases.iter().map(|p| p.solo_ns(m)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::bfs::Bfs;
+    use crate::alg::cc::Cc;
+    use crate::alg::khop::KHop;
+    use crate::alg::sssp::Sssp;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+    use std::sync::Arc;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat10() -> Csr {
+        let r = Rmat::new(GraphConfig::with_scale(10));
+        build_undirected_csr(1 << 10, &r.edges())
+    }
+
+    fn all_analyses() -> Vec<Arc<dyn Analysis>> {
+        vec![
+            Arc::new(Bfs { src: 3 }),
+            Arc::new(Cc),
+            Arc::new(Sssp { src: 3 }),
+            Arc::new(KHop::new(3, 2)),
+        ]
+    }
+
+    #[test]
+    fn every_builtin_analysis_validates_through_the_trait() {
+        let g = rmat10();
+        let m = m8();
+        for a in all_analyses() {
+            let out = a.run(&g, &m);
+            a.validate(&g, &out.values)
+                .unwrap_or_else(|e| panic!("{}: {e}", a.describe()));
+            assert_eq!(out.label, a.label());
+            assert!(!out.phases.is_empty(), "{}", a.label());
+            assert!(out.solo_ns(&m) > 0.0, "{}", a.label());
+        }
+    }
+
+    #[test]
+    fn labels_and_descriptions() {
+        assert_eq!(Bfs { src: 42 }.describe(), "bfs(src=42)");
+        assert_eq!(Cc.describe(), "cc");
+        assert_eq!(Sssp { src: 7 }.describe(), "sssp(src=7)");
+        assert_eq!(KHop::new(7, 3).describe(), "khop(src=7,k=3)");
+        let labels: Vec<_> = all_analyses().iter().map(|a| a.label()).collect();
+        assert_eq!(labels, vec!["bfs", "cc", "sssp", "khop"]);
+    }
+
+    #[test]
+    fn only_parameter_free_analyses_are_demand_cacheable() {
+        assert_eq!(Cc.cacheable_demand().as_deref(), Some("cc"));
+        assert!(Bfs { src: 0 }.cacheable_demand().is_none());
+        assert!(Sssp { src: 0 }.cacheable_demand().is_none());
+        assert!(KHop::new(0, 2).cacheable_demand().is_none());
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let g = rmat10();
+        let m = m8();
+        for a in all_analyses() {
+            let mut out = a.run(&g, &m);
+            out.values[10] = 999_999;
+            assert!(a.validate(&g, &out.values).is_err(), "{}", a.label());
+        }
+    }
+}

@@ -24,9 +24,38 @@
 //! serialize a level, but a level can never use more threads than it has
 //! independent memory operations.
 
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::alg::oracle;
 use crate::graph::csr::Csr;
 use crate::sim::demand::{DemandBuilder, PhaseDemand};
 use crate::sim::machine::Machine;
+
+/// Breadth-first search from a source vertex, as a schedulable
+/// [`Analysis`] (paper §IV: "BFS from unique sources").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bfs {
+    /// Source vertex.
+    pub src: u32,
+}
+
+impl Analysis for Bfs {
+    fn label(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn describe(&self) -> String {
+        format!("bfs(src={})", self.src)
+    }
+
+    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        let run = bfs_run_offset(g, m, self.src, stripe_offset);
+        QueryOutput { label: self.label(), values: run.levels, phases: run.phases }
+    }
+
+    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+        oracle::check_bfs(g, self.src, values)
+    }
+}
 
 /// Result of one functional+demand BFS execution.
 #[derive(Debug, Clone)]
@@ -65,6 +94,20 @@ pub fn bfs_run(g: &Csr, m: &Machine, src: u32) -> BfsRun {
 /// queries spread across channels instead of all serializing on one. The
 /// coordinator passes each query's index as the offset.
 pub fn bfs_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> BfsRun {
+    bfs_run_capped(g, m, src, stripe_offset, None)
+}
+
+/// The traversal core shared by full BFS (`max_depth` = None) and the
+/// hop-bounded [`crate::alg::khop`] query (`Some(k)`: levels 0..k-1
+/// expand, level-k vertices are discovered but not expanded). One
+/// implementation so the demand model cannot diverge between the two.
+pub fn bfs_run_capped(
+    g: &Csr,
+    m: &Machine,
+    src: u32,
+    stripe_offset: usize,
+    max_depth: Option<u32>,
+) -> BfsRun {
     let layout = m.layout;
     let nodes = m.nodes();
     let channels = m.cfg.channels_per_node;
@@ -80,7 +123,7 @@ pub fn bfs_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> B
     let mut frontier_sizes = Vec::new();
     let mut level_edges = Vec::new();
 
-    while !frontier.is_empty() {
+    while !frontier.is_empty() && max_depth.is_none_or(|k| (depth as u32) < k) {
         let mut b = DemandBuilder::new(nodes, channels);
         let mut next = Vec::new();
         let mut edges_scanned = 0usize;

@@ -26,9 +26,36 @@
 //! in-place `remote_min` converges to the same fixpoint, possibly a sweep
 //! sooner. Labels converge to each component's minimum vertex id.
 
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::alg::oracle;
 use crate::graph::csr::Csr;
 use crate::sim::demand::{DemandBuilder, PhaseDemand};
 use crate::sim::machine::Machine;
+
+/// Whole-graph connected components (Figure 2), as a schedulable
+/// [`Analysis`]. Parameter-free, so its demand is cacheable: the
+/// coordinator computes it once and rotates channels per instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Cc;
+
+impl Analysis for Cc {
+    fn label(&self) -> &'static str {
+        "cc"
+    }
+
+    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        let run = cc_run_offset(g, m, stripe_offset);
+        QueryOutput { label: self.label(), values: run.labels, phases: run.phases }
+    }
+
+    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+        oracle::check_cc(g, values)
+    }
+
+    fn cacheable_demand(&self) -> Option<String> {
+        Some(self.label().to_string())
+    }
+}
 
 /// Result of one functional+demand connected-components execution.
 #[derive(Debug, Clone)]

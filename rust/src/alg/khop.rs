@@ -1,0 +1,153 @@
+//! K-hop neighborhood / bounded reachability: the interactive "who is
+//! within k hops of this vertex" query a web-facing graph service fields
+//! constantly (friend-of-friend, blast-radius, recommendation seeds).
+//!
+//! Execution is the tuned migratory-thread BFS of [`crate::alg::bfs`]
+//! truncated at depth `k`: levels 0..k-1 expand (thread launch on the
+//! frontier vertex's home node, edge-block stream, unconditional remote
+//! write per scanned edge), vertices discovered at level `k` are recorded
+//! but not expanded. Demand phases are exactly the expanded levels', so a
+//! small-k query is far cheaper than a full BFS — the short-job class in a
+//! mixed workload.
+
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::alg::oracle;
+use crate::graph::csr::Csr;
+use crate::sim::demand::PhaseDemand;
+use crate::sim::machine::Machine;
+
+/// K-hop neighborhood from a source vertex, as a schedulable [`Analysis`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KHop {
+    /// Source vertex.
+    pub src: u32,
+    /// Hop bound (>= 1).
+    pub k: u32,
+}
+
+impl KHop {
+    /// Build a k-hop query; `k` is clamped to at least one hop.
+    pub fn new(src: u32, k: u32) -> Self {
+        KHop { src, k: k.max(1) }
+    }
+}
+
+impl Analysis for KHop {
+    fn label(&self) -> &'static str {
+        "khop"
+    }
+
+    fn describe(&self) -> String {
+        format!("khop(src={},k={})", self.src, self.k)
+    }
+
+    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        let run = khop_run_offset(g, m, self.src, self.k, stripe_offset);
+        QueryOutput { label: self.label(), values: run.levels, phases: run.phases }
+    }
+
+    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+        oracle::check_khop(g, self.src, self.k, values)
+    }
+}
+
+/// Result of one functional+demand k-hop execution.
+#[derive(Debug, Clone)]
+pub struct KhopRun {
+    /// Per-vertex hop level (0..=k), -1 beyond the hop bound.
+    pub levels: Vec<i64>,
+    /// One demand vector per expanded level (at most k).
+    pub phases: Vec<PhaseDemand>,
+    /// Vertices within the k-hop neighborhood (including the source).
+    pub reached: usize,
+}
+
+/// Run a k-hop traversal at the canonical placement.
+pub fn khop_run(g: &Csr, m: &Machine, src: u32, k: u32) -> KhopRun {
+    khop_run_offset(g, m, src, k, 0)
+}
+
+/// Run a k-hop traversal with an explicit stripe offset for the query's
+/// own level array (see [`crate::alg::bfs::bfs_run_offset`]). Delegates to
+/// the shared depth-capped BFS core
+/// ([`crate::alg::bfs::bfs_run_capped`]), so the demand model is exactly
+/// the expanded BFS levels'.
+pub fn khop_run_offset(
+    g: &Csr,
+    m: &Machine,
+    src: u32,
+    k: u32,
+    stripe_offset: usize,
+) -> KhopRun {
+    assert!(k >= 1, "k-hop needs at least one hop");
+    let run = crate::alg::bfs::bfs_run_capped(g, m, src, stripe_offset, Some(k));
+    let reached = run.reached();
+    KhopRun { levels: run.levels, phases: run.phases, reached }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = seed;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn truncates_bfs_levels_at_k() {
+        let g = rmat(10, 7);
+        let m = m8();
+        for k in [1u32, 2, 3] {
+            let run = khop_run(&g, &m, 13, k);
+            oracle::check_khop(&g, 13, k, &run.levels).unwrap();
+            assert!(run.phases.len() <= k as usize);
+        }
+    }
+
+    #[test]
+    fn path_graph_reaches_exactly_k_plus_one() {
+        let edges: Vec<(u32, u32)> = (0..19u32).map(|i| (i, i + 1)).collect();
+        let g = build_undirected_csr(20, &edges);
+        let run = khop_run(&g, &m8(), 0, 3);
+        assert_eq!(run.reached, 4); // vertices 0..=3
+        assert_eq!(run.levels[3], 3);
+        assert_eq!(run.levels[4], -1);
+        assert_eq!(run.phases.len(), 3);
+    }
+
+    #[test]
+    fn large_k_degenerates_to_full_bfs() {
+        let g = rmat(9, 5);
+        let m = m8();
+        let khop = khop_run(&g, &m, 1, 1000);
+        let bfs = crate::alg::bfs::bfs_run(&g, &m, 1);
+        assert_eq!(khop.levels, bfs.levels);
+    }
+
+    #[test]
+    fn small_k_is_cheap() {
+        let g = rmat(11, 9);
+        let m = m8();
+        let one = khop_run(&g, &m, 4, 1);
+        let bfs = crate::alg::bfs::bfs_run(&g, &m, 4);
+        let t_one: f64 = one.phases.iter().map(|p| p.solo_ns(&m)).sum();
+        let t_bfs: f64 = bfs.phases.iter().map(|p| p.solo_ns(&m)).sum();
+        assert!(t_one < t_bfs, "1-hop {t_one} vs full {t_bfs}");
+    }
+
+    #[test]
+    fn constructor_clamps_k() {
+        assert_eq!(KHop::new(0, 0).k, 1);
+    }
+}

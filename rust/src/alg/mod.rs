@@ -1,23 +1,36 @@
-//! Graph algorithms, paper §III.
+//! Graph algorithms, paper §III, behind the open [`Analysis`] query API.
 //!
-//! Each algorithm exists in two forms:
+//! Each analysis exists in two forms:
 //!
 //! * a **host oracle** ([`oracle`]) — the plain, obviously-correct
 //!   implementation used to validate functional results;
-//! * a **Pathfinder execution** ([`bfs`], [`cc`]) — the algorithm run
-//!   functionally over the real graph while emitting the per-phase
-//!   [`crate::sim::PhaseDemand`] resource vectors the simulator engines
-//!   charge time for. The emission follows the paper's implementation
-//!   notes: the tuned BFS trades thread migrations for non-migrating
-//!   remote writes (§III, [10]); connected components is Figure 2 —
-//!   Shiloach-Vishkin with MSP `remote_min` hooks, a view-0 `changed`
-//!   flag reduced by a migrating thread, and a pointer-jumping compress.
+//! * a **Pathfinder execution** ([`bfs`], [`cc`], [`sssp`], [`khop`]) —
+//!   the algorithm run functionally over the real graph while emitting the
+//!   per-phase [`crate::sim::PhaseDemand`] resource vectors the simulator
+//!   engines charge time for. The emission follows the paper's
+//!   implementation notes: the tuned BFS trades thread migrations for
+//!   non-migrating remote writes (§III, [10]); connected components is
+//!   Figure 2 — Shiloach-Vishkin with MSP `remote_min` hooks, a view-0
+//!   `changed` flag reduced by a migrating thread, and a pointer-jumping
+//!   compress; shortest paths is delta-stepping on the same `remote_min`
+//!   hook; k-hop is the BFS truncated at depth k.
+//!
+//! The [`analysis`] module defines the [`Analysis`] trait every workload
+//! implements and the coordinator schedules; [`registry`] maps class
+//! labels to factories so new analyses plug in without touching the
+//! serving layers (see DESIGN.md §Query-API).
 
+pub mod analysis;
 pub mod bfs;
 pub mod cc;
+pub mod khop;
 pub mod oracle;
-pub mod query;
+pub mod registry;
+pub mod sssp;
 
-pub use bfs::{bfs_run, bfs_run_offset, BfsRun};
-pub use cc::{cc_run, cc_run_offset, CcRun};
-pub use query::{Query, QueryOutput};
+pub use analysis::{Analysis, QueryOutput};
+pub use bfs::{bfs_run, bfs_run_capped, bfs_run_offset, Bfs, BfsRun};
+pub use cc::{cc_run, cc_run_offset, Cc, CcRun};
+pub use khop::{khop_run, khop_run_offset, KHop, KhopRun};
+pub use registry::{AnalysisFactory, AnalysisRegistry};
+pub use sssp::{edge_weight, sssp_run, sssp_run_offset, Sssp, SsspRun};

@@ -2,10 +2,13 @@
 //!
 //! These never touch the simulator; they exist so every Pathfinder (and
 //! baseline-engine) result can be checked against an independent
-//! implementation: plain queue BFS and union-find connected components.
+//! implementation: plain queue BFS, union-find connected components,
+//! binary-heap Dijkstra (over the synthesized [`crate::alg::sssp`]
+//! weights), and truncated-BFS k-hop levels.
 
 use crate::graph::csr::Csr;
-use std::collections::VecDeque;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
 
 /// Plain FIFO breadth-first search. Returns per-vertex levels, -1 where
 /// unreachable from `src`.
@@ -77,6 +80,68 @@ pub fn check_bfs(g: &Csr, src: u32, levels: &[i64]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Plain binary-heap Dijkstra over the synthesized edge weights
+/// ([`crate::alg::sssp::edge_weight`]). Returns per-vertex shortest
+/// distances, -1 where unreachable from `src`.
+pub fn sssp_dist(g: &Csr, src: u32) -> Vec<i64> {
+    let n = g.n();
+    let mut dist = vec![i64::MAX; n];
+    dist[src as usize] = 0;
+    let mut heap = BinaryHeap::new();
+    heap.push(Reverse((0i64, src)));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        if d > dist[u as usize] {
+            continue; // stale heap entry
+        }
+        for &v in g.neighbors(u) {
+            let nd = d + crate::alg::sssp::edge_weight(u, v) as i64;
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(Reverse((nd, v)));
+            }
+        }
+    }
+    dist.into_iter().map(|d| if d == i64::MAX { -1 } else { d }).collect()
+}
+
+/// K-hop truth: BFS levels truncated at `k` (deeper vertices become -1).
+pub fn khop_levels(g: &Csr, src: u32, k: u32) -> Vec<i64> {
+    bfs_levels(g, src)
+        .into_iter()
+        .map(|l| if l >= 0 && l <= k as i64 { l } else { -1 })
+        .collect()
+}
+
+/// Check that `dist` equals Dijkstra's distances from `src`.
+pub fn check_sssp(g: &Csr, src: u32, dist: &[i64]) -> anyhow::Result<()> {
+    anyhow::ensure!(dist.len() == g.n(), "dist length mismatch");
+    let truth = sssp_dist(g, src);
+    for v in 0..g.n() {
+        anyhow::ensure!(
+            dist[v] == truth[v],
+            "vertex {v}: distance {} but oracle says {}",
+            dist[v],
+            truth[v]
+        );
+    }
+    Ok(())
+}
+
+/// Check that `levels` is the k-hop truncation of the BFS levels.
+pub fn check_khop(g: &Csr, src: u32, k: u32, levels: &[i64]) -> anyhow::Result<()> {
+    anyhow::ensure!(levels.len() == g.n(), "levels length mismatch");
+    let truth = khop_levels(g, src, k);
+    for v in 0..g.n() {
+        anyhow::ensure!(
+            levels[v] == truth[v],
+            "vertex {v}: k-hop level {} but oracle says {}",
+            levels[v],
+            truth[v]
+        );
+    }
+    Ok(())
+}
+
 /// Check that `labels` equals the union-find component-minimum labeling.
 pub fn check_cc(g: &Csr, labels: &[i64]) -> anyhow::Result<()> {
     anyhow::ensure!(labels.len() == g.n(), "labels length mismatch");
@@ -127,6 +192,35 @@ mod tests {
         let edges: Vec<(u32, u32)> = (0..63u32).map(|i| (i, i + 1)).collect();
         let g = build_undirected_csr(64, &edges);
         assert!(cc_labels(&g).iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn dijkstra_on_known_weights() {
+        // Path 0-1-2: distances are cumulative edge weights.
+        let g = build_undirected_csr(3, &[(0, 1), (1, 2)]);
+        let w01 = crate::alg::sssp::edge_weight(0, 1) as i64;
+        let w12 = crate::alg::sssp::edge_weight(1, 2) as i64;
+        assert_eq!(sssp_dist(&g, 0), vec![0, w01, w01 + w12]);
+    }
+
+    #[test]
+    fn dijkstra_prefers_lighter_detours() {
+        // Triangle 0-1, 1-2, 0-2: d(0,2) = min(w02, w01 + w12).
+        let g = build_undirected_csr(3, &[(0, 1), (1, 2), (0, 2)]);
+        let w01 = crate::alg::sssp::edge_weight(0, 1) as i64;
+        let w12 = crate::alg::sssp::edge_weight(1, 2) as i64;
+        let w02 = crate::alg::sssp::edge_weight(0, 2) as i64;
+        assert_eq!(sssp_dist(&g, 0)[2], w02.min(w01 + w12));
+    }
+
+    #[test]
+    fn khop_truncation() {
+        let edges: Vec<(u32, u32)> = (0..9u32).map(|i| (i, i + 1)).collect();
+        let g = build_undirected_csr(10, &edges);
+        let l = khop_levels(&g, 0, 2);
+        assert_eq!(&l[..4], &[0, 1, 2, -1]);
+        check_khop(&g, 0, 2, &l).unwrap();
+        assert!(check_khop(&g, 0, 1, &l).is_err());
     }
 
     #[test]

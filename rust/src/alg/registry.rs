@@ -1,0 +1,118 @@
+//! The analysis registry: label → factory, the extension point that makes
+//! the coordinator workload-open.
+//!
+//! The CLI (`--mix bfs=0.8,sssp=0.2`), the service's
+//! [`crate::coordinator::service::WorkloadSpec`] parser, and the property
+//! tests all resolve analysis classes by label through a registry instead
+//! of matching on a closed type. [`AnalysisRegistry::builtin`] registers
+//! the four shipped analyses; embedders add their own with
+//! [`AnalysisRegistry::register`] and every layer above picks them up.
+
+use crate::alg::analysis::Analysis;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Builds one analysis instance rooted at a source vertex. Source-free
+/// analyses (CC) ignore the argument.
+pub type AnalysisFactory = Arc<dyn Fn(u32) -> Arc<dyn Analysis> + Send + Sync>;
+
+/// Label-keyed analysis factories.
+#[derive(Clone)]
+pub struct AnalysisRegistry {
+    entries: BTreeMap<&'static str, AnalysisFactory>,
+}
+
+impl AnalysisRegistry {
+    /// An empty registry (embedders composing their own catalog).
+    pub fn empty() -> Self {
+        AnalysisRegistry { entries: BTreeMap::new() }
+    }
+
+    /// The four shipped analyses: `bfs`, `cc`, `sssp`, and `khop`
+    /// (2-hop neighborhoods by default).
+    pub fn builtin() -> Self {
+        let mut r = Self::empty();
+        r.register("bfs", Arc::new(|src| -> Arc<dyn Analysis> {
+            Arc::new(super::bfs::Bfs { src })
+        }));
+        r.register("cc", Arc::new(|_src| -> Arc<dyn Analysis> { Arc::new(super::cc::Cc) }));
+        r.register("sssp", Arc::new(|src| -> Arc<dyn Analysis> {
+            Arc::new(super::sssp::Sssp { src })
+        }));
+        r.register("khop", Arc::new(|src| -> Arc<dyn Analysis> {
+            Arc::new(super::khop::KHop::new(src, 2))
+        }));
+        r
+    }
+
+    /// Register (or replace) a factory under `label`.
+    pub fn register(&mut self, label: &'static str, factory: AnalysisFactory) {
+        self.entries.insert(label, factory);
+    }
+
+    /// Build an instance of class `label` rooted at `src`.
+    pub fn build(&self, label: &str, src: u32) -> anyhow::Result<Arc<dyn Analysis>> {
+        match self.entries.get(label) {
+            Some(f) => Ok(f(src)),
+            None => anyhow::bail!(
+                "unknown analysis {label:?} (registered: {})",
+                self.labels().join(", ")
+            ),
+        }
+    }
+
+    /// The factory registered under `label`, if any.
+    pub fn factory(&self, label: &str) -> Option<(&'static str, AnalysisFactory)> {
+        self.entries.get_key_value(label).map(|(k, v)| (*k, v.clone()))
+    }
+
+    /// Registered labels, sorted.
+    pub fn labels(&self) -> Vec<&'static str> {
+        self.entries.keys().copied().collect()
+    }
+
+    pub fn contains(&self, label: &str) -> bool {
+        self.entries.contains_key(label)
+    }
+}
+
+impl std::fmt::Debug for AnalysisRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("AnalysisRegistry").field("labels", &self.labels()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::khop::KHop;
+
+    #[test]
+    fn builtin_covers_four_classes() {
+        let r = AnalysisRegistry::builtin();
+        assert_eq!(r.labels(), vec!["bfs", "cc", "khop", "sssp"]);
+        for label in r.labels() {
+            let a = r.build(label, 7).unwrap();
+            assert_eq!(a.label(), label);
+        }
+    }
+
+    #[test]
+    fn unknown_label_names_the_catalog() {
+        let r = AnalysisRegistry::builtin();
+        let err = r.build("pagerank", 0).unwrap_err().to_string();
+        assert!(err.contains("pagerank") && err.contains("bfs"), "{err}");
+    }
+
+    #[test]
+    fn registration_is_open() {
+        let mut r = AnalysisRegistry::empty();
+        assert!(!r.contains("khop5"));
+        r.register(
+            "khop5",
+            Arc::new(|src| -> Arc<dyn crate::alg::Analysis> { Arc::new(KHop::new(src, 5)) }),
+        );
+        let a = r.build("khop5", 3).unwrap();
+        assert_eq!(a.describe(), "khop(src=3,k=5)");
+    }
+}

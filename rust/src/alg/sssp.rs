@@ -1,0 +1,317 @@
+//! Single-source shortest paths by delta-stepping on the MSP `remote_min`
+//! hook — the natural sibling of Figure 2's connected components.
+//!
+//! The Pathfinder's memory-side processors give distance relaxation the
+//! same shape CC's hook sweep has: `remote_min(&D[v], D[u] + w(u,v))` is a
+//! read-modify-write cycle at `v`'s home channel, no thread migration, the
+//! issuing core keeps running (§III). Delta-stepping organizes relaxations
+//! into buckets of width Δ so the demand phases mirror the algorithm's
+//! synchronous structure:
+//!
+//! * **light rounds** — for the current bucket's frontier, each vertex's
+//!   worker is launched on its home node (migration + spawn), reads its
+//!   own distance record, streams its edge block, and issues one MSP
+//!   `remote_min` per *light* edge (w ≤ Δ). Re-inserted vertices trigger
+//!   further rounds until the bucket drains;
+//! * **one heavy round** — the bucket's settled set relaxes its *heavy*
+//!   edges (w > Δ) once, targeting strictly later buckets.
+//!
+//! The graph is unweighted on disk; weights are synthesized per edge by a
+//! deterministic symmetric hash ([`edge_weight`], 1..=[`MAX_WEIGHT`]), so
+//! the sim execution and the Dijkstra oracle
+//! ([`crate::alg::oracle::sssp_dist`]) always agree on the instance.
+
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::alg::oracle;
+use crate::graph::csr::Csr;
+use crate::sim::demand::{DemandBuilder, PhaseDemand};
+use crate::sim::machine::Machine;
+use std::collections::BTreeMap;
+
+/// Largest synthesized edge weight (weights are 1..=MAX_WEIGHT).
+pub const MAX_WEIGHT: u64 = 8;
+
+/// Delta-stepping bucket width. Edges with w ≤ DELTA are "light".
+pub const DELTA: u64 = 4;
+
+/// Deterministic symmetric weight of edge (u, v): a SplitMix64-style hash
+/// of the unordered endpoint pair, mapped to 1..=[`MAX_WEIGHT`]. Both
+/// directions of an undirected edge get the same weight, and the oracle
+/// uses this exact function.
+pub fn edge_weight(u: u32, v: u32) -> u64 {
+    let (a, b) = if u <= v { (u, v) } else { (v, u) };
+    let mut x = ((a as u64) << 32) | b as u64;
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    1 + (x % MAX_WEIGHT)
+}
+
+/// Single-source shortest paths from `src`, as a schedulable [`Analysis`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Sssp {
+    /// Source vertex.
+    pub src: u32,
+}
+
+impl Analysis for Sssp {
+    fn label(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn describe(&self) -> String {
+        format!("sssp(src={})", self.src)
+    }
+
+    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        let run = sssp_run_offset(g, m, self.src, stripe_offset);
+        QueryOutput { label: self.label(), values: run.dist, phases: run.phases }
+    }
+
+    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+        oracle::check_sssp(g, self.src, values)
+    }
+}
+
+/// Result of one functional+demand delta-stepping execution.
+#[derive(Debug, Clone)]
+pub struct SsspRun {
+    /// Per-vertex shortest distance from the source, -1 if unreachable.
+    pub dist: Vec<i64>,
+    /// One demand vector per relaxation round (light rounds + heavy
+    /// rounds, in execution order).
+    pub phases: Vec<PhaseDemand>,
+    /// Number of buckets processed.
+    pub buckets: usize,
+    /// Total edge relaxations issued (light + heavy).
+    pub relaxations: usize,
+}
+
+/// Run delta-stepping from `src` at the canonical placement.
+pub fn sssp_run(g: &Csr, m: &Machine, src: u32) -> SsspRun {
+    sssp_run_offset(g, m, src, 0)
+}
+
+/// Run delta-stepping with an explicit stripe offset for the query's own
+/// distance array (see [`crate::alg::bfs::bfs_run_offset`]).
+pub fn sssp_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> SsspRun {
+    let layout = m.layout;
+    let nodes = m.nodes();
+    let channels = m.cfg.channels_per_node;
+    let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+    let cfg = &m.cfg;
+    let n = g.n();
+
+    const UNREACHED: i64 = i64::MAX;
+    let mut dist = vec![UNREACHED; n];
+    dist[src as usize] = 0;
+
+    // Buckets keyed by dist / DELTA; processed in ascending order. Light
+    // relaxations from bucket i can only target buckets >= i, heavy ones
+    // strictly > i, so no earlier bucket is ever refilled.
+    let mut buckets: BTreeMap<u64, Vec<u32>> = BTreeMap::new();
+    buckets.insert(0, vec![src]);
+
+    let mut phases = Vec::new();
+    let mut buckets_done = 0usize;
+    let mut relaxations = 0usize;
+
+    while let Some((&bi, _)) = buckets.iter().next() {
+        buckets_done += 1;
+        // Every vertex removed from bucket bi; relaxes heavy edges once.
+        let mut settled: Vec<u32> = Vec::new();
+
+        // --- Light rounds: drain bucket bi. ---
+        loop {
+            let Some(mut frontier) = buckets.remove(&bi) else { break };
+            // Keep only vertices whose final distance still lands in this
+            // bucket (stale insertions are re-bucketed copies).
+            frontier.retain(|&v| {
+                dist[v as usize] != UNREACHED && dist[v as usize] as u64 / DELTA == bi
+            });
+            frontier.sort_unstable();
+            frontier.dedup();
+            if frontier.is_empty() {
+                break;
+            }
+
+            let mut b = DemandBuilder::new(nodes, channels);
+            let mut ops = 0.0f64;
+            for &u in &frontier {
+                settled.push(u);
+                let un = layout.node_of(u);
+                // Worker launch on u's home node.
+                b.migration(un, 1.0);
+                b.fabric_bytes(un, 64.0);
+                b.instructions(un, cfg.spawn_instr);
+                // Own distance record read.
+                b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0);
+                ops += 1.0;
+                // Edge block stream (co-located with the vertex, §IV-A).
+                b.stream_bytes(un, g.edge_block_bytes(u) as f64);
+                b.instructions(un, g.degree(u) as f64 * cfg.instr_per_edge);
+                let du = dist[u as usize];
+                for &v in g.neighbors(u) {
+                    let w = edge_weight(u, v);
+                    if w > DELTA {
+                        continue; // heavy edge: relaxed after the bucket drains
+                    }
+                    // remote_min at v's home channel (MSP RMW, no migration).
+                    let vn = layout.node_of(v);
+                    b.msp_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
+                    ops += 1.0;
+                    relaxations += 1;
+                    if vn != un {
+                        b.fabric_bytes(un, 16.0);
+                    }
+                    let nd = du + w as i64;
+                    if nd < dist[v as usize] {
+                        dist[v as usize] = nd;
+                        buckets.entry(nd as u64 / DELTA).or_default().push(v);
+                    }
+                }
+            }
+            b.parallelism(ops.min(contexts_total));
+            phases.push(b.finish());
+        }
+
+        // --- One heavy round over the bucket's settled set. ---
+        settled.sort_unstable();
+        settled.dedup();
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut ops = 0.0f64;
+        for &u in &settled {
+            let un = layout.node_of(u);
+            let du = dist[u as usize];
+            let mut touched = false;
+            for &v in g.neighbors(u) {
+                let w = edge_weight(u, v);
+                if w <= DELTA {
+                    continue;
+                }
+                if !touched {
+                    // Re-visit u's record + edge block for the heavy pass.
+                    b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0);
+                    b.stream_bytes(un, g.edge_block_bytes(u) as f64);
+                    ops += 1.0;
+                    touched = true;
+                }
+                let vn = layout.node_of(v);
+                b.msp_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
+                b.instructions(un, cfg.instr_per_edge);
+                ops += 1.0;
+                relaxations += 1;
+                if vn != un {
+                    b.fabric_bytes(un, 16.0);
+                }
+                let nd = du + w as i64;
+                if nd < dist[v as usize] {
+                    dist[v as usize] = nd;
+                    buckets.entry(nd as u64 / DELTA).or_default().push(v);
+                }
+            }
+        }
+        if ops > 0.0 {
+            b.parallelism(ops.min(contexts_total));
+            phases.push(b.finish());
+        }
+    }
+
+    let dist = dist.into_iter().map(|d| if d == UNREACHED { -1 } else { d }).collect();
+    SsspRun { dist, phases, buckets: buckets_done, relaxations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = seed;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn weights_symmetric_and_bounded() {
+        for (u, v) in [(0u32, 1u32), (5, 2), (100, 100), (7, 1000)] {
+            let w = edge_weight(u, v);
+            assert_eq!(w, edge_weight(v, u));
+            assert!((1..=MAX_WEIGHT).contains(&w), "w({u},{v}) = {w}");
+        }
+        // Not all weights equal (the hash actually varies).
+        let ws: std::collections::HashSet<u64> =
+            (0..64u32).map(|v| edge_weight(v, v + 1)).collect();
+        assert!(ws.len() > 1);
+    }
+
+    #[test]
+    fn distances_match_dijkstra_on_rmat() {
+        let g = rmat(10, 7);
+        let m = m8();
+        for src in [0u32, 13, 500] {
+            let run = sssp_run(&g, &m, src);
+            oracle::check_sssp(&g, src, &run.dist).unwrap();
+        }
+    }
+
+    #[test]
+    fn distances_match_dijkstra_on_path_and_star() {
+        let path: Vec<(u32, u32)> = (0..49u32).map(|i| (i, i + 1)).collect();
+        let star: Vec<(u32, u32)> = (1..=32u32).map(|v| (0, v)).collect();
+        let m = m8();
+        for (n, edges) in [(50usize, path), (33, star)] {
+            let g = build_undirected_csr(n, &edges);
+            let run = sssp_run(&g, &m, 0);
+            oracle::check_sssp(&g, 0, &run.dist).unwrap();
+        }
+    }
+
+    #[test]
+    fn unreachable_vertices_are_minus_one() {
+        let g = build_undirected_csr(6, &[(0, 1), (3, 4)]);
+        let run = sssp_run(&g, &m8(), 0);
+        assert_eq!(run.dist[0], 0);
+        assert_eq!(run.dist[1], edge_weight(0, 1) as i64);
+        assert_eq!(run.dist[2], -1);
+        assert_eq!(run.dist[3], -1);
+    }
+
+    #[test]
+    fn sssp_costs_more_than_bfs_and_uses_msp() {
+        // Same traversal structure as BFS but every relaxation is an MSP
+        // RMW, and buckets add rounds — SSSP should be the dearer query.
+        let g = rmat(10, 3);
+        let m = m8();
+        let sssp = sssp_run(&g, &m, 5);
+        let bfs = crate::alg::bfs::bfs_run(&g, &m, 5);
+        let t_sssp: f64 = sssp.phases.iter().map(|p| p.solo_ns(&m)).sum();
+        let t_bfs: f64 = bfs.phases.iter().map(|p| p.solo_ns(&m)).sum();
+        assert!(t_sssp > t_bfs, "sssp {t_sssp} vs bfs {t_bfs}");
+        let msp: f64 = sssp.phases.iter().flat_map(|p| p.msp_ops.iter()).sum();
+        assert!(msp > 0.0, "relaxations must be MSP remote_min ops");
+    }
+
+    #[test]
+    fn offsets_do_not_change_results() {
+        let g = rmat(9, 11);
+        let m = m8();
+        let base = sssp_run_offset(&g, &m, 2, 0);
+        for offset in [1usize, 5] {
+            let run = sssp_run_offset(&g, &m, 2, offset);
+            assert_eq!(run.dist, base.dist);
+            for (a, b) in run.phases.iter().zip(&base.phases) {
+                assert_eq!(a.channel_ops, b.channel_ops);
+            }
+        }
+    }
+}

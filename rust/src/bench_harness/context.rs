@@ -2,11 +2,10 @@
 
 use anyhow::Result;
 
-use crate::alg::Query;
 use crate::config::experiment::ExperimentConfig;
 use crate::config::machine::MachineConfig;
 use crate::coordinator::planner;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, QueryRequest};
 use crate::graph::builder::build_undirected_csr;
 use crate::graph::csr::Csr;
 use crate::graph::rmat::Rmat;
@@ -26,8 +25,8 @@ pub struct Harness {
 /// A machine bound to the harness graph with its BFS queries pre-prepared.
 pub struct MachineBench<'g> {
     pub coordinator: Coordinator<'g>,
-    /// The prepared BFS queries (max_queries of them).
-    pub queries: Vec<Query>,
+    /// The prepared BFS requests (max_queries of them).
+    pub queries: Vec<QueryRequest>,
     pub specs: Vec<QuerySpec>,
 }
 

@@ -1,7 +1,11 @@
-//! Run reports: per-query records, per-label quantiles (Table I),
+//! Run reports: per-query records, per-class quantiles (Table I),
 //! improvement percentages (Fig. 4), and counter summaries.
+//!
+//! Reporting is class-generic: records carry the analysis label from the
+//! request, and quantiles are available for any label that ran — a new
+//! [`crate::alg::Analysis`] shows up in reports without any change here.
 
-use crate::alg::Query;
+use crate::coordinator::request::{Priority, QueryRequest};
 use crate::sim::counters::Counters;
 use crate::sim::flow::FlowReport;
 use crate::sim::machine::Machine;
@@ -11,7 +15,12 @@ use crate::util::stats::{improvement_pct, Quantiles};
 #[derive(Debug, Clone)]
 pub struct QueryRecord {
     pub id: usize,
-    pub query: Query,
+    /// Analysis class label ("bfs", "cc", "sssp", ...).
+    pub label: &'static str,
+    /// Priority class the request carried.
+    pub priority: Priority,
+    /// Latency deadline (s from arrival), if the request had one.
+    pub deadline_s: Option<f64>,
     /// End-to-end latency in seconds (arrival to completion), NaN if the
     /// query was rejected by admission control.
     pub latency_s: f64,
@@ -25,9 +34,17 @@ impl QueryRecord {
     pub fn rejected(&self) -> bool {
         self.latency_s.is_nan()
     }
+
+    /// Completed but blew its deadline.
+    pub fn missed_deadline(&self) -> bool {
+        match self.deadline_s {
+            Some(d) => !self.rejected() && self.latency_s > d,
+            None => false,
+        }
+    }
 }
 
-/// Outcome of one coordinated run (one policy, one machine, one query set).
+/// Outcome of one coordinated run (one policy, one machine, one batch).
 #[derive(Debug, Clone)]
 pub struct RunReport {
     /// Policy label ("sequential" / "concurrent" / "concurrent(cap=N)").
@@ -50,17 +67,19 @@ impl RunReport {
     pub fn from_flow(
         policy: impl Into<String>,
         machine: &Machine,
-        queries: &[Query],
+        requests: &[QueryRequest],
         flow: &FlowReport,
     ) -> Self {
-        assert_eq!(queries.len(), flow.timings.len());
+        assert_eq!(requests.len(), flow.timings.len());
         let records = flow
             .timings
             .iter()
-            .zip(queries)
-            .map(|(t, q)| QueryRecord {
+            .zip(requests)
+            .map(|(t, req)| QueryRecord {
                 id: t.id,
-                query: *q,
+                label: req.label(),
+                priority: req.priority,
+                deadline_s: req.deadline_ns.map(|d| d * 1e-9),
                 latency_s: t.latency_ns() * 1e-9,
                 arrival_s: t.arrival_ns * 1e-9,
                 finish_s: t.finish_ns * 1e-9,
@@ -88,18 +107,28 @@ impl RunReport {
         self.records.len() - self.completed()
     }
 
+    /// Completed queries whose deadline was exceeded.
+    pub fn deadline_misses(&self) -> usize {
+        self.records.iter().filter(|r| r.missed_deadline()).count()
+    }
+
+    /// Distinct analysis labels in submission order of first appearance.
+    pub fn labels(&self) -> Vec<&'static str> {
+        crate::coordinator::request::distinct_labels(self.records.iter().map(|r| r.label))
+    }
+
     /// Latencies (s) of completed queries, optionally filtered by label.
     pub fn latencies(&self, label: Option<&str>) -> Vec<f64> {
         self.records
             .iter()
             .filter(|r| !r.rejected())
-            .filter(|r| label.is_none_or(|l| r.query.label() == l))
+            .filter(|r| label.is_none_or(|l| r.label == l))
             .map(|r| r.latency_s)
             .collect()
     }
 
-    /// Table-I style five-number summary of per-query latency (s).
-    /// None if no completed query matches.
+    /// Quantile summary of per-query latency (s), optionally filtered by
+    /// label. None if no completed query matches.
     pub fn latency_quantiles(&self, label: Option<&str>) -> Option<Quantiles> {
         let xs = self.latencies(label);
         if xs.is_empty() {
@@ -107,6 +136,15 @@ impl RunReport {
         } else {
             Some(Quantiles::from_samples(&xs))
         }
+    }
+
+    /// Latency quantiles of every class that completed at least one query,
+    /// in submission order of first appearance.
+    pub fn per_class_quantiles(&self) -> Vec<(&'static str, Quantiles)> {
+        self.labels()
+            .into_iter()
+            .filter_map(|l| self.latency_quantiles(Some(l)).map(|q| (l, q)))
+            .collect()
     }
 
     /// Mean completed-query latency (s).
@@ -158,6 +196,7 @@ impl ImprovementRow {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::alg::{Bfs, Cc};
     use crate::config::machine::MachineConfig;
     use crate::sim::flow::QueryTiming;
 
@@ -165,7 +204,7 @@ mod tests {
         Machine::new(MachineConfig::pathfinder_8())
     }
 
-    fn flow_with(latencies_ns: &[f64]) -> (Vec<Query>, FlowReport) {
+    fn flow_with(latencies_ns: &[f64]) -> (Vec<QueryRequest>, FlowReport) {
         let timings: Vec<QueryTiming> = latencies_ns
             .iter()
             .enumerate()
@@ -179,7 +218,8 @@ mod tests {
             })
             .collect();
         let makespan = latencies_ns.iter().copied().fold(0.0, f64::max);
-        let queries = vec![Query::Bfs { src: 0 }; latencies_ns.len()];
+        let requests: Vec<QueryRequest> =
+            latencies_ns.iter().map(|_| QueryRequest::new(Bfs { src: 0 })).collect();
         let flow = FlowReport {
             timings,
             makespan_ns: makespan,
@@ -187,7 +227,7 @@ mod tests {
             peak_concurrency: latencies_ns.len(),
             rejected: vec![],
         };
-        (queries, flow)
+        (requests, flow)
     }
 
     #[test]
@@ -203,6 +243,10 @@ mod tests {
         assert_eq!(rep.makespan_s, 4.0);
         assert_eq!(rep.throughput_qps(), 1.0);
         assert!(rep.latency_quantiles(Some("cc")).is_none());
+        assert_eq!(rep.labels(), vec!["bfs"]);
+        let per_class = rep.per_class_quantiles();
+        assert_eq!(per_class.len(), 1);
+        assert_eq!(per_class[0].0, "bfs");
     }
 
     #[test]
@@ -215,6 +259,28 @@ mod tests {
         assert_eq!(rep.completed(), 1);
         assert_eq!(rep.rejections(), 1);
         assert_eq!(rep.latencies(None), vec![1.0]);
+    }
+
+    #[test]
+    fn deadline_misses_counted() {
+        let (mut qs, flow) = flow_with(&[1e9, 2e9, 3e9]);
+        qs[0] = qs[0].clone().with_deadline_ns(5e8); // 0.5 s budget, 1 s latency
+        qs[1] = qs[1].clone().with_deadline_ns(4e9); // met
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert_eq!(rep.deadline_misses(), 1);
+        assert!(rep.records[0].missed_deadline());
+        assert!(!rep.records[1].missed_deadline());
+        assert!(!rep.records[2].missed_deadline()); // no deadline set
+    }
+
+    #[test]
+    fn labels_preserve_first_appearance_order() {
+        let (mut qs, flow) = flow_with(&[1e9, 2e9, 3e9]);
+        qs[1] = QueryRequest::new(Cc);
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert_eq!(rep.labels(), vec!["bfs", "cc"]);
     }
 
     #[test]

@@ -3,31 +3,36 @@
 //! The paper's experiments submit batches of queries either **sequentially**
 //! (one finishes before the next starts) or **concurrently** (all at once,
 //! "without any explicit scheduling or allocation of resources", §I) and
-//! compare end-to-end times. This module is the system around that:
+//! compare end-to-end times. This module is the system around that,
+//! workload-open through [`crate::alg::Analysis`] and [`QueryRequest`]:
 //!
-//! * [`planner`] — turns workload descriptions (query counts, BFS/CC
-//!   mixes, arrival processes) into concrete query lists;
+//! * [`request`] — a [`QueryRequest`] bundles an analysis with scheduling
+//!   metadata (arrival time, priority class, optional deadline);
+//! * [`planner`] — turns workload descriptions (query counts, class
+//!   mixes, arrival processes) into concrete request lists;
 //! * [`admission`] — thread-context memory accounting; the §IV-B
 //!   256-queries-on-8-nodes exhaustion becomes a graceful rejection or a
 //!   FIFO wait;
-//! * [`scheduler`] — executes a query list under a policy (sequential /
+//! * [`scheduler`] — executes a request batch under a policy (sequential /
 //!   concurrent / capped-concurrent) on the flow engine, caching and
-//!   rotating demand where queries are identical;
-//! * [`metrics`] — per-query records, per-label quantiles (Table I),
+//!   rotating demand per analysis kind where instances are identical;
+//! * [`metrics`] — per-query records, per-class quantiles (Table I),
 //!   improvement percentages (Fig. 4), utilization counters;
 //! * [`service`] — a long-running service facade: queries arrive over
-//!   (simulated) time, are admitted or rejected, and per-class latency is
-//!   tracked — what a web-accessible graph database deployment of the
-//!   Pathfinder would look like (§I).
+//!   (simulated) time from a declarative [`WorkloadSpec`], are admitted or
+//!   rejected, and per-class latency is tracked — what a web-accessible
+//!   graph database deployment of the Pathfinder would look like (§I).
 
 pub mod admission;
 pub mod metrics;
 pub mod planner;
+pub mod request;
 pub mod scheduler;
 pub mod service;
 
 pub use admission::ContextLedger;
 pub use metrics::{ImprovementRow, QueryRecord, RunReport};
 pub use planner::{arrival_times, bfs_queries, mix_queries};
+pub use request::{Priority, QueryRequest};
 pub use scheduler::{Coordinator, Policy};
-pub use service::{GraphService, ServiceConfig, ServiceReport};
+pub use service::{GraphService, ServiceConfig, ServiceReport, WorkloadClass, WorkloadSpec};

@@ -1,24 +1,43 @@
-//! Workload planning: concrete query lists from workload descriptions.
+//! Workload planning: concrete request lists from workload descriptions.
 
-use crate::alg::Query;
+use crate::alg::{Bfs, Cc, KHop, Sssp};
 use crate::config::workload::MixPoint;
+use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
 use crate::graph::sample::bfs_sources;
 use crate::util::rng::SplitMix64;
 
-/// `k` BFS queries from unique, reproducibly pseudorandom, non-isolated
+/// `k` BFS requests from unique, reproducibly pseudorandom, non-isolated
 /// sources (paper §IV-A).
-pub fn bfs_queries(g: &Csr, k: usize, seed: u64) -> Vec<Query> {
-    bfs_sources(g, k, seed).into_iter().map(|src| Query::Bfs { src }).collect()
+pub fn bfs_queries(g: &Csr, k: usize, seed: u64) -> Vec<QueryRequest> {
+    bfs_sources(g, k, seed).into_iter().map(|src| QueryRequest::new(Bfs { src })).collect()
 }
 
-/// A Table-II style mix: `mix.bfs` BFS queries + `mix.cc` connected
+/// `k` delta-stepping SSSP requests from unique non-isolated sources.
+pub fn sssp_queries(g: &Csr, k: usize, seed: u64) -> Vec<QueryRequest> {
+    bfs_sources(g, k, seed).into_iter().map(|src| QueryRequest::new(Sssp { src })).collect()
+}
+
+/// `k` hop-bounded neighborhood requests from unique non-isolated sources.
+pub fn khop_queries(g: &Csr, k: usize, hops: u32, seed: u64) -> Vec<QueryRequest> {
+    bfs_sources(g, k, seed)
+        .into_iter()
+        .map(|src| QueryRequest::new(KHop::new(src, hops)))
+        .collect()
+}
+
+/// `k` connected-components requests (source-free).
+pub fn cc_queries(k: usize) -> Vec<QueryRequest> {
+    (0..k).map(|_| QueryRequest::new(Cc)).collect()
+}
+
+/// A Table-II style mix: `mix.bfs` BFS requests + `mix.cc` connected
 /// components evaluations. The *submission* order interleaves them
 /// round-robin-ish (a realistic mixed arrival stream); the paper's
 /// sequential baseline ("all the breadth-first searches followed by all the
 /// connected components evaluations", §IV-C) is produced by
 /// [`sequential_mix_order`].
-pub fn mix_queries(g: &Csr, mix: MixPoint, seed: u64) -> Vec<Query> {
+pub fn mix_queries(g: &Csr, mix: MixPoint, seed: u64) -> Vec<QueryRequest> {
     let bfs = bfs_queries(g, mix.bfs, seed);
     let mut out = Vec::with_capacity(mix.total());
     // Spread the CC queries evenly through the BFS stream.
@@ -27,25 +46,66 @@ pub fn mix_queries(g: &Csr, mix: MixPoint, seed: u64) -> Vec<Query> {
     let mut placed_cc = 0;
     for i in 0..mix.total() {
         if placed_cc < mix.cc && i % stride == stride - 1 {
-            out.push(Query::Cc);
+            out.push(QueryRequest::new(Cc));
             placed_cc += 1;
         } else if bi < bfs.len() {
-            out.push(bfs[bi]);
+            out.push(bfs[bi].clone());
             bi += 1;
         } else {
-            out.push(Query::Cc);
+            out.push(QueryRequest::new(Cc));
             placed_cc += 1;
         }
     }
     out
 }
 
-/// The paper's sequential ordering of a mix: all BFS first, then all CC.
-pub fn sequential_mix_order(queries: &[Query]) -> Vec<Query> {
-    let mut out: Vec<Query> =
-        queries.iter().copied().filter(|q| matches!(q, Query::Bfs { .. })).collect();
-    out.extend(queries.iter().copied().filter(|q| matches!(q, Query::Cc)));
+/// Interleave several per-class request lists into one mixed stream by
+/// fractional progress, so each class is spread evenly across the batch
+/// regardless of its share (the general form of [`mix_queries`]'s
+/// two-class interleave).
+pub fn interleave_classes(classes: Vec<Vec<QueryRequest>>) -> Vec<QueryRequest> {
+    let total: usize = classes.iter().map(|c| c.len()).sum();
+    let mut idx = vec![0usize; classes.len()];
+    let mut out = Vec::with_capacity(total);
+    for _ in 0..total {
+        // The class furthest behind its fractional progress goes next.
+        let mut best: Option<(usize, f64)> = None;
+        for (c, q) in classes.iter().enumerate() {
+            if idx[c] < q.len() {
+                let p = (idx[c] as f64 + 1.0) / q.len() as f64;
+                if best.is_none_or(|(_, bp)| p < bp) {
+                    best = Some((c, p));
+                }
+            }
+        }
+        let (c, _) = best.expect("total counted non-empty classes");
+        out.push(classes[c][idx[c]].clone());
+        idx[c] += 1;
+    }
     out
+}
+
+/// The paper's sequential ordering of a mixed stream, generalized: group
+/// requests by analysis class, classes in order of first appearance (for a
+/// BFS+CC mix this is exactly "all the breadth-first searches followed by
+/// all the connected components evaluations", §IV-C).
+pub fn sequential_mix_order(requests: &[QueryRequest]) -> Vec<QueryRequest> {
+    let labels =
+        crate::coordinator::request::distinct_labels(requests.iter().map(|r| r.label()));
+    let mut out = Vec::with_capacity(requests.len());
+    for label in labels {
+        out.extend(requests.iter().filter(|r| r.label() == label).cloned());
+    }
+    out
+}
+
+/// Overwrite each request's arrival time in place (one arrival per
+/// request).
+pub fn assign_arrivals(requests: &mut [QueryRequest], arrivals: &[f64]) {
+    assert_eq!(requests.len(), arrivals.len(), "one arrival per request");
+    for (r, &a) in requests.iter_mut().zip(arrivals) {
+        r.arrival_ns = a;
+    }
 }
 
 /// Poisson arrival times: `k` arrivals at `rate_per_s`, reproducible from
@@ -76,42 +136,99 @@ mod tests {
         build_undirected_csr(1 << 10, &r.edges())
     }
 
+    fn srcs_of(requests: &[QueryRequest]) -> Vec<String> {
+        requests.iter().map(|r| r.to_string()).collect()
+    }
+
     #[test]
     fn bfs_queries_unique_sources() {
         let g = g();
         let qs = bfs_queries(&g, 64, 7);
-        let mut srcs: Vec<u32> = qs
-            .iter()
-            .map(|q| match q {
-                Query::Bfs { src } => *src,
-                _ => panic!("not bfs"),
-            })
-            .collect();
+        assert!(qs.iter().all(|q| q.label() == "bfs"));
+        let mut srcs = srcs_of(&qs);
         srcs.sort_unstable();
         srcs.dedup();
         assert_eq!(srcs.len(), 64);
     }
 
+    /// Regression (API migration): `mix_queries` keeps its composition and
+    /// order invariants — exact per-class counts, CC spread through the
+    /// stream rather than bunched, BFS relative order preserved.
     #[test]
     fn mix_has_right_composition() {
         let g = g();
         let mix = MixPoint { bfs: 17, cc: 5 };
         let qs = mix_queries(&g, mix, 3);
         assert_eq!(qs.len(), 22);
-        assert_eq!(qs.iter().filter(|q| matches!(q, Query::Cc)).count(), 5);
+        assert_eq!(qs.iter().filter(|q| q.label() == "cc").count(), 5);
+        assert_eq!(qs.iter().filter(|q| q.label() == "bfs").count(), 17);
         // CC queries are spread out, not bunched at the end.
-        let first_cc = qs.iter().position(|q| matches!(q, Query::Cc)).unwrap();
+        let first_cc = qs.iter().position(|q| q.label() == "cc").unwrap();
         assert!(first_cc < 10, "first cc at {first_cc}");
+        // BFS sub-order matches the standalone plan (sources in seed order).
+        let plain = bfs_queries(&g, 17, 3);
+        let mixed_bfs: Vec<String> =
+            qs.iter().filter(|q| q.label() == "bfs").map(|q| q.to_string()).collect();
+        assert_eq!(mixed_bfs, srcs_of(&plain));
     }
 
+    /// Regression (API migration): the sequential baseline ordering still
+    /// groups whole classes, BFS first for a BFS+CC mix (§IV-C).
     #[test]
     fn sequential_order_groups_bfs_first() {
         let g = g();
         let qs = mix_queries(&g, MixPoint { bfs: 8, cc: 2 }, 3);
         let seq = sequential_mix_order(&qs);
         assert_eq!(seq.len(), 10);
-        assert!(seq[..8].iter().all(|q| matches!(q, Query::Bfs { .. })));
-        assert!(seq[8..].iter().all(|q| matches!(q, Query::Cc)));
+        assert!(seq[..8].iter().all(|q| q.label() == "bfs"));
+        assert!(seq[8..].iter().all(|q| q.label() == "cc"));
+    }
+
+    #[test]
+    fn sequential_order_is_class_generic() {
+        let g = g();
+        let stream = interleave_classes(vec![
+            khop_queries(&g, 3, 2, 1),
+            sssp_queries(&g, 2, 2),
+            cc_queries(2),
+        ]);
+        let seq = sequential_mix_order(&stream);
+        let labels: Vec<&str> = seq.iter().map(|q| q.label()).collect();
+        // Grouped by class, classes in first-appearance order.
+        let first_khop = labels.iter().position(|&l| l == "khop").unwrap();
+        let first_sssp = labels.iter().position(|&l| l == "sssp").unwrap();
+        let first_cc = labels.iter().position(|&l| l == "cc").unwrap();
+        assert!(labels[first_khop..first_khop + 3].iter().all(|&l| l == "khop"));
+        assert!(labels[first_sssp..first_sssp + 2].iter().all(|&l| l == "sssp"));
+        assert!(labels[first_cc..first_cc + 2].iter().all(|&l| l == "cc"));
+        assert_eq!(seq.len(), 7);
+    }
+
+    #[test]
+    fn interleave_spreads_minority_classes() {
+        let g = g();
+        let stream =
+            interleave_classes(vec![bfs_queries(&g, 12, 5), cc_queries(3)]);
+        assert_eq!(stream.len(), 15);
+        let cc_positions: Vec<usize> = stream
+            .iter()
+            .enumerate()
+            .filter(|(_, q)| q.label() == "cc")
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(cc_positions.len(), 3);
+        // Not all bunched at either end.
+        assert!(cc_positions[0] < 7, "{cc_positions:?}");
+        assert!(*cc_positions.last().unwrap() >= 7, "{cc_positions:?}");
+    }
+
+    #[test]
+    fn assign_arrivals_sets_each_request() {
+        let g = g();
+        let mut qs = bfs_queries(&g, 3, 9);
+        assign_arrivals(&mut qs, &[1.0, 2.0, 3.0]);
+        assert_eq!(qs[0].arrival_ns, 1.0);
+        assert_eq!(qs[2].arrival_ns, 3.0);
     }
 
     #[test]

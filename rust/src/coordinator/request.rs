@@ -1,0 +1,143 @@
+//! A scheduled unit of work: one [`Analysis`] plus scheduling metadata.
+//!
+//! The coordinator, planner, metrics and service all traffic in
+//! [`QueryRequest`]s. The analysis says *what* to compute; the request
+//! adds *when* it arrives, which priority class it belongs to, and an
+//! optional latency deadline — the knobs a serving deployment schedules
+//! and reports on. Priority and deadline are carried through to the
+//! per-query records today (deadline misses are counted in
+//! [`crate::coordinator::metrics::RunReport`]); priority-aware admission
+//! is a ROADMAP follow-up.
+
+use crate::alg::Analysis;
+use std::sync::Arc;
+
+/// Scheduling priority class of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Latency-sensitive, user-facing.
+    Interactive,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Throughput-oriented background work.
+    Batch,
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Priority::Interactive => write!(f, "interactive"),
+            Priority::Standard => write!(f, "standard"),
+            Priority::Batch => write!(f, "batch"),
+        }
+    }
+}
+
+/// One analysis submitted for execution, with scheduling metadata.
+#[derive(Debug, Clone)]
+pub struct QueryRequest {
+    /// The analysis to run.
+    pub analysis: Arc<dyn Analysis>,
+    /// Simulated arrival time (ns); 0 = present at batch start.
+    pub arrival_ns: f64,
+    /// Priority class.
+    pub priority: Priority,
+    /// Optional end-to-end latency budget (ns, measured from arrival).
+    pub deadline_ns: Option<f64>,
+}
+
+impl QueryRequest {
+    /// Wrap a concrete analysis with default metadata (arrival 0,
+    /// [`Priority::Standard`], no deadline).
+    pub fn new<A: Analysis + 'static>(analysis: A) -> Self {
+        Self::from_arc(Arc::new(analysis))
+    }
+
+    /// Wrap an already-shared analysis with default metadata.
+    pub fn from_arc(analysis: Arc<dyn Analysis>) -> Self {
+        QueryRequest { analysis, arrival_ns: 0.0, priority: Priority::default(), deadline_ns: None }
+    }
+
+    /// Set the arrival time (ns).
+    pub fn at(mut self, arrival_ns: f64) -> Self {
+        self.arrival_ns = arrival_ns;
+        self
+    }
+
+    /// Set the priority class.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set a latency deadline (ns from arrival).
+    pub fn with_deadline_ns(mut self, deadline_ns: f64) -> Self {
+        self.deadline_ns = Some(deadline_ns);
+        self
+    }
+
+    /// The analysis's class label.
+    pub fn label(&self) -> &'static str {
+        self.analysis.label()
+    }
+}
+
+impl std::fmt::Display for QueryRequest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.analysis.describe())
+    }
+}
+
+/// Distinct labels in order of first appearance — the canonical class
+/// ordering shared by per-class reports
+/// ([`crate::coordinator::metrics::RunReport::labels`]) and the
+/// sequential baseline
+/// ([`crate::coordinator::planner::sequential_mix_order`]).
+pub fn distinct_labels(labels: impl Iterator<Item = &'static str>) -> Vec<&'static str> {
+    let mut out: Vec<&'static str> = Vec::new();
+    for l in labels {
+        if !out.contains(&l) {
+            out.push(l);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::{Bfs, Cc};
+
+    #[test]
+    fn defaults_and_builders() {
+        let r = QueryRequest::new(Bfs { src: 42 });
+        assert_eq!(r.arrival_ns, 0.0);
+        assert_eq!(r.priority, Priority::Standard);
+        assert!(r.deadline_ns.is_none());
+        assert_eq!(r.label(), "bfs");
+        assert_eq!(r.to_string(), "bfs(src=42)");
+
+        let r = QueryRequest::new(Cc)
+            .at(1e9)
+            .with_priority(Priority::Interactive)
+            .with_deadline_ns(5e9);
+        assert_eq!(r.arrival_ns, 1e9);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline_ns, Some(5e9));
+        assert_eq!(r.to_string(), "cc");
+    }
+
+    #[test]
+    fn clone_shares_the_analysis() {
+        let r = QueryRequest::new(Bfs { src: 1 });
+        let c = r.clone();
+        assert!(Arc::ptr_eq(&r.analysis, &c.analysis));
+    }
+
+    #[test]
+    fn priority_orders_interactive_first() {
+        assert!(Priority::Interactive < Priority::Standard);
+        assert!(Priority::Standard < Priority::Batch);
+    }
+}

@@ -1,17 +1,22 @@
-//! The coordinator proper: execute a query list under a policy.
+//! The coordinator proper: execute a batch of [`QueryRequest`]s under a
+//! policy.
 //!
-//! Owns the machine, the flow engine, and the demand cache. Responsible for
-//! the stripe-offset assignment (each concurrent query's own arrays land on
-//! rotated channels — see [`crate::alg::bfs::bfs_run_offset`]) and for the
-//! connected-components demand cache: CC has no per-query parameter, so its
-//! (expensive) functional execution runs once and each further instance is
-//! a cheap channel rotation of the cached phases.
+//! Owns the machine, the flow engine, and a per-kind demand cache.
+//! Responsible for the stripe-offset assignment (each concurrent query's
+//! own arrays land on rotated channels — see
+//! [`crate::alg::bfs::bfs_run_offset`]) and for demand caching: an
+//! analysis that declares [`crate::alg::Analysis::cacheable_demand`]
+//! (parameter-free kinds like connected components) has its expensive
+//! functional execution run once per cache key; each further instance is a
+//! cheap channel rotation of the cached phases.
 
-use crate::alg::Query;
+use crate::alg::Analysis;
+use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
 use crate::sim::demand::PhaseDemand;
 use crate::sim::flow::{Admission, FlowSim, OnFull, QuerySpec};
 use crate::sim::machine::Machine;
+use std::collections::HashMap;
 
 use super::metrics::RunReport;
 
@@ -48,14 +53,15 @@ pub struct Coordinator<'g> {
     g: &'g Csr,
     machine: Machine,
     sim: FlowSim,
-    /// Cached CC demand at stripe offset 0 (computed on first use).
-    cc_cache: std::cell::RefCell<Option<Vec<PhaseDemand>>>,
+    /// Cached stripe-offset-0 demand per analysis cache key (computed on
+    /// first use; see [`crate::alg::Analysis::cacheable_demand`]).
+    demand_cache: std::cell::RefCell<HashMap<String, Vec<PhaseDemand>>>,
 }
 
 impl<'g> Coordinator<'g> {
     pub fn new(g: &'g Csr, machine: Machine) -> Self {
         let sim = FlowSim::new(machine.clone());
-        Coordinator { g, machine, sim, cc_cache: std::cell::RefCell::new(None) }
+        Coordinator { g, machine, sim, demand_cache: std::cell::RefCell::new(HashMap::new()) }
     }
 
     pub fn machine(&self) -> &Machine {
@@ -66,91 +72,126 @@ impl<'g> Coordinator<'g> {
         self.g
     }
 
-    /// Thread-context capacity of this machine (queries).
+    /// Thread-context capacity of this machine, in default-footprint
+    /// queries.
     pub fn capacity(&self) -> usize {
         self.machine.cfg.max_concurrent_queries()
     }
 
-    /// Build engine-ready specs for a query list: functional execution +
-    /// demand emission, stripe offset = position in the batch, arrival 0.
-    pub fn prepare(&self, queries: &[Query]) -> Vec<QuerySpec> {
-        self.prepare_with_arrivals(queries, None)
+    /// Total thread-context memory of the machine (bytes).
+    pub fn ctx_capacity_bytes(&self) -> u64 {
+        self.machine.cfg.nodes as u64 * self.machine.cfg.ctx_mem_per_node_bytes
     }
 
-    /// `prepare` with explicit arrival times (ns); `None` = all at 0.
-    pub fn prepare_with_arrivals(
-        &self,
-        queries: &[Query],
-        arrivals: Option<&[f64]>,
-    ) -> Vec<QuerySpec> {
-        if let Some(a) = arrivals {
-            assert_eq!(a.len(), queries.len(), "one arrival per query");
-        }
-        queries
+    /// Thread-context memory the batch reserves if run fully concurrently
+    /// (bytes): each analysis's declared footprint, or the machine default.
+    pub fn ctx_demand_bytes(&self, requests: &[QueryRequest]) -> u64 {
+        requests
+            .iter()
+            .map(|r| {
+                r.analysis
+                    .ctx_mem_bytes(self.g)
+                    .unwrap_or(self.machine.cfg.ctx_bytes_per_query)
+            })
+            .sum()
+    }
+
+    /// In-flight cap for admitted execution: conservative enough that even
+    /// a batch of the largest declared footprint cannot exhaust
+    /// thread-context memory (the flow engine's admission counts queries,
+    /// so the cap assumes every slot holds the batch's fattest analysis).
+    /// Equals [`Coordinator::capacity`] for default-footprint batches. A
+    /// lone over-sized query is still admitted — on the real machine that
+    /// run would crash; modeling it as a typed rejection is a ROADMAP
+    /// follow-up.
+    pub fn admitted_cap(&self, requests: &[QueryRequest]) -> usize {
+        let default = self.machine.cfg.ctx_bytes_per_query;
+        let max_footprint = requests
+            .iter()
+            .map(|r| r.analysis.ctx_mem_bytes(self.g).unwrap_or(default))
+            .max()
+            .unwrap_or(default)
+            .max(1);
+        ((self.ctx_capacity_bytes() / max_footprint) as usize).clamp(1, self.capacity().max(1))
+    }
+
+    /// Build engine-ready specs for a request batch: functional execution +
+    /// demand emission, stripe offset = position in the batch, arrivals
+    /// taken from each request. Cacheable analyses hit the per-kind demand
+    /// cache and are rotated instead of re-executed.
+    pub fn prepare(&self, requests: &[QueryRequest]) -> Vec<QuerySpec> {
+        requests
             .iter()
             .enumerate()
-            .map(|(i, q)| {
-                let phases = match q {
-                    Query::Bfs { .. } => q.phases(self.g, &self.machine, i),
-                    Query::Cc => {
-                        // Source-free: compute once, rotate per instance.
-                        let mut cache = self.cc_cache.borrow_mut();
-                        let base = cache.get_or_insert_with(|| {
-                            Query::Cc.phases(self.g, &self.machine, 0)
-                        });
+            .map(|(i, req)| {
+                let a = req.analysis.as_ref();
+                let phases = match a.cacheable_demand() {
+                    Some(key) => {
+                        let mut cache = self.demand_cache.borrow_mut();
+                        let base = cache
+                            .entry(key)
+                            .or_insert_with(|| a.phases(self.g, &self.machine, 0));
                         base.iter().map(|p| p.rotate_channels(i)).collect()
                     }
+                    None => a.phases(self.g, &self.machine, i),
                 };
-                QuerySpec {
-                    id: i,
-                    label: q.label(),
-                    phases,
-                    arrival_ns: arrivals.map(|a| a[i]).unwrap_or(0.0),
-                }
+                QuerySpec { id: i, label: a.label(), phases, arrival_ns: req.arrival_ns }
             })
             .collect()
     }
 
-    /// Execute `queries` under `policy` and report.
-    pub fn run(&self, queries: &[Query], policy: Policy) -> anyhow::Result<RunReport> {
-        let specs = self.prepare(queries);
-        self.run_specs(queries, &specs, policy)
+    /// Prepare and execute a batch under `policy`, consuming the requests.
+    /// The submission path a service front-end calls.
+    pub fn submit(&self, requests: Vec<QueryRequest>, policy: Policy) -> anyhow::Result<RunReport> {
+        self.run(&requests, policy)
+    }
+
+    /// Execute `requests` under `policy` and report.
+    pub fn run(&self, requests: &[QueryRequest], policy: Policy) -> anyhow::Result<RunReport> {
+        let specs = self.prepare(requests);
+        self.run_specs(requests, &specs, policy)
     }
 
     /// Execute pre-prepared specs (lets the bench harness prepare once and
     /// run many sample points).
     pub fn run_specs(
         &self,
-        queries: &[Query],
+        requests: &[QueryRequest],
         specs: &[QuerySpec],
         policy: Policy,
     ) -> anyhow::Result<RunReport> {
         let flow = match policy {
             Policy::Sequential => self.sim.run_sequential(specs),
             Policy::Concurrent => {
+                let demand = self.ctx_demand_bytes(requests);
+                let cap = self.ctx_capacity_bytes();
                 anyhow::ensure!(
-                    specs.len() <= self.capacity(),
-                    "{} concurrent queries exhaust thread-context memory \
-                     (capacity {}; the paper hit this wall at 256 queries \
-                     on 8 nodes — use ConcurrentAdmitted to degrade \
-                     gracefully)",
+                    demand <= cap,
+                    "{} concurrent queries reserve {} MiB and exhaust thread-context \
+                     memory (capacity {} MiB, ~{} default-footprint queries; the paper \
+                     hit this wall at 256 queries on 8 nodes — use ConcurrentAdmitted \
+                     to degrade gracefully)",
                     specs.len(),
+                    demand >> 20,
+                    cap >> 20,
                     self.capacity()
                 );
                 self.sim.run(specs)
             }
             Policy::ConcurrentAdmitted { on_full } => {
-                let adm = Admission { max_in_flight: Some(self.capacity()), on_full };
+                let adm =
+                    Admission { max_in_flight: Some(self.admitted_cap(requests)), on_full };
                 self.sim.run_admitted(specs, adm)
             }
         };
-        Ok(RunReport::from_flow(policy.label(), &self.machine, queries, &flow))
+        Ok(RunReport::from_flow(policy.label(), &self.machine, requests, &flow))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::alg::{Analysis, Cc, QueryOutput};
     use crate::config::machine::MachineConfig;
     use crate::config::workload::{GraphConfig, MixPoint};
     use crate::coordinator::planner;
@@ -211,10 +252,11 @@ mod tests {
     }
 
     #[test]
-    fn cc_cache_hits_for_repeat_instances() {
+    fn demand_cache_hits_for_repeat_cacheable_instances() {
         let g = rmat(9);
         let c = coord(&g);
-        let qs = vec![Query::Cc, Query::Cc, Query::Cc];
+        let qs: Vec<QueryRequest> =
+            (0..3).map(|_| QueryRequest::new(Cc)).collect();
         let specs = c.prepare(&qs);
         // All three share phase counts; channels rotated per instance.
         assert_eq!(specs[0].phases.len(), specs[1].phases.len());
@@ -224,6 +266,8 @@ mod tests {
         );
         // Node totals identical (rotation is within-node).
         assert_eq!(specs[0].phases[0].channel_ops, specs[2].phases[0].channel_ops);
+        // Exactly one cache entry was populated.
+        assert_eq!(c.demand_cache.borrow().len(), 1);
     }
 
     #[test]
@@ -244,9 +288,75 @@ mod tests {
     fn arrivals_flow_through_prepare() {
         let g = rmat(8);
         let c = coord(&g);
-        let qs = planner::bfs_queries(&g, 3, 2);
-        let arr = vec![0.0, 1e9, 2e9];
-        let specs = c.prepare_with_arrivals(&qs, Some(&arr));
+        let mut qs = planner::bfs_queries(&g, 3, 2);
+        planner::assign_arrivals(&mut qs, &[0.0, 1e9, 2e9]);
+        let specs = c.prepare(&qs);
         assert_eq!(specs[2].arrival_ns, 2e9);
+    }
+
+    #[test]
+    fn submit_is_the_owned_run_path() {
+        let g = rmat(9);
+        let c = coord(&g);
+        let qs = planner::bfs_queries(&g, 4, 3);
+        let rep = c.submit(qs, Policy::Sequential).unwrap();
+        assert_eq!(rep.completed(), 4);
+    }
+
+    /// A deliberately context-hungry analysis shrinks effective capacity:
+    /// the declared footprint, not the query count, is what admission sums.
+    #[derive(Debug)]
+    struct FatCc;
+
+    impl Analysis for FatCc {
+        fn label(&self) -> &'static str {
+            "fat-cc"
+        }
+        fn run_offset(&self, g: &Csr, m: &Machine, o: usize) -> QueryOutput {
+            let run = crate::alg::cc_run_offset(g, m, o);
+            QueryOutput { label: self.label(), values: run.labels, phases: run.phases }
+        }
+        fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+            crate::alg::oracle::check_cc(g, values)
+        }
+        fn ctx_mem_bytes(&self, _g: &Csr) -> Option<u64> {
+            Some(1 << 30) // 1 GiB per instance
+        }
+    }
+
+    #[test]
+    fn declared_ctx_footprint_drives_concurrent_admission() {
+        let g = rmat(8);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 256 << 20; // 2 GiB total => 128 default queries
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        assert_eq!(c.capacity(), 128);
+        // Two fat queries fit (2 GiB), three do not — long before the
+        // 128-query default count.
+        let two: Vec<QueryRequest> = (0..2).map(|_| QueryRequest::new(FatCc)).collect();
+        assert!(c.run(&two, Policy::Concurrent).is_ok());
+        let three: Vec<QueryRequest> = (0..3).map(|_| QueryRequest::new(FatCc)).collect();
+        let err = c.run(&three, Policy::Concurrent).unwrap_err();
+        assert!(err.to_string().contains("thread-context memory"));
+    }
+
+    #[test]
+    fn declared_ctx_footprint_bounds_admitted_concurrency() {
+        let g = rmat(8);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 256 << 20; // 2 GiB total
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        // Admission must hold at most 2 GiB / 1 GiB = 2 fat queries in
+        // flight — not the 128 a default-footprint count would allow.
+        let fat: Vec<QueryRequest> = (0..5).map(|_| QueryRequest::new(FatCc)).collect();
+        assert_eq!(c.admitted_cap(&fat), 2);
+        let rep = c
+            .run(&fat, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
+            .unwrap();
+        assert_eq!(rep.completed(), 5);
+        assert!(rep.peak_concurrency <= 2, "peak {}", rep.peak_concurrency);
+        // Default-footprint batches keep the machine's full capacity.
+        let thin = planner::bfs_queries(&g, 4, 1);
+        assert_eq!(c.admitted_cap(&thin), c.capacity());
     }
 }

@@ -1,21 +1,173 @@
 //! Long-running service facade: the "web-accessible graph database" shape
 //! the paper motivates (§I), on top of the coordinator.
 //!
-//! Queries arrive over simulated time (a Poisson stream of BFS with a CC
-//! fraction), admission control bounds in-flight work at the machine's
-//! thread-context capacity, and the report carries per-class latency,
-//! throughput, rejection/queueing behavior and channel utilization —
-//! everything an operator would watch on a dashboard.
+//! Queries arrive over simulated time as a Poisson stream whose class mix
+//! is a declarative [`WorkloadSpec`] — weighted analysis classes resolved
+//! through the [`crate::alg::AnalysisRegistry`] or supplied as factories —
+//! admission control bounds in-flight work at the machine's thread-context
+//! capacity, and the report carries per-class latency quantiles
+//! (p50/p95/p99), throughput, rejection/queueing behavior and channel
+//! utilization — everything an operator would watch on a dashboard.
 
-use crate::alg::Query;
+use crate::alg::{Analysis, AnalysisFactory, AnalysisRegistry};
+use crate::coordinator::request::{Priority, QueryRequest};
 use crate::graph::csr::Csr;
 use crate::sim::flow::OnFull;
 use crate::sim::machine::Machine;
 use crate::util::rng::SplitMix64;
 use crate::util::stats::Quantiles;
+use std::sync::Arc;
 
 use super::planner::arrival_times;
 use super::scheduler::{Coordinator, Policy};
+
+/// One weighted analysis class of a service workload.
+#[derive(Clone)]
+pub struct WorkloadClass {
+    /// Class label (for reports; matches the analyses the factory builds).
+    pub label: &'static str,
+    /// Relative arrival weight (need not sum to 1 across classes).
+    pub weight: f64,
+    /// Priority the class's requests carry.
+    pub priority: Priority,
+    factory: AnalysisFactory,
+}
+
+impl WorkloadClass {
+    /// A class from an explicit factory.
+    pub fn new(label: &'static str, weight: f64, factory: AnalysisFactory) -> Self {
+        WorkloadClass { label, weight, priority: Priority::default(), factory }
+    }
+
+    /// A class resolved from a registry by label.
+    pub fn from_registry(
+        registry: &AnalysisRegistry,
+        label: &str,
+        weight: f64,
+    ) -> anyhow::Result<Self> {
+        let (label, factory) = registry
+            .factory(label)
+            .ok_or_else(|| anyhow::anyhow!("unknown analysis class {label:?}"))?;
+        Ok(Self::new(label, weight, factory))
+    }
+
+    /// Set the priority the class's requests carry.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Build one instance rooted at `src`.
+    pub fn build(&self, src: u32) -> Arc<dyn Analysis> {
+        (self.factory)(src)
+    }
+}
+
+impl std::fmt::Debug for WorkloadClass {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkloadClass")
+            .field("label", &self.label)
+            .field("weight", &self.weight)
+            .field("priority", &self.priority)
+            .finish()
+    }
+}
+
+/// A declarative mixed workload: weighted analysis classes.
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub classes: Vec<WorkloadClass>,
+}
+
+impl WorkloadSpec {
+    pub fn new(classes: Vec<WorkloadClass>) -> Self {
+        WorkloadSpec { classes }
+    }
+
+    /// The classic paper mix: BFS with a CC fraction.
+    pub fn bfs_cc(cc_fraction: f64) -> Self {
+        let reg = AnalysisRegistry::builtin();
+        WorkloadSpec::new(vec![
+            WorkloadClass::from_registry(&reg, "bfs", 1.0 - cc_fraction).expect("builtin"),
+            WorkloadClass::from_registry(&reg, "cc", cc_fraction).expect("builtin"),
+        ])
+    }
+
+    /// A four-class mix exercising every shipped analysis: mostly
+    /// interactive short queries (BFS, k-hop), some SSSP, a CC trickle.
+    pub fn four_class() -> Self {
+        let reg = AnalysisRegistry::builtin();
+        WorkloadSpec::new(vec![
+            WorkloadClass::from_registry(&reg, "bfs", 0.5).expect("builtin"),
+            WorkloadClass::from_registry(&reg, "khop", 0.25)
+                .expect("builtin")
+                .with_priority(Priority::Interactive),
+            WorkloadClass::from_registry(&reg, "sssp", 0.15).expect("builtin"),
+            WorkloadClass::from_registry(&reg, "cc", 0.1)
+                .expect("builtin")
+                .with_priority(Priority::Batch),
+        ])
+    }
+
+    /// Parse a `label=weight,label=weight,...` spec against a registry,
+    /// e.g. `bfs=0.6,cc=0.1,sssp=0.2,khop=0.1`.
+    pub fn parse(spec: &str, registry: &AnalysisRegistry) -> anyhow::Result<Self> {
+        let mut classes = Vec::new();
+        for piece in spec.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (label, weight) = piece
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad class {piece:?}: want label=weight"))?;
+            let weight: f64 = weight
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad weight in {piece:?}: {e}"))?;
+            classes.push(WorkloadClass::from_registry(registry, label.trim(), weight)?);
+        }
+        let spec = WorkloadSpec::new(classes);
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(!self.classes.is_empty(), "workload needs at least one class");
+        anyhow::ensure!(
+            self.classes.iter().all(|c| c.weight >= 0.0),
+            "class weights must be non-negative"
+        );
+        anyhow::ensure!(self.total_weight() > 0.0, "total class weight must be positive");
+        for c in &self.classes {
+            // Reports key on Analysis::label(); a mismatched class label
+            // would silently vanish from the per-class latency lines.
+            let built = c.build(0).label();
+            anyhow::ensure!(
+                built == c.label,
+                "workload class labeled {:?} builds analyses labeled {built:?}",
+                c.label
+            );
+        }
+        Ok(())
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.classes.iter().map(|c| c.weight).sum()
+    }
+
+    /// Sample one class in proportion to the weights.
+    pub fn pick(&self, rng: &mut SplitMix64) -> &WorkloadClass {
+        let mut x = rng.next_f64() * self.total_weight();
+        for c in &self.classes {
+            if x < c.weight {
+                return c;
+            }
+            x -= c.weight;
+        }
+        self.classes.last().expect("validated non-empty")
+    }
+}
 
 /// Service workload description.
 #[derive(Debug, Clone)]
@@ -24,8 +176,8 @@ pub struct ServiceConfig {
     pub queries: usize,
     /// Mean arrival rate (queries/s of simulated time).
     pub arrival_rate_per_s: f64,
-    /// Fraction of arrivals that are CC evaluations (rest are BFS).
-    pub cc_fraction: f64,
+    /// The class mix arrivals are drawn from.
+    pub workload: WorkloadSpec,
     /// What to do when thread-context memory is full.
     pub on_full: OnFull,
     /// RNG seed (arrivals, sources, query classes).
@@ -37,7 +189,7 @@ impl Default for ServiceConfig {
         ServiceConfig {
             queries: 256,
             arrival_rate_per_s: 100.0,
-            cc_fraction: 0.1,
+            workload: WorkloadSpec::bfs_cc(0.1),
             on_full: OnFull::Queue,
             seed: 0x5E21,
         }
@@ -53,9 +205,8 @@ pub struct ServiceReport {
     pub duration_s: f64,
     /// Completed queries per second.
     pub throughput_qps: f64,
-    /// Latency five-number summary per class (s).
-    pub bfs_latency: Option<Quantiles>,
-    pub cc_latency: Option<Quantiles>,
+    /// Latency quantile summary per class (s), in first-appearance order.
+    pub class_latency: Vec<(String, Quantiles)>,
     /// Peak simultaneous in-flight queries.
     pub peak_concurrency: usize,
     /// Mean channel utilization over the run.
@@ -63,27 +214,27 @@ pub struct ServiceReport {
 }
 
 impl ServiceReport {
-    /// Render a compact operator summary.
+    /// Latency quantiles of one class, if it completed any queries.
+    pub fn class(&self, label: &str) -> Option<&Quantiles> {
+        self.class_latency.iter().find(|(l, _)| l == label).map(|(_, q)| q)
+    }
+
+    /// Render a compact operator summary with per-class p50/p95/p99.
     pub fn summary(&self) -> String {
-        let fmt_q = |q: &Option<Quantiles>| match q {
-            Some(q) => format!(
-                "p0={:.3}s p50={:.3}s p100={:.3}s",
-                q.q0, q.q50, q.q100
-            ),
-            None => "n/a".into(),
-        };
-        format!(
+        let mut out = format!(
             "served {} (rejected {}) in {:.2}s — {:.1} q/s, peak {} in flight, \
-             channel util {:.0}%\n  bfs: {}\n  cc:  {}",
+             channel util {:.0}%",
             self.served,
             self.rejected,
             self.duration_s,
             self.throughput_qps,
             self.peak_concurrency,
             self.channel_utilization * 100.0,
-            fmt_q(&self.bfs_latency),
-            fmt_q(&self.cc_latency),
-        )
+        );
+        for (label, q) in &self.class_latency {
+            out.push_str(&format!("\n  {:>5}: {}", label, q.latency_line()));
+        }
+        out
     }
 }
 
@@ -104,42 +255,38 @@ impl<'g> GraphService<'g> {
     /// Serve a synthetic arrival stream described by `cfg`.
     pub fn serve(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
         anyhow::ensure!(cfg.queries > 0, "need at least one query");
-        anyhow::ensure!(
-            (0.0..=1.0).contains(&cfg.cc_fraction),
-            "cc_fraction must be in [0, 1]"
-        );
+        cfg.workload.validate()?;
         let g = self.coord.graph();
         let mut rng = SplitMix64::new(cfg.seed);
-        let sources =
-            crate::graph::sample::bfs_sources(g, cfg.queries, rng.next_u64());
-        let queries: Vec<Query> = sources
+        let sources = crate::graph::sample::bfs_sources(g, cfg.queries, rng.next_u64());
+        let arrivals = arrival_times(cfg.queries, cfg.arrival_rate_per_s, rng.next_u64());
+        let requests: Vec<QueryRequest> = sources
             .into_iter()
-            .map(|src| {
-                if rng.next_f64() < cfg.cc_fraction {
-                    Query::Cc
-                } else {
-                    Query::Bfs { src }
-                }
+            .zip(&arrivals)
+            .map(|(src, &arrival)| {
+                let class = cfg.workload.pick(&mut rng);
+                QueryRequest::from_arc(class.build(src))
+                    .at(arrival)
+                    .with_priority(class.priority)
             })
             .collect();
-        let arrivals = arrival_times(cfg.queries, cfg.arrival_rate_per_s, rng.next_u64());
 
-        let specs = self.coord.prepare_with_arrivals(&queries, Some(&arrivals));
-        let report = self.coord.run_specs(
-            &queries,
-            &specs,
-            Policy::ConcurrentAdmitted { on_full: cfg.on_full },
-        )?;
+        let report =
+            self.coord.run(&requests, Policy::ConcurrentAdmitted { on_full: cfg.on_full })?;
 
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
         let duration_s = (report.makespan_s - first_arrival).max(f64::MIN_POSITIVE);
+        let class_latency = report
+            .per_class_quantiles()
+            .into_iter()
+            .map(|(l, q)| (l.to_string(), q))
+            .collect();
         Ok(ServiceReport {
             served: report.completed(),
             rejected: report.rejections(),
             duration_s,
             throughput_qps: report.completed() as f64 / duration_s,
-            bfs_latency: report.latency_quantiles(Some("bfs")),
-            cc_latency: report.latency_quantiles(Some("cc")),
+            class_latency,
             peak_concurrency: report.peak_concurrency,
             channel_utilization: report.mean_channel_utilization,
         })
@@ -163,14 +310,75 @@ mod tests {
     fn serves_mixed_stream() {
         let g = g();
         let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
-        let cfg = ServiceConfig { queries: 40, cc_fraction: 0.2, ..Default::default() };
+        let cfg = ServiceConfig {
+            queries: 40,
+            workload: WorkloadSpec::bfs_cc(0.2),
+            ..Default::default()
+        };
         let rep = svc.serve(&cfg).unwrap();
         assert_eq!(rep.served, 40);
         assert_eq!(rep.rejected, 0);
-        assert!(rep.bfs_latency.is_some());
-        assert!(rep.cc_latency.is_some());
+        assert!(rep.class("bfs").is_some());
+        assert!(rep.class("cc").is_some());
         assert!(rep.throughput_qps > 0.0);
         assert!(!rep.summary().is_empty());
+    }
+
+    #[test]
+    fn four_class_stream_reports_every_class() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig {
+            queries: 80,
+            workload: WorkloadSpec::four_class(),
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 80);
+        for label in ["bfs", "khop", "sssp", "cc"] {
+            let q = rep.class(label).unwrap_or_else(|| panic!("missing class {label}"));
+            assert!(q.q0 <= q.q50 && q.q50 <= q.q95 && q.q95 <= q.q99 && q.q99 <= q.q100);
+        }
+        // The summary surfaces p95/p99 per class.
+        let s = rep.summary();
+        assert!(s.contains("p95") && s.contains("p99"), "{s}");
+    }
+
+    #[test]
+    fn workload_spec_parses_against_registry() {
+        let reg = crate::alg::AnalysisRegistry::builtin();
+        let spec = WorkloadSpec::parse("bfs=0.6, cc=0.1, sssp=0.2, khop=0.1", &reg).unwrap();
+        assert_eq!(spec.classes.len(), 4);
+        assert!((spec.total_weight() - 1.0).abs() < 1e-12);
+        assert!(WorkloadSpec::parse("pagerank=1.0", &reg).is_err());
+        assert!(WorkloadSpec::parse("bfs", &reg).is_err());
+        assert!(WorkloadSpec::parse("", &reg).is_err());
+    }
+
+    #[test]
+    fn mismatched_class_label_is_rejected() {
+        let spec = WorkloadSpec::new(vec![WorkloadClass::new(
+            "fast-bfs",
+            1.0,
+            Arc::new(|src| -> Arc<dyn Analysis> { Arc::new(crate::alg::Bfs { src }) }),
+        )]);
+        let err = spec.validate().unwrap_err().to_string();
+        assert!(err.contains("fast-bfs") && err.contains("bfs"), "{err}");
+    }
+
+    #[test]
+    fn weighted_pick_tracks_weights() {
+        let spec = WorkloadSpec::bfs_cc(0.25);
+        let mut rng = SplitMix64::new(7);
+        let mut cc = 0usize;
+        const N: usize = 4000;
+        for _ in 0..N {
+            if spec.pick(&mut rng).label == "cc" {
+                cc += 1;
+            }
+        }
+        let frac = cc as f64 / N as f64;
+        assert!((frac - 0.25).abs() < 0.05, "cc fraction {frac}");
     }
 
     #[test]
@@ -182,7 +390,7 @@ mod tests {
         let cfg = ServiceConfig {
             queries: 64,
             arrival_rate_per_s: 1.0e6, // effectively simultaneous
-            cc_fraction: 0.0,
+            workload: WorkloadSpec::bfs_cc(0.0),
             on_full: OnFull::Reject,
             seed: 3,
         };
@@ -201,7 +409,7 @@ mod tests {
         let cfg = ServiceConfig {
             queries: 64,
             arrival_rate_per_s: 1.0e6,
-            cc_fraction: 0.0,
+            workload: WorkloadSpec::bfs_cc(0.0),
             on_full: OnFull::Queue,
             seed: 3,
         };

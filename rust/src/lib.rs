@@ -18,10 +18,15 @@
 //! * [`sim`] — the Pathfinder model: nodes, multi-threaded cache-less cores,
 //!   NCDRAM channels, MSPs with `remote_min`, migration engine, RapidIO
 //!   fabric, memory views; both a flow-level and a discrete-event engine.
-//! * [`alg`] — the migratory-thread BFS and the Figure-2 Shiloach-Vishkin
-//!   connected components (MSP `remote_min` hooks) that run on the sim.
-//! * [`coordinator`] — the serving layer: router, admission control by
-//!   thread-context memory, sequential/concurrent policies, metrics.
+//! * [`alg`] — the open query API (the [`alg::Analysis`] trait +
+//!   [`alg::AnalysisRegistry`], DESIGN.md §Query-API) and the analyses
+//!   behind it: the migratory-thread BFS, the Figure-2 Shiloach-Vishkin
+//!   connected components (MSP `remote_min` hooks), delta-stepping SSSP on
+//!   the same hook, and hop-bounded k-hop neighborhoods.
+//! * [`coordinator`] — the serving layer: [`coordinator::QueryRequest`]
+//!   scheduling metadata, admission control by thread-context memory,
+//!   sequential/concurrent policies, per-class metrics, declarative
+//!   [`coordinator::WorkloadSpec`] service mixes.
 //! * [`runtime`] — PJRT (via the `xla` crate) loader/executor for the AOT
 //!   HLO artifacts compiled from JAX+Pallas (`python/compile`).
 //! * [`baseline`] — the RedisGraph/GraphBLAS comparison platform: BFS/CC as

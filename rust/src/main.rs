@@ -1,15 +1,17 @@
 //! `pathfinder` — the Layer-3 launcher: generate graphs, run and serve
-//! concurrent queries on the simulated Lucata Pathfinder, and regenerate
+//! concurrent analyses on the simulated Lucata Pathfinder, and regenerate
 //! every table and figure of the paper's evaluation.
 //!
 //! ```text
 //! pathfinder generate   [--scale N] [--edge-factor F] [--seed S] --out g.csr
 //! pathfinder inspect    --graph g.csr | [--scale N]
-//! pathfinder validate   [--scale N] [--queries K]
-//! pathfinder run        [--scale N] --machine pathfinder-8 --bfs K [--cc C]
+//! pathfinder validate   [--scale N] [--queries K]   — every registered
+//!                       analysis (bfs, cc, sssp, khop) vs its host oracle
+//! pathfinder run        [--scale N] --machine pathfinder-8 [--bfs K]
+//!                       [--cc C] [--sssp S] [--khop H] [--khop-k HOPS]
 //!                       [--policy sequential|concurrent|queue|reject]
 //! pathfinder serve      [--scale N] --machine NAME [--queries K] [--rate Q/S]
-//!                       [--cc-fraction F] [--on-full queue|reject]
+//!                       [--mix bfs=0.8,cc=0.1,sssp=0.1] [--on-full queue|reject]
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -21,14 +23,16 @@
 
 use anyhow::{bail, Context, Result};
 
-use pathfinder_queries::alg::Query;
+use pathfinder_queries::alg::{Analysis, AnalysisRegistry};
 use pathfinder_queries::bench_harness::{
     ablation, calibrate, fig3, fig4, scaling, table1, table2, table3, Harness,
 };
 use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
-use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
-use pathfinder_queries::coordinator::{planner, Coordinator, GraphService, Policy, ServiceConfig};
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::coordinator::{
+    planner, Coordinator, GraphService, Policy, QueryRequest, ServiceConfig, WorkloadSpec,
+};
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
 use pathfinder_queries::graph::rmat::Rmat;
@@ -130,39 +134,63 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Cross-validate the whole stack at small scale: oracles vs sim algorithms
-/// vs (if artifacts exist) the PJRT GraphBLAS engine.
+/// Cross-validate the whole stack at small scale: every registered
+/// analysis vs its host oracle, plus (if artifacts exist) the PJRT
+/// GraphBLAS engine.
 fn cmd_validate(args: &Args) -> Result<()> {
     let g = load_or_generate(args)?;
     let k: usize = args.opt_parse_or("queries", 8)?;
     let machine = Machine::new(machine_config(args)?);
+    let registry = AnalysisRegistry::builtin();
 
-    println!("validating BFS + CC on {} vertices...", g.n());
+    println!(
+        "validating {} on {} vertices...",
+        registry.labels().join(" + "),
+        g.n()
+    );
     let srcs = pathfinder_queries::graph::sample::bfs_sources(&g, k, 7);
-    for (i, &src) in srcs.iter().enumerate() {
-        Query::Bfs { src }.run_offset(&g, &machine, i).validate(&g)?;
+    for label in registry.labels() {
+        // One instance per source, deduplicated by description — a
+        // source-free analysis (cc) collapses to a single instance,
+        // sourced ones validate at every source and stripe offset.
+        let mut instances = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+        for &s in &srcs {
+            let a = registry.build(label, s)?;
+            if seen.insert(a.describe()) {
+                instances.push(a);
+            }
+        }
+        for (i, a) in instances.iter().enumerate() {
+            let out = a.run_offset(&g, &machine, i);
+            a.validate(&g, &out.values)
+                .with_context(|| format!("{} failed validation", a.describe()))?;
+        }
+        println!("  {label}: {} instance(s) match the host oracle", instances.len());
     }
-    Query::Cc.run(&g, &machine).validate(&g)?;
-    println!("  sim algorithms match host oracles ({k} BFS + CC)");
 
     let dir = args
         .opt("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(default_artifacts_dir);
     if dir.join("manifest.json").exists() {
-        let eng = Engine::from_dir(&dir)?;
-        let n_art = eng.manifest().n;
-        if g.n() <= n_art {
-            let gb = pathfinder_queries::baseline::GraphBlasEngine::new(&eng, &g)?;
-            let res = gb.bfs(&srcs)?;
-            for (i, &src) in srcs.iter().enumerate() {
-                pathfinder_queries::alg::oracle::check_bfs(&g, src, &res.levels[i])?;
+        match Engine::from_dir(&dir) {
+            Ok(eng) => {
+                let n_art = eng.manifest().n;
+                if g.n() <= n_art {
+                    let gb = pathfinder_queries::baseline::GraphBlasEngine::new(&eng, &g)?;
+                    let res = gb.bfs(&srcs)?;
+                    for (i, &src) in srcs.iter().enumerate() {
+                        pathfinder_queries::alg::oracle::check_bfs(&g, src, &res.levels[i])?;
+                    }
+                    let cc = gb.cc()?;
+                    pathfinder_queries::alg::oracle::check_cc(&g, &cc.labels)?;
+                    println!("  PJRT GraphBLAS engine matches host oracles");
+                } else {
+                    println!("  (graph larger than artifact n={n_art}; baseline check skipped)");
+                }
             }
-            let cc = gb.cc()?;
-            pathfinder_queries::alg::oracle::check_cc(&g, &cc.labels)?;
-            println!("  PJRT GraphBLAS engine matches host oracles");
-        } else {
-            println!("  (graph larger than artifact n={n_art}; baseline check skipped)");
+            Err(e) => println!("  (baseline check skipped: {e})"),
         }
     } else {
         println!("  (no artifacts at {dir:?}; baseline check skipped)");
@@ -178,8 +206,27 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let bfs: usize = args.opt_parse_or("bfs", 16)?;
     let cc: usize = args.opt_parse_or("cc", 0)?;
+    let sssp: usize = args.opt_parse_or("sssp", 0)?;
+    let khop: usize = args.opt_parse_or("khop", 0)?;
+    let khop_k: u32 = args.opt_parse_or("khop-k", 2)?;
     let seed: u64 = args.opt_parse_or("query-seed", 0xBF5)?;
-    let queries = planner::mix_queries(&g, MixPoint { bfs, cc }, seed);
+
+    // One list per class, interleaved into a mixed submission stream.
+    let mut classes: Vec<Vec<QueryRequest>> = Vec::new();
+    if bfs > 0 {
+        classes.push(planner::bfs_queries(&g, bfs, seed));
+    }
+    if cc > 0 {
+        classes.push(planner::cc_queries(cc));
+    }
+    if sssp > 0 {
+        classes.push(planner::sssp_queries(&g, sssp, seed ^ 0x55));
+    }
+    if khop > 0 {
+        classes.push(planner::khop_queries(&g, khop, khop_k, seed ^ 0xAA));
+    }
+    anyhow::ensure!(!classes.is_empty(), "nothing to run: all class counts are zero");
+    let queries = planner::interleave_classes(classes);
 
     let policy = match args.opt_or("policy", "concurrent").as_str() {
         "sequential" => Policy::Sequential,
@@ -191,12 +238,10 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let rep = coord.run(&queries, policy)?;
     println!(
-        "{} on {}: {} queries ({} bfs + {} cc)",
+        "{} on {}: {} queries ({bfs} bfs + {cc} cc + {sssp} sssp + {khop} khop)",
         rep.policy,
         rep.machine,
         queries.len(),
-        bfs,
-        cc
     );
     println!("  makespan            {:.4} s", rep.makespan_s);
     println!("  completed/rejected  {}/{}", rep.completed(), rep.rejections());
@@ -204,17 +249,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     println!("  throughput          {:.2} q/s", rep.throughput_qps());
     println!("  peak concurrency    {}", rep.peak_concurrency);
     println!("  channel utilization {:.0}%", rep.mean_channel_utilization * 100.0);
-    if let Some(q) = rep.latency_quantiles(Some("bfs")) {
-        println!(
-            "  bfs latency (s)     0%={:.4} 25%={:.4} 50%={:.4} 75%={:.4} 100%={:.4}",
-            q.q0, q.q25, q.q50, q.q75, q.q100
-        );
-    }
-    if let Some(q) = rep.latency_quantiles(Some("cc")) {
-        println!(
-            "  cc latency (s)      0%={:.4} 50%={:.4} 100%={:.4}",
-            q.q0, q.q50, q.q100
-        );
+    for (label, q) in rep.per_class_quantiles() {
+        println!("  {label:>5} latency (s)   {}", q.latency_line());
     }
     Ok(())
 }
@@ -223,10 +259,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let g = load_or_generate(args)?;
     let machine = Machine::new(machine_config(args)?);
     let svc = GraphService::new(&g, machine);
+    let registry = AnalysisRegistry::builtin();
+    anyhow::ensure!(
+        args.opt("cc-fraction").is_none(),
+        "--cc-fraction was replaced by the declarative mix spec; \
+         use e.g. --mix bfs=0.9,cc=0.1"
+    );
+    let workload = WorkloadSpec::parse(&args.opt_or("mix", "bfs=0.9,cc=0.1"), &registry)?;
     let cfg = ServiceConfig {
         queries: args.opt_parse_or("queries", 256)?,
         arrival_rate_per_s: args.opt_parse_or("rate", 100.0)?,
-        cc_fraction: args.opt_parse_or("cc-fraction", 0.1)?,
+        workload,
         on_full: match args.opt_or("on-full", "queue").as_str() {
             "queue" => OnFull::Queue,
             "reject" => OnFull::Reject,
@@ -234,11 +277,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
+    let mix_desc: Vec<String> = cfg
+        .workload
+        .classes
+        .iter()
+        .map(|c| format!("{}={:.2}", c.label, c.weight))
+        .collect();
     println!(
-        "serving {} queries at {:.0} q/s ({}% cc) on {}...",
+        "serving {} queries at {:.0} q/s ({}) on {}...",
         cfg.queries,
         cfg.arrival_rate_per_s,
-        cfg.cc_fraction * 100.0,
+        mix_desc.join(","),
         svc.coordinator().machine().cfg.name
     );
     let rep = svc.serve(&cfg)?;

@@ -1,14 +1,17 @@
-//! Summary statistics: quantiles, means, and the Table-I style five-number
-//! summaries used throughout the evaluation harness.
+//! Summary statistics: quantiles, means, and the Table-I style summaries
+//! used throughout the evaluation harness.
 
-/// Five-number summary (min / 25% / median / 75% / max), matching the
-/// quantile columns of the paper's Table I.
+/// Quantile summary of a sample set: the paper's Table-I five-number
+/// columns (min / 25% / median / 75% / max) plus the p95/p99 tail
+/// quantiles a serving deployment actually alerts on.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Quantiles {
     pub q0: f64,
     pub q25: f64,
     pub q50: f64,
     pub q75: f64,
+    pub q95: f64,
+    pub q99: f64,
     pub q100: f64,
 }
 
@@ -23,6 +26,8 @@ impl Quantiles {
             q25: quantile_sorted(&xs, 0.25),
             q50: quantile_sorted(&xs, 0.50),
             q75: quantile_sorted(&xs, 0.75),
+            q95: quantile_sorted(&xs, 0.95),
+            q99: quantile_sorted(&xs, 0.99),
             q100: quantile_sorted(&xs, 1.0),
         }
     }
@@ -31,6 +36,15 @@ impl Quantiles {
     /// 2.2 s / 0.61 s").
     pub fn spread(&self) -> f64 {
         self.q100 - self.q0
+    }
+
+    /// Compact operator rendering in seconds:
+    /// `p0=… p50=… p95=… p99=… p100=…`.
+    pub fn latency_line(&self) -> String {
+        format!(
+            "p0={:.3}s p50={:.3}s p95={:.3}s p99={:.3}s p100={:.3}s",
+            self.q0, self.q50, self.q95, self.q99, self.q100
+        )
     }
 }
 
@@ -83,7 +97,19 @@ mod tests {
         assert_eq!(q.q25, 2.0);
         assert_eq!(q.q50, 3.0);
         assert_eq!(q.q75, 4.0);
+        // Type-7 interpolation on 5 samples: pos = p * 4.
+        assert!((q.q95 - 4.8).abs() < 1e-12);
+        assert!((q.q99 - 4.96).abs() < 1e-12);
         assert_eq!(q.q100, 5.0);
+    }
+
+    #[test]
+    fn latency_line_surfaces_tail_quantiles() {
+        let q = Quantiles::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let line = q.latency_line();
+        assert!(line.contains("p95=4.800s"), "{line}");
+        assert!(line.contains("p99=4.960s"), "{line}");
+        assert!(line.starts_with("p0=1.000s"), "{line}");
     }
 
     #[test]

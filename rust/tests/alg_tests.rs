@@ -2,7 +2,7 @@
 //! a spread of graph shapes, plus the demand-accounting contracts the
 //! simulator relies on.
 
-use pathfinder_queries::alg::{self, oracle, Query};
+use pathfinder_queries::alg::{self, oracle, Analysis, Bfs, Cc, KHop, Sssp};
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::graph::builder::build_undirected_csr;
@@ -117,14 +117,63 @@ fn cc_demand_scales_with_iterations() {
 }
 
 #[test]
-fn query_api_round_trips() {
+fn analysis_api_round_trips_for_all_four_classes() {
     let g = rmat(10, 2);
     let m = m8();
-    for q in [Query::Bfs { src: 5 }, Query::Cc] {
-        let out = q.run(&g, &m);
-        out.validate(&g).unwrap();
+    let analyses: Vec<Box<dyn Analysis>> = vec![
+        Box::new(Bfs { src: 5 }),
+        Box::new(Cc),
+        Box::new(Sssp { src: 5 }),
+        Box::new(KHop::new(5, 2)),
+    ];
+    for a in analyses {
+        let out = a.run(&g, &m);
+        a.validate(&g, &out.values).unwrap_or_else(|e| panic!("{}: {e}", a.describe()));
+        assert_eq!(out.label, a.label());
         assert!(!out.phases.is_empty());
         assert!(out.solo_ns(&m) > 0.0);
+    }
+}
+
+#[test]
+fn sssp_matches_oracle_on_zoo() {
+    for m in [m8(), m32()] {
+        for (name, g) in zoo() {
+            for src in [0u32, (g.n() as u32 - 1) / 2] {
+                let run = alg::sssp_run(&g, &m, src);
+                oracle::check_sssp(&g, src, &run.dist)
+                    .unwrap_or_else(|e| panic!("{name} src {src}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn khop_matches_oracle_on_zoo() {
+    for m in [m8(), m32()] {
+        for (name, g) in zoo() {
+            for k in [1u32, 2, 5] {
+                let run = alg::khop_run(&g, &m, 0, k);
+                oracle::check_khop(&g, 0, k, &run.levels)
+                    .unwrap_or_else(|e| panic!("{name} k {k}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn sssp_distances_dominate_hop_counts() {
+    // Every edge weighs at least 1, so the weighted distance is bounded
+    // below by the BFS level, and both agree on reachability.
+    let g = rmat(10, 6);
+    let m = m8();
+    let bfs = alg::bfs_run(&g, &m, 9);
+    let sssp = alg::sssp_run(&g, &m, 9);
+    for v in 0..g.n() {
+        assert_eq!(bfs.levels[v] == -1, sssp.dist[v] == -1, "vertex {v}");
+        if bfs.levels[v] >= 0 {
+            assert!(sssp.dist[v] >= bfs.levels[v], "vertex {v}");
+        }
     }
 }
 

@@ -5,7 +5,7 @@
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
 use pathfinder_queries::coordinator::{
-    planner, Coordinator, GraphService, ImprovementRow, Policy, ServiceConfig,
+    planner, Coordinator, GraphService, ImprovementRow, Policy, ServiceConfig, WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -140,12 +140,12 @@ fn service_latency_grows_with_load() {
             .serve(&ServiceConfig {
                 queries: 120,
                 arrival_rate_per_s: rate,
-                cc_fraction: 0.0,
+                workload: WorkloadSpec::bfs_cc(0.0),
                 on_full: OnFull::Queue,
                 seed: 4,
             })
             .unwrap();
-        medians.push(rep.bfs_latency.unwrap().q50);
+        medians.push(rep.class("bfs").unwrap().q50);
     }
     assert!(
         medians[2] > medians[0],
@@ -164,8 +164,38 @@ fn arrival_spacing_reduces_contention() {
     let burst = coord.run(&queries, Policy::Concurrent).unwrap();
     // Spread: arrivals far apart (each runs alone).
     let arrivals: Vec<f64> = (0..32).map(|i| i as f64 * 1e9).collect();
-    let specs = coord.prepare_with_arrivals(&queries, Some(&arrivals));
-    let spread = coord.run_specs(&queries, &specs, Policy::Concurrent).unwrap();
+    let mut spaced = queries.clone();
+    planner::assign_arrivals(&mut spaced, &arrivals);
+    let spread = coord.run(&spaced, Policy::Concurrent).unwrap();
     assert!(spread.mean_latency_s() < burst.mean_latency_s());
     assert_eq!(spread.peak_concurrency, 1);
+}
+
+/// Acceptance: a mixed four-class concurrent run completes end-to-end via
+/// `GraphService`, with per-class p50/p95/p99 reported for every class.
+#[test]
+fn four_class_mix_end_to_end_with_tail_quantiles() {
+    let g = rmat(12);
+    let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let rep = svc
+        .serve(&ServiceConfig {
+            queries: 96,
+            arrival_rate_per_s: 500.0,
+            workload: WorkloadSpec::four_class(),
+            on_full: OnFull::Queue,
+            seed: 0x4C1A,
+        })
+        .unwrap();
+    assert_eq!(rep.served, 96);
+    assert_eq!(rep.rejected, 0);
+    assert_eq!(rep.class_latency.len(), 4, "all four classes must complete");
+    for label in ["bfs", "khop", "sssp", "cc"] {
+        let q = rep.class(label).unwrap_or_else(|| panic!("missing class {label}"));
+        assert!(q.q50 > 0.0);
+        assert!(q.q50 <= q.q95 && q.q95 <= q.q99 && q.q99 <= q.q100, "{label}");
+    }
+    // CC touches every vertex; the interactive k-hop class is the cheapest.
+    assert!(rep.class("cc").unwrap().q50 > rep.class("khop").unwrap().q50);
+    let s = rep.summary();
+    assert!(s.contains("p95") && s.contains("p99"), "{s}");
 }

@@ -3,9 +3,9 @@
 //! rather than examples. Each property runs CASES seeded cases, so failures
 //! print the seed for replay.
 
-use pathfinder_queries::alg::{self, oracle};
+use pathfinder_queries::alg::{self, oracle, Analysis, AnalysisRegistry};
 use pathfinder_queries::config::machine::MachineConfig;
-use pathfinder_queries::coordinator::{planner, Coordinator, Policy};
+use pathfinder_queries::coordinator::{planner, Coordinator, Policy, QueryRequest};
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
 use pathfinder_queries::sim::demand::{DemandBuilder, PhaseDemand};
@@ -243,7 +243,8 @@ fn prop_quantiles_are_order_statistics() {
         sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(q.q0, sorted[0], "seed {seed}");
         assert_eq!(q.q100, *sorted.last().unwrap(), "seed {seed}");
-        assert!(q.q0 <= q.q25 && q.q25 <= q.q50 && q.q50 <= q.q75 && q.q75 <= q.q100);
+        assert!(q.q0 <= q.q25 && q.q25 <= q.q50 && q.q50 <= q.q75);
+        assert!(q.q75 <= q.q95 && q.q95 <= q.q99 && q.q99 <= q.q100);
         assert!(q.spread() >= 0.0);
     }
 }
@@ -267,6 +268,45 @@ fn prop_machine_config_json_round_trip() {
         )
         .unwrap();
         assert_eq!(cfg, back, "seed {seed}");
+    }
+}
+
+/// Property (API satellite): every analysis registered with the builtin
+/// registry — randomly instantiated on random graphs — validates against
+/// its host oracle when scheduled through the coordinator under both
+/// `Sequential` and `ConcurrentAdmitted` policies, and both policies
+/// complete the whole batch.
+#[test]
+fn prop_registered_analyses_validate_under_both_policies() {
+    let registry = AnalysisRegistry::builtin();
+    for seed in 0..8u64 {
+        let mut rng = SplitMix64::new(seed ^ 0xA11A);
+        let g = random_graph(&mut rng);
+        let coord = Coordinator::new(&g, m8());
+        // One instance of every registered class, random sources.
+        let requests: Vec<QueryRequest> = registry
+            .labels()
+            .into_iter()
+            .map(|label| {
+                let src = rng.gen_range(g.n() as u64) as u32;
+                QueryRequest::from_arc(registry.build(label, src).unwrap())
+            })
+            .collect();
+        for policy in [
+            Policy::Sequential,
+            Policy::ConcurrentAdmitted { on_full: OnFull::Queue },
+        ] {
+            let rep = coord.run(&requests, policy).unwrap();
+            assert_eq!(rep.completed(), requests.len(), "seed {seed} {policy:?}");
+        }
+        // Policies share one functional execution path; validate it at
+        // every stripe offset the batch would use.
+        for (i, req) in requests.iter().enumerate() {
+            let out = req.analysis.run_offset(&g, coord.machine(), i);
+            req.analysis
+                .validate(&g, &out.values)
+                .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", req.analysis.describe()));
+        }
     }
 }
 
