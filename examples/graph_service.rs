@@ -15,7 +15,7 @@
 
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
-use pathfinder_queries::coordinator::{GraphService, ServiceConfig, WorkloadSpec};
+use pathfinder_queries::coordinator::{GraphService, PriorityMix, ServiceConfig, WorkloadSpec};
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::rmat::Rmat;
 use pathfinder_queries::sim::flow::OnFull;
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Sweep the offered load from idle to overload, serving all four
-    // analysis classes.
+    // analysis classes (k-hop carries a p99 SLO the summary checks).
     for rate in [50.0, 200.0, 1000.0, 5000.0, 20000.0] {
         let cfg = ServiceConfig {
             queries: 300,
@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
             workload: WorkloadSpec::four_class(),
             on_full: OnFull::Queue,
             seed: 0x5E21,
+            ..Default::default()
         };
         let rep = service.serve(&cfg)?;
         println!("offered {rate:>7.0} q/s:");
@@ -61,6 +62,21 @@ fn main() -> anyhow::Result<()> {
         arrival_rate_per_s: 20000.0,
         workload: WorkloadSpec::four_class(),
         on_full: OnFull::Reject,
+        seed: 0x5E21,
+        ..Default::default()
+    };
+    let rep = service.serve(&cfg)?;
+    println!("{}", indent(&rep.summary()));
+
+    // Overload with a bounded wait queue and an explicit priority mix:
+    // Batch work is shed first, Interactive survives with the best p99.
+    println!("same burst with a bounded queue (SHED) and 20/60/20 priorities:");
+    let cfg = ServiceConfig {
+        queries: 300,
+        arrival_rate_per_s: 20000.0,
+        workload: WorkloadSpec::four_class(),
+        on_full: OnFull::Shed { max_waiting: 32 },
+        priority_mix: Some(PriorityMix { interactive: 0.2, standard: 0.6, batch: 0.2 }),
         seed: 0x5E21,
     };
     let rep = service.serve(&cfg)?;

@@ -6,7 +6,7 @@
 
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::sim::demand::PhaseDemand;
-use pathfinder_queries::sim::flow::{FlowSim, QuerySpec};
+use pathfinder_queries::sim::flow::{Admission, FlowSim, OnFull, Priority, QuerySpec};
 use pathfinder_queries::sim::machine::Machine;
 use pathfinder_queries::util::bench::{black_box, Bench};
 use pathfinder_queries::util::rng::SplitMix64;
@@ -32,7 +32,11 @@ fn synth_query(rng: &mut SplitMix64, m: &Machine, id: usize) -> QuerySpec {
             p
         })
         .collect();
-    QuerySpec { id, label: "synth", phases, arrival_ns: 0.0 }
+    QuerySpec::new(id, "synth", phases, 0.0)
+        // Mixed priorities + a real context footprint so the admitted
+        // bench exercises the ordered wait queue and byte accounting.
+        .with_priority(Priority::ALL[id % 3])
+        .with_ctx_bytes(16 << 20)
 }
 
 fn main() {
@@ -57,6 +61,15 @@ fn main() {
         });
         bench.run(&format!("{preset}/sequential x{nq}"), || {
             black_box(sim.run_sequential(black_box(&specs)))
+        });
+        // Priority- and byte-aware admission at half the batch's footprint:
+        // the ordered wait queue + shedding path under sustained overload.
+        let adm = Admission::byte_budget(
+            (nq as u64 / 2).max(1) * (16 << 20),
+            OnFull::Shed { max_waiting: nq / 4 },
+        );
+        bench.run(&format!("{preset}/flow run_admitted(priority,bytes) x{nq}"), || {
+            black_box(sim.run_admitted(black_box(&specs), black_box(adm)))
         });
         // solo_ns is called once per phase entry — the inner-loop cost.
         let p = &specs[0].phases[0];

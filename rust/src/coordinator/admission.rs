@@ -2,103 +2,25 @@
 //!
 //! "Running 256 concurrent queries on eight nodes exhausted the memory used
 //! for thread contexts." Each in-flight query reserves stack/context space
-//! on every node; the ledger tracks reservations and refuses admissions
-//! that would not fit, so overload degrades into rejection (or queueing,
-//! via [`crate::sim::flow::Admission`]) instead of the paper's crash.
+//! on every node; the byte ledger tracks the **bytes** each query reserves
+//! (an [`crate::alg::Analysis`] may declare a non-default footprint) and
+//! refuses admissions that would not fit, so overload degrades into a
+//! typed rejection (or priority-ordered queueing/shedding, via
+//! [`crate::sim::flow::Admission`]) instead of the paper's crash.
+//!
+//! The ledger itself lives in [`crate::sim::ledger`] because the flow
+//! engine is what admits against and releases into it during a run
+//! (`FlowSim::run_admitted`); the coordinator builds it from the machine
+//! config ([`crate::coordinator::Coordinator::ledger`]) and uses it to
+//! pre-check declared footprints — a query larger than the whole machine
+//! is refused up front with the typed [`ContextExhausted`] error.
+//!
+//! Accounting is exact: the in-flight set's actual reserved bytes are
+//! summed, rather than dividing total capacity by the batch's fattest
+//! declared footprint (the conservative pre-byte-accounting heuristic),
+//! so one fat query no longer shrinks the whole machine for everyone.
 
-use crate::config::machine::MachineConfig;
-use crate::sim::flow::{Admission, OnFull};
-
-/// Why an admission was refused.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct ContextExhausted {
-    pub in_flight: usize,
-    pub capacity: usize,
-}
-
-impl std::fmt::Display for ContextExhausted {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(
-            f,
-            "thread-context memory exhausted: {} queries in flight, capacity {}",
-            self.in_flight, self.capacity
-        )
-    }
-}
-
-impl std::error::Error for ContextExhausted {}
-
-/// Per-machine context-memory ledger.
-#[derive(Debug, Clone)]
-pub struct ContextLedger {
-    capacity: usize,
-    in_flight: usize,
-    /// High-water mark (diagnostics).
-    peak: usize,
-    /// Total refused admissions.
-    refusals: usize,
-}
-
-impl ContextLedger {
-    /// Build from a machine config: capacity is how many per-query context
-    /// reservations fit in the per-node context memory.
-    pub fn new(cfg: &MachineConfig) -> Self {
-        ContextLedger {
-            capacity: cfg.max_concurrent_queries(),
-            in_flight: 0,
-            peak: 0,
-            refusals: 0,
-        }
-    }
-
-    /// Build with an explicit capacity (tests, what-if runs).
-    pub fn with_capacity(capacity: usize) -> Self {
-        ContextLedger { capacity, in_flight: 0, peak: 0, refusals: 0 }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity
-    }
-
-    pub fn in_flight(&self) -> usize {
-        self.in_flight
-    }
-
-    pub fn peak(&self) -> usize {
-        self.peak
-    }
-
-    pub fn refusals(&self) -> usize {
-        self.refusals
-    }
-
-    /// Reserve context memory for one query.
-    pub fn admit(&mut self) -> Result<(), ContextExhausted> {
-        if self.in_flight >= self.capacity {
-            self.refusals += 1;
-            return Err(ContextExhausted { in_flight: self.in_flight, capacity: self.capacity });
-        }
-        self.in_flight += 1;
-        self.peak = self.peak.max(self.in_flight);
-        Ok(())
-    }
-
-    /// Release one query's reservation.
-    pub fn release(&mut self) {
-        assert!(self.in_flight > 0, "release without admit");
-        self.in_flight -= 1;
-    }
-
-    /// Whether `k` queries can run fully concurrently on this machine.
-    pub fn fits(&self, k: usize) -> bool {
-        k <= self.capacity
-    }
-
-    /// The flow-engine admission policy this ledger implies.
-    pub fn policy(&self, on_full: OnFull) -> Admission {
-        Admission { max_in_flight: Some(self.capacity), on_full }
-    }
-}
+pub use crate::sim::ledger::{ContextExhausted, ContextLedger};
 
 #[cfg(test)]
 mod tests {
@@ -120,29 +42,9 @@ mod tests {
     }
 
     #[test]
-    fn admit_release_cycle() {
-        let mut l = ContextLedger::with_capacity(2);
-        l.admit().unwrap();
-        l.admit().unwrap();
-        let err = l.admit().unwrap_err();
-        assert_eq!(err.in_flight, 2);
-        assert_eq!(l.refusals(), 1);
-        l.release();
-        l.admit().unwrap();
-        assert_eq!(l.peak(), 2);
-    }
-
-    #[test]
-    #[should_panic(expected = "release without admit")]
-    fn release_underflow_panics() {
-        ContextLedger::with_capacity(1).release();
-    }
-
-    #[test]
-    fn policy_carries_capacity() {
-        let l = ContextLedger::with_capacity(7);
-        let p = l.policy(OnFull::Queue);
-        assert_eq!(p.max_in_flight, Some(7));
-        assert_eq!(p.on_full, OnFull::Queue);
+    fn capacity_queries_matches_machine_config() {
+        let cfg = MachineConfig::pathfinder_8();
+        let l = ContextLedger::new(&cfg);
+        assert_eq!(l.capacity_queries(), cfg.max_concurrent_queries());
     }
 }

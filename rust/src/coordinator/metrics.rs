@@ -11,6 +11,19 @@ use crate::sim::flow::FlowReport;
 use crate::sim::machine::Machine;
 use crate::util::stats::{improvement_pct, Quantiles};
 
+/// How admission disposed of one query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Outcome {
+    /// Ran to completion.
+    Completed,
+    /// Refused at arrival (admission full under reject, or a footprint
+    /// larger than the machine's whole context memory).
+    Rejected,
+    /// Admitted to the wait queue but dropped before starting: deadline
+    /// expired while waiting, or shed under overload (Batch first).
+    Shed,
+}
+
 /// One executed query's outcome.
 #[derive(Debug, Clone)]
 pub struct QueryRecord {
@@ -22,32 +35,82 @@ pub struct QueryRecord {
     /// Latency deadline (s from arrival), if the request had one.
     pub deadline_s: Option<f64>,
     /// End-to-end latency in seconds (arrival to completion), NaN if the
-    /// query was rejected by admission control.
+    /// query never ran.
     pub latency_s: f64,
     /// Arrival time (s) within the run.
     pub arrival_s: f64,
-    /// Completion time (s) within the run, NaN if rejected.
+    /// First-progress time (s) within the run; NaN = never started. The
+    /// gap to `arrival_s` is the admission wait.
+    pub start_s: f64,
+    /// Completion time (s) within the run, NaN if the query never ran.
     pub finish_s: f64,
+    /// How admission disposed of the query.
+    pub outcome: Outcome,
 }
 
 impl QueryRecord {
+    pub fn completed(&self) -> bool {
+        self.outcome == Outcome::Completed
+    }
+
     pub fn rejected(&self) -> bool {
-        self.latency_s.is_nan()
+        self.outcome == Outcome::Rejected
+    }
+
+    pub fn shed(&self) -> bool {
+        self.outcome == Outcome::Shed
+    }
+
+    /// Admission wait: arrival to first progress (s). NaN if the query
+    /// never started.
+    pub fn wait_s(&self) -> f64 {
+        self.start_s - self.arrival_s
     }
 
     /// Completed but blew its deadline.
     pub fn missed_deadline(&self) -> bool {
         match self.deadline_s {
-            Some(d) => !self.rejected() && self.latency_s > d,
+            Some(d) => self.completed() && self.latency_s > d,
             None => false,
         }
+    }
+}
+
+/// Per-priority-class admission summary of a run.
+#[derive(Debug, Clone)]
+pub struct PriorityStats {
+    pub priority: Priority,
+    /// Requests submitted in this class.
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub shed: usize,
+    /// Mean admission wait over queries that started (s); 0 if none did.
+    pub mean_wait_s: f64,
+    /// Latency quantiles of completed queries, if any.
+    pub latency: Option<Quantiles>,
+}
+
+impl PriorityStats {
+    /// One operator-facing report line (shared by the CLI `run` output
+    /// and [`crate::coordinator::ServiceReport::summary`]).
+    pub fn line(&self) -> String {
+        format!(
+            "[{}] {} submitted, {} done, {} shed, {} rejected, mean wait {:.4}s",
+            self.priority, self.submitted, self.completed, self.shed, self.rejected,
+            self.mean_wait_s
+        )
     }
 }
 
 /// Outcome of one coordinated run (one policy, one machine, one batch).
 #[derive(Debug, Clone)]
 pub struct RunReport {
-    /// Policy label ("sequential" / "concurrent" / "concurrent(cap=N)").
+    /// Policy label: "sequential", "concurrent", or an admitted variant
+    /// carrying the overload behavior and the effective byte budget —
+    /// "concurrent(queue, cap=4080MiB)", "concurrent(reject, cap=…)",
+    /// "concurrent(shed<=N, cap=…)" (see
+    /// [`crate::coordinator::Policy::label`]).
     pub policy: String,
     /// Machine preset name.
     pub machine: String,
@@ -71,6 +134,7 @@ impl RunReport {
         flow: &FlowReport,
     ) -> Self {
         assert_eq!(requests.len(), flow.timings.len());
+        let shed: std::collections::HashSet<usize> = flow.shed.iter().copied().collect();
         let records = flow
             .timings
             .iter()
@@ -82,7 +146,15 @@ impl RunReport {
                 deadline_s: req.deadline_ns.map(|d| d * 1e-9),
                 latency_s: t.latency_ns() * 1e-9,
                 arrival_s: t.arrival_ns * 1e-9,
+                start_s: t.start_ns * 1e-9,
                 finish_s: t.finish_ns * 1e-9,
+                outcome: if t.completed() {
+                    Outcome::Completed
+                } else if shed.contains(&t.id) {
+                    Outcome::Shed
+                } else {
+                    Outcome::Rejected
+                },
             })
             .collect();
         let mean_channel_utilization = flow.counters.mean_channel_utilization(machine);
@@ -97,19 +169,51 @@ impl RunReport {
         }
     }
 
-    /// Completed (non-rejected) query count.
+    /// Completed query count.
     pub fn completed(&self) -> usize {
-        self.records.iter().filter(|r| !r.rejected()).count()
+        self.records.iter().filter(|r| r.completed()).count()
     }
 
-    /// Rejected query count.
+    /// Queries rejected at arrival.
     pub fn rejections(&self) -> usize {
-        self.records.len() - self.completed()
+        self.records.iter().filter(|r| r.rejected()).count()
+    }
+
+    /// Queries shed from the wait queue (deadline expiry or overload).
+    pub fn sheds(&self) -> usize {
+        self.records.iter().filter(|r| r.shed()).count()
     }
 
     /// Completed queries whose deadline was exceeded.
     pub fn deadline_misses(&self) -> usize {
         self.records.iter().filter(|r| r.missed_deadline()).count()
+    }
+
+    /// Per-priority-class admission summary, best-served class first;
+    /// classes with no submissions are omitted.
+    pub fn priority_stats(&self) -> Vec<PriorityStats> {
+        Priority::ALL.iter().filter_map(|&p| self.priority_class(p)).collect()
+    }
+
+    /// Admission summary of one priority class, if it had submissions.
+    pub fn priority_class(&self, priority: Priority) -> Option<PriorityStats> {
+        let rs: Vec<&QueryRecord> =
+            self.records.iter().filter(|r| r.priority == priority).collect();
+        if rs.is_empty() {
+            return None;
+        }
+        let waits: Vec<f64> =
+            rs.iter().filter(|r| r.start_s.is_finite()).map(|r| r.wait_s()).collect();
+        let lats: Vec<f64> = rs.iter().filter(|r| r.completed()).map(|r| r.latency_s).collect();
+        Some(PriorityStats {
+            priority,
+            submitted: rs.len(),
+            completed: rs.iter().filter(|r| r.completed()).count(),
+            rejected: rs.iter().filter(|r| r.rejected()).count(),
+            shed: rs.iter().filter(|r| r.shed()).count(),
+            mean_wait_s: if waits.is_empty() { 0.0 } else { crate::util::stats::mean(&waits) },
+            latency: (!lats.is_empty()).then(|| Quantiles::from_samples(&lats)),
+        })
     }
 
     /// Distinct analysis labels in submission order of first appearance.
@@ -121,7 +225,7 @@ impl RunReport {
     pub fn latencies(&self, label: Option<&str>) -> Vec<f64> {
         self.records
             .iter()
-            .filter(|r| !r.rejected())
+            .filter(|r| r.completed())
             .filter(|r| label.is_none_or(|l| r.label == l))
             .map(|r| r.latency_s)
             .collect()
@@ -226,6 +330,8 @@ mod tests {
             counters: Counters::new(8),
             peak_concurrency: latencies_ns.len(),
             rejected: vec![],
+            shed: vec![],
+            peak_ctx_bytes: 0,
         };
         (requests, flow)
     }
@@ -253,12 +359,57 @@ mod tests {
     fn rejected_queries_excluded() {
         let (qs, mut flow) = flow_with(&[1e9, 2e9]);
         flow.timings[1].finish_ns = f64::NAN;
+        flow.timings[1].start_ns = f64::NAN;
         flow.rejected = vec![1];
         let m = machine();
         let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
         assert_eq!(rep.completed(), 1);
         assert_eq!(rep.rejections(), 1);
+        assert_eq!(rep.sheds(), 0);
+        assert_eq!(rep.records[1].outcome, Outcome::Rejected);
+        assert!(rep.records[1].wait_s().is_nan());
         assert_eq!(rep.latencies(None), vec![1.0]);
+    }
+
+    #[test]
+    fn shed_and_rejected_are_distinct_outcomes() {
+        let (qs, mut flow) = flow_with(&[1e9, 2e9, 3e9]);
+        for i in [1, 2] {
+            flow.timings[i].finish_ns = f64::NAN;
+            flow.timings[i].start_ns = f64::NAN;
+        }
+        flow.rejected = vec![1];
+        flow.shed = vec![2];
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert_eq!(rep.completed(), 1);
+        assert_eq!(rep.rejections(), 1);
+        assert_eq!(rep.sheds(), 1);
+        assert!(rep.records[2].shed() && !rep.records[2].rejected());
+        // A shed query never completes, so it cannot "miss" a deadline.
+        assert_eq!(rep.deadline_misses(), 0);
+    }
+
+    #[test]
+    fn priority_stats_split_by_class() {
+        let (mut qs, mut flow) = flow_with(&[1e9, 2e9, 3e9, 4e9]);
+        qs[0] = qs[0].clone().with_priority(Priority::Interactive);
+        qs[3] = qs[3].clone().with_priority(Priority::Batch);
+        // The batch query waited 1 s before starting; the rest started at
+        // arrival.
+        flow.timings[3].start_ns = 1e9;
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        let stats = rep.priority_stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats[0].priority, Priority::Interactive);
+        assert_eq!(stats[0].submitted, 1);
+        assert_eq!(stats[2].priority, Priority::Batch);
+        assert!((stats[2].mean_wait_s - 1.0).abs() < 1e-12);
+        assert!((stats[1].mean_wait_s - 0.0).abs() < 1e-12);
+        let batch = rep.priority_class(Priority::Batch).unwrap();
+        assert_eq!(batch.completed, 1);
+        assert!(batch.latency.is_some());
     }
 
     #[test]

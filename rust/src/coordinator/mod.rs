@@ -10,9 +10,9 @@
 //!   metadata (arrival time, priority class, optional deadline);
 //! * [`planner`] — turns workload descriptions (query counts, class
 //!   mixes, arrival processes) into concrete request lists;
-//! * [`admission`] — thread-context memory accounting; the §IV-B
-//!   256-queries-on-8-nodes exhaustion becomes a graceful rejection or a
-//!   FIFO wait;
+//! * [`admission`] — byte-exact thread-context memory accounting; the
+//!   §IV-B 256-queries-on-8-nodes exhaustion becomes a typed rejection, a
+//!   priority-ordered wait, or overload shedding (Batch work first);
 //! * [`scheduler`] — executes a request batch under a policy (sequential /
 //!   concurrent / capped-concurrent) on the flow engine, caching and
 //!   rotating demand per analysis kind where instances are identical;
@@ -30,9 +30,12 @@ pub mod request;
 pub mod scheduler;
 pub mod service;
 
-pub use admission::ContextLedger;
-pub use metrics::{ImprovementRow, QueryRecord, RunReport};
+pub use admission::{ContextExhausted, ContextLedger};
+pub use metrics::{ImprovementRow, Outcome, PriorityStats, QueryRecord, RunReport};
 pub use planner::{arrival_times, bfs_queries, mix_queries};
 pub use request::{Priority, QueryRequest};
 pub use scheduler::{Coordinator, Policy};
-pub use service::{GraphService, ServiceConfig, ServiceReport, WorkloadClass, WorkloadSpec};
+pub use service::{
+    GraphService, PriorityMix, ServiceConfig, ServiceReport, SloOutcome, WorkloadClass,
+    WorkloadSpec,
+};

@@ -108,6 +108,16 @@ pub fn assign_arrivals(requests: &mut [QueryRequest], arrivals: &[f64]) {
     }
 }
 
+/// Assign priority classes round-robin across the batch (an even
+/// interactive/standard/batch mix — the shape the overload experiments
+/// use to exercise priority-aware admission).
+pub fn assign_round_robin_priorities(requests: &mut [QueryRequest]) {
+    use crate::coordinator::request::Priority;
+    for (i, r) in requests.iter_mut().enumerate() {
+        r.priority = Priority::ALL[i % Priority::ALL.len()];
+    }
+}
+
 /// Poisson arrival times: `k` arrivals at `rate_per_s`, reproducible from
 /// `seed`. Returns times in ns, sorted.
 pub fn arrival_times(k: usize, rate_per_s: f64, seed: u64) -> Vec<f64> {
@@ -229,6 +239,20 @@ mod tests {
         assign_arrivals(&mut qs, &[1.0, 2.0, 3.0]);
         assert_eq!(qs[0].arrival_ns, 1.0);
         assert_eq!(qs[2].arrival_ns, 3.0);
+    }
+
+    #[test]
+    fn round_robin_priorities_cycle_all_classes() {
+        use crate::coordinator::request::Priority;
+        let g = g();
+        let mut qs = bfs_queries(&g, 7, 9);
+        assign_round_robin_priorities(&mut qs);
+        assert_eq!(qs[0].priority, Priority::Interactive);
+        assert_eq!(qs[1].priority, Priority::Standard);
+        assert_eq!(qs[2].priority, Priority::Batch);
+        assert_eq!(qs[3].priority, Priority::Interactive);
+        let interactive = qs.iter().filter(|q| q.priority == Priority::Interactive).count();
+        assert_eq!(interactive, 3);
     }
 
     #[test]

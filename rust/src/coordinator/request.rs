@@ -4,35 +4,18 @@
 //! [`QueryRequest`]s. The analysis says *what* to compute; the request
 //! adds *when* it arrives, which priority class it belongs to, and an
 //! optional latency deadline — the knobs a serving deployment schedules
-//! and reports on. Priority and deadline are carried through to the
-//! per-query records today (deadline misses are counted in
-//! [`crate::coordinator::metrics::RunReport`]); priority-aware admission
-//! is a ROADMAP follow-up.
+//! and reports on. All three are threaded into the engine's
+//! [`crate::sim::flow::QuerySpec`] by
+//! [`crate::coordinator::Coordinator::prepare`], where admission orders
+//! the wait queue by priority, sheds expired deadlines, and accounts the
+//! analysis's declared context bytes.
 
 use crate::alg::Analysis;
 use std::sync::Arc;
 
-/// Scheduling priority class of a request.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
-pub enum Priority {
-    /// Latency-sensitive, user-facing.
-    Interactive,
-    /// The default class.
-    #[default]
-    Standard,
-    /// Throughput-oriented background work.
-    Batch,
-}
-
-impl std::fmt::Display for Priority {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            Priority::Interactive => write!(f, "interactive"),
-            Priority::Standard => write!(f, "standard"),
-            Priority::Batch => write!(f, "batch"),
-        }
-    }
-}
+/// Scheduling priority class (re-exported from the engine, which orders
+/// its wait queue by it: `Interactive < Standard < Batch`).
+pub use crate::sim::flow::Priority;
 
 /// One analysis submitted for execution, with scheduling metadata.
 #[derive(Debug, Clone)]

@@ -11,10 +11,11 @@
 //! cheap channel rotation of the cached phases.
 
 use crate::alg::Analysis;
+use crate::coordinator::admission::ContextLedger;
 use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
 use crate::sim::demand::PhaseDemand;
-use crate::sim::flow::{Admission, FlowSim, OnFull, QuerySpec};
+use crate::sim::flow::{FlowSim, OnFull, QuerySpec};
 use crate::sim::machine::Machine;
 use std::collections::HashMap;
 
@@ -30,19 +31,30 @@ pub enum Policy {
     /// Exceeding the machine's thread-context memory is *fatal* on the real
     /// Pathfinder; here `run` returns an error instead.
     Concurrent,
-    /// Concurrent with admission control at the machine's context capacity:
-    /// the overload behavior a production deployment would choose.
+    /// Concurrent with byte-exact admission control at the machine's
+    /// thread-context capacity: the overload behavior a production
+    /// deployment would choose. The wait queue is priority-ordered with
+    /// anti-starvation aging; see [`crate::sim::flow::Admission`].
     ConcurrentAdmitted { on_full: OnFull },
 }
 
 impl Policy {
-    pub fn label(&self) -> String {
+    /// Report label. `ctx_capacity_bytes` is the effective admission
+    /// budget, included so reports on differently-sized machines (or
+    /// what-if capacities) are distinguishable.
+    pub fn label(&self, ctx_capacity_bytes: u64) -> String {
+        let cap_mib = ctx_capacity_bytes >> 20;
         match self {
             Policy::Sequential => "sequential".into(),
             Policy::Concurrent => "concurrent".into(),
-            Policy::ConcurrentAdmitted { on_full: OnFull::Queue } => "concurrent(queue)".into(),
+            Policy::ConcurrentAdmitted { on_full: OnFull::Queue } => {
+                format!("concurrent(queue, cap={cap_mib}MiB)")
+            }
             Policy::ConcurrentAdmitted { on_full: OnFull::Reject } => {
-                "concurrent(reject)".into()
+                format!("concurrent(reject, cap={cap_mib}MiB)")
+            }
+            Policy::ConcurrentAdmitted { on_full: OnFull::Shed { max_waiting } } => {
+                format!("concurrent(shed<={max_waiting}, cap={cap_mib}MiB)")
             }
         }
     }
@@ -96,29 +108,17 @@ impl<'g> Coordinator<'g> {
             .sum()
     }
 
-    /// In-flight cap for admitted execution: conservative enough that even
-    /// a batch of the largest declared footprint cannot exhaust
-    /// thread-context memory (the flow engine's admission counts queries,
-    /// so the cap assumes every slot holds the batch's fattest analysis).
-    /// Equals [`Coordinator::capacity`] for default-footprint batches. A
-    /// lone over-sized query is still admitted — on the real machine that
-    /// run would crash; modeling it as a typed rejection is a ROADMAP
-    /// follow-up.
-    pub fn admitted_cap(&self, requests: &[QueryRequest]) -> usize {
-        let default = self.machine.cfg.ctx_bytes_per_query;
-        let max_footprint = requests
-            .iter()
-            .map(|r| r.analysis.ctx_mem_bytes(self.g).unwrap_or(default))
-            .max()
-            .unwrap_or(default)
-            .max(1);
-        ((self.ctx_capacity_bytes() / max_footprint) as usize).clamp(1, self.capacity().max(1))
+    /// The byte ledger admitted execution runs against: the machine's
+    /// whole thread-context memory, accounted per-query.
+    pub fn ledger(&self) -> ContextLedger {
+        ContextLedger::new(&self.machine.cfg)
     }
 
     /// Build engine-ready specs for a request batch: functional execution +
-    /// demand emission, stripe offset = position in the batch, arrivals
-    /// taken from each request. Cacheable analyses hit the per-kind demand
-    /// cache and are rotated instead of re-executed.
+    /// demand emission, stripe offset = position in the batch, arrivals,
+    /// priority, deadline and declared context footprint taken from each
+    /// request. Cacheable analyses hit the per-kind demand cache and are
+    /// rotated instead of re-executed.
     pub fn prepare(&self, requests: &[QueryRequest]) -> Vec<QuerySpec> {
         requests
             .iter()
@@ -135,7 +135,17 @@ impl<'g> Coordinator<'g> {
                     }
                     None => a.phases(self.g, &self.machine, i),
                 };
-                QuerySpec { id: i, label: a.label(), phases, arrival_ns: req.arrival_ns }
+                QuerySpec {
+                    id: i,
+                    label: a.label(),
+                    phases,
+                    arrival_ns: req.arrival_ns,
+                    priority: req.priority,
+                    deadline_ns: req.deadline_ns,
+                    ctx_bytes: a
+                        .ctx_mem_bytes(self.g)
+                        .unwrap_or(self.machine.cfg.ctx_bytes_per_query),
+                }
             })
             .collect()
     }
@@ -179,12 +189,28 @@ impl<'g> Coordinator<'g> {
                 self.sim.run(specs)
             }
             Policy::ConcurrentAdmitted { on_full } => {
-                let adm =
-                    Admission { max_in_flight: Some(self.admitted_cap(requests)), on_full };
-                self.sim.run_admitted(specs, adm)
+                let ledger = self.ledger();
+                // A query whose declared footprint exceeds the whole
+                // machine could never run — that is a workload/machine
+                // configuration error, not load, so the run fails loudly
+                // with the typed error instead of silently admitting it
+                // (the real Pathfinder would crash) or silently dropping
+                // every instance of that analysis. Callers driving the
+                // engine directly get per-query degradation instead
+                // (`FlowSim::run_admitted` records such queries as
+                // rejections).
+                for spec in specs {
+                    ledger.check_admissible(spec.ctx_bytes)?;
+                }
+                self.sim.run_admitted(specs, ledger.policy(on_full))
             }
         };
-        Ok(RunReport::from_flow(policy.label(), &self.machine, requests, &flow))
+        Ok(RunReport::from_flow(
+            policy.label(self.ctx_capacity_bytes()),
+            &self.machine,
+            requests,
+            &flow,
+        ))
     }
 }
 
@@ -349,14 +375,74 @@ mod tests {
         // Admission must hold at most 2 GiB / 1 GiB = 2 fat queries in
         // flight — not the 128 a default-footprint count would allow.
         let fat: Vec<QueryRequest> = (0..5).map(|_| QueryRequest::new(FatCc)).collect();
-        assert_eq!(c.admitted_cap(&fat), 2);
         let rep = c
             .run(&fat, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
             .unwrap();
         assert_eq!(rep.completed(), 5);
         assert!(rep.peak_concurrency <= 2, "peak {}", rep.peak_concurrency);
-        // Default-footprint batches keep the machine's full capacity.
-        let thin = planner::bfs_queries(&g, 4, 1);
-        assert_eq!(c.admitted_cap(&thin), c.capacity());
+    }
+
+    /// Byte accounting is exact, not divide-by-fattest: one fat query
+    /// must not shrink the machine for a stream of thin ones.
+    #[test]
+    fn byte_ledger_admits_thin_queries_alongside_fat() {
+        let g = rmat(8);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 256 << 20; // 2 GiB total
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        // 1 fat (1 GiB) + 8 thin (16 MiB each) = 1.125 GiB: everything
+        // fits concurrently. The old fattest-footprint heuristic capped
+        // in-flight work at 2 queries.
+        let mut batch: Vec<QueryRequest> = vec![QueryRequest::new(FatCc)];
+        batch.extend(planner::bfs_queries(&g, 8, 1));
+        let rep = c
+            .run(&batch, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
+            .unwrap();
+        assert_eq!(rep.completed(), 9);
+        assert!(
+            rep.peak_concurrency > 2,
+            "exact byte accounting must beat the divide-by-fattest cap, peak {}",
+            rep.peak_concurrency
+        );
+    }
+
+    /// A lone query whose declared footprint exceeds the whole machine is
+    /// refused with the typed `ContextExhausted` error — it is not
+    /// silently admitted to a run that would crash the real Pathfinder.
+    #[test]
+    fn oversized_query_yields_typed_context_exhausted() {
+        use crate::coordinator::admission::ContextExhausted;
+
+        let g = rmat(8);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 64 << 20; // 512 MiB total < 1 GiB
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        let one: Vec<QueryRequest> = vec![QueryRequest::new(FatCc)];
+        for on_full in [OnFull::Queue, OnFull::Reject, OnFull::Shed { max_waiting: 4 }] {
+            let err = c
+                .run(&one, Policy::ConcurrentAdmitted { on_full })
+                .unwrap_err();
+            let ctx = err
+                .downcast_ref::<ContextExhausted>()
+                .unwrap_or_else(|| panic!("want typed ContextExhausted, got {err:#}"));
+            assert!(ctx.oversized());
+            assert_eq!(ctx.requested_bytes, 1 << 30);
+            assert_eq!(ctx.capacity_bytes, 512 << 20);
+        }
+    }
+
+    #[test]
+    fn policy_labels_carry_the_effective_cap() {
+        let g = rmat(8);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 16 << 20; // 128 MiB total
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        let qs = planner::bfs_queries(&g, 2, 1);
+        let rep = c
+            .run(&qs, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
+            .unwrap();
+        assert_eq!(rep.policy, "concurrent(queue, cap=128MiB)");
+        let seq = c.run(&qs, Policy::Sequential).unwrap();
+        assert_eq!(seq.policy, "sequential");
     }
 }

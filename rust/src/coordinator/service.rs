@@ -30,13 +30,26 @@ pub struct WorkloadClass {
     pub weight: f64,
     /// Priority the class's requests carry.
     pub priority: Priority,
+    /// Latency SLO: the report checks the class's p99 against this target
+    /// (s) and turns the quantiles into a pass/fail signal.
+    pub slo_p99_s: Option<f64>,
+    /// Per-request deadline (s from arrival). Queries whose deadline
+    /// expires while queued are shed by admission.
+    pub deadline_s: Option<f64>,
     factory: AnalysisFactory,
 }
 
 impl WorkloadClass {
     /// A class from an explicit factory.
     pub fn new(label: &'static str, weight: f64, factory: AnalysisFactory) -> Self {
-        WorkloadClass { label, weight, priority: Priority::default(), factory }
+        WorkloadClass {
+            label,
+            weight,
+            priority: Priority::default(),
+            slo_p99_s: None,
+            deadline_s: None,
+            factory,
+        }
     }
 
     /// A class resolved from a registry by label.
@@ -57,6 +70,19 @@ impl WorkloadClass {
         self
     }
 
+    /// Set a p99 latency SLO (s) the service report checks.
+    pub fn with_slo_p99_s(mut self, slo_p99_s: f64) -> Self {
+        self.slo_p99_s = Some(slo_p99_s);
+        self
+    }
+
+    /// Set a per-request deadline (s from arrival); expired queued
+    /// requests are shed.
+    pub fn with_deadline_s(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
     /// Build one instance rooted at `src`.
     pub fn build(&self, src: u32) -> Arc<dyn Analysis> {
         (self.factory)(src)
@@ -69,7 +95,71 @@ impl std::fmt::Debug for WorkloadClass {
             .field("label", &self.label)
             .field("weight", &self.weight)
             .field("priority", &self.priority)
+            .field("slo_p99_s", &self.slo_p99_s)
+            .field("deadline_s", &self.deadline_s)
             .finish()
+    }
+}
+
+/// A distribution over priority classes: arrivals are assigned a priority
+/// sampled from these weights, overriding each workload class's default
+/// priority. The CLI `serve --priority-mix interactive=0.2,standard=0.6,
+/// batch=0.2` knob parses into this.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PriorityMix {
+    pub interactive: f64,
+    pub standard: f64,
+    pub batch: f64,
+}
+
+impl Default for PriorityMix {
+    fn default() -> Self {
+        PriorityMix { interactive: 0.0, standard: 1.0, batch: 0.0 }
+    }
+}
+
+impl PriorityMix {
+    /// Parse `class=weight,...` (e.g. `interactive=0.2,standard=0.6,
+    /// batch=0.2`); omitted classes get weight 0.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut mix = PriorityMix { interactive: 0.0, standard: 0.0, batch: 0.0 };
+        for (class, weight) in crate::util::cli::parse_kv_f64_list(spec, "priority mix")? {
+            match class {
+                "interactive" => mix.interactive = weight,
+                "standard" => mix.standard = weight,
+                "batch" => mix.batch = weight,
+                other => anyhow::bail!(
+                    "unknown priority class {other:?} (want interactive/standard/batch)"
+                ),
+            }
+        }
+        mix.validate()?;
+        Ok(mix)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.interactive >= 0.0 && self.standard >= 0.0 && self.batch >= 0.0,
+            "priority weights must be non-negative"
+        );
+        anyhow::ensure!(
+            self.interactive + self.standard + self.batch > 0.0,
+            "total priority weight must be positive"
+        );
+        Ok(())
+    }
+
+    /// Sample one priority class in proportion to the weights.
+    pub fn pick(&self, rng: &mut SplitMix64) -> Priority {
+        let total = self.interactive + self.standard + self.batch;
+        let x = rng.next_f64() * total;
+        if x < self.interactive {
+            Priority::Interactive
+        } else if x < self.interactive + self.standard {
+            Priority::Standard
+        } else {
+            Priority::Batch
+        }
     }
 }
 
@@ -95,13 +185,15 @@ impl WorkloadSpec {
 
     /// A four-class mix exercising every shipped analysis: mostly
     /// interactive short queries (BFS, k-hop), some SSSP, a CC trickle.
+    /// The interactive k-hop class carries a p99 SLO the report checks.
     pub fn four_class() -> Self {
         let reg = AnalysisRegistry::builtin();
         WorkloadSpec::new(vec![
             WorkloadClass::from_registry(&reg, "bfs", 0.5).expect("builtin"),
             WorkloadClass::from_registry(&reg, "khop", 0.25)
                 .expect("builtin")
-                .with_priority(Priority::Interactive),
+                .with_priority(Priority::Interactive)
+                .with_slo_p99_s(0.05),
             WorkloadClass::from_registry(&reg, "sssp", 0.15).expect("builtin"),
             WorkloadClass::from_registry(&reg, "cc", 0.1)
                 .expect("builtin")
@@ -112,21 +204,10 @@ impl WorkloadSpec {
     /// Parse a `label=weight,label=weight,...` spec against a registry,
     /// e.g. `bfs=0.6,cc=0.1,sssp=0.2,khop=0.1`.
     pub fn parse(spec: &str, registry: &AnalysisRegistry) -> anyhow::Result<Self> {
-        let mut classes = Vec::new();
-        for piece in spec.split(',') {
-            let piece = piece.trim();
-            if piece.is_empty() {
-                continue;
-            }
-            let (label, weight) = piece
-                .split_once('=')
-                .ok_or_else(|| anyhow::anyhow!("bad class {piece:?}: want label=weight"))?;
-            let weight: f64 = weight
-                .trim()
-                .parse()
-                .map_err(|e| anyhow::anyhow!("bad weight in {piece:?}: {e}"))?;
-            classes.push(WorkloadClass::from_registry(registry, label.trim(), weight)?);
-        }
+        let classes = crate::util::cli::parse_kv_f64_list(spec, "workload mix")?
+            .into_iter()
+            .map(|(label, weight)| WorkloadClass::from_registry(registry, label, weight))
+            .collect::<anyhow::Result<Vec<_>>>()?;
         let spec = WorkloadSpec::new(classes);
         spec.validate()?;
         Ok(spec)
@@ -180,7 +261,10 @@ pub struct ServiceConfig {
     pub workload: WorkloadSpec,
     /// What to do when thread-context memory is full.
     pub on_full: OnFull,
-    /// RNG seed (arrivals, sources, query classes).
+    /// When set, each arrival's priority is sampled from this distribution
+    /// instead of taken from its workload class.
+    pub priority_mix: Option<PriorityMix>,
+    /// RNG seed (arrivals, sources, query classes, priorities).
     pub seed: u64,
 }
 
@@ -191,22 +275,42 @@ impl Default for ServiceConfig {
             arrival_rate_per_s: 100.0,
             workload: WorkloadSpec::bfs_cc(0.1),
             on_full: OnFull::Queue,
+            priority_mix: None,
             seed: 0x5E21,
         }
     }
+}
+
+/// Per-class SLO verdict in a service report.
+#[derive(Debug, Clone)]
+pub struct SloOutcome {
+    pub label: String,
+    /// The class's declared p99 target (s).
+    pub target_p99_s: f64,
+    /// Measured p99 (s); None if the class completed nothing.
+    pub actual_p99_s: Option<f64>,
+    /// True iff the class completed queries and its p99 met the target.
+    pub pass: bool,
 }
 
 /// Operator-facing service run summary.
 #[derive(Debug, Clone)]
 pub struct ServiceReport {
     pub served: usize,
+    /// Queries rejected at arrival.
     pub rejected: usize,
+    /// Queries shed from the wait queue (deadline expiry or overload).
+    pub shed: usize,
     /// Wall (simulated) duration from first arrival to last completion (s).
     pub duration_s: f64,
     /// Completed queries per second.
     pub throughput_qps: f64,
     /// Latency quantile summary per class (s), in first-appearance order.
     pub class_latency: Vec<(String, Quantiles)>,
+    /// SLO pass/fail per class that declared a p99 target.
+    pub slo: Vec<SloOutcome>,
+    /// Per-priority-class admission summary (waits, sheds, rejections).
+    pub priority: Vec<crate::coordinator::metrics::PriorityStats>,
     /// Peak simultaneous in-flight queries.
     pub peak_concurrency: usize,
     /// Mean channel utilization over the run.
@@ -219,13 +323,25 @@ impl ServiceReport {
         self.class_latency.iter().find(|(l, _)| l == label).map(|(_, q)| q)
     }
 
-    /// Render a compact operator summary with per-class p50/p95/p99.
+    /// SLO verdict of one class, if it declared a target.
+    pub fn slo_of(&self, label: &str) -> Option<&SloOutcome> {
+        self.slo.iter().find(|s| s.label == label)
+    }
+
+    /// All declared SLOs passed (vacuously true with none declared).
+    pub fn slos_pass(&self) -> bool {
+        self.slo.iter().all(|s| s.pass)
+    }
+
+    /// Render a compact operator summary: per-class p50/p95/p99 with SLO
+    /// verdicts, plus per-priority waits and shed/reject counts.
     pub fn summary(&self) -> String {
         let mut out = format!(
-            "served {} (rejected {}) in {:.2}s — {:.1} q/s, peak {} in flight, \
+            "served {} (rejected {}, shed {}) in {:.2}s — {:.1} q/s, peak {} in flight, \
              channel util {:.0}%",
             self.served,
             self.rejected,
+            self.shed,
             self.duration_s,
             self.throughput_qps,
             self.peak_concurrency,
@@ -233,6 +349,16 @@ impl ServiceReport {
         );
         for (label, q) in &self.class_latency {
             out.push_str(&format!("\n  {:>5}: {}", label, q.latency_line()));
+            if let Some(s) = self.slo_of(label) {
+                out.push_str(&format!(
+                    " | SLO p99<={:.3}s: {}",
+                    s.target_p99_s,
+                    if s.pass { "PASS" } else { "FAIL" }
+                ));
+            }
+        }
+        for s in &self.priority {
+            out.push_str(&format!("\n  {}", s.line()));
         }
         out
     }
@@ -256,6 +382,9 @@ impl<'g> GraphService<'g> {
     pub fn serve(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
         anyhow::ensure!(cfg.queries > 0, "need at least one query");
         cfg.workload.validate()?;
+        if let Some(mix) = &cfg.priority_mix {
+            mix.validate()?;
+        }
         let g = self.coord.graph();
         let mut rng = SplitMix64::new(cfg.seed);
         let sources = crate::graph::sample::bfs_sources(g, cfg.queries, rng.next_u64());
@@ -265,9 +394,17 @@ impl<'g> GraphService<'g> {
             .zip(&arrivals)
             .map(|(src, &arrival)| {
                 let class = cfg.workload.pick(&mut rng);
-                QueryRequest::from_arc(class.build(src))
+                let priority = match &cfg.priority_mix {
+                    Some(mix) => mix.pick(&mut rng),
+                    None => class.priority,
+                };
+                let mut req = QueryRequest::from_arc(class.build(src))
                     .at(arrival)
-                    .with_priority(class.priority)
+                    .with_priority(priority);
+                if let Some(d) = class.deadline_s {
+                    req = req.with_deadline_ns(d * 1e9);
+                }
+                req
             })
             .collect();
 
@@ -276,17 +413,38 @@ impl<'g> GraphService<'g> {
 
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
         let duration_s = (report.makespan_s - first_arrival).max(f64::MIN_POSITIVE);
-        let class_latency = report
+        let class_latency: Vec<(String, Quantiles)> = report
             .per_class_quantiles()
             .into_iter()
             .map(|(l, q)| (l.to_string(), q))
             .collect();
+        let slo = cfg
+            .workload
+            .classes
+            .iter()
+            .filter_map(|c| {
+                let target = c.slo_p99_s?;
+                let actual = class_latency
+                    .iter()
+                    .find(|(l, _)| l == c.label)
+                    .map(|(_, q)| q.q99);
+                Some(SloOutcome {
+                    label: c.label.to_string(),
+                    target_p99_s: target,
+                    actual_p99_s: actual,
+                    pass: actual.is_some_and(|a| a <= target),
+                })
+            })
+            .collect();
         Ok(ServiceReport {
             served: report.completed(),
             rejected: report.rejections(),
+            shed: report.sheds(),
             duration_s,
             throughput_qps: report.completed() as f64 / duration_s,
             class_latency,
+            slo,
+            priority: report.priority_stats(),
             peak_concurrency: report.peak_concurrency,
             channel_utilization: report.mean_channel_utilization,
         })
@@ -393,6 +551,7 @@ mod tests {
             workload: WorkloadSpec::bfs_cc(0.0),
             on_full: OnFull::Reject,
             seed: 3,
+            ..Default::default()
         };
         let rep = svc.serve(&cfg).unwrap();
         assert!(rep.rejected > 0, "overload should reject");
@@ -412,10 +571,97 @@ mod tests {
             workload: WorkloadSpec::bfs_cc(0.0),
             on_full: OnFull::Queue,
             seed: 3,
+            ..Default::default()
         };
         let rep = svc.serve(&cfg).unwrap();
         assert_eq!(rep.served, 64);
         assert_eq!(rep.rejected, 0);
+        assert_eq!(rep.shed, 0);
+    }
+
+    /// `--priority-mix`: sampled priorities override class priorities and
+    /// show up in the per-priority report.
+    #[test]
+    fn priority_mix_overrides_class_priorities() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig {
+            queries: 60,
+            workload: WorkloadSpec::bfs_cc(0.0),
+            priority_mix: Some(PriorityMix { interactive: 0.3, standard: 0.4, batch: 0.3 }),
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 60);
+        assert_eq!(rep.priority.len(), 3, "all three classes sampled: {:?}", rep.priority);
+        let submitted: usize = rep.priority.iter().map(|s| s.submitted).sum();
+        assert_eq!(submitted, 60);
+        let s = rep.summary();
+        assert!(s.contains("[interactive]") && s.contains("[batch]"), "{s}");
+    }
+
+    #[test]
+    fn priority_mix_parses_and_validates() {
+        let m = PriorityMix::parse("interactive=0.2, standard=0.6, batch=0.2").unwrap();
+        assert!((m.interactive - 0.2).abs() < 1e-12);
+        assert!((m.batch - 0.2).abs() < 1e-12);
+        let m = PriorityMix::parse("batch=1.0").unwrap();
+        assert_eq!(m.standard, 0.0);
+        assert!(PriorityMix::parse("realtime=1.0").is_err());
+        assert!(PriorityMix::parse("interactive=-1").is_err());
+        assert!(PriorityMix::parse("").is_err());
+        let mut rng = SplitMix64::new(1);
+        let only_batch = PriorityMix::parse("batch=2.0").unwrap();
+        assert_eq!(only_batch.pick(&mut rng), Priority::Batch);
+    }
+
+    /// Per-class SLO: a generous target passes under light load; an
+    /// impossible target fails — and the verdict appears in the summary.
+    #[test]
+    fn slo_verdicts_reported_per_class() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let reg = crate::alg::AnalysisRegistry::builtin();
+        let workload = WorkloadSpec::new(vec![
+            WorkloadClass::from_registry(&reg, "bfs", 0.8)
+                .unwrap()
+                .with_slo_p99_s(1e6), // generous: passes
+            WorkloadClass::from_registry(&reg, "cc", 0.2)
+                .unwrap()
+                .with_slo_p99_s(1e-12), // impossible: fails
+        ]);
+        let cfg = ServiceConfig { queries: 40, workload, ..Default::default() };
+        let rep = svc.serve(&cfg).unwrap();
+        assert!(rep.slo_of("bfs").unwrap().pass);
+        assert!(!rep.slo_of("cc").unwrap().pass);
+        assert!(!rep.slos_pass());
+        let s = rep.summary();
+        assert!(s.contains("PASS") && s.contains("FAIL"), "{s}");
+    }
+
+    /// Class deadlines flow into admission: under heavy overload with a
+    /// tight deadline, queued queries expire and are shed.
+    #[test]
+    fn class_deadline_sheds_expired_queued_queries() {
+        let g = g();
+        let mut cfg_m = MachineConfig::pathfinder_8();
+        cfg_m.ctx_mem_per_node_bytes = 16 << 20; // capacity 8
+        let svc = GraphService::new(&g, Machine::new(cfg_m));
+        let reg = crate::alg::AnalysisRegistry::builtin();
+        let workload = WorkloadSpec::new(vec![WorkloadClass::from_registry(&reg, "bfs", 1.0)
+            .unwrap()
+            .with_deadline_s(1e-6)]); // 1 µs: expires while queued
+        let cfg = ServiceConfig {
+            queries: 64,
+            arrival_rate_per_s: 1.0e6,
+            workload,
+            on_full: OnFull::Queue,
+            seed: 3,
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert!(rep.shed > 0, "tight deadlines must shed queued work");
+        assert_eq!(rep.served + rep.shed + rep.rejected, 64);
     }
 
     #[test]

@@ -9,9 +9,13 @@
 //!                       analysis (bfs, cc, sssp, khop) vs its host oracle
 //! pathfinder run        [--scale N] --machine pathfinder-8 [--bfs K]
 //!                       [--cc C] [--sssp S] [--khop H] [--khop-k HOPS]
-//!                       [--policy sequential|concurrent|queue|reject]
+//!                       [--policy sequential|concurrent|queue|reject|shed]
+//!                       [--max-waiting W]
 //! pathfinder serve      [--scale N] --machine NAME [--queries K] [--rate Q/S]
-//!                       [--mix bfs=0.8,cc=0.1,sssp=0.1] [--on-full queue|reject]
+//!                       [--mix bfs=0.8,cc=0.1,sssp=0.1]
+//!                       [--on-full queue|reject|shed] [--max-waiting W]
+//!                       [--priority-mix interactive=0.2,standard=0.6,batch=0.2]
+//!                       [--slo khop=0.05,bfs=0.2]   (per-class p99 targets, s)
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -31,7 +35,8 @@ use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
-    planner, Coordinator, GraphService, Policy, QueryRequest, ServiceConfig, WorkloadSpec,
+    planner, Coordinator, GraphService, Policy, PriorityMix, QueryRequest, ServiceConfig,
+    WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -233,6 +238,9 @@ fn cmd_run(args: &Args) -> Result<()> {
         "concurrent" => Policy::Concurrent,
         "queue" => Policy::ConcurrentAdmitted { on_full: OnFull::Queue },
         "reject" => Policy::ConcurrentAdmitted { on_full: OnFull::Reject },
+        "shed" => Policy::ConcurrentAdmitted {
+            on_full: OnFull::Shed { max_waiting: args.opt_parse_or("max-waiting", 64)? },
+        },
         other => bail!("unknown policy {other:?}"),
     };
 
@@ -244,13 +252,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         queries.len(),
     );
     println!("  makespan            {:.4} s", rep.makespan_s);
-    println!("  completed/rejected  {}/{}", rep.completed(), rep.rejections());
+    println!(
+        "  completed/rejected/shed  {}/{}/{}",
+        rep.completed(),
+        rep.rejections(),
+        rep.sheds()
+    );
     println!("  mean latency        {:.4} s", rep.mean_latency_s());
     println!("  throughput          {:.2} q/s", rep.throughput_qps());
     println!("  peak concurrency    {}", rep.peak_concurrency);
     println!("  channel utilization {:.0}%", rep.mean_channel_utilization * 100.0);
     for (label, q) in rep.per_class_quantiles() {
         println!("  {label:>5} latency (s)   {}", q.latency_line());
+    }
+    for s in rep.priority_stats() {
+        println!("  {}", s.line());
     }
     Ok(())
 }
@@ -265,7 +281,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "--cc-fraction was replaced by the declarative mix spec; \
          use e.g. --mix bfs=0.9,cc=0.1"
     );
-    let workload = WorkloadSpec::parse(&args.opt_or("mix", "bfs=0.9,cc=0.1"), &registry)?;
+    let mut workload = WorkloadSpec::parse(&args.opt_or("mix", "bfs=0.9,cc=0.1"), &registry)?;
+    // Per-class p99 SLO targets: `--slo khop=0.05,bfs=0.2` (seconds).
+    if let Some(slo_spec) = args.opt("slo") {
+        for (label, target) in pathfinder_queries::util::cli::parse_kv_f64_list(slo_spec, "SLO")?
+        {
+            let class = workload
+                .classes
+                .iter_mut()
+                .find(|c| c.label == label)
+                .ok_or_else(|| anyhow::anyhow!("--slo names unknown class {label:?}"))?;
+            class.slo_p99_s = Some(target);
+        }
+    }
     let cfg = ServiceConfig {
         queries: args.opt_parse_or("queries", 256)?,
         arrival_rate_per_s: args.opt_parse_or("rate", 100.0)?,
@@ -273,8 +301,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         on_full: match args.opt_or("on-full", "queue").as_str() {
             "queue" => OnFull::Queue,
             "reject" => OnFull::Reject,
+            "shed" => OnFull::Shed { max_waiting: args.opt_parse_or("max-waiting", 64)? },
             other => bail!("unknown --on-full {other:?}"),
         },
+        priority_mix: args.opt("priority-mix").map(PriorityMix::parse).transpose()?,
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
     let mix_desc: Vec<String> = cfg

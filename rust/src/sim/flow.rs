@@ -27,10 +27,44 @@
 
 use super::counters::Counters;
 use super::demand::PhaseDemand;
+use super::ledger::ContextLedger;
 use super::machine::Machine;
 
+/// Scheduling priority class of a query.
+///
+/// The derived ordering is the admission ordering: a *smaller* variant is
+/// served first (`Interactive < Standard < Batch`), FIFO within a class.
+/// Defined here because the engine's wait queue orders by it; the
+/// coordinator re-exports it as `coordinator::request::Priority`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive, user-facing.
+    Interactive,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Throughput-oriented background work; first to be shed under
+    /// overload.
+    Batch,
+}
+
+impl Priority {
+    /// All classes, best-served first.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Standard, Priority::Batch];
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Priority::Interactive => write!(f, "interactive"),
+            Priority::Standard => write!(f, "standard"),
+            Priority::Batch => write!(f, "batch"),
+        }
+    }
+}
+
 /// One query submitted to the flow engine: an ordered list of phases plus
-/// an arrival time.
+/// an arrival time and the admission metadata the engine schedules by.
 #[derive(Debug, Clone)]
 pub struct QuerySpec {
     /// Caller-chosen identifier (reported back in [`QueryTiming`]).
@@ -41,9 +75,57 @@ pub struct QuerySpec {
     pub phases: Vec<PhaseDemand>,
     /// Simulated arrival time (ns).
     pub arrival_ns: f64,
+    /// Priority class: orders the wait queue and picks shedding victims.
+    pub priority: Priority,
+    /// Optional end-to-end latency budget (ns from arrival). A queued
+    /// query whose deadline expires before it starts is shed rather than
+    /// run uselessly.
+    pub deadline_ns: Option<f64>,
+    /// Thread-context bytes reserved while this query is in flight
+    /// (0 = free). The coordinator fills in each analysis's declared
+    /// footprint; byte-aware admission sums these against
+    /// [`Admission::ctx_capacity_bytes`].
+    pub ctx_bytes: u64,
 }
 
 impl QuerySpec {
+    /// A spec with default admission metadata ([`Priority::Standard`], no
+    /// deadline, zero context footprint).
+    pub fn new(
+        id: usize,
+        label: &'static str,
+        phases: Vec<PhaseDemand>,
+        arrival_ns: f64,
+    ) -> Self {
+        QuerySpec {
+            id,
+            label,
+            phases,
+            arrival_ns,
+            priority: Priority::default(),
+            deadline_ns: None,
+            ctx_bytes: 0,
+        }
+    }
+
+    /// Set the priority class.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set a latency deadline (ns from arrival).
+    pub fn with_deadline_ns(mut self, deadline_ns: f64) -> Self {
+        self.deadline_ns = Some(deadline_ns);
+        self
+    }
+
+    /// Set the thread-context reservation (bytes).
+    pub fn with_ctx_bytes(mut self, ctx_bytes: u64) -> Self {
+        self.ctx_bytes = ctx_bytes;
+        self
+    }
+
     /// Duration of this query if it ran alone on `m` (ns).
     pub fn solo_ns(&self, m: &Machine) -> f64 {
         self.phases.iter().map(|p| p.solo_ns(m)).sum()
@@ -57,46 +139,117 @@ pub struct QueryTiming {
     pub label: &'static str,
     /// When the query arrived (ns).
     pub arrival_ns: f64,
-    /// When its first phase started progressing (== arrival here; admission
-    /// queueing happens in the coordinator, not the engine).
+    /// When its first phase started progressing (ns). **NaN = the query
+    /// never started**: it was rejected at arrival or shed while waiting.
+    /// A queued query's start is later than its arrival; the gap is its
+    /// admission wait.
     pub start_ns: f64,
-    /// When its last phase completed (ns).
+    /// When its last phase completed (ns). NaN if the query never ran.
     pub finish_ns: f64,
-    /// Number of phases executed.
+    /// Phase count of the submitted spec. Recorded uniformly for every
+    /// outcome — a rejected or shed query reports the work it *would*
+    /// have run, not 0.
     pub phases: usize,
 }
 
 impl QueryTiming {
-    /// End-to-end latency of the query (ns).
+    /// End-to-end latency of the query (ns); NaN if it never ran.
     pub fn latency_ns(&self) -> f64 {
         self.finish_ns - self.arrival_ns
     }
+
+    /// Whether the query ran to completion.
+    pub fn completed(&self) -> bool {
+        self.finish_ns.is_finite()
+    }
 }
 
-/// What to do with an arriving query when the concurrency cap is reached.
+/// What to do with an arriving query when the admission limits (in-flight
+/// count or context bytes) are reached.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OnFull {
     /// Reject the query outright (it appears in `FlowReport::rejected`).
     /// This is what the §IV-B "256 concurrent queries exhausted the memory
     /// used for thread contexts" failure becomes under admission control.
     Reject,
-    /// Hold the query in a FIFO and start it when a slot frees.
+    /// Hold the query in the priority-ordered wait queue and start it when
+    /// capacity frees. Queued queries whose deadline expires before they
+    /// start are shed (`FlowReport::shed`).
     Queue,
+    /// Queue, but bound the standing wait queue at `max_waiting`: overflow
+    /// sheds the newest entry of the lowest-priority class (Batch work is
+    /// dropped first; an Interactive query is shed only when nothing of a
+    /// lower class is left to drop).
+    Shed {
+        /// Largest standing wait-queue length before shedding kicks in.
+        max_waiting: usize,
+    },
 }
 
 /// Admission policy applied inside the engine's event loop.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+///
+/// The wait queue is priority-ordered (`Interactive < Standard < Batch`,
+/// FIFO within a class) with an aging rule: a query that has waited at
+/// least [`Admission::age_promote_ns`] competes as `Interactive`
+/// regardless of its class, so Batch work is never starved forever —
+/// its wait before reaching the front of the queue is bounded by
+/// `age_promote_ns` plus the backlog that aged before it.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Admission {
     /// Maximum queries simultaneously in flight (None = unlimited).
     pub max_in_flight: Option<usize>,
-    /// Behavior at the cap.
+    /// Thread-context byte budget across all in-flight queries (None =
+    /// unlimited). Each query holds [`QuerySpec::ctx_bytes`] while in
+    /// flight; a query whose own footprint exceeds the whole budget is
+    /// rejected at arrival (it could never run).
+    pub ctx_capacity_bytes: Option<u64>,
+    /// Behavior when an arrival cannot start immediately.
     pub on_full: OnFull,
+    /// Anti-starvation bound (ns): a query waiting at least this long is
+    /// ordered as `Interactive`. `f64::INFINITY` disables aging (strict
+    /// priority).
+    pub age_promote_ns: f64,
 }
 
 impl Admission {
+    /// Default anti-starvation bound: 100 ms of simulated wait promotes a
+    /// query to the front class.
+    pub const DEFAULT_AGE_PROMOTE_NS: f64 = 100e6;
+
     /// No admission control at all.
     pub fn unlimited() -> Self {
-        Admission { max_in_flight: None, on_full: OnFull::Reject }
+        Admission {
+            max_in_flight: None,
+            ctx_capacity_bytes: None,
+            on_full: OnFull::Reject,
+            age_promote_ns: f64::INFINITY,
+        }
+    }
+
+    /// Count-capped admission (no byte budget), default aging.
+    pub fn capped(max_in_flight: usize, on_full: OnFull) -> Self {
+        Admission {
+            max_in_flight: Some(max_in_flight),
+            ctx_capacity_bytes: None,
+            on_full,
+            age_promote_ns: Admission::DEFAULT_AGE_PROMOTE_NS,
+        }
+    }
+
+    /// Byte-budgeted admission (no count cap), default aging.
+    pub fn byte_budget(ctx_capacity_bytes: u64, on_full: OnFull) -> Self {
+        Admission {
+            max_in_flight: None,
+            ctx_capacity_bytes: Some(ctx_capacity_bytes),
+            on_full,
+            age_promote_ns: Admission::DEFAULT_AGE_PROMOTE_NS,
+        }
+    }
+
+    /// Override the anti-starvation bound.
+    pub fn with_age_promote_ns(mut self, age_promote_ns: f64) -> Self {
+        self.age_promote_ns = age_promote_ns;
+        self
     }
 }
 
@@ -111,19 +264,33 @@ pub struct FlowReport {
     pub counters: Counters,
     /// Largest number of queries simultaneously in flight.
     pub peak_concurrency: usize,
-    /// Ids of queries rejected by admission control (empty without a cap).
+    /// Ids of queries rejected at arrival (admission full under
+    /// [`OnFull::Reject`], or a footprint larger than the whole byte
+    /// budget). Empty without admission control.
     pub rejected: Vec<usize>,
+    /// Ids of queries shed from the wait queue after being admitted to it:
+    /// deadline expired while waiting, or dropped by [`OnFull::Shed`]
+    /// overflow. Empty without admission control.
+    pub shed: Vec<usize>,
+    /// High-water mark of reserved thread-context bytes over the run
+    /// (from the [`ContextLedger`] the engine admits against).
+    pub peak_ctx_bytes: u64,
 }
 
 impl FlowReport {
-    /// Mean per-query latency (s).
+    /// Mean completed-query latency (s). Rejected/shed queries carry NaN
+    /// timings and are excluded (they have no latency, and one NaN would
+    /// otherwise poison the mean).
     pub fn mean_latency_s(&self) -> f64 {
-        if self.timings.is_empty() {
+        let (sum, n) = self
+            .timings
+            .iter()
+            .filter(|t| t.completed())
+            .fold((0.0, 0usize), |(s, n), t| (s + t.latency_ns(), n + 1));
+        if n == 0 {
             return 0.0;
         }
-        self.timings.iter().map(|t| t.latency_ns()).sum::<f64>()
-            / self.timings.len() as f64
-            * 1e-9
+        sum / n as f64 * 1e-9
     }
 
     /// Makespan in seconds.
@@ -131,9 +298,14 @@ impl FlowReport {
         self.makespan_ns * 1e-9
     }
 
-    /// Per-query latencies in seconds (input order).
+    /// Completed-query latencies in seconds (input order); rejected and
+    /// shed queries are filtered out.
     pub fn latencies_s(&self) -> Vec<f64> {
-        self.timings.iter().map(|t| t.latency_ns() * 1e-9).collect()
+        self.timings
+            .iter()
+            .filter(|t| t.completed())
+            .map(|t| t.latency_ns() * 1e-9)
+            .collect()
     }
 }
 
@@ -180,7 +352,11 @@ impl FlowSim {
     }
 
     /// Run with an admission policy: arrivals beyond `max_in_flight`
-    /// concurrent queries are queued or rejected per `on_full`.
+    /// concurrent queries or the context byte budget are queued, shed or
+    /// rejected per `on_full`. The wait queue is priority-ordered with
+    /// aging (see [`Admission`]); the head of the queue blocks lower
+    /// classes even when they would fit — strict ordering, so a fat
+    /// high-priority query is never starved by a stream of thin ones.
     pub fn run_admitted(&self, queries: &[QuerySpec], adm: Admission) -> FlowReport {
         let nodes = self.m.nodes();
         let n_res = nodes * (self.m.cfg.channels_per_node + 3);
@@ -206,20 +382,31 @@ impl FlowSim {
         // Aggregate demand maintained incrementally as phases enter/leave,
         // so the solve never rebuilds it from scratch (§Perf).
         let mut total_demand = vec![0.0f64; n_res];
-        let mut waiting: std::collections::VecDeque<usize> = Default::default();
+        // Wait queue in enqueue (= arrival) order; selection scans for the
+        // best effective class, so FIFO-within-class falls out of position.
+        let mut waiting: Vec<usize> = Vec::new();
         let mut rejected: Vec<usize> = Vec::new();
+        let mut shed: Vec<usize> = Vec::new();
         let mut in_flight = 0usize;
+        // The byte ledger this run admits against: every started query
+        // reserves its ctx_bytes until completion.
+        let mut ledger = match adm.ctx_capacity_bytes {
+            Some(cap_bytes) => ContextLedger::with_capacity_bytes(cap_bytes, 1),
+            None => ContextLedger::unlimited(),
+        };
         let cap = adm.max_in_flight.unwrap_or(usize::MAX);
         let mut t = 0.0f64;
         let mut peak = 0usize;
         let mut rates_dirty = true;
 
-        // Start query qi at time t (assumes a free slot).
+        // Start query qi at time t (caller checked `in_flight < cap` and
+        // `ledger.would_fit`).
         macro_rules! start_query {
             ($qi:expr) => {{
                 let qi = $qi;
                 let q = &queries[qi];
                 in_flight += 1;
+                ledger.admit(qi, q.ctx_bytes).expect("caller checked would_fit");
                 timings[qi] = Some(QueryTiming {
                     id: q.id,
                     label: q.label,
@@ -238,41 +425,117 @@ impl FlowSim {
                     // instantly.
                     timings[qi].as_mut().unwrap().finish_ns = t;
                     in_flight -= 1;
+                    ledger.release(qi);
                 }
                 rates_dirty = true;
             }};
         }
 
+        // Record a query that will never run (NaN start/finish; the spec's
+        // phase count is reported as-declared).
+        macro_rules! drop_query {
+            ($qi:expr, $sink:ident) => {{
+                let qi = $qi;
+                let q = &queries[qi];
+                timings[qi] = Some(QueryTiming {
+                    id: q.id,
+                    label: q.label,
+                    arrival_ns: q.arrival_ns,
+                    start_ns: f64::NAN,
+                    finish_ns: f64::NAN,
+                    phases: q.phases.len(),
+                });
+                $sink.push(q.id);
+            }};
+        }
+
         loop {
-            // Admit every query that has arrived by `t`.
+            // Take every arrival due by `t`. Under a queueing policy the
+            // arrival always goes through the wait queue so that the
+            // priority order — not submission order — decides who starts
+            // when several arrivals land on the same event.
             while next_arrival < order.len() && queries[order[next_arrival]].arrival_ns <= t {
                 let qi = order[next_arrival];
                 next_arrival += 1;
-                if in_flight < cap {
-                    start_query!(qi);
-                } else {
-                    match adm.on_full {
-                        OnFull::Queue => waiting.push_back(qi),
-                        OnFull::Reject => {
-                            let q = &queries[qi];
-                            timings[qi] = Some(QueryTiming {
-                                id: q.id,
-                                label: q.label,
-                                arrival_ns: q.arrival_ns,
-                                start_ns: f64::NAN,
-                                finish_ns: f64::NAN,
-                                phases: 0,
-                            });
-                            rejected.push(q.id);
+                let q = &queries[qi];
+                if ledger.check_admissible(q.ctx_bytes).is_err() {
+                    // Larger than the whole budget: could never run. The
+                    // coordinator pre-checks and raises a typed
+                    // ContextExhausted; at the engine level it degrades to
+                    // a recorded rejection instead of an eternal wait.
+                    drop_query!(qi, rejected);
+                    continue;
+                }
+                match adm.on_full {
+                    OnFull::Reject => {
+                        if in_flight < cap && ledger.would_fit(q.ctx_bytes) {
+                            start_query!(qi);
+                        } else {
+                            drop_query!(qi, rejected);
                         }
                     }
+                    OnFull::Queue | OnFull::Shed { .. } => waiting.push(qi),
                 }
             }
-            // Drain the wait queue into freed slots.
-            while in_flight < cap {
-                match waiting.pop_front() {
-                    Some(qi) => start_query!(qi),
-                    None => break,
+
+            // Shed queued queries whose deadline already expired: running
+            // them is wasted work.
+            let mut wi = 0;
+            while wi < waiting.len() {
+                let q = &queries[waiting[wi]];
+                if q.deadline_ns.is_some_and(|d| q.arrival_ns + d <= t) {
+                    let qi = waiting.remove(wi);
+                    drop_query!(qi, shed);
+                } else {
+                    wi += 1;
+                }
+            }
+
+            // Drain the wait queue in priority order: best effective class
+            // first (aging promotes long waiters to the front class), FIFO
+            // within a class. Strict head-of-queue blocking: if the best
+            // waiter does not fit, nothing behind it starts.
+            loop {
+                let best = waiting
+                    .iter()
+                    .enumerate()
+                    .min_by_key(|&(_, &qi)| {
+                        let q = &queries[qi];
+                        if t - q.arrival_ns >= adm.age_promote_ns {
+                            Priority::Interactive
+                        } else {
+                            q.priority
+                        }
+                    })
+                    .map(|(i, _)| i);
+                match best {
+                    Some(i)
+                        if in_flight < cap
+                            && ledger.would_fit(queries[waiting[i]].ctx_bytes) =>
+                    {
+                        let qi = waiting.remove(i);
+                        start_query!(qi);
+                    }
+                    _ => break,
+                }
+            }
+
+            // Overflow shedding: bound the standing queue, dropping the
+            // newest entry of the lowest class first (Batch before
+            // Standard before Interactive — base class, not the aged one:
+            // a promoted Batch waiter is still the first shedding victim).
+            if let OnFull::Shed { max_waiting } = adm.on_full {
+                while waiting.len() > max_waiting {
+                    // max_by_key returns the *last* maximal element: the
+                    // newest entry of the worst class.
+                    let victim = waiting
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|&(_, &qi)| queries[qi].priority)
+                        .map(|(i, _)| i)
+                        .expect("non-empty: len > max_waiting");
+                    let qi = waiting.remove(victim);
+                    drop_query!(qi, shed);
                 }
             }
             peak = peak.max(active.len());
@@ -338,6 +601,7 @@ impl FlowSim {
                         None => {
                             timings[ap.qi].as_mut().unwrap().finish_ns = t;
                             in_flight -= 1;
+                            ledger.release(ap.qi);
                         }
                     }
                     rates_dirty = true;
@@ -357,6 +621,8 @@ impl FlowSim {
             counters,
             peak_concurrency: peak,
             rejected,
+            shed,
+            peak_ctx_bytes: ledger.peak_bytes(),
         }
     }
 
@@ -391,6 +657,10 @@ impl FlowSim {
             counters,
             peak_concurrency: usize::from(!queries.is_empty()),
             rejected: Vec::new(),
+            shed: Vec::new(),
+            // One query at a time: the peak reservation is the fattest
+            // single query.
+            peak_ctx_bytes: queries.iter().map(|q| q.ctx_bytes).max().unwrap_or(0),
         }
     }
 
@@ -545,12 +815,7 @@ mod tests {
     }
 
     fn query(m: &Machine, id: usize, frac: f64, total_ns: f64) -> QuerySpec {
-        QuerySpec {
-            id,
-            label: "test",
-            phases: vec![uniform_phase(m, frac, total_ns)],
-            arrival_ns: 0.0,
-        }
+        QuerySpec::new(id, "test", vec![uniform_phase(m, frac, total_ns)], 0.0)
     }
 
     #[test]
@@ -672,7 +937,7 @@ mod tests {
     fn empty_query_finishes_at_arrival() {
         let m = m8();
         let sim = FlowSim::new(m.clone());
-        let q = QuerySpec { id: 7, label: "nop", phases: vec![], arrival_ns: 3.0 };
+        let q = QuerySpec::new(7, "nop", vec![], 3.0);
         let rep = sim.run(&[q]);
         assert_eq!(rep.timings[0].finish_ns, 3.0);
         assert_eq!(rep.timings[0].latency_ns(), 0.0);
@@ -683,9 +948,9 @@ mod tests {
         let m = m8();
         let sim = FlowSim::new(m.clone());
         let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.1, 1e6)).collect();
-        let adm = Admission { max_in_flight: Some(2), on_full: OnFull::Reject };
-        let rep = sim.run_admitted(&qs, adm);
+        let rep = sim.run_admitted(&qs, Admission::capped(2, OnFull::Reject));
         assert_eq!(rep.rejected, vec![2, 3]);
+        assert!(rep.shed.is_empty());
         assert!(rep.timings[2].finish_ns.is_nan());
         assert!(rep.timings[0].finish_ns.is_finite());
         assert!(rep.peak_concurrency <= 2);
@@ -697,8 +962,7 @@ mod tests {
         let sim = FlowSim::new(m.clone());
         let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.1, 1e6)).collect();
         let solo = qs[0].solo_ns(&m);
-        let adm = Admission { max_in_flight: Some(2), on_full: OnFull::Queue };
-        let rep = sim.run_admitted(&qs, adm);
+        let rep = sim.run_admitted(&qs, Admission::capped(2, OnFull::Queue));
         assert!(rep.rejected.is_empty());
         // Two waves of two fully-overlapping queries.
         assert!((rep.makespan_ns - 2.0 * solo).abs() / solo < 1e-6);
@@ -712,10 +976,190 @@ mod tests {
         let m = m8();
         let sim = FlowSim::new(m.clone());
         let qs: Vec<_> = (0..3).map(|i| query(&m, i, 0.5, 1e6)).collect();
-        let adm = Admission { max_in_flight: Some(1), on_full: OnFull::Queue };
-        let capped = sim.run_admitted(&qs, adm).makespan_ns;
+        let capped = sim.run_admitted(&qs, Admission::capped(1, OnFull::Queue)).makespan_ns;
         let seq = sim.run_sequential(&qs).makespan_ns;
         assert!((capped - seq).abs() / seq < 1e-9);
+    }
+
+    /// Regression (NaN-stats bugfix): rejected queries carry NaN timings;
+    /// the report's mean and latency list must filter them, not return
+    /// NaN.
+    #[test]
+    fn rejected_timings_do_not_poison_latency_stats() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.1, 1e6)).collect();
+        let rep = sim.run_admitted(&qs, Admission::capped(2, OnFull::Reject));
+        assert_eq!(rep.rejected.len(), 2);
+        assert!(rep.mean_latency_s().is_finite());
+        assert!(rep.mean_latency_s() > 0.0);
+        let lats = rep.latencies_s();
+        assert_eq!(lats.len(), 2, "only completed queries have latencies");
+        assert!(lats.iter().all(|l| l.is_finite()));
+    }
+
+    /// Regression: a rejected query reports the phase count it *would*
+    /// have run (uniform with queued-then-run queries), not 0.
+    #[test]
+    fn rejected_timings_carry_spec_phase_count() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut qs: Vec<_> = (0..3).map(|i| query(&m, i, 0.1, 1e6)).collect();
+        qs[2].phases = vec![uniform_phase(&m, 0.1, 1e6), uniform_phase(&m, 0.1, 1e6)];
+        let rep = sim.run_admitted(&qs, Admission::capped(2, OnFull::Reject));
+        assert_eq!(rep.rejected, vec![2]);
+        assert_eq!(rep.timings[2].phases, 2);
+        assert!(rep.timings[2].start_ns.is_nan(), "never started");
+        assert!(!rep.timings[2].completed());
+    }
+
+    /// The wait queue is priority-ordered: with one slot busy, a later-
+    /// arriving Interactive query starts before an earlier-queued Batch
+    /// one, and Standard before Batch.
+    #[test]
+    fn wait_queue_orders_by_priority_class() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let running = query(&m, 0, 0.5, 1e6);
+        let batch = query(&m, 1, 0.5, 1e5).with_priority(Priority::Batch);
+        let mut standard = query(&m, 2, 0.5, 1e5);
+        standard.arrival_ns = 1e3;
+        let mut interactive = query(&m, 3, 0.5, 1e5).with_priority(Priority::Interactive);
+        interactive.arrival_ns = 2e3;
+        let qs = vec![running, batch, standard, interactive];
+        let adm = Admission::capped(1, OnFull::Queue).with_age_promote_ns(f64::INFINITY);
+        let rep = sim.run_admitted(&qs, adm);
+        // All queued behind query 0; start order: interactive, standard,
+        // batch — the reverse of arrival order.
+        assert!(rep.timings[3].start_ns < rep.timings[2].start_ns);
+        assert!(rep.timings[2].start_ns < rep.timings[1].start_ns);
+        assert!(rep.rejected.is_empty() && rep.shed.is_empty());
+    }
+
+    /// Aging promotes a long-waiting Batch query: with a small
+    /// `age_promote_ns`, Batch work overtakes Interactive arrivals that
+    /// have not yet aged.
+    #[test]
+    fn aging_prevents_batch_starvation() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut qs = vec![
+            query(&m, 0, 0.5, 1e6),
+            query(&m, 1, 0.5, 1e5).with_priority(Priority::Batch),
+        ];
+        // A stream of Interactive arrivals that would starve Batch under
+        // strict priority.
+        for i in 0..6 {
+            let mut q = query(&m, 2 + i, 0.5, 1e5).with_priority(Priority::Interactive);
+            q.arrival_ns = 1e3 * (i as f64 + 1.0);
+            qs.push(q);
+        }
+        let strict = sim.run_admitted(
+            &qs,
+            Admission::capped(1, OnFull::Queue).with_age_promote_ns(f64::INFINITY),
+        );
+        // Strict: batch goes last.
+        assert!(qs[2..]
+            .iter()
+            .all(|q| strict.timings[q.id].start_ns < strict.timings[1].start_ns));
+        // Aged: after waiting 2e5 ns the batch query competes as
+        // Interactive with the earliest enqueue order, so it beats the
+        // still-waiting interactive stream.
+        let aged = sim.run_admitted(
+            &qs,
+            Admission::capped(1, OnFull::Queue).with_age_promote_ns(2e5),
+        );
+        let later_interactive_starts =
+            qs[2..].iter().filter(|q| aged.timings[q.id].start_ns > aged.timings[1].start_ns);
+        assert!(
+            later_interactive_starts.count() > 0,
+            "aged batch must overtake part of the interactive stream"
+        );
+        // And the wait of the batch query is bounded near the promotion
+        // age plus one in-flight query.
+        let batch_wait = aged.timings[1].start_ns - qs[1].arrival_ns;
+        assert!(batch_wait < 2e5 + 2.0 * 1e6, "batch waited {batch_wait} ns");
+    }
+
+    /// Byte-aware admission: in-flight context bytes never exceed the
+    /// budget even when the query-count cap would allow more.
+    #[test]
+    fn byte_budget_bounds_in_flight_reservations() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs: Vec<_> = (0..6)
+            .map(|i| query(&m, i, 0.1, 1e6).with_ctx_bytes(40))
+            .collect();
+        let rep = sim.run_admitted(&qs, Admission::byte_budget(100, OnFull::Queue));
+        // 100 / 40 = at most 2 concurrently.
+        assert_eq!(rep.peak_concurrency, 2);
+        assert_eq!(rep.peak_ctx_bytes, 80, "ledger high-water mark surfaced");
+        assert_eq!(rep.timings.iter().filter(|t| t.completed()).count(), 6);
+    }
+
+    /// A query whose own footprint exceeds the whole byte budget is
+    /// rejected at arrival — even under Queue, where waiting would be
+    /// eternal.
+    #[test]
+    fn oversized_query_rejected_not_queued_forever() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let qs = vec![
+            query(&m, 0, 0.1, 1e6).with_ctx_bytes(50),
+            query(&m, 1, 0.1, 1e6).with_ctx_bytes(1000),
+        ];
+        let rep = sim.run_admitted(&qs, Admission::byte_budget(100, OnFull::Queue));
+        assert_eq!(rep.rejected, vec![1]);
+        assert!(rep.timings[0].completed());
+    }
+
+    /// A queued query whose deadline expires while waiting is shed, not
+    /// run after the fact.
+    #[test]
+    fn expired_deadline_sheds_waiting_query() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let long = query(&m, 0, 0.5, 1e6);
+        // Would have to wait ~1e6 ns; its deadline is far shorter.
+        let doomed = query(&m, 1, 0.5, 1e5).with_deadline_ns(1e4);
+        let patient = query(&m, 2, 0.5, 1e5).with_deadline_ns(1e9);
+        let qs = vec![long, doomed, patient];
+        let rep = sim.run_admitted(&qs, Admission::capped(1, OnFull::Queue));
+        assert_eq!(rep.shed, vec![1]);
+        assert!(rep.rejected.is_empty());
+        assert!(rep.timings[1].start_ns.is_nan());
+        assert!(rep.timings[0].completed() && rep.timings[2].completed());
+    }
+
+    /// Shed-on-overflow drops Batch work first: with a bounded wait
+    /// queue, every shed victim is Batch while Interactive work survives.
+    #[test]
+    fn shed_policy_drops_batch_before_interactive() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut qs = vec![query(&m, 0, 0.5, 1e6)];
+        for i in 0..4 {
+            let mut q = query(&m, 1 + i, 0.5, 1e5).with_priority(Priority::Batch);
+            q.arrival_ns = 1e3 * (i as f64 + 1.0);
+            qs.push(q);
+        }
+        for i in 0..3 {
+            let mut q = query(&m, 5 + i, 0.5, 1e5).with_priority(Priority::Interactive);
+            q.arrival_ns = 1e4 + 1e3 * (i as f64 + 1.0);
+            qs.push(q);
+        }
+        let rep = sim.run_admitted(
+            &qs,
+            Admission::capped(1, OnFull::Shed { max_waiting: 3 }),
+        );
+        assert!(!rep.shed.is_empty(), "overflow must shed");
+        assert!(
+            rep.shed.iter().all(|&id| qs[id].priority == Priority::Batch),
+            "only batch work may be shed while batch remains: {:?}",
+            rep.shed
+        );
+        // Interactive queries all completed.
+        assert!(qs[5..].iter().all(|q| rep.timings[q.id].completed()));
     }
 
     #[test]
@@ -730,7 +1174,7 @@ mod tests {
             instr_only.instructions[n] = m.issue_rate(n) * 0.1 * 1e-3; // 0.1 util for 1e6 ns
         }
         instr_only.parallelism = 1e12;
-        let iq = QuerySpec { id: 99, label: "instr", phases: vec![instr_only], arrival_ns: 0.0 };
+        let iq = QuerySpec::new(99, "instr", vec![instr_only], 0.0);
         let solo_iq = iq.solo_ns(&m);
         let mut all = hungry;
         all.push(iq);

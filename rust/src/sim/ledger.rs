@@ -1,0 +1,241 @@
+//! Thread-context memory byte ledger — the admission accounting the flow
+//! engine runs against (paper §IV-B).
+//!
+//! Each in-flight query reserves [`crate::sim::flow::QuerySpec::ctx_bytes`]
+//! of the machine's thread-context memory; [`crate::sim::flow::FlowSim::run_admitted`]
+//! admits against a [`ContextLedger`] and releases on completion, so the
+//! ledger's `in_use`/`peak`/`refusals` diagnostics reflect the actual run.
+//! The coordinator builds the ledger from the machine config and re-exports
+//! these types as `coordinator::admission::{ContextLedger, ContextExhausted}`.
+
+use crate::config::machine::MachineConfig;
+use crate::sim::flow::{Admission, OnFull};
+use std::collections::HashMap;
+
+/// Why an admission was refused: the query's reservation does not fit in
+/// the machine's thread-context memory.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ContextExhausted {
+    /// Bytes the refused query asked to reserve.
+    pub requested_bytes: u64,
+    /// Bytes already reserved by in-flight queries at refusal time.
+    pub in_use_bytes: u64,
+    /// Total thread-context memory of the machine (bytes).
+    pub capacity_bytes: u64,
+}
+
+impl ContextExhausted {
+    /// True when the query could never run on this machine, even alone.
+    pub fn oversized(&self) -> bool {
+        self.requested_bytes > self.capacity_bytes
+    }
+}
+
+impl std::fmt::Display for ContextExhausted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "thread-context memory exhausted: query reserves {} MiB, \
+             {} MiB of {} MiB already in use",
+            self.requested_bytes >> 20,
+            self.in_use_bytes >> 20,
+            self.capacity_bytes >> 20,
+        )
+    }
+}
+
+impl std::error::Error for ContextExhausted {}
+
+/// Per-machine context-memory byte ledger: tracks each in-flight query's
+/// reserved bytes against the machine's total thread-context memory.
+#[derive(Debug, Clone)]
+pub struct ContextLedger {
+    capacity_bytes: u64,
+    /// Machine default reservation for analyses with no declared footprint.
+    default_bytes_per_query: u64,
+    /// Reserved bytes per in-flight query id.
+    reserved: HashMap<usize, u64>,
+    in_use_bytes: u64,
+    /// High-water mark (diagnostics).
+    peak_bytes: u64,
+    /// Total refused admissions.
+    refusals: usize,
+}
+
+impl ContextLedger {
+    /// Build from a machine config: capacity is the whole machine's
+    /// thread-context memory.
+    pub fn new(cfg: &MachineConfig) -> Self {
+        ContextLedger::with_capacity_bytes(
+            cfg.nodes as u64 * cfg.ctx_mem_per_node_bytes,
+            cfg.ctx_bytes_per_query,
+        )
+    }
+
+    /// Build with explicit byte capacity and default per-query footprint
+    /// (tests, what-if runs).
+    pub fn with_capacity_bytes(capacity_bytes: u64, default_bytes_per_query: u64) -> Self {
+        ContextLedger {
+            capacity_bytes,
+            default_bytes_per_query: default_bytes_per_query.max(1),
+            reserved: HashMap::new(),
+            in_use_bytes: 0,
+            peak_bytes: 0,
+            refusals: 0,
+        }
+    }
+
+    /// A ledger with no byte limit (the engine's no-admission-control arm).
+    pub fn unlimited() -> Self {
+        ContextLedger::with_capacity_bytes(u64::MAX, 1)
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity_bytes
+    }
+
+    /// How many default-footprint queries fit (the paper's query-count
+    /// capacity).
+    pub fn capacity_queries(&self) -> usize {
+        (self.capacity_bytes / self.default_bytes_per_query) as usize
+    }
+
+    pub fn in_use_bytes(&self) -> u64 {
+        self.in_use_bytes
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.reserved.len()
+    }
+
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+
+    pub fn refusals(&self) -> usize {
+        self.refusals
+    }
+
+    /// Whether a reservation of `bytes` would fit right now (no side
+    /// effects — the engine's wait-queue drain peeks with this).
+    pub fn would_fit(&self, bytes: u64) -> bool {
+        self.in_use_bytes.saturating_add(bytes) <= self.capacity_bytes
+    }
+
+    /// Reserve `bytes` of context memory for query `id`.
+    pub fn admit(&mut self, id: usize, bytes: u64) -> Result<(), ContextExhausted> {
+        assert!(!self.reserved.contains_key(&id), "double admit of query {id}");
+        if !self.would_fit(bytes) {
+            self.refusals += 1;
+            return Err(ContextExhausted {
+                requested_bytes: bytes,
+                in_use_bytes: self.in_use_bytes,
+                capacity_bytes: self.capacity_bytes,
+            });
+        }
+        self.reserved.insert(id, bytes);
+        // Saturating: an unlimited ledger admits arbitrarily declared
+        // footprints without risking overflow panics.
+        self.in_use_bytes = self.in_use_bytes.saturating_add(bytes);
+        self.peak_bytes = self.peak_bytes.max(self.in_use_bytes);
+        Ok(())
+    }
+
+    /// Reserve the machine-default footprint for query `id`.
+    pub fn admit_default(&mut self, id: usize) -> Result<(), ContextExhausted> {
+        self.admit(id, self.default_bytes_per_query)
+    }
+
+    /// Release query `id`'s reservation.
+    pub fn release(&mut self, id: usize) {
+        let bytes = self.reserved.remove(&id).expect("release without admit");
+        self.in_use_bytes = self.in_use_bytes.saturating_sub(bytes);
+    }
+
+    /// Whether `k` default-footprint queries can run fully concurrently.
+    pub fn fits(&self, k: usize) -> bool {
+        k as u64 * self.default_bytes_per_query <= self.capacity_bytes
+    }
+
+    /// Check a single declared footprint against total capacity: a query
+    /// larger than the whole machine could never run, even alone.
+    pub fn check_admissible(&self, bytes: u64) -> Result<(), ContextExhausted> {
+        if bytes > self.capacity_bytes {
+            return Err(ContextExhausted {
+                requested_bytes: bytes,
+                in_use_bytes: 0,
+                capacity_bytes: self.capacity_bytes,
+            });
+        }
+        Ok(())
+    }
+
+    /// The flow-engine admission policy this ledger implies: a byte budget
+    /// (exact, per-query reserved bytes summed by the engine) with the
+    /// default anti-starvation aging.
+    pub fn policy(&self, on_full: OnFull) -> Admission {
+        Admission::byte_budget(self.capacity_bytes, on_full)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_release_cycle_is_byte_exact() {
+        let mut l = ContextLedger::with_capacity_bytes(100, 40);
+        l.admit(0, 40).unwrap();
+        l.admit(1, 40).unwrap();
+        let err = l.admit(2, 40).unwrap_err();
+        assert_eq!(err.in_use_bytes, 80);
+        assert_eq!(err.requested_bytes, 40);
+        assert_eq!(err.capacity_bytes, 100);
+        assert!(!err.oversized());
+        assert_eq!(l.refusals(), 1);
+        // A thinner query still fits exactly.
+        assert!(l.would_fit(20));
+        l.admit(3, 20).unwrap();
+        assert!(!l.would_fit(1));
+        assert_eq!(l.in_use_bytes(), 100);
+        assert_eq!(l.in_flight(), 3);
+        l.release(1);
+        assert_eq!(l.in_use_bytes(), 60);
+        l.admit_default(4).unwrap();
+        assert_eq!(l.peak_bytes(), 100);
+    }
+
+    #[test]
+    fn oversized_query_is_inadmissible_even_when_idle() {
+        let l = ContextLedger::with_capacity_bytes(100, 10);
+        let err = l.check_admissible(101).unwrap_err();
+        assert!(err.oversized());
+        assert_eq!(err.in_use_bytes, 0);
+        assert!(l.check_admissible(100).is_ok());
+        assert!(err.to_string().contains("thread-context memory"));
+    }
+
+    #[test]
+    #[should_panic(expected = "release without admit")]
+    fn release_underflow_panics() {
+        ContextLedger::with_capacity_bytes(10, 1).release(0);
+    }
+
+    #[test]
+    fn unlimited_always_fits() {
+        let mut l = ContextLedger::unlimited();
+        assert!(l.would_fit(u64::MAX));
+        l.admit(0, 1 << 40).unwrap();
+        l.release(0);
+    }
+
+    #[test]
+    fn policy_carries_byte_budget() {
+        let l = ContextLedger::with_capacity_bytes(7 << 20, 1 << 20);
+        let p = l.policy(OnFull::Queue);
+        assert_eq!(p.ctx_capacity_bytes, Some(7 << 20));
+        assert_eq!(p.max_in_flight, None);
+        assert_eq!(p.on_full, OnFull::Queue);
+        assert!(p.age_promote_ns.is_finite(), "aging enabled by default");
+    }
+}

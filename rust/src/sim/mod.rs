@@ -32,10 +32,12 @@ pub mod counters;
 pub mod demand;
 pub mod event;
 pub mod flow;
+pub mod ledger;
 pub mod machine;
 pub mod views;
 
 pub use counters::Counters;
 pub use demand::PhaseDemand;
-pub use flow::{FlowSim, QueryTiming};
+pub use flow::{FlowSim, Priority, QueryTiming};
+pub use ledger::{ContextExhausted, ContextLedger};
 pub use machine::Machine;

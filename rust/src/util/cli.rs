@@ -106,6 +106,25 @@ impl Args {
     }
 }
 
+/// Parse a `key=value,key=value,...` list with f64 values — the shape
+/// shared by `--mix bfs=0.8,cc=0.2`, `--priority-mix interactive=0.3,...`
+/// and `--slo khop=0.05`. Keys are trimmed; empty pieces are skipped;
+/// `what` names the list in error messages.
+pub fn parse_kv_f64_list<'a>(spec: &'a str, what: &str) -> Result<Vec<(&'a str, f64)>> {
+    let mut out = Vec::new();
+    for piece in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let Some((key, value)) = piece.split_once('=') else {
+            bail!("bad {what} entry {piece:?}: want key=value");
+        };
+        let value: f64 = value
+            .trim()
+            .parse()
+            .map_err(|e| anyhow::anyhow!("bad {what} value in {piece:?}: {e}"))?;
+        out.push((key.trim(), value));
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,5 +169,15 @@ mod tests {
         let a = parse("x --dry-run --scale 10");
         assert!(a.has_flag("dry-run"));
         assert_eq!(a.opt("scale"), Some("10"));
+    }
+
+    #[test]
+    fn kv_f64_lists() {
+        let kv = parse_kv_f64_list("bfs=0.6, cc = 0.4", "mix").unwrap();
+        assert_eq!(kv, vec![("bfs", 0.6), ("cc", 0.4)]);
+        assert!(parse_kv_f64_list("", "mix").unwrap().is_empty());
+        assert!(parse_kv_f64_list("bfs", "mix").is_err());
+        let err = parse_kv_f64_list("bfs=x", "mix").unwrap_err().to_string();
+        assert!(err.contains("mix"), "{err}");
     }
 }

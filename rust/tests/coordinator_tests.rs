@@ -143,6 +143,7 @@ fn service_latency_grows_with_load() {
                 workload: WorkloadSpec::bfs_cc(0.0),
                 on_full: OnFull::Queue,
                 seed: 4,
+                ..Default::default()
             })
             .unwrap();
         medians.push(rep.class("bfs").unwrap().q50);
@@ -184,6 +185,7 @@ fn four_class_mix_end_to_end_with_tail_quantiles() {
             workload: WorkloadSpec::four_class(),
             on_full: OnFull::Queue,
             seed: 0x4C1A,
+            ..Default::default()
         })
         .unwrap();
     assert_eq!(rep.served, 96);
@@ -198,4 +200,64 @@ fn four_class_mix_end_to_end_with_tail_quantiles() {
     assert!(rep.class("cc").unwrap().q50 > rep.class("khop").unwrap().q50);
     let s = rep.summary();
     assert!(s.contains("p95") && s.contains("p99"), "{s}");
+}
+
+/// Acceptance (priority-aware admission): under an over-capacity
+/// mixed-priority workload, admitted runs serve Interactive work first —
+/// its p99 latency is strictly better than Batch's — and overload
+/// shedding drops Batch work first: zero Interactive sheds while Batch
+/// work remained to shed.
+#[test]
+fn mixed_priority_overload_orders_and_sheds_by_class() {
+    use pathfinder_queries::coordinator::Priority;
+
+    let g = rmat(11);
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.ctx_mem_per_node_bytes = 16 << 20; // capacity: 8 concurrent queries
+    let coord = Coordinator::new(&g, Machine::new(cfg));
+
+    // 48 identical-cost queries, priorities round-robin, arriving in a
+    // burst far above capacity.
+    let mut queries = planner::bfs_queries(&g, 48, 0xB5);
+    planner::assign_round_robin_priorities(&mut queries);
+    let arrivals: Vec<f64> = (0..48).map(|i| i as f64 * 1e3).collect();
+    planner::assign_arrivals(&mut queries, &arrivals);
+
+    // Queueing: everyone completes, but Interactive waits least, so its
+    // p99 is strictly better than Batch's.
+    let queued = coord
+        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
+        .unwrap();
+    assert_eq!(queued.completed(), 48);
+    let p99 = |rep: &pathfinder_queries::coordinator::RunReport, p: Priority| {
+        rep.priority_class(p).unwrap().latency.as_ref().unwrap().q99
+    };
+    assert!(
+        p99(&queued, Priority::Interactive) < p99(&queued, Priority::Batch),
+        "interactive p99 {} must beat batch p99 {}",
+        p99(&queued, Priority::Interactive),
+        p99(&queued, Priority::Batch)
+    );
+    assert!(p99(&queued, Priority::Interactive) <= p99(&queued, Priority::Standard));
+    // Interactive also waited the least on average.
+    let wait = |p: Priority| queued.priority_class(p).unwrap().mean_wait_s;
+    assert!(wait(Priority::Interactive) < wait(Priority::Batch));
+
+    // Shedding: with a bounded wait queue, Batch is dropped first and no
+    // Interactive query is shed while Batch work remains.
+    let shed = coord
+        .run(
+            &queries,
+            Policy::ConcurrentAdmitted { on_full: OnFull::Shed { max_waiting: 16 } },
+        )
+        .unwrap();
+    let stats = |p: Priority| shed.priority_class(p).unwrap();
+    assert!(shed.sheds() > 0, "overload must shed");
+    assert_eq!(stats(Priority::Interactive).shed, 0, "no interactive sheds");
+    assert!(stats(Priority::Batch).shed > 0, "batch is dropped first");
+    assert!(
+        stats(Priority::Batch).shed >= stats(Priority::Standard).shed,
+        "batch shed at least as much as standard"
+    );
+    assert_eq!(shed.completed() + shed.sheds() + shed.rejections(), 48);
 }

@@ -9,7 +9,7 @@ use pathfinder_queries::coordinator::{planner, Coordinator, Policy, QueryRequest
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
 use pathfinder_queries::sim::demand::{DemandBuilder, PhaseDemand};
-use pathfinder_queries::sim::flow::{Admission, FlowSim, OnFull, QuerySpec};
+use pathfinder_queries::sim::flow::{Admission, FlowSim, OnFull, Priority, QuerySpec};
 use pathfinder_queries::sim::machine::Machine;
 use pathfinder_queries::util::rng::SplitMix64;
 use pathfinder_queries::util::stats::Quantiles;
@@ -163,7 +163,7 @@ fn prop_flow_bounds_random_workloads() {
                         p
                     })
                     .collect();
-                QuerySpec { id, label: "rand", phases, arrival_ns: 0.0 }
+                QuerySpec::new(id, "rand", phases, 0.0)
             })
             .collect();
         let conc = sim.run(&specs);
@@ -204,19 +204,11 @@ fn prop_admission_partitions_queries() {
                 p.per_channel_ops[0] = 1e4;
                 p.max_channel_ops[0] = 1e4;
                 p.parallelism = 100.0;
-                QuerySpec {
-                    id,
-                    label: "rand",
-                    phases: vec![p],
-                    arrival_ns: rng.next_f64() * 1e6,
-                }
+                QuerySpec::new(id, "rand", vec![p], rng.next_f64() * 1e6)
             })
             .collect();
         for on_full in [OnFull::Queue, OnFull::Reject] {
-            let rep = sim.run_admitted(
-                &specs,
-                Admission { max_in_flight: Some(cap), on_full },
-            );
+            let rep = sim.run_admitted(&specs, Admission::capped(cap, on_full));
             assert!(rep.peak_concurrency <= cap, "seed {seed}");
             let done = rep.timings.iter().filter(|t| t.finish_ns.is_finite()).count();
             match on_full {
@@ -332,5 +324,160 @@ fn prop_coordinator_order_invariance() {
             base.makespan_s,
             perm.makespan_s
         );
+    }
+}
+
+/// Tentpole property (priority-aware admission): under a queueing policy
+/// with aging disabled, no query ever starts while a strictly
+/// higher-priority query is waiting — in particular, no Standard query
+/// starts while an Interactive one waits.
+#[test]
+fn prop_no_lower_class_starts_while_higher_class_waits() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x9107);
+        let sim = FlowSim::new(m8());
+        let nq = 4 + rng.gen_range(16) as usize;
+        let cap = 1 + rng.gen_range(3) as usize;
+        let specs: Vec<QuerySpec> = (0..nq)
+            .map(|id| {
+                let mut p = PhaseDemand::zero(8, 8);
+                p.channel_ops[0] = 1e4 + rng.next_f64() * 1e4;
+                p.per_channel_ops[0] = p.channel_ops[0];
+                p.max_channel_ops[0] = p.channel_ops[0];
+                p.parallelism = 100.0;
+                let priority = match rng.gen_range(3) {
+                    0 => Priority::Interactive,
+                    1 => Priority::Standard,
+                    _ => Priority::Batch,
+                };
+                QuerySpec::new(id, "rand", vec![p], rng.next_f64() * 1e5)
+                    .with_priority(priority)
+            })
+            .collect();
+        let adm = Admission::capped(cap, OnFull::Queue).with_age_promote_ns(f64::INFINITY);
+        let rep = sim.run_admitted(&specs, adm);
+        // Every query completes; the order respects strict priority: a
+        // query must not start while a higher-priority one that had
+        // already arrived is still waiting to start.
+        for s in &specs {
+            assert!(rep.timings[s.id].finish_ns.is_finite(), "seed {seed}");
+        }
+        for lo in &specs {
+            for hi in &specs {
+                if hi.priority >= lo.priority {
+                    continue; // hi must be a strictly better class
+                }
+                let lo_start = rep.timings[lo.id].start_ns;
+                let hi_start = rep.timings[hi.id].start_ns;
+                assert!(
+                    !(hi.arrival_ns <= lo_start && hi_start > lo_start),
+                    "seed {seed}: {:?} q{} started at {lo_start} while {:?} q{} \
+                     (arrived {}, started {hi_start}) was waiting",
+                    lo.priority,
+                    lo.id,
+                    hi.priority,
+                    hi.id,
+                    hi.arrival_ns,
+                );
+            }
+        }
+    }
+}
+
+/// Aging bound: with `age_promote_ns = A`, a queued Batch query's wait is
+/// bounded by A plus the work already in service plus the backlog that
+/// enqueued *before* it — the later Interactive stream cannot push it back
+/// indefinitely once it has aged (under strict priority it would go last).
+#[test]
+fn prop_aging_bounds_batch_wait() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xA9E);
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut specs: Vec<QuerySpec> = Vec::new();
+        // id 0: a Standard query in service; id 1: the Batch query stuck
+        // behind it; ids 2..: a stream of Interactive arrivals that would
+        // starve Batch under strict priority.
+        for id in 0..12 {
+            let mut p = PhaseDemand::zero(8, 8);
+            p.channel_ops[0] = 1e4;
+            p.per_channel_ops[0] = 1e4;
+            p.max_channel_ops[0] = 1e4;
+            p.parallelism = 100.0;
+            let (priority, arrival) = match id {
+                0 => (Priority::Standard, 0.0),
+                1 => (Priority::Batch, 0.0),
+                _ => (Priority::Interactive, rng.next_f64() * 4e5),
+            };
+            specs.push(
+                QuerySpec::new(id, "rand", vec![p], arrival).with_priority(priority),
+            );
+        }
+        let service_ns = specs[0].solo_ns(&m); // identical service times
+        let age = 2e5;
+        let rep = sim.run_admitted(
+            &specs,
+            Admission::capped(1, OnFull::Queue).with_age_promote_ns(age),
+        );
+        let batch_wait = rep.timings[1].start_ns - specs[1].arrival_ns;
+        // Once promoted (after `age`), the batch query is FIFO-first among
+        // the promoted/Interactive class (earliest enqueue), so it starts
+        // at the next completion: at most `age` plus the in-service query
+        // plus one more that slipped in before promotion.
+        let bound = age + 2.0 * service_ns + 1.0;
+        assert!(
+            batch_wait <= bound,
+            "seed {seed}: batch waited {batch_wait} ns, bound {bound}"
+        );
+    }
+}
+
+/// Admission partitions queries across all three dispositions: completed +
+/// rejected + shed = submitted, with byte budgets and deadlines active.
+#[test]
+fn prop_admission_dispositions_partition_queries() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xD15);
+        let sim = FlowSim::new(m8());
+        let nq = 1 + rng.gen_range(20) as usize;
+        let byte_cap = 100u64;
+        let specs: Vec<QuerySpec> = (0..nq)
+            .map(|id| {
+                let mut p = PhaseDemand::zero(8, 8);
+                p.channel_ops[0] = 1e4;
+                p.per_channel_ops[0] = 1e4;
+                p.max_channel_ops[0] = 1e4;
+                p.parallelism = 100.0;
+                let mut q = QuerySpec::new(id, "rand", vec![p], rng.next_f64() * 1e6)
+                    .with_ctx_bytes(20 + rng.gen_range(120))
+                    .with_priority(match rng.gen_range(3) {
+                        0 => Priority::Interactive,
+                        1 => Priority::Standard,
+                        _ => Priority::Batch,
+                    });
+                if rng.gen_range(2) == 0 {
+                    q = q.with_deadline_ns(rng.next_f64() * 2e5);
+                }
+                q
+            })
+            .collect();
+        for on_full in
+            [OnFull::Queue, OnFull::Reject, OnFull::Shed { max_waiting: 1 + seed as usize % 4 }]
+        {
+            let rep = sim.run_admitted(&specs, Admission::byte_budget(byte_cap, on_full));
+            let done = rep.timings.iter().filter(|t| t.completed()).count();
+            assert_eq!(
+                done + rep.rejected.len() + rep.shed.len(),
+                nq,
+                "seed {seed} {on_full:?}: dispositions must partition"
+            );
+            // Oversized specs are always rejected, never run or queued.
+            for s in specs.iter().filter(|s| s.ctx_bytes > byte_cap) {
+                assert!(rep.rejected.contains(&s.id), "seed {seed} {on_full:?}");
+            }
+            // NaN-free aggregate stats even with rejections/sheds present.
+            assert!(rep.mean_latency_s().is_finite(), "seed {seed} {on_full:?}");
+            assert!(rep.latencies_s().iter().all(|l| l.is_finite()));
+        }
     }
 }

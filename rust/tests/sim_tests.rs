@@ -35,7 +35,7 @@ fn flow_vs_event_bfs_within_factor() {
         let g = rmat(scale, seed);
         let src = pathfinder_queries::graph::sample::bfs_sources(&g, 1, 1)[0];
         let run = alg::bfs_run(&g, &m, src);
-        let spec = QuerySpec { id: 0, label: "bfs", phases: run.phases, arrival_ns: 0.0 };
+        let spec = QuerySpec::new(0, "bfs", run.phases, 0.0);
         let t_flow = flow.run(std::slice::from_ref(&spec)).makespan_ns;
         let ev = event.bfs(&g, src);
         assert_eq!(ev.values, run.levels, "functional agreement");
@@ -56,7 +56,7 @@ fn flow_vs_event_cc_within_factor() {
     let mut event = EventSim::new(m.clone());
     let g = rmat(10, 21);
     let run = alg::cc_run(&g, &m);
-    let spec = QuerySpec { id: 0, label: "cc", phases: run.phases, arrival_ns: 0.0 };
+    let spec = QuerySpec::new(0, "cc", run.phases, 0.0);
     let t_flow = flow.run(std::slice::from_ref(&spec)).makespan_ns;
     let ev = event.cc(&g);
     assert_eq!(ev.values, run.labels, "functional agreement");
@@ -79,7 +79,7 @@ fn engines_scale_together() {
     let (small, big) = (rmat(10, 4), rmat(13, 4));
     let spec = |g: &Csr| {
         let run = alg::bfs_run(g, &m, pathfinder_queries::graph::sample::bfs_sources(g, 1, 2)[0]);
-        QuerySpec { id: 0, label: "bfs", phases: run.phases, arrival_ns: 0.0 }
+        QuerySpec::new(0, "bfs", run.phases, 0.0)
     };
     let f_ratio = flow.run(&[spec(&big)]).makespan_ns / flow.run(&[spec(&small)]).makespan_ns;
     let e_ratio = {
@@ -101,7 +101,7 @@ fn degraded_machine_slower_in_both_engines() {
 
     let solo = |m: &Machine| {
         let run = alg::bfs_run(&g, m, src);
-        let spec = QuerySpec { id: 0, label: "bfs", phases: run.phases, arrival_ns: 0.0 };
+        let spec = QuerySpec::new(0, "bfs", run.phases, 0.0);
         FlowSim::new(m.clone()).run(&[spec]).makespan_ns
     };
     assert!(solo(&degraded) > solo(&healthy));
@@ -120,12 +120,7 @@ fn flow_bounds_on_real_workload() {
     let specs: Vec<QuerySpec> = sources
         .iter()
         .enumerate()
-        .map(|(i, &s)| QuerySpec {
-            id: i,
-            label: "bfs",
-            phases: alg::bfs_run(&g, &m, s).phases,
-            arrival_ns: 0.0,
-        })
+        .map(|(i, &s)| QuerySpec::new(i, "bfs", alg::bfs_run(&g, &m, s).phases, 0.0))
         .collect();
     let conc = flow.run(&specs);
     let seq = flow.run_sequential(&specs);
