@@ -15,7 +15,9 @@
 
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
-use pathfinder_queries::coordinator::{GraphService, PriorityMix, ServiceConfig, WorkloadSpec};
+use pathfinder_queries::coordinator::{
+    GraphService, PreemptPolicy, PriorityMix, ServiceConfig, ShareWeights, WorkloadSpec,
+};
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::rmat::Rmat;
 use pathfinder_queries::sim::flow::OnFull;
@@ -77,6 +79,25 @@ fn main() -> anyhow::Result<()> {
         workload: WorkloadSpec::four_class(),
         on_full: OnFull::Shed { max_waiting: 32 },
         priority_mix: Some(PriorityMix { interactive: 0.2, standard: 0.6, batch: 0.2 }),
+        seed: 0x5E21,
+        ..Default::default()
+    };
+    let rep = service.serve(&cfg)?;
+    println!("{}", indent(&rep.summary()));
+
+    // Weighted fair share + checkpoint preemption: running queries split
+    // saturated bandwidth 4:2:1 by class, and Batch work parks at phase
+    // boundaries whenever a queued Interactive query needs its context
+    // bytes — compare the interactive p99 lines against the run above.
+    println!("same burst with 4:2:1 fair-share weights and checkpoint preemption:");
+    let cfg = ServiceConfig {
+        queries: 300,
+        arrival_rate_per_s: 20000.0,
+        workload: WorkloadSpec::four_class(),
+        on_full: OnFull::Queue,
+        priority_mix: Some(PriorityMix { interactive: 0.2, standard: 0.6, batch: 0.2 }),
+        weights: ShareWeights::priority_weighted(),
+        preempt: Some(PreemptPolicy::default()),
         seed: 0x5E21,
     };
     let rep = service.serve(&cfg)?;

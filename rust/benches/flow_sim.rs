@@ -3,12 +3,25 @@
 //! the engine from graph traversal costs.
 //!
 //! Knobs: PFQ_BENCH_NQ (default 256) concurrent queries.
+//!
+//! Doubles as the CI perf-regression gate (`bench-smoke` job): after the
+//! wall-time benches it runs a deterministic mixed-priority gate scenario
+//! whose *simulated* metrics have closed-form expected values under the
+//! fluid model, writes them (plus wall medians) to `$PFQ_BENCH_JSON`, and
+//! — when `$PFQ_BENCH_BASELINE` points at a checked-in baseline — exits
+//! non-zero if any gated metric regressed by more than the baseline's
+//! tolerance. Gating on simulated latency instead of wall time keeps the
+//! gate deterministic on noisy CI runners: it catches engine/scheduling
+//! regressions, while wall times stay informational.
 
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::sim::demand::PhaseDemand;
-use pathfinder_queries::sim::flow::{Admission, FlowSim, OnFull, Priority, QuerySpec};
+use pathfinder_queries::sim::flow::{
+    Admission, FlowSim, OnFull, Priority, QuerySpec, ShareWeights,
+};
 use pathfinder_queries::sim::machine::Machine;
 use pathfinder_queries::util::bench::{black_box, Bench};
+use pathfinder_queries::util::json::Json;
 use pathfinder_queries::util::rng::SplitMix64;
 
 /// Synthetic multi-phase query resembling a BFS demand profile.
@@ -37,6 +50,123 @@ fn synth_query(rng: &mut SplitMix64, m: &Machine, id: usize) -> QuerySpec {
         // bench exercises the ordered wait queue and byte accounting.
         .with_priority(Priority::ALL[id % 3])
         .with_ctx_bytes(16 << 20)
+}
+
+/// The gate workload: 48 identical single-phase queries, 16 per priority
+/// class, all arriving at t=0, each demanding 50% of every channel
+/// uniformly ([`PhaseDemand::uniform_channel_load`]) — a saturating mixed
+/// workload (aggregate demand 24x capacity) whose completion times are
+/// closed-form under the fluid model.
+fn gate_specs(m: &Machine) -> Vec<QuerySpec> {
+    (0..48)
+        .map(|id| {
+            let phase = PhaseDemand::uniform_channel_load(m, 0.5, 1e6);
+            QuerySpec::new(id, "gate", vec![phase], 0.0).with_priority(Priority::ALL[id % 3])
+        })
+        .collect()
+}
+
+/// Deterministic gate metrics with fluid-model closed forms (per-channel
+/// drain is `0.5e6 ns` per query, and the solo time cancels out of every
+/// completion time):
+///
+/// * unweighted: all 48 queries share equally and finish together at
+///   `48 x 0.5e6 ns` — mean latency 0.024 s;
+/// * weighted 4:2:1: Interactive finishes at `(16x7) x 0.5e6 / 4 = 14e6
+///   ns` (0.014 s), Standard at 20e6, Batch at 24e6 — mean 0.019333 s.
+///
+/// `ci/BENCH_baseline.json` checks in exactly these values.
+fn gate_metrics() -> Vec<(&'static str, f64)> {
+    let m = Machine::new(MachineConfig::preset("pathfinder-8").unwrap());
+    let sim = FlowSim::new(m.clone());
+    let specs = gate_specs(&m);
+    let flat = sim.run_admitted(&specs, Admission::unlimited());
+    let weighted = sim.run_admitted(
+        &specs,
+        Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
+    );
+    vec![
+        ("mixed/unweighted/mean_latency_s", flat.mean_latency_s()),
+        ("mixed/weighted/mean_latency_s", weighted.mean_latency_s()),
+        (
+            "mixed/weighted/interactive_mean_latency_s",
+            weighted.class_mean_latency_s(Priority::Interactive),
+        ),
+    ]
+}
+
+/// Emit `$PFQ_BENCH_JSON` and enforce `$PFQ_BENCH_BASELINE`; returns
+/// false when a gated metric regressed beyond the baseline tolerance.
+fn run_gate(bench: &Bench) -> bool {
+    let metrics = gate_metrics();
+    println!("\n== bench-gate metrics (simulated, deterministic) ==");
+    for (k, v) in &metrics {
+        println!("  {k} = {v:.9}");
+    }
+    if let Ok(path) = std::env::var("PFQ_BENCH_JSON") {
+        let obj = Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            (
+                "metrics",
+                Json::Obj(
+                    metrics.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect(),
+                ),
+            ),
+            (
+                "wall_median_s",
+                Json::Obj(
+                    bench
+                        .results()
+                        .iter()
+                        .map(|r| (r.name.clone(), Json::Num(r.median_s())))
+                        .collect(),
+                ),
+            ),
+        ]);
+        obj.write_file(std::path::Path::new(&path)).expect("writing bench json");
+        println!("bench-gate: wrote {path}");
+    }
+    let Ok(base_path) = std::env::var("PFQ_BENCH_BASELINE") else {
+        return true;
+    };
+    let base = Json::parse_file(std::path::Path::new(&base_path)).expect("reading baseline");
+    let tol = base
+        .get_opt("tolerance_pct")
+        .and_then(|j| j.as_f64().ok())
+        .unwrap_or(20.0);
+    let expect = match base.get("metrics") {
+        Ok(Json::Obj(map)) => map.clone(),
+        _ => panic!("baseline {base_path} has no metrics object"),
+    };
+    let mut ok = true;
+    for (k, v) in &expect {
+        let want = v.as_f64().expect("numeric baseline metric");
+        match metrics.iter().find(|(name, _)| name == k) {
+            None => {
+                eprintln!("bench-gate: baseline metric {k:?} missing from this run");
+                ok = false;
+            }
+            Some(&(_, got)) => {
+                let delta_pct = (got - want) / want * 100.0;
+                if delta_pct > tol {
+                    eprintln!(
+                        "bench-gate: {k} regressed {delta_pct:.1}% \
+                         ({want:.6} -> {got:.6}), tolerance {tol}%"
+                    );
+                    ok = false;
+                } else if delta_pct < -tol {
+                    println!(
+                        "bench-gate: {k} improved {:.1}% — consider refreshing {base_path}",
+                        -delta_pct
+                    );
+                }
+            }
+        }
+    }
+    if ok {
+        println!("bench-gate: all metrics within {tol}% of {base_path}");
+    }
+    ok
 }
 
 fn main() {
@@ -71,6 +201,14 @@ fn main() {
         bench.run(&format!("{preset}/flow run_admitted(priority,bytes) x{nq}"), || {
             black_box(sim.run_admitted(black_box(&specs), black_box(adm)))
         });
+        // Weighted fair share + checkpoint preemption: the cap/weight
+        // branches of the allocator and the park/resume path.
+        let wadm = adm
+            .with_weights(ShareWeights::priority_weighted())
+            .with_preempt(pathfinder_queries::sim::preempt::PreemptPolicy::default());
+        bench.run(&format!("{preset}/flow run_admitted(weights,preempt) x{nq}"), || {
+            black_box(sim.run_admitted(black_box(&specs), black_box(wadm)))
+        });
         // solo_ns is called once per phase entry — the inner-loop cost.
         let p = &specs[0].phases[0];
         bench.run(&format!("{preset}/solo_ns (one phase)"), || {
@@ -93,4 +231,11 @@ fn main() {
         nq_f * 8.0 / per_run,
         nq
     );
+
+    // CI perf-regression gate: the deterministic metrics always print;
+    // writing BENCH_pr.json and enforcing the baseline happen only when
+    // $PFQ_BENCH_JSON / $PFQ_BENCH_BASELINE are set (see module doc).
+    if !run_gate(&bench) {
+        std::process::exit(1);
+    }
 }

@@ -74,11 +74,7 @@ pub fn run(h: &Harness, queries: usize) -> Result<ScalingData> {
                 .run_specs(&qs, &specs, Policy::Concurrent)
                 .expect_err("over-capacity run must fail")
                 .to_string();
-            let queued = coord.run_specs(
-                &qs,
-                &specs,
-                Policy::ConcurrentAdmitted { on_full: OnFull::Queue },
-            )?;
+            let queued = coord.run_specs(&qs, &specs, Policy::admitted(OnFull::Queue))?;
             Some((attempt, cap, err, queued.makespan_s))
         }
         None => None,

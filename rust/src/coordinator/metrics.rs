@@ -14,7 +14,7 @@ use crate::util::stats::{improvement_pct, Quantiles};
 /// How admission disposed of one query.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Outcome {
-    /// Ran to completion.
+    /// Ran to completion (never preempted).
     Completed,
     /// Refused at arrival (admission full under reject, or a footprint
     /// larger than the machine's whole context memory).
@@ -22,6 +22,15 @@ pub enum Outcome {
     /// Admitted to the wait queue but dropped before starting: deadline
     /// expired while waiting, or shed under overload (Batch first).
     Shed,
+    /// Checkpoint-parked at least once under Interactive pressure (see
+    /// [`crate::sim::preempt`]). `resumed: true` — the normal case — means
+    /// it was resumed from its checkpoint and ran to completion, with the
+    /// parked time inside its latency.
+    Preempted {
+        /// Whether the query resumed and completed (the engine drains the
+        /// parked set before finishing, so this is true in practice).
+        resumed: bool,
+    },
 }
 
 /// One executed query's outcome.
@@ -30,8 +39,14 @@ pub struct QueryRecord {
     pub id: usize,
     /// Analysis class label ("bfs", "cc", "sssp", ...).
     pub label: &'static str,
-    /// Priority class the request carried.
+    /// Priority class the request declared.
     pub priority: Priority,
+    /// Class admission actually served the query as: the declared class,
+    /// or `Interactive` when anti-starvation aging promoted it out of the
+    /// wait queue. Recording both keeps per-class statistics honest — the
+    /// promoted query's wait still counts against its declared class, and
+    /// [`PriorityStats::promoted`] surfaces how often aging fired.
+    pub admitted_as: Priority,
     /// Latency deadline (s from arrival), if the request had one.
     pub deadline_s: Option<f64>,
     /// End-to-end latency in seconds (arrival to completion), NaN if the
@@ -49,8 +64,9 @@ pub struct QueryRecord {
 }
 
 impl QueryRecord {
+    /// Ran to completion — directly, or after a preempt/resume round trip.
     pub fn completed(&self) -> bool {
-        self.outcome == Outcome::Completed
+        matches!(self.outcome, Outcome::Completed | Outcome::Preempted { resumed: true })
     }
 
     pub fn rejected(&self) -> bool {
@@ -59,6 +75,16 @@ impl QueryRecord {
 
     pub fn shed(&self) -> bool {
         self.outcome == Outcome::Shed
+    }
+
+    /// Checkpoint-parked at least once.
+    pub fn preempted(&self) -> bool {
+        matches!(self.outcome, Outcome::Preempted { .. })
+    }
+
+    /// Aging admitted this query as a better class than it declared.
+    pub fn promoted(&self) -> bool {
+        self.admitted_as < self.priority
     }
 
     /// Admission wait: arrival to first progress (s). NaN if the query
@@ -76,7 +102,9 @@ impl QueryRecord {
     }
 }
 
-/// Per-priority-class admission summary of a run.
+/// Per-priority-class admission summary of a run, keyed by *declared*
+/// class (a promoted query's wait and latency stay with the class the
+/// caller asked for; `promoted` counts how often aging re-classed it).
 #[derive(Debug, Clone)]
 pub struct PriorityStats {
     pub priority: Priority,
@@ -85,6 +113,10 @@ pub struct PriorityStats {
     pub completed: usize,
     pub rejected: usize,
     pub shed: usize,
+    /// Queries checkpoint-parked at least once (all resumed).
+    pub preempted: usize,
+    /// Queries aging admitted as a better class than declared.
+    pub promoted: usize,
     /// Mean admission wait over queries that started (s); 0 if none did.
     pub mean_wait_s: f64,
     /// Latency quantiles of completed queries, if any.
@@ -96,8 +128,15 @@ impl PriorityStats {
     /// and [`crate::coordinator::ServiceReport::summary`]).
     pub fn line(&self) -> String {
         format!(
-            "[{}] {} submitted, {} done, {} shed, {} rejected, mean wait {:.4}s",
-            self.priority, self.submitted, self.completed, self.shed, self.rejected,
+            "[{}] {} submitted, {} done, {} shed, {} rejected, {} preempted, \
+             {} aged-up, mean wait {:.4}s",
+            self.priority,
+            self.submitted,
+            self.completed,
+            self.shed,
+            self.rejected,
+            self.preempted,
+            self.promoted,
             self.mean_wait_s
         )
     }
@@ -135,6 +174,7 @@ impl RunReport {
     ) -> Self {
         assert_eq!(requests.len(), flow.timings.len());
         let shed: std::collections::HashSet<usize> = flow.shed.iter().copied().collect();
+        let preempted: std::collections::HashSet<usize> = flow.preempted.iter().copied().collect();
         let records = flow
             .timings
             .iter()
@@ -143,12 +183,15 @@ impl RunReport {
                 id: t.id,
                 label: req.label(),
                 priority: req.priority,
+                admitted_as: t.admitted_as,
                 deadline_s: req.deadline_ns.map(|d| d * 1e-9),
                 latency_s: t.latency_ns() * 1e-9,
                 arrival_s: t.arrival_ns * 1e-9,
                 start_s: t.start_ns * 1e-9,
                 finish_s: t.finish_ns * 1e-9,
-                outcome: if t.completed() {
+                outcome: if preempted.contains(&t.id) {
+                    Outcome::Preempted { resumed: t.completed() }
+                } else if t.completed() {
                     Outcome::Completed
                 } else if shed.contains(&t.id) {
                     Outcome::Shed
@@ -184,6 +227,17 @@ impl RunReport {
         self.records.iter().filter(|r| r.shed()).count()
     }
 
+    /// Queries checkpoint-parked at least once (a subset of
+    /// [`RunReport::completed`] — parked work resumes and finishes).
+    pub fn preempted(&self) -> usize {
+        self.records.iter().filter(|r| r.preempted()).count()
+    }
+
+    /// Queries aging admitted as a better class than they declared.
+    pub fn promoted(&self) -> usize {
+        self.records.iter().filter(|r| r.promoted()).count()
+    }
+
     /// Completed queries whose deadline was exceeded.
     pub fn deadline_misses(&self) -> usize {
         self.records.iter().filter(|r| r.missed_deadline()).count()
@@ -211,6 +265,8 @@ impl RunReport {
             completed: rs.iter().filter(|r| r.completed()).count(),
             rejected: rs.iter().filter(|r| r.rejected()).count(),
             shed: rs.iter().filter(|r| r.shed()).count(),
+            preempted: rs.iter().filter(|r| r.preempted()).count(),
+            promoted: rs.iter().filter(|r| r.promoted()).count(),
             mean_wait_s: if waits.is_empty() { 0.0 } else { crate::util::stats::mean(&waits) },
             latency: (!lats.is_empty()).then(|| Quantiles::from_samples(&lats)),
         })
@@ -319,6 +375,8 @@ mod tests {
                 start_ns: 0.0,
                 finish_ns: l,
                 phases: 1,
+                priority: Priority::Standard,
+                admitted_as: Priority::Standard,
             })
             .collect();
         let makespan = latencies_ns.iter().copied().fold(0.0, f64::max);
@@ -332,6 +390,10 @@ mod tests {
             rejected: vec![],
             shed: vec![],
             peak_ctx_bytes: 0,
+            preempted: vec![],
+            parks: 0,
+            resumes: 0,
+            weights: crate::sim::flow::ShareWeights::flat(),
         };
         (requests, flow)
     }
@@ -423,6 +485,66 @@ mod tests {
         assert!(rep.records[0].missed_deadline());
         assert!(!rep.records[1].missed_deadline());
         assert!(!rep.records[2].missed_deadline()); // no deadline set
+    }
+
+    /// The four dispositions partition the batch exactly, and a
+    /// preempted-then-resumed query counts as completed work.
+    #[test]
+    fn preempted_resumed_partition_stays_exact() {
+        let (qs, mut flow) = flow_with(&[1e9, 2e9, 3e9, 4e9]);
+        // Query 1 was parked and resumed; 2 rejected; 3 shed.
+        flow.preempted = vec![1];
+        flow.parks = 1;
+        flow.resumes = 1;
+        for i in [2, 3] {
+            flow.timings[i].finish_ns = f64::NAN;
+            flow.timings[i].start_ns = f64::NAN;
+        }
+        flow.rejected = vec![2];
+        flow.shed = vec![3];
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert_eq!(rep.records[1].outcome, Outcome::Preempted { resumed: true });
+        assert!(rep.records[1].completed(), "resumed work is completed work");
+        assert_eq!(rep.preempted(), 1);
+        assert_eq!(rep.completed(), 2);
+        assert_eq!(rep.completed() + rep.rejections() + rep.sheds(), 4);
+        // Outcome variants partition exactly: one record per disposition.
+        let by_outcome =
+            |pred: fn(&QueryRecord) -> bool| rep.records.iter().filter(|r| pred(r)).count();
+        assert_eq!(by_outcome(|r| r.outcome == Outcome::Completed), 1);
+        assert_eq!(by_outcome(QueryRecord::preempted), 1);
+        assert_eq!(by_outcome(QueryRecord::rejected), 1);
+        assert_eq!(by_outcome(QueryRecord::shed), 1);
+        // Per-class stats see the preempted query too.
+        let stats = rep.priority_class(Priority::Standard).unwrap();
+        assert_eq!(stats.preempted, 1);
+        assert_eq!(stats.completed, 2);
+    }
+
+    /// Bugfix (aging accounting): the record carries both the declared
+    /// class and the admitted-as class, and `promoted` counts the gap.
+    #[test]
+    fn promoted_queries_counted_per_declared_class() {
+        let (mut qs, mut flow) = flow_with(&[1e9, 2e9, 3e9]);
+        qs[1] = qs[1].clone().with_priority(Priority::Batch);
+        qs[2] = qs[2].clone().with_priority(Priority::Batch);
+        for i in [1, 2] {
+            flow.timings[i].priority = Priority::Batch;
+            flow.timings[i].admitted_as = Priority::Batch;
+        }
+        // Query 1 aged into the Interactive class before starting.
+        flow.timings[1].admitted_as = Priority::Interactive;
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert!(rep.records[1].promoted() && !rep.records[2].promoted());
+        assert_eq!(rep.promoted(), 1);
+        // The promoted query still reports under its declared class.
+        let batch = rep.priority_class(Priority::Batch).unwrap();
+        assert_eq!(batch.submitted, 2);
+        assert_eq!(batch.promoted, 1);
+        assert!(rep.priority_class(Priority::Interactive).is_none(), "declared-class keying");
+        assert!(batch.line().contains("aged-up"));
     }
 
     #[test]

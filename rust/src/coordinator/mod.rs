@@ -16,6 +16,9 @@
 //! * [`scheduler`] — executes a request batch under a policy (sequential /
 //!   concurrent / capped-concurrent) on the flow engine, caching and
 //!   rotating demand per analysis kind where instances are identical;
+//!   admitted execution can divide bandwidth by priority-class weights
+//!   ([`ShareWeights`]) and checkpoint-preempt Batch work under
+//!   Interactive pressure ([`PreemptPolicy`], DESIGN.md §Scheduling);
 //! * [`metrics`] — per-query records, per-class quantiles (Table I),
 //!   improvement percentages (Fig. 4), utilization counters;
 //! * [`service`] — a long-running service facade: queries arrive over
@@ -31,6 +34,8 @@ pub mod scheduler;
 pub mod service;
 
 pub use admission::{ContextExhausted, ContextLedger};
+pub use crate::sim::flow::ShareWeights;
+pub use crate::sim::preempt::PreemptPolicy;
 pub use metrics::{ImprovementRow, Outcome, PriorityStats, QueryRecord, RunReport};
 pub use planner::{arrival_times, bfs_queries, mix_queries};
 pub use request::{Priority, QueryRequest};

@@ -15,8 +15,9 @@ use crate::coordinator::admission::ContextLedger;
 use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
 use crate::sim::demand::PhaseDemand;
-use crate::sim::flow::{FlowSim, OnFull, QuerySpec};
+use crate::sim::flow::{FlowSim, OnFull, QuerySpec, ShareWeights};
 use crate::sim::machine::Machine;
+use crate::sim::preempt::PreemptPolicy;
 use std::collections::HashMap;
 
 use super::metrics::RunReport;
@@ -35,26 +36,50 @@ pub enum Policy {
     /// thread-context capacity: the overload behavior a production
     /// deployment would choose. The wait queue is priority-ordered with
     /// anti-starvation aging; see [`crate::sim::flow::Admission`].
-    ConcurrentAdmitted { on_full: OnFull },
+    ConcurrentAdmitted {
+        /// Overload behavior when an arrival cannot start immediately.
+        on_full: OnFull,
+        /// Fair-share weights dividing bandwidth among *running* queries
+        /// by priority class (flat = plain max-min, the PR 2 behavior).
+        weights: ShareWeights,
+        /// Checkpoint preemption of running Batch work under Interactive
+        /// pressure (None = disabled; see [`crate::sim::preempt`]).
+        preempt: Option<PreemptPolicy>,
+    },
 }
 
 impl Policy {
+    /// Admitted execution with flat weights and no preemption — PR 2's
+    /// `ConcurrentAdmitted` behavior under one name.
+    pub fn admitted(on_full: OnFull) -> Self {
+        Policy::ConcurrentAdmitted { on_full, weights: ShareWeights::flat(), preempt: None }
+    }
+
     /// Report label. `ctx_capacity_bytes` is the effective admission
     /// budget, included so reports on differently-sized machines (or
-    /// what-if capacities) are distinguishable.
+    /// what-if capacities) are distinguishable; non-flat weights and
+    /// preemption are appended so runs with different sharing policies
+    /// never collide in a report.
     pub fn label(&self, ctx_capacity_bytes: u64) -> String {
         let cap_mib = ctx_capacity_bytes >> 20;
         match self {
             Policy::Sequential => "sequential".into(),
             Policy::Concurrent => "concurrent".into(),
-            Policy::ConcurrentAdmitted { on_full: OnFull::Queue } => {
-                format!("concurrent(queue, cap={cap_mib}MiB)")
-            }
-            Policy::ConcurrentAdmitted { on_full: OnFull::Reject } => {
-                format!("concurrent(reject, cap={cap_mib}MiB)")
-            }
-            Policy::ConcurrentAdmitted { on_full: OnFull::Shed { max_waiting } } => {
-                format!("concurrent(shed<={max_waiting}, cap={cap_mib}MiB)")
+            Policy::ConcurrentAdmitted { on_full, weights, preempt } => {
+                let mode = match on_full {
+                    OnFull::Queue => "queue".to_string(),
+                    OnFull::Reject => "reject".to_string(),
+                    OnFull::Shed { max_waiting } => format!("shed<={max_waiting}"),
+                };
+                let mut out = format!("concurrent({mode}, cap={cap_mib}MiB");
+                if !weights.is_flat() {
+                    out.push_str(&format!(", w={}", weights.label()));
+                }
+                out.push(')');
+                if preempt.is_some() {
+                    out.push_str("+preempt");
+                }
+                out
             }
         }
     }
@@ -188,7 +213,8 @@ impl<'g> Coordinator<'g> {
                 );
                 self.sim.run(specs)
             }
-            Policy::ConcurrentAdmitted { on_full } => {
+            Policy::ConcurrentAdmitted { on_full, weights, preempt } => {
+                weights.validate()?;
                 let ledger = self.ledger();
                 // A query whose declared footprint exceeds the whole
                 // machine could never run — that is a workload/machine
@@ -202,7 +228,9 @@ impl<'g> Coordinator<'g> {
                 for spec in specs {
                     ledger.check_admissible(spec.ctx_bytes)?;
                 }
-                self.sim.run_admitted(specs, ledger.policy(on_full))
+                let mut adm = ledger.policy(on_full).with_weights(weights);
+                adm.preempt = preempt;
+                self.sim.run_admitted(specs, adm)
             }
         };
         Ok(RunReport::from_flow(
@@ -256,9 +284,7 @@ mod tests {
         let err = c.run(&qs, Policy::Concurrent).unwrap_err();
         assert!(err.to_string().contains("thread-context memory"));
         // Admission control degrades gracefully instead.
-        let rep = c
-            .run(&qs, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
-            .unwrap();
+        let rep = c.run(&qs, Policy::admitted(OnFull::Queue)).unwrap();
         assert_eq!(rep.completed(), 9);
         assert!(rep.peak_concurrency <= 8);
     }
@@ -270,9 +296,7 @@ mod tests {
         cfg.ctx_mem_per_node_bytes = 16 << 20;
         let c = Coordinator::new(&g, Machine::new(cfg));
         let qs = planner::bfs_queries(&g, 10, 1);
-        let rep = c
-            .run(&qs, Policy::ConcurrentAdmitted { on_full: OnFull::Reject })
-            .unwrap();
+        let rep = c.run(&qs, Policy::admitted(OnFull::Reject)).unwrap();
         assert_eq!(rep.rejections(), 2);
         assert_eq!(rep.completed(), 8);
     }
@@ -375,9 +399,7 @@ mod tests {
         // Admission must hold at most 2 GiB / 1 GiB = 2 fat queries in
         // flight — not the 128 a default-footprint count would allow.
         let fat: Vec<QueryRequest> = (0..5).map(|_| QueryRequest::new(FatCc)).collect();
-        let rep = c
-            .run(&fat, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
-            .unwrap();
+        let rep = c.run(&fat, Policy::admitted(OnFull::Queue)).unwrap();
         assert_eq!(rep.completed(), 5);
         assert!(rep.peak_concurrency <= 2, "peak {}", rep.peak_concurrency);
     }
@@ -395,9 +417,7 @@ mod tests {
         // in-flight work at 2 queries.
         let mut batch: Vec<QueryRequest> = vec![QueryRequest::new(FatCc)];
         batch.extend(planner::bfs_queries(&g, 8, 1));
-        let rep = c
-            .run(&batch, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
-            .unwrap();
+        let rep = c.run(&batch, Policy::admitted(OnFull::Queue)).unwrap();
         assert_eq!(rep.completed(), 9);
         assert!(
             rep.peak_concurrency > 2,
@@ -419,9 +439,7 @@ mod tests {
         let c = Coordinator::new(&g, Machine::new(cfg));
         let one: Vec<QueryRequest> = vec![QueryRequest::new(FatCc)];
         for on_full in [OnFull::Queue, OnFull::Reject, OnFull::Shed { max_waiting: 4 }] {
-            let err = c
-                .run(&one, Policy::ConcurrentAdmitted { on_full })
-                .unwrap_err();
+            let err = c.run(&one, Policy::admitted(on_full)).unwrap_err();
             let ctx = err
                 .downcast_ref::<ContextExhausted>()
                 .unwrap_or_else(|| panic!("want typed ContextExhausted, got {err:#}"));
@@ -438,11 +456,38 @@ mod tests {
         cfg.ctx_mem_per_node_bytes = 16 << 20; // 128 MiB total
         let c = Coordinator::new(&g, Machine::new(cfg));
         let qs = planner::bfs_queries(&g, 2, 1);
-        let rep = c
-            .run(&qs, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
-            .unwrap();
+        let rep = c.run(&qs, Policy::admitted(OnFull::Queue)).unwrap();
         assert_eq!(rep.policy, "concurrent(queue, cap=128MiB)");
         let seq = c.run(&qs, Policy::Sequential).unwrap();
         assert_eq!(seq.policy, "sequential");
+    }
+
+    /// Non-flat weights and preemption are visible in the policy label, so
+    /// runs under different sharing policies never collide in a report.
+    #[test]
+    fn weighted_preempt_policy_labeled_and_runs() {
+        use crate::sim::preempt::PreemptPolicy;
+
+        let g = rmat(9);
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_mem_per_node_bytes = 16 << 20; // 128 MiB total
+        let c = Coordinator::new(&g, Machine::new(cfg));
+        let mut qs = planner::bfs_queries(&g, 12, 1);
+        planner::assign_round_robin_priorities(&mut qs);
+        let policy = Policy::ConcurrentAdmitted {
+            on_full: OnFull::Queue,
+            weights: ShareWeights::priority_weighted(),
+            preempt: Some(PreemptPolicy::default()),
+        };
+        let rep = c.run(&qs, policy).unwrap();
+        assert_eq!(rep.policy, "concurrent(queue, cap=128MiB, w=4:2:1)+preempt");
+        assert_eq!(rep.completed(), 12);
+        // Invalid weights are refused before the engine runs.
+        let bad = Policy::ConcurrentAdmitted {
+            on_full: OnFull::Queue,
+            weights: ShareWeights { interactive: 0.0, standard: 1.0, batch: 1.0 },
+            preempt: None,
+        };
+        assert!(c.run(&qs, bad).is_err());
     }
 }

@@ -11,11 +11,15 @@
 //!                       [--cc C] [--sssp S] [--khop H] [--khop-k HOPS]
 //!                       [--policy sequential|concurrent|queue|reject|shed]
 //!                       [--max-waiting W]
+//!                       [--weights interactive=4,standard=2,batch=1] [--preempt]
 //! pathfinder serve      [--scale N] --machine NAME [--queries K] [--rate Q/S]
 //!                       [--mix bfs=0.8,cc=0.1,sssp=0.1]
 //!                       [--on-full queue|reject|shed] [--max-waiting W]
 //!                       [--priority-mix interactive=0.2,standard=0.6,batch=0.2]
 //!                       [--slo khop=0.05,bfs=0.2]   (per-class p99 targets, s)
+//!                       [--weights interactive=4,standard=2,batch=1]
+//!                       [--preempt]   (park Batch at checkpoints under
+//!                                      Interactive pressure)
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -35,8 +39,8 @@ use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
-    planner, Coordinator, GraphService, Policy, PriorityMix, QueryRequest, ServiceConfig,
-    WorkloadSpec,
+    planner, Coordinator, GraphService, Policy, PreemptPolicy, PriorityMix, QueryRequest,
+    ServiceConfig, ShareWeights, WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -233,16 +237,31 @@ fn cmd_run(args: &Args) -> Result<()> {
     anyhow::ensure!(!classes.is_empty(), "nothing to run: all class counts are zero");
     let queries = planner::interleave_classes(classes);
 
+    // Fair-share weights + checkpoint preemption: admitted policies only
+    // (sequential runs one query at a time; raw concurrent has no
+    // scheduler to enforce either).
+    let weights = match args.opt("weights") {
+        Some(spec) => ShareWeights::parse(spec)?,
+        None => ShareWeights::flat(),
+    };
+    let preempt = args.has_flag("preempt").then(PreemptPolicy::default);
     let policy = match args.opt_or("policy", "concurrent").as_str() {
         "sequential" => Policy::Sequential,
         "concurrent" => Policy::Concurrent,
-        "queue" => Policy::ConcurrentAdmitted { on_full: OnFull::Queue },
-        "reject" => Policy::ConcurrentAdmitted { on_full: OnFull::Reject },
+        "queue" => Policy::ConcurrentAdmitted { on_full: OnFull::Queue, weights, preempt },
+        "reject" => Policy::ConcurrentAdmitted { on_full: OnFull::Reject, weights, preempt },
         "shed" => Policy::ConcurrentAdmitted {
             on_full: OnFull::Shed { max_waiting: args.opt_parse_or("max-waiting", 64)? },
+            weights,
+            preempt,
         },
         other => bail!("unknown policy {other:?}"),
     };
+    if matches!(policy, Policy::Sequential | Policy::Concurrent)
+        && (!weights.is_flat() || preempt.is_some())
+    {
+        bail!("--weights/--preempt need an admitted policy (--policy queue|reject|shed)");
+    }
 
     let rep = coord.run(&queries, policy)?;
     println!(
@@ -253,10 +272,11 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     println!("  makespan            {:.4} s", rep.makespan_s);
     println!(
-        "  completed/rejected/shed  {}/{}/{}",
+        "  completed/rejected/shed/preempted  {}/{}/{}/{}",
         rep.completed(),
         rep.rejections(),
-        rep.sheds()
+        rep.sheds(),
+        rep.preempted()
     );
     println!("  mean latency        {:.4} s", rep.mean_latency_s());
     println!("  throughput          {:.2} q/s", rep.throughput_qps());
@@ -305,6 +325,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             other => bail!("unknown --on-full {other:?}"),
         },
         priority_mix: args.opt("priority-mix").map(PriorityMix::parse).transpose()?,
+        weights: match args.opt("weights") {
+            Some(spec) => ShareWeights::parse(spec)?,
+            None => ShareWeights::flat(),
+        },
+        preempt: args.has_flag("preempt").then(PreemptPolicy::default),
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
     let mix_desc: Vec<String> = cfg

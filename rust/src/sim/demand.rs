@@ -203,6 +203,32 @@ impl PhaseDemand {
         t + m.cfg.level_sync_ns
     }
 
+    /// A synthetic latency-bound phase lasting ~`total_ns` solo while
+    /// consuming `frac` of every channel of every node uniformly — the
+    /// structural shape of a single Pathfinder query (latency-bound, not
+    /// capacity-bound: parallelism is picked so the rounds x latency floor
+    /// lands at `total_ns`). Uniformity makes saturated completion times
+    /// closed-form, which the flow engine's fairness tests and the CI
+    /// bench gate (`rust/benches/flow_sim.rs`, `ci/BENCH_baseline.json`)
+    /// rely on; keep the shape in sync with those closed forms.
+    pub fn uniform_channel_load(m: &Machine, frac: f64, total_ns: f64) -> PhaseDemand {
+        let nodes = m.nodes();
+        let cpn = m.cfg.channels_per_node;
+        let mut p = PhaseDemand::zero(nodes, cpn);
+        let mut total_ops = 0.0;
+        for n in 0..nodes {
+            let ops = m.channel_op_rate(n) * frac * total_ns * 1e-9;
+            p.channel_ops[n] = ops;
+            p.max_channel_ops[n] = ops / cpn as f64;
+            for c in 0..cpn {
+                p.per_channel_ops[n * cpn + c] = ops / cpn as f64;
+            }
+            total_ops += ops;
+        }
+        p.parallelism = total_ops * m.cfg.local_access_ns / total_ns;
+        p
+    }
+
     /// Rotate every node's per-channel op placement by `offset` channels —
     /// the cheap equivalent of re-running an identical query with a
     /// different own-array stripe offset (connected components is

@@ -17,7 +17,15 @@
 //!   progressive-filling **max-min fairness**: grow every query's rate
 //!   together until a resource saturates, freeze the queries using it, and
 //!   continue with the rest — the fluid analogue of hardware round-robin
-//!   thread scheduling with FIFO memory channels.
+//!   thread scheduling with FIFO memory channels. With non-flat
+//!   [`ShareWeights`] the filling is *weighted*: each query grows at its
+//!   priority class's multiple of the fill level, so Interactive work
+//!   holds a larger share of every saturated resource (DESIGN.md
+//!   §Scheduling).
+//! * Under [`Admission::preempt`], running Batch work can be **parked at a
+//!   phase boundary** (context bytes released, completed phases kept) when
+//!   a blocked Interactive waiter needs its reservation, and resumed when
+//!   the pressure clears — see [`crate::sim::preempt`].
 //! * Time advances event-to-event (phase completions and query arrivals);
 //!   rates are recomputed whenever the active set changes.
 //!
@@ -29,6 +37,7 @@ use super::counters::Counters;
 use super::demand::PhaseDemand;
 use super::ledger::ContextLedger;
 use super::machine::Machine;
+use super::preempt::{Parker, PreemptPolicy};
 
 /// Scheduling priority class of a query.
 ///
@@ -60,6 +69,91 @@ impl std::fmt::Display for Priority {
             Priority::Standard => write!(f, "standard"),
             Priority::Batch => write!(f, "batch"),
         }
+    }
+}
+
+/// Per-priority-class fair-share weights for the progress loop.
+///
+/// Under plain max-min every running query's rate grows uniformly until a
+/// resource saturates; with weights, a query of class `p` grows at
+/// `weights.of(p)` times the uniform fill level (still capped at solo
+/// speed), so an Interactive query receives proportionally more of every
+/// saturated resource than a Batch query sharing it. Flat weights (the
+/// default) reproduce plain max-min exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShareWeights {
+    pub interactive: f64,
+    pub standard: f64,
+    pub batch: f64,
+}
+
+impl Default for ShareWeights {
+    fn default() -> Self {
+        ShareWeights::flat()
+    }
+}
+
+impl ShareWeights {
+    /// Equal shares: plain max-min fairness (the pre-weighting behavior).
+    pub fn flat() -> Self {
+        ShareWeights { interactive: 1.0, standard: 1.0, batch: 1.0 }
+    }
+
+    /// The 4:2:1 preset: Interactive gets four times a Batch query's share
+    /// of every saturated resource, Standard twice.
+    pub fn priority_weighted() -> Self {
+        ShareWeights { interactive: 4.0, standard: 2.0, batch: 1.0 }
+    }
+
+    /// The weight of one priority class.
+    pub fn of(&self, p: Priority) -> f64 {
+        match p {
+            Priority::Interactive => self.interactive,
+            Priority::Standard => self.standard,
+            Priority::Batch => self.batch,
+        }
+    }
+
+    /// All classes weighted equally (any scale): rates degenerate to plain
+    /// max-min.
+    pub fn is_flat(&self) -> bool {
+        self.interactive == self.standard && self.standard == self.batch
+    }
+
+    /// Parse `class=weight,...` (e.g. `interactive=4,standard=2,batch=1`);
+    /// omitted classes keep weight 1.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut w = ShareWeights::flat();
+        for (class, weight) in crate::util::cli::parse_kv_f64_list(spec, "share weights")? {
+            match class {
+                "interactive" => w.interactive = weight,
+                "standard" => w.standard = weight,
+                "batch" => w.batch = weight,
+                other => anyhow::bail!(
+                    "unknown priority class {other:?} (want interactive/standard/batch)"
+                ),
+            }
+        }
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Weights must be finite and strictly positive (a zero weight would
+    /// starve a running query forever).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for p in Priority::ALL {
+            let w = self.of(p);
+            anyhow::ensure!(
+                w.is_finite() && w > 0.0,
+                "share weight for {p} must be finite and positive, got {w}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Compact `i:s:b` label for reports (e.g. `4:2:1`).
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}", self.interactive, self.standard, self.batch)
     }
 }
 
@@ -150,6 +244,14 @@ pub struct QueryTiming {
     /// outcome — a rejected or shed query reports the work it *would*
     /// have run, not 0.
     pub phases: usize,
+    /// Priority class the spec declared.
+    pub priority: Priority,
+    /// Class the query was *admitted as*: the declared class, or
+    /// `Interactive` when anti-starvation aging promoted it out of the
+    /// wait queue. Recording both sides keeps per-class wait statistics
+    /// honest — a promoted Batch query's long wait belongs to Batch, but
+    /// reports can now also see that it competed as Interactive.
+    pub admitted_as: Priority,
 }
 
 impl QueryTiming {
@@ -209,6 +311,14 @@ pub struct Admission {
     /// ordered as `Interactive`. `f64::INFINITY` disables aging (strict
     /// priority).
     pub age_promote_ns: f64,
+    /// Fair-share weights the progress loop divides bandwidth by (flat =
+    /// plain max-min; see [`ShareWeights`]).
+    pub weights: ShareWeights,
+    /// Checkpoint preemption of running low-priority work under
+    /// Interactive pressure (None = disabled; see
+    /// [`crate::sim::preempt`]). Only meaningful with a queueing
+    /// [`OnFull`] policy — under `Reject` nothing ever waits.
+    pub preempt: Option<PreemptPolicy>,
 }
 
 impl Admission {
@@ -223,6 +333,8 @@ impl Admission {
             ctx_capacity_bytes: None,
             on_full: OnFull::Reject,
             age_promote_ns: f64::INFINITY,
+            weights: ShareWeights::flat(),
+            preempt: None,
         }
     }
 
@@ -233,6 +345,8 @@ impl Admission {
             ctx_capacity_bytes: None,
             on_full,
             age_promote_ns: Admission::DEFAULT_AGE_PROMOTE_NS,
+            weights: ShareWeights::flat(),
+            preempt: None,
         }
     }
 
@@ -243,12 +357,26 @@ impl Admission {
             ctx_capacity_bytes: Some(ctx_capacity_bytes),
             on_full,
             age_promote_ns: Admission::DEFAULT_AGE_PROMOTE_NS,
+            weights: ShareWeights::flat(),
+            preempt: None,
         }
     }
 
     /// Override the anti-starvation bound.
     pub fn with_age_promote_ns(mut self, age_promote_ns: f64) -> Self {
         self.age_promote_ns = age_promote_ns;
+        self
+    }
+
+    /// Set priority-scaled fair-share weights for the progress loop.
+    pub fn with_weights(mut self, weights: ShareWeights) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// Enable checkpoint preemption.
+    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> Self {
+        self.preempt = Some(preempt);
         self
     }
 }
@@ -275,6 +403,17 @@ pub struct FlowReport {
     /// High-water mark of reserved thread-context bytes over the run
     /// (from the [`ContextLedger`] the engine admits against).
     pub peak_ctx_bytes: u64,
+    /// Ids of queries that were checkpoint-parked at least once. The run
+    /// always drains the parked set before finishing, so every id here
+    /// also completed (its latency includes the parked time).
+    pub preempted: Vec<usize>,
+    /// Total park events over the run (one query can park repeatedly, up
+    /// to [`crate::sim::preempt::PreemptPolicy::max_parks_per_query`]).
+    pub parks: usize,
+    /// Total resume events over the run.
+    pub resumes: usize,
+    /// The fair-share weights the run used (flat = plain max-min).
+    pub weights: ShareWeights,
 }
 
 impl FlowReport {
@@ -307,6 +446,26 @@ impl FlowReport {
             .map(|t| t.latency_ns() * 1e-9)
             .collect()
     }
+
+    /// Completed-query latencies (s) of one declared priority class — the
+    /// realized per-class service the weighted progress loop divides.
+    pub fn class_latencies_s(&self, priority: Priority) -> Vec<f64> {
+        self.timings
+            .iter()
+            .filter(|t| t.completed() && t.priority == priority)
+            .map(|t| t.latency_ns() * 1e-9)
+            .collect()
+    }
+
+    /// Mean completed-query latency (s) of one declared priority class;
+    /// 0.0 if the class completed nothing.
+    pub fn class_mean_latency_s(&self, priority: Priority) -> f64 {
+        let xs = self.class_latencies_s(priority);
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
 }
 
 /// One in-flight phase inside the allocator.
@@ -324,6 +483,10 @@ struct ActivePhase {
     util: Vec<(u32, f64)>,
     /// Allocated rate from the last allocation pass.
     rate: f64,
+    /// Fair-share weight of the owning query's priority class: this phase
+    /// grows at `weight x` the uniform fill level during allocation, and
+    /// contributes `weight x util` to the aggregate demand vector.
+    weight: f64,
 }
 
 /// The flow-level simulator.
@@ -357,7 +520,17 @@ impl FlowSim {
     /// aging (see [`Admission`]); the head of the queue blocks lower
     /// classes even when they would fit — strict ordering, so a fat
     /// high-priority query is never starved by a stream of thin ones.
+    ///
+    /// Running queries share saturated resources by *weighted* max-min
+    /// ([`Admission::weights`]; flat weights = plain max-min), and with
+    /// [`Admission::preempt`] set, running Batch-class work is parked at
+    /// phase boundaries (context bytes released, completed phases kept)
+    /// when a blocked Interactive waiter needs its reservation, then
+    /// resumed once the pressure clears.
     pub fn run_admitted(&self, queries: &[QuerySpec], adm: Admission) -> FlowReport {
+        adm.weights.validate().expect("invalid fair-share weights");
+        let weights = adm.weights;
+        let mut parker: Option<Parker> = adm.preempt.map(|p| Parker::new(p, queries.len()));
         let nodes = self.m.nodes();
         let n_res = nodes * (self.m.cfg.channels_per_node + 3);
         let mut counters = Counters::new(nodes);
@@ -399,10 +572,22 @@ impl FlowSim {
         let mut peak = 0usize;
         let mut rates_dirty = true;
 
+        // Effective admission class of a waiter at time `now`: aging
+        // promotes long waiters to the front class.
+        let effective_class = |qi: usize, now: f64| -> Priority {
+            let q = &queries[qi];
+            if now - q.arrival_ns >= adm.age_promote_ns {
+                Priority::Interactive
+            } else {
+                q.priority
+            }
+        };
+
         // Start query qi at time t (caller checked `in_flight < cap` and
-        // `ledger.would_fit`).
+        // `ledger.would_fit`); `admitted_as` is the class it won its slot
+        // under (declared, or Interactive when aging promoted it).
         macro_rules! start_query {
-            ($qi:expr) => {{
+            ($qi:expr, $admitted_as:expr) => {{
                 let qi = $qi;
                 let q = &queries[qi];
                 in_flight += 1;
@@ -414,10 +599,13 @@ impl FlowSim {
                     start_ns: t,
                     finish_ns: f64::NAN,
                     phases: q.phases.len(),
+                    priority: q.priority,
+                    admitted_as: $admitted_as,
                 });
-                if let Some(ap) = self.enter_phase(qi, 0, q, &mut counters) {
+                let w = weights.of(q.priority);
+                if let Some(ap) = self.enter_phase(qi, 0, q, w, &mut counters) {
                     for &(j, u) in &ap.util {
-                        total_demand[j as usize] += u;
+                        total_demand[j as usize] += w * u;
                     }
                     active.push(ap);
                 } else {
@@ -444,6 +632,8 @@ impl FlowSim {
                     start_ns: f64::NAN,
                     finish_ns: f64::NAN,
                     phases: q.phases.len(),
+                    priority: q.priority,
+                    admitted_as: q.priority,
                 });
                 $sink.push(q.id);
             }};
@@ -469,7 +659,7 @@ impl FlowSim {
                 match adm.on_full {
                     OnFull::Reject => {
                         if in_flight < cap && ledger.would_fit(q.ctx_bytes) {
-                            start_query!(qi);
+                            start_query!(qi, q.priority);
                         } else {
                             drop_query!(qi, rejected);
                         }
@@ -499,14 +689,7 @@ impl FlowSim {
                 let best = waiting
                     .iter()
                     .enumerate()
-                    .min_by_key(|&(_, &qi)| {
-                        let q = &queries[qi];
-                        if t - q.arrival_ns >= adm.age_promote_ns {
-                            Priority::Interactive
-                        } else {
-                            q.priority
-                        }
-                    })
+                    .min_by_key(|&(_, &qi)| effective_class(qi, t))
                     .map(|(i, _)| i);
                 match best {
                     Some(i)
@@ -514,9 +697,103 @@ impl FlowSim {
                             && ledger.would_fit(queries[waiting[i]].ctx_bytes) =>
                     {
                         let qi = waiting.remove(i);
-                        start_query!(qi);
+                        start_query!(qi, effective_class(qi, t));
                     }
                     _ => break,
+                }
+            }
+
+            // Checkpoint preemption (see [`crate::sim::preempt`]): under
+            // Interactive pressure, mark running victim-class queries to
+            // park at their next phase boundary; with the pressure gone,
+            // resume parked work FIFO. Marks are recomputed from scratch
+            // at every event, so stale pressure never leaves a mark.
+            if let Some(pk) = parker.as_mut() {
+                pk.unmark_all();
+                // The best blocked waiter (the drain above started every
+                // waiter that fits, in priority order, until one did not).
+                let blocked = waiting
+                    .iter()
+                    .map(|&qi| (effective_class(qi, t), qi))
+                    .min_by_key(|&(c, _)| c);
+                match blocked {
+                    // The trigger keys on the *declared* class: an
+                    // aging-promoted Batch waiter competes as Interactive
+                    // for queue order, but parking running Batch work to
+                    // admit other Batch work would be pure churn.
+                    Some((Priority::Interactive, head_qi))
+                        if queries[head_qi].priority == Priority::Interactive =>
+                    {
+                        // Park the victims that reach a checkpoint soonest,
+                        // just enough of them to cover the head waiter's
+                        // reservation (bytes and, under a count cap, one
+                        // slot). If the preemptible set cannot cover it at
+                        // all, park nothing — churn would not help.
+                        let head = &queries[head_qi];
+                        let free = ledger.capacity_bytes().saturating_sub(ledger.in_use_bytes());
+                        let needed_bytes = head.ctx_bytes.saturating_sub(free);
+                        let needed_slots = usize::from(in_flight >= cap);
+                        let mut cands: Vec<(f64, usize, u64)> = active
+                            .iter()
+                            .filter(|ap| pk.can_mark(ap.qi, queries[ap.qi].priority))
+                            .map(|ap| {
+                                let boundary_ns = ap.remaining * ap.solo_ns / ap.rate;
+                                (boundary_ns, ap.qi, queries[ap.qi].ctx_bytes)
+                            })
+                            .collect();
+                        let coverable = cands.iter().map(|c| c.2).sum::<u64>() >= needed_bytes
+                            && cands.len() >= needed_slots;
+                        if coverable && (needed_bytes > 0 || needed_slots > 0) {
+                            cands.sort_by(|a, b| {
+                                a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1))
+                            });
+                            let (mut freed_bytes, mut freed_slots) = (0u64, 0usize);
+                            for (_, qi, bytes) in cands {
+                                if freed_bytes >= needed_bytes && freed_slots >= needed_slots {
+                                    break;
+                                }
+                                pk.mark(qi);
+                                freed_bytes = freed_bytes.saturating_add(bytes);
+                                freed_slots += 1;
+                            }
+                        }
+                    }
+                    _ => {
+                        // Resume parked work FIFO while it fits, never
+                        // bypassing a blocked waiter of a better class
+                        // (a blocked equal-class waiter defers to parked
+                        // work, which already holds partial progress).
+                        let blocked_class = blocked.map(|(c, _)| c);
+                        while let Some((qi, next_phase)) = pk.peek_parked() {
+                            let q = &queries[qi];
+                            if blocked_class.is_some_and(|c| c < q.priority)
+                                || in_flight >= cap
+                                || !ledger.would_fit(q.ctx_bytes)
+                            {
+                                break;
+                            }
+                            pk.resume_front();
+                            in_flight += 1;
+                            ledger.admit(qi, q.ctx_bytes).expect("checked would_fit");
+                            let w = weights.of(q.priority);
+                            match self.enter_phase(qi, next_phase, q, w, &mut counters) {
+                                Some(ap) => {
+                                    for &(j, u) in &ap.util {
+                                        total_demand[j as usize] += w * u;
+                                    }
+                                    active.push(ap);
+                                }
+                                None => {
+                                    // Only zero-solo phases remained past
+                                    // the checkpoint: the query is done.
+                                    timings[qi].as_mut().unwrap().finish_ns = t;
+                                    in_flight -= 1;
+                                    ledger.release(qi);
+                                }
+                            }
+                            rates_dirty = true;
+                        }
+                    }
                 }
             }
 
@@ -588,20 +865,39 @@ impl FlowSim {
                 if active[i].remaining * active[i].solo_ns / active[i].rate <= eps_ns {
                     let ap = active.swap_remove(i);
                     for &(j, u) in &ap.util {
-                        total_demand[j as usize] -= u;
+                        total_demand[j as usize] -= ap.weight * u;
                     }
                     let q = &queries[ap.qi];
-                    match self.enter_phase(ap.qi, ap.phase_idx + 1, q, &mut counters) {
-                        Some(next) => {
-                            for &(j, u) in &next.util {
-                                total_demand[j as usize] += u;
+                    let next_phase = ap.phase_idx + 1;
+                    let draining = parker.as_ref().is_some_and(|p| p.is_draining(ap.qi));
+                    if draining
+                        && next_phase < q.phases.len()
+                        && q.phases[next_phase..].iter().any(|p| p.solo_ns(&self.m) > 0.0)
+                    {
+                        // Checkpoint: keep the completed phase prefix,
+                        // release the context reservation, park until the
+                        // Interactive pressure clears. A query with only
+                        // zero-solo phases left finishes instead — parking
+                        // it would just delay its recorded completion.
+                        parker.as_mut().unwrap().park(ap.qi, next_phase);
+                        in_flight -= 1;
+                        ledger.release(ap.qi);
+                    } else {
+                        match self.enter_phase(ap.qi, next_phase, q, ap.weight, &mut counters) {
+                            Some(next) => {
+                                for &(j, u) in &next.util {
+                                    total_demand[j as usize] += ap.weight * u;
+                                }
+                                active.push(next);
                             }
-                            active.push(next);
-                        }
-                        None => {
-                            timings[ap.qi].as_mut().unwrap().finish_ns = t;
-                            in_flight -= 1;
-                            ledger.release(ap.qi);
+                            None => {
+                                timings[ap.qi].as_mut().unwrap().finish_ns = t;
+                                in_flight -= 1;
+                                ledger.release(ap.qi);
+                                if let Some(p) = parker.as_mut() {
+                                    p.finish(ap.qi);
+                                }
+                            }
                         }
                     }
                     rates_dirty = true;
@@ -615,6 +911,17 @@ impl FlowSim {
         }
 
         counters.elapsed_ns = t;
+        let (preempted, parks, resumes) = match &parker {
+            Some(p) => {
+                debug_assert_eq!(p.parked_len(), 0, "run finished with queries still parked");
+                let ids = (0..queries.len())
+                    .filter(|&qi| p.was_parked(qi))
+                    .map(|qi| queries[qi].id)
+                    .collect();
+                (ids, p.parks(), p.resumes())
+            }
+            None => (Vec::new(), 0, 0),
+        };
         FlowReport {
             timings: timings.into_iter().map(|x| x.expect("query never admitted")).collect(),
             makespan_ns: t,
@@ -623,6 +930,10 @@ impl FlowSim {
             rejected,
             shed,
             peak_ctx_bytes: ledger.peak_bytes(),
+            preempted,
+            parks,
+            resumes,
+            weights,
         }
     }
 
@@ -648,6 +959,8 @@ impl FlowSim {
                 start_ns: start,
                 finish_ns: t,
                 phases: q.phases.len(),
+                priority: q.priority,
+                admitted_as: q.priority,
             });
         }
         counters.elapsed_ns = t;
@@ -661,17 +974,23 @@ impl FlowSim {
             // One query at a time: the peak reservation is the fattest
             // single query.
             peak_ctx_bytes: queries.iter().map(|q| q.ctx_bytes).max().unwrap_or(0),
+            preempted: Vec::new(),
+            parks: 0,
+            resumes: 0,
+            weights: ShareWeights::flat(),
         }
     }
 
     /// Build the allocator state for phase `phase_idx` of query `qi`,
     /// charging its demand to the counters. Skips zero-solo phases.
-    /// Returns None when the query has no further phases.
+    /// Returns None when the query has no further phases. `weight` is the
+    /// query's fair-share weight (1.0 under flat weights).
     fn enter_phase(
         &self,
         qi: usize,
         mut phase_idx: usize,
         q: &QuerySpec,
+        weight: f64,
         counters: &mut Counters,
     ) -> Option<ActivePhase> {
         while phase_idx < q.phases.len() {
@@ -688,6 +1007,7 @@ impl FlowSim {
                     remaining: 1.0,
                     util,
                     rate: 1.0,
+                    weight,
                 });
             }
             phase_idx += 1;
@@ -707,18 +1027,24 @@ fn charge_counters(c: &mut Counters, p: &PhaseDemand) {
     }
 }
 
-/// Progressive-filling max-min fair rate allocation.
+/// Progressive-filling *weighted* max-min fair rate allocation.
 ///
-/// Every unfrozen phase's rate grows uniformly until some resource would
-/// exceed capacity (1.0 of each node-resource); the phases using that
-/// bottleneck are frozen at the current level and filling continues.
-/// Rates are capped at 1.0 — a phase can never beat its solo time.
+/// Every unfrozen phase's rate grows at `weight x` a uniform fill level
+/// until some resource would exceed capacity (1.0 of each node-resource);
+/// the phases using that bottleneck are frozen at `weight x level` and
+/// filling continues. Rates are capped at 1.0 — a phase can never beat its
+/// solo time — and a phase that reaches that cap before any resource
+/// saturates is frozen at full rate first (its consumption is then its
+/// plain utilization, below the linear-growth estimate, so the remaining
+/// saturation levels only move up). With flat weights (all 1.0) every step
+/// reduces to the unweighted allocator: the cap pass fires exactly when
+/// `level >= 1.0`, freezing everyone at once.
 ///
-/// §Perf: `demand` arrives pre-aggregated (the run loop maintains it
-/// incrementally as phases enter and leave) and is *decremented* as phases
-/// freeze, so each phase's util vector is scanned at most once per solve;
-/// the scratch buffers are caller-owned so the solve allocates only the
-/// small `frozen` bitmap.
+/// §Perf: `demand` arrives pre-aggregated as *weighted* utilization (the
+/// run loop maintains `Σ weight x util` incrementally as phases enter and
+/// leave) and is *decremented* as phases freeze, so each phase's util
+/// vector is scanned at most once per solve; the scratch buffers are
+/// caller-owned so the solve allocates only the small `frozen` bitmap.
 fn max_min_rates(active: &mut [ActivePhase], demand: &mut [f64], residual: &mut [f64]) {
     if active.is_empty() {
         return;
@@ -729,7 +1055,8 @@ fn max_min_rates(active: &mut [ActivePhase], demand: &mut [f64], residual: &mut 
     let mut unfrozen = active.len();
 
     while unfrozen > 0 {
-        // Uniform level at which the first resource saturates.
+        // Uniform fill level at which the first resource saturates (each
+        // unfrozen phase consuming weight x level x util).
         let mut level = f64::INFINITY;
         let mut bottleneck = usize::MAX;
         for j in 0..n_res {
@@ -741,7 +1068,7 @@ fn max_min_rates(active: &mut [ActivePhase], demand: &mut [f64], residual: &mut 
                 }
             }
         }
-        if level >= 1.0 || bottleneck == usize::MAX {
+        if bottleneck == usize::MAX {
             // Nothing binds below the solo-speed cap: everyone left runs
             // at full rate.
             for (i, ap) in active.iter_mut().enumerate() {
@@ -751,21 +1078,42 @@ fn max_min_rates(active: &mut [ActivePhase], demand: &mut [f64], residual: &mut 
             }
             return;
         }
-        // Freeze every unfrozen phase that touches the bottleneck; retire
-        // its demand and charge its residual consumption.
+        // Phases whose weighted growth hits the solo cap at or before the
+        // saturation level run at full rate; retire them and re-solve —
+        // they consume util (not weight x level x util), so the remaining
+        // levels are monotonically non-decreasing.
+        let mut capped_any = false;
+        for (i, ap) in active.iter_mut().enumerate() {
+            if frozen[i] || ap.weight * level < 1.0 {
+                continue;
+            }
+            ap.rate = 1.0;
+            frozen[i] = true;
+            unfrozen -= 1;
+            capped_any = true;
+            for &(j, u) in &ap.util {
+                residual[j as usize] -= u;
+                demand[j as usize] -= ap.weight * u;
+            }
+        }
+        if capped_any {
+            continue;
+        }
+        // Freeze every unfrozen phase that touches the bottleneck at its
+        // weighted share; retire its demand and charge its consumption.
         let mut froze_any = false;
         for (i, ap) in active.iter_mut().enumerate() {
             if frozen[i] {
                 continue;
             }
             if ap.util.iter().any(|&(j, _)| j as usize == bottleneck) {
-                ap.rate = level.max(1e-9);
+                ap.rate = (ap.weight * level).min(1.0).max(1e-9);
                 frozen[i] = true;
                 unfrozen -= 1;
                 froze_any = true;
                 for &(j, u) in &ap.util {
                     residual[j as usize] -= ap.rate * u;
-                    demand[j as usize] -= u;
+                    demand[j as usize] -= ap.weight * u;
                 }
             }
         }
@@ -774,7 +1122,7 @@ fn max_min_rates(active: &mut [ActivePhase], demand: &mut [f64], residual: &mut 
             // Defensive: avoid an infinite loop on numerical corner cases.
             for (i, ap) in active.iter_mut().enumerate() {
                 if !frozen[i] {
-                    ap.rate = level.max(1e-9);
+                    ap.rate = (ap.weight * level).min(1.0).max(1e-9);
                 }
             }
             return;
@@ -793,25 +1141,10 @@ mod tests {
 
     /// A latency-bound phase lasting ~`total_ns` solo while consuming only
     /// `frac` of every node's channel capacity — the structural shape of a
-    /// single Pathfinder query (the paper's concurrency headroom).
+    /// single Pathfinder query (the paper's concurrency headroom). Shared
+    /// with the bench gate via [`PhaseDemand::uniform_channel_load`].
     fn uniform_phase(m: &Machine, frac: f64, total_ns: f64) -> PhaseDemand {
-        let nodes = m.nodes();
-        let cpn = m.cfg.channels_per_node;
-        let mut p = PhaseDemand::zero(nodes, cpn);
-        let mut total_ops = 0.0;
-        for n in 0..nodes {
-            let ops = m.channel_op_rate(n) * frac * total_ns * 1e-9;
-            p.channel_ops[n] = ops;
-            p.max_channel_ops[n] = ops / cpn as f64;
-            for c in 0..cpn {
-                p.per_channel_ops[n * cpn + c] = ops / cpn as f64;
-            }
-            total_ops += ops;
-        }
-        // Pick P so the parallelism floor (rounds x local latency) lands at
-        // total_ns: the phase is latency-bound, not capacity-bound.
-        p.parallelism = total_ops * m.cfg.local_access_ns / total_ns;
-        p
+        PhaseDemand::uniform_channel_load(m, frac, total_ns)
     }
 
     fn query(m: &Machine, id: usize, frac: f64, total_ns: f64) -> QuerySpec {
@@ -1160,6 +1493,235 @@ mod tests {
         );
         // Interactive queries all completed.
         assert!(qs[5..].iter().all(|q| rep.timings[q.id].completed()));
+    }
+
+    /// Weighted fair share, closed form: 4 Interactive (weight 4) + 4
+    /// Batch (weight 1) identical queries, channels saturated. Per-channel
+    /// utilization is `u = drain/solo` with `drain = frac x total_ns`, so
+    /// the fill level is `solo/(20 drain)`, the Interactive rate is
+    /// `4 x level`, and Interactive finishes at exactly `20 drain / 4 =
+    /// 2.5e6 ns` — the solo time cancels. Batch then holds 75% of its work
+    /// and drains the now-private channels at `solo/(4 drain)`, finishing
+    /// at `4.0e6 ns`. The makespan equals the flat-weights makespan: the
+    /// allocator redistributes bandwidth, it does not create or destroy
+    /// work.
+    #[test]
+    fn weighted_shares_follow_class_weights() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut qs: Vec<QuerySpec> = Vec::new();
+        for i in 0..4 {
+            qs.push(query(&m, i, 0.5, 1e6).with_priority(Priority::Interactive));
+        }
+        for i in 4..8 {
+            qs.push(query(&m, i, 0.5, 1e6).with_priority(Priority::Batch));
+        }
+        let flat = sim.run_admitted(&qs, Admission::unlimited());
+        let weighted = sim.run_admitted(
+            &qs,
+            Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
+        );
+        // Flat: all eight share equally and finish together at 8 x drain.
+        assert!((flat.makespan_ns - 4e6).abs() / 4e6 < 0.01, "{}", flat.makespan_ns);
+        let t_int = weighted.timings[0].latency_ns();
+        let t_batch = weighted.timings[7].latency_ns();
+        assert!((t_int - 2.5e6).abs() / 2.5e6 < 0.01, "interactive at {t_int}");
+        assert!((t_batch - 4.0e6).abs() / 4.0e6 < 0.01, "batch at {t_batch}");
+        // Work conservation: the weighted makespan matches the flat one.
+        assert!((weighted.makespan_ns - flat.makespan_ns).abs() / flat.makespan_ns < 0.01);
+        // Surfaced through the report: per-class latencies and the weights.
+        assert!(weighted.class_mean_latency_s(Priority::Interactive)
+            < weighted.class_mean_latency_s(Priority::Batch));
+        assert_eq!(weighted.weights, ShareWeights::priority_weighted());
+        assert!(weighted.preempted.is_empty() && weighted.parks == 0);
+    }
+
+    /// The solo-speed cap still binds under weights: a heavily-weighted
+    /// query whose `weight x level` exceeds 1 runs at solo speed, no
+    /// faster, and the leftover bandwidth goes to the rest.
+    #[test]
+    fn weighted_rate_caps_at_solo_speed() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut qs = vec![query(&m, 0, 0.25, 1e6).with_priority(Priority::Interactive)];
+        for i in 1..9 {
+            qs.push(query(&m, i, 0.25, 1e6).with_priority(Priority::Batch));
+        }
+        let w = ShareWeights { interactive: 8.0, standard: 1.0, batch: 1.0 };
+        let rep = sim.run_admitted(&qs, Admission::unlimited().with_weights(w));
+        let solo = qs[0].solo_ns(&m);
+        let t_int = rep.timings[0].latency_ns();
+        // weight x level = 8 x 0.25 = 2 >= 1: capped at solo speed.
+        assert!((t_int - solo).abs() / solo < 0.01, "{t_int} vs solo {solo}");
+        // Channels stay saturated throughout: makespan = total work over
+        // capacity = 9 x 0.25e6 ns.
+        assert!((rep.makespan_ns - 2.25e6).abs() / 2.25e6 < 0.01, "{}", rep.makespan_ns);
+    }
+
+    /// Weights are scale-free: any flat vector reproduces plain max-min.
+    #[test]
+    fn flat_weights_at_any_scale_match_default() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let mut qs: Vec<QuerySpec> = (0..6).map(|i| query(&m, i, 0.5, 1e6)).collect();
+        for (i, q) in qs.iter_mut().enumerate() {
+            q.priority = Priority::ALL[i % 3];
+        }
+        let base = sim.run_admitted(&qs, Admission::unlimited());
+        let scaled = sim.run_admitted(
+            &qs,
+            Admission::unlimited()
+                .with_weights(ShareWeights { interactive: 3.0, standard: 3.0, batch: 3.0 }),
+        );
+        assert!((base.makespan_ns - scaled.makespan_ns).abs() / base.makespan_ns < 1e-9);
+        for (a, b) in base.timings.iter().zip(&scaled.timings) {
+            assert!((a.finish_ns - b.finish_ns).abs() / a.finish_ns < 1e-9);
+        }
+    }
+
+    /// Checkpoint preemption round trip: a running Batch query parks at
+    /// its next phase boundary when a blocked Interactive arrival needs
+    /// its context bytes (60 + 60 > 100: the interactive query can only
+    /// start because the ledger reservation was released), then resumes
+    /// and completes once the pressure clears.
+    #[test]
+    fn preemption_parks_batch_at_checkpoint_for_interactive() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let batch = QuerySpec::new(
+            0,
+            "batch",
+            (0..4).map(|_| uniform_phase(&m, 0.5, 1e6)).collect(),
+            0.0,
+        )
+        .with_priority(Priority::Batch)
+        .with_ctx_bytes(60);
+        let mut interactive = query(&m, 1, 0.5, 1e5)
+            .with_priority(Priority::Interactive)
+            .with_ctx_bytes(60);
+        interactive.arrival_ns = 1.2e6; // mid-phase-2 of the batch query
+        let qs = vec![batch, interactive];
+        let adm = Admission::byte_budget(100, OnFull::Queue);
+
+        // PR 2 behavior: the interactive query waits out the whole batch.
+        let plain = sim.run_admitted(&qs, adm);
+        assert!(plain.preempted.is_empty() && plain.parks == 0);
+        assert!(plain.timings[1].start_ns > 3.9e6, "{}", plain.timings[1].start_ns);
+
+        let rep = sim.run_admitted(&qs, adm.with_preempt(PreemptPolicy::default()));
+        assert_eq!(rep.preempted, vec![0]);
+        assert_eq!((rep.parks, rep.resumes), (1, 1));
+        // Parked at the ~2e6 phase boundary, not mid-phase.
+        let istart = rep.timings[1].start_ns;
+        assert!((1.9e6..2.5e6).contains(&istart), "interactive started at {istart}");
+        assert!(rep.peak_ctx_bytes <= 100);
+        // Both complete; the parked time lands in the batch latency.
+        assert!(rep.timings[0].completed() && rep.timings[1].completed());
+        assert!(rep.timings[0].finish_ns > rep.timings[1].finish_ns);
+        assert!(
+            rep.timings[1].latency_ns() < 0.5 * plain.timings[1].latency_ns(),
+            "preemption must shorten the interactive latency: {} vs {}",
+            rep.timings[1].latency_ns(),
+            plain.timings[1].latency_ns()
+        );
+        // Work is conserved: the batch query still runs all four phases.
+        assert_eq!(rep.timings[0].phases, 4);
+        assert!(
+            (rep.counters.totals().channel_ops - plain.counters.totals().channel_ops).abs()
+                < 1e-6
+        );
+    }
+
+    /// An Interactive or Standard query is never a preemption victim under
+    /// the default (Batch-only) policy.
+    #[test]
+    fn preemption_spares_non_victim_classes() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let standard = QuerySpec::new(
+            0,
+            "std",
+            (0..4).map(|_| uniform_phase(&m, 0.5, 1e6)).collect(),
+            0.0,
+        )
+        .with_ctx_bytes(60);
+        let mut interactive = query(&m, 1, 0.5, 1e5)
+            .with_priority(Priority::Interactive)
+            .with_ctx_bytes(60);
+        interactive.arrival_ns = 1.2e6;
+        let qs = vec![standard, interactive];
+        let rep = sim.run_admitted(
+            &qs,
+            Admission::byte_budget(100, OnFull::Queue).with_preempt(PreemptPolicy::default()),
+        );
+        // No victim: the interactive query waits like under PR 2.
+        assert!(rep.preempted.is_empty() && rep.parks == 0);
+        assert!(rep.timings[1].start_ns > 3.9e6);
+        assert!(rep.timings.iter().all(|t| t.completed()));
+    }
+
+    /// An aging-promoted Batch waiter orders the queue like Interactive
+    /// but must not trigger parking of running Batch work — swapping
+    /// running Batch for waiting Batch is pure churn.
+    #[test]
+    fn aged_batch_waiter_does_not_preempt_running_batch() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let running = QuerySpec::new(
+            0,
+            "b0",
+            (0..4).map(|_| uniform_phase(&m, 0.5, 1e6)).collect(),
+            0.0,
+        )
+        .with_priority(Priority::Batch)
+        .with_ctx_bytes(60);
+        let waiter = query(&m, 1, 0.5, 1e5).with_priority(Priority::Batch).with_ctx_bytes(60);
+        let adm = Admission::byte_budget(100, OnFull::Queue)
+            .with_age_promote_ns(1e5) // promotes long before the batch finishes
+            .with_preempt(PreemptPolicy::default());
+        let rep = sim.run_admitted(&[running, waiter], adm);
+        assert_eq!(rep.parks, 0, "aged Batch pressure must not park running Batch");
+        // The waiter starts only when the running query completes — but it
+        // is still recorded as aged into the Interactive class.
+        assert!(rep.timings[1].start_ns > 3.9e6, "{}", rep.timings[1].start_ns);
+        assert_eq!(rep.timings[1].admitted_as, Priority::Interactive);
+        assert!(rep.timings.iter().all(|t| t.completed()));
+    }
+
+    /// Bugfix (aging accounting): a promoted waiter records both sides —
+    /// the declared class it belongs to and the class it was admitted as.
+    #[test]
+    fn aging_promotion_recorded_as_admitted_class() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let long = query(&m, 0, 0.5, 1e6);
+        let batch = query(&m, 1, 0.5, 1e5).with_priority(Priority::Batch);
+        let rep = sim.run_admitted(
+            &[long, batch],
+            Admission::capped(1, OnFull::Queue).with_age_promote_ns(2e5),
+        );
+        // The batch query waited ~1e6 ns >> 2e5: promoted on admission.
+        assert_eq!(rep.timings[1].priority, Priority::Batch);
+        assert_eq!(rep.timings[1].admitted_as, Priority::Interactive);
+        // The first query started without waiting: no promotion.
+        assert_eq!(rep.timings[0].admitted_as, rep.timings[0].priority);
+    }
+
+    #[test]
+    fn share_weights_parse_and_validate() {
+        let w = ShareWeights::parse("interactive=4, standard=2, batch=1").unwrap();
+        assert_eq!(w, ShareWeights::priority_weighted());
+        assert!(!w.is_flat());
+        assert_eq!(w.label(), "4:2:1");
+        // Omitted classes default to 1.
+        let w = ShareWeights::parse("interactive=6").unwrap();
+        assert_eq!(w.standard, 1.0);
+        assert_eq!(w.batch, 1.0);
+        assert!(ShareWeights::flat().is_flat());
+        assert!(ShareWeights::parse("realtime=2").is_err());
+        assert!(ShareWeights::parse("batch=0").is_err(), "zero weight starves");
+        assert!(ShareWeights::parse("batch=-1").is_err());
+        assert!(ShareWeights::parse("batch=inf").is_err());
     }
 
     #[test]

@@ -34,10 +34,12 @@ pub mod event;
 pub mod flow;
 pub mod ledger;
 pub mod machine;
+pub mod preempt;
 pub mod views;
 
 pub use counters::Counters;
 pub use demand::PhaseDemand;
-pub use flow::{FlowSim, Priority, QueryTiming};
+pub use flow::{FlowSim, Priority, QueryTiming, ShareWeights};
 pub use ledger::{ContextExhausted, ContextLedger};
 pub use machine::Machine;
+pub use preempt::PreemptPolicy;

@@ -1,0 +1,284 @@
+//! Checkpoint preemption: park running low-priority queries at phase
+//! boundaries so a blocked Interactive query can start.
+//!
+//! PR 2's admission orders the *wait queue* by priority, but once a query
+//! is running it holds its thread-context reservation until completion: a
+//! fat Batch query in flight can keep an Interactive arrival queued for
+//! its whole remaining runtime. Checkpoint preemption closes that gap.
+//! The engine ([`crate::sim::flow::FlowSim::run_admitted`]) drives the
+//! [`Parker`] state machine; each in-flight query is in one of three
+//! states:
+//!
+//! ```text
+//!             mark()                park(next_phase)
+//!  Running ──────────▶ Draining ──────────────────────▶ Parked
+//!     ▲                   │                                │
+//!     │   unmark_all()    │                resume_front()  │
+//!     └───────────────────┴────────────────────────────────┘
+//! ```
+//!
+//! * **Running → Draining**: when a *declared*-Interactive waiter is
+//!   blocked, the engine marks enough preemptible (by default Batch-class)
+//!   running queries to cover the waiter's context bytes. An
+//!   aging-promoted Batch waiter orders the wait queue like Interactive
+//!   but never triggers parking — swapping running Batch work for waiting
+//!   Batch work would be pure churn. Marks are recomputed at every event,
+//!   so a mark evaporates (`unmark_all`) if the pressure clears before
+//!   the victim reaches a checkpoint.
+//! * **Draining → Parked**: a phase boundary is the checkpoint — the
+//!   completed prefix of phases is retained (nothing is re-executed), the
+//!   query's [`crate::sim::flow::QuerySpec::ctx_bytes`] reservation is
+//!   released back to the [`crate::sim::ledger::ContextLedger`], and the
+//!   index of the next phase to run is recorded here.
+//! * **Parked → Running**: when no better-class waiter is blocked and the
+//!   reservation fits again, the engine re-admits the query and resumes it
+//!   from the checkpointed phase. Parked queries resume FIFO.
+//!
+//! [`PreemptPolicy::max_parks_per_query`] bounds how often one query can
+//! cycle through this loop, so adversarial arrival patterns cannot thrash
+//! a Batch query forever.
+
+use super::flow::Priority;
+use std::collections::VecDeque;
+
+/// Knobs for checkpoint preemption (carried by
+/// [`crate::sim::flow::Admission::preempt`]; `None` disables it).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PreemptPolicy {
+    /// Best (smallest) priority class that may be parked: classes at or
+    /// *below* this one are preemptible. The default is
+    /// [`Priority::Batch`] — only throughput-oriented background work is
+    /// ever parked; `Standard` would make both Standard and Batch fair
+    /// game.
+    pub victim_class: Priority,
+    /// Maximum times one query may be parked over a run (thrash bound).
+    pub max_parks_per_query: usize,
+}
+
+impl Default for PreemptPolicy {
+    fn default() -> Self {
+        PreemptPolicy { victim_class: Priority::Batch, max_parks_per_query: 16 }
+    }
+}
+
+impl PreemptPolicy {
+    /// The default policy: only Batch work is preemptible.
+    pub fn batch_only() -> Self {
+        Self::default()
+    }
+
+    /// Widen (or narrow) the preemptible classes.
+    pub fn with_victim_class(mut self, victim_class: Priority) -> Self {
+        self.victim_class = victim_class;
+        self
+    }
+
+    /// Override the per-query park bound.
+    pub fn with_max_parks(mut self, max_parks_per_query: usize) -> Self {
+        self.max_parks_per_query = max_parks_per_query;
+        self
+    }
+
+    /// Whether a query of declared class `p` may be parked at all.
+    pub fn can_preempt(&self, p: Priority) -> bool {
+        p >= self.victim_class
+    }
+}
+
+/// Preemption state of one in-flight query (see the module diagram).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ParkState {
+    /// Not involved in preemption (running normally, waiting, or done).
+    #[default]
+    Running,
+    /// Marked: will park at its next phase boundary.
+    Draining,
+    /// Parked: context bytes released, waiting to resume.
+    Parked,
+}
+
+/// The per-run preemption state machine the flow engine drives.
+#[derive(Debug, Clone)]
+pub struct Parker {
+    policy: PreemptPolicy,
+    state: Vec<ParkState>,
+    parks_per_query: Vec<usize>,
+    /// Parked queries in park order: (query index, next phase to run).
+    parked: VecDeque<(usize, usize)>,
+    parks: usize,
+    resumes: usize,
+}
+
+impl Parker {
+    pub fn new(policy: PreemptPolicy, n_queries: usize) -> Self {
+        Parker {
+            policy,
+            state: vec![ParkState::Running; n_queries],
+            parks_per_query: vec![0; n_queries],
+            parked: VecDeque::new(),
+            parks: 0,
+            resumes: 0,
+        }
+    }
+
+    pub fn policy(&self) -> &PreemptPolicy {
+        &self.policy
+    }
+
+    pub fn state(&self, qi: usize) -> ParkState {
+        self.state[qi]
+    }
+
+    /// Whether query `qi` (declared class `p`) is eligible to be marked:
+    /// running, in a preemptible class, and under its park budget.
+    pub fn can_mark(&self, qi: usize, p: Priority) -> bool {
+        self.state[qi] == ParkState::Running
+            && self.policy.can_preempt(p)
+            && self.parks_per_query[qi] < self.policy.max_parks_per_query
+    }
+
+    /// Running → Draining: park at the next phase boundary.
+    pub fn mark(&mut self, qi: usize) {
+        debug_assert_eq!(self.state[qi], ParkState::Running, "mark of non-running query {qi}");
+        self.state[qi] = ParkState::Draining;
+    }
+
+    /// Drop every pending mark (pressure cleared before the checkpoint).
+    pub fn unmark_all(&mut self) {
+        for s in &mut self.state {
+            if *s == ParkState::Draining {
+                *s = ParkState::Running;
+            }
+        }
+    }
+
+    pub fn is_draining(&self, qi: usize) -> bool {
+        self.state[qi] == ParkState::Draining
+    }
+
+    /// Draining → Parked at a phase boundary; `next_phase` is the
+    /// checkpoint to resume from.
+    pub fn park(&mut self, qi: usize, next_phase: usize) {
+        debug_assert_eq!(self.state[qi], ParkState::Draining, "park of unmarked query {qi}");
+        self.state[qi] = ParkState::Parked;
+        self.parks_per_query[qi] += 1;
+        self.parks += 1;
+        self.parked.push_back((qi, next_phase));
+    }
+
+    /// The longest-parked query, if any: (query index, next phase).
+    pub fn peek_parked(&self) -> Option<(usize, usize)> {
+        self.parked.front().copied()
+    }
+
+    /// Parked → Running for the front of the parked queue.
+    pub fn resume_front(&mut self) -> (usize, usize) {
+        let (qi, next_phase) = self.parked.pop_front().expect("resume with nothing parked");
+        debug_assert_eq!(self.state[qi], ParkState::Parked);
+        self.state[qi] = ParkState::Running;
+        self.resumes += 1;
+        (qi, next_phase)
+    }
+
+    /// Clear any leftover mark when a query completes (a Draining query
+    /// whose final phase finished never parks).
+    pub fn finish(&mut self, qi: usize) {
+        if self.state[qi] == ParkState::Draining {
+            self.state[qi] = ParkState::Running;
+        }
+    }
+
+    /// How many queries are currently parked.
+    pub fn parked_len(&self) -> usize {
+        self.parked.len()
+    }
+
+    /// Total park events over the run.
+    pub fn parks(&self) -> usize {
+        self.parks
+    }
+
+    /// Total resume events over the run.
+    pub fn resumes(&self) -> usize {
+        self.resumes
+    }
+
+    /// Whether query `qi` was parked at least once.
+    pub fn was_parked(&self, qi: usize) -> bool {
+        self.parks_per_query[qi] > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_defaults_park_batch_only() {
+        let p = PreemptPolicy::default();
+        assert!(p.can_preempt(Priority::Batch));
+        assert!(!p.can_preempt(Priority::Standard));
+        assert!(!p.can_preempt(Priority::Interactive));
+        let wide = p.with_victim_class(Priority::Standard);
+        assert!(wide.can_preempt(Priority::Standard) && wide.can_preempt(Priority::Batch));
+        assert!(!wide.can_preempt(Priority::Interactive));
+    }
+
+    #[test]
+    fn mark_park_resume_round_trip() {
+        let mut pk = Parker::new(PreemptPolicy::default(), 3);
+        assert!(pk.can_mark(1, Priority::Batch));
+        assert!(!pk.can_mark(1, Priority::Interactive), "victim class gates marking");
+        pk.mark(1);
+        assert!(pk.is_draining(1));
+        assert!(!pk.can_mark(1, Priority::Batch), "already draining");
+        pk.park(1, 2);
+        assert_eq!(pk.state(1), ParkState::Parked);
+        assert_eq!(pk.parked_len(), 1);
+        assert_eq!(pk.peek_parked(), Some((1, 2)));
+        assert_eq!(pk.resume_front(), (1, 2));
+        assert_eq!(pk.state(1), ParkState::Running);
+        assert_eq!(pk.parked_len(), 0);
+        assert_eq!((pk.parks(), pk.resumes()), (1, 1));
+        assert!(pk.was_parked(1) && !pk.was_parked(0));
+    }
+
+    #[test]
+    fn unmark_reverts_draining_without_counting_a_park() {
+        let mut pk = Parker::new(PreemptPolicy::default(), 2);
+        pk.mark(0);
+        pk.unmark_all();
+        assert_eq!(pk.state(0), ParkState::Running);
+        assert_eq!(pk.parks(), 0);
+        assert!(!pk.was_parked(0));
+        // A completed query with a leftover mark is cleared the same way.
+        pk.mark(1);
+        pk.finish(1);
+        assert_eq!(pk.state(1), ParkState::Running);
+    }
+
+    #[test]
+    fn park_budget_bounds_thrash() {
+        let mut pk = Parker::new(PreemptPolicy::default().with_max_parks(2), 1);
+        for round in 0..2 {
+            assert!(pk.can_mark(0, Priority::Batch), "round {round}");
+            pk.mark(0);
+            pk.park(0, round + 1);
+            pk.resume_front();
+        }
+        assert!(!pk.can_mark(0, Priority::Batch), "park budget exhausted");
+        assert_eq!(pk.parks(), 2);
+    }
+
+    #[test]
+    fn parked_queue_is_fifo() {
+        let mut pk = Parker::new(PreemptPolicy::default(), 4);
+        for qi in [2, 0, 3] {
+            pk.mark(qi);
+            pk.park(qi, 1);
+        }
+        assert_eq!(pk.resume_front().0, 2);
+        assert_eq!(pk.resume_front().0, 0);
+        assert_eq!(pk.resume_front().0, 3);
+    }
+}

@@ -5,7 +5,8 @@
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::{GraphConfig, MixPoint};
 use pathfinder_queries::coordinator::{
-    planner, Coordinator, GraphService, ImprovementRow, Policy, ServiceConfig, WorkloadSpec,
+    planner, Coordinator, GraphService, ImprovementRow, Policy, PreemptPolicy, ServiceConfig,
+    ShareWeights, WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -63,15 +64,11 @@ fn admission_matches_ledger_capacity() {
     // Unadmitted: the paper's crash, surfaced as an error.
     assert!(coord.run(&queries, Policy::Concurrent).is_err());
     // Queue: everything completes, peak bounded.
-    let q = coord
-        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
-        .unwrap();
+    let q = coord.run(&queries, Policy::admitted(OnFull::Queue)).unwrap();
     assert_eq!(q.completed(), 40);
     assert!(q.peak_concurrency <= 32);
     // Reject: 8 rejections.
-    let r = coord
-        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Reject })
-        .unwrap();
+    let r = coord.run(&queries, Policy::admitted(OnFull::Reject)).unwrap();
     assert_eq!(r.rejections(), 8);
 }
 
@@ -82,9 +79,7 @@ fn queueing_costs_less_than_sequential() {
     cfg.ctx_mem_per_node_bytes = 64 << 20; // capacity 32
     let coord = Coordinator::new(&g, Machine::new(cfg));
     let queries = planner::bfs_queries(&g, 64, 2);
-    let queued = coord
-        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
-        .unwrap();
+    let queued = coord.run(&queries, Policy::admitted(OnFull::Queue)).unwrap();
     let seq = coord.run(&queries, Policy::Sequential).unwrap();
     assert!(queued.makespan_s < seq.makespan_s);
 }
@@ -225,9 +220,7 @@ fn mixed_priority_overload_orders_and_sheds_by_class() {
 
     // Queueing: everyone completes, but Interactive waits least, so its
     // p99 is strictly better than Batch's.
-    let queued = coord
-        .run(&queries, Policy::ConcurrentAdmitted { on_full: OnFull::Queue })
-        .unwrap();
+    let queued = coord.run(&queries, Policy::admitted(OnFull::Queue)).unwrap();
     assert_eq!(queued.completed(), 48);
     let p99 = |rep: &pathfinder_queries::coordinator::RunReport, p: Priority| {
         rep.priority_class(p).unwrap().latency.as_ref().unwrap().q99
@@ -246,10 +239,7 @@ fn mixed_priority_overload_orders_and_sheds_by_class() {
     // Shedding: with a bounded wait queue, Batch is dropped first and no
     // Interactive query is shed while Batch work remains.
     let shed = coord
-        .run(
-            &queries,
-            Policy::ConcurrentAdmitted { on_full: OnFull::Shed { max_waiting: 16 } },
-        )
+        .run(&queries, Policy::admitted(OnFull::Shed { max_waiting: 16 }))
         .unwrap();
     let stats = |p: Priority| shed.priority_class(p).unwrap();
     assert!(shed.sheds() > 0, "overload must shed");
@@ -260,4 +250,93 @@ fn mixed_priority_overload_orders_and_sheds_by_class() {
         "batch shed at least as much as standard"
     );
     assert_eq!(shed.completed() + shed.sheds() + shed.rejections(), 48);
+}
+
+/// Acceptance (weighted fair share + checkpoint preemption): under a
+/// saturating mixed workload — Batch work occupying every thread-context
+/// slot when Interactive queries arrive — enabling 8:2:1 weights plus
+/// preemption makes the Interactive p99 *strictly* lower than PR 2's
+/// unweighted sharing, with zero Interactive deadline misses while Batch
+/// work is still in flight.
+#[test]
+fn weighted_preemption_beats_unweighted_sharing_for_interactive() {
+    use pathfinder_queries::coordinator::{Priority, QueryRequest, RunReport};
+
+    let g = rmat(11);
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.ctx_mem_per_node_bytes = 16 << 20; // capacity: 8 concurrent queries
+    let coord = Coordinator::new(&g, Machine::new(cfg));
+
+    // 32 Batch queries burst in first and fill every slot; 8 Interactive
+    // queries arrive just behind them and — under PR 2 — can only wait.
+    let build = |interactive_deadline_ns: Option<f64>| -> Vec<QueryRequest> {
+        let mut queries = planner::bfs_queries(&g, 40, 0x1D3);
+        for (i, q) in queries.iter_mut().enumerate() {
+            *q = q.clone().with_priority(Priority::Batch).at(i as f64 * 1e3);
+        }
+        for (i, q) in queries.iter_mut().rev().take(8).enumerate() {
+            *q = q.clone().with_priority(Priority::Interactive).at(1e4 + i as f64 * 1e3);
+            if let Some(d) = interactive_deadline_ns {
+                *q = q.clone().with_deadline_ns(d);
+            }
+        }
+        queries
+    };
+    let weighted_policy = Policy::ConcurrentAdmitted {
+        on_full: OnFull::Queue,
+        weights: ShareWeights { interactive: 8.0, standard: 2.0, batch: 1.0 },
+        preempt: Some(PreemptPolicy::default()),
+    };
+    let int_p99 = |rep: &RunReport| {
+        rep.priority_class(Priority::Interactive).unwrap().latency.as_ref().unwrap().q99
+    };
+
+    // Arm 1: PR 2's unweighted max-min with plain queueing.
+    let baseline = coord.run(&build(None), Policy::admitted(OnFull::Queue)).unwrap();
+    assert_eq!(baseline.completed(), 40);
+    assert_eq!(baseline.preempted(), 0);
+
+    // Arm 2: weighted shares + checkpoint preemption.
+    let treated = coord.run(&build(None), weighted_policy).unwrap();
+    assert_eq!(treated.completed(), 40, "preemption must not lose work");
+    assert!(
+        int_p99(&treated) < int_p99(&baseline),
+        "interactive p99 must strictly improve: weighted+preempt {} vs unweighted {}",
+        int_p99(&treated),
+        int_p99(&baseline)
+    );
+    assert!(treated.preempted() > 0, "batch work must actually park");
+    // Only Batch was parked, and Batch work was still in flight when the
+    // last Interactive query completed.
+    let stats = |rep: &RunReport, p: Priority| rep.priority_class(p).unwrap();
+    assert_eq!(stats(&treated, Priority::Interactive).preempted, 0);
+    let last_interactive_finish = treated
+        .records
+        .iter()
+        .filter(|r| r.priority == Priority::Interactive)
+        .map(|r| r.finish_s)
+        .fold(0.0, f64::max);
+    let last_batch_finish = treated
+        .records
+        .iter()
+        .filter(|r| r.priority == Priority::Batch)
+        .map(|r| r.finish_s)
+        .fold(0.0, f64::max);
+    assert!(
+        last_batch_finish > last_interactive_finish,
+        "batch work must remain in flight past the interactive tail"
+    );
+
+    // Arm 3: give Interactive queries the unweighted p99 as a deadline.
+    // Under weights+preemption every one of them beats it: zero misses,
+    // zero deadline sheds.
+    let deadline_ns = int_p99(&baseline) * 1e9;
+    let with_deadlines = coord.run(&build(Some(deadline_ns)), weighted_policy).unwrap();
+    assert_eq!(with_deadlines.completed(), 40);
+    assert_eq!(
+        with_deadlines.deadline_misses(),
+        0,
+        "interactive deadlines at the unweighted p99 must all be met"
+    );
+    assert_eq!(stats(&with_deadlines, Priority::Interactive).shed, 0);
 }

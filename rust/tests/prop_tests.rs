@@ -9,8 +9,11 @@ use pathfinder_queries::coordinator::{planner, Coordinator, Policy, QueryRequest
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
 use pathfinder_queries::sim::demand::{DemandBuilder, PhaseDemand};
-use pathfinder_queries::sim::flow::{Admission, FlowSim, OnFull, Priority, QuerySpec};
+use pathfinder_queries::sim::flow::{
+    Admission, FlowSim, OnFull, Priority, QuerySpec, ShareWeights,
+};
 use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::sim::preempt::PreemptPolicy;
 use pathfinder_queries::util::rng::SplitMix64;
 use pathfinder_queries::util::stats::Quantiles;
 
@@ -284,10 +287,7 @@ fn prop_registered_analyses_validate_under_both_policies() {
                 QueryRequest::from_arc(registry.build(label, src).unwrap())
             })
             .collect();
-        for policy in [
-            Policy::Sequential,
-            Policy::ConcurrentAdmitted { on_full: OnFull::Queue },
-        ] {
+        for policy in [Policy::Sequential, Policy::admitted(OnFull::Queue)] {
             let rep = coord.run(&requests, policy).unwrap();
             assert_eq!(rep.completed(), requests.len(), "seed {seed} {policy:?}");
         }
@@ -429,6 +429,127 @@ fn prop_aging_bounds_batch_wait() {
             batch_wait <= bound,
             "seed {seed}: batch waited {batch_wait} ns, bound {bound}"
         );
+    }
+}
+
+/// A latency-bound phase consuming `frac` of every channel uniformly —
+/// uniformity makes saturated completion times closed-form (see the
+/// weighted-shares property below).
+fn uniform_phase(m: &Machine, frac: f64, total_ns: f64) -> PhaseDemand {
+    PhaseDemand::uniform_channel_load(m, frac, total_ns)
+}
+
+/// Tentpole property (weighted fair share): under saturation, realized
+/// per-class bandwidth follows the configured weights. With `n_c`
+/// identical single-phase queries per class `c`, each with per-channel
+/// drain `D = frac x total_ns`, progressive filling gives every class the
+/// rate `w_c x level` until the heaviest class completes — so the heaviest
+/// class finishes at exactly `Σ_c n_c w_c x D / w_max` (solo time cancels),
+/// and mean latencies order inversely to the weights.
+#[test]
+fn prop_weighted_shares_converge_to_configured_weights() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x3E1);
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        // Strictly ordered random weights and random per-class counts.
+        let wb = 1.0 + rng.gen_range(3) as f64;
+        let ws = wb + 1.0 + rng.gen_range(3) as f64;
+        let wi = ws + 1.0 + rng.gen_range(3) as f64;
+        let counts = [
+            4 + rng.gen_range(4) as usize,
+            4 + rng.gen_range(4) as usize,
+            4 + rng.gen_range(4) as usize,
+        ];
+        let drain_ns = 0.5e6; // frac x total_ns per channel per query
+        let mut specs = Vec::new();
+        for (ci, &class) in Priority::ALL.iter().enumerate() {
+            for _ in 0..counts[ci] {
+                let id = specs.len();
+                specs.push(
+                    QuerySpec::new(id, "w", vec![uniform_phase(&m, 0.5, 1e6)], 0.0)
+                        .with_priority(class),
+                );
+            }
+        }
+        let weights = ShareWeights { interactive: wi, standard: ws, batch: wb };
+        let rep = sim.run_admitted(&specs, Admission::unlimited().with_weights(weights));
+        assert!(rep.timings.iter().all(|t| t.completed()), "seed {seed}");
+        // Closed form for the heaviest class's completion time.
+        let denom = (counts[0] as f64 * wi + counts[1] as f64 * ws + counts[2] as f64 * wb)
+            * drain_ns;
+        let expect_int_ns = denom / wi;
+        let got_int_s = rep.class_mean_latency_s(Priority::Interactive);
+        assert!(
+            (got_int_s * 1e9 - expect_int_ns).abs() / expect_int_ns < 0.02,
+            "seed {seed}: interactive latency {got_int_s}s vs closed form {expect_int_ns}ns \
+             (weights {wi}:{ws}:{wb}, counts {counts:?})"
+        );
+        // Realized service orders inversely to the weights, strictly.
+        let mean = |p: Priority| rep.class_mean_latency_s(p);
+        assert!(
+            mean(Priority::Interactive) < mean(Priority::Standard)
+                && mean(Priority::Standard) < mean(Priority::Batch),
+            "seed {seed}: means must order by weight: {} / {} / {}",
+            mean(Priority::Interactive),
+            mean(Priority::Standard),
+            mean(Priority::Batch)
+        );
+    }
+}
+
+/// Preemption keeps every invariant admission already had: dispositions
+/// still partition the batch, parked work always resumes and completes,
+/// only victim-class queries are ever parked, and the byte ledger's
+/// high-water mark respects the budget throughout.
+#[test]
+fn prop_preemption_preserves_partition_and_ledger_bounds() {
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x9A2E);
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let nq = 2 + rng.gen_range(14) as usize;
+        let byte_cap = 120u64;
+        let specs: Vec<QuerySpec> = (0..nq)
+            .map(|id| {
+                let phases = (0..1 + rng.gen_range(3) as usize)
+                    .map(|_| {
+                        uniform_phase(&m, 0.2 + rng.next_f64() * 0.4, 2e5 + rng.next_f64() * 8e5)
+                    })
+                    .collect();
+                let mut q = QuerySpec::new(id, "p", phases, rng.next_f64() * 2e6)
+                    .with_ctx_bytes(20 + rng.gen_range(60))
+                    .with_priority(match rng.gen_range(3) {
+                        0 => Priority::Interactive,
+                        1 => Priority::Standard,
+                        _ => Priority::Batch,
+                    });
+                if rng.gen_range(3) == 0 {
+                    q = q.with_deadline_ns(rng.next_f64() * 5e6);
+                }
+                q
+            })
+            .collect();
+        let adm = Admission::byte_budget(byte_cap, OnFull::Queue)
+            .with_preempt(PreemptPolicy::default());
+        let rep = sim.run_admitted(&specs, adm);
+        let done = rep.timings.iter().filter(|t| t.completed()).count();
+        assert_eq!(
+            done + rep.rejected.len() + rep.shed.len(),
+            nq,
+            "seed {seed}: dispositions must partition"
+        );
+        assert!(rep.peak_ctx_bytes <= byte_cap, "seed {seed}");
+        assert_eq!(rep.parks, rep.resumes, "seed {seed}: every park must resume");
+        for &id in &rep.preempted {
+            assert!(rep.timings[id].completed(), "seed {seed}: parked work must complete");
+            assert_eq!(
+                specs[id].priority,
+                Priority::Batch,
+                "seed {seed}: only the victim class may be parked"
+            );
+        }
+        assert!(rep.mean_latency_s().is_finite(), "seed {seed}");
     }
 }
 
