@@ -16,7 +16,8 @@
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
-    GraphService, PreemptPolicy, PriorityMix, ServiceConfig, ShareWeights, WorkloadSpec,
+    GraphService, MutationConfig, PreemptPolicy, PriorityMix, ServiceConfig, ShareWeights,
+    WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::rmat::Rmat;
@@ -98,7 +99,31 @@ fn main() -> anyhow::Result<()> {
         priority_mix: Some(PriorityMix { interactive: 0.2, standard: 0.6, batch: 0.2 }),
         weights: ShareWeights::priority_weighted(),
         preempt: Some(PreemptPolicy::default()),
+        mutation: None,
         seed: 0x5E21,
+    };
+    let rep = service.serve(&cfg)?;
+    println!("{}", indent(&rep.summary()));
+
+    // Live graph: edges stream in while the service runs. Update batches
+    // are Batch-class work sharing channel bandwidth with queries; each
+    // query pins the epoch current at its admission, and the store
+    // compacts drained overlays back into a flat base (the summary's
+    // mutation line shows epochs / compactions / update throughput).
+    println!("moderate load with live edge ingest (serve --mutate):");
+    let cfg = ServiceConfig {
+        queries: 300,
+        arrival_rate_per_s: 1000.0,
+        workload: WorkloadSpec::four_class(),
+        on_full: OnFull::Queue,
+        mutation: Some(MutationConfig {
+            rate_batches_per_s: 250.0,
+            batch: 64,
+            delete_fraction: 0.1,
+            compact_every: 4,
+        }),
+        seed: 0x5E21,
+        ..Default::default()
     };
     let rep = service.serve(&cfg)?;
     println!("{}", indent(&rep.summary()));

@@ -66,6 +66,30 @@ fn gate_specs(m: &Machine) -> Vec<QuerySpec> {
         .collect()
 }
 
+/// The mixed query+mutation gate scenario (DESIGN.md §Mutation): the 48
+/// gate queries plus 8 ingest batches of the same uniform shape, all
+/// Batch-class (the mutation lane's admission class), all at t=0 —
+/// mutation traffic competing for the same channels inside the same
+/// engine. Aggregate demand 28x capacity; every completion time is
+/// closed-form (the per-query channel drain is 0.5e6 ns and the solo time
+/// cancels):
+///
+/// * flat: all 56 specs share equally and finish together at
+///   `56 x 0.5e6 ns` — mean latency 0.028 s;
+/// * weighted 4:2:1 (class weight sums 64/32/24): Interactive finishes at
+///   15e6 ns (0.015 s); Standard at 22e6; the Batch pool — 16 queries + 8
+///   mutation batches — at 28e6, so the mutate-lane mean is 0.028 s.
+fn mutation_gate_specs(m: &Machine) -> Vec<QuerySpec> {
+    let mut specs = gate_specs(m);
+    for i in 0..8 {
+        let phase = PhaseDemand::uniform_channel_load(m, 0.5, 1e6);
+        specs.push(
+            QuerySpec::new(48 + i, "mutate", vec![phase], 0.0).with_priority(Priority::Batch),
+        );
+    }
+    specs
+}
+
 /// Deterministic gate metrics with fluid-model closed forms (per-channel
 /// drain is `0.5e6 ns` per query, and the solo time cancels out of every
 /// completion time):
@@ -85,12 +109,42 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         &specs,
         Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
     );
+    // Mixed query+mutation scenario (see [`mutation_gate_specs`]).
+    let mspecs = mutation_gate_specs(&m);
+    let mflat = sim.run_admitted(&mspecs, Admission::unlimited());
+    let mweighted = sim.run_admitted(
+        &mspecs,
+        Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
+    );
+    // Guard the gate's own validity: the closed forms assume every spec
+    // completes. label/class means return 0.0 when nothing completed,
+    // which the relative check would wave through as an "improvement" —
+    // fail loudly here instead.
+    for (name, rep) in [("mixed_mutation/flat", &mflat), ("mixed_mutation/weighted", &mweighted)]
+    {
+        let done = rep.timings.iter().filter(|t| t.completed()).count();
+        assert_eq!(done, mspecs.len(), "{name}: every gate spec must complete");
+        assert_eq!(
+            rep.label_latencies_s("mutate").len(),
+            8,
+            "{name}: the mutate lane must complete"
+        );
+    }
     vec![
         ("mixed/unweighted/mean_latency_s", flat.mean_latency_s()),
         ("mixed/weighted/mean_latency_s", weighted.mean_latency_s()),
         (
             "mixed/weighted/interactive_mean_latency_s",
             weighted.class_mean_latency_s(Priority::Interactive),
+        ),
+        ("mixed_mutation/unweighted/mean_latency_s", mflat.mean_latency_s()),
+        (
+            "mixed_mutation/weighted/interactive_mean_latency_s",
+            mweighted.class_mean_latency_s(Priority::Interactive),
+        ),
+        (
+            "mixed_mutation/weighted/mutate_mean_latency_s",
+            mweighted.label_mean_latency_s("mutate"),
         ),
     ]
 }
@@ -134,6 +188,22 @@ fn run_gate(bench: &Bench) -> bool {
         .get_opt("tolerance_pct")
         .and_then(|j| j.as_f64().ok())
         .unwrap_or(20.0);
+    // Fast-path regression guard: metrics listed in `strict_metrics` must
+    // be UNCHANGED (to `strict_tolerance_pct`, both directions) — these
+    // are the no-mutation scenario's closed forms, pinned so the mutation
+    // subsystem's zero-overhead fast path cannot drift (DESIGN.md
+    // §Mutation).
+    let strict_tol = base
+        .get_opt("strict_tolerance_pct")
+        .and_then(|j| j.as_f64().ok())
+        .unwrap_or(0.01);
+    let strict: Vec<String> = base
+        .get_opt("strict_metrics")
+        .and_then(|j| j.as_arr().ok().map(|xs| xs.to_vec()))
+        .unwrap_or_default()
+        .iter()
+        .filter_map(|j| j.as_str().ok().map(String::from))
+        .collect();
     let expect = match base.get("metrics") {
         Ok(Json::Obj(map)) => map.clone(),
         _ => panic!("baseline {base_path} has no metrics object"),
@@ -148,7 +218,16 @@ fn run_gate(bench: &Bench) -> bool {
             }
             Some(&(_, got)) => {
                 let delta_pct = (got - want) / want * 100.0;
-                if delta_pct > tol {
+                if strict.iter().any(|s| s == k) {
+                    if delta_pct.abs() > strict_tol {
+                        eprintln!(
+                            "bench-gate: STRICT metric {k} moved {delta_pct:+.4}% \
+                             ({want:.9} -> {got:.9}) — the no-mutation fast path \
+                             must stay bit-stable (tolerance {strict_tol}%)"
+                        );
+                        ok = false;
+                    }
+                } else if delta_pct > tol {
                     eprintln!(
                         "bench-gate: {k} regressed {delta_pct:.1}% \
                          ({want:.6} -> {got:.6}), tolerance {tol}%"
@@ -164,7 +243,11 @@ fn run_gate(bench: &Bench) -> bool {
         }
     }
     if ok {
-        println!("bench-gate: all metrics within {tol}% of {base_path}");
+        println!(
+            "bench-gate: all metrics within {tol}% of {base_path} \
+             ({} strict fast-path metrics within {strict_tol}%)",
+            strict.len()
+        );
     }
     ok
 }

@@ -49,7 +49,7 @@ fn main() {
     });
     bench.run("cc-demand/recompute x8", || {
         (0..8)
-            .map(|i| black_box(Cc.phases(&g, &m, i)))
+            .map(|i| black_box(Cc.phases(g.view(), &m, i)))
             .collect::<Vec<_>>()
     });
 

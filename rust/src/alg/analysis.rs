@@ -25,12 +25,17 @@
 //!   thread-context footprint, which admission accounting sums instead of
 //!   assuming the machine's per-query reservation.
 
-use crate::graph::csr::Csr;
+use crate::graph::view::GraphView;
 use crate::sim::demand::PhaseDemand;
 use crate::sim::machine::Machine;
 
 /// One schedulable graph analysis (see module docs). Object safe: the
 /// coordinator holds `Arc<dyn Analysis>`.
+///
+/// All reads go through [`GraphView`] (DESIGN.md §Mutation): a query runs
+/// against the epoch snapshot it pinned at admission — a bare CSR is just
+/// the no-overlay fast path (`Csr::view()` / `(&csr).into()`), bit-identical
+/// to reading the CSR directly.
 pub trait Analysis: std::fmt::Debug + Send + Sync {
     /// Class label ("bfs", "cc", "sssp", "khop", ...). Everything
     /// per-class — metrics quantiles, demand-cache keys, workload specs —
@@ -46,33 +51,35 @@ pub trait Analysis: std::fmt::Debug + Send + Sync {
     /// values and the per-phase demand vectors. `stripe_offset` is the
     /// query's own-array placement offset (usually its index within the
     /// batch — see [`crate::alg::bfs::bfs_run_offset`]).
-    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput;
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput;
 
-    /// Check a functional result against this analysis's host oracle.
-    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()>;
+    /// Check a functional result against this analysis's host oracle,
+    /// evaluated on the same snapshot the result was computed from.
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()>;
 
     /// Per-query thread-context memory reservation (bytes, whole machine),
     /// or `None` to use the machine's default per-query footprint.
-    fn ctx_mem_bytes(&self, g: &Csr) -> Option<u64> {
+    fn ctx_mem_bytes(&self, g: GraphView<'_>) -> Option<u64> {
         let _ = g;
         None
     }
 
     /// If `Some(key)`, this instance's demand at stripe offset 0 is
-    /// identical to every other instance returning the same key (no
-    /// per-query parameter affects demand), so the coordinator may compute
-    /// it once and rotate channels per concurrent instance.
+    /// identical to every other instance returning the same key *on the
+    /// same epoch* (no per-query parameter affects demand), so the
+    /// coordinator may compute it once per key+epoch and rotate channels
+    /// per concurrent instance.
     fn cacheable_demand(&self) -> Option<String> {
         None
     }
 
     /// [`Analysis::run_offset`] at the canonical placement.
-    fn run(&self, g: &Csr, m: &Machine) -> QueryOutput {
+    fn run(&self, g: GraphView<'_>, m: &Machine) -> QueryOutput {
         self.run_offset(g, m, 0)
     }
 
     /// Demand phases only (skips retaining the value vector).
-    fn phases(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> Vec<PhaseDemand> {
+    fn phases(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> Vec<PhaseDemand> {
         self.run_offset(g, m, stripe_offset).phases
     }
 }
@@ -106,6 +113,7 @@ mod tests {
     use crate::config::machine::MachineConfig;
     use crate::config::workload::GraphConfig;
     use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
     use crate::graph::rmat::Rmat;
     use std::sync::Arc;
 
@@ -132,8 +140,8 @@ mod tests {
         let g = rmat10();
         let m = m8();
         for a in all_analyses() {
-            let out = a.run(&g, &m);
-            a.validate(&g, &out.values)
+            let out = a.run(g.view(), &m);
+            a.validate(g.view(), &out.values)
                 .unwrap_or_else(|e| panic!("{}: {e}", a.describe()));
             assert_eq!(out.label, a.label());
             assert!(!out.phases.is_empty(), "{}", a.label());
@@ -164,9 +172,43 @@ mod tests {
         let g = rmat10();
         let m = m8();
         for a in all_analyses() {
-            let mut out = a.run(&g, &m);
+            let mut out = a.run(g.view(), &m);
             out.values[10] = 999_999;
-            assert!(a.validate(&g, &out.values).is_err(), "{}", a.label());
+            assert!(a.validate(g.view(), &out.values).is_err(), "{}", a.label());
+        }
+    }
+
+    /// Mutation (DESIGN.md §Mutation): every builtin analysis runs — and
+    /// validates against its oracle — on an *overlaid* snapshot exactly as
+    /// on a flat one, and agrees with running on the materialized CSR.
+    #[test]
+    fn every_builtin_analysis_validates_on_an_overlaid_view() {
+        use crate::graph::store::GraphStore;
+        use crate::graph::delta::EdgeUpdate;
+
+        let g = rmat10();
+        let m = m8();
+        let mut store = GraphStore::new(&g);
+        store.apply_batch(&[
+            EdgeUpdate::insert(3, 700),
+            EdgeUpdate::insert(3, 900),
+            EdgeUpdate::delete(3, g.neighbors(3).first().copied().unwrap_or(0)),
+        ]);
+        store.apply_batch(&[EdgeUpdate::insert(700, 900)]);
+        let view = store.view();
+        let flat = view.to_csr();
+        for a in all_analyses() {
+            let out = a.run(view, &m);
+            a.validate(view, &out.values)
+                .unwrap_or_else(|e| panic!("{} on overlay: {e}", a.describe()));
+            let flat_out = a.run(flat.view(), &m);
+            assert_eq!(out.values, flat_out.values, "{}: overlay vs materialized", a.label());
+            assert_eq!(
+                out.phases.len(),
+                flat_out.phases.len(),
+                "{}: demand phase structure must match",
+                a.label()
+            );
         }
     }
 }

@@ -26,7 +26,7 @@
 
 use crate::alg::analysis::{Analysis, QueryOutput};
 use crate::alg::oracle;
-use crate::graph::csr::Csr;
+use crate::graph::view::{GraphView, NeighborScratch};
 use crate::sim::demand::{DemandBuilder, PhaseDemand};
 use crate::sim::machine::Machine;
 
@@ -47,12 +47,12 @@ impl Analysis for Bfs {
         format!("bfs(src={})", self.src)
     }
 
-    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
         let run = bfs_run_offset(g, m, self.src, stripe_offset);
         QueryOutput { label: self.label(), values: run.levels, phases: run.phases }
     }
 
-    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
         oracle::check_bfs(g, self.src, values)
     }
 }
@@ -79,8 +79,10 @@ impl BfsRun {
 
 /// Run BFS from `src` on machine `m`, producing levels + per-level demand.
 ///
-/// Equivalent to [`bfs_run_offset`] with stripe offset 0.
-pub fn bfs_run(g: &Csr, m: &Machine, src: u32) -> BfsRun {
+/// Equivalent to [`bfs_run_offset`] with stripe offset 0. Accepts any
+/// graph read source: a `&Csr` (the flat fast path) or a [`GraphView`]
+/// snapshot at an arbitrary epoch.
+pub fn bfs_run<'a>(g: impl Into<GraphView<'a>>, m: &Machine, src: u32) -> BfsRun {
     bfs_run_offset(g, m, src, 0)
 }
 
@@ -93,7 +95,12 @@ pub fn bfs_run(g: &Csr, m: &Machine, src: u32) -> BfsRun {
 /// load imbalance floor stays (it limits the solo time), but concurrent
 /// queries spread across channels instead of all serializing on one. The
 /// coordinator passes each query's index as the offset.
-pub fn bfs_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> BfsRun {
+pub fn bfs_run_offset<'a>(
+    g: impl Into<GraphView<'a>>,
+    m: &Machine,
+    src: u32,
+    stripe_offset: usize,
+) -> BfsRun {
     bfs_run_capped(g, m, src, stripe_offset, None)
 }
 
@@ -101,13 +108,14 @@ pub fn bfs_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> B
 /// hop-bounded [`crate::alg::khop`] query (`Some(k)`: levels 0..k-1
 /// expand, level-k vertices are discovered but not expanded). One
 /// implementation so the demand model cannot diverge between the two.
-pub fn bfs_run_capped(
-    g: &Csr,
+pub fn bfs_run_capped<'a>(
+    g: impl Into<GraphView<'a>>,
     m: &Machine,
     src: u32,
     stripe_offset: usize,
     max_depth: Option<u32>,
 ) -> BfsRun {
+    let g: GraphView<'a> = g.into();
     let layout = m.layout;
     let nodes = m.nodes();
     let channels = m.cfg.channels_per_node;
@@ -122,6 +130,7 @@ pub fn bfs_run_capped(
     let mut phases = Vec::new();
     let mut frontier_sizes = Vec::new();
     let mut level_edges = Vec::new();
+    let mut scratch = NeighborScratch::default();
 
     while !frontier.is_empty() && max_depth.is_none_or(|k| (depth as u32) < k) {
         let mut b = DemandBuilder::new(nodes, channels);
@@ -138,12 +147,13 @@ pub fn bfs_run_capped(
             // Vertex record read (local dedup of last level's writes).
             b.channel_op(un, layout.channel_of(u), 1.0);
             ops += 1.0;
+            let nbrs = g.neighbors(u, &mut scratch);
+            let deg = nbrs.len();
             // Edge block stream (co-located with the vertex, §IV-A).
-            b.stream_bytes(un, g.edge_block_bytes(u) as f64);
-            let deg = g.degree(u);
+            b.stream_bytes(un, GraphView::edge_block_bytes_for(deg) as f64);
             edges_scanned += deg;
             b.instructions(un, deg as f64 * cfg.instr_per_edge);
-            for &v in g.neighbors(u) {
+            for &v in nbrs {
                 // Unconditional remote write of level/parent at v's home
                 // (checking first would migrate; §III trades the check for
                 // a write). The write lands in THIS query's own array, so
@@ -180,9 +190,10 @@ mod tests {
     use super::*;
     use crate::alg::oracle;
     use crate::config::machine::MachineConfig;
-    use crate::graph::builder::build_undirected_csr;
-    use crate::graph::rmat::Rmat;
     use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
+    use crate::graph::rmat::Rmat;
 
     fn m8() -> Machine {
         Machine::new(MachineConfig::pathfinder_8())

@@ -28,7 +28,7 @@
 
 use crate::alg::analysis::{Analysis, QueryOutput};
 use crate::alg::oracle;
-use crate::graph::csr::Csr;
+use crate::graph::view::{GraphView, NeighborScratch};
 use crate::sim::demand::{DemandBuilder, PhaseDemand};
 use crate::sim::machine::Machine;
 
@@ -43,12 +43,12 @@ impl Analysis for Cc {
         "cc"
     }
 
-    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
         let run = cc_run_offset(g, m, stripe_offset);
         QueryOutput { label: self.label(), values: run.labels, phases: run.phases }
     }
 
-    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
         oracle::check_cc(g, values)
     }
 
@@ -80,21 +80,23 @@ impl CcRun {
 const CHECK_INSTR_PER_VERTEX: f64 = 8.0;
 
 /// Run Figure-2 connected components on machine `m` (stripe offset 0).
-pub fn cc_run(g: &Csr, m: &Machine) -> CcRun {
+pub fn cc_run<'a>(g: impl Into<GraphView<'a>>, m: &Machine) -> CcRun {
     cc_run_offset(g, m, 0)
 }
 
 /// Run connected components with an explicit stripe offset for the query's
 /// own `C`/`pC` arrays (see [`crate::alg::bfs::bfs_run_offset`]: concurrent
 /// queries' label traffic spreads across channels instead of stacking on
-/// the canonical placement).
-pub fn cc_run_offset(g: &Csr, m: &Machine, stripe_offset: usize) -> CcRun {
+/// the canonical placement). Accepts a `&Csr` or any epoch's [`GraphView`].
+pub fn cc_run_offset<'a>(g: impl Into<GraphView<'a>>, m: &Machine, stripe_offset: usize) -> CcRun {
+    let g: GraphView<'a> = g.into();
     let layout = m.layout;
     let nodes = m.nodes();
     let channels = m.cfg.channels_per_node;
     let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
     let cfg = &m.cfg;
     let n = g.n();
+    let mut scratch = NeighborScratch::default();
 
     let mut labels: Vec<i64> = (0..n as i64).collect();
     let mut phases = Vec::new();
@@ -112,11 +114,12 @@ pub fn cc_run_offset(g: &Csr, m: &Machine, stripe_offset: usize) -> CcRun {
             b.instructions(un, cfg.spawn_instr);
             b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0); // read C[u]
             ops += 1.0;
-            b.stream_bytes(un, g.edge_block_bytes(u) as f64);
-            let deg = g.degree(u);
+            let nbrs = g.neighbors(u, &mut scratch);
+            let deg = nbrs.len();
+            b.stream_bytes(un, GraphView::edge_block_bytes_for(deg) as f64);
             b.instructions(un, deg as f64 * cfg.instr_per_edge);
             let lu = labels[u as usize];
-            for &v in g.neighbors(u) {
+            for &v in nbrs {
                 let vn = layout.node_of(v);
                 b.msp_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
                 ops += 1.0;
@@ -199,6 +202,7 @@ mod tests {
     use crate::config::machine::MachineConfig;
     use crate::config::workload::GraphConfig;
     use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
     use crate::graph::rmat::Rmat;
 
     fn m8() -> Machine {

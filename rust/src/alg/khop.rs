@@ -12,7 +12,7 @@
 
 use crate::alg::analysis::{Analysis, QueryOutput};
 use crate::alg::oracle;
-use crate::graph::csr::Csr;
+use crate::graph::view::GraphView;
 use crate::sim::demand::PhaseDemand;
 use crate::sim::machine::Machine;
 
@@ -41,12 +41,12 @@ impl Analysis for KHop {
         format!("khop(src={},k={})", self.src, self.k)
     }
 
-    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
         let run = khop_run_offset(g, m, self.src, self.k, stripe_offset);
         QueryOutput { label: self.label(), values: run.levels, phases: run.phases }
     }
 
-    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
         oracle::check_khop(g, self.src, self.k, values)
     }
 }
@@ -63,7 +63,7 @@ pub struct KhopRun {
 }
 
 /// Run a k-hop traversal at the canonical placement.
-pub fn khop_run(g: &Csr, m: &Machine, src: u32, k: u32) -> KhopRun {
+pub fn khop_run<'a>(g: impl Into<GraphView<'a>>, m: &Machine, src: u32, k: u32) -> KhopRun {
     khop_run_offset(g, m, src, k, 0)
 }
 
@@ -72,8 +72,8 @@ pub fn khop_run(g: &Csr, m: &Machine, src: u32, k: u32) -> KhopRun {
 /// the shared depth-capped BFS core
 /// ([`crate::alg::bfs::bfs_run_capped`]), so the demand model is exactly
 /// the expanded BFS levels'.
-pub fn khop_run_offset(
-    g: &Csr,
+pub fn khop_run_offset<'a>(
+    g: impl Into<GraphView<'a>>,
     m: &Machine,
     src: u32,
     k: u32,
@@ -91,6 +91,7 @@ mod tests {
     use crate::config::machine::MachineConfig;
     use crate::config::workload::GraphConfig;
     use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
     use crate::graph::rmat::Rmat;
 
     fn m8() -> Machine {

@@ -5,21 +5,29 @@
 //! implementation: plain queue BFS, union-find connected components,
 //! binary-heap Dijkstra (over the synthesized [`crate::alg::sssp`]
 //! weights), and truncated-BFS k-hop levels.
+//!
+//! All oracles read through [`GraphView`], so a result computed on a
+//! pinned epoch snapshot is checked against an oracle run on *that exact
+//! edge set* — the snapshot-isolation contract of DESIGN.md §Mutation.
+//! A plain `&Csr` converts to the no-overlay fast path, so existing call
+//! sites are unchanged.
 
-use crate::graph::csr::Csr;
+use crate::graph::view::{GraphView, NeighborScratch};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
 
 /// Plain FIFO breadth-first search. Returns per-vertex levels, -1 where
 /// unreachable from `src`.
-pub fn bfs_levels(g: &Csr, src: u32) -> Vec<i64> {
+pub fn bfs_levels<'a>(g: impl Into<GraphView<'a>>, src: u32) -> Vec<i64> {
+    let g: GraphView<'a> = g.into();
+    let mut scratch = NeighborScratch::default();
     let mut levels = vec![-1i64; g.n()];
     levels[src as usize] = 0;
     let mut q = VecDeque::new();
     q.push_back(src);
     while let Some(u) = q.pop_front() {
         let next = levels[u as usize] + 1;
-        for &v in g.neighbors(u) {
+        for &v in g.neighbors(u, &mut scratch) {
             if levels[v as usize] == -1 {
                 levels[v as usize] = next;
                 q.push_back(v);
@@ -32,7 +40,8 @@ pub fn bfs_levels(g: &Csr, src: u32) -> Vec<i64> {
 /// Union-find with path halving + union by label minimum: every vertex ends
 /// labeled with the smallest vertex id of its component (the same labeling
 /// Shiloach-Vishkin with min-hooks converges to).
-pub fn cc_labels(g: &Csr) -> Vec<i64> {
+pub fn cc_labels<'a>(g: impl Into<GraphView<'a>>) -> Vec<i64> {
+    let g: GraphView<'a> = g.into();
     let n = g.n();
     let mut parent: Vec<u32> = (0..n as u32).collect();
 
@@ -44,13 +53,16 @@ pub fn cc_labels(g: &Csr) -> Vec<i64> {
         x
     }
 
-    for (u, v) in g.edges() {
-        let ru = find(&mut parent, u);
-        let rv = find(&mut parent, v);
-        if ru != rv {
-            // Union by minimum label so roots are component minima.
-            let (lo, hi) = if ru < rv { (ru, rv) } else { (rv, ru) };
-            parent[hi as usize] = lo;
+    let mut scratch = NeighborScratch::default();
+    for u in 0..n as u32 {
+        for &v in g.neighbors(u, &mut scratch) {
+            let ru = find(&mut parent, u);
+            let rv = find(&mut parent, v);
+            if ru != rv {
+                // Union by minimum label so roots are component minima.
+                let (lo, hi) = if ru < rv { (ru, rv) } else { (rv, ru) };
+                parent[hi as usize] = lo;
+            }
         }
     }
     (0..n as u32).map(|v| find(&mut parent, v) as i64).collect()
@@ -66,7 +78,8 @@ pub fn component_count(labels: &[i64]) -> usize {
 
 /// Check that `levels` is a valid BFS level assignment from `src`:
 /// reachable vertices get the true shortest unweighted distance.
-pub fn check_bfs(g: &Csr, src: u32, levels: &[i64]) -> anyhow::Result<()> {
+pub fn check_bfs<'a>(g: impl Into<GraphView<'a>>, src: u32, levels: &[i64]) -> anyhow::Result<()> {
+    let g: GraphView<'a> = g.into();
     anyhow::ensure!(levels.len() == g.n(), "levels length mismatch");
     let truth = bfs_levels(g, src);
     for v in 0..g.n() {
@@ -83,17 +96,19 @@ pub fn check_bfs(g: &Csr, src: u32, levels: &[i64]) -> anyhow::Result<()> {
 /// Plain binary-heap Dijkstra over the synthesized edge weights
 /// ([`crate::alg::sssp::edge_weight`]). Returns per-vertex shortest
 /// distances, -1 where unreachable from `src`.
-pub fn sssp_dist(g: &Csr, src: u32) -> Vec<i64> {
+pub fn sssp_dist<'a>(g: impl Into<GraphView<'a>>, src: u32) -> Vec<i64> {
+    let g: GraphView<'a> = g.into();
     let n = g.n();
     let mut dist = vec![i64::MAX; n];
     dist[src as usize] = 0;
     let mut heap = BinaryHeap::new();
     heap.push(Reverse((0i64, src)));
+    let mut scratch = NeighborScratch::default();
     while let Some(Reverse((d, u))) = heap.pop() {
         if d > dist[u as usize] {
             continue; // stale heap entry
         }
-        for &v in g.neighbors(u) {
+        for &v in g.neighbors(u, &mut scratch) {
             let nd = d + crate::alg::sssp::edge_weight(u, v) as i64;
             if nd < dist[v as usize] {
                 dist[v as usize] = nd;
@@ -105,7 +120,7 @@ pub fn sssp_dist(g: &Csr, src: u32) -> Vec<i64> {
 }
 
 /// K-hop truth: BFS levels truncated at `k` (deeper vertices become -1).
-pub fn khop_levels(g: &Csr, src: u32, k: u32) -> Vec<i64> {
+pub fn khop_levels<'a>(g: impl Into<GraphView<'a>>, src: u32, k: u32) -> Vec<i64> {
     bfs_levels(g, src)
         .into_iter()
         .map(|l| if l >= 0 && l <= k as i64 { l } else { -1 })
@@ -113,7 +128,8 @@ pub fn khop_levels(g: &Csr, src: u32, k: u32) -> Vec<i64> {
 }
 
 /// Check that `dist` equals Dijkstra's distances from `src`.
-pub fn check_sssp(g: &Csr, src: u32, dist: &[i64]) -> anyhow::Result<()> {
+pub fn check_sssp<'a>(g: impl Into<GraphView<'a>>, src: u32, dist: &[i64]) -> anyhow::Result<()> {
+    let g: GraphView<'a> = g.into();
     anyhow::ensure!(dist.len() == g.n(), "dist length mismatch");
     let truth = sssp_dist(g, src);
     for v in 0..g.n() {
@@ -128,7 +144,13 @@ pub fn check_sssp(g: &Csr, src: u32, dist: &[i64]) -> anyhow::Result<()> {
 }
 
 /// Check that `levels` is the k-hop truncation of the BFS levels.
-pub fn check_khop(g: &Csr, src: u32, k: u32, levels: &[i64]) -> anyhow::Result<()> {
+pub fn check_khop<'a>(
+    g: impl Into<GraphView<'a>>,
+    src: u32,
+    k: u32,
+    levels: &[i64],
+) -> anyhow::Result<()> {
+    let g: GraphView<'a> = g.into();
     anyhow::ensure!(levels.len() == g.n(), "levels length mismatch");
     let truth = khop_levels(g, src, k);
     for v in 0..g.n() {
@@ -143,7 +165,8 @@ pub fn check_khop(g: &Csr, src: u32, k: u32, levels: &[i64]) -> anyhow::Result<(
 }
 
 /// Check that `labels` equals the union-find component-minimum labeling.
-pub fn check_cc(g: &Csr, labels: &[i64]) -> anyhow::Result<()> {
+pub fn check_cc<'a>(g: impl Into<GraphView<'a>>, labels: &[i64]) -> anyhow::Result<()> {
+    let g: GraphView<'a> = g.into();
     anyhow::ensure!(labels.len() == g.n(), "labels length mismatch");
     let truth = cc_labels(g);
     for v in 0..g.n() {
@@ -161,6 +184,9 @@ pub fn check_cc(g: &Csr, labels: &[i64]) -> anyhow::Result<()> {
 mod tests {
     use super::*;
     use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
+    use crate::graph::delta::DeltaOverlay;
+    use std::sync::Arc;
 
     fn diamond() -> Csr {
         // 0-1, 0-2, 1-3, 2-3: two equal-length paths to 3.
@@ -237,5 +263,18 @@ mod tests {
         let mut bad = labels;
         bad[0] = 2;
         assert!(check_cc(&g, &bad).is_err());
+    }
+
+    /// Oracles evaluate the exact overlaid edge set, not the base's.
+    #[test]
+    fn oracles_respect_overlays() {
+        let g = diamond();
+        // Delete both edges into 3, insert 0-3 directly.
+        let ov = [Arc::new(DeltaOverlay::from_effective(&[(0, 3)], &[(1, 3), (2, 3)]))];
+        let v = crate::graph::view::GraphView::overlaid(&g, &ov);
+        assert_eq!(bfs_levels(v, 0), vec![0, 1, 1, 1]);
+        let base_levels = bfs_levels(&g, 0);
+        assert!(check_bfs(v, 0, &base_levels).is_err(), "base result must fail on the new epoch");
+        assert_eq!(cc_labels(v), vec![0, 0, 0, 0]);
     }
 }

@@ -23,7 +23,7 @@
 
 use crate::alg::analysis::{Analysis, QueryOutput};
 use crate::alg::oracle;
-use crate::graph::csr::Csr;
+use crate::graph::view::{GraphView, NeighborScratch};
 use crate::sim::demand::{DemandBuilder, PhaseDemand};
 use crate::sim::machine::Machine;
 use std::collections::BTreeMap;
@@ -64,12 +64,12 @@ impl Analysis for Sssp {
         format!("sssp(src={})", self.src)
     }
 
-    fn run_offset(&self, g: &Csr, m: &Machine, stripe_offset: usize) -> QueryOutput {
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
         let run = sssp_run_offset(g, m, self.src, stripe_offset);
         QueryOutput { label: self.label(), values: run.dist, phases: run.phases }
     }
 
-    fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
         oracle::check_sssp(g, self.src, values)
     }
 }
@@ -89,19 +89,27 @@ pub struct SsspRun {
 }
 
 /// Run delta-stepping from `src` at the canonical placement.
-pub fn sssp_run(g: &Csr, m: &Machine, src: u32) -> SsspRun {
+pub fn sssp_run<'a>(g: impl Into<GraphView<'a>>, m: &Machine, src: u32) -> SsspRun {
     sssp_run_offset(g, m, src, 0)
 }
 
 /// Run delta-stepping with an explicit stripe offset for the query's own
-/// distance array (see [`crate::alg::bfs::bfs_run_offset`]).
-pub fn sssp_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> SsspRun {
+/// distance array (see [`crate::alg::bfs::bfs_run_offset`]). Accepts a
+/// `&Csr` or any epoch's [`GraphView`].
+pub fn sssp_run_offset<'a>(
+    g: impl Into<GraphView<'a>>,
+    m: &Machine,
+    src: u32,
+    stripe_offset: usize,
+) -> SsspRun {
+    let g: GraphView<'a> = g.into();
     let layout = m.layout;
     let nodes = m.nodes();
     let channels = m.cfg.channels_per_node;
     let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
     let cfg = &m.cfg;
     let n = g.n();
+    let mut scratch = NeighborScratch::default();
 
     const UNREACHED: i64 = i64::MAX;
     let mut dist = vec![UNREACHED; n];
@@ -148,11 +156,12 @@ pub fn sssp_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> 
                 // Own distance record read.
                 b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0);
                 ops += 1.0;
+                let nbrs = g.neighbors(u, &mut scratch);
                 // Edge block stream (co-located with the vertex, §IV-A).
-                b.stream_bytes(un, g.edge_block_bytes(u) as f64);
-                b.instructions(un, g.degree(u) as f64 * cfg.instr_per_edge);
+                b.stream_bytes(un, GraphView::edge_block_bytes_for(nbrs.len()) as f64);
+                b.instructions(un, nbrs.len() as f64 * cfg.instr_per_edge);
                 let du = dist[u as usize];
-                for &v in g.neighbors(u) {
+                for &v in nbrs {
                     let w = edge_weight(u, v);
                     if w > DELTA {
                         continue; // heavy edge: relaxed after the bucket drains
@@ -185,7 +194,8 @@ pub fn sssp_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> 
             let un = layout.node_of(u);
             let du = dist[u as usize];
             let mut touched = false;
-            for &v in g.neighbors(u) {
+            let nbrs = g.neighbors(u, &mut scratch);
+            for &v in nbrs {
                 let w = edge_weight(u, v);
                 if w <= DELTA {
                     continue;
@@ -193,7 +203,7 @@ pub fn sssp_run_offset(g: &Csr, m: &Machine, src: u32, stripe_offset: usize) -> 
                 if !touched {
                     // Re-visit u's record + edge block for the heavy pass.
                     b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0);
-                    b.stream_bytes(un, g.edge_block_bytes(u) as f64);
+                    b.stream_bytes(un, GraphView::edge_block_bytes_for(nbrs.len()) as f64);
                     ops += 1.0;
                     touched = true;
                 }
@@ -228,6 +238,7 @@ mod tests {
     use crate::config::machine::MachineConfig;
     use crate::config::workload::GraphConfig;
     use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
     use crate::graph::rmat::Rmat;
 
     fn m8() -> Machine {

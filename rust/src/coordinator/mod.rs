@@ -24,10 +24,15 @@
 //! * [`service`] — a long-running service facade: queries arrive over
 //!   (simulated) time from a declarative [`WorkloadSpec`], are admitted or
 //!   rejected, and per-class latency is tracked — what a web-accessible
-//!   graph database deployment of the Pathfinder would look like (§I).
+//!   graph database deployment of the Pathfinder would look like (§I);
+//! * [`mutation`] — the live-graph ingest lane (`serve --mutate`): update
+//!   batches advance the epoch store and compete for channel bandwidth as
+//!   Batch-class [`IngestBatch`] work, while queries pin the epoch current
+//!   at admission (DESIGN.md §Mutation).
 
 pub mod admission;
 pub mod metrics;
+pub mod mutation;
 pub mod planner;
 pub mod request;
 pub mod scheduler;
@@ -37,6 +42,7 @@ pub use admission::{ContextExhausted, ContextLedger};
 pub use crate::sim::flow::ShareWeights;
 pub use crate::sim::preempt::PreemptPolicy;
 pub use metrics::{ImprovementRow, Outcome, PriorityStats, QueryRecord, RunReport};
+pub use mutation::{IngestBatch, MutationConfig, MutationStats, MUTATE_LABEL};
 pub use planner::{arrival_times, bfs_queries, mix_queries};
 pub use request::{Priority, QueryRequest};
 pub use scheduler::{Coordinator, Policy};

@@ -1,0 +1,254 @@
+//! The mutation lane: streaming edge ingest served *alongside* queries
+//! (DESIGN.md §Mutation).
+//!
+//! `serve --mutate rate=R,batch=B` adds a Poisson stream of update batches
+//! to the service timeline. Each batch:
+//!
+//! 1. is generated reproducibly from the service seed's forked mutation
+//!    stream ([`crate::graph::delta::random_batch`]);
+//! 2. advances the [`crate::graph::store::GraphStore`] to a new epoch
+//!    (queries pin the epoch current at their admission);
+//! 3. becomes an [`IngestBatch`] request — a real [`Analysis`] labeled
+//!    `"mutate"` whose demand is the memory-side ingest model
+//!    ([`crate::sim::demand::PhaseDemand::ingest_batch`]) — submitted as
+//!    **Batch-class** work, so the existing ledger/weights/preemption
+//!    machinery admits, shares, parks and reports it like any other work.
+//!
+//! After the engine runs, the service replays completions against the
+//! store (unpinning each query's epoch at its finish time) and compacts
+//! whenever the drained overlay prefix reaches
+//! [`MutationConfig::compact_every`] — compaction never retires a pinned
+//! epoch, which the snapshot-isolation property tests pin down.
+
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::graph::delta::EdgeUpdate;
+use crate::graph::view::GraphView;
+use crate::sim::demand::PhaseDemand;
+use crate::sim::machine::Machine;
+use crate::util::stats::Quantiles;
+use std::sync::Arc;
+
+/// Configuration of the `serve --mutate` ingest lane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MutationConfig {
+    /// Mean update-batch arrival rate (batches/s of simulated time).
+    pub rate_batches_per_s: f64,
+    /// Updates per batch.
+    pub batch: usize,
+    /// Fraction of updates that delete a currently-present edge (the rest
+    /// insert random pairs).
+    pub delete_fraction: f64,
+    /// Compact once this many overlays are drained of pins.
+    pub compact_every: usize,
+}
+
+impl Default for MutationConfig {
+    fn default() -> Self {
+        MutationConfig {
+            rate_batches_per_s: 50.0,
+            batch: 64,
+            delete_fraction: 0.1,
+            compact_every: 4,
+        }
+    }
+}
+
+impl MutationConfig {
+    /// Parse `rate=R,batch=B[,delete=F][,compact=K]` (the CLI
+    /// `serve --mutate` argument). Omitted keys keep defaults.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut cfg = MutationConfig::default();
+        for (key, value) in crate::util::cli::parse_kv_f64_list(spec, "mutation spec")? {
+            match key {
+                "rate" => cfg.rate_batches_per_s = value,
+                "batch" => cfg.batch = value as usize,
+                "delete" => cfg.delete_fraction = value,
+                "compact" => cfg.compact_every = value as usize,
+                other => anyhow::bail!(
+                    "unknown mutation key {other:?} (want rate/batch/delete/compact)"
+                ),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.rate_batches_per_s.is_finite() && self.rate_batches_per_s > 0.0,
+            "mutation rate must be positive, got {}",
+            self.rate_batches_per_s
+        );
+        anyhow::ensure!(self.batch >= 1, "mutation batch size must be at least 1");
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.delete_fraction),
+            "delete fraction must be in [0, 1], got {}",
+            self.delete_fraction
+        );
+        anyhow::ensure!(self.compact_every >= 1, "compact threshold must be at least 1");
+        Ok(())
+    }
+
+    /// Compact `rate=..,batch=..` description for report headers.
+    pub fn label(&self) -> String {
+        format!(
+            "rate={},batch={},delete={},compact={}",
+            self.rate_batches_per_s, self.batch, self.delete_fraction, self.compact_every
+        )
+    }
+}
+
+/// One applied update batch as a schedulable [`Analysis`]: label
+/// `"mutate"`, no result values (nothing for an oracle to check — the
+/// snapshot-isolation tests validate the *store* instead), demand = the
+/// memory-side ingest model. Prepared like any query, admitted as
+/// Batch-class work, visible per class in every report.
+#[derive(Debug)]
+pub struct IngestBatch {
+    updates: Arc<Vec<EdgeUpdate>>,
+    /// Epoch this batch created in the store (for `describe`).
+    epoch: u64,
+}
+
+impl IngestBatch {
+    pub fn new(updates: Arc<Vec<EdgeUpdate>>, epoch: u64) -> Self {
+        IngestBatch { updates, epoch }
+    }
+
+    pub fn updates(&self) -> &[EdgeUpdate] {
+        &self.updates
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+}
+
+/// The class label every ingest batch reports under.
+pub const MUTATE_LABEL: &str = "mutate";
+
+impl Analysis for IngestBatch {
+    fn label(&self) -> &'static str {
+        MUTATE_LABEL
+    }
+
+    fn describe(&self) -> String {
+        format!("mutate(batch={},epoch={})", self.updates.len(), self.epoch)
+    }
+
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        // Demand depends on endpoints + layout, not edge blocks; the
+        // stripe offset is ignored because the delta log is shared graph
+        // state at a fixed home channel, not a per-query private array.
+        let _ = (g, stripe_offset);
+        QueryOutput {
+            label: self.label(),
+            values: Vec::new(),
+            phases: vec![PhaseDemand::ingest_batch(m, &self.updates)],
+        }
+    }
+
+    fn validate(&self, _g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.is_empty(), "ingest batches produce no per-vertex values");
+        Ok(())
+    }
+}
+
+/// Mutation-lane section of a [`crate::coordinator::ServiceReport`].
+#[derive(Debug, Clone)]
+pub struct MutationStats {
+    /// Seed of the forked mutation stream (regenerate with
+    /// `serve --mutate ... --seed S`: the stream is derived from the
+    /// service seed, so one number reproduces the whole run).
+    pub seed: u64,
+    /// Update batches applied (== epochs created).
+    pub batches: usize,
+    /// Update records submitted across all batches.
+    pub updates: usize,
+    /// Undirected edges actually inserted (absent before their batch).
+    pub inserted: usize,
+    /// Undirected edges actually deleted.
+    pub deleted: usize,
+    /// No-op updates (insert-present / delete-absent / cancelled in
+    /// batch).
+    pub redundant: usize,
+    /// Compaction passes run during the replay.
+    pub compactions: usize,
+    /// Overlays folded into the base across all passes.
+    pub overlays_compacted: usize,
+    /// Overlays still live at the end of the run (pinned tail).
+    pub final_overlays: usize,
+    /// Applied updates per second of service duration.
+    pub update_throughput_per_s: f64,
+    /// Latency quantiles of completed ingest batches (s), if any.
+    pub batch_latency: Option<Quantiles>,
+}
+
+impl MutationStats {
+    /// One operator-facing summary line.
+    pub fn line(&self) -> String {
+        format!(
+            "mutation: {} batches / {} updates ({} ins, {} del, {} no-op) — \
+             {:.0} upd/s, {} epochs, {} compactions ({} overlays folded, {} live), \
+             seed {:#x}",
+            self.batches,
+            self.updates,
+            self.inserted,
+            self.deleted,
+            self.redundant,
+            self.update_throughput_per_s,
+            self.batches,
+            self.compactions,
+            self.overlays_compacted,
+            self.final_overlays,
+            self.seed
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::graph::builder::build_undirected_csr;
+
+    #[test]
+    fn parse_and_validate() {
+        let c = MutationConfig::parse("rate=200, batch=32, delete=0.25, compact=2").unwrap();
+        assert_eq!(c.rate_batches_per_s, 200.0);
+        assert_eq!(c.batch, 32);
+        assert_eq!(c.delete_fraction, 0.25);
+        assert_eq!(c.compact_every, 2);
+        // Defaults survive partial specs.
+        let c = MutationConfig::parse("rate=10").unwrap();
+        assert_eq!(c.batch, MutationConfig::default().batch);
+        assert!(MutationConfig::parse("rate=0").is_err());
+        assert!(MutationConfig::parse("batch=0").is_err());
+        assert!(MutationConfig::parse("delete=1.5").is_err());
+        // Pure-delete streams are supported (the delete-heavy follow-up).
+        assert!(MutationConfig::parse("delete=1.0").is_ok());
+        assert!(MutationConfig::parse("tempo=3").is_err());
+        assert!(!c.label().is_empty());
+    }
+
+    #[test]
+    fn ingest_batch_is_a_well_formed_analysis() {
+        let g = build_undirected_csr(16, &[(0, 1), (2, 3)]);
+        let m = Machine::new(MachineConfig::pathfinder_8());
+        let a = IngestBatch::new(
+            Arc::new(vec![EdgeUpdate::insert(4, 5), EdgeUpdate::delete(0, 1)]),
+            3,
+        );
+        assert_eq!(a.label(), MUTATE_LABEL);
+        assert_eq!(a.describe(), "mutate(batch=2,epoch=3)");
+        assert_eq!(a.epoch(), 3);
+        assert_eq!(a.updates().len(), 2);
+        let out = a.run(g.view(), &m);
+        assert!(out.values.is_empty());
+        assert_eq!(out.phases.len(), 1);
+        assert!(out.solo_ns(&m) > 0.0);
+        a.validate(g.view(), &out.values).unwrap();
+        assert!(a.validate(g.view(), &[1]).is_err());
+        assert!(a.cacheable_demand().is_none(), "every batch's demand is unique");
+    }
+}

@@ -14,6 +14,7 @@ use crate::alg::Analysis;
 use crate::coordinator::admission::ContextLedger;
 use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
+use crate::graph::view::GraphView;
 use crate::sim::demand::PhaseDemand;
 use crate::sim::flow::{FlowSim, OnFull, QuerySpec, ShareWeights};
 use crate::sim::machine::Machine;
@@ -120,6 +121,11 @@ impl<'g> Coordinator<'g> {
         self.machine.cfg.nodes as u64 * self.machine.cfg.ctx_mem_per_node_bytes
     }
 
+    /// The coordinator's graph as a flat (epoch-0) view.
+    pub fn view(&self) -> GraphView<'_> {
+        GraphView::flat(self.g)
+    }
+
     /// Thread-context memory the batch reserves if run fully concurrently
     /// (bytes): each analysis's declared footprint, or the machine default.
     pub fn ctx_demand_bytes(&self, requests: &[QueryRequest]) -> u64 {
@@ -127,7 +133,7 @@ impl<'g> Coordinator<'g> {
             .iter()
             .map(|r| {
                 r.analysis
-                    .ctx_mem_bytes(self.g)
+                    .ctx_mem_bytes(self.view())
                     .unwrap_or(self.machine.cfg.ctx_bytes_per_query)
             })
             .sum()
@@ -148,31 +154,50 @@ impl<'g> Coordinator<'g> {
         requests
             .iter()
             .enumerate()
-            .map(|(i, req)| {
-                let a = req.analysis.as_ref();
-                let phases = match a.cacheable_demand() {
-                    Some(key) => {
-                        let mut cache = self.demand_cache.borrow_mut();
-                        let base = cache
-                            .entry(key)
-                            .or_insert_with(|| a.phases(self.g, &self.machine, 0));
-                        base.iter().map(|p| p.rotate_channels(i)).collect()
-                    }
-                    None => a.phases(self.g, &self.machine, i),
-                };
-                QuerySpec {
-                    id: i,
-                    label: a.label(),
-                    phases,
-                    arrival_ns: req.arrival_ns,
-                    priority: req.priority,
-                    deadline_ns: req.deadline_ns,
-                    ctx_bytes: a
-                        .ctx_mem_bytes(self.g)
-                        .unwrap_or(self.machine.cfg.ctx_bytes_per_query),
-                }
-            })
+            .map(|(i, req)| self.prepare_one(self.view(), 0, req, i, i))
             .collect()
+    }
+
+    /// Build one engine-ready spec against an explicit epoch snapshot —
+    /// the mutation lane's path (DESIGN.md §Mutation): the service pins an
+    /// epoch per arrival and prepares the query against that exact view.
+    ///
+    /// The demand cache serves **epoch 0 only** (the coordinator's own
+    /// immutable graph), keeping static-graph runs byte-identical to the
+    /// pre-mutation cache behavior. Later epochs bypass the cache
+    /// entirely: the cache outlives any one serve call while epoch
+    /// numbering restarts per [`crate::graph::store::GraphStore`], so an
+    /// epoch-tagged entry from one mutating run would silently serve a
+    /// *different* edge set to the next.
+    pub fn prepare_one(
+        &self,
+        view: GraphView<'_>,
+        epoch: u64,
+        req: &QueryRequest,
+        id: usize,
+        stripe_offset: usize,
+    ) -> QuerySpec {
+        let a = req.analysis.as_ref();
+        let phases = match a.cacheable_demand() {
+            Some(key) if epoch == 0 => {
+                let mut cache = self.demand_cache.borrow_mut();
+                let base =
+                    cache.entry(key).or_insert_with(|| a.phases(view, &self.machine, 0));
+                base.iter().map(|p| p.rotate_channels(stripe_offset)).collect()
+            }
+            _ => a.phases(view, &self.machine, stripe_offset),
+        };
+        QuerySpec {
+            id,
+            label: a.label(),
+            phases,
+            arrival_ns: req.arrival_ns,
+            priority: req.priority,
+            deadline_ns: req.deadline_ns,
+            ctx_bytes: a
+                .ctx_mem_bytes(view)
+                .unwrap_or(self.machine.cfg.ctx_bytes_per_query),
+        }
     }
 
     /// Prepare and execute a batch under `policy`, consuming the requests.
@@ -362,14 +387,14 @@ mod tests {
         fn label(&self) -> &'static str {
             "fat-cc"
         }
-        fn run_offset(&self, g: &Csr, m: &Machine, o: usize) -> QueryOutput {
+        fn run_offset(&self, g: GraphView<'_>, m: &Machine, o: usize) -> QueryOutput {
             let run = crate::alg::cc_run_offset(g, m, o);
             QueryOutput { label: self.label(), values: run.labels, phases: run.phases }
         }
-        fn validate(&self, g: &Csr, values: &[i64]) -> anyhow::Result<()> {
+        fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
             crate::alg::oracle::check_cc(g, values)
         }
-        fn ctx_mem_bytes(&self, _g: &Csr) -> Option<u64> {
+        fn ctx_mem_bytes(&self, _g: GraphView<'_>) -> Option<u64> {
             Some(1 << 30) // 1 GiB per instance
         }
     }

@@ -10,8 +10,11 @@
 //! utilization — everything an operator would watch on a dashboard.
 
 use crate::alg::{Analysis, AnalysisFactory, AnalysisRegistry};
+use crate::coordinator::mutation::{IngestBatch, MutationConfig, MutationStats, MUTATE_LABEL};
 use crate::coordinator::request::{Priority, QueryRequest};
 use crate::graph::csr::Csr;
+use crate::graph::delta::random_batch;
+use crate::graph::store::GraphStore;
 use crate::sim::flow::{OnFull, ShareWeights};
 use crate::sim::machine::Machine;
 use crate::sim::preempt::PreemptPolicy;
@@ -272,7 +275,13 @@ pub struct ServiceConfig {
     /// Checkpoint preemption of running Batch work under Interactive
     /// pressure (`serve --preempt`; None = disabled).
     pub preempt: Option<PreemptPolicy>,
-    /// RNG seed (arrivals, sources, query classes, priorities).
+    /// Streaming edge-update lane (`serve --mutate rate=R,batch=B`):
+    /// update batches arrive as Batch-class work alongside queries, each
+    /// advancing the graph store one epoch (None = static graph, the
+    /// byte-identical fast path).
+    pub mutation: Option<MutationConfig>,
+    /// RNG seed (arrivals, sources, query classes, priorities; the
+    /// mutation stream forks an independent sub-stream from it).
     pub seed: u64,
 }
 
@@ -286,6 +295,7 @@ impl Default for ServiceConfig {
             priority_mix: None,
             weights: ShareWeights::flat(),
             preempt: None,
+            mutation: None,
             seed: 0x5E21,
         }
     }
@@ -328,6 +338,11 @@ pub struct ServiceReport {
     pub peak_concurrency: usize,
     /// Mean channel utilization over the run.
     pub channel_utilization: f64,
+    /// The seed the run was generated from (reproduce with `--seed`).
+    pub seed: u64,
+    /// Mutation-lane summary (epochs, compactions, update throughput);
+    /// None for a static-graph run.
+    pub mutation: Option<MutationStats>,
 }
 
 impl ServiceReport {
@@ -351,7 +366,7 @@ impl ServiceReport {
     pub fn summary(&self) -> String {
         let mut out = format!(
             "served {} (rejected {}, shed {}, preempted {}) in {:.2}s — {:.1} q/s, \
-             peak {} in flight, channel util {:.0}%",
+             peak {} in flight, channel util {:.0}%, seed {:#x}",
             self.served,
             self.rejected,
             self.shed,
@@ -360,7 +375,11 @@ impl ServiceReport {
             self.throughput_qps,
             self.peak_concurrency,
             self.channel_utilization * 100.0,
+            self.seed,
         );
+        if let Some(m) = &self.mutation {
+            out.push_str(&format!("\n  {}", m.line()));
+        }
         for (label, q) in &self.class_latency {
             out.push_str(&format!("\n  {:>5}: {}", label, q.latency_line()));
             if let Some(s) = self.slo_of(label) {
@@ -392,7 +411,10 @@ impl<'g> GraphService<'g> {
         &self.coord
     }
 
-    /// Serve a synthetic arrival stream described by `cfg`.
+    /// Serve a synthetic arrival stream described by `cfg`. With
+    /// [`ServiceConfig::mutation`] set, update batches stream in alongside
+    /// the queries (see [`GraphService::serve_mutating`]); otherwise the
+    /// graph is static and this is the byte-identical fast path.
     pub fn serve(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
         anyhow::ensure!(cfg.queries > 0, "need at least one query");
         cfg.workload.validate()?;
@@ -400,6 +422,196 @@ impl<'g> GraphService<'g> {
         if let Some(mix) = &cfg.priority_mix {
             mix.validate()?;
         }
+        if let Some(mcfg) = &cfg.mutation {
+            mcfg.validate()?;
+            return self.serve_mutating(cfg, mcfg);
+        }
+        let (requests, arrivals) = self.build_query_stream(cfg);
+
+        let report = self.coord.run(
+            &requests,
+            Policy::ConcurrentAdmitted {
+                on_full: cfg.on_full,
+                weights: cfg.weights,
+                preempt: cfg.preempt,
+            },
+        )?;
+
+        let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
+        Ok(self.build_report(cfg, &report, first_arrival, None))
+    }
+
+    /// The mixed query+update lane (DESIGN.md §Mutation). The timeline
+    /// merges the query stream with a Poisson stream of update batches:
+    ///
+    /// * a **batch arrival** applies its updates to the epoch store (new
+    ///   epoch) and submits an [`IngestBatch`] request — Batch-class work
+    ///   carrying the memory-side ingest demand through the same
+    ///   admission/weights/preemption machinery as queries;
+    /// * a **query arrival** pins the epoch current at that instant and is
+    ///   prepared against that exact snapshot, so a running traversal
+    ///   never sees a half-applied (or later) batch.
+    ///
+    /// After the engine runs, completions are replayed against the store:
+    /// each query unpins its epoch at its finish time and the store
+    /// compacts whenever [`MutationConfig::compact_every`] overlays drain
+    /// — never retiring a pinned epoch. (The store applies every batch at
+    /// its arrival — the data plane; admission models the *bandwidth* of
+    /// ingest, so a shed batch's cost leaves the timeline while its edges
+    /// still land, as a retry loop would eventually achieve.)
+    fn serve_mutating(
+        &self,
+        cfg: &ServiceConfig,
+        mcfg: &MutationConfig,
+    ) -> anyhow::Result<ServiceReport> {
+        /// Runaway guard: a mis-set rate cannot explode the timeline.
+        const MAX_BATCHES: usize = 16_384;
+
+        let g = self.coord.graph();
+        // One shared generator with the static path: the query stream for
+        // a given seed is draw-for-draw the same with or without mutation.
+        let (query_requests, arrivals) = self.build_query_stream(cfg);
+
+        // The mutation stream forks an independent, surfaceable seed: one
+        // number in the report reproduces the whole run.
+        let mutation_seed = SplitMix64::new(cfg.seed).next_u64() ^ 0x6D75_7461_7465; // "mutate"
+        let mut mstream = SplitMix64::new(mutation_seed);
+        let mut content_rng = mstream.fork(1);
+        let span_ns = arrivals.last().copied().unwrap_or(0.0);
+        let mut batch_arrivals = Vec::new();
+        let mut t = 0.0f64;
+        loop {
+            let u = mstream.next_f64().max(1e-12);
+            t += -u.ln() / mcfg.rate_batches_per_s * 1e9;
+            if t >= span_ns || batch_arrivals.len() >= MAX_BATCHES {
+                break;
+            }
+            batch_arrivals.push(t);
+        }
+        if batch_arrivals.len() >= MAX_BATCHES {
+            // Say so out loud: the tail of the run serves a frozen graph,
+            // and throughput numbers describe the truncated stream.
+            eprintln!(
+                "serve --mutate: batch stream truncated at {MAX_BATCHES} batches \
+                 ({:.0} batches/s over a {:.3}s span exceeds the runaway guard); \
+                 the remainder of the run mutates nothing",
+                mcfg.rate_batches_per_s,
+                span_ns * 1e-9
+            );
+        }
+        if batch_arrivals.is_empty() {
+            // A lane with zero batches would be a static run in disguise;
+            // land one mid-stream so the epoch machinery is exercised.
+            batch_arrivals.push(span_ns * 0.5);
+        }
+
+        // Merge the two sorted timelines; at equal instants the batch goes
+        // first, so "the epoch current at admission" includes it.
+        let mut store = GraphStore::new(g);
+        let total = query_requests.len() + batch_arrivals.len();
+        let mut requests: Vec<QueryRequest> = Vec::with_capacity(total);
+        let mut specs = Vec::with_capacity(total);
+        let mut pinned: Vec<(usize, u64)> = Vec::new();
+        let (mut updates_total, mut inserted, mut deleted, mut redundant) = (0usize, 0, 0, 0);
+        let (mut qi, mut bi) = (0usize, 0usize);
+        while qi < query_requests.len() || bi < batch_arrivals.len() {
+            let id = requests.len();
+            let take_batch = bi < batch_arrivals.len()
+                && (qi >= query_requests.len() || batch_arrivals[bi] <= arrivals[qi]);
+            if take_batch {
+                let updates = Arc::new(random_batch(
+                    store.view(),
+                    mcfg.batch,
+                    mcfg.delete_fraction,
+                    &mut content_rng,
+                ));
+                let bs = store.apply_batch(&updates);
+                updates_total += updates.len();
+                inserted += bs.inserted;
+                deleted += bs.deleted;
+                redundant += bs.redundant;
+                let req = QueryRequest::from_arc(Arc::new(IngestBatch::new(updates, bs.epoch)))
+                    .at(batch_arrivals[bi])
+                    .with_priority(Priority::Batch);
+                let spec = self.coord.prepare_one(store.view(), bs.epoch, &req, id, id);
+                requests.push(req);
+                specs.push(spec);
+                bi += 1;
+            } else {
+                let epoch = store.pin();
+                let req = query_requests[qi].clone();
+                let spec = self.coord.prepare_one(store.view(), epoch, &req, id, id);
+                pinned.push((id, epoch));
+                requests.push(req);
+                specs.push(spec);
+                qi += 1;
+            }
+        }
+
+        let report = self.coord.run_specs(
+            &requests,
+            &specs,
+            Policy::ConcurrentAdmitted {
+                on_full: cfg.on_full,
+                weights: cfg.weights,
+                preempt: cfg.preempt,
+            },
+        )?;
+
+        // Replay completions: unpin each query's epoch when it finished
+        // (at arrival for work that never ran) and compact whenever the
+        // drained prefix reaches the threshold.
+        let mut unpins: Vec<(f64, u64)> = pinned
+            .iter()
+            .map(|&(id, epoch)| {
+                let r = &report.records[id];
+                let t = if r.finish_s.is_finite() { r.finish_s } else { r.arrival_s };
+                (t, epoch)
+            })
+            .collect();
+        unpins.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let (mut compactions, mut folded) = (0usize, 0usize);
+        for &(_, epoch) in &unpins {
+            store.unpin(epoch);
+            if store.drainable_overlays() >= mcfg.compact_every {
+                folded += store.compact().drained;
+                compactions += 1;
+            }
+        }
+        if store.drainable_overlays() > 0 {
+            folded += store.compact().drained;
+            compactions += 1;
+        }
+
+        // Both lists are non-empty here (queries > 0 is enforced; an empty
+        // batch stream got a fallback batch above).
+        let first_arrival_ns = batch_arrivals[0].min(arrivals[0]);
+        let mut out = self.build_report(cfg, &report, first_arrival_ns * 1e-9, None);
+        // One duration for the whole report: the update throughput shares
+        // build_report's denominator by construction.
+        out.mutation = Some(MutationStats {
+            seed: mutation_seed,
+            batches: batch_arrivals.len(),
+            updates: updates_total,
+            inserted,
+            deleted,
+            redundant,
+            compactions,
+            overlays_compacted: folded,
+            final_overlays: store.live_overlays(),
+            update_throughput_per_s: updates_total as f64 / out.duration_s,
+            batch_latency: report.latency_quantiles(Some(MUTATE_LABEL)),
+        });
+        Ok(out)
+    }
+
+    /// Generate the seeded query stream: sources, Poisson arrivals, and
+    /// per-query class/priority/deadline draws, in arrival order. The ONE
+    /// generator both the static and mutating serve paths use — the
+    /// mutation lane's determinism contract ("same seed, same query
+    /// stream") depends on them consuming the rng draw-for-draw
+    /// identically, so there is exactly one copy of this code.
+    fn build_query_stream(&self, cfg: &ServiceConfig) -> (Vec<QueryRequest>, Vec<f64>) {
         let g = self.coord.graph();
         let mut rng = SplitMix64::new(cfg.seed);
         let sources = crate::graph::sample::bfs_sources(g, cfg.queries, rng.next_u64());
@@ -422,18 +634,22 @@ impl<'g> GraphService<'g> {
                 req
             })
             .collect();
+        (requests, arrivals)
+    }
 
-        let report = self.coord.run(
-            &requests,
-            Policy::ConcurrentAdmitted {
-                on_full: cfg.on_full,
-                weights: cfg.weights,
-                preempt: cfg.preempt,
-            },
-        )?;
-
-        let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
-        let duration_s = (report.makespan_s - first_arrival).max(f64::MIN_POSITIVE);
+    /// Assemble the operator report. `served`/`rejected`/`shed`/
+    /// `preempted` and throughput count *queries* (the mutate lane reports
+    /// through [`MutationStats`] and its own `"mutate"` class row).
+    fn build_report(
+        &self,
+        cfg: &ServiceConfig,
+        report: &crate::coordinator::metrics::RunReport,
+        first_arrival_s: f64,
+        mutation: Option<MutationStats>,
+    ) -> ServiceReport {
+        let duration_s = (report.makespan_s - first_arrival_s).max(f64::MIN_POSITIVE);
+        let queries = || report.records.iter().filter(|r| r.label != MUTATE_LABEL);
+        let served = queries().filter(|r| r.completed()).count();
         let class_latency: Vec<(String, Quantiles)> = report
             .per_class_quantiles()
             .into_iter()
@@ -457,19 +673,21 @@ impl<'g> GraphService<'g> {
                 })
             })
             .collect();
-        Ok(ServiceReport {
-            served: report.completed(),
-            rejected: report.rejections(),
-            shed: report.sheds(),
-            preempted: report.preempted(),
+        ServiceReport {
+            served,
+            rejected: queries().filter(|r| r.rejected()).count(),
+            shed: queries().filter(|r| r.shed()).count(),
+            preempted: queries().filter(|r| r.preempted()).count(),
             duration_s,
-            throughput_qps: report.completed() as f64 / duration_s,
+            throughput_qps: served as f64 / duration_s,
             class_latency,
             slo,
             priority: report.priority_stats(),
             peak_concurrency: report.peak_concurrency,
             channel_utilization: report.mean_channel_utilization,
-        })
+            seed: cfg.seed,
+            mutation,
+        }
     }
 }
 
@@ -749,5 +967,89 @@ mod tests {
         let b = svc.serve(&cfg).unwrap();
         assert_eq!(a.duration_s, b.duration_s);
         assert_eq!(a.served, b.served);
+        assert_eq!(a.seed, cfg.seed, "seed surfaces in the report");
+        assert!(a.summary().contains("seed"), "{}", a.summary());
+        assert!(a.mutation.is_none(), "static run has no mutation section");
+    }
+
+    /// Acceptance (DESIGN.md §Mutation): a `serve --mutate` mixed run
+    /// completes end to end — queries all served, the `mutate` class
+    /// reported alongside query p50/p95/p99, update throughput, epoch
+    /// count and compaction stats in the summary — and is reproducible
+    /// from its seed.
+    #[test]
+    fn mutation_lane_serves_mixed_stream_end_to_end() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig {
+            queries: 24,
+            arrival_rate_per_s: 200.0,
+            workload: WorkloadSpec::bfs_cc(0.2),
+            mutation: Some(crate::coordinator::mutation::MutationConfig {
+                rate_batches_per_s: 100.0,
+                batch: 16,
+                delete_fraction: 0.2,
+                compact_every: 2,
+            }),
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 24, "every query served (mutate lane not counted)");
+        let m = rep.mutation.as_ref().expect("mutation stats present");
+        assert!(m.batches >= 1);
+        assert_eq!(m.updates, m.batches * 16);
+        assert!(m.inserted > 0, "{m:?}");
+        assert!(m.update_throughput_per_s > 0.0);
+        // Every overlay is eventually folded back into a flat base.
+        assert!(m.compactions >= 1);
+        assert_eq!(m.overlays_compacted, m.batches);
+        assert_eq!(m.final_overlays, 0);
+        // The mutate lane reports per class like any workload class.
+        assert!(rep.class("mutate").is_some(), "mutate class latency row");
+        assert!(rep.class("bfs").is_some() && rep.class("cc").is_some());
+        assert!(m.batch_latency.is_some());
+        // Ingest is Batch-class work under the existing priority machinery.
+        let batch_stats = rep
+            .priority
+            .iter()
+            .find(|s| s.priority == Priority::Batch)
+            .expect("batch class present");
+        assert!(batch_stats.submitted >= m.batches);
+        let s = rep.summary();
+        assert!(s.contains("mutation:") && s.contains("compactions"), "{s}");
+        // Reproducible end to end.
+        let rep2 = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.duration_s, rep2.duration_s);
+        assert_eq!(rep.mutation.as_ref().unwrap().inserted, m.inserted);
+        assert_eq!(rep.mutation.as_ref().unwrap().seed, m.seed);
+    }
+
+    /// The query stream for a given seed is identical with and without the
+    /// mutation lane (the mutation stream is forked, not interleaved), and
+    /// a static-graph serve is unchanged by the mutation code path.
+    #[test]
+    fn mutation_stream_is_forked_not_interleaved() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let static_cfg = ServiceConfig { queries: 16, ..Default::default() };
+        let plain = svc.serve(&static_cfg).unwrap();
+        let mutate_cfg = ServiceConfig {
+            queries: 16,
+            mutation: Some(crate::coordinator::mutation::MutationConfig {
+                rate_batches_per_s: 40.0,
+                batch: 8,
+                delete_fraction: 0.0,
+                compact_every: 4,
+            }),
+            ..static_cfg.clone()
+        };
+        let mutated = svc.serve(&mutate_cfg).unwrap();
+        // Same query classes in the same proportions: the class draws come
+        // from the same rng positions.
+        let count = |r: &ServiceReport, label: &str| {
+            r.class_latency.iter().filter(|(l, _)| l == label).count()
+        };
+        assert_eq!(count(&plain, "bfs"), count(&mutated, "bfs"));
+        assert_eq!(plain.served, mutated.served);
     }
 }

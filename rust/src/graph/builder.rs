@@ -4,10 +4,19 @@
 //! edges").
 
 use super::csr::Csr;
+use super::delta::merge_neighbors;
 use crate::util::parallel;
 
 /// Build the deduplicated, self-loop-free, symmetric CSR from a raw
 /// directed edge list over vertices [0, n).
+///
+/// Every edge block is emitted through the graph layer's one shared
+/// sorted-merge/dedup routine ([`merge_neighbors`] — also used by overlay
+/// reads and [`crate::graph::store::GraphStore`] compaction), so the
+/// builder *itself* guarantees the sorted+deduped invariant that
+/// [`crate::graph::validate::check_invariants`] checks: duplicate raw
+/// edges cannot slip through any builder path, and the invariant cannot
+/// drift between freshly-built and compacted graphs.
 pub fn build_undirected_csr(n: usize, raw_edges: &[(u32, u32)]) -> Csr {
     // Symmetrize: keep both directions of every edge.
     let mut edges: Vec<(u32, u32)> = Vec::with_capacity(raw_edges.len() * 2);
@@ -17,19 +26,28 @@ pub fn build_undirected_csr(n: usize, raw_edges: &[(u32, u32)]) -> Csr {
             edges.push((v, u));
         }
     }
-    // Sort + dedup gives dedup'd, neighbor-sorted edge blocks.
+    // Sort, then build each vertex's edge block via the shared merge
+    // routine (which collapses duplicates within the sorted row).
     parallel::par_sort_unstable(&mut edges);
-    edges.dedup();
 
-    let mut offsets = vec![0u64; n + 1];
-    for &(u, _) in &edges {
-        offsets[u as usize + 1] += 1;
+    let mut offsets = Vec::with_capacity(n + 1);
+    offsets.push(0u64);
+    let mut targets: Vec<u32> = Vec::with_capacity(edges.len());
+    let mut row: Vec<u32> = Vec::new();
+    let mut k = 0usize;
+    for u in 0..n as u32 {
+        row.clear();
+        while k < edges.len() && edges[k].0 == u {
+            row.push(edges[k].1);
+            k += 1;
+        }
+        merge_neighbors(&row, &[], &[], &mut targets);
+        offsets.push(targets.len() as u64);
     }
-    for i in 0..n {
-        offsets[i + 1] += offsets[i];
-    }
-    let targets: Vec<u32> = edges.iter().map(|&(_, v)| v).collect();
-    Csr::from_parts(offsets, targets)
+    assert_eq!(k, edges.len(), "edge endpoint out of range [0, {n})");
+    let g = Csr::from_parts(offsets, targets);
+    debug_assert!(super::validate::check_invariants(&g).is_ok());
+    g
 }
 
 /// Count undirected edges of a symmetric CSR (directed / 2).
@@ -75,5 +93,30 @@ mod tests {
         let g = build_undirected_csr(5, &[]);
         assert_eq!(g.n(), 5);
         assert_eq!(g.m_directed(), 0);
+    }
+
+    /// Bugfix guard: the builder must guarantee the sorted+deduped/no-self-
+    /// loop invariant itself — adversarial inputs (duplicates in both
+    /// directions, repeated self loops, repeated edges across rows) must
+    /// come out invariant-clean, same as delta compaction output.
+    #[test]
+    fn adversarial_duplicates_cannot_slip_through() {
+        let edges = vec![
+            (0, 1),
+            (1, 0),
+            (0, 1),
+            (1, 0),
+            (1, 1),
+            (1, 1),
+            (2, 1),
+            (1, 2),
+            (2, 3),
+            (3, 2),
+            (2, 3),
+        ];
+        let g = build_undirected_csr(4, &edges);
+        crate::graph::validate::check_invariants(&g).unwrap();
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(undirected_edge_count(&g), 3);
     }
 }

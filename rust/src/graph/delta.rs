@@ -1,0 +1,326 @@
+//! Edge-update batches and per-epoch delta overlays — the write side of
+//! the live-mutation subsystem (DESIGN.md §Mutation).
+//!
+//! A served graph is not frozen: edges arrive while queries run. The
+//! Pathfinder's write asymmetry (*remote writes don't migrate; MSPs do
+//! memory-side accumulation*, paper §II–III) makes streaming ingest cheap:
+//! an update lands as an unconditional remote write into the destination
+//! vertex's **delta log** plus an MSP read-modify-write that splices the
+//! log head — no thread ever migrates. The host-side image of that log is
+//! a [`DeltaOverlay`]: per-vertex *sorted* insert/delete lists built from
+//! one batched [`EdgeUpdate`] stream. Overlays stack in epoch order on top
+//! of an immutable base CSR ([`crate::graph::store::GraphStore`]) and are
+//! merged away by compaction through the same sorted-merge routine
+//! ([`merge_neighbors`]) the CSR builder uses — one copy of the dedup
+//! logic, so the builder invariant (sorted, deduplicated, self-loop-free
+//! edge blocks) cannot drift from the compaction invariant.
+
+use crate::graph::view::GraphView;
+use crate::util::rng::SplitMix64;
+
+/// What one update does to an undirected edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateOp {
+    /// Add the edge (a no-op if it is already present).
+    Insert,
+    /// Remove the edge (a no-op if it is absent).
+    Delete,
+}
+
+/// One undirected edge update. Applied symmetrically: inserting (u, v)
+/// inserts both directed arcs, mirroring the builder's undirected closure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EdgeUpdate {
+    pub u: u32,
+    pub v: u32,
+    pub op: UpdateOp,
+}
+
+impl EdgeUpdate {
+    pub fn insert(u: u32, v: u32) -> Self {
+        EdgeUpdate { u, v, op: UpdateOp::Insert }
+    }
+
+    pub fn delete(u: u32, v: u32) -> Self {
+        EdgeUpdate { u, v, op: UpdateOp::Delete }
+    }
+
+    /// Canonical (min, max) endpoint order of the undirected edge.
+    pub fn normalized(&self) -> (u32, u32) {
+        if self.u <= self.v {
+            (self.u, self.v)
+        } else {
+            (self.v, self.u)
+        }
+    }
+}
+
+/// Append to `out` the sorted, deduplicated union of `base` and `inserts`,
+/// minus every value present in `deletes`.
+///
+/// This is the **one shared sorted-merge/dedup routine** of the graph
+/// layer: [`crate::graph::builder::build_undirected_csr`] builds every
+/// edge block through it (so the builder *itself* guarantees the
+/// sorted+deduped invariant `graph::validate` checks), [`GraphView`]
+/// resolves overlaid neighbor lists with it, and
+/// [`crate::graph::store::GraphStore`] compaction folds drained overlays
+/// into the new base with it.
+///
+/// `base` and `inserts` must each be sorted (duplicates allowed — they are
+/// collapsed); `deletes` must be sorted. Output order is strictly
+/// ascending within this call, independent of whatever `out` already
+/// holds (callers append row after row).
+pub fn merge_neighbors(base: &[u32], inserts: &[u32], deletes: &[u32], out: &mut Vec<u32>) {
+    debug_assert!(base.windows(2).all(|w| w[0] <= w[1]), "base not sorted");
+    debug_assert!(inserts.windows(2).all(|w| w[0] <= w[1]), "inserts not sorted");
+    debug_assert!(deletes.windows(2).all(|w| w[0] <= w[1]), "deletes not sorted");
+    let (mut i, mut j) = (0usize, 0usize);
+    let mut last: Option<u32> = None;
+    while i < base.len() || j < inserts.len() {
+        let x = match (base.get(i), inserts.get(j)) {
+            (Some(&a), Some(&b)) if a <= b => {
+                i += 1;
+                a
+            }
+            (Some(&a), None) => {
+                i += 1;
+                a
+            }
+            (_, Some(&b)) => {
+                j += 1;
+                b
+            }
+            (None, None) => unreachable!("loop condition"),
+        };
+        if last == Some(x) {
+            continue; // collapse duplicates (within and across inputs)
+        }
+        last = Some(x);
+        if deletes.binary_search(&x).is_err() {
+            out.push(x);
+        }
+    }
+}
+
+/// Per-vertex delta of one vertex in one overlay: sorted insert and delete
+/// neighbor lists (disjoint — a batch's net effect is one or the other).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct VertexDelta {
+    pub inserts: Vec<u32>,
+    pub deletes: Vec<u32>,
+}
+
+/// One epoch's worth of edge updates, indexed per vertex — the host-side
+/// image of the Pathfinder's per-vertex memory-side delta logs.
+///
+/// Overlays hold the batch's **net effect against the view they were
+/// applied to** ([`crate::graph::store::GraphStore::apply_batch`] filters
+/// redundant inserts/deletes), so `inserts`/`deletes` counts are exact
+/// directed-arc deltas and stacking overlays in epoch order reproduces the
+/// exact edge set of any epoch.
+#[derive(Debug, Clone, Default)]
+pub struct DeltaOverlay {
+    per_vertex: std::collections::HashMap<u32, VertexDelta>,
+    /// Directed arcs inserted by this overlay (2x the undirected count).
+    inserts: usize,
+    /// Directed arcs deleted by this overlay.
+    deletes: usize,
+}
+
+impl DeltaOverlay {
+    /// Build from a list of *effective*, normalized undirected edges.
+    /// Both directions of each edge are recorded; per-vertex lists come
+    /// out sorted and deduplicated.
+    pub fn from_effective(inserts: &[(u32, u32)], deletes: &[(u32, u32)]) -> Self {
+        let mut ov = DeltaOverlay::default();
+        for &(u, v) in inserts {
+            debug_assert!(u != v, "self loop in overlay");
+            ov.per_vertex.entry(u).or_default().inserts.push(v);
+            ov.per_vertex.entry(v).or_default().inserts.push(u);
+            ov.inserts += 2;
+        }
+        for &(u, v) in deletes {
+            debug_assert!(u != v, "self loop in overlay");
+            ov.per_vertex.entry(u).or_default().deletes.push(v);
+            ov.per_vertex.entry(v).or_default().deletes.push(u);
+            ov.deletes += 2;
+        }
+        for d in ov.per_vertex.values_mut() {
+            d.inserts.sort_unstable();
+            d.inserts.dedup();
+            d.deletes.sort_unstable();
+            d.deletes.dedup();
+        }
+        ov
+    }
+
+    /// Whether this overlay changes vertex `v`'s neighbor list.
+    #[inline]
+    pub fn touches(&self, v: u32) -> bool {
+        self.per_vertex.contains_key(&v)
+    }
+
+    /// Sorted neighbors inserted at `v` (empty if untouched).
+    #[inline]
+    pub fn inserts_of(&self, v: u32) -> &[u32] {
+        self.per_vertex.get(&v).map(|d| d.inserts.as_slice()).unwrap_or(&[])
+    }
+
+    /// Sorted neighbors deleted at `v` (empty if untouched).
+    #[inline]
+    pub fn deletes_of(&self, v: u32) -> &[u32] {
+        self.per_vertex.get(&v).map(|d| d.deletes.as_slice()).unwrap_or(&[])
+    }
+
+    /// Directed arcs this overlay inserts.
+    pub fn inserted_arcs(&self) -> usize {
+        self.inserts
+    }
+
+    /// Directed arcs this overlay deletes.
+    pub fn deleted_arcs(&self) -> usize {
+        self.deletes
+    }
+
+    /// True when the overlay changes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.per_vertex.is_empty()
+    }
+
+    /// Number of vertices whose neighbor lists this overlay touches.
+    pub fn touched_vertices(&self) -> usize {
+        self.per_vertex.len()
+    }
+}
+
+/// Generate one reproducible update batch against `view`: `count` updates,
+/// a `delete_fraction` share of which remove a *currently present* edge
+/// (sampled as a random neighbor of a random non-isolated vertex, with
+/// bounded retries), the rest inserting a random non-self-loop pair.
+///
+/// All randomness flows from `rng` — the same seeded generator state
+/// yields the same stream, which is what makes `serve --mutate` runs
+/// reproducible end to end (the service forks this stream from its config
+/// seed and surfaces both in the report header).
+pub fn random_batch(
+    view: GraphView<'_>,
+    count: usize,
+    delete_fraction: f64,
+    rng: &mut SplitMix64,
+) -> Vec<EdgeUpdate> {
+    let n = view.n() as u64;
+    assert!(n >= 2, "need at least two vertices to mutate");
+    let mut scratch = crate::graph::view::NeighborScratch::default();
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        if rng.next_f64() < delete_fraction {
+            // Try to find an existing edge to delete (bounded retries so a
+            // near-empty graph degrades to inserts instead of spinning).
+            let mut found = None;
+            for _ in 0..8 {
+                let u = rng.gen_range(n) as u32;
+                let nbrs = view.neighbors(u, &mut scratch);
+                if !nbrs.is_empty() {
+                    let v = nbrs[rng.gen_range(nbrs.len() as u64) as usize];
+                    found = Some(EdgeUpdate::delete(u, v));
+                    break;
+                }
+            }
+            if let Some(upd) = found {
+                out.push(upd);
+                continue;
+            }
+        }
+        loop {
+            let u = rng.gen_range(n) as u32;
+            let v = rng.gen_range(n) as u32;
+            if u != v {
+                out.push(EdgeUpdate::insert(u, v));
+                break;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+
+    #[test]
+    fn merge_unions_and_dedups() {
+        let mut out = Vec::new();
+        merge_neighbors(&[1, 3, 3, 5], &[2, 3, 9, 9], &[], &mut out);
+        assert_eq!(out, vec![1, 2, 3, 5, 9]);
+    }
+
+    #[test]
+    fn merge_applies_deletes() {
+        let mut out = Vec::new();
+        merge_neighbors(&[1, 3, 5], &[2, 7], &[3, 7, 8], &mut out);
+        assert_eq!(out, vec![1, 2, 5]);
+    }
+
+    #[test]
+    fn merge_appends_without_cross_row_dedup() {
+        // Two rows ending/starting on the same value must both keep it.
+        let mut out = Vec::new();
+        merge_neighbors(&[4, 5], &[], &[], &mut out);
+        merge_neighbors(&[5, 6], &[], &[], &mut out);
+        assert_eq!(out, vec![4, 5, 5, 6]);
+    }
+
+    #[test]
+    fn merge_empty_inputs() {
+        let mut out = Vec::new();
+        merge_neighbors(&[], &[], &[], &mut out);
+        assert!(out.is_empty());
+        merge_neighbors(&[], &[2, 2], &[], &mut out);
+        assert_eq!(out, vec![2]);
+    }
+
+    #[test]
+    fn overlay_indexes_both_directions() {
+        let ov = DeltaOverlay::from_effective(&[(1, 4), (1, 2)], &[(3, 5)]);
+        assert_eq!(ov.inserts_of(1), &[2, 4]);
+        assert_eq!(ov.inserts_of(4), &[1]);
+        assert_eq!(ov.deletes_of(3), &[5]);
+        assert_eq!(ov.deletes_of(5), &[3]);
+        assert!(ov.touches(2) && !ov.touches(0));
+        assert_eq!(ov.inserted_arcs(), 4);
+        assert_eq!(ov.deleted_arcs(), 2);
+        assert!(!ov.is_empty());
+        assert_eq!(ov.touched_vertices(), 5);
+    }
+
+    #[test]
+    fn random_batch_is_reproducible_and_valid() {
+        let g = build_undirected_csr(64, &(0..63u32).map(|i| (i, i + 1)).collect::<Vec<_>>());
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        let ba = random_batch(g.view(), 50, 0.3, &mut a);
+        let bb = random_batch(g.view(), 50, 0.3, &mut b);
+        assert_eq!(ba, bb);
+        assert_eq!(ba.len(), 50);
+        for upd in &ba {
+            assert_ne!(upd.u, upd.v, "no self loops");
+            assert!((upd.u as usize) < 64 && (upd.v as usize) < 64);
+            if upd.op == UpdateOp::Delete {
+                // Deletes target an edge present in the sampled view.
+                assert!(g.neighbors(upd.u).binary_search(&upd.v).is_ok());
+            }
+        }
+        let mut c = SplitMix64::new(43);
+        assert_ne!(random_batch(g.view(), 50, 0.3, &mut c), ba, "seeds differ");
+    }
+
+    #[test]
+    fn delete_heavy_batch_on_sparse_graph_degrades_to_inserts() {
+        let g = build_undirected_csr(8, &[]);
+        let mut rng = SplitMix64::new(1);
+        let batch = random_batch(g.view(), 20, 1.0, &mut rng);
+        assert_eq!(batch.len(), 20);
+        assert!(batch.iter().all(|u| u.op == UpdateOp::Insert), "nothing to delete");
+    }
+}

@@ -5,16 +5,27 @@
 //! address mode (vertex v on node v mod N) with each vertex's edge block
 //! co-located on the same node; [`layout::StripedLayout`] reproduces that
 //! placement and is what the simulator charges memory traffic against.
+//!
+//! Served graphs are live: [`store::GraphStore`] holds an immutable base
+//! CSR plus per-epoch [`delta::DeltaOverlay`]s behind the [`view::GraphView`]
+//! read abstraction (DESIGN.md §Mutation) — queries pin the epoch current
+//! at admission, compaction folds drained overlays back into a flat base.
 
 pub mod builder;
 pub mod csr;
+pub mod delta;
 pub mod io;
 pub mod layout;
 pub mod rmat;
 pub mod sample;
+pub mod store;
 pub mod validate;
+pub mod view;
 
 pub use builder::build_undirected_csr;
 pub use csr::Csr;
+pub use delta::{merge_neighbors, DeltaOverlay, EdgeUpdate, UpdateOp};
 pub use layout::StripedLayout;
 pub use rmat::Rmat;
+pub use store::GraphStore;
+pub use view::{GraphView, NeighborScratch};

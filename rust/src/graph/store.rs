@@ -1,0 +1,383 @@
+//! `GraphStore` — epoch-based snapshot store for a live, mutating graph
+//! (DESIGN.md §Mutation).
+//!
+//! The store owns an immutable base [`Csr`] plus a stack of per-epoch
+//! [`DeltaOverlay`]s. Applying an update batch creates a new epoch;
+//! nothing is ever modified in place, so a query that **pins the epoch
+//! current at its admission** reads a frozen snapshot for its whole run —
+//! a half-applied batch is unrepresentable. Pins are refcounted;
+//! compaction merges the *drained* overlay prefix (epochs at or below the
+//! oldest pin) into a new base through the same sorted-merge routine the
+//! CSR builder uses, so the flat-CSR read fast path is restored as soon as
+//! readers move on. FlashGraph-style overlay/compaction: updates never
+//! stall reads, reads never block ingest.
+
+use crate::graph::csr::Csr;
+use crate::graph::delta::{DeltaOverlay, EdgeUpdate, UpdateOp};
+use crate::graph::view::{GraphView, NeighborScratch};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+/// Outcome of applying one update batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchStats {
+    /// Epoch the batch created (the store's new current epoch).
+    pub epoch: u64,
+    /// Undirected edges actually inserted (absent before the batch).
+    pub inserted: usize,
+    /// Undirected edges actually deleted (present before the batch).
+    pub deleted: usize,
+    /// Updates that were no-ops: inserting a present edge, deleting an
+    /// absent one, or cancelled within the batch (last op wins).
+    pub redundant: usize,
+    /// Updates dropped as invalid (self loop or endpoint out of range).
+    pub invalid: usize,
+}
+
+/// Outcome of one compaction pass.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompactStats {
+    /// Overlays merged into the new base (0 = nothing was drainable).
+    pub drained: usize,
+    /// Epoch of the new base after the pass.
+    pub base_epoch: u64,
+}
+
+/// The epoch-based snapshot store (see module docs).
+#[derive(Debug)]
+pub struct GraphStore<'g> {
+    /// The flat base. Starts borrowed from the caller; the first
+    /// compaction replaces it with an owned merged CSR.
+    base: Cow<'g, Csr>,
+    /// Epoch id of the base. `overlays[i]` is epoch `base_epoch + i + 1`.
+    base_epoch: u64,
+    overlays: Vec<Arc<DeltaOverlay>>,
+    /// Refcount per pinned epoch.
+    pins: BTreeMap<u64, usize>,
+    compactions: usize,
+    overlays_compacted: usize,
+}
+
+impl<'g> GraphStore<'g> {
+    /// A store whose epoch 0 is `base`.
+    pub fn new(base: &'g Csr) -> Self {
+        GraphStore {
+            base: Cow::Borrowed(base),
+            base_epoch: 0,
+            overlays: Vec::new(),
+            pins: BTreeMap::new(),
+            compactions: 0,
+            overlays_compacted: 0,
+        }
+    }
+
+    /// The newest epoch (what an arriving query pins).
+    pub fn current_epoch(&self) -> u64 {
+        self.base_epoch + self.overlays.len() as u64
+    }
+
+    /// Epoch of the compacted base; epochs below it are retired.
+    pub fn base_epoch(&self) -> u64 {
+        self.base_epoch
+    }
+
+    /// Overlays currently stacked (epochs newer than the base).
+    pub fn live_overlays(&self) -> usize {
+        self.overlays.len()
+    }
+
+    /// Compaction passes run so far.
+    pub fn compactions(&self) -> usize {
+        self.compactions
+    }
+
+    /// Overlays merged away over the store's lifetime.
+    pub fn overlays_compacted(&self) -> usize {
+        self.overlays_compacted
+    }
+
+    /// View of the newest epoch.
+    pub fn view(&self) -> GraphView<'_> {
+        GraphView::overlaid(&self.base, &self.overlays)
+    }
+
+    /// View of a specific epoch. Errors if the epoch was retired by
+    /// compaction (pin it to prevent that) or never existed.
+    pub fn view_at(&self, epoch: u64) -> anyhow::Result<GraphView<'_>> {
+        anyhow::ensure!(
+            epoch >= self.base_epoch,
+            "epoch {epoch} was retired by compaction (base epoch {})",
+            self.base_epoch
+        );
+        anyhow::ensure!(
+            epoch <= self.current_epoch(),
+            "epoch {epoch} not yet created (current {})",
+            self.current_epoch()
+        );
+        let k = (epoch - self.base_epoch) as usize;
+        Ok(GraphView::overlaid(&self.base, &self.overlays[..k]))
+    }
+
+    /// Pin the current epoch for a starting query: compaction will not
+    /// retire it (or anything it stacks on) until every pin is released.
+    /// Returns the pinned epoch.
+    pub fn pin(&mut self) -> u64 {
+        let e = self.current_epoch();
+        *self.pins.entry(e).or_insert(0) += 1;
+        e
+    }
+
+    /// Release one pin on `epoch`. Panics on unbalanced unpins — a
+    /// refcount underflow is a scheduler bug, not load.
+    pub fn unpin(&mut self, epoch: u64) {
+        let count = self.pins.get_mut(&epoch).expect("unpin of never-pinned epoch");
+        *count -= 1;
+        if *count == 0 {
+            self.pins.remove(&epoch);
+        }
+    }
+
+    /// Whether `epoch` currently has pins.
+    pub fn pinned(&self, epoch: u64) -> bool {
+        self.pins.contains_key(&epoch)
+    }
+
+    /// The oldest pinned epoch, if any query is in flight.
+    pub fn min_pinned(&self) -> Option<u64> {
+        self.pins.keys().next().copied()
+    }
+
+    /// Overlays a compaction pass could merge right now: those at or below
+    /// the oldest pin (a pinned epoch's view needs the base to stop
+    /// *before* any newer overlay, so only the prefix up to the oldest pin
+    /// is drainable).
+    pub fn drainable_overlays(&self) -> usize {
+        let horizon = self.min_pinned().unwrap_or(self.current_epoch());
+        (horizon.min(self.current_epoch()) - self.base_epoch) as usize
+    }
+
+    /// Apply one update batch as a new epoch. The overlay records the
+    /// batch's *net effect*: within the batch the last op on an edge wins,
+    /// and updates that do not change the current view (inserting a
+    /// present edge, deleting an absent one) are counted as redundant
+    /// rather than recorded — so overlay arc counts are exact.
+    pub fn apply_batch(&mut self, updates: &[EdgeUpdate]) -> BatchStats {
+        let n = self.n() as u32;
+        let mut invalid = 0usize;
+        // Last-op-wins per normalized edge, in deterministic first-seen
+        // order so overlay construction is reproducible.
+        let mut order: Vec<(u32, u32)> = Vec::new();
+        let mut net: std::collections::HashMap<(u32, u32), UpdateOp> =
+            std::collections::HashMap::new();
+        for upd in updates {
+            if upd.u == upd.v || upd.u >= n || upd.v >= n {
+                invalid += 1;
+                continue;
+            }
+            let key = upd.normalized();
+            if net.insert(key, upd.op).is_none() {
+                order.push(key);
+            }
+        }
+        let redundant_in_batch = updates.len() - invalid - order.len();
+
+        let mut inserts: Vec<(u32, u32)> = Vec::new();
+        let mut deletes: Vec<(u32, u32)> = Vec::new();
+        let mut redundant = redundant_in_batch;
+        {
+            let view = self.view();
+            let mut scratch = NeighborScratch::default();
+            for key in order {
+                let present = view.neighbors(key.0, &mut scratch).binary_search(&key.1).is_ok();
+                match (net[&key], present) {
+                    (UpdateOp::Insert, false) => inserts.push(key),
+                    (UpdateOp::Delete, true) => deletes.push(key),
+                    _ => redundant += 1,
+                }
+            }
+        }
+        let inserted = inserts.len();
+        let deleted = deletes.len();
+        self.overlays.push(Arc::new(DeltaOverlay::from_effective(&inserts, &deletes)));
+        BatchStats { epoch: self.current_epoch(), inserted, deleted, redundant, invalid }
+    }
+
+    /// Merge every drainable overlay into a new flat base (the shared
+    /// sorted-merge routine does each row — see
+    /// [`crate::graph::delta::merge_neighbors`]). A no-op returning
+    /// `drained: 0` when pins block everything; never retires a pinned
+    /// epoch.
+    pub fn compact(&mut self) -> CompactStats {
+        let k = self.drainable_overlays();
+        if k == 0 {
+            return CompactStats { drained: 0, base_epoch: self.base_epoch };
+        }
+        let target = self.base_epoch + k as u64;
+        let merged = self
+            .view_at(target)
+            .expect("drainable epoch is always viewable")
+            .to_csr();
+        self.base = Cow::Owned(merged);
+        self.overlays.drain(..k);
+        self.base_epoch = target;
+        self.compactions += 1;
+        self.overlays_compacted += k;
+        CompactStats { drained: k, base_epoch: self.base_epoch }
+    }
+
+    /// Number of vertices (constant across epochs).
+    pub fn n(&self) -> usize {
+        self.base.n()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::validate;
+
+    fn base() -> Csr {
+        build_undirected_csr(6, &[(0, 1), (1, 2), (2, 3), (4, 5)])
+    }
+
+    #[test]
+    fn epochs_advance_and_views_freeze() {
+        let g = base();
+        let mut store = GraphStore::new(&g);
+        assert_eq!(store.current_epoch(), 0);
+        let s = store.apply_batch(&[EdgeUpdate::insert(0, 3), EdgeUpdate::delete(4, 5)]);
+        assert_eq!(s.epoch, 1);
+        assert_eq!((s.inserted, s.deleted, s.redundant, s.invalid), (1, 1, 0, 0));
+        // Epoch 0 still reads the original graph; epoch 1 the mutated one.
+        assert_eq!(store.view_at(0).unwrap().to_csr(), g);
+        let v1 = store.view_at(1).unwrap();
+        assert_eq!(v1.degree(0), 2);
+        assert_eq!(v1.degree(4), 0);
+        validate::check_invariants(&v1.to_csr()).unwrap();
+    }
+
+    #[test]
+    fn redundant_and_invalid_updates_are_counted_not_recorded() {
+        let g = base();
+        let mut store = GraphStore::new(&g);
+        let s = store.apply_batch(&[
+            EdgeUpdate::insert(0, 1),  // already present
+            EdgeUpdate::delete(0, 3),  // absent
+            EdgeUpdate::insert(2, 2),  // self loop
+            EdgeUpdate::insert(0, 99), // out of range
+            EdgeUpdate::insert(3, 5),  // effective
+            EdgeUpdate::delete(3, 5),  // cancels within the batch
+        ]);
+        assert_eq!((s.inserted, s.deleted), (0, 0));
+        assert_eq!(s.redundant, 3); // present-insert, absent-delete, cancelled pair
+        assert_eq!(s.invalid, 2);
+        assert_eq!(store.view().to_csr(), g, "net no-op batch");
+    }
+
+    #[test]
+    fn last_op_wins_within_a_batch() {
+        let g = base();
+        let mut store = GraphStore::new(&g);
+        // Delete then re-insert an existing edge: net effect depends on
+        // the LAST op — the edge stays (insert of a present edge after an
+        // in-batch delete nets out to "still present").
+        let s = store.apply_batch(&[EdgeUpdate::delete(0, 1), EdgeUpdate::insert(1, 0)]);
+        assert_eq!((s.inserted, s.deleted), (0, 0));
+        assert!(store.view().degree(0) == 1);
+    }
+
+    #[test]
+    fn compaction_respects_pins_and_refcounts() {
+        let g = base();
+        let mut store = GraphStore::new(&g);
+        let e0 = store.pin();
+        let e0_again = store.pin();
+        assert_eq!(e0, 0);
+        assert_eq!(e0_again, 0);
+        store.apply_batch(&[EdgeUpdate::insert(0, 3)]);
+        store.apply_batch(&[EdgeUpdate::insert(0, 4)]);
+        // Pins at 0 block everything.
+        assert_eq!(store.drainable_overlays(), 0);
+        assert_eq!(store.compact().drained, 0);
+        // One unpin is not enough (refcount 2).
+        store.unpin(e0);
+        assert_eq!(store.compact().drained, 0);
+        assert_eq!(store.view_at(0).unwrap().to_csr(), g, "pinned epoch intact");
+        // Final unpin releases both overlays.
+        store.unpin(e0_again);
+        let c = store.compact();
+        assert_eq!(c.drained, 2);
+        assert_eq!(store.base_epoch(), 2);
+        assert_eq!(store.live_overlays(), 0);
+        assert!(store.view().is_flat(), "compaction restores the flat fast path");
+        // The retired epoch is gone; the surviving one reads correctly.
+        assert!(store.view_at(0).is_err());
+        assert!(store.view_at(1).is_err());
+        assert_eq!(store.view_at(2).unwrap().degree(0), 3);
+        assert_eq!(store.compactions(), 1);
+        assert_eq!(store.overlays_compacted(), 2);
+    }
+
+    #[test]
+    fn mid_stack_pin_allows_prefix_compaction() {
+        let g = base();
+        let mut store = GraphStore::new(&g);
+        store.apply_batch(&[EdgeUpdate::insert(0, 3)]);
+        let e1 = store.pin();
+        assert_eq!(e1, 1);
+        store.apply_batch(&[EdgeUpdate::insert(0, 4)]);
+        store.apply_batch(&[EdgeUpdate::insert(0, 5)]);
+        // Overlay 1 is at the pin; only it is drainable.
+        assert_eq!(store.drainable_overlays(), 1);
+        let before = store.view_at(e1).unwrap().to_csr();
+        let c = store.compact();
+        assert_eq!(c.drained, 1);
+        assert_eq!(store.base_epoch(), 1);
+        // The pinned epoch's snapshot is unchanged by compaction.
+        assert_eq!(store.view_at(e1).unwrap().to_csr(), before);
+        // Newer epochs still resolve.
+        assert_eq!(store.view_at(3).unwrap().degree(0), 4);
+        store.unpin(e1);
+        assert_eq!(store.compact().drained, 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "unpin of never-pinned epoch")]
+    fn unbalanced_unpin_panics() {
+        let g = base();
+        let mut store = GraphStore::new(&g);
+        store.unpin(0);
+    }
+
+    #[test]
+    fn compacted_store_equals_replayed_updates() {
+        let g = build_undirected_csr(32, &(0..31u32).map(|i| (i, i + 1)).collect::<Vec<_>>());
+        let mut store = GraphStore::new(&g);
+        let mut rng = crate::util::rng::SplitMix64::new(77);
+        let mut reference: std::collections::BTreeSet<(u32, u32)> =
+            (0..31u32).map(|i| (i, i + 1)).collect();
+        for _ in 0..6 {
+            let batch = crate::graph::delta::random_batch(store.view(), 24, 0.3, &mut rng);
+            for upd in &batch {
+                let key = upd.normalized();
+                match upd.op {
+                    UpdateOp::Insert => {
+                        reference.insert(key);
+                    }
+                    UpdateOp::Delete => {
+                        reference.remove(&key);
+                    }
+                }
+            }
+            store.apply_batch(&batch);
+        }
+        let expect =
+            build_undirected_csr(32, &reference.iter().copied().collect::<Vec<_>>());
+        assert_eq!(store.view().to_csr(), expect, "overlaid view replays the stream");
+        store.compact();
+        assert_eq!(store.view().to_csr(), expect, "compaction preserves the edge set");
+        validate::check_invariants(&store.view().to_csr()).unwrap();
+    }
+}

@@ -1,0 +1,233 @@
+//! `GraphView` — the one read abstraction every analysis and oracle runs
+//! against (DESIGN.md §Mutation).
+//!
+//! A view is a borrowed snapshot: an immutable base [`Csr`] plus zero or
+//! more epoch-ordered [`DeltaOverlay`]s. Reads resolve through the shared
+//! sorted-merge routine ([`crate::graph::delta::merge_neighbors`]), folding
+//! overlays in epoch order so a delete in epoch 3 of an edge inserted in
+//! epoch 2 behaves exactly like replaying the update stream.
+//!
+//! **Zero-overhead fast path:** a view with no overlays (or none touching
+//! the queried vertex) hands out the raw CSR slice — no copy, no merge, no
+//! allocation — so every existing demand vector is bit-identical when
+//! mutation is off. The CI bench gate pins this down
+//! (`ci/BENCH_baseline.json` strict metrics).
+
+use crate::graph::csr::Csr;
+use crate::graph::delta::{merge_neighbors, DeltaOverlay};
+use std::sync::Arc;
+
+/// Reusable merge buffers for overlaid neighbor resolution. Analyses carry
+/// one across their whole traversal so the overlay slow path allocates at
+/// most twice per query, not per vertex.
+#[derive(Debug, Default)]
+pub struct NeighborScratch {
+    a: Vec<u32>,
+    b: Vec<u32>,
+}
+
+/// A borrowed snapshot of the graph at one epoch: base CSR + the overlays
+/// applied up to (and including) that epoch, oldest first.
+///
+/// `Copy`: two references — pass it by value everywhere.
+#[derive(Debug, Clone, Copy)]
+pub struct GraphView<'a> {
+    base: &'a Csr,
+    overlays: &'a [Arc<DeltaOverlay>],
+}
+
+impl<'a> GraphView<'a> {
+    /// A view of a bare CSR: the fast path, bit-identical to reading the
+    /// CSR directly.
+    pub fn flat(base: &'a Csr) -> Self {
+        GraphView { base, overlays: &[] }
+    }
+
+    /// A view with overlays stacked on `base`, oldest first.
+    pub fn overlaid(base: &'a Csr, overlays: &'a [Arc<DeltaOverlay>]) -> Self {
+        GraphView { base, overlays }
+    }
+
+    /// True when no overlays are stacked (every read is a raw CSR slice).
+    pub fn is_flat(&self) -> bool {
+        self.overlays.is_empty()
+    }
+
+    /// The underlying base CSR (vertex count and striping never change
+    /// across epochs — only edge blocks do).
+    pub fn base(&self) -> &'a Csr {
+        self.base
+    }
+
+    /// Overlays stacked on the base, oldest first.
+    pub fn overlays(&self) -> &'a [Arc<DeltaOverlay>] {
+        self.overlays
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.base.n()
+    }
+
+    /// Neighbor slice of `v` at this view's epoch. Flat views (and views
+    /// whose overlays never touch `v`) return the raw CSR edge block; only
+    /// a touched vertex pays the overlay fold into `scratch`.
+    pub fn neighbors<'s>(&self, v: u32, scratch: &'s mut NeighborScratch) -> &'s [u32]
+    where
+        'a: 's,
+    {
+        let base = self.base.neighbors(v);
+        if self.overlays.is_empty() || !self.overlays.iter().any(|o| o.touches(v)) {
+            return base;
+        }
+        // Fold overlays in epoch order, ping-ponging between the two
+        // scratch buffers; untouched epochs are skipped for free.
+        scratch.a.clear();
+        scratch.a.extend_from_slice(base);
+        for ov in self.overlays {
+            if !ov.touches(v) {
+                continue;
+            }
+            scratch.b.clear();
+            merge_neighbors(&scratch.a, ov.inserts_of(v), ov.deletes_of(v), &mut scratch.b);
+            std::mem::swap(&mut scratch.a, &mut scratch.b);
+        }
+        &scratch.a
+    }
+
+    /// Degree of `v` at this view's epoch. O(1) on the fast path; a
+    /// touched vertex pays one overlay fold (allocating internally — use
+    /// [`GraphView::neighbors`] with a carried scratch inside hot loops).
+    pub fn degree(&self, v: u32) -> usize {
+        if self.overlays.is_empty() {
+            return self.base.degree(v);
+        }
+        // neighbors() short-circuits untouched vertices to the raw slice,
+        // and an unused NeighborScratch never heap-allocates.
+        let mut scratch = NeighborScratch::default();
+        self.neighbors(v, &mut scratch).len()
+    }
+
+    /// Directed edge count at this view's epoch. O(1) flat; otherwise
+    /// derived from the overlays' exact arc deltas.
+    pub fn m_directed(&self) -> usize {
+        let delta: i64 = self
+            .overlays
+            .iter()
+            .map(|o| o.inserted_arcs() as i64 - o.deleted_arcs() as i64)
+            .sum();
+        (self.base.m_directed() as i64 + delta) as usize
+    }
+
+    /// Bytes of one vertex's edge block in the paper's 64-bit
+    /// representation, given its degree at this view.
+    #[inline]
+    pub fn edge_block_bytes_for(degree: usize) -> u64 {
+        degree as u64 * Csr::PAPER_INT_BYTES
+    }
+
+    /// Materialize this view into a standalone CSR (compaction, oracles on
+    /// exact epoch edge sets, tests). The result satisfies the builder
+    /// invariants by construction — every row goes through the shared
+    /// sorted-merge routine.
+    pub fn to_csr(&self) -> Csr {
+        if self.overlays.is_empty() {
+            return self.base.clone();
+        }
+        let n = self.n();
+        let mut scratch = NeighborScratch::default();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u64);
+        let mut targets = Vec::with_capacity(self.m_directed());
+        for v in 0..n as u32 {
+            targets.extend_from_slice(self.neighbors(v, &mut scratch));
+            offsets.push(targets.len() as u64);
+        }
+        Csr::from_parts(offsets, targets)
+    }
+}
+
+impl<'a> From<&'a Csr> for GraphView<'a> {
+    fn from(base: &'a Csr) -> Self {
+        GraphView::flat(base)
+    }
+}
+
+impl Csr {
+    /// This graph as a flat (no-overlay) [`GraphView`].
+    pub fn view(&self) -> GraphView<'_> {
+        GraphView::flat(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::delta::DeltaOverlay;
+
+    fn path4() -> Csr {
+        build_undirected_csr(4, &[(0, 1), (1, 2), (2, 3)])
+    }
+
+    #[test]
+    fn flat_view_hands_out_raw_slices() {
+        let g = path4();
+        let v = g.view();
+        assert!(v.is_flat());
+        let mut scratch = NeighborScratch::default();
+        let nbrs = v.neighbors(1, &mut scratch);
+        // Zero-overhead: the returned slice IS the CSR's edge block.
+        assert_eq!(nbrs.as_ptr(), g.neighbors(1).as_ptr());
+        assert_eq!(nbrs, &[0, 2]);
+        assert_eq!(v.degree(1), 2);
+        assert_eq!(v.m_directed(), g.m_directed());
+        assert_eq!(v.to_csr(), g);
+    }
+
+    #[test]
+    fn overlay_inserts_and_deletes_resolve() {
+        let g = path4();
+        let ov = [Arc::new(DeltaOverlay::from_effective(&[(0, 3)], &[(1, 2)]))];
+        let v = GraphView::overlaid(&g, &ov);
+        assert!(!v.is_flat());
+        let mut s = NeighborScratch::default();
+        assert_eq!(v.neighbors(0, &mut s), &[1, 3]);
+        assert_eq!(v.neighbors(1, &mut s), &[0]);
+        assert_eq!(v.neighbors(2, &mut s), &[3]);
+        assert_eq!(v.neighbors(3, &mut s), &[0, 2]);
+        assert_eq!(v.degree(3), 2);
+        assert_eq!(v.m_directed(), g.m_directed()); // +2 arcs, -2 arcs
+        crate::graph::validate::check_invariants(&v.to_csr()).unwrap();
+    }
+
+    #[test]
+    fn untouched_vertices_stay_on_the_fast_path() {
+        let g = path4();
+        let ov = [Arc::new(DeltaOverlay::from_effective(&[(0, 2)], &[]))];
+        let v = GraphView::overlaid(&g, &ov);
+        let mut s = NeighborScratch::default();
+        // Vertex 3 is untouched: raw slice again, even with overlays.
+        assert_eq!(v.neighbors(3, &mut s).as_ptr(), g.neighbors(3).as_ptr());
+    }
+
+    #[test]
+    fn later_overlay_overrides_earlier() {
+        let g = path4();
+        // Epoch 1 inserts 0-3; epoch 2 deletes it; epoch 3 re-inserts.
+        let ovs = [
+            Arc::new(DeltaOverlay::from_effective(&[(0, 3)], &[])),
+            Arc::new(DeltaOverlay::from_effective(&[], &[(0, 3)])),
+            Arc::new(DeltaOverlay::from_effective(&[(0, 3)], &[])),
+        ];
+        let mut s = NeighborScratch::default();
+        let at = |k: usize, v: u32, s: &mut NeighborScratch| {
+            GraphView::overlaid(&g, &ovs[..k]).neighbors(v, s).to_vec()
+        };
+        assert_eq!(at(1, 0, &mut s), vec![1, 3]);
+        assert_eq!(at(2, 0, &mut s), vec![1]);
+        assert_eq!(at(3, 0, &mut s), vec![1, 3]);
+        assert_eq!(at(3, 3, &mut s), vec![0, 2]);
+    }
+}

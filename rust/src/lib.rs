@@ -13,8 +13,11 @@
 //! as a calibrated simulator (see DESIGN.md §Hardware-Adaptation) and keeps
 //! everything else real:
 //!
-//! * [`graph`] — Graph500/R-MAT generation and the paper's loose-sparse-row
-//!   striped storage (§IV-A).
+//! * [`graph`] — Graph500/R-MAT generation, the paper's loose-sparse-row
+//!   striped storage (§IV-A), and the live-mutation substrate: an
+//!   epoch-based snapshot store ([`graph::store::GraphStore`]) with
+//!   per-epoch delta overlays behind the [`graph::view::GraphView`] read
+//!   abstraction (DESIGN.md §Mutation).
 //! * [`sim`] — the Pathfinder model: nodes, multi-threaded cache-less cores,
 //!   NCDRAM channels, MSPs with `remote_min`, migration engine, RapidIO
 //!   fabric, memory views; both a flow-level and a discrete-event engine.

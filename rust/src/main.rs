@@ -20,6 +20,10 @@
 //!                       [--weights interactive=4,standard=2,batch=1]
 //!                       [--preempt]   (park Batch at checkpoints under
 //!                                      Interactive pressure)
+//!                       [--mutate rate=R,batch=B[,delete=F][,compact=K]]
+//!                                     (live edge ingest: update batches as
+//!                                      Batch-class work; queries pin their
+//!                                      admission epoch)
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -39,8 +43,8 @@ use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
-    planner, Coordinator, GraphService, Policy, PreemptPolicy, PriorityMix, QueryRequest,
-    ServiceConfig, ShareWeights, WorkloadSpec,
+    planner, Coordinator, GraphService, MutationConfig, Policy, PreemptPolicy, PriorityMix,
+    QueryRequest, ServiceConfig, ShareWeights, WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -171,8 +175,8 @@ fn cmd_validate(args: &Args) -> Result<()> {
             }
         }
         for (i, a) in instances.iter().enumerate() {
-            let out = a.run_offset(&g, &machine, i);
-            a.validate(&g, &out.values)
+            let out = a.run_offset(g.view(), &machine, i);
+            a.validate(g.view(), &out.values)
                 .with_context(|| format!("{} failed validation", a.describe()))?;
         }
         println!("  {label}: {} instance(s) match the host oracle", instances.len());
@@ -330,6 +334,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => ShareWeights::flat(),
         },
         preempt: args.has_flag("preempt").then(PreemptPolicy::default),
+        mutation: args.opt("mutate").map(MutationConfig::parse).transpose()?,
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
     let mix_desc: Vec<String> = cfg
@@ -338,12 +343,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .iter()
         .map(|c| format!("{}={:.2}", c.label, c.weight))
         .collect();
+    let mutate_desc = match &cfg.mutation {
+        Some(m) => format!(", mutating at {}", m.label()),
+        None => String::new(),
+    };
     println!(
-        "serving {} queries at {:.0} q/s ({}) on {}...",
+        "serving {} queries at {:.0} q/s ({}) on {} (seed {:#x}){}...",
         cfg.queries,
         cfg.arrival_rate_per_s,
         mix_desc.join(","),
-        svc.coordinator().machine().cfg.name
+        svc.coordinator().machine().cfg.name,
+        cfg.seed,
+        mutate_desc
     );
     let rep = svc.serve(&cfg)?;
     println!("{}", rep.summary());

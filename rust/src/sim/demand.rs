@@ -9,6 +9,7 @@
 //! dependency chain (e.g. pointer-jumping depth).
 
 use super::machine::Machine;
+use crate::graph::delta::EdgeUpdate;
 
 /// Resource demand of one synchronous phase of one query.
 #[derive(Debug, Clone, PartialEq)]
@@ -249,6 +250,57 @@ impl PhaseDemand {
         out
     }
 
+    /// Demand of applying one batched edge-update stream — the memory-side
+    /// ingest model (DESIGN.md §Mutation). Per update, per direction of
+    /// the undirected edge, the applier follows the tuned-BFS write rule
+    /// (§III): it issues an **unconditional remote write** of the edge
+    /// record into the destination vertex's delta log (one random op at
+    /// the destination channel — checking first would migrate, so it
+    /// never does) plus one **MSP read-modify-write** that splices the
+    /// log head (`remote_add` on the per-vertex log pointer, §II). No
+    /// thread migrations at all; remote endpoints pay 16 fabric bytes per
+    /// message, charged at the issuing endpoint's node like BFS's remote
+    /// writes. Deletes cost the same (a tombstone is still a write). The
+    /// batch is a flat loop, so it overrides issue efficiency to 1.0 like
+    /// the CC hook sweep. The resulting phase runs through the same flow
+    /// engine as queries — mutation traffic competes for channel
+    /// bandwidth with everything else.
+    ///
+    /// Unlike a query's *private* arrays (which rotate by stripe offset so
+    /// concurrent queries heat different channels), the delta log is
+    /// **shared graph state at a fixed home**: every concurrent batch
+    /// updating a hot vertex lands on the same destination channel, so
+    /// skewed update streams contend exactly where the hardware would.
+    pub fn ingest_batch(m: &Machine, updates: &[EdgeUpdate]) -> PhaseDemand {
+        let layout = m.layout;
+        let nodes = m.nodes();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut ops = 0.0f64;
+        for upd in updates {
+            for (src, dst) in [(upd.u, upd.v), (upd.v, upd.u)] {
+                let sn = layout.node_of(src);
+                let dn = layout.node_of(dst);
+                let dc = layout.channel_of(dst);
+                // Unconditional remote write of the edge record.
+                b.channel_op(dn, dc, 1.0);
+                // MSP RMW splicing the per-vertex log head.
+                b.msp_op(dn, dc, 1.0);
+                ops += 2.0;
+                b.instructions(sn, m.cfg.instr_per_edge);
+                if dn != sn {
+                    b.fabric_bytes(sn, 2.0 * 16.0);
+                }
+            }
+        }
+        if ops > 0.0 {
+            b.parallelism(ops.min(contexts_total));
+            b.issue_efficiency(1.0);
+        }
+        b.finish()
+    }
+
     /// Fraction of channel ops that had to cross the fabric.
     fn mean_remote_fraction(&self) -> f64 {
         let total = self.total_channel_ops();
@@ -439,5 +491,50 @@ mod tests {
         let mut d = PhaseDemand::zero(8, 8);
         d.serial_hops = 1000.0;
         assert!(d.solo_ns(&m) > 1000.0 * m.cfg.migration_overhead_ns);
+    }
+
+    #[test]
+    fn ingest_batch_charges_write_and_msp_per_half_edge_no_migrations() {
+        use crate::graph::delta::EdgeUpdate;
+        let m = m8();
+        let updates =
+            vec![EdgeUpdate::insert(0, 9), EdgeUpdate::delete(1, 2), EdgeUpdate::insert(3, 3 + 8)];
+        let d = PhaseDemand::ingest_batch(&m, &updates);
+        // Two half-edges per update, two channel ops each (write + MSP).
+        assert_eq!(d.total_channel_ops(), updates.len() as f64 * 2.0 * 2.0);
+        // Exactly half the channel ops are MSP RMWs.
+        assert_eq!(d.msp_ops.iter().sum::<f64>(), updates.len() as f64 * 2.0);
+        // The write rule never migrates.
+        assert_eq!(d.total_migrations(), 0.0);
+        // (0,9) and (1,2) cross nodes both ways on the 8-node layout;
+        // (3,11) is node-local (11 mod 8 == 3): fabric only for remote.
+        assert_eq!(d.fabric_bytes.iter().sum::<f64>(), 4.0 * 32.0);
+        // Flat applier loop: issue efficiency pinned like the CC hook.
+        assert_eq!(d.issue_efficiency, Some(1.0));
+        assert!(d.solo_ns(&m) > 0.0);
+    }
+
+    #[test]
+    fn ingest_targets_the_fixed_delta_log_home_channel() {
+        use crate::graph::delta::EdgeUpdate;
+        let m = m8();
+        // Two batches hammering the same hot vertex 9 (node 1, channel 1):
+        // the delta log is SHARED state at a fixed home, so both charge
+        // the exact same destination channel — unlike queries' private
+        // arrays, which rotate per stripe offset.
+        let a = PhaseDemand::ingest_batch(&m, &[EdgeUpdate::insert(0, 9)]);
+        let b = PhaseDemand::ingest_batch(&m, &[EdgeUpdate::insert(16, 9)]);
+        let cpn = m.cfg.channels_per_node;
+        let hot = cpn + m.layout.channel_of(9); // node 1's row
+        assert_eq!(a.per_channel_ops[hot], 2.0, "write + MSP at 9's home");
+        assert_eq!(b.per_channel_ops[hot], 2.0, "every batch hits the same log channel");
+    }
+
+    #[test]
+    fn empty_ingest_batch_is_zero_demand() {
+        let m = m8();
+        let d = PhaseDemand::ingest_batch(&m, &[]);
+        assert_eq!(d.total_channel_ops(), 0.0);
+        assert_eq!(d.solo_ns(&m), m.cfg.level_sync_ns);
     }
 }

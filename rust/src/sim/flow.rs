@@ -466,6 +466,26 @@ impl FlowReport {
         }
         xs.iter().sum::<f64>() / xs.len() as f64
     }
+
+    /// Completed latencies (s) of one spec label — e.g. the `"mutate"`
+    /// ingest lane sharing the engine with queries (DESIGN.md §Mutation).
+    pub fn label_latencies_s(&self, label: &str) -> Vec<f64> {
+        self.timings
+            .iter()
+            .filter(|t| t.completed() && t.label == label)
+            .map(|t| t.latency_ns() * 1e-9)
+            .collect()
+    }
+
+    /// Mean completed latency (s) of one spec label; 0.0 if none
+    /// completed.
+    pub fn label_mean_latency_s(&self, label: &str) -> f64 {
+        let xs = self.label_latencies_s(label);
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
 }
 
 /// One in-flight phase inside the allocator.

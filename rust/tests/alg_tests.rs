@@ -127,8 +127,8 @@ fn analysis_api_round_trips_for_all_four_classes() {
         Box::new(KHop::new(5, 2)),
     ];
     for a in analyses {
-        let out = a.run(&g, &m);
-        a.validate(&g, &out.values).unwrap_or_else(|e| panic!("{}: {e}", a.describe()));
+        let out = a.run(g.view(), &m);
+        a.validate(g.view(), &out.values).unwrap_or_else(|e| panic!("{}: {e}", a.describe()));
         assert_eq!(out.label, a.label());
         assert!(!out.phases.is_empty());
         assert!(out.solo_ns(&m) > 0.0);

@@ -294,9 +294,9 @@ fn prop_registered_analyses_validate_under_both_policies() {
         // Policies share one functional execution path; validate it at
         // every stripe offset the batch would use.
         for (i, req) in requests.iter().enumerate() {
-            let out = req.analysis.run_offset(&g, coord.machine(), i);
+            let out = req.analysis.run_offset(g.view(), coord.machine(), i);
             req.analysis
-                .validate(&g, &out.values)
+                .validate(g.view(), &out.values)
                 .unwrap_or_else(|e| panic!("seed {seed} {}: {e}", req.analysis.describe()));
         }
     }
@@ -599,6 +599,128 @@ fn prop_admission_dispositions_partition_queries() {
             // NaN-free aggregate stats even with rejections/sheds present.
             assert!(rep.mean_latency_s().is_finite(), "seed {seed} {on_full:?}");
             assert!(rep.latencies_s().iter().all(|l| l.is_finite()));
+        }
+    }
+}
+
+/// Snapshot isolation (DESIGN.md §Mutation): a query pinned to epoch *e*
+/// computes — and validates against its host oracle — on epoch *e*'s exact
+/// edge set, while later batches apply and compaction runs underneath it.
+/// The reference edge set is maintained independently by replaying the
+/// update stream, so the store, the overlay fold, and compaction are all
+/// checked against ground truth.
+#[test]
+fn prop_pinned_epoch_queries_are_snapshot_isolated() {
+    use pathfinder_queries::graph::delta::{random_batch, UpdateOp};
+    use pathfinder_queries::graph::store::GraphStore;
+
+    let m = m8();
+    for seed in 0..CASES / 2 {
+        let mut rng = SplitMix64::new(seed ^ 0x5A9);
+        let g = random_graph(&mut rng);
+        let mut store = GraphStore::new(&g);
+        // Ground truth per epoch: replayed undirected edge sets.
+        let mut edges: std::collections::BTreeSet<(u32, u32)> = (0..g.n() as u32)
+            .flat_map(|u| g.neighbors(u).iter().map(move |&v| (u.min(v), u.max(v))))
+            .collect();
+        let mut truth = vec![build_undirected_csr(g.n(), &edges.iter().copied().collect::<Vec<_>>())];
+
+        // Pin epoch 0 as a long-running query would.
+        let pinned_epoch = store.pin();
+        let src = rng.gen_range(g.n() as u64) as u32;
+        let out_before = alg::Bfs { src }.run(store.view_at(pinned_epoch).unwrap(), &m);
+
+        for _ in 0..5 {
+            let batch = random_batch(store.view(), 12, 0.4, &mut rng);
+            for upd in &batch {
+                let key = upd.normalized();
+                match upd.op {
+                    UpdateOp::Insert => edges.insert(key),
+                    UpdateOp::Delete => edges.remove(&key),
+                };
+            }
+            store.apply_batch(&batch);
+            truth.push(build_undirected_csr(g.n(), &edges.iter().copied().collect::<Vec<_>>()));
+            // Compaction may run at any time; it must not disturb the pin.
+            store.compact();
+        }
+        assert_eq!(store.base_epoch(), 0, "seed {seed}: pinned epoch survived compaction");
+
+        // Every still-viewable epoch matches its replayed ground truth.
+        for (e, expect) in truth.iter().enumerate() {
+            let view = store.view_at(e as u64).unwrap_or_else(|err| panic!("seed {seed}: {err}"));
+            assert_eq!(&view.to_csr(), expect, "seed {seed} epoch {e}");
+        }
+
+        // The pinned query's world is frozen: same BFS result, and it
+        // validates against the oracle run on the pinned epoch's edge set
+        // — even though 5 batches landed since.
+        let pinned_view = store.view_at(pinned_epoch).unwrap();
+        let out_after = alg::Bfs { src }.run(pinned_view, &m);
+        assert_eq!(out_before.values, out_after.values, "seed {seed}");
+        alg::Bfs { src }
+            .validate(pinned_view, &out_after.values)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        oracle::check_bfs(&truth[0], src, &out_after.values)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+        // Release the pin: compaction now folds everything, the newest
+        // epoch still matches truth, and the pinned epoch is retired.
+        store.unpin(pinned_epoch);
+        let c = store.compact();
+        assert_eq!(c.drained, 5, "seed {seed}");
+        assert_eq!(&store.view().to_csr(), truth.last().unwrap(), "seed {seed}");
+        assert!(store.view_at(pinned_epoch).is_err() || pinned_epoch == store.base_epoch());
+    }
+}
+
+/// Epoch refcounting: compaction never retires an overlay any pin still
+/// needs, under randomized interleavings of pin/unpin/apply/compact.
+#[test]
+fn prop_compaction_never_retires_a_pinned_overlay() {
+    use pathfinder_queries::graph::delta::random_batch;
+    use pathfinder_queries::graph::store::GraphStore;
+
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0xEC0);
+        let g = random_graph(&mut rng);
+        let mut store = GraphStore::new(&g);
+        let mut pins: Vec<u64> = Vec::new();
+        let mut snapshots: Vec<(u64, Csr)> = Vec::new();
+        for _ in 0..24 {
+            match rng.gen_range(4) {
+                0 => {
+                    let batch = random_batch(store.view(), 6, 0.3, &mut rng);
+                    store.apply_batch(&batch);
+                }
+                1 => {
+                    let e = store.pin();
+                    pins.push(e);
+                    snapshots.push((e, store.view_at(e).unwrap().to_csr()));
+                }
+                2 if !pins.is_empty() => {
+                    let i = rng.gen_range(pins.len() as u64) as usize;
+                    let e = pins.swap_remove(i);
+                    store.unpin(e);
+                    snapshots.retain(|(se, _)| *se != e || pins.contains(&e));
+                }
+                _ => {
+                    store.compact();
+                }
+            }
+            // Invariant: every pinned epoch is still viewable and reads
+            // exactly the snapshot taken when it was pinned.
+            if let Some(min_pin) = pins.iter().min() {
+                assert!(
+                    store.base_epoch() <= *min_pin,
+                    "seed {seed}: base {} passed pin {min_pin}",
+                    store.base_epoch()
+                );
+            }
+            for (e, snap) in &snapshots {
+                let v = store.view_at(*e).unwrap_or_else(|err| panic!("seed {seed}: {err}"));
+                assert_eq!(&v.to_csr(), snap, "seed {seed} epoch {e}");
+            }
         }
     }
 }
