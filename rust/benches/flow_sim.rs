@@ -90,6 +90,37 @@ fn mutation_gate_specs(m: &Machine) -> Vec<QuerySpec> {
     specs
 }
 
+/// The mixed-analyses gate scenario (PR 5): 24 identical single-phase
+/// uniform-load queries, labeled/classed as 8 Interactive `bfs`, 8
+/// Standard `pagerank`, and 8 Batch `tricount` — the two new analytic
+/// kernels riding the scheduler as first-class labels. With per-query
+/// channel drain `D = 0.5e6 ns` (solo time cancels), completion times are
+/// closed-form:
+///
+/// * flat: all 24 share equally and finish together at `24 x D = 12e6 ns`
+///   — mean latency 0.012 s;
+/// * weighted 4:2:1 (class weight sums 32/16/8, Σ n_c w_c = 56):
+///   Interactive finishes at `56D/4 = 7e6 ns`; Standard (`pagerank`) then
+///   drains its remaining `0.5D` at rate 2/24, finishing at `20D = 10e6
+///   ns` (0.010 s); Batch (`tricount`) finishes last at `24D = 12e6 ns`
+///   (0.012 s — the work-conserving flat makespan).
+fn analysis_gate_specs(m: &Machine) -> Vec<QuerySpec> {
+    const CLASSES: [(&str, Priority); 3] = [
+        ("bfs", Priority::Interactive),
+        ("pagerank", Priority::Standard),
+        ("tricount", Priority::Batch),
+    ];
+    let mut specs = Vec::new();
+    for (label, priority) in CLASSES {
+        for _ in 0..8 {
+            let id = specs.len();
+            let phase = PhaseDemand::uniform_channel_load(m, 0.5, 1e6);
+            specs.push(QuerySpec::new(id, label, vec![phase], 0.0).with_priority(priority));
+        }
+    }
+    specs
+}
+
 /// Deterministic gate metrics with fluid-model closed forms (per-channel
 /// drain is `0.5e6 ns` per query, and the solo time cancels out of every
 /// completion time):
@@ -116,18 +147,36 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         &mspecs,
         Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
     );
+    // Mixed-analyses scenario (see [`analysis_gate_specs`]).
+    let aspecs = analysis_gate_specs(&m);
+    let aflat = sim.run_admitted(&aspecs, Admission::unlimited());
+    let aweighted = sim.run_admitted(
+        &aspecs,
+        Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
+    );
     // Guard the gate's own validity: the closed forms assume every spec
     // completes. label/class means return 0.0 when nothing completed,
     // which the relative check would wave through as an "improvement" —
     // fail loudly here instead.
-    for (name, rep) in [("mixed_mutation/flat", &mflat), ("mixed_mutation/weighted", &mweighted)]
-    {
+    for (name, rep, len) in [
+        ("mixed_mutation/flat", &mflat, mspecs.len()),
+        ("mixed_mutation/weighted", &mweighted, mspecs.len()),
+        ("analyses/flat", &aflat, aspecs.len()),
+        ("analyses/weighted", &aweighted, aspecs.len()),
+    ] {
         let done = rep.timings.iter().filter(|t| t.completed()).count();
-        assert_eq!(done, mspecs.len(), "{name}: every gate spec must complete");
+        assert_eq!(done, len, "{name}: every gate spec must complete");
+    }
+    assert_eq!(
+        mflat.label_latencies_s("mutate").len(),
+        8,
+        "mixed_mutation: the mutate lane must complete"
+    );
+    for label in ["pagerank", "tricount"] {
         assert_eq!(
-            rep.label_latencies_s("mutate").len(),
+            aweighted.label_latencies_s(label).len(),
             8,
-            "{name}: the mutate lane must complete"
+            "analyses: the {label} class must complete"
         );
     }
     vec![
@@ -145,6 +194,15 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         (
             "mixed_mutation/weighted/mutate_mean_latency_s",
             mweighted.label_mean_latency_s("mutate"),
+        ),
+        ("analyses/unweighted/mean_latency_s", aflat.mean_latency_s()),
+        (
+            "analyses/weighted/pagerank_mean_latency_s",
+            aweighted.label_mean_latency_s("pagerank"),
+        ),
+        (
+            "analyses/weighted/tricount_mean_latency_s",
+            aweighted.label_mean_latency_s("tricount"),
         ),
     ]
 }

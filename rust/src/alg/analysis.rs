@@ -59,16 +59,32 @@ pub trait Analysis: std::fmt::Debug + Send + Sync {
 
     /// Per-query thread-context memory reservation (bytes, whole machine),
     /// or `None` to use the machine's default per-query footprint.
-    fn ctx_mem_bytes(&self, g: GraphView<'_>) -> Option<u64> {
-        let _ = g;
+    /// Analyses declaring "the default plus my private arrays" should add
+    /// their array bytes to `m.cfg.ctx_bytes_per_query` — the hook
+    /// receives the machine so custom configs (larger or smaller
+    /// per-query reservations) price every analysis consistently; see
+    /// docs/ANALYSES.md §Context footprint.
+    fn ctx_mem_bytes(&self, g: GraphView<'_>, m: &Machine) -> Option<u64> {
+        let _ = (g, m);
         None
     }
 
     /// If `Some(key)`, this instance's demand at stripe offset 0 is
     /// identical to every other instance returning the same key *on the
     /// same epoch* (no per-query parameter affects demand), so the
-    /// coordinator may compute it once per key+epoch and rotate channels
-    /// per concurrent instance.
+    /// coordinator may compute it once and serve further instances as
+    /// channel rotations. (The implementation caches **epoch 0 only** —
+    /// the static graph; mutation-lane epochs bypass the cache, see
+    /// [`crate::coordinator::Coordinator::prepare_one`].)
+    ///
+    /// Declaring a key is a **rotation-equivariance contract**: cached
+    /// instance `k` is served as `phases(g, m, 0)` with every phase
+    /// [`PhaseDemand::rotate_channels`]-rotated by `k`, so a direct
+    /// `phases(g, m, k)` must equal exactly that — every random op,
+    /// including reads of shared graph state, must be charged in the
+    /// query's stripe-rotated frame (the coordinator test
+    /// `cacheable_demand_rotation_matches_direct_preparation` pins this
+    /// for every shipped cacheable analysis).
     fn cacheable_demand(&self) -> Option<String> {
         None
     }
@@ -109,7 +125,9 @@ mod tests {
     use crate::alg::bfs::Bfs;
     use crate::alg::cc::Cc;
     use crate::alg::khop::KHop;
+    use crate::alg::pagerank::PageRank;
     use crate::alg::sssp::Sssp;
+    use crate::alg::tricount::TriCount;
     use crate::config::machine::MachineConfig;
     use crate::config::workload::GraphConfig;
     use crate::graph::builder::build_undirected_csr;
@@ -132,6 +150,8 @@ mod tests {
             Arc::new(Cc),
             Arc::new(Sssp { src: 3 }),
             Arc::new(KHop::new(3, 2)),
+            Arc::new(PageRank),
+            Arc::new(TriCount),
         ]
     }
 
@@ -155,13 +175,17 @@ mod tests {
         assert_eq!(Cc.describe(), "cc");
         assert_eq!(Sssp { src: 7 }.describe(), "sssp(src=7)");
         assert_eq!(KHop::new(7, 3).describe(), "khop(src=7,k=3)");
+        assert_eq!(PageRank.describe(), "pagerank");
+        assert_eq!(TriCount.describe(), "tricount");
         let labels: Vec<_> = all_analyses().iter().map(|a| a.label()).collect();
-        assert_eq!(labels, vec!["bfs", "cc", "sssp", "khop"]);
+        assert_eq!(labels, vec!["bfs", "cc", "sssp", "khop", "pagerank", "tricount"]);
     }
 
     #[test]
     fn only_parameter_free_analyses_are_demand_cacheable() {
         assert_eq!(Cc.cacheable_demand().as_deref(), Some("cc"));
+        assert_eq!(PageRank.cacheable_demand().as_deref(), Some("pagerank"));
+        assert_eq!(TriCount.cacheable_demand().as_deref(), Some("tricount"));
         assert!(Bfs { src: 0 }.cacheable_demand().is_none());
         assert!(Sssp { src: 0 }.cacheable_demand().is_none());
         assert!(KHop::new(0, 2).cacheable_demand().is_none());
@@ -173,7 +197,11 @@ mod tests {
         let m = m8();
         for a in all_analyses() {
             let mut out = a.run(g.view(), &m);
-            out.values[10] = 999_999;
+            // Last element so the check also covers tricount's
+            // single-value result; the magnitude is far outside every
+            // oracle's tolerance (PageRank's scaled tolerance is 1e6).
+            let last = out.values.len() - 1;
+            out.values[last] += 999_999_999;
             assert!(a.validate(g.view(), &out.values).is_err(), "{}", a.label());
         }
     }

@@ -147,10 +147,14 @@ pub fn cc_run_offset<'a>(g: impl Into<GraphView<'a>>, m: &Machine, stripe_offset
             b.channel_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 3.0);
             b.instructions(vn, CHECK_INSTR_PER_VERTEX);
         }
-        // The reduction thread hops node to node (Fig. 2 line 2).
+        // The reduction thread hops node to node (Fig. 2 line 2). The
+        // view-0 `changed` flag is per-query private state, so its read
+        // rides the stripe rotation like the C/pC arrays — CC's demand is
+        // cacheable, and the cache's channel rotation must reproduce a
+        // direct preparation exactly (Analysis::cacheable_demand).
         for node in 1..nodes {
             b.migration(node, 1.0);
-            b.channel_op(node, 0, 1.0);
+            b.channel_op(node, stripe_offset % channels, 1.0);
             b.fabric_bytes(node - 1, 64.0);
         }
         b.serial_hops(nodes as f64 - 1.0);

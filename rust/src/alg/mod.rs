@@ -4,33 +4,47 @@
 //!
 //! * a **host oracle** ([`oracle`]) — the plain, obviously-correct
 //!   implementation used to validate functional results;
-//! * a **Pathfinder execution** ([`bfs`], [`cc`], [`sssp`], [`khop`]) —
-//!   the algorithm run functionally over the real graph while emitting the
-//!   per-phase [`crate::sim::PhaseDemand`] resource vectors the simulator
-//!   engines charge time for. The emission follows the paper's
-//!   implementation notes: the tuned BFS trades thread migrations for
-//!   non-migrating remote writes (§III, [10]); connected components is
-//!   Figure 2 — Shiloach-Vishkin with MSP `remote_min` hooks, a view-0
-//!   `changed` flag reduced by a migrating thread, and a pointer-jumping
-//!   compress; shortest paths is delta-stepping on the same `remote_min`
-//!   hook; k-hop is the BFS truncated at depth k.
+//! * a **Pathfinder execution** ([`bfs`], [`cc`], [`sssp`], [`khop`],
+//!   [`pagerank`], [`tricount`]) — the algorithm run functionally over the
+//!   real graph while emitting the per-phase [`crate::sim::PhaseDemand`]
+//!   resource vectors the simulator engines charge time for. The emission
+//!   follows the paper's implementation notes: the tuned BFS trades thread
+//!   migrations for non-migrating remote writes (§III, [10]); connected
+//!   components is Figure 2 — Shiloach-Vishkin with MSP `remote_min`
+//!   hooks, a view-0 `changed` flag reduced by a migrating thread, and a
+//!   pointer-jumping compress; shortest paths is delta-stepping on the
+//!   same `remote_min` hook; k-hop is the BFS truncated at depth k;
+//!   PageRank is a dense per-round `remote_add` accumulation sweep (the
+//!   paper's thesis stretched to an iterative kernel — every round is a
+//!   CC-hook-shaped flat sweep); triangle counting is degree-ordered
+//!   neighbor intersection, the one *read*-shaped kernel (remote reads
+//!   migrate, so its wedge scans pay the migrations every other kernel
+//!   avoids).
 //!
 //! The [`analysis`] module defines the [`Analysis`] trait every workload
 //! implements and the coordinator schedules; [`registry`] maps class
 //! labels to factories so new analyses plug in without touching the
-//! serving layers (see DESIGN.md §Query-API).
+//! serving layers (see DESIGN.md §Query-API). **Adding a seventh analysis
+//! is a documented, worked-through path: see docs/ANALYSES.md**, which
+//! walks the trait hooks, the demand-model derivation, the oracle and
+//! property-test expectations, and the CLI/service wiring using
+//! [`pagerank`] as the example.
 
 pub mod analysis;
 pub mod bfs;
 pub mod cc;
 pub mod khop;
 pub mod oracle;
+pub mod pagerank;
 pub mod registry;
 pub mod sssp;
+pub mod tricount;
 
 pub use analysis::{Analysis, QueryOutput};
 pub use bfs::{bfs_run, bfs_run_capped, bfs_run_offset, Bfs, BfsRun};
 pub use cc::{cc_run, cc_run_offset, Cc, CcRun};
 pub use khop::{khop_run, khop_run_offset, KHop, KhopRun};
+pub use pagerank::{pagerank_run, pagerank_run_offset, PageRank, PageRankRun};
 pub use registry::{AnalysisFactory, AnalysisRegistry};
 pub use sssp::{edge_weight, sssp_run, sssp_run_offset, Sssp, SsspRun};
+pub use tricount::{tricount_run, tricount_run_offset, TriCount, TriCountRun};

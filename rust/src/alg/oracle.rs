@@ -4,7 +4,8 @@
 //! baseline-engine) result can be checked against an independent
 //! implementation: plain queue BFS, union-find connected components,
 //! binary-heap Dijkstra (over the synthesized [`crate::alg::sssp`]
-//! weights), and truncated-BFS k-hop levels.
+//! weights), truncated-BFS k-hop levels, pull-based power-iteration
+//! PageRank, and hash-set triangle counting.
 //!
 //! All oracles read through [`GraphView`], so a result computed on a
 //! pinned epoch snapshot is checked against an oracle run on *that exact
@@ -164,6 +165,119 @@ pub fn check_khop<'a>(
     Ok(())
 }
 
+/// Plain **pull-based** power-iteration PageRank: an independent
+/// implementation of the same fixpoint the push-style Pathfinder kernel
+/// ([`crate::alg::pagerank`]) iterates — same damping, round cap, L1
+/// stopping rule and uniform dangling-mass redistribution, but each
+/// vertex *gathers* its in-neighbor contributions instead of scattering
+/// pushes (in-neighbors == neighbors on an undirected graph). Returns
+/// unscaled f64 ranks summing to 1.
+pub fn pagerank_ranks<'a>(g: impl Into<GraphView<'a>>) -> Vec<f64> {
+    use crate::alg::pagerank::{DAMPING, L1_EPS, MAX_ROUNDS};
+
+    let g: GraphView<'a> = g.into();
+    let n = g.n();
+    let inv_n = 1.0 / n as f64;
+    let mut scratch = NeighborScratch::default();
+    let mut deg = vec![0usize; n];
+    for v in 0..n as u32 {
+        deg[v as usize] = g.neighbors(v, &mut scratch).len();
+    }
+    let mut ranks = vec![inv_n; n];
+    for _ in 0..MAX_ROUNDS {
+        let dangling: f64 = (0..n).filter(|&v| deg[v] == 0).map(|v| ranks[v]).sum();
+        let mut next = vec![0.0f64; n];
+        for v in 0..n as u32 {
+            let mut acc = 0.0f64;
+            for &u in g.neighbors(v, &mut scratch) {
+                acc += ranks[u as usize] / deg[u as usize] as f64;
+            }
+            next[v as usize] = (1.0 - DAMPING) * inv_n + DAMPING * (acc + dangling * inv_n);
+        }
+        let residual: f64 = next.iter().zip(&ranks).map(|(a, b)| (a - b).abs()).sum();
+        ranks = next;
+        if residual <= L1_EPS {
+            break;
+        }
+    }
+    ranks
+}
+
+/// Check a fixed-point-scaled rank vector against [`pagerank_ranks`]:
+/// per-vertex within [`crate::alg::pagerank::ORACLE_TOL`], and total mass
+/// conserved to rounding.
+pub fn check_pagerank<'a>(g: impl Into<GraphView<'a>>, values: &[i64]) -> anyhow::Result<()> {
+    use crate::alg::pagerank::{ORACLE_TOL, RANK_SCALE};
+
+    let g: GraphView<'a> = g.into();
+    anyhow::ensure!(values.len() == g.n(), "rank vector length mismatch");
+    let truth = pagerank_ranks(g);
+    let tol = (ORACLE_TOL * RANK_SCALE) as i64;
+    let mut sum = 0i64;
+    for v in 0..g.n() {
+        let want = (truth[v] * RANK_SCALE).round() as i64;
+        anyhow::ensure!(
+            (values[v] - want).abs() <= tol,
+            "vertex {v}: scaled rank {} but oracle says {want} (tolerance {tol})",
+            values[v]
+        );
+        sum += values[v];
+    }
+    let mass_tol = g.n() as i64 + tol;
+    anyhow::ensure!(
+        (sum - RANK_SCALE as i64).abs() <= mass_tol,
+        "ranks sum to {sum}, want {} ± {mass_tol} (mass not conserved)",
+        RANK_SCALE as i64
+    );
+    Ok(())
+}
+
+/// Brute-force triangle total: materialize the undirected edge set in a
+/// hash set, then for every id-ordered edge `(u, v)` count the common
+/// neighbors `w > v` — each triangle `a < b < c` is counted exactly once,
+/// at edge `(a, b)` with `w = c`. Independent of the degree ordering the
+/// Pathfinder kernel ([`crate::alg::tricount`]) uses.
+pub fn triangle_total<'a>(g: impl Into<GraphView<'a>>) -> u64 {
+    let g: GraphView<'a> = g.into();
+    let n = g.n();
+    let mut scratch = NeighborScratch::default();
+    let mut edges: std::collections::HashSet<(u32, u32)> = std::collections::HashSet::new();
+    for u in 0..n as u32 {
+        for &v in g.neighbors(u, &mut scratch) {
+            if u < v {
+                edges.insert((u, v));
+            }
+        }
+    }
+    let mut total = 0u64;
+    for &(u, v) in &edges {
+        for &w in g.neighbors(u, &mut scratch) {
+            if w > v && edges.contains(&(v, w)) {
+                total += 1;
+            }
+        }
+    }
+    total
+}
+
+/// Check a triangle-count result (a single-element value vector) against
+/// [`triangle_total`] — exact, no tolerance.
+pub fn check_tricount<'a>(g: impl Into<GraphView<'a>>, values: &[i64]) -> anyhow::Result<()> {
+    let g: GraphView<'a> = g.into();
+    anyhow::ensure!(
+        values.len() == 1,
+        "triangle count is a single total, got {} values",
+        values.len()
+    );
+    let truth = triangle_total(g) as i64;
+    anyhow::ensure!(
+        values[0] == truth,
+        "triangle count {} but oracle says {truth}",
+        values[0]
+    );
+    Ok(())
+}
+
 /// Check that `labels` equals the union-find component-minimum labeling.
 pub fn check_cc<'a>(g: impl Into<GraphView<'a>>, labels: &[i64]) -> anyhow::Result<()> {
     let g: GraphView<'a> = g.into();
@@ -263,6 +377,40 @@ mod tests {
         let mut bad = labels;
         bad[0] = 2;
         assert!(check_cc(&g, &bad).is_err());
+    }
+
+    #[test]
+    fn pagerank_mass_and_symmetry() {
+        // Diamond is vertex-transitive under the 1<->2 swap: equal ranks.
+        let g = diamond();
+        let r = pagerank_ranks(&g);
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!((r[1] - r[2]).abs() < 1e-12);
+        // 0 and 3 are symmetric to each other too (both degree 2).
+        assert!((r[0] - r[3]).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pagerank_dangling_mass_is_redistributed() {
+        // One edge + three isolated vertices: mass still sums to 1, and
+        // the connected pair outranks the isolated vertices.
+        let g = build_undirected_csr(5, &[(0, 1)]);
+        let r = pagerank_ranks(&g);
+        assert!((r.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(r[0] > r[2]);
+        assert!((r[2] - r[4]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn triangle_totals_on_known_graphs() {
+        assert_eq!(triangle_total(&diamond()), 0); // 4-cycle, no chord
+        let tri = build_undirected_csr(3, &[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(triangle_total(&tri), 1);
+        // Two triangles sharing edge 0-1.
+        let bowtie = build_undirected_csr(4, &[(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)]);
+        assert_eq!(triangle_total(&bowtie), 2);
+        check_tricount(&bowtie, &[2]).unwrap();
+        assert!(check_tricount(&bowtie, &[3]).is_err());
     }
 
     /// Oracles evaluate the exact overlaid edge set, not the base's.

@@ -1,0 +1,286 @@
+//! Push-style iterative PageRank — the canonical accumulation-heavy
+//! kernel (PIUMA and FlashGraph both use it as the dense-RMW stress
+//! workload), mapped onto the Pathfinder's memory-side `remote_add`.
+//!
+//! Every round is two synchronous phases:
+//!
+//! 1. **Push sweep** ([`PhaseDemand::pagerank_push_round`]) — a flat
+//!    `cilk_for` over all vertices: each worker reads its own rank record,
+//!    streams its edge block, and issues one MSP `remote_add` of
+//!    `d·rank(u)/deg(u)` per directed edge into the query's *next-rank*
+//!    array at the destination's home channel. Like the CC hook sweep the
+//!    push is unconditional and dense — no frontier, no visited check (a
+//!    check would be a remote read, i.e. a migration) — so per-round
+//!    demand is a pure function of the graph and is computed **once** and
+//!    cloned per round.
+//! 2. **Residual check + commit**
+//!    ([`PhaseDemand::pagerank_residual_check`]) — per-vertex commit of
+//!    `next` into `rank` while accumulating node-local L1-residual
+//!    partials, then a single thread migrating across all nodes to reduce
+//!    the view-0 partials (the only migrations PageRank pays: frontier-less
+//!    round control, exactly Fig. 2 line 2's shape).
+//!
+//! Rounds stop when the L1 residual drops to [`L1_EPS`] or at
+//! [`MAX_ROUNDS`], whichever comes first. Dangling (isolated) vertices'
+//! mass is redistributed uniformly each round, so total mass is conserved
+//! and ranks always sum to 1.
+//!
+//! Functional results are fixed-point scaled ([`RANK_SCALE`]) into the
+//! [`QueryOutput`]'s `i64` value vector; validation is tolerance-based
+//! ([`ORACLE_TOL`]) against the independent pull-based oracle
+//! ([`crate::alg::oracle::pagerank_ranks`]), since push- and pull-order
+//! float summation differ in the last bits.
+
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::alg::oracle;
+use crate::graph::view::{GraphView, NeighborScratch};
+use crate::sim::demand::PhaseDemand;
+use crate::sim::machine::Machine;
+
+/// Damping factor (the canonical 0.85).
+pub const DAMPING: f64 = 0.85;
+
+/// Round cap: iteration stops here even if the residual has not crossed
+/// [`L1_EPS`] (the usual case — the residual contracts by ~[`DAMPING`] per
+/// round, so the cap is the effective precision knob).
+pub const MAX_ROUNDS: usize = 50;
+
+/// L1-residual convergence threshold (early exit for graphs whose mass
+/// distribution is already stationary, e.g. edgeless or regular graphs).
+pub const L1_EPS: f64 = 1e-8;
+
+/// Fixed-point scale mapping ranks (which sum to 1.0) into the `i64`
+/// result vector: `value = round(rank x RANK_SCALE)`.
+pub const RANK_SCALE: f64 = 1e12;
+
+/// Per-vertex absolute rank tolerance the oracle check allows — covers
+/// push-vs-pull float summation order plus fixed-point rounding, both far
+/// below the capped-iteration error floor this bound is calibrated to.
+pub const ORACLE_TOL: f64 = 1e-6;
+
+/// Whole-graph PageRank, as a schedulable [`Analysis`]. Parameter-free
+/// like [`crate::alg::cc::Cc`], so its demand is cacheable: on the
+/// static (epoch-0) graph the coordinator computes it once and serves
+/// concurrent instances as channel rotations (mutation-lane epochs
+/// bypass the cache and recompute).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PageRank;
+
+impl Analysis for PageRank {
+    fn label(&self) -> &'static str {
+        "pagerank"
+    }
+
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        let run = pagerank_run_offset(g, m, stripe_offset);
+        QueryOutput { label: self.label(), values: run.ranks, phases: run.phases }
+    }
+
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
+        oracle::check_pagerank(g, values)
+    }
+
+    /// Honest footprint: the machine's per-query thread-context
+    /// reservation plus the query's two private f64 arrays (`rank` and
+    /// `next`).
+    fn ctx_mem_bytes(&self, g: GraphView<'_>, m: &Machine) -> Option<u64> {
+        Some(m.cfg.ctx_bytes_per_query + 2 * 8 * g.n() as u64)
+    }
+
+    fn cacheable_demand(&self) -> Option<String> {
+        Some(self.label().to_string())
+    }
+}
+
+/// Result of one functional+demand PageRank execution.
+#[derive(Debug, Clone)]
+pub struct PageRankRun {
+    /// Per-vertex rank, fixed-point scaled by [`RANK_SCALE`] (the vector
+    /// sums to ~[`RANK_SCALE`]).
+    pub ranks: Vec<i64>,
+    /// Two demand phases (push sweep, residual check) per executed round.
+    pub phases: Vec<PhaseDemand>,
+    /// Rounds executed (≤ [`MAX_ROUNDS`]).
+    pub rounds: usize,
+    /// True iff the L1 residual crossed [`L1_EPS`] before the round cap.
+    pub converged: bool,
+}
+
+/// Run PageRank at the canonical placement. Accepts a `&Csr` (the flat
+/// fast path) or any epoch's [`GraphView`].
+pub fn pagerank_run<'a>(g: impl Into<GraphView<'a>>, m: &Machine) -> PageRankRun {
+    pagerank_run_offset(g, m, 0)
+}
+
+/// Run PageRank with an explicit stripe offset for the query's own
+/// rank/next arrays (see [`crate::alg::bfs::bfs_run_offset`]: concurrent
+/// instances heat rotated channels).
+pub fn pagerank_run_offset<'a>(
+    g: impl Into<GraphView<'a>>,
+    m: &Machine,
+    stripe_offset: usize,
+) -> PageRankRun {
+    let g: GraphView<'a> = g.into();
+    let n = g.n();
+    // The dense sweep's demand is rank-independent: one shape per phase
+    // kind, cloned per round (see PhaseDemand::pagerank_push_round).
+    let push = PhaseDemand::pagerank_push_round(m, g, stripe_offset);
+    let check = PhaseDemand::pagerank_residual_check(m, n, stripe_offset);
+
+    let mut scratch = NeighborScratch::default();
+    let mut deg = vec![0usize; n];
+    for v in 0..n as u32 {
+        deg[v as usize] = g.neighbors(v, &mut scratch).len();
+    }
+    let inv_n = 1.0 / n as f64;
+    let mut ranks = vec![inv_n; n];
+    let mut phases = Vec::new();
+    let mut rounds = 0usize;
+    let mut converged = false;
+
+    while rounds < MAX_ROUNDS {
+        rounds += 1;
+        let mut next = vec![(1.0 - DAMPING) * inv_n; n];
+        let mut dangling = 0.0f64;
+        for u in 0..n as u32 {
+            let d = deg[u as usize];
+            if d == 0 {
+                dangling += ranks[u as usize];
+                continue;
+            }
+            let share = DAMPING * ranks[u as usize] / d as f64;
+            for &v in g.neighbors(u, &mut scratch) {
+                next[v as usize] += share;
+            }
+        }
+        if dangling > 0.0 {
+            let dshare = DAMPING * dangling * inv_n;
+            for x in next.iter_mut() {
+                *x += dshare;
+            }
+        }
+        let residual: f64 = next.iter().zip(&ranks).map(|(a, b)| (a - b).abs()).sum();
+        ranks = next;
+        phases.push(push.clone());
+        phases.push(check.clone());
+        if residual <= L1_EPS {
+            converged = true;
+            break;
+        }
+    }
+
+    let ranks = ranks.into_iter().map(|r| (r * RANK_SCALE).round() as i64).collect();
+    PageRankRun { ranks, phases, rounds, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
+    use crate::graph::rmat::Rmat;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = seed;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn ranks_match_oracle_on_rmat() {
+        let g = rmat(10, 7);
+        let run = pagerank_run(&g, &m8());
+        oracle::check_pagerank(&g, &run.ranks).unwrap();
+        assert_eq!(run.rounds, MAX_ROUNDS, "R-MAT needs the full round budget");
+        assert!(!run.converged);
+    }
+
+    #[test]
+    fn ranks_sum_to_one_and_hubs_outrank_leaves() {
+        // Star: the hub holds most of the mass, leaves split the rest.
+        let edges: Vec<(u32, u32)> = (1..=32u32).map(|v| (0, v)).collect();
+        let g = build_undirected_csr(33, &edges);
+        let run = pagerank_run(&g, &m8());
+        let sum: i64 = run.ranks.iter().sum();
+        assert!((sum - RANK_SCALE as i64).abs() <= 33 + (ORACLE_TOL * RANK_SCALE) as i64);
+        assert!(run.ranks[0] > 10 * run.ranks[1], "hub {} leaf {}", run.ranks[0], run.ranks[1]);
+        assert_eq!(run.ranks[1], run.ranks[32], "symmetric leaves tie");
+        oracle::check_pagerank(&g, &run.ranks).unwrap();
+    }
+
+    #[test]
+    fn edgeless_graph_converges_immediately_to_uniform() {
+        let g = build_undirected_csr(8, &[]);
+        let run = pagerank_run(&g, &m8());
+        assert!(run.converged);
+        assert_eq!(run.rounds, 1);
+        assert_eq!(run.phases.len(), 2);
+        // Dangling redistribution keeps the uniform distribution exact.
+        for &r in &run.ranks {
+            assert_eq!(r, (RANK_SCALE / 8.0).round() as i64);
+        }
+        oracle::check_pagerank(&g, &run.ranks).unwrap();
+    }
+
+    #[test]
+    fn two_phases_per_round_and_identical_round_demand() {
+        let g = rmat(9, 3);
+        let m = m8();
+        let run = pagerank_run(&g, &m);
+        assert_eq!(run.phases.len(), 2 * run.rounds);
+        // Every push phase is the same shape; ditto every check phase.
+        assert_eq!(run.phases[0], run.phases[2]);
+        assert_eq!(run.phases[1], run.phases[3]);
+        // Push sweeps carry the MSP accumulation traffic.
+        let msp: f64 = run.phases[0].msp_ops.iter().sum();
+        assert_eq!(msp, g.m_directed() as f64);
+        // Round control is the only migrating part.
+        let migs: f64 = run.phases.iter().map(|p| p.total_migrations()).sum();
+        assert_eq!(migs, (run.rounds * (m.nodes() - 1)) as f64);
+    }
+
+    #[test]
+    fn offsets_do_not_change_results() {
+        let g = rmat(9, 11);
+        let m = m8();
+        let base = pagerank_run_offset(&g, &m, 0);
+        for offset in [1usize, 5] {
+            let run = pagerank_run_offset(&g, &m, offset);
+            assert_eq!(run.ranks, base.ranks);
+            for (a, b) in run.phases.iter().zip(&base.phases) {
+                assert_eq!(a.channel_ops, b.channel_ops);
+            }
+        }
+    }
+
+    #[test]
+    fn declared_footprint_is_machine_base_plus_both_rank_arrays() {
+        let g = rmat(9, 1);
+        let m = m8();
+        let bytes = PageRank.ctx_mem_bytes(g.view(), &m).unwrap();
+        assert_eq!(bytes, m.cfg.ctx_bytes_per_query + 16 * (1 << 9));
+        // A custom machine's per-query base flows through, so admission
+        // never under-reserves against a non-preset config.
+        let mut cfg = MachineConfig::pathfinder_8();
+        cfg.ctx_bytes_per_query = 64 << 20;
+        let fat = Machine::new(cfg);
+        let bytes = PageRank.ctx_mem_bytes(g.view(), &fat).unwrap();
+        assert_eq!(bytes, (64 << 20) + 16 * (1 << 9));
+    }
+
+    #[test]
+    fn validate_rejects_mass_violations() {
+        let g = rmat(9, 5);
+        let run = pagerank_run(&g, &m8());
+        let mut bad = run.ranks.clone();
+        bad[0] += (RANK_SCALE * 0.1) as i64; // 10% of all mass appears
+        assert!(oracle::check_pagerank(&g, &bad).is_err());
+    }
+}

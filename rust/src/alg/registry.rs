@@ -5,18 +5,44 @@
 //! [`crate::coordinator::service::WorkloadSpec`] parser, and the property
 //! tests all resolve analysis classes by label through a registry instead
 //! of matching on a closed type. [`AnalysisRegistry::builtin`] registers
-//! the four shipped analyses; embedders add their own with
+//! the six shipped analyses; embedders add their own with
 //! [`AnalysisRegistry::register`] and every layer above picks them up.
+//! docs/ANALYSES.md is the authoring guide for doing exactly that.
 
 use crate::alg::analysis::Analysis;
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
 /// Builds one analysis instance rooted at a source vertex. Source-free
-/// analyses (CC) ignore the argument.
+/// analyses (CC, PageRank, triangle counting) ignore the argument.
 pub type AnalysisFactory = Arc<dyn Fn(u32) -> Arc<dyn Analysis> + Send + Sync>;
 
 /// Label-keyed analysis factories.
+///
+/// Resolving and building through the registry is all a caller ever needs
+/// — the returned [`Analysis`] is schedulable, servable and reportable
+/// with no other wiring:
+///
+/// ```
+/// use pathfinder_queries::alg::{Analysis, AnalysisRegistry};
+///
+/// let registry = AnalysisRegistry::builtin();
+/// assert_eq!(
+///     registry.labels(),
+///     vec!["bfs", "cc", "khop", "pagerank", "sssp", "tricount"],
+/// );
+///
+/// // Sourced analyses root at the given vertex; source-free ones ignore it.
+/// let bfs = registry.build("bfs", 42).unwrap();
+/// assert_eq!(bfs.describe(), "bfs(src=42)");
+/// let pr = registry.build("pagerank", 42).unwrap();
+/// assert_eq!(pr.describe(), "pagerank");
+///
+/// // Parameter-free kinds advertise a demand-cache key the coordinator
+/// // uses to compute their (expensive) demand once on the static graph.
+/// assert_eq!(pr.cacheable_demand().as_deref(), Some("pagerank"));
+/// assert!(bfs.cacheable_demand().is_none());
+/// ```
 #[derive(Clone)]
 pub struct AnalysisRegistry {
     entries: BTreeMap<&'static str, AnalysisFactory>,
@@ -28,8 +54,8 @@ impl AnalysisRegistry {
         AnalysisRegistry { entries: BTreeMap::new() }
     }
 
-    /// The four shipped analyses: `bfs`, `cc`, `sssp`, and `khop`
-    /// (2-hop neighborhoods by default).
+    /// The six shipped analyses: `bfs`, `cc`, `sssp`, `khop` (2-hop
+    /// neighborhoods by default), `pagerank`, and `tricount`.
     pub fn builtin() -> Self {
         let mut r = Self::empty();
         r.register("bfs", Arc::new(|src| -> Arc<dyn Analysis> {
@@ -41,6 +67,12 @@ impl AnalysisRegistry {
         }));
         r.register("khop", Arc::new(|src| -> Arc<dyn Analysis> {
             Arc::new(super::khop::KHop::new(src, 2))
+        }));
+        r.register("pagerank", Arc::new(|_src| -> Arc<dyn Analysis> {
+            Arc::new(super::pagerank::PageRank)
+        }));
+        r.register("tricount", Arc::new(|_src| -> Arc<dyn Analysis> {
+            Arc::new(super::tricount::TriCount)
         }));
         r
     }
@@ -88,9 +120,9 @@ mod tests {
     use crate::alg::khop::KHop;
 
     #[test]
-    fn builtin_covers_four_classes() {
+    fn builtin_covers_six_classes() {
         let r = AnalysisRegistry::builtin();
-        assert_eq!(r.labels(), vec!["bfs", "cc", "khop", "sssp"]);
+        assert_eq!(r.labels(), vec!["bfs", "cc", "khop", "pagerank", "sssp", "tricount"]);
         for label in r.labels() {
             let a = r.build(label, 7).unwrap();
             assert_eq!(a.label(), label);
@@ -100,8 +132,8 @@ mod tests {
     #[test]
     fn unknown_label_names_the_catalog() {
         let r = AnalysisRegistry::builtin();
-        let err = r.build("pagerank", 0).unwrap_err().to_string();
-        assert!(err.contains("pagerank") && err.contains("bfs"), "{err}");
+        let err = r.build("betweenness", 0).unwrap_err().to_string();
+        assert!(err.contains("betweenness") && err.contains("bfs"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,252 @@
+//! Degree-ordered neighbor-intersection triangle counting — the canonical
+//! intersection-heavy kernel (PIUMA and FlashGraph both use it as the
+//! read-skew stress workload), as a schedulable [`Analysis`].
+//!
+//! Every undirected edge is oriented from its `≺`-smaller endpoint to its
+//! `≺`-larger one, where `u ≺ v` iff `(deg(u), u) < (deg(v), v)` — the
+//! standard degree ordering that bounds every vertex's forward degree by
+//! O(√m) and makes hub-hub wedges cheap. A triangle `{u, v, w}` with
+//! `u ≺ v ≺ w` is counted exactly once, at its ordered edge `u → v`, as a
+//! member of the sorted-merge intersection `N⁺(u) ∩ N⁺(v)`.
+//!
+//! The demand shape ([`PhaseDemand::tricount_intersections`]) is the
+//! mirror image of everything else in this repo: traversals and PageRank
+//! are *write*-shaped (unconditional remote writes / MSP RMWs, no remote
+//! reads), while intersection needs the *other* endpoint's neighbor list —
+//! a remote **read**, which migrates (§II–III). So triangle counting pays
+//! two migrations per remote ordered edge and streams the destination's
+//! edge block at its home node, with read traffic scaled by the ordered
+//! wedge count and **near-zero writes**: one MSP `remote_add` per vertex
+//! folding the worker's register-held partial into the query's single
+//! global accumulator.
+//!
+//! The functional result is one value — the triangle total — validated
+//! exactly (integers, no tolerance) against the brute-force hash-set
+//! oracle [`crate::alg::oracle::triangle_total`].
+
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::alg::oracle;
+use crate::graph::view::{GraphView, NeighborScratch};
+use crate::sim::demand::{degree_ordered, PhaseDemand};
+use crate::sim::machine::Machine;
+
+/// Whole-graph triangle counting, as a schedulable [`Analysis`].
+/// Parameter-free like [`crate::alg::cc::Cc`], so its demand is
+/// cacheable: on the static (epoch-0) graph the coordinator computes it
+/// once and serves concurrent instances as channel rotations
+/// (mutation-lane epochs bypass the cache and recompute). The demand
+/// model honors the rotation-equivariance this requires — see
+/// [`PhaseDemand::tricount_intersections`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TriCount;
+
+impl Analysis for TriCount {
+    fn label(&self) -> &'static str {
+        "tricount"
+    }
+
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        let run = tricount_run_offset(g, m, stripe_offset);
+        QueryOutput {
+            label: self.label(),
+            values: vec![run.triangles as i64],
+            phases: run.phases,
+        }
+    }
+
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
+        oracle::check_tricount(g, values)
+    }
+
+    /// Honest footprint: the machine's per-query thread-context
+    /// reservation plus the query's private degree-rank array (one u32
+    /// per vertex, needed to evaluate the `≺` orientation while
+    /// streaming).
+    fn ctx_mem_bytes(&self, g: GraphView<'_>, m: &Machine) -> Option<u64> {
+        Some(m.cfg.ctx_bytes_per_query + 4 * g.n() as u64)
+    }
+
+    fn cacheable_demand(&self) -> Option<String> {
+        Some(self.label().to_string())
+    }
+}
+
+/// Result of one functional+demand triangle-counting execution.
+#[derive(Debug, Clone)]
+pub struct TriCountRun {
+    /// Number of distinct triangles in the graph.
+    pub triangles: u64,
+    /// The single intersection-sweep demand phase.
+    pub phases: Vec<PhaseDemand>,
+    /// Oriented (degree-ordered) edges processed — one per undirected
+    /// edge; diagnostics for the read-traffic accounting.
+    pub ordered_edges: usize,
+}
+
+/// Run triangle counting at the canonical placement. Accepts a `&Csr`
+/// (the flat fast path) or any epoch's [`GraphView`].
+pub fn tricount_run<'a>(g: impl Into<GraphView<'a>>, m: &Machine) -> TriCountRun {
+    tricount_run_offset(g, m, 0)
+}
+
+/// Run triangle counting with an explicit stripe offset for the query's
+/// accumulator placement (see [`crate::alg::bfs::bfs_run_offset`]).
+pub fn tricount_run_offset<'a>(
+    g: impl Into<GraphView<'a>>,
+    m: &Machine,
+    stripe_offset: usize,
+) -> TriCountRun {
+    let g: GraphView<'a> = g.into();
+    let n = g.n();
+    let phase = PhaseDemand::tricount_intersections(m, g, stripe_offset);
+
+    let mut scratch = NeighborScratch::default();
+    let mut deg = vec![0usize; n];
+    for v in 0..n as u32 {
+        deg[v as usize] = g.neighbors(v, &mut scratch).len();
+    }
+    // Forward (degree-ordered) adjacency: each sorted neighbor list's
+    // ordered suffix, still sorted by id, so intersections are merges.
+    // The SAME shared order predicate the demand model walks with.
+    let mut fwd: Vec<Vec<u32>> = Vec::with_capacity(n);
+    for u in 0..n as u32 {
+        fwd.push(
+            g.neighbors(u, &mut scratch)
+                .iter()
+                .copied()
+                .filter(|&v| degree_ordered(&deg, u, v))
+                .collect(),
+        );
+    }
+
+    let mut triangles = 0u64;
+    let mut ordered_edges = 0usize;
+    for fu in &fwd {
+        for &v in fu {
+            ordered_edges += 1;
+            triangles += sorted_intersection_count(fu, &fwd[v as usize]);
+        }
+    }
+    TriCountRun { triangles, phases: vec![phase], ordered_edges }
+}
+
+/// Two-pointer merge intersection size of two id-sorted lists.
+fn sorted_intersection_count(a: &[u32], b: &[u32]) -> u64 {
+    let (mut i, mut j, mut count) = (0usize, 0usize, 0u64);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                count += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
+    use crate::graph::rmat::Rmat;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = seed;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn counts_match_oracle_on_rmat() {
+        let g = rmat(10, 7);
+        let run = tricount_run(&g, &m8());
+        assert_eq!(run.triangles, oracle::triangle_total(&g));
+        assert!(run.triangles > 0, "R-MAT has triangles");
+        oracle::check_tricount(&g, &[run.triangles as i64]).unwrap();
+    }
+
+    #[test]
+    fn closed_form_shapes() {
+        let m = m8();
+        // Triangle: exactly one.
+        let tri = build_undirected_csr(3, &[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(tricount_run(&tri, &m).triangles, 1);
+        // K4: C(4,3) = 4 triangles.
+        let k4 = build_undirected_csr(
+            4,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)],
+        );
+        let run = tricount_run(&k4, &m);
+        assert_eq!(run.triangles, 4);
+        assert_eq!(run.ordered_edges, 6, "one oriented edge per undirected edge");
+        // Path: none.
+        let path = build_undirected_csr(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert_eq!(tricount_run(&path, &m).triangles, 0);
+        // Star: none (leaves never interconnect).
+        let star: Vec<(u32, u32)> = (1..=16u32).map(|v| (0, v)).collect();
+        assert_eq!(tricount_run(&build_undirected_csr(17, &star), &m).triangles, 0);
+    }
+
+    #[test]
+    fn single_phase_with_per_vertex_accumulator_rmws() {
+        let g = rmat(9, 3);
+        let m = m8();
+        let run = tricount_run(&g, &m);
+        assert_eq!(run.phases.len(), 1);
+        let p = &run.phases[0];
+        // Near-zero writes: one accumulator RMW per vertex, nothing else.
+        assert_eq!(p.msp_ops.iter().sum::<f64>(), g.n() as f64);
+        // Read traffic exceeds one full pass over the edge blocks (every
+        // ordered edge re-streams its destination block).
+        let own_pass: u64 = (0..g.n() as u32).map(|v| g.edge_block_bytes(v)).sum();
+        assert!(p.stream_bytes.iter().sum::<f64>() > own_pass as f64);
+        assert!(p.solo_ns(&m) > 0.0);
+    }
+
+    /// The functional walk and the demand walk must agree on the ordered
+    /// edge set (they share ONE `degree_ordered` predicate): the sweep's
+    /// random ops are exactly one record read per vertex + one per
+    /// ordered edge + one accumulator RMW per vertex.
+    #[test]
+    fn demand_walk_and_kernel_agree_on_ordered_edges() {
+        let g = rmat(9, 7);
+        let run = tricount_run(&g, &m8());
+        let p = &run.phases[0];
+        assert_eq!(
+            p.total_channel_ops(),
+            (2 * g.n() + run.ordered_edges) as f64
+        );
+    }
+
+    #[test]
+    fn offsets_do_not_change_results() {
+        let g = rmat(9, 11);
+        let m = m8();
+        let base = tricount_run_offset(&g, &m, 0);
+        for offset in [1usize, 5] {
+            let run = tricount_run_offset(&g, &m, offset);
+            assert_eq!(run.triangles, base.triangles);
+            assert_eq!(run.phases[0].channel_ops, base.phases[0].channel_ops);
+        }
+    }
+
+    #[test]
+    fn validate_rejects_wrong_totals_and_wrong_shapes() {
+        let g = build_undirected_csr(3, &[(0, 1), (1, 2), (0, 2)]);
+        oracle::check_tricount(&g, &[1]).unwrap();
+        assert!(oracle::check_tricount(&g, &[2]).is_err());
+        assert!(oracle::check_tricount(&g, &[]).is_err());
+        assert!(oracle::check_tricount(&g, &[1, 1]).is_err());
+    }
+}

@@ -19,6 +19,13 @@
 //! whenever the drained overlay prefix reaches
 //! [`MutationConfig::compact_every`] — compaction never retires a pinned
 //! epoch, which the snapshot-isolation property tests pin down.
+//!
+//! [`IngestBatch`] is also the degenerate example of the open query API
+//! (docs/ANALYSES.md): an [`Analysis`] with no per-vertex values and no
+//! oracle of its own (the store's snapshot-isolation properties validate
+//! the *data*; the analysis only carries the ingest *bandwidth* model),
+//! which is exactly enough for the ledger, weights, preemption and
+//! per-class reporting to treat mutation like any other workload class.
 
 use crate::alg::analysis::{Analysis, QueryOutput};
 use crate::graph::delta::EdgeUpdate;

@@ -1,6 +1,6 @@
 //! Workload planning: concrete request lists from workload descriptions.
 
-use crate::alg::{Bfs, Cc, KHop, Sssp};
+use crate::alg::{Bfs, Cc, KHop, PageRank, Sssp, TriCount};
 use crate::config::workload::MixPoint;
 use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
@@ -29,6 +29,16 @@ pub fn khop_queries(g: &Csr, k: usize, hops: u32, seed: u64) -> Vec<QueryRequest
 /// `k` connected-components requests (source-free).
 pub fn cc_queries(k: usize) -> Vec<QueryRequest> {
     (0..k).map(|_| QueryRequest::new(Cc)).collect()
+}
+
+/// `k` PageRank requests (source-free, demand-cacheable).
+pub fn pagerank_queries(k: usize) -> Vec<QueryRequest> {
+    (0..k).map(|_| QueryRequest::new(PageRank)).collect()
+}
+
+/// `k` triangle-counting requests (source-free, demand-cacheable).
+pub fn tricount_queries(k: usize) -> Vec<QueryRequest> {
+    (0..k).map(|_| QueryRequest::new(TriCount)).collect()
 }
 
 /// A Table-II style mix: `mix.bfs` BFS requests + `mix.cc` connected

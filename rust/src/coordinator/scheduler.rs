@@ -133,7 +133,7 @@ impl<'g> Coordinator<'g> {
             .iter()
             .map(|r| {
                 r.analysis
-                    .ctx_mem_bytes(self.view())
+                    .ctx_mem_bytes(self.view(), &self.machine)
                     .unwrap_or(self.machine.cfg.ctx_bytes_per_query)
             })
             .sum()
@@ -195,7 +195,7 @@ impl<'g> Coordinator<'g> {
             priority: req.priority,
             deadline_ns: req.deadline_ns,
             ctx_bytes: a
-                .ctx_mem_bytes(view)
+                .ctx_mem_bytes(view, &self.machine)
                 .unwrap_or(self.machine.cfg.ctx_bytes_per_query),
         }
     }
@@ -345,6 +345,36 @@ mod tests {
         assert_eq!(c.demand_cache.borrow().len(), 1);
     }
 
+    /// The demand-cache contract: for every cacheable analysis, a cached
+    /// instance (offset-0 demand rotated k channels) must be
+    /// indistinguishable from preparing that instance directly at offset
+    /// k — otherwise the epoch-0 cache path and the mutation-lane direct
+    /// path (epoch >= 1 bypasses the cache) would model different
+    /// channel placements for identical queries.
+    #[test]
+    fn cacheable_demand_rotation_matches_direct_preparation() {
+        use crate::alg::AnalysisRegistry;
+
+        let g = rmat(8);
+        let c = coord(&g);
+        let registry = AnalysisRegistry::builtin();
+        let mut covered = 0;
+        for label in registry.labels() {
+            let a = registry.build(label, 3).unwrap();
+            if a.cacheable_demand().is_none() {
+                continue;
+            }
+            covered += 1;
+            let base = a.phases(c.view(), c.machine(), 0);
+            for k in [1usize, 5] {
+                let direct = a.phases(c.view(), c.machine(), k);
+                let rotated: Vec<_> = base.iter().map(|p| p.rotate_channels(k)).collect();
+                assert_eq!(direct, rotated, "{label} offset {k}");
+            }
+        }
+        assert_eq!(covered, 3, "cc, pagerank and tricount are cacheable");
+    }
+
     #[test]
     fn mixed_run_completes_and_validates_composition() {
         let g = rmat(10);
@@ -394,7 +424,7 @@ mod tests {
         fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
             crate::alg::oracle::check_cc(g, values)
         }
-        fn ctx_mem_bytes(&self, _g: GraphView<'_>) -> Option<u64> {
+        fn ctx_mem_bytes(&self, _g: GraphView<'_>, _m: &Machine) -> Option<u64> {
             Some(1 << 30) // 1 GiB per instance
         }
     }

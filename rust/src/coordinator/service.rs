@@ -187,9 +187,11 @@ impl WorkloadSpec {
         ])
     }
 
-    /// A four-class mix exercising every shipped analysis: mostly
-    /// interactive short queries (BFS, k-hop), some SSSP, a CC trickle.
-    /// The interactive k-hop class carries a p99 SLO the report checks.
+    /// The four traversal-shaped classes: mostly interactive short
+    /// queries (BFS, k-hop), some SSSP, a CC trickle. The interactive
+    /// k-hop class carries a p99 SLO the report checks. (The full
+    /// catalog, including the analytic kernels, is
+    /// [`WorkloadSpec::six_class`].)
     pub fn four_class() -> Self {
         let reg = AnalysisRegistry::builtin();
         WorkloadSpec::new(vec![
@@ -200,6 +202,36 @@ impl WorkloadSpec {
                 .with_slo_p99_s(0.05),
             WorkloadClass::from_registry(&reg, "sssp", 0.15).expect("builtin"),
             WorkloadClass::from_registry(&reg, "cc", 0.1)
+                .expect("builtin")
+                .with_priority(Priority::Batch),
+        ])
+    }
+
+    /// Every shipped analysis in one mix: the [`WorkloadSpec::four_class`]
+    /// traversal classes plus the two whole-graph analytic kernels —
+    /// PageRank and triangle counting — as Batch-class background work
+    /// (both are demand-cacheable, so a stream of them costs one
+    /// functional execution each). The interactive k-hop class keeps its
+    /// p99 SLO; BFS gets a generous one so the summary shows a
+    /// multi-class SLO section.
+    pub fn six_class() -> Self {
+        let reg = AnalysisRegistry::builtin();
+        WorkloadSpec::new(vec![
+            WorkloadClass::from_registry(&reg, "bfs", 0.35)
+                .expect("builtin")
+                .with_slo_p99_s(0.5),
+            WorkloadClass::from_registry(&reg, "khop", 0.25)
+                .expect("builtin")
+                .with_priority(Priority::Interactive)
+                .with_slo_p99_s(0.05),
+            WorkloadClass::from_registry(&reg, "sssp", 0.15).expect("builtin"),
+            WorkloadClass::from_registry(&reg, "cc", 0.1)
+                .expect("builtin")
+                .with_priority(Priority::Batch),
+            WorkloadClass::from_registry(&reg, "pagerank", 0.1)
+                .expect("builtin")
+                .with_priority(Priority::Batch),
+            WorkloadClass::from_registry(&reg, "tricount", 0.05)
                 .expect("builtin")
                 .with_priority(Priority::Batch),
         ])
@@ -745,10 +777,14 @@ mod tests {
     #[test]
     fn workload_spec_parses_against_registry() {
         let reg = crate::alg::AnalysisRegistry::builtin();
-        let spec = WorkloadSpec::parse("bfs=0.6, cc=0.1, sssp=0.2, khop=0.1", &reg).unwrap();
-        assert_eq!(spec.classes.len(), 4);
+        let spec = WorkloadSpec::parse(
+            "bfs=0.5, cc=0.1, sssp=0.15, khop=0.1, pagerank=0.1, tricount=0.05",
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(spec.classes.len(), 6);
         assert!((spec.total_weight() - 1.0).abs() < 1e-12);
-        assert!(WorkloadSpec::parse("pagerank=1.0", &reg).is_err());
+        assert!(WorkloadSpec::parse("betweenness=1.0", &reg).is_err());
         assert!(WorkloadSpec::parse("bfs", &reg).is_err());
         assert!(WorkloadSpec::parse("", &reg).is_err());
     }

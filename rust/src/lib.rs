@@ -22,10 +22,12 @@
 //!   NCDRAM channels, MSPs with `remote_min`, migration engine, RapidIO
 //!   fabric, memory views; both a flow-level and a discrete-event engine.
 //! * [`alg`] — the open query API (the [`alg::Analysis`] trait +
-//!   [`alg::AnalysisRegistry`], DESIGN.md §Query-API) and the analyses
+//!   [`alg::AnalysisRegistry`], DESIGN.md §Query-API) and the six analyses
 //!   behind it: the migratory-thread BFS, the Figure-2 Shiloach-Vishkin
 //!   connected components (MSP `remote_min` hooks), delta-stepping SSSP on
-//!   the same hook, and hop-bounded k-hop neighborhoods.
+//!   the same hook, hop-bounded k-hop neighborhoods, push-style PageRank
+//!   on MSP `remote_add`, and degree-ordered triangle counting
+//!   (docs/ANALYSES.md is the guide for adding a seventh).
 //! * [`coordinator`] — the serving layer: [`coordinator::QueryRequest`]
 //!   scheduling metadata, admission control by thread-context memory,
 //!   sequential/concurrent policies, per-class metrics, declarative

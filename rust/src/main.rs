@@ -6,14 +6,16 @@
 //! pathfinder generate   [--scale N] [--edge-factor F] [--seed S] --out g.csr
 //! pathfinder inspect    --graph g.csr | [--scale N]
 //! pathfinder validate   [--scale N] [--queries K]   — every registered
-//!                       analysis (bfs, cc, sssp, khop) vs its host oracle
+//!                       analysis (bfs, cc, sssp, khop, pagerank, tricount)
+//!                       vs its host oracle
 //! pathfinder run        [--scale N] --machine pathfinder-8 [--bfs K]
 //!                       [--cc C] [--sssp S] [--khop H] [--khop-k HOPS]
+//!                       [--pagerank P] [--tricount T]
 //!                       [--policy sequential|concurrent|queue|reject|shed]
 //!                       [--max-waiting W]
 //!                       [--weights interactive=4,standard=2,batch=1] [--preempt]
 //! pathfinder serve      [--scale N] --machine NAME [--queries K] [--rate Q/S]
-//!                       [--mix bfs=0.8,cc=0.1,sssp=0.1]
+//!                       [--mix bfs=0.7,cc=0.1,pagerank=0.1,tricount=0.1]
 //!                       [--on-full queue|reject|shed] [--max-waiting W]
 //!                       [--priority-mix interactive=0.2,standard=0.6,batch=0.2]
 //!                       [--slo khop=0.05,bfs=0.2]   (per-class p99 targets, s)
@@ -222,6 +224,8 @@ fn cmd_run(args: &Args) -> Result<()> {
     let sssp: usize = args.opt_parse_or("sssp", 0)?;
     let khop: usize = args.opt_parse_or("khop", 0)?;
     let khop_k: u32 = args.opt_parse_or("khop-k", 2)?;
+    let pagerank: usize = args.opt_parse_or("pagerank", 0)?;
+    let tricount: usize = args.opt_parse_or("tricount", 0)?;
     let seed: u64 = args.opt_parse_or("query-seed", 0xBF5)?;
 
     // One list per class, interleaved into a mixed submission stream.
@@ -237,6 +241,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if khop > 0 {
         classes.push(planner::khop_queries(&g, khop, khop_k, seed ^ 0xAA));
+    }
+    if pagerank > 0 {
+        classes.push(planner::pagerank_queries(pagerank));
+    }
+    if tricount > 0 {
+        classes.push(planner::tricount_queries(tricount));
     }
     anyhow::ensure!(!classes.is_empty(), "nothing to run: all class counts are zero");
     let queries = planner::interleave_classes(classes);
@@ -269,7 +279,8 @@ fn cmd_run(args: &Args) -> Result<()> {
 
     let rep = coord.run(&queries, policy)?;
     println!(
-        "{} on {}: {} queries ({bfs} bfs + {cc} cc + {sssp} sssp + {khop} khop)",
+        "{} on {}: {} queries ({bfs} bfs + {cc} cc + {sssp} sssp + {khop} khop \
+         + {pagerank} pagerank + {tricount} tricount)",
         rep.policy,
         rep.machine,
         queries.len(),

@@ -7,9 +7,47 @@
 //! bytes per node, plus two latency-structure numbers the fluid model needs
 //! — the hottest channel's op count (load imbalance floor) and the serial
 //! dependency chain (e.g. pointer-jumping depth).
+//!
+//! Most analyses build their demand inline with a [`DemandBuilder`] while
+//! they traverse (BFS levels, SSSP buckets depend on runtime state), but
+//! phases whose shape is a pure function of the graph and machine live
+//! here as named constructors, so the model is written down once and the
+//! cost-accounting tests pin it:
+//!
+//! * [`PhaseDemand::ingest_batch`] — the memory-side edge-ingest model of
+//!   the mutation lane (DESIGN.md §Mutation);
+//! * [`PhaseDemand::pagerank_push_round`] /
+//!   [`PhaseDemand::pagerank_residual_check`] — one PageRank round
+//!   ([`crate::alg::pagerank`]): a dense push sweep (one MSP `remote_add`
+//!   per directed edge into the query's next-rank array) plus the
+//!   frontier-less round control (per-vertex commit + a migrating view-0
+//!   residual reduction);
+//! * [`PhaseDemand::tricount_intersections`] — the degree-ordered
+//!   neighbor-intersection sweep of [`crate::alg::tricount`]: read traffic
+//!   scaled by ordered wedges, near-zero writes (one MSP RMW per vertex
+//!   into a global accumulator);
+//! * [`PhaseDemand::uniform_channel_load`] — the synthetic closed-form
+//!   shape the flow-engine fairness tests and the CI bench gate share.
+//!
+//! See docs/ANALYSES.md for how to derive a new analysis's demand model
+//! from the paper's migration/MSP/fabric cost accounting.
 
 use super::machine::Machine;
 use crate::graph::delta::EdgeUpdate;
+use crate::graph::view::{GraphView, NeighborScratch};
+
+/// The degree-then-id total order that orients every undirected edge for
+/// triangle counting: `a ≺ b` iff `(deg[a], a) < (deg[b], b)`. ONE copy,
+/// shared by the functional kernel ([`crate::alg::tricount`]) and the
+/// demand model ([`PhaseDemand::tricount_intersections`]), so the two
+/// walks can never disagree about which direction an edge is oriented —
+/// a divergence the functional oracle tests would not catch (the count
+/// stays right under any strict total order; the charged migrations and
+/// wedge re-streams would silently change).
+#[inline]
+pub fn degree_ordered(deg: &[usize], a: u32, b: u32) -> bool {
+    (deg[a as usize], a) < (deg[b as usize], b)
+}
 
 /// Resource demand of one synchronous phase of one query.
 #[derive(Debug, Clone, PartialEq)]
@@ -301,6 +339,198 @@ impl PhaseDemand {
         b.finish()
     }
 
+    /// Demand of one PageRank **push sweep** (see [`crate::alg::pagerank`]):
+    /// a flat `cilk_for` over every vertex. Each worker reads its own rank
+    /// record (one random op in the query's *private* rank array, so the
+    /// stripe offset applies), streams the vertex's edge block, and issues
+    /// one **MSP `remote_add`** per directed edge into the query's
+    /// next-rank array at the destination's home channel (§II memory-side
+    /// accumulation: a read-modify-write cycle, no thread migration —
+    /// checking or fetching the old value first would migrate, so it never
+    /// does). Remote endpoints pay 16 fabric bytes per message, charged at
+    /// the issuing node like BFS's remote writes.
+    ///
+    /// Unlike a frontier-driven traversal, the sweep is **dense and
+    /// unconditional**: every edge is charged every round regardless of
+    /// convergence state, so per-round demand is a pure function of the
+    /// graph — [`crate::alg::pagerank::pagerank_run_offset`] computes this
+    /// shape once and clones it per round. Like the CC hook sweep, the
+    /// flat loop keeps the issue slots busy (issue efficiency 1.0) and
+    /// needs **zero migrations**.
+    pub fn pagerank_push_round(
+        m: &Machine,
+        g: GraphView<'_>,
+        stripe_offset: usize,
+    ) -> PhaseDemand {
+        let layout = m.layout;
+        let nodes = m.nodes();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut scratch = NeighborScratch::default();
+        let mut ops = 0.0f64;
+        for u in 0..g.n() as u32 {
+            let un = layout.node_of(u);
+            b.instructions(un, m.cfg.spawn_instr);
+            // Own rank record read (private array: stripe offset applies).
+            b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0);
+            ops += 1.0;
+            let nbrs = g.neighbors(u, &mut scratch);
+            b.stream_bytes(un, GraphView::edge_block_bytes_for(nbrs.len()) as f64);
+            b.instructions(un, nbrs.len() as f64 * m.cfg.instr_per_edge);
+            for &v in nbrs {
+                // remote_add into next[v] of THIS query's rank array.
+                let vn = layout.node_of(v);
+                b.msp_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
+                ops += 1.0;
+                if vn != un {
+                    b.fabric_bytes(un, 16.0);
+                }
+            }
+        }
+        if ops > 0.0 {
+            b.parallelism(ops.min(contexts_total));
+            b.issue_efficiency(1.0);
+        }
+        b.finish()
+    }
+
+    /// Instructions per vertex in the PageRank residual/commit phase: read
+    /// `next[v]` and `rank[v]`, |diff| into the local residual partial,
+    /// write `rank[v] <- next[v]`, reset `next[v]`.
+    pub const PAGERANK_CHECK_INSTR_PER_VERTEX: f64 = 10.0;
+
+    /// Demand of one PageRank **residual check + commit** — the
+    /// frontier-less round control. Per vertex: three random ops in the
+    /// query's private arrays (read `next[v]`, read `rank[v]`, write the
+    /// commit) plus [`PhaseDemand::PAGERANK_CHECK_INSTR_PER_VERTEX`]
+    /// instructions accumulating the node-local L1-residual partial. The
+    /// view-0 partials are then reduced by a **single thread migrating
+    /// across all nodes** (the only migrations PageRank ever pays — Fig. 2
+    /// line 2's shape), a serial chain of `nodes - 1` hops that decides
+    /// convergence for the next round.
+    pub fn pagerank_residual_check(m: &Machine, n: usize, stripe_offset: usize) -> PhaseDemand {
+        let layout = m.layout;
+        let nodes = m.nodes();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+        let mut b = DemandBuilder::new(nodes, channels);
+        for v in 0..n as u32 {
+            let vn = layout.node_of(v);
+            b.channel_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 3.0);
+            b.instructions(vn, Self::PAGERANK_CHECK_INSTR_PER_VERTEX);
+        }
+        // The reduction thread hops node to node casting view-0 partials
+        // (per-query private state, so it rides the query's stripe
+        // rotation like every other op — the cacheable-demand contract
+        // requires rotation-equivariance, see Analysis::cacheable_demand).
+        for node in 1..nodes {
+            b.migration(node, 1.0);
+            b.channel_op(node, stripe_offset % channels, 1.0);
+            b.fabric_bytes(node - 1, 64.0);
+        }
+        b.serial_hops(nodes as f64 - 1.0);
+        b.parallelism((n as f64).min(contexts_total));
+        b.issue_efficiency(1.0);
+        b.finish()
+    }
+
+    /// Demand of the degree-ordered **neighbor-intersection sweep** of
+    /// triangle counting (see [`crate::alg::tricount`]): one flat
+    /// `cilk_for` over every vertex. For each *ordered* edge `u ≺ v`
+    /// (`≺` = degree-then-id order) the worker must read `v`'s neighbor
+    /// list — and a remote *read* migrates (§II–III), so unlike every
+    /// write-shaped kernel in this repo the thread **pays two migrations
+    /// per remote ordered edge** (to `v`'s home and back), then streams
+    /// `v`'s edge block there and merge-scans it against `u`'s ordered
+    /// suffix. Read traffic is therefore Σ over ordered edges of the
+    /// destination block — the ordered-wedge-scaled skew the PIUMA /
+    /// FlashGraph papers use this kernel to stress.
+    ///
+    /// Writes are near-zero: each worker keeps its triangle partial in
+    /// registers and issues exactly **one MSP `remote_add` per vertex**
+    /// into the query's single global accumulator (element 0 of its
+    /// private result array, so the stripe offset rotates which channel
+    /// the accumulator heats).
+    ///
+    /// Triangle counting is demand-cacheable, and the cache serves every
+    /// concurrent instance as a channel *rotation* of the offset-0 demand
+    /// — so this model must be rotation-equivariant (see
+    /// [`crate::alg::Analysis::cacheable_demand`]): **all** random ops,
+    /// including the shared vertex-record reads, are charged in the
+    /// query's stripe-rotated frame. That is a deliberate concession
+    /// (physically the records sit at fixed homes): per-node totals, the
+    /// hottest-channel imbalance floor, migrations, streams and fabric
+    /// are all rotation-invariant, so solo latency is exact — only which
+    /// channel of the right node carries the reads moves, traded for
+    /// computing the expensive intersection demand once instead of per
+    /// instance.
+    pub fn tricount_intersections(
+        m: &Machine,
+        g: GraphView<'_>,
+        stripe_offset: usize,
+    ) -> PhaseDemand {
+        let layout = m.layout;
+        let nodes = m.nodes();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+        let n = g.n();
+        let mut scratch = NeighborScratch::default();
+        let mut deg = vec![0usize; n];
+        for v in 0..n as u32 {
+            deg[v as usize] = g.neighbors(v, &mut scratch).len();
+        }
+        let ordered = |a: u32, b: u32| degree_ordered(&deg, a, b);
+        let acc_node = layout.node_of(0);
+        let acc_chan = (layout.channel_of(0) + stripe_offset) % channels;
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut ops = 0.0f64;
+        for u in 0..n as u32 {
+            let un = layout.node_of(u);
+            b.instructions(un, m.cfg.spawn_instr);
+            // u's vertex record (stripe-rotated frame — see above).
+            b.channel_op(un, (layout.channel_of(u) + stripe_offset) % channels, 1.0);
+            ops += 1.0;
+            let nbrs = g.neighbors(u, &mut scratch);
+            let du = nbrs.len();
+            b.stream_bytes(un, GraphView::edge_block_bytes_for(du) as f64);
+            // Orientation filter: one pass over u's own block.
+            b.instructions(un, du as f64 * m.cfg.instr_per_edge);
+            let fwd_deg = nbrs.iter().filter(|&&v| ordered(u, v)).count();
+            for &v in nbrs {
+                if !ordered(u, v) {
+                    continue;
+                }
+                let vn = layout.node_of(v);
+                // v's vertex record, read at v's home node.
+                b.channel_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
+                ops += 1.0;
+                if vn != un {
+                    // Remote read: migrate there, merge-scan, migrate back.
+                    b.migration(vn, 1.0);
+                    b.fabric_bytes(un, 64.0);
+                    b.migration(un, 1.0);
+                    b.fabric_bytes(vn, 64.0);
+                }
+                b.stream_bytes(vn, GraphView::edge_block_bytes_for(deg[v as usize]) as f64);
+                // Merge scan of u's ordered suffix against v's full block.
+                b.instructions(vn, (fwd_deg + deg[v as usize]) as f64 * m.cfg.instr_per_edge);
+            }
+            // One remote_add of the worker's partial into the global
+            // accumulator.
+            b.msp_op(acc_node, acc_chan, 1.0);
+            ops += 1.0;
+            if un != acc_node {
+                b.fabric_bytes(un, 16.0);
+            }
+        }
+        if ops > 0.0 {
+            b.parallelism(ops.min(contexts_total));
+            b.issue_efficiency(1.0);
+        }
+        b.finish()
+    }
+
     /// Fraction of channel ops that had to cross the fabric.
     fn mean_remote_fraction(&self) -> f64 {
         let total = self.total_channel_ops();
@@ -536,5 +766,92 @@ mod tests {
         let d = PhaseDemand::ingest_batch(&m, &[]);
         assert_eq!(d.total_channel_ops(), 0.0);
         assert_eq!(d.solo_ns(&m), m.cfg.level_sync_ns);
+    }
+
+    #[test]
+    fn pagerank_push_round_charges_one_msp_per_directed_edge_no_migrations() {
+        use crate::graph::builder::build_undirected_csr;
+        let m = m8();
+        let g = build_undirected_csr(16, &[(0, 1), (1, 2), (2, 9), (9, 0)]);
+        let d = PhaseDemand::pagerank_push_round(&m, g.view(), 0);
+        // One rank read per vertex + one remote_add per directed edge.
+        assert_eq!(d.total_channel_ops(), 16.0 + g.m_directed() as f64);
+        assert_eq!(d.msp_ops.iter().sum::<f64>(), g.m_directed() as f64);
+        // The dense push sweep never migrates.
+        assert_eq!(d.total_migrations(), 0.0);
+        // Streamed bytes = every vertex's edge block, like a hook sweep.
+        let expect: u64 = (0..16u32).map(|v| g.edge_block_bytes(v)).sum();
+        assert_eq!(d.stream_bytes.iter().sum::<f64>(), expect as f64);
+        // Flat cilk_for: issue slots pinned busy.
+        assert_eq!(d.issue_efficiency, Some(1.0));
+    }
+
+    #[test]
+    fn pagerank_residual_check_is_the_only_migrating_phase() {
+        let m = m8();
+        let d = PhaseDemand::pagerank_residual_check(&m, 64, 0);
+        // The reduction thread hops across the other 7 nodes.
+        assert_eq!(d.total_migrations(), 7.0);
+        assert_eq!(d.serial_hops, 7.0);
+        // 3 private-array ops per vertex + 7 reduction reads.
+        assert_eq!(d.total_channel_ops(), 64.0 * 3.0 + 7.0);
+        assert_eq!(d.msp_ops.iter().sum::<f64>(), 0.0);
+    }
+
+    #[test]
+    fn pagerank_phases_rotate_with_the_stripe_offset() {
+        use crate::graph::builder::build_undirected_csr;
+        let m = m8();
+        let g = build_undirected_csr(16, &[(0, 1), (2, 3)]);
+        let base = PhaseDemand::pagerank_push_round(&m, g.view(), 0);
+        let shifted = PhaseDemand::pagerank_push_round(&m, g.view(), 3);
+        // Same node totals, rotated channel placement.
+        assert_eq!(shifted.channel_ops, base.channel_ops);
+        assert_eq!(shifted.per_channel_ops, base.rotate_channels(3).per_channel_ops);
+    }
+
+    #[test]
+    fn tricount_reads_scale_with_ordered_wedges_and_writes_stay_near_zero() {
+        use crate::graph::builder::build_undirected_csr;
+        let m = m8();
+        // Path 0-1-2-3 plus chord 0-2: degrees [2,2,3,1].
+        let g = build_undirected_csr(4, &[(0, 1), (1, 2), (2, 3), (0, 2)]);
+        let d = PhaseDemand::tricount_intersections(&m, g.view(), 0);
+        // Degree-then-id order: 3 (deg 1) ≺ 0 ≺ 1 (deg 2) ≺ 2 (deg 3).
+        // Ordered edges: 0→1, 0→2, 1→2, 3→2 — four, one per undirected edge.
+        let ordered_edges = 4.0;
+        // Random ops: per-vertex record + per-ordered-edge record + the
+        // per-vertex accumulator remote_add.
+        assert_eq!(d.total_channel_ops(), 4.0 + ordered_edges + 4.0);
+        // Writes are near-zero: one MSP RMW per vertex, nothing else.
+        assert_eq!(d.msp_ops.iter().sum::<f64>(), 4.0);
+        // Read traffic: every block once (own scan) + the ordered-edge
+        // destinations' blocks again (intersection scans).
+        let block = |v: u32| g.edge_block_bytes(v) as f64;
+        let expect = (0..4u32).map(block).sum::<f64>() + block(1) + block(2) + block(2) + block(2);
+        assert_eq!(d.stream_bytes.iter().sum::<f64>(), expect);
+        // Remote ordered edges migrate there AND back; on the 8-node
+        // layout all four vertices live on distinct nodes, so every
+        // ordered edge is remote.
+        assert_eq!(d.total_migrations(), 2.0 * ordered_edges);
+    }
+
+    #[test]
+    fn tricount_demand_is_rotation_equivariant() {
+        use crate::graph::builder::build_undirected_csr;
+        let m = m8();
+        // Path + chord: mixed degrees, remote and wedge traffic present.
+        let g = build_undirected_csr(12, &[(0, 1), (1, 2), (2, 3), (0, 2), (9, 10)]);
+        let base = PhaseDemand::tricount_intersections(&m, g.view(), 0);
+        // The global accumulator (element 0 of the query's private result
+        // array, node 0) carries the per-vertex remote_adds.
+        assert!(base.msp_ops[0] > 0.0);
+        // The cacheable-demand contract: a direct preparation at offset k
+        // IS the offset-0 demand rotated k channels — nothing (records,
+        // accumulator, anything) may sit outside the rotated frame.
+        for k in [1usize, 3, 9] {
+            let direct = PhaseDemand::tricount_intersections(&m, g.view(), k);
+            assert_eq!(direct, base.rotate_channels(k), "offset {k}");
+        }
     }
 }

@@ -2,7 +2,7 @@
 //! a spread of graph shapes, plus the demand-accounting contracts the
 //! simulator relies on.
 
-use pathfinder_queries::alg::{self, oracle, Analysis, Bfs, Cc, KHop, Sssp};
+use pathfinder_queries::alg::{self, oracle, Analysis, Bfs, Cc, KHop, PageRank, Sssp, TriCount};
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::graph::builder::build_undirected_csr;
@@ -117,7 +117,7 @@ fn cc_demand_scales_with_iterations() {
 }
 
 #[test]
-fn analysis_api_round_trips_for_all_four_classes() {
+fn analysis_api_round_trips_for_all_six_classes() {
     let g = rmat(10, 2);
     let m = m8();
     let analyses: Vec<Box<dyn Analysis>> = vec![
@@ -125,6 +125,8 @@ fn analysis_api_round_trips_for_all_four_classes() {
         Box::new(Cc),
         Box::new(Sssp { src: 5 }),
         Box::new(KHop::new(5, 2)),
+        Box::new(PageRank),
+        Box::new(TriCount),
     ];
     for a in analyses {
         let out = a.run(g.view(), &m);
@@ -157,6 +159,24 @@ fn khop_matches_oracle_on_zoo() {
                 oracle::check_khop(&g, 0, k, &run.levels)
                     .unwrap_or_else(|e| panic!("{name} k {k}: {e}"));
             }
+        }
+    }
+}
+
+#[test]
+fn pagerank_and_tricount_match_oracles_on_zoo() {
+    let m = m8();
+    for (name, g) in zoo() {
+        let pr = alg::pagerank_run(&g, &m);
+        oracle::check_pagerank(&g, &pr.ranks).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let tc = alg::tricount_run(&g, &m);
+        assert_eq!(tc.triangles, oracle::triangle_total(&g), "{name}");
+        match name {
+            // Triangle-free shapes.
+            "path" | "star" | "cycle" | "forest" => assert_eq!(tc.triangles, 0, "{name}"),
+            // K16 holds C(16,3) triangles.
+            "clique" => assert_eq!(tc.triangles, 560, "{name}"),
+            _ => {}
         }
     }
 }

@@ -197,6 +197,72 @@ fn four_class_mix_end_to_end_with_tail_quantiles() {
     assert!(s.contains("p95") && s.contains("p99"), "{s}");
 }
 
+/// Acceptance (six-analysis registry): a mixed run over ALL six shipped
+/// analyses — the four traversal-shaped kernels plus PageRank and
+/// triangle counting — completes end-to-end through `GraphService` (the
+/// `serve --mix bfs=..,pagerank=..,tricount=..` path), with per-class
+/// p50/p95/p99 for every class and SLO verdicts in the summary.
+#[test]
+fn six_class_mix_end_to_end_with_tail_quantiles() {
+    let g = rmat(12);
+    let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let reg = pathfinder_queries::alg::AnalysisRegistry::builtin();
+    // An even-ish explicit mix (what the CLI's --mix flag parses), with a
+    // generous whole-run SLO on the two new analytic kernels.
+    let mut workload = WorkloadSpec::parse(
+        "bfs=0.25, khop=0.2, sssp=0.15, cc=0.1, pagerank=0.15, tricount=0.15",
+        &reg,
+    )
+    .unwrap();
+    for class in workload.classes.iter_mut() {
+        if class.label == "pagerank" || class.label == "tricount" {
+            class.slo_p99_s = Some(1e6);
+        }
+    }
+    let rep = svc
+        .serve(&ServiceConfig {
+            queries: 120,
+            arrival_rate_per_s: 500.0,
+            workload,
+            on_full: OnFull::Queue,
+            seed: 0x6C1A,
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(rep.served, 120);
+    assert_eq!(rep.rejected, 0);
+    let classes: Vec<&str> = rep.class_latency.iter().map(|(l, _)| l.as_str()).collect();
+    assert_eq!(classes.len(), 6, "all six classes must complete: {classes:?}");
+    for label in ["bfs", "khop", "sssp", "cc", "pagerank", "tricount"] {
+        let q = rep.class(label).unwrap_or_else(|| panic!("missing class {label}"));
+        assert!(q.q50 > 0.0);
+        assert!(q.q50 <= q.q95 && q.q95 <= q.q99 && q.q99 <= q.q100, "{label}");
+    }
+    // The iterative whole-graph kernel dwarfs the interactive k-hop class.
+    assert!(rep.class("pagerank").unwrap().q50 > rep.class("khop").unwrap().q50);
+    assert!(rep.slo_of("pagerank").unwrap().pass && rep.slo_of("tricount").unwrap().pass);
+    let s = rep.summary();
+    assert!(s.contains("pagerank") && s.contains("tricount"), "{s}");
+}
+
+/// The shipped six-class catalog spec is well-formed: six registry-backed
+/// classes, analytic kernels filed as Batch work, SLOs on the latency-
+/// sensitive classes.
+#[test]
+fn six_class_catalog_spec_is_well_formed() {
+    use pathfinder_queries::coordinator::Priority;
+
+    let spec = WorkloadSpec::six_class();
+    spec.validate().unwrap();
+    assert_eq!(spec.classes.len(), 6);
+    let by_label = |l: &str| spec.classes.iter().find(|c| c.label == l).unwrap();
+    for heavy in ["cc", "pagerank", "tricount"] {
+        assert_eq!(by_label(heavy).priority, Priority::Batch, "{heavy}");
+    }
+    assert!(by_label("khop").slo_p99_s.is_some());
+    assert!((spec.total_weight() - 1.0).abs() < 1e-12);
+}
+
 /// Acceptance (priority-aware admission): under an over-capacity
 /// mixed-priority workload, admitted runs serve Interactive work first —
 /// its p99 latency is strictly better than Batch's — and overload

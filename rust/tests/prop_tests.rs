@@ -74,6 +74,84 @@ fn prop_cc_labels_are_component_minima() {
     }
 }
 
+/// PageRank (tentpole property): on random graphs the fixed-point-scaled
+/// ranks conserve mass (sum to 1) and match the independent pull-based
+/// oracle within tolerance — and the kernel computed over a mutated
+/// `GraphView` equals the kernel over the materialized CSR, per-value and
+/// per-phase (PR 4's overlay-equivalence pattern).
+#[test]
+fn prop_pagerank_ranks_sum_to_one_and_match_oracle() {
+    use pathfinder_queries::alg::pagerank::{ORACLE_TOL, RANK_SCALE};
+    use pathfinder_queries::graph::delta::random_batch;
+    use pathfinder_queries::graph::store::GraphStore;
+
+    let m = m8();
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x9A6E);
+        let g = random_graph(&mut rng);
+        let run = alg::pagerank_run(&g, &m);
+        // Mass conservation in scaled units (rounding + tolerance slack).
+        let sum: i64 = run.ranks.iter().sum();
+        let mass_tol = g.n() as i64 + (ORACLE_TOL * RANK_SCALE) as i64;
+        assert!(
+            (sum - RANK_SCALE as i64).abs() <= mass_tol,
+            "seed {seed}: ranks sum to {sum}"
+        );
+        oracle::check_pagerank(&g, &run.ranks).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(run.phases.len(), 2 * run.rounds, "seed {seed}");
+
+        // Overlay equivalence: same ranks and demand on a mutated view.
+        let mut store = GraphStore::new(&g);
+        for _ in 0..2 {
+            let batch = random_batch(store.view(), 10, 0.3, &mut rng);
+            store.apply_batch(&batch);
+        }
+        let view = store.view();
+        let over = alg::pagerank_run(view, &m);
+        let flat = alg::pagerank_run(&view.to_csr(), &m);
+        assert_eq!(over.ranks, flat.ranks, "seed {seed}: overlay vs materialized");
+        assert_eq!(over.phases.len(), flat.phases.len(), "seed {seed}");
+        oracle::check_pagerank(view, &over.ranks).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+    }
+}
+
+/// Triangle counting (tentpole property): the degree-ordered merge-
+/// intersection kernel matches the brute-force hash-set oracle exactly on
+/// random graphs, and a mutated `GraphView` counts exactly what its
+/// materialized CSR counts.
+#[test]
+fn prop_tricount_matches_bruteforce_oracle() {
+    use pathfinder_queries::graph::delta::random_batch;
+    use pathfinder_queries::graph::store::GraphStore;
+
+    let m = m8();
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x741C);
+        let g = random_graph(&mut rng);
+        let run = alg::tricount_run(&g, &m);
+        assert_eq!(
+            run.triangles,
+            oracle::triangle_total(&g),
+            "seed {seed}: kernel vs brute force"
+        );
+        // One oriented edge per undirected edge, independent of skew.
+        assert_eq!(run.ordered_edges, g.m_directed() / 2, "seed {seed}");
+        oracle::check_tricount(&g, &[run.triangles as i64])
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+
+        // Overlay equivalence (inserts can create triangles, deletes can
+        // break them; the pinned view must count its exact edge set).
+        let mut store = GraphStore::new(&g);
+        let batch = random_batch(store.view(), 12, 0.4, &mut rng);
+        store.apply_batch(&batch);
+        let view = store.view();
+        let over = alg::tricount_run(view, &m);
+        let flat = alg::tricount_run(&view.to_csr(), &m);
+        assert_eq!(over.triangles, flat.triangles, "seed {seed}: overlay vs materialized");
+        assert_eq!(over.triangles, oracle::triangle_total(view), "seed {seed}");
+    }
+}
+
 #[test]
 fn prop_demand_builder_consistency() {
     for seed in 0..CASES {
