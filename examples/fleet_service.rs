@@ -1,0 +1,125 @@
+//! A sharded multi-chassis fleet serving one graph (DESIGN.md §Fleet):
+//! the Pathfinder scaled past a single chassis by partitioning the graph
+//! across N shards, replicating each shard R times, and pricing every
+//! cross-shard frontier exchange on the fleet interconnect.
+//!
+//! The sweep below serves the same saturating mixed workload on a single
+//! chassis and on 2/4/8-shard fleets (hash and degree-balanced edge-cut
+//! partitions), then adds read replicas and finally live edge ingest —
+//! where each update batch fans out through one ordered log so every
+//! replica of a shard applies the same batches in the same order and all
+//! copies agree per epoch. The summary's `fleet:` lines show the edge-cut
+//! fraction, total interconnect traffic, and per-shard channel
+//! utilization: a hash partition of a skewed graph leaves shards
+//! unevenly loaded, which the balanced partitioner visibly narrows.
+//!
+//! The closest CLI invocation to the 4-shard sweep point:
+//!
+//! ```bash
+//! cargo run --release -- serve --scale 13 --queries 200 --rate 2000 \
+//!     --fleet nodes=4,partition=balanced
+//! ```
+//!
+//! ```bash
+//! cargo run --release --example fleet_service -- [--scale 13] [--machine pathfinder-8]
+//! ```
+
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::coordinator::{
+    FleetConfig, GraphService, MutationConfig, ServiceConfig, WorkloadSpec,
+};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::rmat::Rmat;
+use pathfinder_queries::sim::flow::OnFull;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let scale: u32 = args.opt_parse_or("scale", 13)?;
+    let preset = args.opt_or("machine", "pathfinder-8");
+
+    let gcfg = GraphConfig::with_scale(scale);
+    let g = build_undirected_csr(gcfg.n_vertices() as usize, &Rmat::new(gcfg).edges());
+    let mcfg = MachineConfig::preset(&preset)
+        .ok_or_else(|| anyhow::anyhow!("unknown preset {preset:?}"))?;
+    let service = GraphService::new(&g, Machine::new(mcfg));
+
+    println!(
+        "fleet service on {preset} chassis: {} vertices, {} directed arcs\n",
+        g.n(),
+        g.m_directed()
+    );
+
+    let base = ServiceConfig {
+        queries: 200,
+        arrival_rate_per_s: 2000.0,
+        workload: WorkloadSpec::four_class(),
+        on_full: OnFull::Queue,
+        seed: 0x5E21,
+        ..Default::default()
+    };
+
+    // Scale-out sweep: the same burst on one chassis, then on fleets of
+    // 2/4/8 shards. More shards add channel capacity but also turn more
+    // edges into cross-shard frontier exchanges — the `interconnect`
+    // figure in the fleet line is that traffic, priced by the flow engine
+    // as a per-node interconnect resource alongside the five on-chassis
+    // lanes.
+    for spec in ["nodes=2", "nodes=4", "nodes=8"] {
+        for strategy in ["hash", "balanced"] {
+            let cfg = ServiceConfig {
+                fleet: Some(FleetConfig::parse(&format!("{spec},partition={strategy}"))?),
+                ..base.clone()
+            };
+            let rep = service.serve(&cfg)?;
+            println!("--fleet {spec},partition={strategy}:");
+            println!("{}", indent(&rep.summary()));
+        }
+    }
+    println!("single chassis, same burst (for comparison):");
+    let rep = service.serve(&base)?;
+    println!("{}", indent(&rep.summary()));
+
+    // Read replicas: each shard served by 2 copies; rooted traversals
+    // route to a replica by query id while every replica still holds its
+    // shard, doubling read bandwidth for the same cut.
+    println!("4 shards x 2 read replicas:");
+    let cfg = ServiceConfig {
+        fleet: Some(FleetConfig::parse("nodes=4,replicas=2,partition=balanced")?),
+        ..base.clone()
+    };
+    let rep = service.serve(&cfg)?;
+    println!("{}", indent(&rep.summary()));
+
+    // Live ingest on the fleet: update batches fan out through one
+    // ordered log — the primary applies each batch, then streams it to
+    // every replica as explicit interconnect traffic, so all copies of a
+    // shard agree per epoch (the equivalence property pinned in
+    // rust/tests/prop_tests.rs). Compactions surface as Batch-class
+    // `compact` work, one fold per replica's copy of the base.
+    println!("4 shards x 2 replicas with live edge ingest (--mutate):");
+    let cfg = ServiceConfig {
+        queries: 200,
+        arrival_rate_per_s: 1000.0,
+        workload: WorkloadSpec::four_class(),
+        on_full: OnFull::Queue,
+        mutation: Some(MutationConfig {
+            rate_batches_per_s: 200.0,
+            batch: 64,
+            delete_fraction: 0.1,
+            compact_every: 4,
+        }),
+        fleet: Some(FleetConfig::parse("nodes=4,replicas=2,partition=balanced")?),
+        seed: 0x5E21,
+        ..Default::default()
+    };
+    let rep = service.serve(&cfg)?;
+    println!("{}", indent(&rep.summary()));
+    Ok(())
+}
+
+fn indent(s: &str) -> String {
+    s.lines().map(|l| format!("    {l}\n")).collect()
+}

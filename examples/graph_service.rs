@@ -116,6 +116,7 @@ fn main() -> anyhow::Result<()> {
         weights: ShareWeights::priority_weighted(),
         preempt: Some(PreemptPolicy::default()),
         mutation: None,
+        fleet: None,
         seed: 0x5E21,
     };
     let rep = service.serve(&cfg)?;

@@ -15,6 +15,7 @@
 //! regressions, while wall times stay informational.
 
 use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::sim::cluster::Cluster;
 use pathfinder_queries::sim::demand::PhaseDemand;
 use pathfinder_queries::sim::flow::{
     Admission, FlowSim, OnFull, Priority, QuerySpec, ShareWeights,
@@ -121,6 +122,35 @@ fn analysis_gate_specs(m: &Machine) -> Vec<QuerySpec> {
     specs
 }
 
+/// The fleet gate scenario (DESIGN.md §Fleet): a 4-shard single-replica
+/// fleet of pathfinder-8 chassis (32 nodes on one flattened machine) runs
+/// 16 identical single-phase queries — 8 Interactive `bfs`, 8 Batch `cc`
+/// — each shaped by [`PhaseDemand::uniform_fleet_load`]: 50% uniform
+/// channel load worth 0.5e6 ns plus a 1e6 ns fleet-interconnect drain on
+/// every node, so the interconnect is the binding resource and every
+/// completion time is closed-form (solo time cancels):
+///
+/// * flat: 16 queries share each node's interconnect equally and finish
+///   together at `16 x 1e6 ns` — mean latency 0.016 s (the channel lane
+///   would finish at 8e6 ns, strictly earlier, so it never binds);
+/// * weighted 4:2:1 (Σ n_c w_c = 8x4 + 8x1 = 40): `bfs` drains at rate
+///   4/40 and finishes at `40e6/4 = 10e6 ns` (0.010 s); `cc` then takes
+///   the freed bandwidth and finishes at the work-conserving makespan
+///   `16e6 ns` (0.016 s).
+fn fleet_gate_specs(m: &Machine) -> Vec<QuerySpec> {
+    const CLASSES: [(&str, Priority); 2] =
+        [("bfs", Priority::Interactive), ("cc", Priority::Batch)];
+    let mut specs = Vec::new();
+    for (label, priority) in CLASSES {
+        for _ in 0..8 {
+            let id = specs.len();
+            let phase = PhaseDemand::uniform_fleet_load(m, 0.5, 1e6, 1e6);
+            specs.push(QuerySpec::new(id, label, vec![phase], 0.0).with_priority(priority));
+        }
+    }
+    specs
+}
+
 /// Deterministic gate metrics with fluid-model closed forms (per-channel
 /// drain is `0.5e6 ns` per query, and the solo time cancels out of every
 /// completion time):
@@ -154,6 +184,16 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         &aspecs,
         Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
     );
+    // Fleet scenario (see [`fleet_gate_specs`]): its own 4x1 fleet of
+    // pathfinder-8 chassis, flattened to one 32-node machine.
+    let fm = Cluster::new(&m.cfg, 4, 1).machine().clone();
+    let fsim = FlowSim::new(fm.clone());
+    let fspecs = fleet_gate_specs(&fm);
+    let fflat = fsim.run_admitted(&fspecs, Admission::unlimited());
+    let fweighted = fsim.run_admitted(
+        &fspecs,
+        Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
+    );
     // Guard the gate's own validity: the closed forms assume every spec
     // completes. label/class means return 0.0 when nothing completed,
     // which the relative check would wave through as an "improvement" —
@@ -163,6 +203,8 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         ("mixed_mutation/weighted", &mweighted, mspecs.len()),
         ("analyses/flat", &aflat, aspecs.len()),
         ("analyses/weighted", &aweighted, aspecs.len()),
+        ("fleet/flat", &fflat, fspecs.len()),
+        ("fleet/weighted", &fweighted, fspecs.len()),
     ] {
         let done = rep.timings.iter().filter(|t| t.completed()).count();
         assert_eq!(done, len, "{name}: every gate spec must complete");
@@ -177,6 +219,13 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
             aweighted.label_latencies_s(label).len(),
             8,
             "analyses: the {label} class must complete"
+        );
+    }
+    for label in ["bfs", "cc"] {
+        assert_eq!(
+            fweighted.label_latencies_s(label).len(),
+            8,
+            "fleet: the {label} class must complete"
         );
     }
     vec![
@@ -203,6 +252,15 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         (
             "analyses/weighted/tricount_mean_latency_s",
             aweighted.label_mean_latency_s("tricount"),
+        ),
+        ("fleet/unweighted/mean_latency_s", fflat.mean_latency_s()),
+        (
+            "fleet/weighted/bfs_mean_latency_s",
+            fweighted.label_mean_latency_s("bfs"),
+        ),
+        (
+            "fleet/weighted/cc_mean_latency_s",
+            fweighted.label_mean_latency_s("cc"),
         ),
     ]
 }

@@ -89,6 +89,15 @@ pub trait Analysis: std::fmt::Debug + Send + Sync {
         None
     }
 
+    /// Root vertex of a single-source traversal (`Some` for BFS/SSSP/
+    /// k-hop), or `None` for whole-graph analyses. The fleet router
+    /// ([`crate::coordinator::fleet`]) uses this to model source-rooted
+    /// queries with explicit per-level cross-shard frontier exchange; a
+    /// `None` analysis is scattered across shards by arc share instead.
+    fn source_vertex(&self) -> Option<u32> {
+        None
+    }
+
     /// [`Analysis::run_offset`] at the canonical placement.
     fn run(&self, g: GraphView<'_>, m: &Machine) -> QueryOutput {
         self.run_offset(g, m, 0)
@@ -189,6 +198,16 @@ mod tests {
         assert!(Bfs { src: 0 }.cacheable_demand().is_none());
         assert!(Sssp { src: 0 }.cacheable_demand().is_none());
         assert!(KHop::new(0, 2).cacheable_demand().is_none());
+    }
+
+    #[test]
+    fn only_rooted_traversals_expose_a_source_vertex() {
+        assert_eq!(Bfs { src: 9 }.source_vertex(), Some(9));
+        assert_eq!(Sssp { src: 4 }.source_vertex(), Some(4));
+        assert_eq!(KHop::new(11, 2).source_vertex(), Some(11));
+        assert!(Cc.source_vertex().is_none());
+        assert!(PageRank.source_vertex().is_none());
+        assert!(TriCount.source_vertex().is_none());
     }
 
     #[test]

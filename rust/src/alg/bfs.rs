@@ -55,6 +55,10 @@ impl Analysis for Bfs {
     fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
         oracle::check_bfs(g, self.src, values)
     }
+
+    fn source_vertex(&self) -> Option<u32> {
+        Some(self.src)
+    }
 }
 
 /// Result of one functional+demand BFS execution.

@@ -49,6 +49,10 @@ impl Analysis for KHop {
     fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
         oracle::check_khop(g, self.src, self.k, values)
     }
+
+    fn source_vertex(&self) -> Option<u32> {
+        Some(self.src)
+    }
 }
 
 /// Result of one functional+demand k-hop execution.

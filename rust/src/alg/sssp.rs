@@ -72,6 +72,10 @@ impl Analysis for Sssp {
     fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
         oracle::check_sssp(g, self.src, values)
     }
+
+    fn source_vertex(&self) -> Option<u32> {
+        Some(self.src)
+    }
 }
 
 /// Result of one functional+demand delta-stepping execution.

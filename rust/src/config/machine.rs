@@ -17,7 +17,11 @@ use anyhow::Result;
 
 use crate::util::json::Json;
 
-/// RapidIO fabric model.
+/// RapidIO fabric model, plus the inter-chassis *fleet interconnect* a
+/// multi-machine cluster ships frontier exchanges and replication traffic
+/// over (DESIGN.md §Fleet). The interconnect is a separate, slower pipe
+/// from the intra-machine RapidIO links: single-machine demands never touch
+/// it, so its parameters are inert outside `serve --fleet`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricConfig {
     /// One-way latency between nodes in the same chassis (ns).
@@ -26,6 +30,13 @@ pub struct FabricConfig {
     pub inter_chassis_latency_ns: f64,
     /// Per-node egress/ingress bandwidth onto the fabric (bytes/s).
     pub node_link_bytes_per_s: f64,
+    /// Per-node share of the inter-machine fleet interconnect (bytes/s):
+    /// the capacity one node can push toward *other chassis of a fleet*
+    /// (cross-shard frontier exchange, replication log shipping).
+    pub interconnect_bytes_per_s: f64,
+    /// One-way latency of an inter-machine interconnect message (ns);
+    /// floors any phase that performs at least one cross-shard exchange.
+    pub interconnect_latency_ns: f64,
 }
 
 impl Default for FabricConfig {
@@ -34,6 +45,8 @@ impl Default for FabricConfig {
             intra_chassis_latency_ns: 400.0,
             inter_chassis_latency_ns: 1_100.0,
             node_link_bytes_per_s: 5.0e9,
+            interconnect_bytes_per_s: 12.5e9,
+            interconnect_latency_ns: 5_000.0,
         }
     }
 }
@@ -44,14 +57,25 @@ impl FabricConfig {
             ("intra_chassis_latency_ns", Json::num(self.intra_chassis_latency_ns)),
             ("inter_chassis_latency_ns", Json::num(self.inter_chassis_latency_ns)),
             ("node_link_bytes_per_s", Json::num(self.node_link_bytes_per_s)),
+            ("interconnect_bytes_per_s", Json::num(self.interconnect_bytes_per_s)),
+            ("interconnect_latency_ns", Json::num(self.interconnect_latency_ns)),
         ])
     }
 
     pub fn from_json(v: &Json) -> Result<Self> {
+        let defaults = FabricConfig::default();
         Ok(FabricConfig {
             intra_chassis_latency_ns: v.f64_of("intra_chassis_latency_ns")?,
             inter_chassis_latency_ns: v.f64_of("inter_chassis_latency_ns")?,
             node_link_bytes_per_s: v.f64_of("node_link_bytes_per_s")?,
+            // Fleet interconnect keys postdate saved machine configs;
+            // absent keys fall back to defaults so old files keep loading.
+            interconnect_bytes_per_s: v
+                .f64_of("interconnect_bytes_per_s")
+                .unwrap_or(defaults.interconnect_bytes_per_s),
+            interconnect_latency_ns: v
+                .f64_of("interconnect_latency_ns")
+                .unwrap_or(defaults.interconnect_latency_ns),
         })
     }
 }
@@ -275,6 +299,14 @@ impl MachineConfig {
             "spawn_efficiency must be in (0, 1]"
         );
         anyhow::ensure!(self.ctx_bytes_per_query > 0, "ctx footprint must be positive");
+        anyhow::ensure!(
+            self.fabric.interconnect_bytes_per_s > 0.0,
+            "fleet interconnect bandwidth must be positive"
+        );
+        anyhow::ensure!(
+            self.fabric.interconnect_latency_ns >= 0.0,
+            "fleet interconnect latency must be non-negative"
+        );
         Ok(())
     }
 
@@ -409,6 +441,19 @@ mod tests {
         let back = MachineConfig::from_json(&Json::parse(&m.to_json().render_pretty()).unwrap())
             .unwrap();
         assert_eq!(m, back);
+    }
+
+    #[test]
+    fn fabric_json_tolerates_missing_interconnect_keys() {
+        // Saved machine configs predate the fleet interconnect; a fabric
+        // object without the new keys must load with the defaults.
+        let legacy = Json::obj(vec![
+            ("intra_chassis_latency_ns", Json::num(400.0)),
+            ("inter_chassis_latency_ns", Json::num(1100.0)),
+            ("node_link_bytes_per_s", Json::num(5.0e9)),
+        ]);
+        let f = FabricConfig::from_json(&legacy).unwrap();
+        assert_eq!(f, FabricConfig::default());
     }
 
     #[test]

@@ -1,0 +1,857 @@
+//! The fleet routing layer: `serve --fleet` (DESIGN.md §Fleet).
+//!
+//! A [`Fleet`] binds the three sharded-cluster pieces together:
+//!
+//! * a [`Partition`] (vertex → owner shard, per-shard sub-CSRs, cut-arc
+//!   accounting — [`crate::graph::partition`]);
+//! * a [`Cluster`] (`shards x replicas` chassis flattened into one
+//!   simulatable machine — [`crate::sim::cluster`]);
+//! * the per-query **routing + demand models** below, which decide which
+//!   fleet members a query touches and price the cross-shard traffic on
+//!   the fleet interconnect ([`PhaseDemand::interconnect_bytes`]).
+//!
+//! Three demand models cover every workload class:
+//!
+//! * **Rooted traversals** ([`Analysis::source_vertex`] = `Some`): the
+//!   fleet runs the level-synchronous traversal explicitly
+//!   ([`Fleet::traversal_phases`]). Each frontier vertex expands on its
+//!   *owner* shard's chassis exactly like the single-machine tuned BFS
+//!   (same migrations, record reads, edge-block streams, unconditional
+//!   level writes); an edge whose head lives on **another shard** ships
+//!   its frontier candidate over the interconnect instead of the
+//!   intra-machine fabric — 16 bytes at the expanding node, priced per
+//!   level, so every level with cross-shard discovery also pays the
+//!   interconnect round-trip floor. SSSP's bucket refinements and k-hop's
+//!   depth cap collapse into the same level structure (the fleet prices
+//!   the full expansion — conservative for k-hop).
+//! * **Whole-graph analyses** (`source_vertex` = `None`): the base
+//!   machine's own demand phases are **scattered** across shards
+//!   proportionally to owned arcs ([`Fleet::scatter`]), each shard's
+//!   slice embedded on its chassis, plus per-phase interconnect traffic
+//!   for the shard's cut arcs (16 bytes each, spread over phases by
+//!   channel-op weight). This is a deliberate fluid approximation: totals
+//!   are conserved exactly, placement is per-shard exact, per-channel
+//!   skew within a shard follows the base model.
+//! * **Mutation batches** ([`Fleet::ingest_phase`]): the primary replica
+//!   applies each update direction at the destination's owner chassis
+//!   (the single-machine memory-side ingest rule), cross-shard endpoints
+//!   paying interconnect instead of fabric; every further replica then
+//!   receives the record over the **ordered log** (interconnect bytes
+//!   from the primary) and splices it memory-side. One log, applied
+//!   everywhere, is what keeps all replicas of a shard in the same epoch
+//!   sequence — [`ReplicaSet`] is that invariant made executable, and the
+//!   fleet-vs-single-node equivalence property tests pin it.
+//!
+//! **Read replicas**: query `id` is served by replica set `id mod R`
+//! ([`Fleet::replica_of`]) — hot query classes spread across full fleet
+//! copies while every answer stays bound to its pinned epoch (replicas
+//! apply the same ordered log, so the same epoch means the same graph).
+//!
+//! There is **no demand cache** in the fleet path: routing makes demand
+//! genuinely per-query (the replica assignment depends on the query id),
+//! so the rotation-equivariance shortcut of the single-machine
+//! coordinator does not apply.
+//!
+//! [`PhaseDemand::interconnect_bytes`]: crate::sim::demand::PhaseDemand
+
+use anyhow::Result;
+
+use super::request::QueryRequest;
+use crate::alg::analysis::Analysis;
+use crate::config::machine::MachineConfig;
+use crate::graph::csr::Csr;
+use crate::graph::delta::EdgeUpdate;
+use crate::graph::partition::{Partition, PartitionStrategy};
+use crate::graph::store::GraphStore;
+use crate::graph::view::{GraphView, NeighborScratch};
+use crate::sim::cluster::Cluster;
+use crate::sim::demand::{DemandBuilder, PhaseDemand};
+use crate::sim::flow::QuerySpec;
+use crate::sim::machine::Machine;
+
+/// Bytes per cross-shard frontier candidate / log record half-edge — the
+/// same 16-byte message the single-machine models charge the fabric for.
+const INTERCONNECT_MSG_BYTES: f64 = 16.0;
+
+/// Configuration of `serve --fleet nodes=N,replicas=R,partition=...`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FleetConfig {
+    /// Shard count (`nodes=` in the CLI spec: fleet machines holding
+    /// distinct graph shards).
+    pub shards: usize,
+    /// Full fleet copies (`replicas=`): each adds one more chassis per
+    /// shard serving the same ordered update log.
+    pub replicas: usize,
+    /// Vertex partitioning strategy (`partition=hash|balanced`).
+    pub strategy: PartitionStrategy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { shards: 4, replicas: 1, strategy: PartitionStrategy::Hash }
+    }
+}
+
+impl FleetConfig {
+    /// Parse `nodes=N[,replicas=R][,partition=hash|balanced]` (the CLI
+    /// `serve --fleet` argument). Omitted keys keep defaults.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut cfg = FleetConfig::default();
+        for piece in spec.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (key, value) = piece
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("fleet spec piece {piece:?} is not key=value"))?;
+            let value = value.trim();
+            match key.trim() {
+                "nodes" => {
+                    cfg.shards = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fleet nodes={value:?} is not a count"))?
+                }
+                "replicas" => {
+                    cfg.replicas = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("fleet replicas={value:?} is not a count"))?
+                }
+                "partition" => cfg.strategy = PartitionStrategy::parse(value)?,
+                other => {
+                    anyhow::bail!("unknown fleet key {other:?} (want nodes/replicas/partition)")
+                }
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.shards >= 1, "fleet needs at least one shard");
+        anyhow::ensure!(self.replicas >= 1, "fleet needs at least one replica");
+        Ok(())
+    }
+
+    /// Compact spec string for report headers (round-trips through
+    /// [`FleetConfig::parse`]).
+    pub fn label(&self) -> String {
+        format!(
+            "nodes={},replicas={},partition={}",
+            self.shards,
+            self.replicas,
+            self.strategy.label()
+        )
+    }
+}
+
+/// A sharded, replicated fleet serving one graph: partition + flattened
+/// cluster + the per-query routing/demand models (module docs).
+#[derive(Debug)]
+pub struct Fleet {
+    cfg: FleetConfig,
+    partition: Partition,
+    cluster: Cluster,
+    /// One base chassis, used to compute the demand shapes that
+    /// [`Fleet::scatter`] splits across shards.
+    base: Machine,
+}
+
+impl Fleet {
+    /// Shard `g` and build the fleet on copies of the `base` machine.
+    pub fn new(g: &Csr, base: &MachineConfig, cfg: FleetConfig) -> Result<Self> {
+        cfg.validate()?;
+        let partition = Partition::build(g, cfg.shards, cfg.strategy);
+        partition.check_invariants(g)?;
+        Ok(Fleet {
+            cfg,
+            partition,
+            cluster: Cluster::new(base, cfg.shards, cfg.replicas),
+            base: Machine::new(base.clone()),
+        })
+    }
+
+    /// The flattened fleet machine the flow engine runs against.
+    pub fn machine(&self) -> &Machine {
+        self.cluster.machine()
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn config(&self) -> &FleetConfig {
+        &self.cfg
+    }
+
+    /// Read-replica routing: query `id` is served by replica set
+    /// `id mod R`, spreading hot query classes across fleet copies.
+    #[inline]
+    pub fn replica_of(&self, query_id: usize) -> usize {
+        query_id % self.cfg.replicas
+    }
+
+    /// Prepare one request against the fleet: route to a replica set,
+    /// price with the rooted-traversal or scatter model, and bind the
+    /// admission metadata — the fleet counterpart of
+    /// [`crate::coordinator::Coordinator::prepare_one`] (no demand cache;
+    /// module docs explain why).
+    pub fn prepare_one(
+        &self,
+        view: GraphView<'_>,
+        req: &QueryRequest,
+        id: usize,
+        stripe_offset: usize,
+    ) -> QuerySpec {
+        let a = req.analysis.as_ref();
+        let replica = self.replica_of(id);
+        let phases = match a.source_vertex() {
+            Some(src) => self.traversal_phases(view, src, replica, stripe_offset),
+            None => self.scatter_phases(view, a, replica, stripe_offset),
+        };
+        QuerySpec {
+            id,
+            label: a.label(),
+            phases,
+            arrival_ns: req.arrival_ns,
+            priority: req.priority,
+            deadline_ns: req.deadline_ns,
+            ctx_bytes: a
+                .ctx_mem_bytes(view, self.machine())
+                .unwrap_or(self.machine().cfg.ctx_bytes_per_query),
+        }
+    }
+
+    /// Explicit distributed level-synchronous traversal from `src` on
+    /// replica set `replica`: the single-machine tuned-BFS charging rule
+    /// per frontier vertex, placed on each vertex's owner chassis, with
+    /// cross-shard frontier candidates shipped over the fleet
+    /// interconnect (module docs). One phase per level, so every level
+    /// with cross-shard discovery pays the interconnect round trip — the
+    /// per-level frontier-exchange cost the flattening alone would hide.
+    pub fn traversal_phases(
+        &self,
+        view: GraphView<'_>,
+        src: u32,
+        replica: usize,
+        stripe_offset: usize,
+    ) -> Vec<PhaseDemand> {
+        let m = self.machine();
+        let lay = self.cluster.chassis_layout();
+        let nodes = m.nodes();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+        let cfg = &m.cfg;
+        let n = view.n();
+        if src as usize >= n {
+            return vec![PhaseDemand::zero(nodes, channels)];
+        }
+
+        let mut seen = vec![false; n];
+        seen[src as usize] = true;
+        let mut frontier = vec![src];
+        let mut phases = Vec::new();
+        let mut scratch = NeighborScratch::default();
+
+        while !frontier.is_empty() {
+            let mut b = DemandBuilder::new(nodes, channels);
+            let mut next = Vec::new();
+            let mut ops = 0.0f64;
+            for &u in &frontier {
+                let su = self.partition.owner_of(u);
+                let un = self.cluster.vertex_node(self.cluster.chassis_of(su, replica), u);
+                // Worker launch + record read + edge-block stream on the
+                // owner chassis, exactly as on one machine (§III).
+                b.migration(un, 1.0);
+                b.fabric_bytes(un, 64.0);
+                b.instructions(un, cfg.spawn_instr);
+                b.channel_op(un, lay.channel_of(u), 1.0);
+                ops += 1.0;
+                let nbrs = view.neighbors(u, &mut scratch);
+                let deg = nbrs.len();
+                b.stream_bytes(un, GraphView::edge_block_bytes_for(deg) as f64);
+                b.instructions(un, deg as f64 * cfg.instr_per_edge);
+                for &v in nbrs {
+                    let sv = self.partition.owner_of(v);
+                    let vn = self.cluster.vertex_node(self.cluster.chassis_of(sv, replica), v);
+                    // Unconditional level/parent write at v's home — on
+                    // v's OWNER chassis of this replica set.
+                    b.channel_op(vn, (lay.channel_of(v) + stripe_offset) % channels, 1.0);
+                    ops += 1.0;
+                    if sv != su {
+                        // Cross-shard frontier candidate: the message
+                        // leaves the machine, interconnect not fabric.
+                        b.interconnect_bytes(un, INTERCONNECT_MSG_BYTES);
+                    } else if vn != un {
+                        b.fabric_bytes(un, INTERCONNECT_MSG_BYTES);
+                    }
+                    if !seen[v as usize] {
+                        seen[v as usize] = true;
+                        next.push(v);
+                    }
+                }
+            }
+            b.parallelism(ops.min(contexts_total));
+            phases.push(b.finish());
+            frontier = next;
+        }
+        phases
+    }
+
+    /// Price a whole-graph analysis by scattering its base-machine demand
+    /// across shards (module docs: arc-share split + cut-arc
+    /// interconnect).
+    pub fn scatter_phases(
+        &self,
+        view: GraphView<'_>,
+        a: &dyn Analysis,
+        replica: usize,
+        stripe_offset: usize,
+    ) -> Vec<PhaseDemand> {
+        self.scatter(&a.phases(view, &self.base, stripe_offset), replica)
+    }
+
+    /// Embed base-chassis demand phases into the fleet: shard `s` runs
+    /// the fraction `owned_arcs(s)/total_arcs` of every per-node quantity
+    /// on its replica-`replica` chassis, plus `16 B x cut_arcs(s)` of
+    /// interconnect traffic for the whole query, spread over phases by
+    /// channel-op weight. With one shard this is the identity embedding
+    /// (zero cut, factor 1), which the tests pin.
+    pub fn scatter(&self, base_phases: &[PhaseDemand], replica: usize) -> Vec<PhaseDemand> {
+        let npc = self.cluster.nodes_per_chassis();
+        let cpn = self.machine().cfg.channels_per_node;
+        let fleet_nodes = self.machine().nodes();
+        let shards = self.cfg.shards;
+        let total_arcs: usize = (0..shards).map(|s| self.partition.shard_arcs(s)).sum();
+        let total_ops: f64 = base_phases.iter().map(|p| p.total_channel_ops()).sum();
+        base_phases
+            .iter()
+            .map(|p| {
+                debug_assert_eq!(p.nodes(), npc, "base phases come from one chassis");
+                let w = if total_ops > 0.0 {
+                    p.total_channel_ops() / total_ops
+                } else {
+                    1.0 / base_phases.len() as f64
+                };
+                let mut out = PhaseDemand::zero(fleet_nodes, cpn);
+                out.serial_hops = p.serial_hops;
+                out.issue_efficiency = p.issue_efficiency;
+                out.parallelism = p.parallelism;
+                for s in 0..shards {
+                    let f = if total_arcs > 0 {
+                        self.partition.shard_arcs(s) as f64 / total_arcs as f64
+                    } else {
+                        1.0 / shards as f64
+                    };
+                    let cut = INTERCONNECT_MSG_BYTES * self.partition.cut_arcs(s) as f64 * w
+                        / npc as f64;
+                    let base_node = self.cluster.chassis_of(s, replica) * npc;
+                    for bn in 0..npc {
+                        let fnode = base_node + bn;
+                        out.channel_ops[fnode] += p.channel_ops[bn] * f;
+                        out.max_channel_ops[fnode] = p.max_channel_ops[bn] * f;
+                        out.stream_bytes[fnode] += p.stream_bytes[bn] * f;
+                        out.instructions[fnode] += p.instructions[bn] * f;
+                        out.fabric_bytes[fnode] += p.fabric_bytes[bn] * f;
+                        out.migrations[fnode] += p.migrations[bn] * f;
+                        out.msp_ops[fnode] += p.msp_ops[bn] * f;
+                        out.interconnect_bytes[fnode] += cut;
+                        for ch in 0..cpn {
+                            out.per_channel_ops[fnode * cpn + ch] +=
+                                p.per_channel_ops[bn * cpn + ch] * f;
+                        }
+                    }
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Demand of fanning one update batch out through the ordered log
+    /// (module docs): primary apply at each destination's owner chassis
+    /// (cross-shard endpoints pay interconnect instead of fabric), then
+    /// one log shipment + memory-side splice per further replica.
+    pub fn ingest_phase(&self, updates: &[EdgeUpdate]) -> PhaseDemand {
+        let m = self.machine();
+        let lay = self.cluster.chassis_layout();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (m.nodes() * m.cfg.contexts_per_node()) as f64;
+        let mut b = DemandBuilder::new(m.nodes(), channels);
+        let mut ops = 0.0f64;
+        for upd in updates {
+            for (src, dst) in [(upd.u, upd.v), (upd.v, upd.u)] {
+                let ss = self.partition.owner_of(src);
+                let sd = self.partition.owner_of(dst);
+                let dc = lay.channel_of(dst);
+                let sn = self.cluster.vertex_node(self.cluster.chassis_of(ss, 0), src);
+                let dn0 = self.cluster.vertex_node(self.cluster.chassis_of(sd, 0), dst);
+                // Primary apply: unconditional remote write + MSP log
+                // splice at dst's home, like single-machine ingest.
+                b.channel_op(dn0, dc, 1.0);
+                b.msp_op(dn0, dc, 1.0);
+                ops += 2.0;
+                b.instructions(sn, m.cfg.instr_per_edge);
+                if ss != sd {
+                    b.interconnect_bytes(sn, 2.0 * INTERCONNECT_MSG_BYTES);
+                } else if dn0 != sn {
+                    b.fabric_bytes(sn, 2.0 * INTERCONNECT_MSG_BYTES);
+                }
+                // Ordered-log shipping: every further replica of dst's
+                // shard receives the record and splices it memory-side.
+                for r in 1..self.cfg.replicas {
+                    let dnr = self.cluster.vertex_node(self.cluster.chassis_of(sd, r), dst);
+                    b.interconnect_bytes(dn0, 2.0 * INTERCONNECT_MSG_BYTES);
+                    b.channel_op(dnr, dc, 1.0);
+                    b.msp_op(dnr, dc, 1.0);
+                    ops += 2.0;
+                }
+            }
+        }
+        if ops > 0.0 {
+            b.parallelism(ops.min(contexts_total));
+            b.issue_efficiency(1.0);
+        }
+        b.finish()
+    }
+
+    /// Fleet section of a service report: per-shard channel utilization
+    /// over `duration_ns` (summed across the shard's replicas) plus total
+    /// interconnect bytes, computed from the executed specs.
+    pub fn stats(&self, specs: &[QuerySpec], duration_ns: f64) -> FleetStats {
+        let m = self.machine();
+        let npc = self.cluster.nodes_per_chassis();
+        let shards = self.cfg.shards;
+        let mut shard_ops = vec![0.0f64; shards];
+        let mut interconnect = 0.0f64;
+        for spec in specs {
+            for p in &spec.phases {
+                interconnect += p.total_interconnect_bytes();
+                for node in 0..p.nodes() {
+                    shard_ops[(node / npc) % shards] += p.channel_ops[node];
+                }
+            }
+        }
+        let shard_util = (0..shards)
+            .map(|s| {
+                let cap: f64 = (0..self.cfg.replicas)
+                    .flat_map(|r| self.cluster.node_range(self.cluster.chassis_of(s, r)))
+                    .map(|node| m.channel_op_rate(node))
+                    .sum();
+                if duration_ns > 0.0 && cap > 0.0 {
+                    shard_ops[s] / (cap * duration_ns * 1e-9)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        FleetStats {
+            shards,
+            replicas: self.cfg.replicas,
+            strategy: self.cfg.strategy.label(),
+            cut_fraction: self.partition.cut_fraction(),
+            interconnect_bytes: interconnect,
+            shard_util,
+        }
+    }
+}
+
+/// Fleet section of a [`crate::coordinator::ServiceReport`].
+#[derive(Debug, Clone)]
+pub struct FleetStats {
+    pub shards: usize,
+    pub replicas: usize,
+    /// Partition strategy label ("hash" / "balanced").
+    pub strategy: &'static str,
+    /// Fraction of directed arcs crossing shards.
+    pub cut_fraction: f64,
+    /// Total bytes all queries pushed over the fleet interconnect.
+    pub interconnect_bytes: f64,
+    /// Per-shard channel utilization over the service duration (all
+    /// replicas of the shard pooled).
+    pub shard_util: Vec<f64>,
+}
+
+impl FleetStats {
+    /// Operator-facing summary lines (README's `serve --fleet` block
+    /// mirrors this shape).
+    pub fn lines(&self) -> String {
+        let util = self
+            .shard_util
+            .iter()
+            .enumerate()
+            .map(|(s, u)| format!("s{s} {:.0}%", 100.0 * u))
+            .collect::<Vec<_>>()
+            .join("  ");
+        format!(
+            "fleet: {} shards x {} replicas ({}), cut {:.1}%, interconnect {}\n  shard util: {}",
+            self.shards,
+            self.replicas,
+            self.strategy,
+            100.0 * self.cut_fraction,
+            format_bytes(self.interconnect_bytes),
+            util
+        )
+    }
+}
+
+fn format_bytes(b: f64) -> String {
+    if b >= 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b >= 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else if b >= 1e3 {
+        format!("{:.1} KB", b / 1e3)
+    } else {
+        format!("{:.0} B", b)
+    }
+}
+
+/// Every replica of every shard as live epoch stores fed by ONE ordered
+/// update log — the replication invariant of DESIGN.md §Fleet made
+/// executable. Each store holds its shard's sub-CSR (global ids, unowned
+/// rows empty) and applies every batch **filtered to updates with an
+/// owned endpoint**; empty filtered batches still apply, so epoch
+/// numbering stays globally aligned across all `shards x replicas`
+/// stores. The theorem the property tests pin: at every epoch, every
+/// owned row of every replica equals the global single-node store's row
+/// — same epoch, same answers, regardless of shard or replica count.
+#[derive(Debug)]
+pub struct ReplicaSet {
+    partition: Partition,
+    replicas: usize,
+    /// Replica-major: `stores[replica * shards + shard]`.
+    stores: Vec<GraphStore>,
+}
+
+impl ReplicaSet {
+    pub fn new(partition: Partition, replicas: usize) -> Self {
+        assert!(replicas > 0, "need at least one replica");
+        let stores = (0..replicas)
+            .flat_map(|_| {
+                (0..partition.shards).map(|s| GraphStore::new(partition.shard_graph(s)))
+            })
+            .collect();
+        ReplicaSet { partition, replicas, stores }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.partition.shards
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    pub fn store(&self, shard: usize, replica: usize) -> &GraphStore {
+        &self.stores[replica * self.partition.shards + shard]
+    }
+
+    pub fn store_mut(&mut self, shard: usize, replica: usize) -> &mut GraphStore {
+        &mut self.stores[replica * self.partition.shards + shard]
+    }
+
+    fn n(&self) -> usize {
+        self.partition.shard_graph(0).n()
+    }
+
+    /// Apply one batch through the ordered log to every store (filtered
+    /// per shard, module docs). Returns the new epoch, identical across
+    /// all stores by construction — asserted, not assumed.
+    pub fn apply_batch(&mut self, updates: &[EdgeUpdate]) -> u64 {
+        let shards = self.partition.shards;
+        let n = self.n() as u32;
+        let mut epoch = None;
+        for r in 0..self.replicas {
+            for s in 0..shards {
+                let filtered: Vec<EdgeUpdate> = updates
+                    .iter()
+                    .filter(|upd| {
+                        // Out-of-range endpoints reach no shard; the
+                        // global store counts them invalid, and invalid
+                        // updates touch no row either way.
+                        (upd.u < n && self.partition.owner_of(upd.u) == s)
+                            || (upd.v < n && self.partition.owner_of(upd.v) == s)
+                    })
+                    .copied()
+                    .collect();
+                let stats = self.stores[r * shards + s].apply_batch(&filtered);
+                match epoch {
+                    None => epoch = Some(stats.epoch),
+                    Some(e) => assert_eq!(e, stats.epoch, "replica log out of step"),
+                }
+            }
+        }
+        epoch.expect("at least one store")
+    }
+
+    /// Materialize the fleet-wide graph at `epoch` as replica `replica`
+    /// sees it: row `v` comes from `v`'s owner store. Equal to the global
+    /// single-node store's materialization at the same epoch — the
+    /// equivalence property tests compare exactly this.
+    pub fn materialize(&self, epoch: u64, replica: usize) -> Result<Csr> {
+        let shards = self.partition.shards;
+        let views: Vec<GraphView<'_>> = (0..shards)
+            .map(|s| self.store(s, replica).view_at(epoch))
+            .collect::<Result<_>>()?;
+        let n = self.n();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut targets = Vec::new();
+        let mut scratch = NeighborScratch::default();
+        offsets.push(0u64);
+        for v in 0..n as u32 {
+            let view = &views[self.partition.owner_of(v)];
+            targets.extend_from_slice(view.neighbors(v, &mut scratch));
+            offsets.push(targets.len() as u64);
+        }
+        Ok(Csr::from_parts(offsets, targets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::bfs::bfs_run_offset;
+    use crate::alg::cc::Cc;
+    use crate::graph::builder::build_undirected_csr;
+
+    fn ring_with_hub(n: u32) -> Csr {
+        let mut edges: Vec<(u32, u32)> = (0..n).map(|v| (v, (v + 1) % n)).collect();
+        edges.extend((2..n).step_by(3).map(|v| (0, v)));
+        build_undirected_csr(n as usize, &edges)
+    }
+
+    fn fleet(shards: usize, replicas: usize, g: &Csr) -> Fleet {
+        let cfg = FleetConfig {
+            shards,
+            replicas,
+            strategy: PartitionStrategy::Balanced,
+        };
+        Fleet::new(g, &MachineConfig::pathfinder_8(), cfg).unwrap()
+    }
+
+    #[test]
+    fn parse_and_validate() {
+        let c = FleetConfig::parse("nodes=4, replicas=2, partition=balanced").unwrap();
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.replicas, 2);
+        assert_eq!(c.strategy, PartitionStrategy::Balanced);
+        assert_eq!(c.label(), "nodes=4,replicas=2,partition=balanced");
+        // Defaults survive partial specs.
+        let c = FleetConfig::parse("nodes=2").unwrap();
+        assert_eq!(c.replicas, 1);
+        assert_eq!(c.strategy, PartitionStrategy::Hash);
+        assert!(FleetConfig::parse("nodes=0").is_err());
+        assert!(FleetConfig::parse("replicas=0").is_err());
+        assert!(FleetConfig::parse("partition=range").is_err());
+        assert!(FleetConfig::parse("chassis=4").is_err());
+        assert!(FleetConfig::parse("nodes").is_err());
+    }
+
+    /// A 1x1 fleet IS the single machine: every demand model degenerates
+    /// to its single-machine counterpart exactly.
+    #[test]
+    fn fleet_of_one_is_the_single_machine() {
+        let g = ring_with_hub(24);
+        let f = fleet(1, 1, &g);
+        let m = f.machine();
+        assert_eq!(m.nodes(), 8);
+        // Rooted traversal == the tuned BFS demand, phase by phase.
+        let fleet_phases = f.traversal_phases(g.view(), 3, 0, 5);
+        let solo = bfs_run_offset(g.view(), m, 3, 5);
+        assert_eq!(fleet_phases, solo.phases);
+        // Scatter == identity embedding of the base phases.
+        let base = Cc.phases(g.view(), m, 2);
+        assert_eq!(f.scatter(&base, 0), base);
+        // Ingest == the single-machine memory-side ingest model.
+        let upd = vec![EdgeUpdate::insert(1, 9), EdgeUpdate::delete(0, 1)];
+        assert_eq!(f.ingest_phase(&upd), PhaseDemand::ingest_batch(m, &upd));
+    }
+
+    #[test]
+    fn cross_shard_traversal_ships_frontier_over_the_interconnect() {
+        let g = ring_with_hub(24);
+        let f = fleet(3, 1, &g);
+        let phases = f.traversal_phases(g.view(), 0, 0, 0);
+        // Totals conserved: one record read per reached vertex + one
+        // write per scanned edge, exactly like one machine.
+        let solo = bfs_run_offset(g.view(), &Machine::new(MachineConfig::pathfinder_8()), 0, 0);
+        let fleet_ops: f64 = phases.iter().map(|p| p.total_channel_ops()).sum();
+        let solo_ops: f64 = solo.phases.iter().map(|p| p.total_channel_ops()).sum();
+        assert_eq!(fleet_ops, solo_ops);
+        let migs: f64 = phases.iter().map(|p| p.total_migrations()).sum();
+        assert_eq!(migs, solo.reached() as f64);
+        // Cross-shard edges pay interconnect, 16 B per scanned edge whose
+        // endpoints have different owners.
+        let p = f.partition();
+        let cross: f64 = (0..g.n() as u32)
+            .filter(|&v| solo.levels[v as usize] != -1)
+            .map(|u| {
+                g.neighbors(u)
+                    .iter()
+                    .filter(|&&v| p.owner_of(v) != p.owner_of(u))
+                    .count() as f64
+            })
+            .sum();
+        assert!(cross > 0.0, "partition must actually cut this graph");
+        let inter: f64 = phases.iter().map(|p| p.total_interconnect_bytes()).sum();
+        assert_eq!(inter, 16.0 * cross);
+    }
+
+    #[test]
+    fn replica_routing_places_demand_on_the_routed_copy() {
+        let g = ring_with_hub(24);
+        let f = fleet(2, 2, &g);
+        let npc = f.cluster().nodes_per_chassis();
+        let first_copy = 2 * npc; // replica 0 = chassis 0..2 = nodes 0..16
+        for (id, expect_second) in [(0usize, false), (1usize, true), (2usize, false)] {
+            let req = QueryRequest::new(crate::alg::bfs::Bfs { src: 0 });
+            let spec = f.prepare_one(g.view(), &req, id, id);
+            let on_second: f64 = spec
+                .phases
+                .iter()
+                .flat_map(|p| p.channel_ops[first_copy..].iter())
+                .sum();
+            let on_first: f64 = spec
+                .phases
+                .iter()
+                .flat_map(|p| p.channel_ops[..first_copy].iter())
+                .sum();
+            if expect_second {
+                assert!(on_second > 0.0 && on_first == 0.0, "id {id} routes to replica 1");
+            } else {
+                assert!(on_first > 0.0 && on_second == 0.0, "id {id} routes to replica 0");
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_conserves_totals_and_charges_cut_arcs() {
+        let g = ring_with_hub(24);
+        let f = fleet(3, 1, &g);
+        let m = Machine::new(MachineConfig::pathfinder_8());
+        let base = Cc.phases(g.view(), &m, 0);
+        let scattered = f.scatter(&base, 0);
+        assert_eq!(scattered.len(), base.len());
+        let sum = |ps: &[PhaseDemand], sel: fn(&PhaseDemand) -> f64| -> f64 {
+            ps.iter().map(sel).sum()
+        };
+        let close = |a: f64, b: f64| (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0);
+        assert!(close(
+            sum(&scattered, |p| p.total_channel_ops()),
+            sum(&base, |p| p.total_channel_ops())
+        ));
+        assert!(close(
+            sum(&scattered, |p| p.stream_bytes.iter().sum()),
+            sum(&base, |p| p.stream_bytes.iter().sum())
+        ));
+        assert!(close(
+            sum(&scattered, |p| p.total_instructions()),
+            sum(&base, |p| p.total_instructions())
+        ));
+        // Whole-query interconnect = 16 B per cut arc.
+        let cut: usize = (0..3).map(|s| f.partition().cut_arcs(s)).sum();
+        assert!(cut > 0);
+        assert!(close(
+            sum(&scattered, |p| p.total_interconnect_bytes()),
+            16.0 * cut as f64
+        ));
+    }
+
+    #[test]
+    fn ingest_fans_out_through_the_ordered_log() {
+        let g = ring_with_hub(24);
+        let f = fleet(2, 2, &g);
+        let p = f.partition();
+        // One intra-shard and one cross-shard update (by construction).
+        let (mut same, mut cross) = (None, None);
+        'outer: for u in 0..24u32 {
+            for v in (u + 1)..24 {
+                if same.is_none() && p.owner_of(u) == p.owner_of(v) {
+                    same = Some(EdgeUpdate::insert(u, v));
+                } else if cross.is_none() && p.owner_of(u) != p.owner_of(v) {
+                    cross = Some(EdgeUpdate::insert(u, v));
+                }
+                if same.is_some() && cross.is_some() {
+                    break 'outer;
+                }
+            }
+        }
+        let updates = vec![same.unwrap(), cross.unwrap()];
+        let d = f.ingest_phase(&updates);
+        // Write + MSP per direction, applied at BOTH replicas.
+        assert_eq!(d.total_channel_ops(), 2.0 * 2.0 * 2.0 * 2.0);
+        assert_eq!(d.msp_ops.iter().sum::<f64>(), 2.0 * 2.0 * 2.0);
+        // Interconnect: the cross-shard update's two primary applies
+        // (32 B each) + log shipping of every direction to replica 1
+        // (4 directions x 32 B).
+        assert_eq!(d.total_interconnect_bytes(), 2.0 * 32.0 + 4.0 * 32.0);
+        assert_eq!(d.total_migrations(), 0.0, "ingest never migrates");
+        assert_eq!(d.issue_efficiency, Some(1.0));
+    }
+
+    #[test]
+    fn replica_set_tracks_the_global_store_at_every_epoch() {
+        let g = ring_with_hub(24);
+        let part = Partition::build(&g, 3, PartitionStrategy::Hash);
+        let mut rs = ReplicaSet::new(part, 2);
+        let mut global = GraphStore::new(&g);
+        let batches: Vec<Vec<EdgeUpdate>> = vec![
+            vec![EdgeUpdate::insert(0, 7), EdgeUpdate::delete(0, 1)],
+            vec![],
+            vec![EdgeUpdate::delete(0, 7), EdgeUpdate::insert(5, 19), EdgeUpdate::insert(5, 19)],
+        ];
+        for b in &batches {
+            let e = rs.apply_batch(b);
+            assert_eq!(e, global.apply_batch(b).epoch);
+        }
+        for epoch in 0..=batches.len() as u64 {
+            let want = global.view_at(epoch).unwrap().to_csr();
+            for r in 0..2 {
+                assert_eq!(
+                    rs.materialize(epoch, r).unwrap(),
+                    want,
+                    "epoch {epoch} replica {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stats_report_shard_utilization_and_interconnect() {
+        let g = ring_with_hub(24);
+        let f = fleet(4, 1, &g);
+        let m = f.machine();
+        // One phase drawing half of every channel for 1 ms + a known
+        // interconnect volume.
+        let p = PhaseDemand::uniform_fleet_load(m, 0.5, 1e6, 1e6);
+        let inter = p.total_interconnect_bytes();
+        let spec = QuerySpec {
+            id: 0,
+            label: "bfs",
+            phases: vec![p],
+            arrival_ns: 0.0,
+            priority: crate::sim::flow::Priority::Interactive,
+            deadline_ns: None,
+            ctx_bytes: 0,
+        };
+        let s = f.stats(&[spec], 2e6);
+        assert_eq!(s.shards, 4);
+        assert_eq!(s.shard_util.len(), 4);
+        for u in &s.shard_util {
+            // Half capacity over half the window = 25%.
+            assert!((u - 0.25).abs() < 1e-9, "util {u}");
+        }
+        assert_eq!(s.interconnect_bytes, inter);
+        let lines = s.lines();
+        assert!(lines.starts_with("fleet: 4 shards x 1 replicas (balanced)"), "{lines}");
+        assert!(lines.contains("shard util: s0 25%"), "{lines}");
+    }
+}

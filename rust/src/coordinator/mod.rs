@@ -28,9 +28,16 @@
 //! * [`mutation`] — the live-graph ingest lane (`serve --mutate`): update
 //!   batches advance the epoch store and compete for channel bandwidth as
 //!   Batch-class [`IngestBatch`] work, while queries pin the epoch current
-//!   at admission (DESIGN.md §Mutation).
+//!   at admission (DESIGN.md §Mutation);
+//! * [`fleet`] — the sharded multi-chassis routing layer (`serve
+//!   --fleet`): a partitioned graph served by `shards x replicas` fleet
+//!   members, rooted traversals priced with explicit per-level cross-shard
+//!   frontier exchange on the fleet interconnect, update batches fanned
+//!   out through one ordered log so every replica of a shard agrees per
+//!   epoch (DESIGN.md §Fleet).
 
 pub mod admission;
+pub mod fleet;
 pub mod metrics;
 pub mod mutation;
 pub mod planner;
@@ -40,9 +47,12 @@ pub mod service;
 
 pub use admission::{ContextExhausted, ContextLedger};
 pub use crate::sim::flow::ShareWeights;
+pub use fleet::{Fleet, FleetConfig, FleetStats, ReplicaSet};
 pub use crate::sim::preempt::PreemptPolicy;
 pub use metrics::{ImprovementRow, Outcome, PriorityStats, QueryRecord, RunReport};
-pub use mutation::{IngestBatch, MutationConfig, MutationStats, MUTATE_LABEL};
+pub use mutation::{
+    CompactionFold, IngestBatch, MutationConfig, MutationStats, COMPACT_LABEL, MUTATE_LABEL,
+};
 pub use planner::{arrival_times, bfs_queries, mix_queries};
 pub use request::{Priority, QueryRequest};
 pub use scheduler::{Coordinator, Policy};

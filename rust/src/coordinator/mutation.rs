@@ -161,6 +161,62 @@ impl Analysis for IngestBatch {
     }
 }
 
+/// The class label every compaction fold reports under.
+pub const COMPACT_LABEL: &str = "compact";
+
+/// One compaction pass as a schedulable [`Analysis`]: label `"compact"`,
+/// no result values, demand = the merge-traffic model
+/// ([`PhaseDemand::compaction_fold`]). Submitted as **Batch-class** work
+/// by `serve --mutate` at the simulated time the store compacts, so
+/// folding drained overlays back into a flat base competes for stream and
+/// channel bandwidth with live queries instead of being free.
+#[derive(Debug)]
+pub struct CompactionFold {
+    /// Vertices in the base being rebuilt.
+    n: usize,
+    /// Directed arcs in the old base CSR (streamed out and back).
+    base_arcs: usize,
+    /// Directed arc records in the drained overlays being folded.
+    drained_arcs: usize,
+    /// Epoch the rebuilt base lands on (for `describe`).
+    base_epoch: u64,
+}
+
+impl CompactionFold {
+    pub fn new(n: usize, base_arcs: usize, drained_arcs: usize, base_epoch: u64) -> Self {
+        CompactionFold { n, base_arcs, drained_arcs, base_epoch }
+    }
+}
+
+impl Analysis for CompactionFold {
+    fn label(&self) -> &'static str {
+        COMPACT_LABEL
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "compact(base_arcs={},drained={},epoch={})",
+            self.base_arcs, self.drained_arcs, self.base_epoch
+        )
+    }
+
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        // Like ingest, the fold works on shared graph state (the base CSR
+        // and the delta logs), striped at fixed homes: no stripe offset.
+        let _ = (g, stripe_offset);
+        QueryOutput {
+            label: self.label(),
+            values: Vec::new(),
+            phases: vec![PhaseDemand::compaction_fold(m, self.n, self.base_arcs, self.drained_arcs)],
+        }
+    }
+
+    fn validate(&self, _g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
+        anyhow::ensure!(values.is_empty(), "compaction folds produce no per-vertex values");
+        Ok(())
+    }
+}
+
 /// Mutation-lane section of a [`crate::coordinator::ServiceReport`].
 #[derive(Debug, Clone)]
 pub struct MutationStats {
@@ -236,6 +292,22 @@ mod tests {
         assert!(MutationConfig::parse("delete=1.0").is_ok());
         assert!(MutationConfig::parse("tempo=3").is_err());
         assert!(!c.label().is_empty());
+    }
+
+    #[test]
+    fn compaction_fold_is_a_well_formed_batch_analysis() {
+        let g = build_undirected_csr(16, &[(0, 1), (2, 3)]);
+        let m = Machine::new(MachineConfig::pathfinder_8());
+        let a = CompactionFold::new(16, 4, 6, 2);
+        assert_eq!(a.label(), COMPACT_LABEL);
+        assert_eq!(a.describe(), "compact(base_arcs=4,drained=6,epoch=2)");
+        let out = a.run(g.view(), &m);
+        assert!(out.values.is_empty());
+        assert_eq!(out.phases, vec![PhaseDemand::compaction_fold(&m, 16, 4, 6)]);
+        a.validate(g.view(), &out.values).unwrap();
+        assert!(a.validate(g.view(), &[1]).is_err());
+        assert!(a.cacheable_demand().is_none());
+        assert!(a.source_vertex().is_none());
     }
 
     #[test]

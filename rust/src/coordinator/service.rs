@@ -10,12 +10,15 @@
 //! utilization — everything an operator would watch on a dashboard.
 
 use crate::alg::{Analysis, AnalysisFactory, AnalysisRegistry};
-use crate::coordinator::mutation::{IngestBatch, MutationConfig, MutationStats, MUTATE_LABEL};
+use crate::coordinator::fleet::{Fleet, FleetConfig, FleetStats};
+use crate::coordinator::mutation::{
+    CompactionFold, IngestBatch, MutationConfig, MutationStats, COMPACT_LABEL, MUTATE_LABEL,
+};
 use crate::coordinator::request::{Priority, QueryRequest};
 use crate::graph::csr::Csr;
 use crate::graph::delta::random_batch;
 use crate::graph::store::GraphStore;
-use crate::sim::flow::{OnFull, ShareWeights};
+use crate::sim::flow::{OnFull, QuerySpec, ShareWeights};
 use crate::sim::machine::Machine;
 use crate::sim::preempt::PreemptPolicy;
 use crate::util::rng::SplitMix64;
@@ -312,6 +315,12 @@ pub struct ServiceConfig {
     /// advancing the graph store one epoch (None = static graph, the
     /// byte-identical fast path).
     pub mutation: Option<MutationConfig>,
+    /// Sharded multi-chassis serving (`serve --fleet nodes=N,replicas=R,
+    /// partition=hash|balanced`): the graph is partitioned across N
+    /// shards, replicated R times, queries routed per
+    /// [`crate::coordinator::fleet`] and run on the flattened cluster
+    /// machine (None = single machine, the byte-identical fast path).
+    pub fleet: Option<FleetConfig>,
     /// RNG seed (arrivals, sources, query classes, priorities; the
     /// mutation stream forks an independent sub-stream from it).
     pub seed: u64,
@@ -328,6 +337,7 @@ impl Default for ServiceConfig {
             weights: ShareWeights::flat(),
             preempt: None,
             mutation: None,
+            fleet: None,
             seed: 0x5E21,
         }
     }
@@ -375,6 +385,9 @@ pub struct ServiceReport {
     /// Mutation-lane summary (epochs, compactions, update throughput);
     /// None for a static-graph run.
     pub mutation: Option<MutationStats>,
+    /// Fleet summary (per-shard utilization, interconnect bytes); None
+    /// for a single-machine run.
+    pub fleet: Option<FleetStats>,
 }
 
 impl ServiceReport {
@@ -409,6 +422,9 @@ impl ServiceReport {
             self.channel_utilization * 100.0,
             self.seed,
         );
+        if let Some(f) = &self.fleet {
+            out.push_str(&format!("\n  {}", f.lines()));
+        }
         if let Some(m) = &self.mutation {
             out.push_str(&format!("\n  {}", m.line()));
         }
@@ -445,8 +461,11 @@ impl<'g> GraphService<'g> {
 
     /// Serve a synthetic arrival stream described by `cfg`. With
     /// [`ServiceConfig::mutation`] set, update batches stream in alongside
-    /// the queries (see [`GraphService::serve_mutating`]); otherwise the
-    /// graph is static and this is the byte-identical fast path.
+    /// the queries (see [`GraphService::serve_mutating`]); with
+    /// [`ServiceConfig::fleet`] set, queries are routed across the
+    /// sharded/replicated fleet (see [`GraphService::serve_fleet`]);
+    /// otherwise the graph is static and served by one machine — the
+    /// byte-identical fast path.
     pub fn serve(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
         anyhow::ensure!(cfg.queries > 0, "need at least one query");
         cfg.workload.validate()?;
@@ -454,9 +473,15 @@ impl<'g> GraphService<'g> {
         if let Some(mix) = &cfg.priority_mix {
             mix.validate()?;
         }
+        if let Some(fcfg) = &cfg.fleet {
+            fcfg.validate()?;
+        }
         if let Some(mcfg) = &cfg.mutation {
             mcfg.validate()?;
             return self.serve_mutating(cfg, mcfg);
+        }
+        if cfg.fleet.is_some() {
+            return self.serve_fleet(cfg);
         }
         let (requests, arrivals) = self.build_query_stream(cfg);
 
@@ -471,6 +496,49 @@ impl<'g> GraphService<'g> {
 
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
         Ok(self.build_report(cfg, &report, first_arrival, None))
+    }
+
+    /// Build the fleet router when [`ServiceConfig::fleet`] is set:
+    /// partition the served graph and stand up the `shards x replicas`
+    /// cluster machine from copies of this service's base machine.
+    fn build_fleet(&self, cfg: &ServiceConfig) -> anyhow::Result<Option<Fleet>> {
+        match cfg.fleet {
+            None => Ok(None),
+            Some(fcfg) => {
+                Ok(Some(Fleet::new(self.coord.graph(), &self.coord.machine().cfg, fcfg)?))
+            }
+        }
+    }
+
+    /// The static-graph fleet path (`serve --fleet` without `--mutate`):
+    /// the same seeded query stream as the single-machine path, each
+    /// request routed to its replica set and priced by the fleet demand
+    /// models, then run through the usual admission/weights/preemption
+    /// machinery on the flattened cluster machine. The report gains a
+    /// [`FleetStats`] section (per-shard utilization, interconnect bytes).
+    fn serve_fleet(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
+        let fleet = self.build_fleet(cfg)?.expect("fleet config present");
+        let (requests, arrivals) = self.build_query_stream(cfg);
+        let view = self.coord.view();
+        let specs: Vec<QuerySpec> = requests
+            .iter()
+            .enumerate()
+            .map(|(id, req)| fleet.prepare_one(view, req, id, id))
+            .collect();
+        let fleet_coord = Coordinator::new(self.coord.graph(), fleet.machine().clone());
+        let report = fleet_coord.run_specs(
+            &requests,
+            &specs,
+            Policy::ConcurrentAdmitted {
+                on_full: cfg.on_full,
+                weights: cfg.weights,
+                preempt: cfg.preempt,
+            },
+        )?;
+        let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
+        let mut out = self.build_report(cfg, &report, first_arrival, None);
+        out.fleet = Some(fleet.stats(&specs, out.duration_s * 1e9));
+        Ok(out)
     }
 
     /// The mixed query+update lane (DESIGN.md §Mutation). The timeline
@@ -491,6 +559,21 @@ impl<'g> GraphService<'g> {
     /// its arrival — the data plane; admission models the *bandwidth* of
     /// ingest, so a shed batch's cost leaves the timeline while its edges
     /// still land, as a retry loop would eventually achieve.)
+    ///
+    /// Compaction is not free bookkeeping: each fold streams the old base
+    /// and the drained overlays through the memory side
+    /// ([`crate::sim::demand::PhaseDemand::compaction_fold`]). Fold
+    /// instants depend on query finish times, so the timeline runs once
+    /// without them to find the instants, then re-runs with each fold
+    /// submitted as a Batch-class [`CompactionFold`] at the moment its
+    /// drain threshold was crossed — one fixed-point iteration; the
+    /// store's data plane is identical either way.
+    ///
+    /// With [`ServiceConfig::fleet`] set, the same merged timeline runs on
+    /// the flattened cluster machine: queries are routed/priced by the
+    /// fleet demand models, each update batch fans out through the ordered
+    /// log ([`Fleet::ingest_phase`]), and folds cover every replica's copy
+    /// of the base.
     fn serve_mutating(
         &self,
         cfg: &ServiceConfig,
@@ -500,6 +583,13 @@ impl<'g> GraphService<'g> {
         const MAX_BATCHES: usize = 16_384;
 
         let g = self.coord.graph();
+        let fleet = self.build_fleet(cfg)?;
+        let fleet_coord = fleet.as_ref().map(|f| Coordinator::new(g, f.machine().clone()));
+        let policy = || Policy::ConcurrentAdmitted {
+            on_full: cfg.on_full,
+            weights: cfg.weights,
+            preempt: cfg.preempt,
+        };
         // One shared generator with the static path: the query stream for
         // a given seed is draw-for-draw the same with or without mutation.
         let (query_requests, arrivals) = self.build_query_stream(cfg);
@@ -562,17 +652,36 @@ impl<'g> GraphService<'g> {
                 inserted += bs.inserted;
                 deleted += bs.deleted;
                 redundant += bs.redundant;
-                let req = QueryRequest::from_arc(Arc::new(IngestBatch::new(updates, bs.epoch)))
-                    .at(batch_arrivals[bi])
-                    .with_priority(Priority::Batch);
-                let spec = self.coord.prepare_one(store.view(), bs.epoch, &req, id, id);
+                let req = QueryRequest::from_arc(Arc::new(IngestBatch::new(
+                    Arc::clone(&updates),
+                    bs.epoch,
+                )))
+                .at(batch_arrivals[bi])
+                .with_priority(Priority::Batch);
+                let spec = match &fleet {
+                    // Fleet ingest: fan the batch out through the ordered
+                    // log (primary apply + per-replica shipment/splice).
+                    Some(f) => QuerySpec {
+                        id,
+                        label: MUTATE_LABEL,
+                        phases: vec![f.ingest_phase(&updates)],
+                        arrival_ns: req.arrival_ns,
+                        priority: req.priority,
+                        deadline_ns: req.deadline_ns,
+                        ctx_bytes: f.machine().cfg.ctx_bytes_per_query,
+                    },
+                    None => self.coord.prepare_one(store.view(), bs.epoch, &req, id, id),
+                };
                 requests.push(req);
                 specs.push(spec);
                 bi += 1;
             } else {
                 let epoch = store.pin();
                 let req = query_requests[qi].clone();
-                let spec = self.coord.prepare_one(store.view(), epoch, &req, id, id);
+                let spec = match &fleet {
+                    Some(f) => f.prepare_one(store.view(), &req, id, id),
+                    None => self.coord.prepare_one(store.view(), epoch, &req, id, id),
+                };
                 pinned.push((id, epoch));
                 requests.push(req);
                 specs.push(spec);
@@ -580,19 +689,15 @@ impl<'g> GraphService<'g> {
             }
         }
 
-        let report = self.coord.run_specs(
-            &requests,
-            &specs,
-            Policy::ConcurrentAdmitted {
-                on_full: cfg.on_full,
-                weights: cfg.weights,
-                preempt: cfg.preempt,
-            },
-        )?;
+        let report = match &fleet_coord {
+            Some(c) => c.run_specs(&requests, &specs, policy())?,
+            None => self.coord.run_specs(&requests, &specs, policy())?,
+        };
 
         // Replay completions: unpin each query's epoch when it finished
         // (at arrival for work that never ran) and compact whenever the
-        // drained prefix reaches the threshold.
+        // drained prefix reaches the threshold, recording each fold's
+        // instant and volume for the demand pass below.
         let mut unpins: Vec<(f64, u64)> = pinned
             .iter()
             .map(|&(id, epoch)| {
@@ -603,17 +708,56 @@ impl<'g> GraphService<'g> {
             .collect();
         unpins.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
         let (mut compactions, mut folded) = (0usize, 0usize);
-        for &(_, epoch) in &unpins {
+        // (instant s, old base arcs, drained arc records, new base epoch)
+        let mut folds: Vec<(f64, usize, usize, u64)> = Vec::new();
+        let mut base_arcs = g.m_directed();
+        let mut fold_at = |store: &mut GraphStore, t: f64| {
+            let cs = store.compact();
+            folds.push((t, base_arcs, cs.drained, cs.base_epoch));
+            base_arcs = store.view_at(cs.base_epoch).expect("fresh base is live").m_directed();
+            folded += cs.drained;
+            compactions += 1;
+        };
+        for &(t, epoch) in &unpins {
             store.unpin(epoch);
             if store.drainable_overlays() >= mcfg.compact_every {
-                folded += store.compact().drained;
-                compactions += 1;
+                fold_at(&mut store, t);
             }
         }
         if store.drainable_overlays() > 0 {
-            folded += store.compact().drained;
-            compactions += 1;
+            fold_at(&mut store, report.makespan_s);
         }
+
+        // Account the folds: re-run the timeline with each compaction
+        // submitted as Batch-class work at the instant the replay
+        // triggered it (method docs). With R fleet replicas every copy of
+        // the shard folds its own base, so the volume scales by R.
+        let report = if folds.is_empty() {
+            report
+        } else {
+            let scale = fleet.as_ref().map_or(1, |f| f.config().replicas);
+            for &(t_s, arcs, drained, epoch) in &folds {
+                let id = requests.len();
+                let req = QueryRequest::from_arc(Arc::new(CompactionFold::new(
+                    g.n(),
+                    arcs * scale,
+                    drained * scale,
+                    epoch,
+                )))
+                .at(t_s * 1e9)
+                .with_priority(Priority::Batch);
+                let spec = match &fleet_coord {
+                    Some(c) => c.prepare_one(store.view(), epoch, &req, id, id),
+                    None => self.coord.prepare_one(store.view(), epoch, &req, id, id),
+                };
+                requests.push(req);
+                specs.push(spec);
+            }
+            match &fleet_coord {
+                Some(c) => c.run_specs(&requests, &specs, policy())?,
+                None => self.coord.run_specs(&requests, &specs, policy())?,
+            }
+        };
 
         // Both lists are non-empty here (queries > 0 is enforced; an empty
         // batch stream got a fallback batch above).
@@ -634,6 +778,9 @@ impl<'g> GraphService<'g> {
             update_throughput_per_s: updates_total as f64 / out.duration_s,
             batch_latency: report.latency_quantiles(Some(MUTATE_LABEL)),
         });
+        if let Some(f) = &fleet {
+            out.fleet = Some(f.stats(&specs, out.duration_s * 1e9));
+        }
         Ok(out)
     }
 
@@ -680,7 +827,12 @@ impl<'g> GraphService<'g> {
         mutation: Option<MutationStats>,
     ) -> ServiceReport {
         let duration_s = (report.makespan_s - first_arrival_s).max(f64::MIN_POSITIVE);
-        let queries = || report.records.iter().filter(|r| r.label != MUTATE_LABEL);
+        let queries = || {
+            report
+                .records
+                .iter()
+                .filter(|r| r.label != MUTATE_LABEL && r.label != COMPACT_LABEL)
+        };
         let served = queries().filter(|r| r.completed()).count();
         let class_latency: Vec<(String, Quantiles)> = report
             .per_class_quantiles()
@@ -719,6 +871,7 @@ impl<'g> GraphService<'g> {
             channel_utilization: report.mean_channel_utilization,
             seed: cfg.seed,
             mutation,
+            fleet: None,
         }
     }
 }
@@ -1058,6 +1211,106 @@ mod tests {
         assert_eq!(rep.duration_s, rep2.duration_s);
         assert_eq!(rep.mutation.as_ref().unwrap().inserted, m.inserted);
         assert_eq!(rep.mutation.as_ref().unwrap().seed, m.seed);
+    }
+
+    /// Compaction demand (DESIGN.md §Mutation): whenever the mutate lane
+    /// folds overlays, the folds appear as Batch-class `compact` work in
+    /// the timeline — with their own class latency row — and never count
+    /// as queries.
+    #[test]
+    fn compaction_folds_appear_as_batch_class_work() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig {
+            queries: 24,
+            arrival_rate_per_s: 200.0,
+            workload: WorkloadSpec::bfs_cc(0.2),
+            mutation: Some(crate::coordinator::mutation::MutationConfig {
+                rate_batches_per_s: 100.0,
+                batch: 16,
+                delete_fraction: 0.2,
+                compact_every: 2,
+            }),
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        let m = rep.mutation.as_ref().expect("mutation stats present");
+        assert!(m.compactions >= 1, "this workload must compact");
+        assert_eq!(rep.served, 24, "folds are not queries");
+        assert!(rep.class("compact").is_some(), "fold latency row present");
+        // Folds ride the Batch lane alongside the ingest batches.
+        let batch = rep
+            .priority
+            .iter()
+            .find(|s| s.priority == Priority::Batch)
+            .expect("batch class present");
+        assert!(batch.submitted >= m.batches + m.compactions);
+    }
+
+    /// Acceptance (DESIGN.md §Fleet): `serve --fleet nodes=4,
+    /// partition=balanced` runs end to end — every query served, the
+    /// report carrying per-shard utilization and the interconnect bytes
+    /// the cross-shard routing generated — and is reproducible.
+    #[test]
+    fn fleet_serves_mixed_stream_end_to_end() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig {
+            queries: 32,
+            workload: WorkloadSpec::bfs_cc(0.2),
+            fleet: Some(FleetConfig::parse("nodes=4,partition=balanced").unwrap()),
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 32);
+        assert_eq!(rep.rejected, 0);
+        assert!(rep.class("bfs").is_some() && rep.class("cc").is_some());
+        let f = rep.fleet.as_ref().expect("fleet stats present");
+        assert_eq!(f.shards, 4);
+        assert_eq!(f.replicas, 1);
+        assert_eq!(f.strategy, "balanced");
+        assert_eq!(f.shard_util.len(), 4);
+        assert!(f.interconnect_bytes > 0.0, "an rmat cut at 4 shards ships frontier");
+        let s = rep.summary();
+        assert!(s.contains("fleet: 4 shards x 1 replicas (balanced)"), "{s}");
+        assert!(s.contains("shard util: s0"), "{s}");
+        let rep2 = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.duration_s, rep2.duration_s, "fleet serving is deterministic");
+    }
+
+    /// `--fleet` composes with `--mutate`: every update batch fans out
+    /// through the ordered log (interconnect traffic from log shipping at
+    /// replicas=2), folds cover every replica's copy, and the query and
+    /// mutation accounting match the single-machine lane's shape.
+    #[test]
+    fn fleet_mutation_lane_fans_out_through_the_ordered_log() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig {
+            queries: 16,
+            arrival_rate_per_s: 200.0,
+            workload: WorkloadSpec::bfs_cc(0.2),
+            mutation: Some(crate::coordinator::mutation::MutationConfig {
+                rate_batches_per_s: 100.0,
+                batch: 16,
+                delete_fraction: 0.2,
+                compact_every: 2,
+            }),
+            fleet: Some(FleetConfig::parse("nodes=2,replicas=2").unwrap()),
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 16, "mutate/compact lanes not counted as queries");
+        let m = rep.mutation.as_ref().expect("mutation stats present");
+        assert!(m.batches >= 1);
+        assert!(m.compactions >= 1);
+        assert_eq!(m.final_overlays, 0);
+        let f = rep.fleet.as_ref().expect("fleet stats present");
+        assert_eq!((f.shards, f.replicas), (2, 2));
+        assert!(f.interconnect_bytes > 0.0, "log shipping to replica 1");
+        assert!(rep.class("mutate").is_some() && rep.class("compact").is_some());
+        let s = rep.summary();
+        assert!(s.contains("fleet:") && s.contains("mutation:"), "{s}");
     }
 
     /// The query stream for a given seed is identical with and without the

@@ -10,12 +10,17 @@
 //! CSR plus per-epoch [`delta::DeltaOverlay`]s behind the [`view::GraphView`]
 //! read abstraction (DESIGN.md §Mutation) — queries pin the epoch current
 //! at admission, compaction folds drained overlays back into a flat base.
+//!
+//! A fleet shards the graph: [`partition::Partition`] assigns every vertex
+//! one owner machine (hash or degree-balanced) with per-shard sub-CSRs and
+//! cut-arc accounting (DESIGN.md §Fleet).
 
 pub mod builder;
 pub mod csr;
 pub mod delta;
 pub mod io;
 pub mod layout;
+pub mod partition;
 pub mod rmat;
 pub mod sample;
 pub mod store;
@@ -26,6 +31,7 @@ pub use builder::build_undirected_csr;
 pub use csr::Csr;
 pub use delta::{merge_neighbors, DeltaOverlay, EdgeUpdate, UpdateOp};
 pub use layout::StripedLayout;
+pub use partition::{Partition, PartitionStrategy};
 pub use rmat::Rmat;
 pub use store::GraphStore;
 pub use view::{GraphView, NeighborScratch};

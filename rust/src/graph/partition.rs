@@ -1,0 +1,270 @@
+//! Vertex partitioner for the sharded fleet (DESIGN.md §Fleet).
+//!
+//! A [`Partition`] splits an n-vertex graph across `shards` machines by
+//! assigning every vertex exactly one *owner* shard. Each shard holds the
+//! full adjacency rows of its owned vertices as a sub-CSR (global vertex
+//! ids, unowned rows empty — so shard-local traversal needs no id
+//! remapping), and edges whose endpoint lives on another shard are *cut
+//! arcs*: traversals discover them locally but must ship the frontier
+//! candidate over the fleet interconnect (priced by
+//! [`crate::sim::demand::PhaseDemand::interconnect_bytes`]).
+//!
+//! Two strategies, selected by `serve --fleet ...,partition=hash|balanced`:
+//!
+//! * [`PartitionStrategy::Hash`] — stateless multiplicative hash of the
+//!   vertex id. Placement is independent of the graph, so mutation never
+//!   moves a vertex; edge balance is whatever the degree distribution
+//!   gives (power-law graphs skew).
+//! * [`PartitionStrategy::Balanced`] — greedy longest-processing-time
+//!   assignment by descending degree: each vertex goes to the currently
+//!   lightest shard (by owned arcs). Classic LPT bound: the final
+//!   max−min arc spread is at most the maximum degree, so shards stay
+//!   within one hub vertex of each other.
+//!
+//! Ownership is computed from the *base* graph and stays fixed across
+//! epochs — mutation batches route to the owner of their endpoints, they
+//! never re-shard (see `coordinator::fleet`).
+
+use anyhow::Result;
+
+use crate::graph::csr::Csr;
+
+/// How vertices are assigned to shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Stateless multiplicative hash of the vertex id.
+    Hash,
+    /// Greedy degree-balanced (LPT) assignment minimizing arc spread.
+    Balanced,
+}
+
+impl PartitionStrategy {
+    /// Parse the `partition=` value of `serve --fleet`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "hash" => Ok(PartitionStrategy::Hash),
+            "balanced" => Ok(PartitionStrategy::Balanced),
+            other => anyhow::bail!("unknown partition strategy {other:?} (want hash|balanced)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PartitionStrategy::Hash => "hash",
+            PartitionStrategy::Balanced => "balanced",
+        }
+    }
+}
+
+/// A vertex→shard assignment plus per-shard sub-CSRs and cut accounting.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub strategy: PartitionStrategy,
+    pub shards: usize,
+    /// Owner shard of every vertex.
+    owner: Vec<u32>,
+    /// Per-shard sub-CSR: global vertex ids, owned rows = the full global
+    /// adjacency row, unowned rows empty.
+    shard_graphs: Vec<Csr>,
+    /// Directed arcs owned by each shard (sum of owned degrees).
+    shard_arcs: Vec<usize>,
+    /// Directed arcs leaving each shard (owned tail, foreign head).
+    cut_arcs: Vec<usize>,
+}
+
+impl Partition {
+    /// Partition `g` into `shards` shards.
+    pub fn build(g: &Csr, shards: usize, strategy: PartitionStrategy) -> Self {
+        assert!(shards > 0, "need at least one shard");
+        let n = g.n();
+        let owner = match strategy {
+            PartitionStrategy::Hash => {
+                (0..n as u32).map(|v| Self::hash_owner(v, shards)).collect::<Vec<u32>>()
+            }
+            PartitionStrategy::Balanced => {
+                // LPT: place heaviest vertices first, each on the shard
+                // with the fewest owned arcs so far (ties: lowest shard).
+                let mut order: Vec<u32> = (0..n as u32).collect();
+                order.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
+                let mut owner = vec![0u32; n];
+                let mut load = vec![0usize; shards];
+                for v in order {
+                    let s = (0..shards).min_by_key(|&s| (load[s], s)).unwrap();
+                    owner[v as usize] = s as u32;
+                    load[s] += g.degree(v);
+                }
+                owner
+            }
+        };
+        let mut shard_arcs = vec![0usize; shards];
+        let mut cut_arcs = vec![0usize; shards];
+        let mut shard_graphs = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let mut offsets = Vec::with_capacity(n + 1);
+            let mut targets = Vec::new();
+            offsets.push(0u64);
+            for v in 0..n as u32 {
+                if owner[v as usize] == s as u32 {
+                    let row = g.neighbors(v);
+                    targets.extend_from_slice(row);
+                    shard_arcs[s] += row.len();
+                    cut_arcs[s] += row.iter().filter(|&&w| owner[w as usize] != s as u32).count();
+                }
+                offsets.push(targets.len() as u64);
+            }
+            shard_graphs.push(Csr::from_parts(offsets, targets));
+        }
+        Partition { strategy, shards, owner, shard_graphs, shard_arcs, cut_arcs }
+    }
+
+    /// Stateless hash ownership of one vertex (the Hash strategy's rule,
+    /// exposed so tests can pin it).
+    #[inline]
+    pub fn hash_owner(v: u32, shards: usize) -> u32 {
+        let x = (v as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((x >> 32) % shards as u64) as u32
+    }
+
+    /// Owner shard of vertex `v`.
+    #[inline]
+    pub fn owner_of(&self, v: u32) -> usize {
+        self.owner[v as usize] as usize
+    }
+
+    /// Sub-CSR of one shard (global ids; unowned rows empty).
+    pub fn shard_graph(&self, shard: usize) -> &Csr {
+        &self.shard_graphs[shard]
+    }
+
+    /// Directed arcs owned by one shard.
+    pub fn shard_arcs(&self, shard: usize) -> usize {
+        self.shard_arcs[shard]
+    }
+
+    /// Directed arcs leaving one shard for another.
+    pub fn cut_arcs(&self, shard: usize) -> usize {
+        self.cut_arcs[shard]
+    }
+
+    /// Fraction of all directed arcs that cross shards (0 for one shard).
+    pub fn cut_fraction(&self) -> f64 {
+        let total: usize = self.shard_arcs.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        self.cut_arcs.iter().sum::<usize>() as f64 / total as f64
+    }
+
+    /// Max/min owned-arc ratio across shards (∞ if some shard owns no
+    /// arcs); the balance figure the Balanced strategy bounds.
+    pub fn max_min_arc_ratio(&self) -> f64 {
+        let max = *self.shard_arcs.iter().max().unwrap() as f64;
+        let min = *self.shard_arcs.iter().min().unwrap() as f64;
+        max / min
+    }
+
+    /// Largest absolute owned-arc spread across shards (the LPT bound:
+    /// ≤ max degree for the Balanced strategy).
+    pub fn arc_spread(&self) -> usize {
+        let max = *self.shard_arcs.iter().max().unwrap();
+        let min = *self.shard_arcs.iter().min().unwrap();
+        max - min
+    }
+
+    /// Partition invariants against the source graph: every vertex owned
+    /// by exactly one in-range shard, every owned row identical to the
+    /// global row, every unowned row empty, arcs conserved (no edge lost
+    /// or duplicated across shards), and cut accounting consistent.
+    pub fn check_invariants(&self, g: &Csr) -> Result<()> {
+        anyhow::ensure!(self.owner.len() == g.n(), "owner map covers every vertex");
+        for v in 0..g.n() as u32 {
+            let s = self.owner[v as usize] as usize;
+            anyhow::ensure!(s < self.shards, "vertex {v} owned by out-of-range shard {s}");
+            for (t, sub) in self.shard_graphs.iter().enumerate() {
+                let row = sub.neighbors(v);
+                if t == s {
+                    anyhow::ensure!(
+                        row == g.neighbors(v),
+                        "shard {t} stores a wrong row for its owned vertex {v}"
+                    );
+                } else {
+                    anyhow::ensure!(
+                        row.is_empty(),
+                        "vertex {v} has a row on non-owner shard {t}"
+                    );
+                }
+            }
+        }
+        let arcs: usize = self.shard_arcs.iter().sum();
+        anyhow::ensure!(
+            arcs == g.m_directed() as usize,
+            "arcs not conserved: shards hold {arcs}, graph has {}",
+            g.m_directed()
+        );
+        for s in 0..self.shards {
+            anyhow::ensure!(
+                self.shard_graphs[s].m_directed() as usize == self.shard_arcs[s],
+                "shard {s} arc ledger disagrees with its sub-CSR"
+            );
+            anyhow::ensure!(self.cut_arcs[s] <= self.shard_arcs[s], "cut exceeds owned");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::build_undirected_csr;
+
+    fn star_plus_path() -> Csr {
+        // Vertex 0 is a hub (degree 6), the rest a sparse path.
+        let mut edges: Vec<(u32, u32)> = (1..7u32).map(|v| (0, v)).collect();
+        edges.extend((7..11u32).map(|v| (v, v + 1)));
+        build_undirected_csr(12, &edges)
+    }
+
+    #[test]
+    fn both_strategies_satisfy_invariants() {
+        let g = star_plus_path();
+        for strategy in [PartitionStrategy::Hash, PartitionStrategy::Balanced] {
+            for shards in [1, 2, 3, 5] {
+                let p = Partition::build(&g, shards, strategy);
+                p.check_invariants(&g).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_owns_everything_with_no_cut() {
+        let g = star_plus_path();
+        let p = Partition::build(&g, 1, PartitionStrategy::Balanced);
+        assert_eq!(p.cut_fraction(), 0.0);
+        assert_eq!(p.shard_arcs(0), g.m_directed() as usize);
+        assert_eq!(p.shard_graph(0), &g);
+    }
+
+    #[test]
+    fn balanced_spread_is_bounded_by_max_degree() {
+        let g = star_plus_path();
+        let p = Partition::build(&g, 3, PartitionStrategy::Balanced);
+        assert!(p.arc_spread() <= g.max_degree(), "LPT bound");
+    }
+
+    #[test]
+    fn hash_ownership_is_stateless() {
+        let g = star_plus_path();
+        let p = Partition::build(&g, 4, PartitionStrategy::Hash);
+        for v in 0..g.n() as u32 {
+            assert_eq!(p.owner_of(v) as u32, Partition::hash_owner(v, 4));
+        }
+    }
+
+    #[test]
+    fn strategy_parses() {
+        assert_eq!(PartitionStrategy::parse("hash").unwrap(), PartitionStrategy::Hash);
+        assert_eq!(PartitionStrategy::parse("balanced").unwrap(), PartitionStrategy::Balanced);
+        assert!(PartitionStrategy::parse("range").is_err());
+        assert_eq!(PartitionStrategy::Balanced.label(), "balanced");
+    }
+}

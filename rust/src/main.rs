@@ -26,6 +26,11 @@
 //!                                     (live edge ingest: update batches as
 //!                                      Batch-class work; queries pin their
 //!                                      admission epoch)
+//!                       [--fleet nodes=N[,replicas=R][,partition=hash|balanced]]
+//!                                     (sharded multi-chassis fleet: the graph
+//!                                      partitioned across N shards x R replicas,
+//!                                      cross-shard traffic priced on the fleet
+//!                                      interconnect)
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -45,8 +50,8 @@ use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
-    planner, Coordinator, GraphService, MutationConfig, Policy, PreemptPolicy, PriorityMix,
-    QueryRequest, ServiceConfig, ShareWeights, WorkloadSpec,
+    planner, Coordinator, FleetConfig, GraphService, MutationConfig, Policy, PreemptPolicy,
+    PriorityMix, QueryRequest, ServiceConfig, ShareWeights, WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -346,6 +351,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
         preempt: args.has_flag("preempt").then(PreemptPolicy::default),
         mutation: args.opt("mutate").map(MutationConfig::parse).transpose()?,
+        fleet: args.opt("fleet").map(FleetConfig::parse).transpose()?,
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
     let mix_desc: Vec<String> = cfg
@@ -358,14 +364,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(m) => format!(", mutating at {}", m.label()),
         None => String::new(),
     };
+    let fleet_desc = match &cfg.fleet {
+        Some(f) => format!(", fleet {}", f.label()),
+        None => String::new(),
+    };
     println!(
-        "serving {} queries at {:.0} q/s ({}) on {} (seed {:#x}){}...",
+        "serving {} queries at {:.0} q/s ({}) on {} (seed {:#x}){}{}...",
         cfg.queries,
         cfg.arrival_rate_per_s,
         mix_desc.join(","),
         svc.coordinator().machine().cfg.name,
         cfg.seed,
-        mutate_desc
+        mutate_desc,
+        fleet_desc
     );
     let rep = svc.serve(&cfg)?;
     println!("{}", rep.summary());

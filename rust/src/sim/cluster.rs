@@ -1,0 +1,159 @@
+//! A fleet of Pathfinder chassis flattened into one simulatable
+//! [`Machine`] (DESIGN.md §Fleet).
+//!
+//! A [`Cluster`] is `shards x replicas` copies of a base machine: every
+//! copy ("fleet member") holds one shard replica of the partitioned graph
+//! (see [`crate::graph::partition`]). Rather than running one flow engine
+//! per member, the cluster *flattens* into a single [`Machine`] whose
+//! chassis ARE the members: `nodes = shards x replicas x base.nodes` with
+//! `nodes_per_chassis = base.nodes`. That reuses the whole simulator —
+//! admission, the weighted allocator, counters, preemption — unchanged,
+//! while keeping per-member capacity exact (every per-node rate is a
+//! per-node rate regardless of grouping). What the flattening does *not*
+//! capture — that crossing members is slower than crossing nodes — is
+//! exactly what the fleet demand models price explicitly: cross-shard
+//! bytes are charged to [`PhaseDemand::interconnect_bytes`] (its own
+//! capacity kind + latency floor) rather than to the intra-machine fabric.
+//!
+//! Fleet members are assumed healthy: the base config's degraded-chassis
+//! list describes the one physical CRNCH machine and its indices would
+//! silently re-target fleet members after flattening, so it is cleared.
+//!
+//! [`PhaseDemand::interconnect_bytes`]: crate::sim::demand::PhaseDemand
+
+use std::ops::Range;
+
+use super::machine::Machine;
+use crate::config::machine::MachineConfig;
+use crate::graph::layout::StripedLayout;
+
+/// A shards x replicas fleet flattened into one multi-chassis machine.
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    machine: Machine,
+    shards: usize,
+    replicas: usize,
+    nodes_per_chassis: usize,
+}
+
+impl Cluster {
+    /// Build a fleet of `shards x replicas` copies of `base`.
+    pub fn new(base: &MachineConfig, shards: usize, replicas: usize) -> Self {
+        assert!(shards > 0 && replicas > 0, "need at least one shard and one replica");
+        let mut cfg = base.clone();
+        cfg.name = format!("fleet-{}x{}-{}", shards, replicas, base.name);
+        cfg.nodes = shards * replicas * base.nodes;
+        cfg.nodes_per_chassis = base.nodes;
+        cfg.degraded_chassis = Vec::new();
+        cfg.degrade_factor = 1.0;
+        Cluster {
+            machine: Machine::new(cfg),
+            shards,
+            replicas,
+            nodes_per_chassis: base.nodes,
+        }
+    }
+
+    /// The flattened machine the flow engine runs against.
+    pub fn machine(&self) -> &Machine {
+        &self.machine
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// Nodes inside one fleet member (= the base machine's node count).
+    pub fn nodes_per_chassis(&self) -> usize {
+        self.nodes_per_chassis
+    }
+
+    /// Total fleet members.
+    pub fn chassis(&self) -> usize {
+        self.shards * self.replicas
+    }
+
+    /// Fleet member holding replica `replica` of shard `shard`.
+    /// Replica-major: replica set r is the contiguous chassis block
+    /// `[r*shards, (r+1)*shards)`, so "the fleet's primary copy" is the
+    /// first block and each added replica appends a full copy.
+    #[inline]
+    pub fn chassis_of(&self, shard: usize, replica: usize) -> usize {
+        debug_assert!(shard < self.shards && replica < self.replicas);
+        replica * self.shards + shard
+    }
+
+    /// Global node range of one fleet member.
+    #[inline]
+    pub fn node_range(&self, chassis: usize) -> Range<usize> {
+        let base = chassis * self.nodes_per_chassis;
+        base..base + self.nodes_per_chassis
+    }
+
+    /// The striped placement *within* one member: vertex v of a shard
+    /// lives on local node `v mod nodes_per_chassis` at the usual view-2
+    /// channel — the same rule a single machine uses, composed with the
+    /// member's node offset by [`Cluster::vertex_node`].
+    pub fn chassis_layout(&self) -> StripedLayout {
+        StripedLayout::new(self.nodes_per_chassis, self.machine.cfg.channels_per_node)
+    }
+
+    /// Global node of vertex `v`'s record on fleet member `chassis`.
+    #[inline]
+    pub fn vertex_node(&self, chassis: usize, v: u32) -> usize {
+        chassis * self.nodes_per_chassis + (v as usize % self.nodes_per_chassis)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flattened_machine_validates_and_sizes() {
+        let c = Cluster::new(&MachineConfig::pathfinder_8(), 4, 2);
+        assert_eq!(c.machine().nodes(), 64);
+        assert_eq!(c.chassis(), 8);
+        assert_eq!(c.nodes_per_chassis(), 8);
+        assert!(c.machine().cfg.name.starts_with("fleet-4x2-"));
+        // Per-node capacity identical to the base machine's.
+        let base = Machine::new(MachineConfig::pathfinder_8());
+        assert_eq!(c.machine().channel_op_rate(63), base.channel_op_rate(0));
+    }
+
+    #[test]
+    fn chassis_addressing_is_replica_major() {
+        let c = Cluster::new(&MachineConfig::pathfinder_8(), 4, 2);
+        assert_eq!(c.chassis_of(0, 0), 0);
+        assert_eq!(c.chassis_of(3, 0), 3);
+        assert_eq!(c.chassis_of(0, 1), 4);
+        assert_eq!(c.chassis_of(3, 1), 7);
+        assert_eq!(c.node_range(1), 8..16);
+        // Vertex placement composes member offset with the striped rule.
+        assert_eq!(c.vertex_node(1, 0), 8);
+        assert_eq!(c.vertex_node(1, 11), 11);
+    }
+
+    #[test]
+    fn degraded_base_chassis_do_not_leak_into_the_fleet() {
+        let c = Cluster::new(&MachineConfig::pathfinder_32(), 2, 1);
+        assert_eq!(c.machine().nodes(), 64);
+        assert_eq!(c.nodes_per_chassis(), 32);
+        // pathfinder-32's degraded chassis [2,3] would have re-targeted
+        // fleet members 2..4 after flattening; they are cleared instead.
+        for n in 0..64 {
+            assert_eq!(c.machine().cfg.node_derate(n), 1.0);
+        }
+    }
+
+    #[test]
+    fn fabric_crossing_members_is_inter_chassis() {
+        let c = Cluster::new(&MachineConfig::pathfinder_8(), 2, 1);
+        let cfg = &c.machine().cfg;
+        assert!(cfg.fabric_latency_ns(0, 8) > cfg.fabric_latency_ns(0, 1));
+    }
+}

@@ -16,6 +16,10 @@
 //!
 //! * [`PhaseDemand::ingest_batch`] — the memory-side edge-ingest model of
 //!   the mutation lane (DESIGN.md §Mutation);
+//! * [`PhaseDemand::compaction_fold`] — the merge traffic of folding
+//!   drained delta overlays back into a flat base CSR, submitted as
+//!   Batch-class work when `serve --mutate` compacts (compaction is not
+//!   free);
 //! * [`PhaseDemand::pagerank_push_round`] /
 //!   [`PhaseDemand::pagerank_residual_check`] — one PageRank round
 //!   ([`crate::alg::pagerank`]): a dense push sweep (one MSP `remote_add`
@@ -27,7 +31,10 @@
 //!   scaled by ordered wedges, near-zero writes (one MSP RMW per vertex
 //!   into a global accumulator);
 //! * [`PhaseDemand::uniform_channel_load`] — the synthetic closed-form
-//!   shape the flow-engine fairness tests and the CI bench gate share.
+//!   shape the flow-engine fairness tests and the CI bench gate share;
+//! * [`PhaseDemand::uniform_fleet_load`] — the same shape with a uniform
+//!   fleet-interconnect demand on top, for the interconnect-bound
+//!   closed-form fleet scenario of the CI bench gate.
 //!
 //! See docs/ANALYSES.md for how to derive a new analysis's demand model
 //! from the paper's migration/MSP/fabric cost accounting.
@@ -67,6 +74,11 @@ pub struct PhaseDemand {
     pub instructions: Vec<f64>,
     /// Bytes crossing the fabric per node (egress accounting).
     pub fabric_bytes: Vec<f64>,
+    /// Bytes each node pushes over the inter-machine *fleet interconnect*
+    /// (cross-shard frontier exchange, replication log shipping; DESIGN.md
+    /// §Fleet). Zero for every single-machine demand, so the extra
+    /// resource kind is inert outside `serve --fleet`.
+    pub interconnect_bytes: Vec<f64>,
     /// Op count on the hottest single channel of each node (>= ops/chans).
     pub max_channel_ops: Vec<f64>,
     /// Thread migrations landing on each node.
@@ -97,6 +109,7 @@ impl PhaseDemand {
             stream_bytes: vec![0.0; nodes],
             instructions: vec![0.0; nodes],
             fabric_bytes: vec![0.0; nodes],
+            interconnect_bytes: vec![0.0; nodes],
             max_channel_ops: vec![0.0; nodes],
             migrations: vec![0.0; nodes],
             msp_ops: vec![0.0; nodes],
@@ -125,24 +138,30 @@ impl PhaseDemand {
         self.migrations.iter().sum()
     }
 
+    /// Total fleet-interconnect bytes across nodes.
+    pub fn total_interconnect_bytes(&self) -> f64 {
+        self.interconnect_bytes.iter().sum()
+    }
+
     /// Number of shared-resource kinds the flow engine allocates per node:
     /// aggregate channel ops, the hottest single channel, streamed bytes,
-    /// instruction issue, fabric link. (`solo_ns` granularity; the flow
-    /// engine additionally splits channel capacity per individual channel —
-    /// see [`PhaseDemand::flow_resources`].)
-    pub const RESOURCE_KINDS: usize = 5;
+    /// instruction issue, fabric link, fleet interconnect. (`solo_ns`
+    /// granularity; the flow engine additionally splits channel capacity
+    /// per individual channel — see [`PhaseDemand::flow_resources`].)
+    pub const RESOURCE_KINDS: usize = 6;
 
     /// Number of capacity resources per node in the flow engine's
-    /// allocation space: one per channel plus stream / instr / fabric.
+    /// allocation space: one per channel plus stream / instr / fabric /
+    /// fleet interconnect.
     pub fn flow_kinds(&self) -> usize {
-        self.channels_per_node + 3
+        self.channels_per_node + 4
     }
 
     /// Sparse utilization vector for the flow engine: for each capacity
     /// resource this phase touches, the fraction of that resource consumed
     /// when the phase runs at solo speed. Resource index space is
-    /// `node * (channels_per_node + 3) + k` with `k` = channel index, then
-    /// stream, instr, fabric.
+    /// `node * (channels_per_node + 4) + k` with `k` = channel index, then
+    /// stream, instr, fabric, fleet interconnect.
     pub fn flow_resources(&self, m: &Machine, solo_ns: f64) -> Vec<(u32, f64)> {
         let mut out = Vec::new();
         if solo_ns <= 0.0 {
@@ -167,7 +186,7 @@ impl PhaseDemand {
                 }
             }
             let d = self.drain_ns(m, node);
-            for (k, drain) in [d[2], d[3], d[4]].into_iter().enumerate() {
+            for (k, drain) in [d[2], d[3], d[4], d[5]].into_iter().enumerate() {
                 if drain > 0.0 {
                     out.push(((base + cpn + k) as u32, drain / solo_ns));
                 }
@@ -177,9 +196,10 @@ impl PhaseDemand {
     }
 
     /// Per-node drain times (ns) of this phase at *full* capacity of each
-    /// shared resource: `[channel, hottest-channel, stream, instr, fabric]`.
-    /// `solo_ns` is the max of these over nodes (plus latency floors); the
-    /// flow engine turns them into utilization fractions.
+    /// shared resource: `[channel, hottest-channel, stream, instr, fabric,
+    /// interconnect]`. `solo_ns` is the max of these over nodes (plus
+    /// latency floors); the flow engine turns them into utilization
+    /// fractions.
     pub fn drain_ns(&self, m: &Machine, node: usize) -> [f64; Self::RESOURCE_KINDS] {
         // MSP RMW ops cost more than plain accesses; fold the premium
         // into an effective op count (scaled by the write-priority knob).
@@ -198,6 +218,7 @@ impl PhaseDemand {
             self.stream_bytes[node] / m.stream_rate(node) * 1e9,
             self.instructions[node] / m.issue_rate(node) * 1e9,
             self.fabric_bytes[node] / m.fabric_rate(node) * 1e9,
+            self.interconnect_bytes[node] / m.interconnect_rate(node) * 1e9,
         ]
     }
 
@@ -239,6 +260,12 @@ impl PhaseDemand {
         let chain =
             self.serial_hops * (m.mean_fabric_latency_ns(0) + m.cfg.migration_overhead_ns);
         t = t.max(chain);
+        // Fleet-interconnect latency floor: a phase that exchanges any
+        // cross-shard traffic pays at least one inter-machine round.
+        // Zero-interconnect (single-machine) demands skip this entirely.
+        if self.total_interconnect_bytes() > 0.0 {
+            t = t.max(m.interconnect_latency_ns());
+        }
         t + m.cfg.level_sync_ns
     }
 
@@ -265,6 +292,28 @@ impl PhaseDemand {
             total_ops += ops;
         }
         p.parallelism = total_ops * m.cfg.local_access_ns / total_ns;
+        p
+    }
+
+    /// [`PhaseDemand::uniform_channel_load`] plus a uniform fleet-
+    /// interconnect demand: every node additionally pushes
+    /// `interconnect_ns` worth of its interconnect capacity, i.e. the
+    /// phase's interconnect drain time is exactly `interconnect_ns` on
+    /// every node. With `interconnect_ns > frac * total_ns` the
+    /// interconnect is the bottleneck, which makes saturated fleet
+    /// completion times closed-form — the shape the CI bench gate's
+    /// `fleet/*` scenario (`rust/benches/flow_sim.rs`,
+    /// `ci/BENCH_baseline.json`) is hand-derived from.
+    pub fn uniform_fleet_load(
+        m: &Machine,
+        frac: f64,
+        total_ns: f64,
+        interconnect_ns: f64,
+    ) -> PhaseDemand {
+        let mut p = Self::uniform_channel_load(m, frac, total_ns);
+        for n in 0..m.nodes() {
+            p.interconnect_bytes[n] = m.interconnect_rate(n) * interconnect_ns * 1e-9;
+        }
         p
     }
 
@@ -336,6 +385,47 @@ impl PhaseDemand {
             b.parallelism(ops.min(contexts_total));
             b.issue_efficiency(1.0);
         }
+        b.finish()
+    }
+
+    /// Demand of one **compaction fold** — the merge traffic of folding
+    /// drained delta overlays back into a flat base CSR (DESIGN.md
+    /// §Mutation). The fold is a flat two-pass merge over the owned vertex
+    /// range: it **streams** the old base (offsets + edge records) and
+    /// **streams back** the merged base — `2 x 8 B x (base_arcs + n)`,
+    /// striped evenly across nodes like the CSR itself — while each
+    /// drained log entry costs **two random ops** at its vertex's home
+    /// (read the log record, merge/tombstone it into the build cursor),
+    /// spread evenly over channels (the drained set is scattered). Merge
+    /// work is `instr_per_edge x (base_arcs + drained_arcs)` instructions.
+    /// Like ingest, the fold never migrates (it is write-shaped) and its
+    /// flat loop pins issue efficiency at 1.0. Submitted as Batch-class
+    /// work by `serve --mutate` whenever the store compacts, so the merge
+    /// bandwidth competes with queries instead of being free.
+    pub fn compaction_fold(
+        m: &Machine,
+        n: usize,
+        base_arcs: usize,
+        drained_arcs: usize,
+    ) -> PhaseDemand {
+        const PAPER_INT_BYTES: f64 = 8.0;
+        let nodes = m.nodes();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+        let mut b = DemandBuilder::new(nodes, channels);
+        let stream_per_node = 2.0 * PAPER_INT_BYTES * (base_arcs + n) as f64 / nodes as f64;
+        let log_ops_per_channel = 2.0 * drained_arcs as f64 / (nodes * channels) as f64;
+        let instr_per_node =
+            m.cfg.instr_per_edge * (base_arcs + drained_arcs) as f64 / nodes as f64;
+        for node in 0..nodes {
+            b.stream_bytes(node, stream_per_node);
+            b.instructions(node, instr_per_node);
+            for c in 0..channels {
+                b.channel_op(node, c, log_ops_per_channel);
+            }
+        }
+        b.parallelism((n as f64).min(contexts_total));
+        b.issue_efficiency(1.0);
         b.finish()
     }
 
@@ -583,6 +673,12 @@ impl DemandBuilder {
         self.demand.fabric_bytes[node] += bytes;
     }
 
+    /// Bytes `node` pushes over the inter-machine fleet interconnect.
+    #[inline]
+    pub fn interconnect_bytes(&mut self, node: usize, bytes: f64) {
+        self.demand.interconnect_bytes[node] += bytes;
+    }
+
     #[inline]
     pub fn migration(&mut self, to_node: usize, count: f64) {
         self.demand.migrations[to_node] += count;
@@ -766,6 +862,79 @@ mod tests {
         let d = PhaseDemand::ingest_batch(&m, &[]);
         assert_eq!(d.total_channel_ops(), 0.0);
         assert_eq!(d.solo_ns(&m), m.cfg.level_sync_ns);
+    }
+
+    #[test]
+    fn compaction_fold_streams_both_bases_and_charges_log_merge_ops() {
+        let m = m8();
+        let (n, base_arcs, drained) = (1024usize, 4096usize, 512usize);
+        let d = PhaseDemand::compaction_fold(&m, n, base_arcs, drained);
+        // Stream: read the old base + write the merged base, striped.
+        assert_eq!(d.stream_bytes.iter().sum::<f64>(), 2.0 * 8.0 * (base_arcs + n) as f64);
+        // Two random ops per drained log entry, spread over all channels.
+        assert_eq!(d.total_channel_ops(), 2.0 * drained as f64);
+        assert_eq!(d.max_channel_ops[0], 2.0 * drained as f64 / 64.0);
+        // Write-shaped: no migrations, no MSP RMWs, no fabric.
+        assert_eq!(d.total_migrations(), 0.0);
+        assert_eq!(d.msp_ops.iter().sum::<f64>(), 0.0);
+        assert_eq!(d.fabric_bytes.iter().sum::<f64>(), 0.0);
+        // Merge instructions cover old arcs + drained log entries.
+        assert_eq!(
+            d.total_instructions(),
+            m.cfg.instr_per_edge * (base_arcs + drained) as f64
+        );
+        // Flat fold loop: issue slots pinned busy, like ingest.
+        assert_eq!(d.issue_efficiency, Some(1.0));
+        assert!(d.solo_ns(&m) > 0.0);
+    }
+
+    #[test]
+    fn interconnect_is_a_sixth_priced_resource() {
+        let m = m8();
+        let mut d = PhaseDemand::zero(8, 8);
+        d.interconnect_bytes[3] = m.interconnect_rate(3) * 2e-3; // 2 ms drain
+        // drain_ns exposes the interconnect as its own kind...
+        assert!((d.drain_ns(&m, 3)[5] - 2e6).abs() < 1e-6);
+        assert_eq!(d.drain_ns(&m, 0)[5], 0.0);
+        // ...solo time is bound by it...
+        assert!((d.solo_ns(&m) - (2e6 + m.cfg.level_sync_ns)).abs() < 1e-3);
+        // ...and the flow engine sees it at index base + cpn + 3.
+        let solo = d.solo_ns(&m);
+        let res = d.flow_resources(&m, solo);
+        let idx = (3 * d.flow_kinds() + 8 + 3) as u32;
+        let (_, util) = res.iter().find(|(i, _)| *i == idx).expect("interconnect resource");
+        assert!((util - 2e6 / solo).abs() < 1e-12);
+        assert_eq!(res.len(), 1, "nothing else charged");
+    }
+
+    #[test]
+    fn interconnect_latency_floors_any_cross_shard_phase() {
+        let m = m8();
+        let mut d = PhaseDemand::zero(8, 8);
+        // A single tiny exchange: bandwidth drain is negligible, but the
+        // phase still pays one inter-machine round.
+        d.interconnect_bytes[0] = 16.0;
+        let expect = m.interconnect_latency_ns() + m.cfg.level_sync_ns;
+        assert!((d.solo_ns(&m) - expect).abs() < 1e-6);
+        // Zero-interconnect phases never pay the floor.
+        let z = PhaseDemand::zero(8, 8);
+        assert_eq!(z.solo_ns(&m), m.cfg.level_sync_ns);
+    }
+
+    #[test]
+    fn uniform_fleet_load_drains_interconnect_for_exactly_the_given_time() {
+        let m = m8();
+        let d = PhaseDemand::uniform_fleet_load(&m, 0.5, 1e6, 1e6);
+        let base = PhaseDemand::uniform_channel_load(&m, 0.5, 1e6);
+        // Channel shape identical to the plain uniform load...
+        assert_eq!(d.per_channel_ops, base.per_channel_ops);
+        assert_eq!(d.parallelism, base.parallelism);
+        // ...plus a 1e6 ns interconnect drain on every node.
+        for n in 0..8 {
+            assert!((d.drain_ns(&m, n)[5] - 1e6).abs() < 1e-6);
+        }
+        // Solo time unchanged (the parallelism floor already sits at 1e6).
+        assert!((d.solo_ns(&m) - base.solo_ns(&m)).abs() < 1e-6);
     }
 
     #[test]

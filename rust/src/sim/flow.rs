@@ -552,7 +552,7 @@ impl FlowSim {
         let weights = adm.weights;
         let mut parker: Option<Parker> = adm.preempt.map(|p| Parker::new(p, queries.len()));
         let nodes = self.m.nodes();
-        let n_res = nodes * (self.m.cfg.channels_per_node + 3);
+        let n_res = nodes * (self.m.cfg.channels_per_node + 4);
         let mut counters = Counters::new(nodes);
 
         // Arrival ordering (stable by input order for equal times).

@@ -17,6 +17,8 @@ pub struct Machine {
     issue_rate: Vec<f64>,
     /// Per-node fabric link capacity (bytes/s), derated.
     fabric_rate: Vec<f64>,
+    /// Per-node fleet-interconnect capacity (bytes/s), derated.
+    interconnect_rate: Vec<f64>,
     /// Mean one-way fabric latency seen from each node (ns).
     mean_fabric_latency: Vec<f64>,
 }
@@ -30,6 +32,7 @@ impl Machine {
         let mut stream_rate = Vec::with_capacity(nodes);
         let mut issue_rate = Vec::with_capacity(nodes);
         let mut fabric_rate = Vec::with_capacity(nodes);
+        let mut interconnect_rate = Vec::with_capacity(nodes);
         let mut mean_fabric_latency = Vec::with_capacity(nodes);
         for node in 0..nodes {
             let derate = cfg.node_derate(node);
@@ -38,6 +41,7 @@ impl Machine {
             // Cores are not derated (the §IV-B issues were RAM + network).
             issue_rate.push(cfg.node_issue_rate());
             fabric_rate.push(cfg.fabric.node_link_bytes_per_s * derate);
+            interconnect_rate.push(cfg.fabric.interconnect_bytes_per_s * derate);
             let lat = if nodes == 1 {
                 0.0
             } else {
@@ -56,6 +60,7 @@ impl Machine {
             stream_rate,
             issue_rate,
             fabric_rate,
+            interconnect_rate,
             mean_fabric_latency,
         }
     }
@@ -84,6 +89,19 @@ impl Machine {
 
     pub fn fabric_rate(&self, node: usize) -> f64 {
         self.fabric_rate[node]
+    }
+
+    /// Derated fleet-interconnect capacity of one node (bytes/s): the
+    /// node's share of the inter-machine pipe a cluster ships cross-shard
+    /// frontier exchanges and replication traffic over. Single-machine
+    /// demands never charge it.
+    pub fn interconnect_rate(&self, node: usize) -> f64 {
+        self.interconnect_rate[node]
+    }
+
+    /// One-way fleet-interconnect message latency (ns).
+    pub fn interconnect_latency_ns(&self) -> f64 {
+        self.cfg.fabric.interconnect_latency_ns
     }
 
     /// Mean one-way fabric latency from `node` to a uniformly random other

@@ -27,7 +27,13 @@
 //! * [`event`] — a discrete-event engine with explicit threads, channel
 //!   FIFOs, migrations and MSP queues, used at small scale to validate the
 //!   flow model's assumptions (see rust/tests/sim_tests.rs).
+//!
+//! [`cluster`] scales past one machine: a fleet of chassis flattened into
+//! one multi-chassis [`machine::Machine`], with cross-member traffic
+//! priced as the fleet-interconnect resource kind of
+//! [`demand::PhaseDemand`] (DESIGN.md §Fleet).
 
+pub mod cluster;
 pub mod counters;
 pub mod demand;
 pub mod event;
@@ -37,6 +43,7 @@ pub mod machine;
 pub mod preempt;
 pub mod views;
 
+pub use cluster::Cluster;
 pub use counters::Counters;
 pub use demand::PhaseDemand;
 pub use flow::{FlowSim, Priority, QueryTiming, ShareWeights};

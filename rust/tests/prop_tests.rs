@@ -752,6 +752,188 @@ fn prop_pinned_epoch_queries_are_snapshot_isolated() {
     }
 }
 
+/// Partition invariants (DESIGN.md §Fleet): on random graphs, for both
+/// strategies and a range of shard counts, every vertex has exactly one
+/// owner, owned arcs are conserved across shards, cut accounting is
+/// self-consistent — and the degree-balanced strategy's max−min owned-arc
+/// spread is bounded by the maximum degree (the LPT greedy bound, since
+/// each placement moves one vertex's degree).
+#[test]
+fn prop_partition_invariants_hold_on_random_graphs() {
+    use pathfinder_queries::graph::partition::{Partition, PartitionStrategy};
+
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x9A27);
+        let g = random_graph(&mut rng);
+        for shards in [1usize, 2, 3, 5, 8] {
+            for strategy in [PartitionStrategy::Hash, PartitionStrategy::Balanced] {
+                let p = Partition::build(&g, shards, strategy);
+                p.check_invariants(&g)
+                    .unwrap_or_else(|e| panic!("seed {seed} {shards}x{strategy:?}: {e}"));
+                // Exactly one owner per vertex, in range.
+                for v in 0..g.n() as u32 {
+                    assert!(p.owner_of(v) < shards, "seed {seed}: owner out of range");
+                }
+                // Arcs conserved: every directed arc owned exactly once.
+                let owned: usize = (0..shards).map(|s| p.shard_arcs(s)).sum();
+                assert_eq!(owned, g.m_directed(), "seed {seed} {shards}x{strategy:?}");
+                // Cut arcs are symmetric in total: each cut arc (u,v) has
+                // a mirror (v,u) that is also cut, so the sum is even.
+                let cut: usize = (0..shards).map(|s| p.cut_arcs(s)).sum();
+                assert_eq!(cut % 2, 0, "seed {seed}: cut arcs must mirror");
+                assert!(p.cut_fraction() >= 0.0 && p.cut_fraction() <= 1.0);
+                if shards == 1 {
+                    assert_eq!(cut, 0, "seed {seed}: one shard cuts nothing");
+                }
+                if strategy == PartitionStrategy::Balanced {
+                    assert!(
+                        p.arc_spread() <= g.max_degree(),
+                        "seed {seed} shards {shards}: spread {} above max degree {}",
+                        p.arc_spread(),
+                        g.max_degree()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Fleet-vs-single-node equivalence (DESIGN.md §Fleet): identical batch
+/// sequences applied to a [`ReplicaSet`] (every replica of every shard fed
+/// by one ordered log) and to the global single-node store produce the
+/// same epoch numbering, the same materialized graph at every epoch from
+/// every replica — and therefore the same analysis answers bound to the
+/// same snapshot id, regardless of shard count, replica count or strategy.
+#[test]
+fn prop_fleet_replicas_track_the_global_store() {
+    use pathfinder_queries::coordinator::ReplicaSet;
+    use pathfinder_queries::graph::delta::random_batch;
+    use pathfinder_queries::graph::partition::{Partition, PartitionStrategy};
+    use pathfinder_queries::graph::store::GraphStore;
+
+    let m = m8();
+    for seed in 0..CASES / 4 {
+        let mut rng = SplitMix64::new(seed ^ 0xF1EE);
+        let g = random_graph(&mut rng);
+        for (shards, replicas) in [(1usize, 1usize), (2, 2), (3, 1), (5, 2)] {
+            for strategy in [PartitionStrategy::Hash, PartitionStrategy::Balanced] {
+                let part = Partition::build(&g, shards, strategy);
+                let mut rs = ReplicaSet::new(part, replicas);
+                let mut global = GraphStore::new(&g);
+                let batches: Vec<Vec<_>> = (0..3)
+                    .map(|_| random_batch(global.view(), 8, 0.3, &mut rng))
+                    .collect();
+                for b in &batches {
+                    let fleet_epoch = rs.apply_batch(b);
+                    let global_epoch = global.apply_batch(b).epoch;
+                    assert_eq!(
+                        fleet_epoch, global_epoch,
+                        "seed {seed} {shards}x{replicas} {strategy:?}: log out of step"
+                    );
+                }
+                for epoch in 0..=batches.len() as u64 {
+                    let want = global.view_at(epoch).unwrap().to_csr();
+                    for r in 0..replicas {
+                        let got = rs.materialize(epoch, r).unwrap();
+                        assert_eq!(
+                            got, want,
+                            "seed {seed} {shards}x{replicas} {strategy:?} epoch {epoch} \
+                             replica {r}"
+                        );
+                        // Same snapshot, same answers: a query served by
+                        // any replica at this epoch returns the global
+                        // store's result.
+                        let src = rng.gen_range(g.n() as u64) as u32;
+                        let a = alg::Bfs { src };
+                        assert_eq!(
+                            a.run(got.view(), &m).values,
+                            a.run(want.view(), &m).values,
+                            "seed {seed} epoch {epoch} replica {r}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Delete-heavy mutation stress (DESIGN.md §Mutation): a store fed mostly
+/// deletions piles up tombstone overlays, keeps every epoch's view equal
+/// to an independently replayed edge set, fully empties a targeted vertex
+/// (the oracle still validates a traversal rooted there), and compaction
+/// folds the tombstones away without changing the visible graph.
+#[test]
+fn prop_delete_heavy_mutation_keeps_views_exact() {
+    use pathfinder_queries::graph::delta::{random_batch, EdgeUpdate, UpdateOp};
+    use pathfinder_queries::graph::store::GraphStore;
+
+    let m = m8();
+    for seed in 0..CASES / 2 {
+        let mut rng = SplitMix64::new(seed ^ 0xDE1E);
+        let g = random_graph(&mut rng);
+        let mut store = GraphStore::new(&g);
+        let mut edges: std::collections::BTreeSet<(u32, u32)> = (0..g.n() as u32)
+            .flat_map(|u| g.neighbors(u).iter().map(move |&v| (u.min(v), u.max(v))))
+            .collect();
+
+        // Delete-heavy stream: 90% deletions, replayed into ground truth.
+        let mut batches = 0usize;
+        for _ in 0..6 {
+            let batch = random_batch(store.view(), 10, 0.9, &mut rng);
+            for upd in &batch {
+                let key = upd.normalized();
+                match upd.op {
+                    UpdateOp::Insert => edges.insert(key),
+                    UpdateOp::Delete => edges.remove(&key),
+                };
+            }
+            store.apply_batch(&batch);
+            batches += 1;
+        }
+        // Fully empty the heaviest vertex with explicit tombstones.
+        let hub = (0..g.n() as u32)
+            .max_by_key(|&v| store.view().degree(v))
+            .unwrap();
+        let kill: Vec<EdgeUpdate> = {
+            let mut scratch = pathfinder_queries::graph::view::NeighborScratch::default();
+            store
+                .view()
+                .neighbors(hub, &mut scratch)
+                .iter()
+                .map(|&v| EdgeUpdate::delete(hub, v))
+                .collect()
+        };
+        for upd in &kill {
+            edges.remove(&upd.normalized());
+        }
+        store.apply_batch(&kill);
+        batches += 1;
+
+        // Tombstones pile up as live overlays until compaction.
+        assert_eq!(store.live_overlays(), batches, "seed {seed}");
+        let view = store.view();
+        assert_eq!(view.degree(hub), 0, "seed {seed}: hub must be fully emptied");
+        let expect =
+            build_undirected_csr(g.n(), &edges.iter().copied().collect::<Vec<_>>());
+        assert_eq!(view.to_csr(), expect, "seed {seed}: overlay view vs replayed truth");
+
+        // The oracle covers the fully-emptied vertex: a BFS rooted there
+        // reaches exactly itself, on the overlay view and after the fold.
+        let out = alg::Bfs { src: hub }.run(view, &m);
+        alg::Bfs { src: hub }
+            .validate(view, &out.values)
+            .unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(out.values.iter().filter(|&&l| l >= 0).count(), 1, "seed {seed}");
+
+        let c = store.compact();
+        assert_eq!(c.drained, batches, "seed {seed}: every tombstone overlay folds");
+        assert_eq!(store.live_overlays(), 0, "seed {seed}");
+        assert_eq!(store.view().to_csr(), expect, "seed {seed}: fold changed the graph");
+        let after = alg::Bfs { src: hub }.run(store.view(), &m);
+        assert_eq!(out.values, after.values, "seed {seed}: answers survive the fold");
+    }
+}
+
 /// Epoch refcounting: compaction never retires an overlay any pin still
 /// needs, under randomized interleavings of pin/unpin/apply/compact.
 #[test]
