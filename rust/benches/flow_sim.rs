@@ -18,7 +18,7 @@ use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::sim::cluster::Cluster;
 use pathfinder_queries::sim::demand::PhaseDemand;
 use pathfinder_queries::sim::flow::{
-    Admission, FlowSim, OnFull, Priority, QuerySpec, ShareWeights,
+    Admission, FlowSim, OnFull, Priority, QuerySpec, ShareWeights, SolverMode,
 };
 use pathfinder_queries::sim::machine::Machine;
 use pathfinder_queries::util::bench::{black_box, Bench};
@@ -151,6 +151,124 @@ fn fleet_gate_specs(m: &Machine) -> Vec<QuerySpec> {
     specs
 }
 
+/// Host wall-clock per *simulated event* at three concurrency levels —
+/// the PR 7 tentpole axis. The workload weak-scales: 64 queries per
+/// pathfinder-8 chassis of a flattened fleet ([`Cluster`]), each query
+/// three chassis-local phases ([`PhaseDemand::uniform_channel_load_span`]
+/// anchored at the query's chassis) with jittered solo times and mixed
+/// priorities, all arriving at t=0 under unlimited admission. Every
+/// event's connected component is one chassis (~64 queries), so the
+/// incremental solver's per-event cost should stay near-flat as total
+/// concurrency grows from 10³ to 10⁵; the dense mode re-solves every
+/// component on every event and is measured at 1k only, as a contrast.
+struct HostScaling {
+    /// (concurrency level, simulated events, median host ns per event).
+    levels: Vec<(usize, usize, f64)>,
+    /// Dense-mode ns/event at the smallest level (informational).
+    dense_1k: f64,
+}
+
+impl HostScaling {
+    fn ns_at(&self, level: usize) -> f64 {
+        self.levels.iter().find(|&&(l, _, _)| l == level).map(|&(_, _, ns)| ns).unwrap()
+    }
+
+    /// The gated, machine-speed-independent figure: how much more host
+    /// time an event costs at 100k concurrency than at 1k.
+    fn ratio_100k_over_1k(&self) -> f64 {
+        self.ns_at(100_000) / self.ns_at(1_000)
+    }
+}
+
+/// Build the weak-scaled fleet workload for one concurrency level.
+fn host_scaling_workload(level: usize) -> (Machine, Vec<QuerySpec>) {
+    let base = MachineConfig::preset("pathfinder-8").unwrap();
+    let chassis = level.div_ceil(64);
+    let m = Cluster::new(&base, chassis, 1).machine().clone();
+    let npc = base.nodes;
+    let mut rng = SplitMix64::new(0xBEEF ^ level as u64);
+    let specs = (0..level)
+        .map(|id| {
+            let node_offset = (id / 64) * npc;
+            let phases = (0..3)
+                .map(|_| {
+                    // Jitter solo times so completions interleave instead
+                    // of retiring in lockstep waves.
+                    let total_ns = 0.5e6 * (0.75 + 0.5 * rng.next_f64());
+                    PhaseDemand::uniform_channel_load_span(&m, 0.5, total_ns, node_offset, npc)
+                })
+                .collect();
+            QuerySpec::new(id, "scale", phases, 0.0).with_priority(Priority::ALL[id % 3])
+        })
+        .collect();
+    (m, specs)
+}
+
+/// Median host ns per simulated event over `runs` runs of the workload.
+fn host_ns_per_event(m: &Machine, specs: &[QuerySpec], mode: SolverMode, runs: usize) -> f64 {
+    let sim = FlowSim::new(m.clone()).with_solver_mode(mode);
+    let mut samples: Vec<f64> = (0..runs)
+        .map(|_| {
+            let t = std::time::Instant::now();
+            let rep = black_box(sim.run_admitted(black_box(specs), Admission::unlimited()));
+            let dt = t.elapsed().as_secs_f64();
+            assert!(rep.events > 0, "host-scaling run produced no events");
+            assert!(
+                rep.timings.iter().all(|q| q.completed()),
+                "host-scaling: every query must complete"
+            );
+            dt * 1e9 / rep.events as f64
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+/// Measure the host-cost scaling axis and print the table.
+fn host_scaling() -> HostScaling {
+    println!("\n== host cost per simulated event (weak-scaled fleet, 64 queries/chassis) ==");
+    println!(
+        "{:>10} {:>9} {:>10} {:>12}  solver",
+        "queries", "chassis", "events", "ns/event"
+    );
+    let mut levels = Vec::new();
+    let mut dense_1k = 0.0;
+    // 100k is a single run (it dominates wall time); the cheaper levels
+    // take a median of 3 to damp host noise.
+    for (level, runs) in [(1_000usize, 3usize), (10_000, 3), (100_000, 1)] {
+        let (m, specs) = host_scaling_workload(level);
+        let ns = host_ns_per_event(&m, &specs, SolverMode::Incremental, runs);
+        // Events are deterministic across runs; recompute once for the
+        // table (starts + phase retirements: 4 per 3-phase query).
+        let events = 4 * level;
+        println!(
+            "{:>10} {:>9} {:>10} {:>12.0}  incremental",
+            level,
+            level.div_ceil(64),
+            events,
+            ns
+        );
+        levels.push((level, events, ns));
+        if level == 1_000 {
+            dense_1k = host_ns_per_event(&m, &specs, SolverMode::Dense, 1);
+            println!(
+                "{:>10} {:>9} {:>10} {:>12.0}  dense (reference)",
+                level,
+                level.div_ceil(64),
+                events,
+                dense_1k
+            );
+        }
+    }
+    let hs = HostScaling { levels, dense_1k };
+    println!(
+        "host cost ratio 100k/1k = {:.2}x (incremental); dense/incremental at 1k = {:.1}x",
+        hs.ratio_100k_over_1k(),
+        hs.dense_1k / hs.ns_at(1_000)
+    );
+    hs
+}
+
 /// Deterministic gate metrics with fluid-model closed forms (per-channel
 /// drain is `0.5e6 ns` per query, and the solo time cancels out of every
 /// completion time):
@@ -267,7 +385,7 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
 
 /// Emit `$PFQ_BENCH_JSON` and enforce `$PFQ_BENCH_BASELINE`; returns
 /// false when a gated metric regressed beyond the baseline tolerance.
-fn run_gate(bench: &Bench) -> bool {
+fn run_gate(bench: &Bench, host: &HostScaling) -> bool {
     let metrics = gate_metrics();
     println!("\n== bench-gate metrics (simulated, deterministic) ==");
     for (k, v) in &metrics {
@@ -281,6 +399,16 @@ fn run_gate(bench: &Bench) -> bool {
                 Json::Obj(
                     metrics.iter().map(|&(k, v)| (k.to_string(), Json::Num(v))).collect(),
                 ),
+            ),
+            (
+                "host_scaling",
+                Json::obj(vec![
+                    ("host_ns_per_event_1k", Json::Num(host.ns_at(1_000))),
+                    ("host_ns_per_event_10k", Json::Num(host.ns_at(10_000))),
+                    ("host_ns_per_event_100k", Json::Num(host.ns_at(100_000))),
+                    ("ratio_100k_over_1k", Json::Num(host.ratio_100k_over_1k())),
+                    ("dense_host_ns_per_event_1k", Json::Num(host.dense_1k)),
+                ]),
             ),
             (
                 "wall_median_s",
@@ -358,6 +486,36 @@ fn run_gate(bench: &Bench) -> bool {
             }
         }
     }
+    // Host-cost scaling gate (the incremental-solver criterion): the
+    // DIMENSIONLESS 100k/1k ns-per-event ratio must stay under the
+    // baseline bound plus tolerance. Gating on the ratio rather than
+    // absolute ns keeps the gate machine-speed independent; the absolute
+    // numbers in BENCH_pr.json are informational.
+    if let Some(hs) = base.get_opt("host_scaling") {
+        let max = hs
+            .f64_of("ratio_100k_over_1k_max")
+            .expect("host_scaling.ratio_100k_over_1k_max");
+        let htol = hs
+            .get_opt("tolerance_pct")
+            .and_then(|j| j.as_f64().ok())
+            .unwrap_or(30.0);
+        let bound = max * (1.0 + htol / 100.0);
+        let got = host.ratio_100k_over_1k();
+        if got > bound {
+            eprintln!(
+                "bench-gate: host ns/event ratio 100k/1k = {got:.2} exceeds \
+                 baseline {max} (+{htol}% tolerance = {bound:.2}) — the \
+                 event-scoped solver's per-event cost must stay near-flat \
+                 in concurrency"
+            );
+            ok = false;
+        } else {
+            println!(
+                "bench-gate: host ns/event ratio 100k/1k = {got:.2} \
+                 (bound {bound:.2})"
+            );
+        }
+    }
     if ok {
         println!(
             "bench-gate: all metrics within {tol}% of {base_path} \
@@ -431,10 +589,14 @@ fn main() {
         nq
     );
 
+    // Host-cost-per-event scaling axis (see [`host_scaling`]): always
+    // measured — the 100k level is a single run and the gate needs it.
+    let host = host_scaling();
+
     // CI perf-regression gate: the deterministic metrics always print;
     // writing BENCH_pr.json and enforcing the baseline happen only when
     // $PFQ_BENCH_JSON / $PFQ_BENCH_BASELINE are set (see module doc).
-    if !run_gate(&bench) {
+    if !run_gate(&bench, &host) {
         std::process::exit(1);
     }
 }

@@ -394,6 +394,7 @@ mod tests {
             parks: 0,
             resumes: 0,
             weights: crate::sim::flow::ShareWeights::flat(),
+            events: 0,
         };
         (requests, flow)
     }

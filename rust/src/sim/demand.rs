@@ -98,6 +98,13 @@ pub struct PhaseDemand {
     /// Available parallelism: number of independently runnable work items
     /// (threads) this phase can use, machine-wide.
     pub parallelism: f64,
+    /// First machine node this demand's vectors describe (default 0). The
+    /// per-node vectors stay *local* (length = the span's node count);
+    /// machine-rate lookups and flow-resource indices add the offset. This
+    /// lets a chassis-local workload on a huge flattened cluster carry
+    /// span-sized vectors instead of machine-sized ones — the difference
+    /// between ~kB and ~GB of demand state at 10⁵ concurrent queries.
+    pub node_offset: usize,
 }
 
 impl PhaseDemand {
@@ -116,7 +123,16 @@ impl PhaseDemand {
             serial_hops: 0.0,
             issue_efficiency: None,
             parallelism: 1.0,
+            node_offset: 0,
         }
+    }
+
+    /// Anchor this demand's local node vectors at machine node
+    /// `node_offset` (see the field doc). The vectors themselves are
+    /// untouched — index `n` now describes machine node `node_offset + n`.
+    pub fn with_node_offset(mut self, node_offset: usize) -> Self {
+        self.node_offset = node_offset;
+        self
     }
 
     pub fn nodes(&self) -> usize {
@@ -170,18 +186,20 @@ impl PhaseDemand {
         let kinds = self.flow_kinds();
         let cpn = self.channels_per_node;
         for node in 0..self.nodes() {
+            // Machine node this local index describes (offset demands).
+            let mnode = self.node_offset + node;
             // MSP premium folded uniformly over the node's channels.
-            let msp_premium = m.msp_op_ns(node) / m.channel_op_ns(node) - 1.0;
+            let msp_premium = m.msp_op_ns(mnode) / m.channel_op_ns(mnode) - 1.0;
             let mix = if self.channel_ops[node] > 0.0 {
                 1.0 + self.msp_ops[node] * msp_premium / self.channel_ops[node]
             } else {
                 1.0
             };
-            let base = node * kinds;
+            let base = mnode * kinds;
             for c in 0..cpn {
                 let ops = self.per_channel_ops[node * cpn + c];
                 if ops > 0.0 {
-                    let drain = ops * mix * m.channel_op_ns(node);
+                    let drain = ops * mix * m.channel_op_ns(mnode);
                     out.push((base as u32 + c as u32, drain / solo_ns));
                 }
             }
@@ -201,9 +219,12 @@ impl PhaseDemand {
     /// latency floors); the flow engine turns them into utilization
     /// fractions.
     pub fn drain_ns(&self, m: &Machine, node: usize) -> [f64; Self::RESOURCE_KINDS] {
+        // Local index into this demand's vectors; machine lookups add the
+        // span offset (0 for whole-machine demands).
+        let mnode = self.node_offset + node;
         // MSP RMW ops cost more than plain accesses; fold the premium
         // into an effective op count (scaled by the write-priority knob).
-        let msp_premium = m.msp_op_ns(node) / m.channel_op_ns(node) - 1.0;
+        let msp_premium = m.msp_op_ns(mnode) / m.channel_op_ns(mnode) - 1.0;
         let eff_ops = self.channel_ops[node] + self.msp_ops[node] * msp_premium;
         let mix = if self.channel_ops[node] > 0.0 {
             eff_ops / self.channel_ops[node]
@@ -211,14 +232,14 @@ impl PhaseDemand {
             1.0
         };
         [
-            eff_ops / m.channel_op_rate(node) * 1e9,
+            eff_ops / m.channel_op_rate(mnode) * 1e9,
             // Load-imbalance floor: the hottest channel must serially
             // service its ops.
-            self.max_channel_ops[node] * mix * m.channel_op_ns(node),
-            self.stream_bytes[node] / m.stream_rate(node) * 1e9,
-            self.instructions[node] / m.issue_rate(node) * 1e9,
-            self.fabric_bytes[node] / m.fabric_rate(node) * 1e9,
-            self.interconnect_bytes[node] / m.interconnect_rate(node) * 1e9,
+            self.max_channel_ops[node] * mix * m.channel_op_ns(mnode),
+            self.stream_bytes[node] / m.stream_rate(mnode) * 1e9,
+            self.instructions[node] / m.issue_rate(mnode) * 1e9,
+            self.fabric_bytes[node] / m.fabric_rate(mnode) * 1e9,
+            self.interconnect_bytes[node] / m.interconnect_rate(mnode) * 1e9,
         ]
     }
 
@@ -241,7 +262,8 @@ impl PhaseDemand {
         let total_instr = self.total_instructions();
         if total_instr > 0.0 {
             let eta = self.issue_efficiency.unwrap_or(m.cfg.spawn_efficiency);
-            let full_issue: f64 = (0..self.nodes()).map(|n| m.issue_rate(n)).sum();
+            let full_issue: f64 =
+                (0..self.nodes()).map(|n| m.issue_rate(self.node_offset + n)).sum();
             t = t.max(total_instr / (eta * full_issue) * 1e9);
         }
         // Parallelism floor: with P runnable threads, each blocking on one
@@ -251,14 +273,14 @@ impl PhaseDemand {
         let total_ops = self.total_channel_ops();
         if total_ops > 0.0 && self.parallelism > 0.0 {
             let mean_lat = m.cfg.local_access_ns
-                + self.mean_remote_fraction() * m.mean_fabric_latency_ns(0);
+                + self.mean_remote_fraction() * m.mean_fabric_latency_ns(self.node_offset);
             let rounds = (total_ops / self.parallelism).max(1.0);
             t = t.max(rounds * mean_lat);
         }
         // Serial chain floor (pointer jumping, reductions): each hop pays a
         // migration-ish round trip.
-        let chain =
-            self.serial_hops * (m.mean_fabric_latency_ns(0) + m.cfg.migration_overhead_ns);
+        let chain = self.serial_hops
+            * (m.mean_fabric_latency_ns(self.node_offset) + m.cfg.migration_overhead_ns);
         t = t.max(chain);
         // Fleet-interconnect latency floor: a phase that exchanges any
         // cross-shard traffic pays at least one inter-machine round.
@@ -278,12 +300,29 @@ impl PhaseDemand {
     /// bench gate (`rust/benches/flow_sim.rs`, `ci/BENCH_baseline.json`)
     /// rely on; keep the shape in sync with those closed forms.
     pub fn uniform_channel_load(m: &Machine, frac: f64, total_ns: f64) -> PhaseDemand {
-        let nodes = m.nodes();
+        Self::uniform_channel_load_span(m, frac, total_ns, 0, m.nodes())
+    }
+
+    /// [`PhaseDemand::uniform_channel_load`] restricted to the `nodes`-node
+    /// span starting at machine node `node_offset`: the demand's vectors
+    /// are span-sized and anchored via [`PhaseDemand::with_node_offset`].
+    /// This is the workload shape of the host-cost bench axis
+    /// (`host_scaling` in `ci/BENCH_baseline.json`): each chassis of a
+    /// flattened cluster runs its own local queries, so 10⁵ concurrent
+    /// queries decompose into ~10³ independent allocator components while
+    /// each demand stays a few hundred bytes.
+    pub fn uniform_channel_load_span(
+        m: &Machine,
+        frac: f64,
+        total_ns: f64,
+        node_offset: usize,
+        nodes: usize,
+    ) -> PhaseDemand {
         let cpn = m.cfg.channels_per_node;
-        let mut p = PhaseDemand::zero(nodes, cpn);
+        let mut p = PhaseDemand::zero(nodes, cpn).with_node_offset(node_offset);
         let mut total_ops = 0.0;
         for n in 0..nodes {
-            let ops = m.channel_op_rate(n) * frac * total_ns * 1e-9;
+            let ops = m.channel_op_rate(node_offset + n) * frac * total_ns * 1e-9;
             p.channel_ops[n] = ops;
             p.max_channel_ops[n] = ops / cpn as f64;
             for c in 0..cpn {

@@ -1,0 +1,55 @@
+//! Flow-level (fluid) concurrency engine.
+//!
+//! This is the engine the paper-scale experiments run on: up to hundreds
+//! of thousands of concurrent queries, each a sequence of
+//! [`crate::sim::demand::PhaseDemand`] phases produced by the functional
+//! algorithms in [`crate::alg`]. The model:
+//!
+//! * Running **alone**, a phase takes
+//!   [`crate::sim::demand::PhaseDemand::solo_ns`] — its
+//!   latency/parallelism/synchronization structure caps how fast it can go
+//!   even on an idle machine. A single level-synchronous BFS cannot
+//!   saturate the Pathfinder's many narrow channels; that headroom is the
+//!   paper's whole thesis.
+//! * Running **concurrently**, each active phase progresses at a rate
+//!   `s ∈ (0, 1]` relative to its solo speed. A phase running at its solo
+//!   speed consumes a *fraction* `u_j = drain_ns(j) / solo_ns` of each
+//!   shared resource `j` (a node's channel capacity, its hottest channel,
+//!   stream bandwidth, instruction issue, fabric link — plus the cluster
+//!   interconnect as a sixth resource). Rates are chosen by
+//!   progressive-filling **max-min fairness**: grow every query's rate
+//!   together until a resource saturates, freeze the queries using it, and
+//!   continue with the rest — the fluid analogue of hardware round-robin
+//!   thread scheduling with FIFO memory channels. With non-flat
+//!   [`ShareWeights`] the filling is *weighted*: each query grows at its
+//!   priority class's multiple of the fill level, so Interactive work
+//!   holds a larger share of every saturated resource (DESIGN.md
+//!   §Scheduling).
+//! * Under [`Admission::preempt`], running Batch work can be **parked at a
+//!   phase boundary** (context bytes released, completed phases kept) when
+//!   a blocked Interactive waiter needs its reservation, and resumed when
+//!   the pressure clears — see [`crate::sim::preempt`].
+//! * Time advances event-to-event (phase completions and query arrivals).
+//!   Rates are recomputed **event-scoped**: the [`solver`] re-solves only
+//!   the connected component(s) of queries/resources an event structurally
+//!   touched, and the [`runtime`] tracks completions in a lazy-deletion
+//!   heap, so host cost per simulated event stays near-constant as
+//!   concurrency grows (DESIGN.md §Engine).
+//!
+//! Sequential execution ([`FlowSim::run_sequential`]) is exact under this
+//! model — a lone query always gets rate 1.0 — so it is computed directly
+//! from solo times rather than through the event loop.
+//!
+//! The module is split by concern — [`spec`] (what callers submit),
+//! [`report`] (what runs return), [`solver`] (the incremental rate
+//! allocator), [`runtime`] (the event loop) — with everything re-exported
+//! here, so `sim::flow::FlowSim` and friends keep working unchanged.
+
+pub mod report;
+pub mod runtime;
+pub mod solver;
+pub mod spec;
+
+pub use report::{FlowReport, QueryTiming};
+pub use runtime::{FlowSim, SolverMode};
+pub use spec::{Admission, OnFull, Priority, QuerySpec, ShareWeights};

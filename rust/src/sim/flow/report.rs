@@ -1,0 +1,167 @@
+//! Per-run *results*: what the flow engine hands back after a run.
+//!
+//! [`QueryTiming`] is one query's outcome (start/finish, declared vs
+//! admitted class); [`FlowReport`] aggregates a whole run — timings,
+//! counters, admission outcomes, preemption totals, and the new
+//! [`FlowReport::events`] count that the host-cost bench axis divides
+//! wall-clock by. Split out of the old monolithic `sim/flow.rs`;
+//! everything here is re-exported at `sim::flow::*`.
+
+use crate::sim::counters::Counters;
+
+use super::spec::{Priority, ShareWeights};
+
+/// Per-query outcome of a flow-engine run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryTiming {
+    pub id: usize,
+    pub label: &'static str,
+    /// When the query arrived (ns).
+    pub arrival_ns: f64,
+    /// When its first phase started progressing (ns). **NaN = the query
+    /// never started**: it was rejected at arrival or shed while waiting.
+    /// A queued query's start is later than its arrival; the gap is its
+    /// admission wait.
+    pub start_ns: f64,
+    /// When its last phase completed (ns). NaN if the query never ran.
+    pub finish_ns: f64,
+    /// Phase count of the submitted spec. Recorded uniformly for every
+    /// outcome — a rejected or shed query reports the work it *would*
+    /// have run, not 0.
+    pub phases: usize,
+    /// Priority class the spec declared.
+    pub priority: Priority,
+    /// Class the query was *admitted as*: the declared class, or
+    /// `Interactive` when anti-starvation aging promoted it out of the
+    /// wait queue. Recording both sides keeps per-class wait statistics
+    /// honest — a promoted Batch query's long wait belongs to Batch, but
+    /// reports can now also see that it competed as Interactive.
+    pub admitted_as: Priority,
+}
+
+impl QueryTiming {
+    /// End-to-end latency of the query (ns); NaN if it never ran.
+    pub fn latency_ns(&self) -> f64 {
+        self.finish_ns - self.arrival_ns
+    }
+
+    /// Whether the query ran to completion.
+    pub fn completed(&self) -> bool {
+        self.finish_ns.is_finite()
+    }
+}
+
+/// Result of one flow-engine run.
+#[derive(Debug, Clone)]
+pub struct FlowReport {
+    /// Per-query timings, in input order.
+    pub timings: Vec<QueryTiming>,
+    /// Time the last query finished (ns).
+    pub makespan_ns: f64,
+    /// Accumulated hardware counters over the run.
+    pub counters: Counters,
+    /// Largest number of queries simultaneously in flight.
+    pub peak_concurrency: usize,
+    /// Ids of queries rejected at arrival (admission full under
+    /// [`super::spec::OnFull::Reject`], or a footprint larger than the
+    /// whole byte budget). Empty without admission control.
+    pub rejected: Vec<usize>,
+    /// Ids of queries shed from the wait queue after being admitted to it:
+    /// deadline expired while waiting, or dropped by
+    /// [`super::spec::OnFull::Shed`] overflow. Empty without admission
+    /// control.
+    pub shed: Vec<usize>,
+    /// High-water mark of reserved thread-context bytes over the run
+    /// (from the [`crate::sim::ledger::ContextLedger`] the engine admits
+    /// against).
+    pub peak_ctx_bytes: u64,
+    /// Ids of queries that were checkpoint-parked at least once. The run
+    /// always drains the parked set before finishing, so every id here
+    /// also completed (its latency includes the parked time).
+    pub preempted: Vec<usize>,
+    /// Total park events over the run (one query can park repeatedly, up
+    /// to [`crate::sim::preempt::PreemptPolicy::max_parks_per_query`]).
+    pub parks: usize,
+    /// Total resume events over the run.
+    pub resumes: usize,
+    /// The fair-share weights the run used (flat = plain max-min).
+    pub weights: ShareWeights,
+    /// Scheduling events processed: query starts, phase completions, parks
+    /// and resumes. This is the denominator of the `host_ns_per_event`
+    /// bench axis (host wall-clock per simulated event) — the quantity the
+    /// incremental solver keeps near-constant as concurrency grows
+    /// (DESIGN.md §Engine).
+    pub events: usize,
+}
+
+impl FlowReport {
+    /// Mean completed-query latency (s). Rejected/shed queries carry NaN
+    /// timings and are excluded (they have no latency, and one NaN would
+    /// otherwise poison the mean).
+    pub fn mean_latency_s(&self) -> f64 {
+        let (sum, n) = self
+            .timings
+            .iter()
+            .filter(|t| t.completed())
+            .fold((0.0, 0usize), |(s, n), t| (s + t.latency_ns(), n + 1));
+        if n == 0 {
+            return 0.0;
+        }
+        sum / n as f64 * 1e-9
+    }
+
+    /// Makespan in seconds.
+    pub fn makespan_s(&self) -> f64 {
+        self.makespan_ns * 1e-9
+    }
+
+    /// Completed-query latencies in seconds (input order); rejected and
+    /// shed queries are filtered out.
+    pub fn latencies_s(&self) -> Vec<f64> {
+        self.timings
+            .iter()
+            .filter(|t| t.completed())
+            .map(|t| t.latency_ns() * 1e-9)
+            .collect()
+    }
+
+    /// Completed-query latencies (s) of one declared priority class — the
+    /// realized per-class service the weighted progress loop divides.
+    pub fn class_latencies_s(&self, priority: Priority) -> Vec<f64> {
+        self.timings
+            .iter()
+            .filter(|t| t.completed() && t.priority == priority)
+            .map(|t| t.latency_ns() * 1e-9)
+            .collect()
+    }
+
+    /// Mean completed-query latency (s) of one declared priority class;
+    /// 0.0 if the class completed nothing.
+    pub fn class_mean_latency_s(&self, priority: Priority) -> f64 {
+        let xs = self.class_latencies_s(priority);
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+
+    /// Completed latencies (s) of one spec label — e.g. the `"mutate"`
+    /// ingest lane sharing the engine with queries (DESIGN.md §Mutation).
+    pub fn label_latencies_s(&self, label: &str) -> Vec<f64> {
+        self.timings
+            .iter()
+            .filter(|t| t.completed() && t.label == label)
+            .map(|t| t.latency_ns() * 1e-9)
+            .collect()
+    }
+
+    /// Mean completed latency (s) of one spec label; 0.0 if none
+    /// completed.
+    pub fn label_mean_latency_s(&self, label: &str) -> f64 {
+        let xs = self.label_latencies_s(label);
+        if xs.is_empty() {
+            return 0.0;
+        }
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}

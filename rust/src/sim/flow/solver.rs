@@ -1,0 +1,669 @@
+//! Incremental weighted max-min rate solver with event-scoped
+//! recomputation.
+//!
+//! The old engine re-ran dense progressive filling over *every* running
+//! query at *every* admit/finish/park/resume event, so host wall-clock per
+//! event grew linearly with concurrency (and the whole run superlinearly).
+//! This module replaces that with an event-scoped solve built on one
+//! observation: **weighted max-min decomposes over connected components**
+//! of the bipartite phase↔resource graph. A structural event (a phase
+//! entering or leaving) can only change rates inside the component(s)
+//! connected to the resources that phase touches; every other component's
+//! allocation — and its already-scheduled completion events — is provably
+//! unchanged.
+//!
+//! [`IncrementalSolver`] therefore maintains, per resource, the set of
+//! active phases using it (`res_users`) plus the set of *seed* resources
+//! whose user set changed since the last solve. [`IncrementalSolver::
+//! solve_event`] floods out from the seeds (generation-stamped BFS, no
+//! clearing between events), collects each affected component, and runs
+//! the same cap-first weighted progressive filling the dense solver used —
+//! restricted to that component's members and resources, in a canonical
+//! (ascending-index) order so the result is a pure function of the
+//! component's membership. Rates are committed with **re-anchoring only on
+//! a bitwise change**, so a query whose rate merely re-derives to the same
+//! value keeps its exact scheduled completion time.
+//!
+//! Progress is *anchored*, not stepped: an [`ActivePhase`] stores the
+//! remaining fraction at its last rate change plus the anchor time, so the
+//! runtime never touches untouched phases to advance them — remaining work
+//! and completion time are closed forms of the anchor
+//! ([`ActivePhase::remaining_at`], [`ActivePhase::completion_ns`]).
+//!
+//! Two safety nets cover the refactor:
+//! * [`SolverMode::Dense`] (on [`super::runtime::FlowSim`]) re-solves
+//!   *every* component at every event through this same component solver.
+//!   Because re-anchoring happens only on bitwise rate change, Dense and
+//!   Incremental runs are **bit-identical** — the equivalence property
+//!   test in `tests/prop_tests.rs` pins this at tolerance 0.
+//! * In debug builds, every solve is checked against the retained PR 3
+//!   dense reference oracle ([`max_min_rates`]) — the old global
+//!   progressive-filling pass over the full resource vector — at 1e-9
+//!   relative (the global pass interleaves cap-freezes across components,
+//!   which reorders floating-point decrements at the ulp level).
+//!
+//! [`SolverMode`]: super::runtime::SolverMode
+
+/// Resources below this utilization are treated as unused by a phase; keeps
+/// the sparse vectors short and the waterfill numerically stable.
+pub const UTIL_EPS: f64 = 1e-9;
+
+/// One in-flight phase inside the allocator, with anchored progress.
+///
+/// Instead of decrementing a `remaining` fraction at every event, the
+/// phase records the remaining fraction at the instant its rate last
+/// changed (`remaining_at_anchor` at `anchor_ns`). While the rate holds,
+/// progress is linear, so remaining work and completion time are closed
+/// forms — the solver re-anchors only when it commits a bitwise rate
+/// change.
+#[derive(Debug, Clone)]
+pub struct ActivePhase {
+    /// Index into the run's query vector.
+    pub qi: usize,
+    /// Index of the current phase.
+    pub phase_idx: usize,
+    /// Solo duration of the current phase (ns).
+    pub solo_ns: f64,
+    /// Sparse utilization vector: (resource index, fraction of capacity
+    /// consumed at rate 1.0).
+    pub util: Vec<(u32, f64)>,
+    /// Fair-share weight of the owning query's priority class: this phase
+    /// grows at `weight x` the uniform fill level during allocation, and
+    /// contributes `weight x util` to the aggregate demand vector.
+    pub weight: f64,
+    /// Allocated rate from the last allocation pass.
+    pub rate: f64,
+    /// Simulated time of the last rate change (ns).
+    pub anchor_ns: f64,
+    /// Remaining fraction of the phase in [0, 1] at `anchor_ns`.
+    pub remaining_at_anchor: f64,
+}
+
+impl ActivePhase {
+    /// Remaining fraction of the phase at time `t >= anchor_ns` under the
+    /// current rate.
+    pub fn remaining_at(&self, t: f64) -> f64 {
+        self.remaining_at_anchor - (t - self.anchor_ns) * self.rate / self.solo_ns
+    }
+
+    /// Absolute completion time (ns) under the current rate.
+    pub fn completion_ns(&self) -> f64 {
+        self.anchor_ns + self.remaining_at_anchor * self.solo_ns / self.rate
+    }
+}
+
+/// Event-scoped weighted max-min solver (see the module doc).
+///
+/// Owns the active-phase table (`slots`, indexed by query index so every
+/// walk is in deterministic ascending order — never map iteration), the
+/// per-resource user lists, and the seed set of resources whose user set
+/// changed since the last [`IncrementalSolver::solve_event`]. All scratch
+/// (aggregate demand, residual capacity, generation stamps, component
+/// member/resource lists) is generation-stamped and reused, so a solve
+/// allocates nothing and initializes only what it floods.
+#[derive(Debug, Clone)]
+pub struct IncrementalSolver {
+    /// Size of the machine's flow-resource index space.
+    n_res: usize,
+    /// Active phase of each query (None = not running), indexed by qi.
+    slots: Vec<Option<ActivePhase>>,
+    /// Number of Some entries in `slots`.
+    active_count: usize,
+    /// Per resource: query indices of the active phases using it.
+    res_users: Vec<Vec<u32>>,
+    /// Resources whose user set changed since the last solve — the flood
+    /// origins of the next event-scoped recomputation.
+    seeds: Vec<u32>,
+    /// Scratch: aggregate weighted demand per resource (valid for the
+    /// current generation's touched resources only).
+    demand: Vec<f64>,
+    /// Scratch: residual capacity per resource (same validity).
+    residual: Vec<f64>,
+    /// Generation stamp per resource: equal to `gen` = flooded this event.
+    res_gen: Vec<u64>,
+    /// Generation stamp per query: equal to `gen` = flooded this event.
+    query_gen: Vec<u64>,
+    /// Current flood generation (one per solve_event call).
+    gen: u64,
+    /// Scratch: current component's members (query indices).
+    members: Vec<usize>,
+    /// Scratch: current component's touched resources.
+    touched: Vec<u32>,
+    /// Scratch: per-member frozen flags for the progressive filling.
+    frozen: Vec<bool>,
+    /// Scratch: per-member solved rates before commit.
+    rates: Vec<f64>,
+}
+
+impl IncrementalSolver {
+    /// A solver for `n_queries` potential queries over a machine with
+    /// `n_res` flow resources.
+    pub fn new(n_res: usize, n_queries: usize) -> Self {
+        IncrementalSolver {
+            n_res,
+            slots: vec![None; n_queries],
+            active_count: 0,
+            res_users: vec![Vec::new(); n_res],
+            seeds: Vec::new(),
+            demand: vec![0.0; n_res],
+            residual: vec![0.0; n_res],
+            res_gen: vec![0; n_res],
+            query_gen: vec![0; n_queries],
+            gen: 0,
+            members: Vec::new(),
+            touched: Vec::new(),
+            frozen: Vec::new(),
+            rates: Vec::new(),
+        }
+    }
+
+    /// Number of active phases.
+    pub fn active_count(&self) -> usize {
+        self.active_count
+    }
+
+    /// The active phase of query `qi` (panics if inactive).
+    pub fn slot(&self, qi: usize) -> &ActivePhase {
+        self.slots[qi].as_ref().expect("query has no active phase")
+    }
+
+    /// All active phases in ascending query-index order.
+    pub fn iter_active(&self) -> impl Iterator<Item = &ActivePhase> + '_ {
+        self.slots.iter().flatten()
+    }
+
+    /// Register a newly-entered phase. Its resources become seeds: the
+    /// next [`IncrementalSolver::solve_event`] re-solves the component the
+    /// phase joins (possibly merging previously separate components).
+    pub fn insert(&mut self, ap: ActivePhase) {
+        let qi = ap.qi;
+        debug_assert!(self.slots[qi].is_none(), "query already has an active phase");
+        for &(j, _) in &ap.util {
+            self.res_users[j as usize].push(qi as u32);
+            self.seeds.push(j);
+        }
+        self.slots[qi] = Some(ap);
+        self.active_count += 1;
+    }
+
+    /// Detach the active phase of `qi` (completion, park). Its resources
+    /// become seeds: the departing demand can speed up everything that was
+    /// transitively sharing them — and any component the departure splits
+    /// off still contains a user of one of these resources, so flooding
+    /// the seeds provably reaches every query whose rate can change.
+    pub fn remove(&mut self, qi: usize) -> ActivePhase {
+        let ap = self.slots[qi].take().expect("query has no active phase to remove");
+        for &(j, _) in &ap.util {
+            let users = &mut self.res_users[j as usize];
+            let pos = users
+                .iter()
+                .position(|&u| u as usize == qi)
+                .expect("resource user list out of sync");
+            users.swap_remove(pos);
+            self.seeds.push(j);
+        }
+        self.active_count -= 1;
+        ap
+    }
+
+    /// Re-solve rates at time `t` after structural changes, appending the
+    /// query indices whose rate changed (bitwise) to `changed`.
+    ///
+    /// With `dense` false (the default mode), only the components
+    /// reachable from the seed resources are re-solved; with `dense` true
+    /// every component is re-solved through the same component solver —
+    /// bit-identical by construction, kept as the equivalence reference.
+    pub fn solve_event(&mut self, t: f64, dense: bool, changed: &mut Vec<usize>) {
+        changed.clear();
+        if self.active_count == 0 {
+            self.seeds.clear();
+            return;
+        }
+        self.gen += 1;
+        let gen = self.gen;
+        let mut members = std::mem::take(&mut self.members);
+        let mut touched = std::mem::take(&mut self.touched);
+        if dense {
+            for qi in 0..self.slots.len() {
+                if self.slots[qi].is_none() || self.query_gen[qi] == gen {
+                    continue;
+                }
+                members.clear();
+                touched.clear();
+                self.query_gen[qi] = gen;
+                members.push(qi);
+                self.flood(&mut members, &mut touched, gen);
+                self.solve_component(&mut members, &mut touched, t, changed);
+            }
+            self.seeds.clear();
+        } else {
+            let seeds = std::mem::take(&mut self.seeds);
+            for &j in &seeds {
+                let ji = j as usize;
+                if self.res_gen[ji] == gen {
+                    continue;
+                }
+                self.res_gen[ji] = gen;
+                self.demand[ji] = 0.0;
+                self.residual[ji] = 1.0;
+                members.clear();
+                touched.clear();
+                touched.push(j);
+                for k in 0..self.res_users[ji].len() {
+                    let uq = self.res_users[ji][k] as usize;
+                    if self.query_gen[uq] != gen {
+                        self.query_gen[uq] = gen;
+                        members.push(uq);
+                    }
+                }
+                self.flood(&mut members, &mut touched, gen);
+                if !members.is_empty() {
+                    self.solve_component(&mut members, &mut touched, t, changed);
+                }
+            }
+            self.seeds = seeds;
+            self.seeds.clear();
+        }
+        self.members = members;
+        self.touched = touched;
+        #[cfg(debug_assertions)]
+        self.check_against_dense_oracle();
+    }
+
+    /// Generation-stamped BFS over the phase↔resource bipartite graph:
+    /// expand `members` (used as the BFS queue) and `touched` to the full
+    /// connected component. Newly-touched resources get their scratch
+    /// demand/residual initialized on first visit, so nothing is ever
+    /// cleared between events.
+    fn flood(&mut self, members: &mut Vec<usize>, touched: &mut Vec<u32>, gen: u64) {
+        let IncrementalSolver { slots, res_users, res_gen, query_gen, demand, residual, .. } =
+            self;
+        let mut head = 0;
+        while head < members.len() {
+            let qi = members[head];
+            head += 1;
+            let ap = slots[qi].as_ref().expect("flood reached an inactive query");
+            for &(j, _) in &ap.util {
+                let ji = j as usize;
+                if res_gen[ji] == gen {
+                    continue;
+                }
+                res_gen[ji] = gen;
+                demand[ji] = 0.0;
+                residual[ji] = 1.0;
+                touched.push(j);
+                for &uq in &res_users[ji] {
+                    let uq = uq as usize;
+                    if query_gen[uq] != gen {
+                        query_gen[uq] = gen;
+                        members.push(uq);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Cap-first weighted progressive filling over one component, in
+    /// canonical order: members ascending by query index, resources
+    /// scanned ascending with a strict `<` bottleneck tie-break. The
+    /// result is therefore a pure function of the component's membership —
+    /// independent of which seed discovered it — which is what makes
+    /// Dense-mode re-solves of untouched components bitwise no-ops.
+    ///
+    /// Semantics are exactly the PR 3 dense pass: every unfrozen phase
+    /// grows at `weight x` a uniform fill level; phases whose weighted
+    /// growth reaches the solo cap (`weight x level >= 1`) freeze at rate
+    /// 1.0 first (their consumption is plain utilization, so remaining
+    /// levels only move up); then the bottleneck's users freeze at
+    /// `(weight x level).min(1.0).max(1e-9)`.
+    fn solve_component(
+        &mut self,
+        members: &mut Vec<usize>,
+        touched: &mut Vec<u32>,
+        t: f64,
+        changed: &mut Vec<usize>,
+    ) {
+        members.sort_unstable();
+        touched.sort_unstable();
+        let IncrementalSolver { slots, demand, residual, frozen, rates, .. } = self;
+        frozen.clear();
+        frozen.resize(members.len(), false);
+        rates.clear();
+        rates.resize(members.len(), 1.0);
+        // Aggregate weighted demand, in ascending member order.
+        for &qi in members.iter() {
+            let ap = slots[qi].as_ref().expect("component member is inactive");
+            for &(j, u) in &ap.util {
+                demand[j as usize] += ap.weight * u;
+            }
+        }
+        let mut unfrozen = members.len();
+        while unfrozen > 0 {
+            // Uniform fill level at which the first resource saturates
+            // (each unfrozen phase consuming weight x level x util).
+            let mut level = f64::INFINITY;
+            let mut bottleneck = u32::MAX;
+            for &j in touched.iter() {
+                let d = demand[j as usize];
+                if d > UTIL_EPS {
+                    let l = residual[j as usize].max(0.0) / d;
+                    if l < level {
+                        level = l;
+                        bottleneck = j;
+                    }
+                }
+            }
+            if bottleneck == u32::MAX {
+                // Nothing binds below the solo-speed cap: everyone left
+                // runs at full rate.
+                for (i, r) in rates.iter_mut().enumerate() {
+                    if !frozen[i] {
+                        *r = 1.0;
+                    }
+                }
+                break;
+            }
+            // Phases whose weighted growth hits the solo cap at or before
+            // the saturation level run at full rate; retire them and
+            // re-solve — they consume util (not weight x level x util), so
+            // the remaining levels are monotonically non-decreasing.
+            let mut capped_any = false;
+            for (i, &qi) in members.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                let ap = slots[qi].as_ref().expect("component member is inactive");
+                if ap.weight * level < 1.0 {
+                    continue;
+                }
+                rates[i] = 1.0;
+                frozen[i] = true;
+                unfrozen -= 1;
+                capped_any = true;
+                for &(j, u) in &ap.util {
+                    residual[j as usize] -= u;
+                    demand[j as usize] -= ap.weight * u;
+                }
+            }
+            if capped_any {
+                continue;
+            }
+            // Freeze every unfrozen phase that touches the bottleneck at
+            // its weighted share; retire its demand and charge its
+            // consumption.
+            let mut froze_any = false;
+            for (i, &qi) in members.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                let ap = slots[qi].as_ref().expect("component member is inactive");
+                if ap.util.iter().any(|&(j, _)| j == bottleneck) {
+                    let r = (ap.weight * level).min(1.0).max(1e-9);
+                    rates[i] = r;
+                    frozen[i] = true;
+                    unfrozen -= 1;
+                    froze_any = true;
+                    for &(j, u) in &ap.util {
+                        residual[j as usize] -= r * u;
+                        demand[j as usize] -= ap.weight * u;
+                    }
+                }
+            }
+            debug_assert!(froze_any, "bottleneck had no users");
+            if !froze_any {
+                // Defensive: avoid an infinite loop on numerical corner
+                // cases.
+                for (i, r) in rates.iter_mut().enumerate() {
+                    if !frozen[i] {
+                        let w = slots[members[i]].as_ref().unwrap().weight;
+                        *r = (w * level).min(1.0).max(1e-9);
+                    }
+                }
+                break;
+            }
+        }
+        // Commit, re-anchoring ONLY on a bitwise rate change: a query
+        // whose rate re-derives to the same value keeps its exact
+        // scheduled completion event, and Dense-mode full re-solves stay
+        // bit-identical to incremental ones.
+        for (i, &qi) in members.iter().enumerate() {
+            let ap = slots[qi].as_mut().expect("component member is inactive");
+            let r = rates[i];
+            if r.to_bits() != ap.rate.to_bits() {
+                ap.remaining_at_anchor = ap.remaining_at(t);
+                ap.anchor_ns = t;
+                ap.rate = r;
+                changed.push(qi);
+            }
+        }
+    }
+
+    /// Debug-build safety net: after every solve, replay the retained
+    /// PR 3 dense reference solver ([`max_min_rates`]) over the full
+    /// active set and compare every committed rate at 1e-9 relative.
+    /// Skipped above 256 active phases (the oracle is the quadratic pass
+    /// this module exists to retire).
+    #[cfg(debug_assertions)]
+    fn check_against_dense_oracle(&self) {
+        if self.active_count == 0 || self.active_count > 256 {
+            return;
+        }
+        let order: Vec<usize> =
+            (0..self.slots.len()).filter(|&qi| self.slots[qi].is_some()).collect();
+        let phases: Vec<(f64, &[(u32, f64)])> = order
+            .iter()
+            .map(|&qi| {
+                let ap = self.slots[qi].as_ref().unwrap();
+                (ap.weight, ap.util.as_slice())
+            })
+            .collect();
+        let mut rates = vec![1.0f64; order.len()];
+        let mut demand = vec![0.0f64; self.n_res];
+        let mut residual = vec![0.0f64; self.n_res];
+        for &(w, util) in &phases {
+            for &(j, u) in util {
+                demand[j as usize] += w * u;
+            }
+        }
+        max_min_rates(&phases, &mut rates, &mut demand, &mut residual);
+        for (i, &qi) in order.iter().enumerate() {
+            let got = self.slots[qi].as_ref().unwrap().rate;
+            let want = rates[i];
+            let tol = 1e-9 * got.abs().max(want.abs());
+            debug_assert!(
+                (got - want).abs() <= tol,
+                "incremental rate diverged from dense oracle: qi {qi} got {got} want {want}"
+            );
+        }
+    }
+}
+
+/// The retained dense reference solver: the old global progressive-filling
+/// *weighted* max-min pass over the full resource vector, kept verbatim as
+/// the debug-assert oracle for the incremental solver (see the module
+/// doc). `phases` is `(weight, util)` per active phase; `demand` arrives
+/// pre-aggregated as `Σ weight x util`; `rates` receives the allocation.
+///
+/// Unlike the component solver, this pass picks its bottleneck *globally*,
+/// interleaving cap-freezes across unrelated components — semantically
+/// identical, bitwise different at the ulp level, which is why the oracle
+/// comparison uses a 1e-9 relative tolerance rather than 0.
+#[cfg(debug_assertions)]
+fn max_min_rates(
+    phases: &[(f64, &[(u32, f64)])],
+    rates: &mut [f64],
+    demand: &mut [f64],
+    residual: &mut [f64],
+) {
+    if phases.is_empty() {
+        return;
+    }
+    let n_res = demand.len();
+    residual.iter_mut().for_each(|r| *r = 1.0);
+    let mut frozen = vec![false; phases.len()];
+    let mut unfrozen = phases.len();
+
+    while unfrozen > 0 {
+        let mut level = f64::INFINITY;
+        let mut bottleneck = usize::MAX;
+        for j in 0..n_res {
+            if demand[j] > UTIL_EPS {
+                let l = residual[j].max(0.0) / demand[j];
+                if l < level {
+                    level = l;
+                    bottleneck = j;
+                }
+            }
+        }
+        if bottleneck == usize::MAX {
+            for (i, r) in rates.iter_mut().enumerate() {
+                if !frozen[i] {
+                    *r = 1.0;
+                }
+            }
+            return;
+        }
+        let mut capped_any = false;
+        for (i, &(w, util)) in phases.iter().enumerate() {
+            if frozen[i] || w * level < 1.0 {
+                continue;
+            }
+            rates[i] = 1.0;
+            frozen[i] = true;
+            unfrozen -= 1;
+            capped_any = true;
+            for &(j, u) in util {
+                residual[j as usize] -= u;
+                demand[j as usize] -= w * u;
+            }
+        }
+        if capped_any {
+            continue;
+        }
+        let mut froze_any = false;
+        for (i, &(w, util)) in phases.iter().enumerate() {
+            if frozen[i] {
+                continue;
+            }
+            if util.iter().any(|&(j, _)| j as usize == bottleneck) {
+                let r = (w * level).min(1.0).max(1e-9);
+                rates[i] = r;
+                frozen[i] = true;
+                unfrozen -= 1;
+                froze_any = true;
+                for &(j, u) in util {
+                    residual[j as usize] -= r * u;
+                    demand[j as usize] -= w * u;
+                }
+            }
+        }
+        debug_assert!(froze_any, "bottleneck had no users");
+        if !froze_any {
+            for (i, r) in rates.iter_mut().enumerate() {
+                if !frozen[i] {
+                    *r = (phases[i].0 * level).min(1.0).max(1e-9);
+                }
+            }
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phase(qi: usize, util: Vec<(u32, f64)>, weight: f64, t: f64, solo: f64) -> ActivePhase {
+        ActivePhase {
+            qi,
+            phase_idx: 0,
+            solo_ns: solo,
+            util,
+            weight,
+            rate: 1.0,
+            anchor_ns: t,
+            remaining_at_anchor: 1.0,
+        }
+    }
+
+    /// Two disjoint components: an event in one must not re-anchor (or
+    /// even report as changed) anything in the other.
+    #[test]
+    fn event_scoped_solve_leaves_disjoint_components_untouched() {
+        let mut s = IncrementalSolver::new(8, 8);
+        let mut changed = Vec::new();
+        // Component A: queries 0,1 share resource 0 at 0.7 each.
+        s.insert(phase(0, vec![(0, 0.7)], 1.0, 0.0, 1e6));
+        s.insert(phase(1, vec![(0, 0.7)], 1.0, 0.0, 1e6));
+        // Component B: query 2 alone on resource 5.
+        s.insert(phase(2, vec![(5, 0.4)], 1.0, 0.0, 1e6));
+        s.solve_event(0.0, false, &mut changed);
+        // A saturates resource 0 (1.4 demand): both throttle to 1/1.4.
+        assert_eq!(changed, vec![0, 1], "B's solo query stays at rate 1.0");
+        let r = s.slot(0).rate;
+        assert!((r - 1.0 / 1.4).abs() < 1e-12, "rate {r}");
+        assert_eq!(s.slot(2).rate, 1.0);
+        // Now query 3 joins B. Re-solving must not touch A at all.
+        s.insert(phase(3, vec![(5, 0.8)], 1.0, 100.0, 1e6));
+        s.solve_event(100.0, false, &mut changed);
+        assert_eq!(changed, vec![2, 3], "A is a different component");
+        assert_eq!(s.slot(0).anchor_ns, 0.0, "A was never re-anchored");
+        assert_eq!(s.slot(0).rate, s.slot(1).rate);
+        // B now saturates: rates are 1/1.2 each.
+        assert!((s.slot(2).rate - 1.0 / 1.2).abs() < 1e-12);
+    }
+
+    /// A departure seeds the resources it used, and the freed capacity
+    /// re-rates the survivors — including a component that SPLITS in two.
+    #[test]
+    fn removal_reaches_split_components() {
+        let mut s = IncrementalSolver::new(8, 8);
+        let mut changed = Vec::new();
+        // Chain: q0 -(r0)- q1 -(r1)- q2. One component through q1.
+        s.insert(phase(0, vec![(0, 0.8)], 1.0, 0.0, 1e6));
+        s.insert(phase(1, vec![(0, 0.8), (1, 0.8)], 1.0, 0.0, 1e6));
+        s.insert(phase(2, vec![(1, 0.8)], 1.0, 0.0, 1e6));
+        s.solve_event(0.0, false, &mut changed);
+        assert_eq!(changed, vec![0, 1, 2]);
+        // q1 leaves: the component splits into {q0} and {q2}, neither of
+        // which contains the other's resource — but both r0 and r1 are
+        // seeds, so both parts re-solve to full rate.
+        s.remove(1);
+        s.solve_event(50.0, false, &mut changed);
+        assert_eq!(changed, vec![0, 2]);
+        assert_eq!(s.slot(0).rate, 1.0);
+        assert_eq!(s.slot(2).rate, 1.0);
+        assert_eq!(s.slot(0).anchor_ns, 50.0, "rate change re-anchors");
+    }
+
+    /// Dense mode re-solves everything but commits nothing new: rates are
+    /// a pure function of component membership, so a full re-solve of an
+    /// unchanged system is a bitwise no-op.
+    #[test]
+    fn dense_resolve_of_unchanged_system_is_a_noop() {
+        let mut s = IncrementalSolver::new(8, 8);
+        let mut changed = Vec::new();
+        s.insert(phase(0, vec![(0, 0.7), (2, 0.3)], 2.0, 0.0, 1e6));
+        s.insert(phase(1, vec![(0, 0.7)], 1.0, 0.0, 1e6));
+        s.insert(phase(2, vec![(5, 0.4)], 1.0, 0.0, 1e6));
+        s.solve_event(0.0, false, &mut changed);
+        let before: Vec<u64> = s.iter_active().map(|ap| ap.rate.to_bits()).collect();
+        s.solve_event(123.0, true, &mut changed);
+        assert!(changed.is_empty(), "unchanged system must not re-anchor");
+        let after: Vec<u64> = s.iter_active().map(|ap| ap.rate.to_bits()).collect();
+        assert_eq!(before, after);
+        assert_eq!(s.slot(0).anchor_ns, 0.0);
+    }
+
+    /// Anchored progress closed forms.
+    #[test]
+    fn anchored_progress_closed_forms() {
+        let ap = phase(0, vec![(0, 0.5)], 1.0, 100.0, 1e6);
+        assert_eq!(ap.remaining_at(100.0), 1.0);
+        assert!((ap.completion_ns() - (100.0 + 1e6)).abs() < 1e-9);
+        let mut half = ap.clone();
+        half.rate = 0.5;
+        assert!((half.completion_ns() - (100.0 + 2e6)).abs() < 1e-9);
+        assert!((half.remaining_at(100.0 + 1e6) - 0.5).abs() < 1e-12);
+    }
+}

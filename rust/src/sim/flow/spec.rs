@@ -1,0 +1,378 @@
+//! Query and admission *specifications*: what callers hand the flow
+//! engine before a run starts.
+//!
+//! This module carries the passive data types — [`Priority`],
+//! [`ShareWeights`], [`QuerySpec`], [`OnFull`], [`Admission`] — split out
+//! of the old monolithic `sim/flow.rs` so the incremental solver
+//! ([`super::solver`]) and the event loop ([`super::runtime`]) stay
+//! focused. Everything here is re-exported at `sim::flow::*`, so callers
+//! are unaffected by the split.
+
+use crate::sim::demand::PhaseDemand;
+use crate::sim::machine::Machine;
+use crate::sim::preempt::PreemptPolicy;
+
+/// Scheduling priority class of a query.
+///
+/// The derived ordering is the admission ordering: a *smaller* variant is
+/// served first (`Interactive < Standard < Batch`), FIFO within a class.
+/// Defined here because the engine's wait queue orders by it; the
+/// coordinator re-exports it as `coordinator::request::Priority`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Latency-sensitive, user-facing.
+    Interactive,
+    /// The default class.
+    #[default]
+    Standard,
+    /// Throughput-oriented background work; first to be shed under
+    /// overload.
+    Batch,
+}
+
+impl Priority {
+    /// All classes, best-served first.
+    pub const ALL: [Priority; 3] = [Priority::Interactive, Priority::Standard, Priority::Batch];
+}
+
+impl std::fmt::Display for Priority {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Priority::Interactive => write!(f, "interactive"),
+            Priority::Standard => write!(f, "standard"),
+            Priority::Batch => write!(f, "batch"),
+        }
+    }
+}
+
+/// Per-priority-class fair-share weights for the progress loop.
+///
+/// Under plain max-min every running query's rate grows uniformly until a
+/// resource saturates; with weights, a query of class `p` grows at
+/// `weights.of(p)` times the uniform fill level (still capped at solo
+/// speed), so an Interactive query receives proportionally more of every
+/// saturated resource than a Batch query sharing it. Flat weights (the
+/// default) reproduce plain max-min exactly.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShareWeights {
+    pub interactive: f64,
+    pub standard: f64,
+    pub batch: f64,
+}
+
+impl Default for ShareWeights {
+    fn default() -> Self {
+        ShareWeights::flat()
+    }
+}
+
+impl ShareWeights {
+    /// Equal shares: plain max-min fairness (the pre-weighting behavior).
+    pub fn flat() -> Self {
+        ShareWeights { interactive: 1.0, standard: 1.0, batch: 1.0 }
+    }
+
+    /// The 4:2:1 preset: Interactive gets four times a Batch query's share
+    /// of every saturated resource, Standard twice.
+    pub fn priority_weighted() -> Self {
+        ShareWeights { interactive: 4.0, standard: 2.0, batch: 1.0 }
+    }
+
+    /// The weight of one priority class.
+    pub fn of(&self, p: Priority) -> f64 {
+        match p {
+            Priority::Interactive => self.interactive,
+            Priority::Standard => self.standard,
+            Priority::Batch => self.batch,
+        }
+    }
+
+    /// All classes weighted equally (any scale): rates degenerate to plain
+    /// max-min.
+    pub fn is_flat(&self) -> bool {
+        self.interactive == self.standard && self.standard == self.batch
+    }
+
+    /// Parse `class=weight,...` (e.g. `interactive=4,standard=2,batch=1`);
+    /// omitted classes keep weight 1.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut w = ShareWeights::flat();
+        for (class, weight) in crate::util::cli::parse_kv_f64_list(spec, "share weights")? {
+            match class {
+                "interactive" => w.interactive = weight,
+                "standard" => w.standard = weight,
+                "batch" => w.batch = weight,
+                other => anyhow::bail!(
+                    "unknown priority class {other:?} (want interactive/standard/batch)"
+                ),
+            }
+        }
+        w.validate()?;
+        Ok(w)
+    }
+
+    /// Weights must be finite and strictly positive (a zero weight would
+    /// starve a running query forever).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for p in Priority::ALL {
+            let w = self.of(p);
+            anyhow::ensure!(
+                w.is_finite() && w > 0.0,
+                "share weight for {p} must be finite and positive, got {w}"
+            );
+        }
+        Ok(())
+    }
+
+    /// Compact `i:s:b` label for reports (e.g. `4:2:1`).
+    pub fn label(&self) -> String {
+        format!("{}:{}:{}", self.interactive, self.standard, self.batch)
+    }
+}
+
+/// One query submitted to the flow engine: an ordered list of phases plus
+/// an arrival time and the admission metadata the engine schedules by.
+#[derive(Debug, Clone)]
+pub struct QuerySpec {
+    /// Caller-chosen identifier (reported back in
+    /// [`super::report::QueryTiming`]).
+    pub id: usize,
+    /// Short label for reports ("bfs", "cc", ...).
+    pub label: &'static str,
+    /// Synchronous phases, executed in order.
+    pub phases: Vec<PhaseDemand>,
+    /// Simulated arrival time (ns).
+    pub arrival_ns: f64,
+    /// Priority class: orders the wait queue and picks shedding victims.
+    pub priority: Priority,
+    /// Optional end-to-end latency budget (ns from arrival). A queued
+    /// query whose deadline expires before it starts is shed rather than
+    /// run uselessly.
+    pub deadline_ns: Option<f64>,
+    /// Thread-context bytes reserved while this query is in flight
+    /// (0 = free). The coordinator fills in each analysis's declared
+    /// footprint; byte-aware admission sums these against
+    /// [`Admission::ctx_capacity_bytes`].
+    pub ctx_bytes: u64,
+}
+
+impl QuerySpec {
+    /// A spec with default admission metadata ([`Priority::Standard`], no
+    /// deadline, zero context footprint).
+    pub fn new(
+        id: usize,
+        label: &'static str,
+        phases: Vec<PhaseDemand>,
+        arrival_ns: f64,
+    ) -> Self {
+        QuerySpec {
+            id,
+            label,
+            phases,
+            arrival_ns,
+            priority: Priority::default(),
+            deadline_ns: None,
+            ctx_bytes: 0,
+        }
+    }
+
+    /// Set the priority class.
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    /// Set a latency deadline (ns from arrival).
+    pub fn with_deadline_ns(mut self, deadline_ns: f64) -> Self {
+        self.deadline_ns = Some(deadline_ns);
+        self
+    }
+
+    /// Set the thread-context reservation (bytes).
+    pub fn with_ctx_bytes(mut self, ctx_bytes: u64) -> Self {
+        self.ctx_bytes = ctx_bytes;
+        self
+    }
+
+    /// Duration of this query if it ran alone on `m` (ns).
+    pub fn solo_ns(&self, m: &Machine) -> f64 {
+        self.phases.iter().map(|p| p.solo_ns(m)).sum()
+    }
+}
+
+/// What to do with an arriving query when the admission limits (in-flight
+/// count or context bytes) are reached.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OnFull {
+    /// Reject the query outright (it appears in
+    /// [`super::report::FlowReport::rejected`]). This is what the §IV-B
+    /// "256 concurrent queries exhausted the memory used for thread
+    /// contexts" failure becomes under admission control.
+    Reject,
+    /// Hold the query in the priority-ordered wait queue and start it when
+    /// capacity frees. Queued queries whose deadline expires before they
+    /// start are shed ([`super::report::FlowReport::shed`]).
+    Queue,
+    /// Queue, but bound the standing wait queue at `max_waiting`: overflow
+    /// sheds the newest entry of the lowest-priority class (Batch work is
+    /// dropped first; an Interactive query is shed only when nothing of a
+    /// lower class is left to drop).
+    Shed {
+        /// Largest standing wait-queue length before shedding kicks in.
+        max_waiting: usize,
+    },
+}
+
+/// Admission policy applied inside the engine's event loop.
+///
+/// The wait queue is priority-ordered (`Interactive < Standard < Batch`,
+/// FIFO within a class) with an aging rule: a query that has waited at
+/// least [`Admission::age_promote_ns`] competes as `Interactive`
+/// regardless of its class, so Batch work is never starved forever —
+/// its wait before reaching the front of the queue is bounded by
+/// `age_promote_ns` plus the backlog that aged before it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Admission {
+    /// Maximum queries simultaneously in flight (None = unlimited).
+    pub max_in_flight: Option<usize>,
+    /// Thread-context byte budget across all in-flight queries (None =
+    /// unlimited). Each query holds [`QuerySpec::ctx_bytes`] while in
+    /// flight; a query whose own footprint exceeds the whole budget is
+    /// rejected at arrival (it could never run).
+    pub ctx_capacity_bytes: Option<u64>,
+    /// Behavior when an arrival cannot start immediately.
+    pub on_full: OnFull,
+    /// Anti-starvation bound (ns): a query waiting at least this long is
+    /// ordered as `Interactive`. `f64::INFINITY` disables aging (strict
+    /// priority).
+    pub age_promote_ns: f64,
+    /// Fair-share weights the progress loop divides bandwidth by (flat =
+    /// plain max-min; see [`ShareWeights`]).
+    pub weights: ShareWeights,
+    /// Checkpoint preemption of running low-priority work under
+    /// Interactive pressure (None = disabled; see
+    /// [`crate::sim::preempt`]). Only meaningful with a queueing
+    /// [`OnFull`] policy — under `Reject` nothing ever waits.
+    pub preempt: Option<PreemptPolicy>,
+}
+
+impl Admission {
+    /// Default anti-starvation bound: 100 ms of simulated wait promotes a
+    /// query to the front class.
+    pub const DEFAULT_AGE_PROMOTE_NS: f64 = 100e6;
+
+    /// No admission control at all.
+    pub fn unlimited() -> Self {
+        Admission {
+            max_in_flight: None,
+            ctx_capacity_bytes: None,
+            on_full: OnFull::Reject,
+            age_promote_ns: f64::INFINITY,
+            weights: ShareWeights::flat(),
+            preempt: None,
+        }
+    }
+
+    /// Count-capped admission (no byte budget), default aging.
+    pub fn capped(max_in_flight: usize, on_full: OnFull) -> Self {
+        Admission {
+            max_in_flight: Some(max_in_flight),
+            ctx_capacity_bytes: None,
+            on_full,
+            age_promote_ns: Admission::DEFAULT_AGE_PROMOTE_NS,
+            weights: ShareWeights::flat(),
+            preempt: None,
+        }
+    }
+
+    /// Byte-budgeted admission (no count cap), default aging.
+    pub fn byte_budget(ctx_capacity_bytes: u64, on_full: OnFull) -> Self {
+        Admission {
+            max_in_flight: None,
+            ctx_capacity_bytes: Some(ctx_capacity_bytes),
+            on_full,
+            age_promote_ns: Admission::DEFAULT_AGE_PROMOTE_NS,
+            weights: ShareWeights::flat(),
+            preempt: None,
+        }
+    }
+
+    /// Override the anti-starvation bound.
+    pub fn with_age_promote_ns(mut self, age_promote_ns: f64) -> Self {
+        self.age_promote_ns = age_promote_ns;
+        self
+    }
+
+    /// Set priority-scaled fair-share weights for the progress loop.
+    pub fn with_weights(mut self, weights: ShareWeights) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    /// Enable checkpoint preemption.
+    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> Self {
+        self.preempt = Some(preempt);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn share_weights_parse_and_validate() {
+        let w = ShareWeights::parse("interactive=4, standard=2, batch=1").unwrap();
+        assert_eq!(w, ShareWeights::priority_weighted());
+        assert!(!w.is_flat());
+        assert_eq!(w.label(), "4:2:1");
+        // Omitted classes default to 1.
+        let w = ShareWeights::parse("interactive=6").unwrap();
+        assert_eq!(w.standard, 1.0);
+        assert_eq!(w.batch, 1.0);
+        assert!(ShareWeights::flat().is_flat());
+        assert!(ShareWeights::parse("realtime=2").is_err());
+        assert!(ShareWeights::parse("batch=0").is_err(), "zero weight starves");
+        assert!(ShareWeights::parse("batch=-1").is_err());
+        assert!(ShareWeights::parse("batch=inf").is_err());
+    }
+
+    /// Every malformed spec is a typed error, not a panic or a silent
+    /// default — the `serve --weights` surface forwards these verbatim.
+    #[test]
+    fn share_weights_parse_error_paths() {
+        // Missing '=' separator / missing value / missing key.
+        assert!(ShareWeights::parse("interactive").is_err());
+        assert!(ShareWeights::parse("interactive=").is_err());
+        assert!(ShareWeights::parse("=4").is_err());
+        // Non-numeric weight.
+        assert!(ShareWeights::parse("interactive=fast").is_err());
+        // NaN is not finite.
+        assert!(ShareWeights::parse("standard=nan").is_err());
+        // One bad entry poisons the whole spec even when others are fine.
+        assert!(ShareWeights::parse("interactive=4,standard=oops").is_err());
+        // Error messages name the offending class for unknown keys.
+        let err = ShareWeights::parse("realtime=2").unwrap_err().to_string();
+        assert!(err.contains("realtime"), "unhelpful error: {err}");
+    }
+
+    /// `validate` rejects each class independently and names it; the
+    /// builders cannot produce these, but deserialized configs can.
+    #[test]
+    fn share_weights_validate_error_paths() {
+        for (w, class) in [
+            (ShareWeights { interactive: 0.0, standard: 1.0, batch: 1.0 }, "interactive"),
+            (ShareWeights { interactive: 1.0, standard: -2.0, batch: 1.0 }, "standard"),
+            (ShareWeights { interactive: 1.0, standard: 1.0, batch: f64::NAN }, "batch"),
+            (
+                ShareWeights { interactive: f64::INFINITY, standard: 1.0, batch: 1.0 },
+                "interactive",
+            ),
+        ] {
+            let err = w.validate().unwrap_err().to_string();
+            assert!(err.contains(class), "error must name {class}: {err}");
+        }
+        assert!(ShareWeights::flat().validate().is_ok());
+        assert!(ShareWeights::priority_weighted().validate().is_ok());
+    }
+}

@@ -34,6 +34,33 @@ impl Machine {
         let mut fabric_rate = Vec::with_capacity(nodes);
         let mut interconnect_rate = Vec::with_capacity(nodes);
         let mut mean_fabric_latency = Vec::with_capacity(nodes);
+        // Mean one-way fabric latency, closed form. Latency between two
+        // nodes depends only on their chassis (same/different base, min of
+        // the two chassis derates — see `MachineConfig::fabric_latency_ns`),
+        // so the mean over all other nodes is a per-chassis quantity:
+        // summing per chassis (O(chassis²) total) instead of per node pair
+        // (O(nodes²)) is what makes thousand-chassis cluster machines —
+        // the host-cost bench's 100k-query fleet — cheap to construct.
+        let n_chassis = nodes / cfg.nodes_per_chassis;
+        let npc = cfg.nodes_per_chassis;
+        let chassis_derate: Vec<f64> =
+            (0..n_chassis).map(|c| cfg.node_derate(c * npc)).collect();
+        let chassis_mean_lat: Vec<f64> = (0..n_chassis)
+            .map(|mc| {
+                if nodes == 1 {
+                    return 0.0;
+                }
+                let dm = chassis_derate[mc];
+                let mut sum = (npc - 1) as f64 * (cfg.fabric.intra_chassis_latency_ns / dm);
+                for (c, &dc) in chassis_derate.iter().enumerate() {
+                    if c != mc {
+                        sum += npc as f64
+                            * (cfg.fabric.inter_chassis_latency_ns / dm.min(dc));
+                    }
+                }
+                sum / (nodes - 1) as f64
+            })
+            .collect();
         for node in 0..nodes {
             let derate = cfg.node_derate(node);
             channel_op_rate.push(cfg.node_channel_op_rate() * derate);
@@ -42,16 +69,7 @@ impl Machine {
             issue_rate.push(cfg.node_issue_rate());
             fabric_rate.push(cfg.fabric.node_link_bytes_per_s * derate);
             interconnect_rate.push(cfg.fabric.interconnect_bytes_per_s * derate);
-            let lat = if nodes == 1 {
-                0.0
-            } else {
-                (0..nodes)
-                    .filter(|&other| other != node)
-                    .map(|other| cfg.fabric_latency_ns(node, other))
-                    .sum::<f64>()
-                    / (nodes - 1) as f64
-            };
-            mean_fabric_latency.push(lat);
+            mean_fabric_latency.push(chassis_mean_lat[cfg.chassis_of(node)]);
         }
         Machine {
             cfg,

@@ -46,7 +46,7 @@ pub mod views;
 pub use cluster::Cluster;
 pub use counters::Counters;
 pub use demand::PhaseDemand;
-pub use flow::{FlowSim, Priority, QueryTiming, ShareWeights};
+pub use flow::{FlowSim, Priority, QueryTiming, ShareWeights, SolverMode};
 pub use ledger::{ContextExhausted, ContextLedger};
 pub use machine::Machine;
 pub use preempt::PreemptPolicy;
