@@ -151,6 +151,26 @@ fn fleet_gate_specs(m: &Machine) -> Vec<QuerySpec> {
     specs
 }
 
+/// The batched-BFS gate scenario (DESIGN.md §Batching): `n` identical
+/// same-epoch single-phase BFS-shaped queries, all at t=0, each demanding
+/// 50% of every channel uniformly (drain `D = 0.5e6 ns`; the solo time
+/// cancels). Unbatched, all 32 share every channel and finish together at
+/// `32 x D = 16e6 ns` — mean latency 0.016 s. The coordinator batcher at
+/// width 16 fuses them into **2** engine queries of the SAME single-phase
+/// shape (the MS-BFS fusion win: one shared sweep per group, not 16),
+/// which finish at `2 x D = 1e6 ns`; every member's latency is fused
+/// finish − its own arrival = 0.001 s, a 16x mean-latency improvement
+/// (ratio 0.0625 — gated in-bench to stay ≤ 0.5, the PR acceptance
+/// bound, and pinned by `ci/BENCH_baseline.json`).
+fn batched_gate_specs(m: &Machine, n: usize) -> Vec<QuerySpec> {
+    (0..n)
+        .map(|id| {
+            let phase = PhaseDemand::uniform_channel_load(m, 0.5, 1e6);
+            QuerySpec::new(id, "bfs", vec![phase], 0.0)
+        })
+        .collect()
+}
+
 /// Host wall-clock per *simulated event* at three concurrency levels —
 /// the PR 7 tentpole axis. The workload weak-scales: 64 queries per
 /// pathfinder-8 chassis of a flattened fleet ([`Cluster`]), each query
@@ -312,6 +332,15 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         &fspecs,
         Admission::unlimited().with_weights(ShareWeights::priority_weighted()),
     );
+    // Batched-BFS scenario (see [`batched_gate_specs`]): 32 same-epoch
+    // BFS unbatched vs the width-16 batcher's 2 fused sweeps. Both fused
+    // groups are width 16, so the engine's mean over the 2 fused timings
+    // IS the per-member mean (each member's latency = its group's finish
+    // − its own arrival, and every arrival is 0).
+    let bspecs = batched_gate_specs(&m, 32);
+    let bunbatched = sim.run_admitted(&bspecs, Admission::unlimited());
+    let bfused_specs = batched_gate_specs(&m, 2);
+    let bfused = sim.run_admitted(&bfused_specs, Admission::unlimited());
     // Guard the gate's own validity: the closed forms assume every spec
     // completes. label/class means return 0.0 when nothing completed,
     // which the relative check would wave through as an "improvement" —
@@ -323,10 +352,23 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
         ("analyses/weighted", &aweighted, aspecs.len()),
         ("fleet/flat", &fflat, fspecs.len()),
         ("fleet/weighted", &fweighted, fspecs.len()),
+        ("batched/unbatched", &bunbatched, bspecs.len()),
+        ("batched/fused", &bfused, bfused_specs.len()),
     ] {
         let done = rep.timings.iter().filter(|t| t.completed()).count();
         assert_eq!(done, len, "{name}: every gate spec must complete");
     }
+    // The PR acceptance bound, enforced in-bench so the gate fails even
+    // without a baseline file: fusing 32 same-epoch BFS at width 16 must
+    // at least halve the mean latency (the closed forms give 16x).
+    let batched_ratio = bfused.mean_latency_s() / bunbatched.mean_latency_s();
+    assert!(
+        batched_ratio <= 0.5,
+        "batched gate: fused mean latency {} s must be <= 0.5x the unbatched {} s \
+         (ratio {batched_ratio})",
+        bfused.mean_latency_s(),
+        bunbatched.mean_latency_s()
+    );
     assert_eq!(
         mflat.label_latencies_s("mutate").len(),
         8,
@@ -380,6 +422,9 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
             "fleet/weighted/cc_mean_latency_s",
             fweighted.label_mean_latency_s("cc"),
         ),
+        ("batched/unbatched/mean_latency_s", bunbatched.mean_latency_s()),
+        ("batched/fused/mean_latency_s", bfused.mean_latency_s()),
+        ("batched/latency_ratio", batched_ratio),
     ]
 }
 

@@ -98,6 +98,32 @@ pub trait Analysis: std::fmt::Debug + Send + Sync {
         None
     }
 
+    /// Source *set* of a rooted traversal — the batch-aware
+    /// generalization of [`Analysis::source_vertex`] the fleet router
+    /// keys on. A single-source analysis returns its one source; a fused
+    /// batch ([`crate::alg::msbfs::BatchedAnalysis`]) returns every
+    /// member's source so the router models ONE shared level-synchronous
+    /// sweep over the whole set. `None` = not source-rooted.
+    fn source_set(&self) -> Option<Vec<u32>> {
+        self.source_vertex().map(|s| vec![s])
+    }
+
+    /// Batching compatibility key, or `None` (the default) for an
+    /// analysis that must never be fused. Two queued instances whose keys
+    /// are equal `Some`s — *on the same epoch* — may be coalesced by the
+    /// coordinator batcher into one [`crate::alg::msbfs::BatchedAnalysis`]
+    /// running a single shared edge sweep for up to
+    /// [`crate::alg::msbfs::MAX_BATCH_SOURCES`] sources.
+    ///
+    /// Opting in is a contract (docs/ANALYSES.md §Batching): the instance
+    /// must expose [`Analysis::source_vertex`], and its per-source
+    /// semantics must be what the fused kernel computes (BFS levels
+    /// today), which [`Analysis::validate`] pins — the fused result is
+    /// checked against every member's own oracle.
+    fn batch_key(&self) -> Option<String> {
+        None
+    }
+
     /// [`Analysis::run_offset`] at the canonical placement.
     fn run(&self, g: GraphView<'_>, m: &Machine) -> QueryOutput {
         self.run_offset(g, m, 0)
@@ -208,6 +234,19 @@ mod tests {
         assert!(Cc.source_vertex().is_none());
         assert!(PageRank.source_vertex().is_none());
         assert!(TriCount.source_vertex().is_none());
+        // source_set defaults to the singleton of source_vertex.
+        assert_eq!(Bfs { src: 9 }.source_set(), Some(vec![9]));
+        assert!(Cc.source_set().is_none());
+    }
+
+    #[test]
+    fn only_bfs_opts_into_batching() {
+        assert_eq!(Bfs { src: 0 }.batch_key().as_deref(), Some("bfs"));
+        assert!(Cc.batch_key().is_none());
+        assert!(Sssp { src: 0 }.batch_key().is_none());
+        assert!(KHop::new(0, 2).batch_key().is_none());
+        assert!(PageRank.batch_key().is_none());
+        assert!(TriCount.batch_key().is_none());
     }
 
     #[test]

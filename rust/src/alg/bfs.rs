@@ -59,6 +59,12 @@ impl Analysis for Bfs {
     fn source_vertex(&self) -> Option<u32> {
         Some(self.src)
     }
+
+    /// BFS is the batchable kind: same-epoch BFS instances fuse into one
+    /// shared multi-source edge sweep ([`crate::alg::msbfs`]).
+    fn batch_key(&self) -> Option<String> {
+        Some(self.label().to_string())
+    }
 }
 
 /// Result of one functional+demand BFS execution.

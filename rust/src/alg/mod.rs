@@ -21,6 +21,10 @@
 //!   migrate, so its wedge scans pay the migrations every other kernel
 //!   avoids).
 //!
+//! [`msbfs`] is the batched form of BFS: up to 64 same-epoch sources fused
+//! into one shared edge sweep with bit-parallel u64 frontier words, the
+//! kernel behind the coordinator batcher (DESIGN.md §Batching).
+//!
 //! The [`analysis`] module defines the [`Analysis`] trait every workload
 //! implements and the coordinator schedules; [`registry`] maps class
 //! labels to factories so new analyses plug in without touching the
@@ -34,6 +38,7 @@ pub mod analysis;
 pub mod bfs;
 pub mod cc;
 pub mod khop;
+pub mod msbfs;
 pub mod oracle;
 pub mod pagerank;
 pub mod registry;
@@ -42,6 +47,7 @@ pub mod tricount;
 
 pub use analysis::{Analysis, QueryOutput};
 pub use bfs::{bfs_run, bfs_run_capped, bfs_run_offset, Bfs, BfsRun};
+pub use msbfs::{msbfs_run, msbfs_run_offset, BatchedAnalysis, MsBfsRun, MAX_BATCH_SOURCES};
 pub use cc::{cc_run, cc_run_offset, Cc, CcRun};
 pub use khop::{khop_run, khop_run_offset, KHop, KhopRun};
 pub use pagerank::{pagerank_run, pagerank_run_offset, PageRank, PageRankRun};

@@ -1,0 +1,481 @@
+//! Multi-source BFS: up to [`MAX_BATCH_SOURCES`] breadth-first searches
+//! fused into **one shared edge sweep** with bit-parallel u64 frontier /
+//! visited words (the ROADMAP "Concurrent-query batching" item; the MS-BFS
+//! idea of Then et al., re-priced for the Pathfinder's migratory-thread
+//! cost model).
+//!
+//! The paper's headline workload is 100–750 *independent* concurrent BFS
+//! queries over one resident graph. When many same-epoch traversals are in
+//! flight, most of their per-level work is identical: launching a worker on
+//! a frontier vertex's home node, reading its record, streaming its edge
+//! block. The fused kernel does that once per vertex per level for the
+//! whole batch — source membership rides along as one bit per source in a
+//! u64 word — so k queries' worth of migrations collapses to roughly one
+//! traversal's. What canNOT be shared is per-source state: each member
+//! query still owns its level array, so every newly-discovered
+//! `(source, vertex)` pair pays its own MSP `remote_min` relaxation into
+//! that member's stripe-rotated array.
+//!
+//! Per level, per **union-frontier** vertex `u` (any frontier bit set):
+//!
+//! * one worker launch on u's home node (migration + 64 context-placement
+//!   fabric bytes + spawn instructions) — charged once for the whole
+//!   batch, not once per source;
+//! * one channel op reading u's record + frontier word, and one edge-block
+//!   stream — again once for the batch;
+//! * per scanned edge `(u, v)`: one **MSP RMW** ORing u's 64-bit frontier
+//!   word into v's next-frontier word at v's home (the bit-parallel
+//!   analogue of the tuned BFS's unconditional remote write — checking
+//!   first would migrate, so it never does), 16 fabric bytes when remote;
+//! * per **newly-set bit** (source s discovers v): one MSP `remote_min`
+//!   writing `levels_s[v]`, node-local at v's home (the discovery is
+//!   resolved where the frontier word lives), charged in member s's
+//!   stripe-rotated frame so concurrent batches heat different channels.
+//!
+//! [`BatchedAnalysis`] adapts a fused batch back into the open
+//! [`Analysis`] API: the coordinator schedules it as ONE engine query
+//! (concatenated per-source values, summed context footprint), and the
+//! batching layer (`coordinator::batch`) fans per-source results and
+//! latencies back out to the member requests' own records.
+
+use crate::alg::analysis::{Analysis, QueryOutput};
+use crate::graph::view::{GraphView, NeighborScratch};
+use crate::sim::demand::{DemandBuilder, PhaseDemand};
+use crate::sim::machine::Machine;
+use std::sync::Arc;
+
+/// Widest fusable batch: one bit per source in the u64 frontier words.
+pub const MAX_BATCH_SOURCES: usize = 64;
+
+/// Result of one fused multi-source BFS execution.
+#[derive(Debug, Clone)]
+pub struct MsBfsRun {
+    /// Per-source per-vertex BFS level, -1 if unreachable: `levels[s][v]`
+    /// is bit-identical to an independent single-source BFS from
+    /// `sources[s]`.
+    pub levels: Vec<Vec<i64>>,
+    /// One fused demand vector per executed level of the shared sweep.
+    pub phases: Vec<PhaseDemand>,
+    /// Union-frontier size per level (vertices with ANY bit set — the
+    /// count the batch pays migrations for).
+    pub frontier_sizes: Vec<usize>,
+    /// Directed edges scanned per level of the shared sweep.
+    pub level_edges: Vec<usize>,
+}
+
+/// [`msbfs_run_offset`] at the canonical placement.
+pub fn msbfs_run<'a>(g: impl Into<GraphView<'a>>, m: &Machine, sources: &[u32]) -> MsBfsRun {
+    msbfs_run_offset(g, m, sources, 0)
+}
+
+/// Run one fused multi-source BFS over `sources` (≤ 64), producing
+/// per-source levels plus the fused per-level demand.
+///
+/// `stripe_offset` is the *batch's* own-array placement offset; member
+/// `s`'s level array is additionally rotated by `s`, mirroring what the
+/// members would have used had they run unfused at consecutive stripe
+/// offsets.
+pub fn msbfs_run_offset<'a>(
+    g: impl Into<GraphView<'a>>,
+    m: &Machine,
+    sources: &[u32],
+    stripe_offset: usize,
+) -> MsBfsRun {
+    assert!(
+        !sources.is_empty() && sources.len() <= MAX_BATCH_SOURCES,
+        "msbfs batch width must be 1..={MAX_BATCH_SOURCES}, got {}",
+        sources.len()
+    );
+    let g: GraphView<'a> = g.into();
+    let layout = m.layout;
+    let nodes = m.nodes();
+    let channels = m.cfg.channels_per_node;
+    let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+    let cfg = &m.cfg;
+
+    let n = g.n();
+    let k = sources.len();
+    let mut levels = vec![vec![-1i64; n]; k];
+    let mut seen = vec![0u64; n];
+    let mut frontier_mask = vec![0u64; n];
+    let mut active: Vec<u32> = Vec::new();
+    for (s, &src) in sources.iter().enumerate() {
+        levels[s][src as usize] = 0;
+        seen[src as usize] |= 1u64 << s;
+        if frontier_mask[src as usize] == 0 {
+            active.push(src);
+        }
+        frontier_mask[src as usize] |= 1u64 << s;
+    }
+    active.sort_unstable();
+
+    let mut depth = 0i64;
+    let mut phases = Vec::new();
+    let mut frontier_sizes = Vec::new();
+    let mut level_edges = Vec::new();
+    let mut scratch = NeighborScratch::default();
+
+    while !active.is_empty() {
+        let mut b = DemandBuilder::new(nodes, channels);
+        let mut next_mask = vec![0u64; n];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut edges_scanned = 0usize;
+        let mut ops = 0.0f64;
+
+        for &u in &active {
+            let un = layout.node_of(u);
+            // ONE worker launch per union-frontier vertex — the whole
+            // batch shares it (the fusion win).
+            b.migration(un, 1.0);
+            b.fabric_bytes(un, 64.0); // context placement
+            b.instructions(un, cfg.spawn_instr);
+            // Vertex record + 64-bit frontier word, read once per batch.
+            b.channel_op(un, layout.channel_of(u), 1.0);
+            ops += 1.0;
+            let fmask = frontier_mask[u as usize];
+            let nbrs = g.neighbors(u, &mut scratch);
+            let deg = nbrs.len();
+            b.stream_bytes(un, GraphView::edge_block_bytes_for(deg) as f64);
+            edges_scanned += deg;
+            b.instructions(un, deg as f64 * cfg.instr_per_edge);
+            for &v in nbrs {
+                // Bit-parallel analogue of the tuned BFS's unconditional
+                // remote write: one MSP RMW ORs u's frontier word into
+                // v's next-frontier word at v's home (checking first
+                // would migrate; §III trades the check for a write). One
+                // RMW carries all k sources.
+                let vn = layout.node_of(v);
+                b.msp_op(vn, (layout.channel_of(v) + stripe_offset) % channels, 1.0);
+                ops += 1.0;
+                if vn != un {
+                    b.fabric_bytes(un, 16.0);
+                }
+                let new = fmask & !seen[v as usize];
+                if new != 0 {
+                    if next_mask[v as usize] == 0 {
+                        touched.push(v);
+                    }
+                    next_mask[v as usize] |= new;
+                    seen[v as usize] |= new;
+                    let vc = layout.channel_of(v);
+                    let mut bits = new;
+                    while bits != 0 {
+                        let s = bits.trailing_zeros() as usize;
+                        bits &= bits - 1;
+                        levels[s][v as usize] = depth + 1;
+                        // Per-(source, vertex) relaxation: member s's own
+                        // level array cannot be shared — one MSP
+                        // remote_min at v's home, in s's rotated frame.
+                        // Node-local: the discovery is resolved where the
+                        // frontier word lives, so no fabric message.
+                        b.msp_op(vn, (vc + stripe_offset + s) % channels, 1.0);
+                        ops += 1.0;
+                    }
+                }
+            }
+        }
+
+        // Grainsize-split workers, like the single-source kernel.
+        b.parallelism(ops.min(contexts_total));
+
+        phases.push(b.finish());
+        frontier_sizes.push(active.len());
+        level_edges.push(edges_scanned);
+        touched.sort_unstable();
+        active = touched;
+        std::mem::swap(&mut frontier_mask, &mut next_mask);
+        depth += 1;
+    }
+
+    MsBfsRun { levels, phases, frontier_sizes, level_edges }
+}
+
+/// A fused batch of compatible analyses, schedulable as ONE engine query.
+///
+/// This is the adapter half of the batching API redesign: the coordinator
+/// batcher ([`crate::coordinator::batch`]) coalesces queued requests whose
+/// [`Analysis::batch_key`] matches (same kind, same epoch) into one
+/// `BatchedAnalysis`, which runs the fused multi-source kernel and carries
+/// the fused demand. Per-source results fan back out through
+/// [`BatchedAnalysis::member_values`]; per-source latency/SLO accounting
+/// stays on the member requests' own records
+/// ([`crate::coordinator::RunReport`]).
+///
+/// The fused execution is the level-synchronous MS-BFS kernel, so only
+/// analyses whose per-source semantics are BFS levels should opt into
+/// batching today (see docs/ANALYSES.md §Batching); a mismatched opt-in
+/// fails loudly in [`Analysis::validate`], which checks every member
+/// against its OWN oracle.
+#[derive(Debug, Clone)]
+pub struct BatchedAnalysis {
+    members: Vec<Arc<dyn Analysis>>,
+    sources: Vec<u32>,
+    key: String,
+}
+
+impl BatchedAnalysis {
+    /// Fuse `members` into one batch. Fails unless every member returns
+    /// the same `Some` [`Analysis::batch_key`], exposes a source vertex,
+    /// and the batch fits in [`MAX_BATCH_SOURCES`].
+    pub fn fuse(members: Vec<Arc<dyn Analysis>>) -> anyhow::Result<Self> {
+        anyhow::ensure!(!members.is_empty(), "cannot fuse an empty batch");
+        anyhow::ensure!(
+            members.len() <= MAX_BATCH_SOURCES,
+            "batch width {} exceeds the {MAX_BATCH_SOURCES}-bit frontier word",
+            members.len()
+        );
+        let key = members[0]
+            .batch_key()
+            .ok_or_else(|| anyhow::anyhow!("{} is not batchable", members[0].describe()))?;
+        let mut sources = Vec::with_capacity(members.len());
+        for a in &members {
+            anyhow::ensure!(
+                a.batch_key().as_deref() == Some(key.as_str()),
+                "incompatible batch member {} (key {:?}, batch key {key:?})",
+                a.describe(),
+                a.batch_key()
+            );
+            let src = a.source_vertex().ok_or_else(|| {
+                anyhow::anyhow!("batchable analysis {} exposes no source vertex", a.describe())
+            })?;
+            sources.push(src);
+        }
+        Ok(BatchedAnalysis { members, sources, key })
+    }
+
+    /// Number of fused member queries.
+    pub fn width(&self) -> usize {
+        self.members.len()
+    }
+
+    /// The batch's source set, in member order.
+    pub fn sources(&self) -> &[u32] {
+        &self.sources
+    }
+
+    /// The fused member analyses, in member order.
+    pub fn members(&self) -> &[Arc<dyn Analysis>] {
+        &self.members
+    }
+
+    /// The shared [`Analysis::batch_key`] of every member.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// Split a fused value vector (concatenated per-source results) back
+    /// into per-member slices.
+    pub fn member_values<'v>(&self, values: &'v [i64]) -> anyhow::Result<Vec<&'v [i64]>> {
+        let k = self.width();
+        anyhow::ensure!(
+            k > 0 && values.len() % k == 0,
+            "fused value vector of {} does not split into {k} members",
+            values.len()
+        );
+        Ok(values.chunks_exact(values.len() / k).collect())
+    }
+}
+
+impl Analysis for BatchedAnalysis {
+    fn label(&self) -> &'static str {
+        "msbfs"
+    }
+
+    fn describe(&self) -> String {
+        format!("msbfs(key={}, w={}, srcs={:?})", self.key, self.width(), self.sources)
+    }
+
+    fn run_offset(&self, g: GraphView<'_>, m: &Machine, stripe_offset: usize) -> QueryOutput {
+        let run = msbfs_run_offset(g, m, &self.sources, stripe_offset);
+        let mut values = Vec::with_capacity(self.width() * g.n());
+        for lv in run.levels {
+            values.extend(lv);
+        }
+        QueryOutput { label: self.label(), values, phases: run.phases }
+    }
+
+    /// Every member validates its own slice against its OWN oracle — the
+    /// fused run must be bit-identical to each member's independent run.
+    fn validate(&self, g: GraphView<'_>, values: &[i64]) -> anyhow::Result<()> {
+        for (a, slice) in self.members.iter().zip(self.member_values(values)?) {
+            a.validate(g, slice)
+                .map_err(|e| anyhow::anyhow!("batch member {}: {e}", a.describe()))?;
+        }
+        Ok(())
+    }
+
+    /// Σ per-source frontiers: the batch reserves every member's context
+    /// footprint — fusing shares the sweep, not the members' memory.
+    fn ctx_mem_bytes(&self, g: GraphView<'_>, m: &Machine) -> Option<u64> {
+        Some(
+            self.members
+                .iter()
+                .map(|a| a.ctx_mem_bytes(g, m).unwrap_or(m.cfg.ctx_bytes_per_query))
+                .sum(),
+        )
+    }
+
+    /// A fused batch is never re-batched.
+    fn batch_key(&self) -> Option<String> {
+        None
+    }
+
+    /// Not a single-source traversal; the fleet router uses
+    /// [`Analysis::source_set`] instead.
+    fn source_vertex(&self) -> Option<u32> {
+        None
+    }
+
+    fn source_set(&self) -> Option<Vec<u32>> {
+        Some(self.sources.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::bfs::{bfs_run_offset, Bfs};
+    use crate::alg::oracle;
+    use crate::config::machine::MachineConfig;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::csr::Csr;
+    use crate::graph::rmat::Rmat;
+
+    fn m8() -> Machine {
+        Machine::new(MachineConfig::pathfinder_8())
+    }
+
+    fn rmat(scale: u32, seed: u64) -> Csr {
+        let mut cfg = GraphConfig::with_scale(scale);
+        cfg.seed = seed;
+        let r = Rmat::new(cfg);
+        build_undirected_csr(1 << scale, &r.edges())
+    }
+
+    #[test]
+    fn fused_levels_bit_match_every_single_source_oracle() {
+        let g = rmat(10, 7);
+        let m = m8();
+        let sources = [0u32, 13, 500, 900, 77];
+        let run = msbfs_run(&g, &m, &sources);
+        assert_eq!(run.levels.len(), sources.len());
+        for (s, &src) in sources.iter().enumerate() {
+            oracle::check_bfs(&g, src, &run.levels[s]).unwrap();
+        }
+    }
+
+    #[test]
+    fn duplicate_sources_share_one_frontier_bit_path() {
+        let g = rmat(9, 3);
+        let m = m8();
+        let run = msbfs_run(&g, &m, &[5, 5]);
+        assert_eq!(run.levels[0], run.levels[1]);
+        oracle::check_bfs(&g, 5, &run.levels[0]).unwrap();
+    }
+
+    #[test]
+    fn migrations_are_one_sweeps_worth_not_k() {
+        let g = rmat(10, 11);
+        let m = m8();
+        let sources = [1u32, 2, 3, 4, 5, 6, 7, 8];
+        let fused = msbfs_run(&g, &m, &sources);
+        let fused_migs: f64 = fused.phases.iter().map(|p| p.total_migrations()).sum();
+        let indiv_migs: f64 = sources
+            .iter()
+            .map(|&s| {
+                bfs_run_offset(&g, &m, s, 0)
+                    .phases
+                    .iter()
+                    .map(|p| p.total_migrations())
+                    .sum::<f64>()
+            })
+            .sum();
+        // Migrations = Σ per level of the UNION frontier size.
+        let union: usize = fused.frontier_sizes.iter().sum();
+        assert_eq!(fused_migs, union as f64);
+        // On a connected-ish R-MAT the union frontiers overlap heavily:
+        // fusing 8 sources must cost far less than 8 independent sweeps.
+        assert!(
+            fused_migs < indiv_migs / 2.0,
+            "fused {fused_migs} vs independent {indiv_migs}"
+        );
+    }
+
+    #[test]
+    fn per_source_relaxations_are_charged_as_msp_rmws() {
+        // Path 0-1-2: sources {0, 2}. Union frontiers: {0,2}, {1}, {0,2}.
+        let g = build_undirected_csr(3, &[(0, 1), (1, 2)]);
+        let m = m8();
+        let run = msbfs_run(&g, &m, &[0, 2]);
+        assert_eq!(run.frontier_sizes, vec![2, 1, 2]);
+        // Edge-word RMWs = edges scanned; relaxation RMWs = newly-set
+        // bits = Σ_s (reached_s - 1) = 2 + 2.
+        let edges: usize = run.level_edges.iter().sum();
+        let msp: f64 = run.phases.iter().map(|p| p.msp_ops.iter().sum::<f64>()).sum();
+        assert_eq!(msp, edges as f64 + 4.0);
+    }
+
+    #[test]
+    fn width_one_matches_single_source_levels() {
+        let g = rmat(9, 5);
+        let m = m8();
+        let run = msbfs_run(&g, &m, &[42]);
+        let single = bfs_run_offset(&g, &m, 42, 0);
+        assert_eq!(run.levels[0], single.levels);
+        assert_eq!(run.frontier_sizes, single.frontier_sizes);
+        assert_eq!(run.level_edges, single.level_edges);
+    }
+
+    #[test]
+    fn batched_analysis_runs_validates_and_fans_out() {
+        let g = rmat(10, 9);
+        let m = m8();
+        let members: Vec<Arc<dyn Analysis>> = vec![
+            Arc::new(Bfs { src: 3 }),
+            Arc::new(Bfs { src: 700 }),
+            Arc::new(Bfs { src: 41 }),
+        ];
+        let b = BatchedAnalysis::fuse(members).unwrap();
+        assert_eq!(b.width(), 3);
+        assert_eq!(b.sources(), &[3, 700, 41]);
+        assert_eq!(b.source_set().unwrap(), vec![3, 700, 41]);
+        assert!(b.source_vertex().is_none());
+        assert!(b.batch_key().is_none(), "a fused batch is never re-batched");
+        let out = b.run(g.view(), &m);
+        assert_eq!(out.values.len(), 3 * g.n());
+        b.validate(g.view(), &out.values).unwrap();
+        let slices = b.member_values(&out.values).unwrap();
+        oracle::check_bfs(&g, 700, slices[1]).unwrap();
+        // Context footprint sums the members'.
+        assert_eq!(
+            b.ctx_mem_bytes(g.view(), &m),
+            Some(3 * m.cfg.ctx_bytes_per_query)
+        );
+    }
+
+    #[test]
+    fn fusing_incompatible_or_sourceless_members_fails() {
+        use crate::alg::cc::Cc;
+        let no_key: Vec<Arc<dyn Analysis>> = vec![Arc::new(Cc)];
+        assert!(BatchedAnalysis::fuse(no_key).is_err());
+        let too_wide: Vec<Arc<dyn Analysis>> =
+            (0..65).map(|s| Arc::new(Bfs { src: s }) as Arc<dyn Analysis>).collect();
+        assert!(BatchedAnalysis::fuse(too_wide).is_err());
+        let mixed: Vec<Arc<dyn Analysis>> = vec![Arc::new(Bfs { src: 1 }), Arc::new(Cc)];
+        assert!(BatchedAnalysis::fuse(mixed).is_err());
+    }
+
+    #[test]
+    fn fused_sweep_respects_overlays() {
+        use crate::graph::delta::DeltaOverlay;
+        let g = build_undirected_csr(4, &[(0, 1), (1, 2), (2, 3)]);
+        let ov = [Arc::new(DeltaOverlay::from_effective(&[(0, 3)], &[(1, 2)]))];
+        let v = GraphView::overlaid(&g, &ov);
+        let m = m8();
+        let run = msbfs_run(v, &m, &[0, 2]);
+        for (s, &src) in [0u32, 2].iter().enumerate() {
+            assert_eq!(run.levels[s], oracle::bfs_levels(v, src), "src {src}");
+        }
+    }
+}

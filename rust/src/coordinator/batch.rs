@@ -1,0 +1,357 @@
+//! The coordinator batcher: coalesce compatible queued requests into
+//! fused multi-source engine queries (DESIGN.md §Batching).
+//!
+//! The fusion rule: two requests fuse iff they declare the same `Some`
+//! [`Analysis::batch_key`], were prepared against the **same graph
+//! epoch**, arrive within [`BatchConfig::window_ns`] of the group's first
+//! member, and the group stays within [`BatchConfig::width`] (≤
+//! [`MAX_BATCH_SOURCES`]). Requests whose analysis declares no batch key
+//! pass through untouched, one spec each — batching off is byte-identical
+//! to the pre-batching coordinator.
+//!
+//! A fused group becomes ONE engine query ([`BatchedAnalysis`]):
+//!
+//! * **arrival** = the last member's arrival (the batcher waits, at most
+//!   `window`, for the group to fill);
+//! * **priority** = the best (lowest-ordinal) member class — a batch
+//!   carrying one Interactive member is Interactive work; cross-priority
+//!   fusion trades the slower members' class up, never the faster's down;
+//! * **deadline** = the tightest member budget re-based to the fused
+//!   arrival (`min over members of (member arrival + deadline) − fused
+//!   arrival`), so admission sheds the batch no later than it would have
+//!   shed its most impatient member;
+//! * **context bytes** = Σ member footprints (fusing shares the sweep,
+//!   not the members' per-query state).
+//!
+//! Per-member accounting survives fusion: the plan keeps an original →
+//! fused index map, and [`crate::coordinator::RunReport::from_flow_grouped`]
+//! fans the fused timing back out so every member request keeps its own
+//! arrival, latency, deadline and SLO record.
+
+use crate::alg::msbfs::{BatchedAnalysis, MAX_BATCH_SOURCES};
+use crate::alg::Analysis;
+use crate::coordinator::request::QueryRequest;
+use std::sync::Arc;
+
+/// Configuration of the batcher (`serve --batch width=W,window=T`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchConfig {
+    /// Maximum fused batch width (1..=[`MAX_BATCH_SOURCES`]).
+    pub width: usize,
+    /// Maximum spread (ns) between a group's first and last member
+    /// arrival: how long the batcher will hold a group open to fill it.
+    pub window_ns: f64,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        // Width 16 on a 1 ms window: wide enough to matter on the paper's
+        // query rates, short enough that the held-back head query's extra
+        // wait stays in interactive territory.
+        BatchConfig { width: 16, window_ns: 1e6 }
+    }
+}
+
+impl BatchConfig {
+    /// Parse `width=W[,window=T]` (window in **seconds**, like the other
+    /// CLI time knobs); an empty spec takes the defaults.
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut cfg = BatchConfig::default();
+        for piece in spec.split(',') {
+            let piece = piece.trim();
+            if piece.is_empty() {
+                continue;
+            }
+            let (key, value) = piece
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("batch spec piece {piece:?} is not key=value"))?;
+            let value = value.trim();
+            match key.trim() {
+                "width" => {
+                    cfg.width = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("batch width={value:?} is not a count"))?
+                }
+                "window" => {
+                    let s: f64 = value
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("batch window={value:?} is not seconds"))?;
+                    cfg.window_ns = s * 1e9;
+                }
+                other => anyhow::bail!("unknown batch key {other:?} (want width/window)"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            (1..=MAX_BATCH_SOURCES).contains(&self.width),
+            "batch width must be 1..={MAX_BATCH_SOURCES}, got {}",
+            self.width
+        );
+        anyhow::ensure!(
+            self.window_ns.is_finite() && self.window_ns >= 0.0,
+            "batch window must be a non-negative time, got {} ns",
+            self.window_ns
+        );
+        Ok(())
+    }
+
+    /// Compact spec string for report headers (round-trips through
+    /// [`BatchConfig::parse`]).
+    pub fn label(&self) -> String {
+        format!("width={},window={}", self.width, self.window_ns * 1e-9)
+    }
+}
+
+/// A batching plan over one request list: the fused request per group plus
+/// the original → fused index map the grouped report needs.
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    fused: Vec<QueryRequest>,
+    /// `group_of[i]` = index into `fused` serving original request `i`.
+    group_of: Vec<usize>,
+    /// Original indices per fused request (member order = source order).
+    groups: Vec<Vec<usize>>,
+}
+
+impl BatchPlan {
+    /// Plan batches over `requests` in arrival order. `epochs`, when
+    /// given, carries the graph epoch each request was admitted against
+    /// (one per request); requests at different epochs never fuse. With
+    /// `epochs` absent every request shares epoch 0 (the static-graph
+    /// paths).
+    pub fn build(
+        requests: &[QueryRequest],
+        epochs: Option<&[u64]>,
+        cfg: &BatchConfig,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        if let Some(e) = epochs {
+            anyhow::ensure!(
+                e.len() == requests.len(),
+                "epoch list ({}) does not match request list ({})",
+                e.len(),
+                requests.len()
+            );
+        }
+        // Scan in arrival order (stable on ties: submission order).
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by(|&a, &b| {
+            requests[a]
+                .arrival_ns
+                .partial_cmp(&requests[b].arrival_ns)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+
+        // One open group per (batch key, epoch); closed when full, when
+        // the window from its head arrival is exceeded, or at end.
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let mut open: std::collections::HashMap<(String, u64), usize> =
+            std::collections::HashMap::new();
+        for &i in &order {
+            let req = &requests[i];
+            let epoch = epochs.map_or(0, |e| e[i]);
+            match req.analysis.batch_key() {
+                None => groups.push(vec![i]),
+                Some(key) => {
+                    let slot = open.entry((key, epoch));
+                    match slot {
+                        std::collections::hash_map::Entry::Occupied(mut o) => {
+                            let gi = *o.get();
+                            let head = groups[gi][0];
+                            let fits = groups[gi].len() < cfg.width
+                                && req.arrival_ns - requests[head].arrival_ns <= cfg.window_ns;
+                            if fits {
+                                groups[gi].push(i);
+                            } else {
+                                groups.push(vec![i]);
+                                o.insert(groups.len() - 1);
+                            }
+                        }
+                        std::collections::hash_map::Entry::Vacant(v) => {
+                            groups.push(vec![i]);
+                            v.insert(groups.len() - 1);
+                        }
+                    }
+                }
+            }
+        }
+        // Fused specs run in group-open order (= arrival order of heads),
+        // matching how a live batcher would dispatch them.
+        let mut fused = Vec::with_capacity(groups.len());
+        let mut group_of = vec![0usize; requests.len()];
+        for (gi, members) in groups.iter().enumerate() {
+            for &i in members {
+                group_of[i] = gi;
+            }
+            fused.push(fuse_group(requests, members)?);
+        }
+        Ok(BatchPlan { fused, group_of, groups })
+    }
+
+    /// The fused request list, one engine query per group.
+    pub fn fused(&self) -> &[QueryRequest] {
+        &self.fused
+    }
+
+    /// Original request index → fused request index.
+    pub fn group_of(&self) -> &[usize] {
+        &self.group_of
+    }
+
+    /// Original indices per fused request, in member (= source) order.
+    pub fn groups(&self) -> &[Vec<usize>] {
+        &self.groups
+    }
+
+    /// Number of fused engine queries.
+    pub fn len(&self) -> usize {
+        self.fused.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fused.is_empty()
+    }
+
+    /// Width of the widest fused group.
+    pub fn max_width(&self) -> usize {
+        self.groups.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+/// Fuse one group of request indices into a single [`QueryRequest`]
+/// (module docs: arrival = last member, priority = best member, deadline =
+/// tightest member re-based). A singleton group passes through as a clone
+/// of the original — no wrapper, no demand change.
+pub fn fuse_group(requests: &[QueryRequest], members: &[usize]) -> anyhow::Result<QueryRequest> {
+    anyhow::ensure!(!members.is_empty(), "cannot fuse an empty group");
+    if members.len() == 1 {
+        return Ok(requests[members[0]].clone());
+    }
+    let analyses: Vec<Arc<dyn Analysis>> =
+        members.iter().map(|&i| Arc::clone(&requests[i].analysis)).collect();
+    let batched = BatchedAnalysis::fuse(analyses)?;
+    let arrival_ns =
+        members.iter().map(|&i| requests[i].arrival_ns).fold(f64::NEG_INFINITY, f64::max);
+    let priority = members.iter().map(|&i| requests[i].priority).min().expect("non-empty");
+    let deadline_ns = members
+        .iter()
+        .filter_map(|&i| {
+            let r = &requests[i];
+            r.deadline_ns.map(|d| (r.arrival_ns + d - arrival_ns).max(0.0))
+        })
+        .fold(None, |acc: Option<f64>, d| Some(acc.map_or(d, |a| a.min(d))));
+    let mut req = QueryRequest::from_arc(Arc::new(batched)).at(arrival_ns).with_priority(priority);
+    if let Some(d) = deadline_ns {
+        req = req.with_deadline_ns(d);
+    }
+    Ok(req)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::alg::{Bfs, Cc};
+    use crate::coordinator::request::Priority;
+
+    fn bfs_at(src: u32, arrival_ns: f64) -> QueryRequest {
+        QueryRequest::new(Bfs { src }).at(arrival_ns)
+    }
+
+    #[test]
+    fn config_parses_and_round_trips() {
+        let c = BatchConfig::parse("width=8, window=0.002").unwrap();
+        assert_eq!(c.width, 8);
+        assert_eq!(c.window_ns, 2e6);
+        assert_eq!(c.label(), "width=8,window=0.002");
+        let d = BatchConfig::parse("").unwrap();
+        assert_eq!(d, BatchConfig::default());
+        assert!(BatchConfig::parse("width=0").is_err());
+        assert!(BatchConfig::parse("width=65").is_err());
+        assert!(BatchConfig::parse("window=-1").is_err());
+        assert!(BatchConfig::parse("depth=3").is_err());
+        assert!(BatchConfig::parse("width").is_err());
+    }
+
+    #[test]
+    fn same_key_same_epoch_requests_fuse_up_to_width() {
+        let reqs: Vec<QueryRequest> = (0..5).map(|s| bfs_at(s, s as f64)).collect();
+        let cfg = BatchConfig { width: 4, window_ns: 1e6 };
+        let plan = BatchPlan::build(&reqs, None, &cfg).unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan.groups()[0], vec![0, 1, 2, 3]);
+        assert_eq!(plan.groups()[1], vec![4]);
+        assert_eq!(plan.group_of(), &[0, 0, 0, 0, 1]);
+        assert_eq!(plan.max_width(), 4);
+        // The fused request schedules at the LAST member's arrival.
+        assert_eq!(plan.fused()[0].arrival_ns, 3.0);
+        assert_eq!(plan.fused()[0].label(), "msbfs");
+        // The trailing singleton passes through unwrapped.
+        assert_eq!(plan.fused()[1].label(), "bfs");
+    }
+
+    #[test]
+    fn window_closes_a_group() {
+        let reqs =
+            vec![bfs_at(0, 0.0), bfs_at(1, 5e5), bfs_at(2, 2e6), bfs_at(3, 2.1e6)];
+        let cfg = BatchConfig { width: 16, window_ns: 1e6 };
+        let plan = BatchPlan::build(&reqs, None, &cfg).unwrap();
+        assert_eq!(plan.groups(), &[vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn unbatchable_and_cross_epoch_requests_stay_solo() {
+        let reqs = vec![
+            bfs_at(0, 0.0),
+            QueryRequest::new(Cc).at(1.0),
+            bfs_at(1, 2.0),
+            bfs_at(2, 3.0),
+        ];
+        // Epochs: the two batchable BFS land on different epochs.
+        let plan = BatchPlan::build(
+            &reqs,
+            Some(&[0, 0, 1, 1]),
+            &BatchConfig::default(),
+        )
+        .unwrap();
+        // bfs@epoch0 solo, cc solo, the two bfs@epoch1 fuse.
+        assert_eq!(plan.groups(), &[vec![0], vec![1], vec![2, 3]]);
+        assert_eq!(plan.fused()[1].label(), "cc");
+        assert_eq!(plan.fused()[2].label(), "msbfs");
+    }
+
+    #[test]
+    fn fused_priority_and_deadline_take_the_tightest_member() {
+        let reqs = vec![
+            bfs_at(0, 0.0).with_priority(Priority::Batch).with_deadline_ns(5e6),
+            bfs_at(1, 1e5).with_priority(Priority::Interactive),
+            bfs_at(2, 2e5).with_deadline_ns(3e6),
+        ];
+        let fused = fuse_group(&reqs, &[0, 1, 2]).unwrap();
+        assert_eq!(fused.arrival_ns, 2e5);
+        assert_eq!(fused.priority, Priority::Interactive);
+        // Member budgets re-based to the fused arrival: min(0 + 5e6,
+        // 2e5 + 3e6) − 2e5 = 3e6.
+        assert_eq!(fused.deadline_ns, Some(3e6));
+    }
+
+    #[test]
+    fn plan_rejects_mismatched_epoch_list() {
+        let reqs = vec![bfs_at(0, 0.0)];
+        assert!(BatchPlan::build(&reqs, Some(&[0, 0]), &BatchConfig::default()).is_err());
+    }
+
+    #[test]
+    fn arrival_order_not_submission_order_drives_grouping() {
+        // Submitted out of order: the scan still groups by arrival.
+        let reqs = vec![bfs_at(0, 2e6), bfs_at(1, 0.0), bfs_at(2, 1e5)];
+        let cfg = BatchConfig { width: 16, window_ns: 1e6 };
+        let plan = BatchPlan::build(&reqs, None, &cfg).unwrap();
+        assert_eq!(plan.groups(), &[vec![1, 2], vec![0]]);
+        assert_eq!(plan.group_of(), &[1, 0, 0]);
+    }
+}

@@ -196,10 +196,16 @@ impl Fleet {
     }
 
     /// Prepare one request against the fleet: route to a replica set,
-    /// price with the rooted-traversal or scatter model, and bind the
-    /// admission metadata — the fleet counterpart of
+    /// price with the rooted-traversal, fused-batch or scatter model, and
+    /// bind the admission metadata — the fleet counterpart of
     /// [`crate::coordinator::Coordinator::prepare_one`] (no demand cache;
     /// module docs explain why).
+    ///
+    /// Routing generalizes from a single source vertex to the analysis's
+    /// [`Analysis::source_set`]: a one-element set is the classic rooted
+    /// traversal (byte-identical to the pre-batching router), a wider set
+    /// is a fused batch priced by [`Fleet::batched_traversal_phases`],
+    /// and `None` scatters as before.
     pub fn prepare_one(
         &self,
         view: GraphView<'_>,
@@ -209,8 +215,11 @@ impl Fleet {
     ) -> QuerySpec {
         let a = req.analysis.as_ref();
         let replica = self.replica_of(id);
-        let phases = match a.source_vertex() {
-            Some(src) => self.traversal_phases(view, src, replica, stripe_offset),
+        let phases = match a.source_set() {
+            Some(srcs) if srcs.len() == 1 => {
+                self.traversal_phases(view, srcs[0], replica, stripe_offset)
+            }
+            Some(srcs) => self.batched_traversal_phases(view, &srcs, replica, stripe_offset),
             None => self.scatter_phases(view, a, replica, stripe_offset),
         };
         QuerySpec {
@@ -298,6 +307,114 @@ impl Fleet {
             b.parallelism(ops.min(contexts_total));
             phases.push(b.finish());
             frontier = next;
+        }
+        phases
+    }
+
+    /// Distributed form of the fused multi-source sweep
+    /// ([`crate::alg::msbfs`]): one level-synchronous bit-parallel
+    /// traversal over the whole batch, placed on each vertex's owner
+    /// chassis of replica set `replica`. Per union-frontier vertex the
+    /// batch pays ONE worker launch / record read / edge-block stream;
+    /// per scanned edge one MSP RMW ORs the frontier word into the
+    /// head's — shipped over the fleet interconnect when the edge crosses
+    /// shards, the intra-machine fabric otherwise; per newly-set
+    /// `(source, vertex)` bit one node-local MSP `remote_min` relaxation
+    /// in that member's stripe-rotated frame. A width-1 batch routes
+    /// through [`Fleet::traversal_phases`] instead (the
+    /// [`Fleet::prepare_one`] dispatch), keeping the classic path
+    /// byte-identical.
+    pub fn batched_traversal_phases(
+        &self,
+        view: GraphView<'_>,
+        sources: &[u32],
+        replica: usize,
+        stripe_offset: usize,
+    ) -> Vec<PhaseDemand> {
+        let m = self.machine();
+        let lay = self.cluster.chassis_layout();
+        let nodes = m.nodes();
+        let channels = m.cfg.channels_per_node;
+        let contexts_total = (nodes * m.cfg.contexts_per_node()) as f64;
+        let cfg = &m.cfg;
+        let n = view.n();
+
+        let mut seen = vec![0u64; n];
+        let mut frontier_mask = vec![0u64; n];
+        let mut active: Vec<u32> = Vec::new();
+        for (s, &src) in sources.iter().enumerate() {
+            if (src as usize) < n {
+                seen[src as usize] |= 1u64 << s;
+                if frontier_mask[src as usize] == 0 {
+                    active.push(src);
+                }
+                frontier_mask[src as usize] |= 1u64 << s;
+            }
+        }
+        active.sort_unstable();
+        if active.is_empty() {
+            return vec![PhaseDemand::zero(nodes, channels)];
+        }
+
+        let mut phases = Vec::new();
+        let mut scratch = NeighborScratch::default();
+        while !active.is_empty() {
+            let mut b = DemandBuilder::new(nodes, channels);
+            let mut next_mask = vec![0u64; n];
+            let mut touched: Vec<u32> = Vec::new();
+            let mut ops = 0.0f64;
+            for &u in &active {
+                let su = self.partition.owner_of(u);
+                let un = self.cluster.vertex_node(self.cluster.chassis_of(su, replica), u);
+                // One launch + record/frontier-word read + edge-block
+                // stream for the whole batch, on u's owner chassis.
+                b.migration(un, 1.0);
+                b.fabric_bytes(un, 64.0);
+                b.instructions(un, cfg.spawn_instr);
+                b.channel_op(un, lay.channel_of(u), 1.0);
+                ops += 1.0;
+                let fmask = frontier_mask[u as usize];
+                let nbrs = view.neighbors(u, &mut scratch);
+                let deg = nbrs.len();
+                b.stream_bytes(un, GraphView::edge_block_bytes_for(deg) as f64);
+                b.instructions(un, deg as f64 * cfg.instr_per_edge);
+                for &v in nbrs {
+                    let sv = self.partition.owner_of(v);
+                    let vn = self.cluster.vertex_node(self.cluster.chassis_of(sv, replica), v);
+                    // One MSP RMW carries the whole batch's frontier word.
+                    b.msp_op(vn, (lay.channel_of(v) + stripe_offset) % channels, 1.0);
+                    ops += 1.0;
+                    if sv != su {
+                        b.interconnect_bytes(un, INTERCONNECT_MSG_BYTES);
+                    } else if vn != un {
+                        b.fabric_bytes(un, INTERCONNECT_MSG_BYTES);
+                    }
+                    let new = fmask & !seen[v as usize];
+                    if new != 0 {
+                        if next_mask[v as usize] == 0 {
+                            touched.push(v);
+                        }
+                        next_mask[v as usize] |= new;
+                        seen[v as usize] |= new;
+                        let vc = lay.channel_of(v);
+                        let mut bits = new;
+                        while bits != 0 {
+                            let s = bits.trailing_zeros() as usize;
+                            bits &= bits - 1;
+                            // Per-(source, vertex) relaxation, node-local
+                            // at v's home (the discovery is resolved
+                            // where the frontier word lives).
+                            b.msp_op(vn, (vc + stripe_offset + s) % channels, 1.0);
+                            ops += 1.0;
+                        }
+                    }
+                }
+            }
+            b.parallelism(ops.min(contexts_total));
+            phases.push(b.finish());
+            touched.sort_unstable();
+            active = touched;
+            std::mem::swap(&mut frontier_mask, &mut next_mask);
         }
         phases
     }
@@ -673,6 +790,57 @@ mod tests {
         // Ingest == the single-machine memory-side ingest model.
         let upd = vec![EdgeUpdate::insert(1, 9), EdgeUpdate::delete(0, 1)];
         assert_eq!(f.ingest_phase(&upd), PhaseDemand::ingest_batch(m, &upd));
+    }
+
+    /// A 1x1 fleet's fused sweep IS the single-machine multi-source
+    /// kernel, phase by phase — and `prepare_one` routes a fused batch to
+    /// it through `source_set()` while width-1 work keeps the old path.
+    #[test]
+    fn fleet_of_one_batched_sweep_matches_msbfs() {
+        use crate::alg::msbfs::{msbfs_run_offset, BatchedAnalysis};
+        use std::sync::Arc;
+
+        let g = ring_with_hub(24);
+        let f = fleet(1, 1, &g);
+        let m = f.machine();
+        let sources = [3u32, 11, 0];
+        let fleet_phases = f.batched_traversal_phases(g.view(), &sources, 0, 5);
+        let solo = msbfs_run_offset(g.view(), m, &sources, 5);
+        assert_eq!(fleet_phases, solo.phases);
+        // Routing: a fused batch request is priced by the batched sweep.
+        let members: Vec<Arc<dyn Analysis>> = sources
+            .iter()
+            .map(|&s| Arc::new(crate::alg::bfs::Bfs { src: s }) as Arc<dyn Analysis>)
+            .collect();
+        let req = QueryRequest::from_arc(Arc::new(BatchedAnalysis::fuse(members).unwrap()));
+        let spec = f.prepare_one(g.view(), &req, 0, 5);
+        assert_eq!(spec.label, "msbfs");
+        assert_eq!(spec.phases, solo.phases);
+        assert_eq!(spec.ctx_bytes, 3 * m.cfg.ctx_bytes_per_query);
+    }
+
+    /// On a sharded fleet the fused sweep ships cross-shard frontier
+    /// words over the interconnect — and pays migrations for the UNION
+    /// frontier, not per member.
+    #[test]
+    fn batched_sweep_shards_pay_interconnect_once_per_edge() {
+        let g = ring_with_hub(24);
+        let f = fleet(3, 1, &g);
+        let sources = [0u32, 5, 9, 13];
+        let phases = f.batched_traversal_phases(g.view(), &sources, 0, 0);
+        let migs: f64 = phases.iter().map(|p| p.total_migrations()).sum();
+        let indiv: f64 = sources
+            .iter()
+            .map(|&s| {
+                f.traversal_phases(g.view(), s, 0, 0)
+                    .iter()
+                    .map(|p| p.total_migrations())
+                    .sum::<f64>()
+            })
+            .sum();
+        assert!(migs < indiv, "fused {migs} vs independent {indiv}");
+        let inter: f64 = phases.iter().map(|p| p.total_interconnect_bytes()).sum();
+        assert!(inter > 0.0, "a cut ring must ship frontier words");
     }
 
     #[test]

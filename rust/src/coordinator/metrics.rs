@@ -165,7 +165,9 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Build from a flow-engine report.
+    /// Build from a flow-engine report (one timing per request — the
+    /// unbatched 1:1 case, delegating to [`RunReport::from_flow_grouped`]
+    /// with the identity map).
     pub fn from_flow(
         policy: impl Into<String>,
         machine: &Machine,
@@ -173,31 +175,56 @@ impl RunReport {
         flow: &FlowReport,
     ) -> Self {
         assert_eq!(requests.len(), flow.timings.len());
+        let identity: Vec<usize> = (0..requests.len()).collect();
+        Self::from_flow_grouped(policy, machine, requests, &identity, flow)
+    }
+
+    /// Build from a flow-engine report where requests were **fused** into
+    /// fewer engine queries (DESIGN.md §Batching): `group_of[i]` names the
+    /// timing that served original request `i`. Every member request gets
+    /// its OWN record — its own label, declared priority, deadline, and
+    /// arrival — while start/finish/admitted-as come from the fused
+    /// timing, so a member's latency is `fused finish − member arrival`
+    /// (the wait for the batch window is inside it) and a shed or
+    /// preempted batch disposes every member identically. The member
+    /// latencies therefore partition exactly under [`Outcome`] accounting,
+    /// which the batching tests pin.
+    pub fn from_flow_grouped(
+        policy: impl Into<String>,
+        machine: &Machine,
+        requests: &[QueryRequest],
+        group_of: &[usize],
+        flow: &FlowReport,
+    ) -> Self {
+        assert_eq!(requests.len(), group_of.len());
         let shed: std::collections::HashSet<usize> = flow.shed.iter().copied().collect();
         let preempted: std::collections::HashSet<usize> = flow.preempted.iter().copied().collect();
-        let records = flow
-            .timings
+        let records = requests
             .iter()
-            .zip(requests)
-            .map(|(t, req)| QueryRecord {
-                id: t.id,
-                label: req.label(),
-                priority: req.priority,
-                admitted_as: t.admitted_as,
-                deadline_s: req.deadline_ns.map(|d| d * 1e-9),
-                latency_s: t.latency_ns() * 1e-9,
-                arrival_s: t.arrival_ns * 1e-9,
-                start_s: t.start_ns * 1e-9,
-                finish_s: t.finish_ns * 1e-9,
-                outcome: if preempted.contains(&t.id) {
-                    Outcome::Preempted { resumed: t.completed() }
-                } else if t.completed() {
-                    Outcome::Completed
-                } else if shed.contains(&t.id) {
-                    Outcome::Shed
-                } else {
-                    Outcome::Rejected
-                },
+            .zip(group_of)
+            .enumerate()
+            .map(|(i, (req, &gi))| {
+                let t = &flow.timings[gi];
+                QueryRecord {
+                    id: i,
+                    label: req.label(),
+                    priority: req.priority,
+                    admitted_as: t.admitted_as,
+                    deadline_s: req.deadline_ns.map(|d| d * 1e-9),
+                    latency_s: (t.finish_ns - req.arrival_ns) * 1e-9,
+                    arrival_s: req.arrival_ns * 1e-9,
+                    start_s: t.start_ns * 1e-9,
+                    finish_s: t.finish_ns * 1e-9,
+                    outcome: if preempted.contains(&t.id) {
+                        Outcome::Preempted { resumed: t.completed() }
+                    } else if t.completed() {
+                        Outcome::Completed
+                    } else if shed.contains(&t.id) {
+                        Outcome::Shed
+                    } else {
+                        Outcome::Rejected
+                    },
+                }
             })
             .collect();
         let mean_channel_utilization = flow.counters.mean_channel_utilization(machine);
@@ -555,6 +582,70 @@ mod tests {
         let m = machine();
         let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
         assert_eq!(rep.labels(), vec!["bfs", "cc"]);
+    }
+
+    /// Batched fan-out: members of a fused timing keep their own labels,
+    /// arrivals and deadlines; latency = fused finish − member arrival;
+    /// a shed fused query sheds every member.
+    #[test]
+    fn grouped_fan_out_keeps_per_member_records() {
+        // Three requests served by two timings: [0, 1] fused, [2] solo.
+        let timings = vec![
+            QueryTiming {
+                id: 0,
+                label: "msbfs",
+                arrival_ns: 1e9,
+                start_ns: 1e9,
+                finish_ns: 3e9,
+                phases: 4,
+                priority: Priority::Standard,
+                admitted_as: Priority::Standard,
+            },
+            QueryTiming {
+                id: 1,
+                label: "bfs",
+                arrival_ns: 2e9,
+                start_ns: f64::NAN,
+                finish_ns: f64::NAN,
+                phases: 0,
+                priority: Priority::Standard,
+                admitted_as: Priority::Standard,
+            },
+        ];
+        let flow = FlowReport {
+            timings,
+            makespan_ns: 3e9,
+            counters: Counters::new(8),
+            peak_concurrency: 1,
+            rejected: vec![],
+            shed: vec![1],
+            peak_ctx_bytes: 0,
+            preempted: vec![],
+            parks: 0,
+            resumes: 0,
+            weights: crate::sim::flow::ShareWeights::flat(),
+            events: 0,
+        };
+        let requests = vec![
+            QueryRequest::new(Bfs { src: 1 }).at(0.0).with_deadline_ns(9e9),
+            QueryRequest::new(Bfs { src: 2 }).at(1e9),
+            QueryRequest::new(Bfs { src: 3 }).at(2e9),
+        ];
+        let m = machine();
+        let rep = RunReport::from_flow_grouped("batched", &m, &requests, &[0, 0, 1], &flow);
+        assert_eq!(rep.records.len(), 3, "one record per MEMBER, not per timing");
+        // Member 0 arrived at 0 s, the fused query finished at 3 s: its
+        // latency includes the 1 s batch-window wait.
+        assert_eq!(rep.records[0].latency_s, 3.0);
+        assert_eq!(rep.records[1].latency_s, 2.0);
+        assert_eq!(rep.records[0].label, "bfs", "member label, not the fused msbfs");
+        assert_eq!(rep.records[0].deadline_s, Some(9.0));
+        assert_eq!(rep.records[0].arrival_s, 0.0);
+        // The solo timing was shed: its one member records Shed.
+        assert_eq!(rep.records[2].outcome, Outcome::Shed);
+        assert_eq!(rep.completed(), 2);
+        assert_eq!(rep.sheds(), 1);
+        assert_eq!(rep.completed() + rep.sheds() + rep.rejections(), 3);
     }
 
     #[test]

@@ -13,6 +13,11 @@
 //! * [`admission`] — byte-exact thread-context memory accounting; the
 //!   §IV-B 256-queries-on-8-nodes exhaustion becomes a typed rejection, a
 //!   priority-ordered wait, or overload shedding (Batch work first);
+//! * [`batch`] — the batcher (`serve --batch`): compatible queued
+//!   requests (same [`crate::alg::Analysis::batch_key`], same epoch,
+//!   within a width/window budget) fuse into ONE multi-source engine
+//!   query sharing a single edge sweep ([`crate::alg::msbfs`]), while
+//!   every member keeps its own latency/SLO record (DESIGN.md §Batching);
 //! * [`scheduler`] — executes a request batch under a policy (sequential /
 //!   concurrent / capped-concurrent) on the flow engine, caching and
 //!   rotating demand per analysis kind where instances are identical;
@@ -37,6 +42,7 @@
 //!   epoch (DESIGN.md §Fleet).
 
 pub mod admission;
+pub mod batch;
 pub mod fleet;
 pub mod metrics;
 pub mod mutation;
@@ -46,6 +52,7 @@ pub mod scheduler;
 pub mod service;
 
 pub use admission::{ContextExhausted, ContextLedger};
+pub use batch::{BatchConfig, BatchPlan};
 pub use crate::sim::flow::ShareWeights;
 pub use fleet::{Fleet, FleetConfig, FleetStats, ReplicaSet};
 pub use crate::sim::preempt::PreemptPolicy;

@@ -1,6 +1,6 @@
 //! Workload planning: concrete request lists from workload descriptions.
 
-use crate::alg::{Bfs, Cc, KHop, PageRank, Sssp, TriCount};
+use crate::alg::{AnalysisRegistry, Bfs, Cc, KHop, PageRank, Sssp, TriCount};
 use crate::config::workload::MixPoint;
 use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
@@ -39,6 +39,32 @@ pub fn pagerank_queries(k: usize) -> Vec<QueryRequest> {
 /// `k` triangle-counting requests (source-free, demand-cacheable).
 pub fn tricount_queries(k: usize) -> Vec<QueryRequest> {
     (0..k).map(|_| QueryRequest::new(TriCount)).collect()
+}
+
+/// `k` requests of the registry analysis `label`: a sourced analysis
+/// draws unique pseudorandom non-isolated sources ([`bfs_sources`]); a
+/// source-free one repeats its single instance. The registry-driven
+/// form of the per-analysis helpers above — `run --analysis` resolves
+/// every builtin through this one function, with no per-analysis CLI
+/// code.
+pub fn registry_queries(
+    g: &Csr,
+    reg: &AnalysisRegistry,
+    label: &str,
+    k: usize,
+    seed: u64,
+) -> anyhow::Result<Vec<QueryRequest>> {
+    // Probe whether the class is rooted (the source argument of a
+    // source-free factory is ignored, so 0 is safe either way).
+    let probe = reg.build(label, 0)?;
+    if probe.source_vertex().is_some() {
+        bfs_sources(g, k, seed)
+            .into_iter()
+            .map(|src| Ok(QueryRequest::from_arc(reg.build(label, src)?)))
+            .collect()
+    } else {
+        Ok((0..k).map(|_| QueryRequest::from_arc(std::sync::Arc::clone(&probe))).collect())
+    }
 }
 
 /// A Table-II style mix: `mix.bfs` BFS requests + `mix.cc` connected
@@ -169,6 +195,22 @@ mod tests {
         srcs.sort_unstable();
         srcs.dedup();
         assert_eq!(srcs.len(), 64);
+    }
+
+    /// `registry_queries` is the registry-driven form of the per-class
+    /// helpers: sourced classes draw the exact same source sequence, and
+    /// source-free classes repeat their single instance.
+    #[test]
+    fn registry_queries_match_per_class_helpers() {
+        let g = g();
+        let reg = AnalysisRegistry::builtin();
+        let via_reg = registry_queries(&g, &reg, "bfs", 8, 7).unwrap();
+        assert_eq!(srcs_of(&via_reg), srcs_of(&bfs_queries(&g, 8, 7)));
+        let via_reg = registry_queries(&g, &reg, "sssp", 8, 7).unwrap();
+        assert_eq!(srcs_of(&via_reg), srcs_of(&sssp_queries(&g, 8, 7)));
+        let cc = registry_queries(&g, &reg, "cc", 3, 7).unwrap();
+        assert_eq!(srcs_of(&cc), srcs_of(&cc_queries(3)));
+        assert!(registry_queries(&g, &reg, "betweenness", 1, 7).is_err());
     }
 
     /// Regression (API migration): `mix_queries` keeps its composition and

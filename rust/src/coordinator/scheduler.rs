@@ -12,6 +12,7 @@
 
 use crate::alg::Analysis;
 use crate::coordinator::admission::ContextLedger;
+use crate::coordinator::batch::{BatchConfig, BatchPlan};
 use crate::coordinator::request::QueryRequest;
 use crate::graph::csr::Csr;
 use crate::graph::view::GraphView;
@@ -145,22 +146,35 @@ impl<'g> Coordinator<'g> {
         ContextLedger::new(&self.machine.cfg)
     }
 
-    /// Build engine-ready specs for a request batch: functional execution +
-    /// demand emission, stripe offset = position in the batch, arrivals,
-    /// priority, deadline and declared context footprint taken from each
-    /// request. Cacheable analyses hit the per-kind demand cache and are
-    /// rotated instead of re-executed.
-    pub fn prepare(&self, requests: &[QueryRequest]) -> Vec<QuerySpec> {
+    /// THE epoch-aware preparation entry point: build engine-ready specs
+    /// for a request batch against an explicit view/epoch snapshot.
+    /// Request `i` gets id and stripe offset `base_id + i`; arrivals,
+    /// priority, deadline and declared context footprint are taken from
+    /// each request. Cacheable analyses hit the per-kind demand cache
+    /// (epoch 0 only) and are rotated instead of re-executed.
+    ///
+    /// The static-graph callers pass `(self.view(), 0, requests, 0)`; the
+    /// mutation lane prepares each arrival separately against its pinned
+    /// epoch through [`Coordinator::prepare_one`], the single-request
+    /// form this delegates to.
+    pub fn prepare(
+        &self,
+        view: GraphView<'_>,
+        epoch: u64,
+        requests: &[QueryRequest],
+        base_id: usize,
+    ) -> Vec<QuerySpec> {
         requests
             .iter()
             .enumerate()
-            .map(|(i, req)| self.prepare_one(self.view(), 0, req, i, i))
+            .map(|(i, req)| self.prepare_one(view, epoch, req, base_id + i, base_id + i))
             .collect()
     }
 
-    /// Build one engine-ready spec against an explicit epoch snapshot —
-    /// the mutation lane's path (DESIGN.md §Mutation): the service pins an
-    /// epoch per arrival and prepares the query against that exact view.
+    /// Single-request form of [`Coordinator::prepare`] — the mutation
+    /// lane's path (DESIGN.md §Mutation): the service pins an epoch per
+    /// arrival and prepares the query against that exact view, with
+    /// non-contiguous ids from the merged timeline.
     ///
     /// The demand cache serves **epoch 0 only** (the coordinator's own
     /// immutable graph), keeping static-graph runs byte-identical to the
@@ -206,24 +220,62 @@ impl<'g> Coordinator<'g> {
         self.run(&requests, policy)
     }
 
+    /// The batching-aware submission path (DESIGN.md §Batching): coalesce
+    /// compatible requests per `batch` into fused multi-source engine
+    /// queries, run the fused plan under `policy`, and fan per-member
+    /// latency/outcome accounting back out — the report has one record
+    /// per ORIGINAL request. With nothing fusable (or `width = 1`) this
+    /// degenerates to [`Coordinator::submit`] exactly.
+    pub fn submit_batched(
+        &self,
+        requests: Vec<QueryRequest>,
+        policy: Policy,
+        batch: &BatchConfig,
+    ) -> anyhow::Result<RunReport> {
+        let plan = BatchPlan::build(&requests, None, batch)?;
+        let specs = self.prepare(self.view(), 0, plan.fused(), 0);
+        self.run_specs_grouped(&requests, plan.group_of(), plan.fused(), &specs, policy)
+    }
+
     /// Execute `requests` under `policy` and report.
     pub fn run(&self, requests: &[QueryRequest], policy: Policy) -> anyhow::Result<RunReport> {
-        let specs = self.prepare(requests);
+        let specs = self.prepare(self.view(), 0, requests, 0);
         self.run_specs(requests, &specs, policy)
     }
 
     /// Execute pre-prepared specs (lets the bench harness prepare once and
-    /// run many sample points).
+    /// run many sample points). One spec per request — the unbatched 1:1
+    /// case of [`Coordinator::run_specs_grouped`].
     pub fn run_specs(
         &self,
         requests: &[QueryRequest],
         specs: &[QuerySpec],
         policy: Policy,
     ) -> anyhow::Result<RunReport> {
+        let identity: Vec<usize> = (0..requests.len()).collect();
+        self.run_specs_grouped(requests, &identity, requests, specs, policy)
+    }
+
+    /// Execute a (possibly fused) spec list under `policy` and fan the
+    /// results back out to the original requests. `fused` and `specs` run
+    /// 1:1 in the engine; `group_of[i]` names the spec serving original
+    /// request `i` (identity when nothing fused). Admission pre-checks
+    /// run against the FUSED footprints — the batch is what admission
+    /// actually holds in flight.
+    pub fn run_specs_grouped(
+        &self,
+        requests: &[QueryRequest],
+        group_of: &[usize],
+        fused: &[QueryRequest],
+        specs: &[QuerySpec],
+        policy: Policy,
+    ) -> anyhow::Result<RunReport> {
+        assert_eq!(fused.len(), specs.len());
+        assert_eq!(requests.len(), group_of.len());
         let flow = match policy {
             Policy::Sequential => self.sim.run_sequential(specs),
             Policy::Concurrent => {
-                let demand = self.ctx_demand_bytes(requests);
+                let demand = self.ctx_demand_bytes(fused);
                 let cap = self.ctx_capacity_bytes();
                 anyhow::ensure!(
                     demand <= cap,
@@ -258,10 +310,11 @@ impl<'g> Coordinator<'g> {
                 self.sim.run_admitted(specs, adm)
             }
         };
-        Ok(RunReport::from_flow(
+        Ok(RunReport::from_flow_grouped(
             policy.label(self.ctx_capacity_bytes()),
             &self.machine,
             requests,
+            group_of,
             &flow,
         ))
     }
@@ -332,7 +385,7 @@ mod tests {
         let c = coord(&g);
         let qs: Vec<QueryRequest> =
             (0..3).map(|_| QueryRequest::new(Cc)).collect();
-        let specs = c.prepare(&qs);
+        let specs = c.prepare(c.view(), 0, &qs, 0);
         // All three share phase counts; channels rotated per instance.
         assert_eq!(specs[0].phases.len(), specs[1].phases.len());
         assert_eq!(
@@ -395,8 +448,38 @@ mod tests {
         let c = coord(&g);
         let mut qs = planner::bfs_queries(&g, 3, 2);
         planner::assign_arrivals(&mut qs, &[0.0, 1e9, 2e9]);
-        let specs = c.prepare(&qs);
+        let specs = c.prepare(c.view(), 0, &qs, 0);
         assert_eq!(specs[2].arrival_ns, 2e9);
+    }
+
+    /// The batching-aware submission path: compatible same-arrival BFS
+    /// fuse into one engine query, the report fans back out to one record
+    /// per member, and the fused run beats the unbatched one.
+    #[test]
+    fn submit_batched_fuses_and_fans_out() {
+        let g = rmat(10);
+        let c = coord(&g);
+        let qs = planner::bfs_queries(&g, 8, 42);
+        let batch = BatchConfig { width: 8, window_ns: 1e9 };
+        let rep = c.submit_batched(qs.clone(), Policy::admitted(OnFull::Queue), &batch).unwrap();
+        assert_eq!(rep.records.len(), 8, "one record per MEMBER");
+        assert_eq!(rep.completed(), 8);
+        assert!(rep.records.iter().all(|r| r.label == "bfs"), "member labels survive fusion");
+        // All members rode one engine query: identical finish instants.
+        let f0 = rep.records[0].finish_s;
+        assert!(rep.records.iter().all(|r| r.finish_s == f0));
+        let unbatched = c.run(&qs, Policy::admitted(OnFull::Queue)).unwrap();
+        assert!(
+            rep.mean_latency_s() < unbatched.mean_latency_s(),
+            "fused {} vs unbatched {}",
+            rep.mean_latency_s(),
+            unbatched.mean_latency_s()
+        );
+        // Width 1 degenerates to the plain submission path exactly.
+        let solo_cfg = BatchConfig { width: 1, window_ns: 1e9 };
+        let solo = c.submit_batched(qs.clone(), Policy::admitted(OnFull::Queue), &solo_cfg).unwrap();
+        assert_eq!(solo.mean_latency_s(), unbatched.mean_latency_s());
+        assert_eq!(solo.makespan_s, unbatched.makespan_s);
     }
 
     #[test]

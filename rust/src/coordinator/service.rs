@@ -10,6 +10,7 @@
 //! utilization — everything an operator would watch on a dashboard.
 
 use crate::alg::{Analysis, AnalysisFactory, AnalysisRegistry};
+use crate::coordinator::batch::{self, BatchConfig, BatchPlan};
 use crate::coordinator::fleet::{Fleet, FleetConfig, FleetStats};
 use crate::coordinator::mutation::{
     CompactionFold, IngestBatch, MutationConfig, MutationStats, COMPACT_LABEL, MUTATE_LABEL,
@@ -321,6 +322,11 @@ pub struct ServiceConfig {
     /// [`crate::coordinator::fleet`] and run on the flattened cluster
     /// machine (None = single machine, the byte-identical fast path).
     pub fleet: Option<FleetConfig>,
+    /// Multi-source batching (`serve --batch [width=W,window=T]`):
+    /// compatible same-epoch arrivals fuse into one shared edge sweep
+    /// while each keeps its own latency/SLO record (DESIGN.md §Batching);
+    /// None = every query runs solo, the byte-identical fast path.
+    pub batch: Option<BatchConfig>,
     /// RNG seed (arrivals, sources, query classes, priorities; the
     /// mutation stream forks an independent sub-stream from it).
     pub seed: u64,
@@ -338,8 +344,70 @@ impl Default for ServiceConfig {
             preempt: None,
             mutation: None,
             fleet: None,
+            batch: None,
             seed: 0x5E21,
         }
+    }
+}
+
+/// Chainable builders: the optional sub-configs (priority mix, weights,
+/// preemption, mutation, fleet, batching) compose without struct-literal
+/// field soup — `ServiceConfig::default().with_queries(64).with_preempt
+/// (PreemptPolicy::default())` reads like the CLI flags it mirrors.
+impl ServiceConfig {
+    pub fn with_queries(mut self, queries: usize) -> Self {
+        self.queries = queries;
+        self
+    }
+
+    pub fn with_arrival_rate_per_s(mut self, rate: f64) -> Self {
+        self.arrival_rate_per_s = rate;
+        self
+    }
+
+    pub fn with_workload(mut self, workload: WorkloadSpec) -> Self {
+        self.workload = workload;
+        self
+    }
+
+    pub fn with_on_full(mut self, on_full: OnFull) -> Self {
+        self.on_full = on_full;
+        self
+    }
+
+    pub fn with_priority_mix(mut self, mix: PriorityMix) -> Self {
+        self.priority_mix = Some(mix);
+        self
+    }
+
+    pub fn with_weights(mut self, weights: ShareWeights) -> Self {
+        self.weights = weights;
+        self
+    }
+
+    pub fn with_preempt(mut self, preempt: PreemptPolicy) -> Self {
+        self.preempt = Some(preempt);
+        self
+    }
+
+    pub fn with_mutation(mut self, mutation: MutationConfig) -> Self {
+        self.mutation = Some(mutation);
+        self
+    }
+
+    pub fn with_fleet(mut self, fleet: FleetConfig) -> Self {
+        self.fleet = Some(fleet);
+        self
+    }
+
+    pub fn with_batch(mut self, batch: BatchConfig) -> Self {
+        self.batch = Some(batch);
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
     }
 }
 
@@ -476,6 +544,9 @@ impl<'g> GraphService<'g> {
         if let Some(fcfg) = &cfg.fleet {
             fcfg.validate()?;
         }
+        if let Some(bcfg) = &cfg.batch {
+            bcfg.validate()?;
+        }
         if let Some(mcfg) = &cfg.mutation {
             mcfg.validate()?;
             return self.serve_mutating(cfg, mcfg);
@@ -485,14 +556,22 @@ impl<'g> GraphService<'g> {
         }
         let (requests, arrivals) = self.build_query_stream(cfg);
 
-        let report = self.coord.run(
-            &requests,
-            Policy::ConcurrentAdmitted {
-                on_full: cfg.on_full,
-                weights: cfg.weights,
-                preempt: cfg.preempt,
-            },
-        )?;
+        let policy = Policy::ConcurrentAdmitted {
+            on_full: cfg.on_full,
+            weights: cfg.weights,
+            preempt: cfg.preempt,
+        };
+        let report = match &cfg.batch {
+            // Static graph = one epoch: every compatible request is a
+            // fusion candidate, capped only by the width/window budget.
+            Some(bcfg) => {
+                let plan = BatchPlan::build(&requests, None, bcfg)?;
+                let specs = self.coord.prepare(self.coord.view(), 0, plan.fused(), 0);
+                self.coord
+                    .run_specs_grouped(&requests, plan.group_of(), plan.fused(), &specs, policy)?
+            }
+            None => self.coord.run(&requests, policy)?,
+        };
 
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
         Ok(self.build_report(cfg, &report, first_arrival, None))
@@ -520,21 +599,32 @@ impl<'g> GraphService<'g> {
         let fleet = self.build_fleet(cfg)?.expect("fleet config present");
         let (requests, arrivals) = self.build_query_stream(cfg);
         let view = self.coord.view();
-        let specs: Vec<QuerySpec> = requests
+        // Batching composes with the fleet: the plan fuses compatible
+        // arrivals exactly as on one machine, and each fused request is
+        // priced by the fleet's shared-sweep demand model
+        // ([`Fleet::batched_traversal_phases`] via `source_set`).
+        let plan = match &cfg.batch {
+            Some(bcfg) => Some(BatchPlan::build(&requests, None, bcfg)?),
+            None => None,
+        };
+        let to_prepare: &[QueryRequest] = plan.as_ref().map_or(&requests, |p| p.fused());
+        let specs: Vec<QuerySpec> = to_prepare
             .iter()
             .enumerate()
             .map(|(id, req)| fleet.prepare_one(view, req, id, id))
             .collect();
         let fleet_coord = Coordinator::new(self.coord.graph(), fleet.machine().clone());
-        let report = fleet_coord.run_specs(
-            &requests,
-            &specs,
-            Policy::ConcurrentAdmitted {
-                on_full: cfg.on_full,
-                weights: cfg.weights,
-                preempt: cfg.preempt,
-            },
-        )?;
+        let policy = Policy::ConcurrentAdmitted {
+            on_full: cfg.on_full,
+            weights: cfg.weights,
+            preempt: cfg.preempt,
+        };
+        let report = match &plan {
+            Some(p) => {
+                fleet_coord.run_specs_grouped(&requests, p.group_of(), p.fused(), &specs, policy)?
+            }
+            None => fleet_coord.run_specs(&requests, &specs, policy)?,
+        };
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
         let mut out = self.build_report(cfg, &report, first_arrival, None);
         out.fleet = Some(fleet.stats(&specs, out.duration_s * 1e9));
@@ -574,6 +664,11 @@ impl<'g> GraphService<'g> {
     /// fleet demand models, each update batch fans out through the ordered
     /// log ([`Fleet::ingest_phase`]), and folds cover every replica's copy
     /// of the base.
+    ///
+    /// With [`ServiceConfig::batch`] set, consecutive compatible query
+    /// arrivals within one epoch fuse into a single multi-source sweep
+    /// (DESIGN.md §Batching); an update batch always closes the open
+    /// fusion group first, so a fused sweep never spans epochs.
     fn serve_mutating(
         &self,
         cfg: &ServiceConfig,
@@ -627,20 +722,83 @@ impl<'g> GraphService<'g> {
             batch_arrivals.push(span_ns * 0.5);
         }
 
+        /// Close the open fusion group: fuse its members into one engine
+        /// request, price it against the group's pinned snapshot, and map
+        /// every member onto the new spec. A singleton group is the member
+        /// itself, unwrapped — so with batching off (effective width 1)
+        /// this lane is byte-identical to the historical per-query loop.
+        #[allow(clippy::too_many_arguments)]
+        fn flush_group(
+            pending: &mut Vec<usize>,
+            epoch: u64,
+            store: &GraphStore<'_>,
+            coord: &Coordinator<'_>,
+            fleet: Option<&Fleet>,
+            requests: &[QueryRequest],
+            fused: &mut Vec<QueryRequest>,
+            group_of: &mut [usize],
+            specs: &mut Vec<QuerySpec>,
+        ) -> anyhow::Result<()> {
+            if pending.is_empty() {
+                return Ok(());
+            }
+            let sid = specs.len();
+            let freq = batch::fuse_group(requests, pending)?;
+            let spec = match fleet {
+                Some(f) => f.prepare_one(store.view(), &freq, sid, sid),
+                None => coord.prepare_one(store.view(), epoch, &freq, sid, sid),
+            };
+            for &i in pending.iter() {
+                group_of[i] = sid;
+            }
+            fused.push(freq);
+            specs.push(spec);
+            pending.clear();
+            Ok(())
+        }
+
         // Merge the two sorted timelines; at equal instants the batch goes
         // first, so "the epoch current at admission" includes it.
+        //
+        // With the batcher on, consecutive compatible query arrivals (same
+        // batch key, same pinned epoch, within the width/window budget)
+        // buffer in `pending` and flush as ONE fused spec; an update batch
+        // always flushes first, since it advances the epoch and later
+        // queries must not fuse across it. `requests` keeps one entry per
+        // ORIGINAL arrival (queries, ingest batches, folds); `fused` and
+        // `specs` are what the engine runs, 1:1; `group_of` maps originals
+        // to their spec so every member keeps its own record.
+        let bcfg = cfg.batch.unwrap_or(BatchConfig { width: 1, window_ns: 0.0 });
         let mut store = GraphStore::new(g);
         let total = query_requests.len() + batch_arrivals.len();
         let mut requests: Vec<QueryRequest> = Vec::with_capacity(total);
+        let mut fused: Vec<QueryRequest> = Vec::with_capacity(total);
+        let mut group_of: Vec<usize> = Vec::with_capacity(total);
         let mut specs = Vec::with_capacity(total);
         let mut pinned: Vec<(usize, u64)> = Vec::new();
+        let mut pending: Vec<usize> = Vec::new();
+        let mut pending_epoch = 0u64;
+        let mut pending_key: Option<String> = None;
+        let mut pending_head_ns = 0.0f64;
         let (mut updates_total, mut inserted, mut deleted, mut redundant) = (0usize, 0, 0, 0);
         let (mut qi, mut bi) = (0usize, 0usize);
         while qi < query_requests.len() || bi < batch_arrivals.len() {
-            let id = requests.len();
             let take_batch = bi < batch_arrivals.len()
                 && (qi >= query_requests.len() || batch_arrivals[bi] <= arrivals[qi]);
             if take_batch {
+                // The epoch is about to advance: close the open group
+                // against the snapshot its members actually pinned.
+                flush_group(
+                    &mut pending,
+                    pending_epoch,
+                    &store,
+                    &self.coord,
+                    fleet.as_ref(),
+                    &requests,
+                    &mut fused,
+                    &mut group_of,
+                    &mut specs,
+                )?;
                 let updates = Arc::new(random_batch(
                     store.view(),
                     mcfg.batch,
@@ -658,11 +816,12 @@ impl<'g> GraphService<'g> {
                 )))
                 .at(batch_arrivals[bi])
                 .with_priority(Priority::Batch);
+                let sid = specs.len();
                 let spec = match &fleet {
                     // Fleet ingest: fan the batch out through the ordered
                     // log (primary apply + per-replica shipment/splice).
                     Some(f) => QuerySpec {
-                        id,
+                        id: sid,
                         label: MUTATE_LABEL,
                         phases: vec![f.ingest_phase(&updates)],
                         arrival_ns: req.arrival_ns,
@@ -670,28 +829,64 @@ impl<'g> GraphService<'g> {
                         deadline_ns: req.deadline_ns,
                         ctx_bytes: f.machine().cfg.ctx_bytes_per_query,
                     },
-                    None => self.coord.prepare_one(store.view(), bs.epoch, &req, id, id),
+                    None => self.coord.prepare_one(store.view(), bs.epoch, &req, sid, sid),
                 };
-                requests.push(req);
+                group_of.push(sid);
+                requests.push(req.clone());
+                fused.push(req);
                 specs.push(spec);
                 bi += 1;
             } else {
                 let epoch = store.pin();
                 let req = query_requests[qi].clone();
-                let spec = match &fleet {
-                    Some(f) => f.prepare_one(store.view(), &req, id, id),
-                    None => self.coord.prepare_one(store.view(), epoch, &req, id, id),
-                };
-                pinned.push((id, epoch));
+                let key = req.analysis.batch_key();
+                let idx = requests.len();
+                let joins = !pending.is_empty()
+                    && key.is_some()
+                    && key == pending_key
+                    && epoch == pending_epoch
+                    && pending.len() < bcfg.width
+                    && req.arrival_ns - pending_head_ns <= bcfg.window_ns;
+                if !joins {
+                    flush_group(
+                        &mut pending,
+                        pending_epoch,
+                        &store,
+                        &self.coord,
+                        fleet.as_ref(),
+                        &requests,
+                        &mut fused,
+                        &mut group_of,
+                        &mut specs,
+                    )?;
+                    pending_epoch = epoch;
+                    pending_key = key;
+                    pending_head_ns = req.arrival_ns;
+                }
+                pinned.push((idx, epoch));
                 requests.push(req);
-                specs.push(spec);
+                // Placeholder until the group closes and its spec exists.
+                group_of.push(usize::MAX);
+                pending.push(idx);
                 qi += 1;
             }
         }
+        flush_group(
+            &mut pending,
+            pending_epoch,
+            &store,
+            &self.coord,
+            fleet.as_ref(),
+            &requests,
+            &mut fused,
+            &mut group_of,
+            &mut specs,
+        )?;
+        debug_assert!(group_of.iter().all(|&gi| gi != usize::MAX));
 
         let report = match &fleet_coord {
-            Some(c) => c.run_specs(&requests, &specs, policy())?,
-            None => self.coord.run_specs(&requests, &specs, policy())?,
+            Some(c) => c.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
+            None => self.coord.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
         };
 
         // Replay completions: unpin each query's epoch when it finished
@@ -737,7 +932,7 @@ impl<'g> GraphService<'g> {
         } else {
             let scale = fleet.as_ref().map_or(1, |f| f.config().replicas);
             for &(t_s, arcs, drained, epoch) in &folds {
-                let id = requests.len();
+                let sid = specs.len();
                 let req = QueryRequest::from_arc(Arc::new(CompactionFold::new(
                     g.n(),
                     arcs * scale,
@@ -747,15 +942,17 @@ impl<'g> GraphService<'g> {
                 .at(t_s * 1e9)
                 .with_priority(Priority::Batch);
                 let spec = match &fleet_coord {
-                    Some(c) => c.prepare_one(store.view(), epoch, &req, id, id),
-                    None => self.coord.prepare_one(store.view(), epoch, &req, id, id),
+                    Some(c) => c.prepare_one(store.view(), epoch, &req, sid, sid),
+                    None => self.coord.prepare_one(store.view(), epoch, &req, sid, sid),
                 };
-                requests.push(req);
+                group_of.push(sid);
+                requests.push(req.clone());
+                fused.push(req);
                 specs.push(spec);
             }
             match &fleet_coord {
-                Some(c) => c.run_specs(&requests, &specs, policy())?,
-                None => self.coord.run_specs(&requests, &specs, policy())?,
+                Some(c) => c.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
+                None => self.coord.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
             }
         };
 
@@ -1340,5 +1537,132 @@ mod tests {
         };
         assert_eq!(count(&plain, "bfs"), count(&mutated, "bfs"));
         assert_eq!(plain.served, mutated.served);
+    }
+
+    /// `serve --batch`: fusing a burst of same-kind traversals into
+    /// shared sweeps serves the same stream faster (every member still
+    /// keeps its own record), and a width-1 batcher is indistinguishable
+    /// from no batcher at all — the singleton groups unwrap.
+    #[test]
+    fn batching_fuses_the_static_path_and_speeds_it_up() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let base = ServiceConfig {
+            queries: 32,
+            arrival_rate_per_s: 1.0e6, // effectively simultaneous burst
+            workload: WorkloadSpec::bfs_cc(0.0),
+            seed: 11,
+            ..Default::default()
+        };
+        let plain = svc.serve(&base).unwrap();
+        let batched = svc
+            .serve(&base.clone().with_batch(BatchConfig { width: 16, window_ns: 1e9 }))
+            .unwrap();
+        assert_eq!(batched.served, 32, "every member keeps its own record");
+        assert_eq!(batched.rejected + batched.shed, 0);
+        let q50 = |r: &ServiceReport| r.class("bfs").expect("bfs class").q50;
+        assert!(
+            q50(&batched) < q50(&plain),
+            "fused sweeps must beat 32-way solo contention: {} vs {}",
+            q50(&batched),
+            q50(&plain)
+        );
+        assert!(batched.duration_s < plain.duration_s);
+
+        let solo =
+            svc.serve(&base.clone().with_batch(BatchConfig { width: 1, window_ns: 1e9 })).unwrap();
+        assert_eq!(solo.duration_s, plain.duration_s);
+        assert_eq!(
+            solo.class("bfs").unwrap().q100,
+            plain.class("bfs").unwrap().q100,
+            "width-1 batching is the unbatched path"
+        );
+    }
+
+    /// `--batch` composes with `--fleet`: the plan fuses exactly as on a
+    /// single machine while each fused sweep is priced with cross-shard
+    /// frontier exchange, and the whole stream still gets served.
+    #[test]
+    fn batching_composes_with_fleet_routing() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let base = ServiceConfig {
+            queries: 32,
+            arrival_rate_per_s: 1.0e6,
+            workload: WorkloadSpec::bfs_cc(0.0),
+            fleet: Some(FleetConfig::parse("nodes=4,partition=balanced").unwrap()),
+            seed: 11,
+            ..Default::default()
+        };
+        let plain = svc.serve(&base).unwrap();
+        let batched = svc
+            .serve(&base.clone().with_batch(BatchConfig { width: 16, window_ns: 1e9 }))
+            .unwrap();
+        assert_eq!(batched.served, 32);
+        let f = batched.fleet.as_ref().expect("fleet stats present");
+        assert_eq!(f.shards, 4);
+        assert!(f.interconnect_bytes > 0.0, "fused sweeps still ship frontier");
+        assert!(
+            batched.duration_s < plain.duration_s,
+            "shared sweeps finish the burst sooner: {} vs {}",
+            batched.duration_s,
+            plain.duration_s
+        );
+    }
+
+    /// `--batch` composes with `--mutate`: an update batch closes the
+    /// open fusion group, so fused sweeps never span an epoch boundary,
+    /// and the mutation/compaction accounting keeps its shape.
+    #[test]
+    fn batching_composes_with_mutation_epochs() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let cfg = ServiceConfig {
+            queries: 24,
+            arrival_rate_per_s: 200.0,
+            workload: WorkloadSpec::bfs_cc(0.2),
+            mutation: Some(crate::coordinator::mutation::MutationConfig {
+                rate_batches_per_s: 100.0,
+                batch: 16,
+                delete_fraction: 0.2,
+                compact_every: 2,
+            }),
+            batch: Some(BatchConfig { width: 8, window_ns: 1e9 }),
+            ..Default::default()
+        };
+        let rep = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.served, 24, "per-member records survive fusion");
+        let m = rep.mutation.as_ref().expect("mutation stats present");
+        assert!(m.batches >= 1);
+        assert_eq!(m.final_overlays, 0, "every overlay still folds");
+        assert!(rep.class("mutate").is_some());
+        let rep2 = svc.serve(&cfg).unwrap();
+        assert_eq!(rep.duration_s, rep2.duration_s, "batched mutate lane is deterministic");
+    }
+
+    /// The `with_*` builders cover every optional sub-config and chain
+    /// into a config that serves.
+    #[test]
+    fn service_config_builder_matches_literal() {
+        let built = ServiceConfig::default()
+            .with_queries(12)
+            .with_arrival_rate_per_s(50.0)
+            .with_workload(WorkloadSpec::bfs_cc(0.0))
+            .with_on_full(OnFull::Reject)
+            .with_priority_mix(PriorityMix { interactive: 0.5, standard: 0.25, batch: 0.25 })
+            .with_weights(ShareWeights::priority_weighted())
+            .with_preempt(PreemptPolicy::default())
+            .with_batch(BatchConfig::default())
+            .with_seed(7);
+        assert_eq!(built.queries, 12);
+        assert_eq!(built.arrival_rate_per_s, 50.0);
+        assert!(matches!(built.on_full, OnFull::Reject));
+        assert!(built.priority_mix.is_some() && built.preempt.is_some());
+        assert_eq!(built.batch, Some(BatchConfig::default()));
+        assert_eq!(built.seed, 7);
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let rep = svc.serve(&built).unwrap();
+        assert_eq!(rep.served + rep.rejected + rep.shed, 12);
     }
 }

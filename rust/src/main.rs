@@ -8,9 +8,12 @@
 //! pathfinder validate   [--scale N] [--queries K]   — every registered
 //!                       analysis (bfs, cc, sssp, khop, pagerank, tricount)
 //!                       vs its host oracle
-//! pathfinder run        [--scale N] --machine pathfinder-8 [--bfs K]
-//!                       [--cc C] [--sssp S] [--khop H] [--khop-k HOPS]
-//!                       [--pagerank P] [--tricount T]
+//! pathfinder run        [--scale N] --machine pathfinder-8
+//!                       [--analysis bfs=16,cc=4,sssp=8]   (any registry
+//!                       label; `label` alone means count 1; default bfs=16.
+//!                       The old --bfs/--cc/--sssp/--khop/--pagerank/
+//!                       --tricount flags still work as deprecated aliases)
+//!                       [--khop-k HOPS]   (deprecated: re-registers khop)
 //!                       [--policy sequential|concurrent|queue|reject|shed]
 //!                       [--max-waiting W]
 //!                       [--weights interactive=4,standard=2,batch=1] [--preempt]
@@ -31,6 +34,12 @@
 //!                                      partitioned across N shards x R replicas,
 //!                                      cross-shard traffic priced on the fleet
 //!                                      interconnect)
+//!                       [--batch [width=W,window=T]]
+//!                                     (fuse compatible same-epoch queries into
+//!                                      one multi-source sweep; width <= 64
+//!                                      sources per fused query, window in
+//!                                      seconds; bare --batch = width=16,
+//!                                      window=0.001)
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -50,8 +59,8 @@ use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
-    planner, Coordinator, FleetConfig, GraphService, MutationConfig, Policy, PreemptPolicy,
-    PriorityMix, QueryRequest, ServiceConfig, ShareWeights, WorkloadSpec,
+    planner, BatchConfig, Coordinator, FleetConfig, GraphService, MutationConfig, Policy,
+    PreemptPolicy, PriorityMix, QueryRequest, ServiceConfig, ShareWeights, WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -219,41 +228,116 @@ fn cmd_validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--analysis <label>[=count][,...]`: any registry label, count
+/// defaulting to 1 when omitted.
+fn parse_analysis_spec(spec: &str) -> Result<Vec<(String, usize)>> {
+    let mut out = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (label, count) = match part.split_once('=') {
+            Some((l, c)) => {
+                let count: usize = c
+                    .trim()
+                    .parse()
+                    .with_context(|| format!("--analysis {l}: bad count {c:?}"))?;
+                (l.trim().to_string(), count)
+            }
+            None => (part.to_string(), 1),
+        };
+        anyhow::ensure!(count > 0, "--analysis {label}: count must be positive");
+        out.push((label, count));
+    }
+    anyhow::ensure!(!out.is_empty(), "--analysis: empty spec");
+    Ok(out)
+}
+
+/// Per-class source seed. The named cases reproduce the seeds the old
+/// per-analysis flags used, so the deprecated aliases (and any script
+/// built on them) see the exact same query streams; other labels fork
+/// by label hash so two sourced classes never share sources.
+fn label_seed(label: &str, seed: u64) -> u64 {
+    match label {
+        "bfs" => seed,
+        "sssp" => seed ^ 0x55,
+        "khop" => seed ^ 0xAA,
+        _ => {
+            let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a
+            for b in label.bytes() {
+                h = (h ^ b as u64).wrapping_mul(0x0100_0000_01b3);
+            }
+            seed ^ h
+        }
+    }
+}
+
+const DEPRECATED_RUN_FLAGS: [&str; 6] = ["bfs", "cc", "sssp", "khop", "pagerank", "tricount"];
+
 fn cmd_run(args: &Args) -> Result<()> {
     let g = load_or_generate(args)?;
     let machine = Machine::new(machine_config(args)?);
     let coord = Coordinator::new(&g, machine);
-
-    let bfs: usize = args.opt_parse_or("bfs", 16)?;
-    let cc: usize = args.opt_parse_or("cc", 0)?;
-    let sssp: usize = args.opt_parse_or("sssp", 0)?;
-    let khop: usize = args.opt_parse_or("khop", 0)?;
-    let khop_k: u32 = args.opt_parse_or("khop-k", 2)?;
-    let pagerank: usize = args.opt_parse_or("pagerank", 0)?;
-    let tricount: usize = args.opt_parse_or("tricount", 0)?;
     let seed: u64 = args.opt_parse_or("query-seed", 0xBF5)?;
+
+    let mut registry = AnalysisRegistry::builtin();
+    let khop_k: u32 = args.opt_parse_or("khop-k", 2)?;
+    if khop_k != 2 {
+        // Deprecated-compat knob: analysis parameters belong to registry
+        // factories, so honor it by re-registering the khop factory.
+        eprintln!("warning: --khop-k is deprecated; register a khop factory instead");
+        registry.register("khop", std::sync::Arc::new(move |src| -> std::sync::Arc<
+            dyn Analysis,
+        > {
+            std::sync::Arc::new(pathfinder_queries::alg::KHop::new(src, khop_k))
+        }));
+    }
+
+    // Registry-driven workload: `--analysis <label>[=count][,...]`. The
+    // old per-analysis flag zoo still works as deprecated aliases that
+    // translate onto the same spec (bfs keeps its historical default of
+    // 16 so `run --cc 4` still means 16 bfs + 4 cc).
+    let spec: Vec<(String, usize)> = match args.opt("analysis") {
+        Some(s) => {
+            for flag in DEPRECATED_RUN_FLAGS {
+                anyhow::ensure!(
+                    args.opt(flag).is_none(),
+                    "--analysis and the deprecated --{flag} flag are mutually exclusive"
+                );
+            }
+            parse_analysis_spec(s)?
+        }
+        None => {
+            let used: Vec<&str> = DEPRECATED_RUN_FLAGS
+                .into_iter()
+                .filter(|f| args.opt(f).is_some())
+                .collect();
+            if !used.is_empty() {
+                eprintln!(
+                    "warning: --{} deprecated; use --analysis {}",
+                    used.join("/--"),
+                    used.iter().map(|f| format!("{f}=N")).collect::<Vec<_>>().join(",")
+                );
+            }
+            let mut counts = vec![("bfs".to_string(), args.opt_parse_or("bfs", 16)?)];
+            for flag in &DEPRECATED_RUN_FLAGS[1..] {
+                counts.push((flag.to_string(), args.opt_parse_or(flag, 0)?));
+            }
+            counts.retain(|(_, c)| *c > 0);
+            counts
+        }
+    };
+    anyhow::ensure!(!spec.is_empty(), "nothing to run: all class counts are zero");
 
     // One list per class, interleaved into a mixed submission stream.
     let mut classes: Vec<Vec<QueryRequest>> = Vec::new();
-    if bfs > 0 {
-        classes.push(planner::bfs_queries(&g, bfs, seed));
+    for (label, count) in &spec {
+        classes.push(
+            planner::registry_queries(&g, &registry, label, *count, label_seed(label, seed))
+                .with_context(|| format!("known analyses: {}", registry.labels().join(", ")))?,
+        );
     }
-    if cc > 0 {
-        classes.push(planner::cc_queries(cc));
-    }
-    if sssp > 0 {
-        classes.push(planner::sssp_queries(&g, sssp, seed ^ 0x55));
-    }
-    if khop > 0 {
-        classes.push(planner::khop_queries(&g, khop, khop_k, seed ^ 0xAA));
-    }
-    if pagerank > 0 {
-        classes.push(planner::pagerank_queries(pagerank));
-    }
-    if tricount > 0 {
-        classes.push(planner::tricount_queries(tricount));
-    }
-    anyhow::ensure!(!classes.is_empty(), "nothing to run: all class counts are zero");
     let queries = planner::interleave_classes(classes);
 
     // Fair-share weights + checkpoint preemption: admitted policies only
@@ -283,12 +367,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
 
     let rep = coord.run(&queries, policy)?;
+    let desc: Vec<String> = spec.iter().map(|(l, c)| format!("{c} {l}")).collect();
     println!(
-        "{} on {}: {} queries ({bfs} bfs + {cc} cc + {sssp} sssp + {khop} khop \
-         + {pagerank} pagerank + {tricount} tricount)",
+        "{} on {}: {} queries ({})",
         rep.policy,
         rep.machine,
         queries.len(),
+        desc.join(" + ")
     );
     println!("  makespan            {:.4} s", rep.makespan_s);
     println!(
@@ -352,6 +437,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         preempt: args.has_flag("preempt").then(PreemptPolicy::default),
         mutation: args.opt("mutate").map(MutationConfig::parse).transpose()?,
         fleet: args.opt("fleet").map(FleetConfig::parse).transpose()?,
+        // `--batch width=16,window=0.001` or bare `--batch` for defaults.
+        batch: match args.opt("batch") {
+            Some(spec) => Some(BatchConfig::parse(spec)?),
+            None if args.has_flag("batch") => Some(BatchConfig::default()),
+            None => None,
+        },
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
     let mix_desc: Vec<String> = cfg
@@ -368,15 +459,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(f) => format!(", fleet {}", f.label()),
         None => String::new(),
     };
+    let batch_desc = match &cfg.batch {
+        Some(b) => format!(", batching {}", b.label()),
+        None => String::new(),
+    };
     println!(
-        "serving {} queries at {:.0} q/s ({}) on {} (seed {:#x}){}{}...",
+        "serving {} queries at {:.0} q/s ({}) on {} (seed {:#x}){}{}{}...",
         cfg.queries,
         cfg.arrival_rate_per_s,
         mix_desc.join(","),
         svc.coordinator().machine().cfg.name,
         cfg.seed,
         mutate_desc,
-        fleet_desc
+        fleet_desc,
+        batch_desc
     );
     let rep = svc.serve(&cfg)?;
     println!("{}", rep.summary());

@@ -36,6 +36,17 @@
 //!   fleet-interconnect demand on top, for the interconnect-bound
 //!   closed-form fleet scenario of the CI bench gate.
 //!
+//! The fused multi-source BFS demand (`serve --batch`; DESIGN.md
+//! §Batching) is built inline by [`crate::alg::msbfs`] like the other
+//! traversals, but it is worth naming here because it deliberately bends
+//! the one-query-one-array pattern above: the per-edge
+//! [`DemandBuilder::msp_op`] is a single RMW ORing a *frontier word
+//! shared by up to 64 sources* — one charge serves the whole batch, which
+//! is exactly where the fusion win comes from — while the per-discovery
+//! level write lands in the discovering *member's* own stripe-rotated
+//! frame, so per-source private state still spreads across channels like
+//! independent queries' arrays would.
+//!
 //! See docs/ANALYSES.md for how to derive a new analysis's demand model
 //! from the paper's migration/MSP/fabric cost accounting.
 

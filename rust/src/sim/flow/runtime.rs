@@ -15,7 +15,12 @@
 //!   exactly one *fresh* entry `(completion_ns, qi, stamp)`; a rate change
 //!   bumps the query's stamp and pushes a replacement, and stale entries
 //!   are discarded on pop (with periodic compaction), so finding the next
-//!   completion is O(log n) instead of a scan over every running query.
+//!   completion is O(log n) instead of a scan over every running query;
+//! * the arrival-ordered wait cursor ([`WaitQueue`], private): per-class
+//!   FIFO deques plus a lazy-deletion expiry heap replace the old linear
+//!   scans over the waiting set (deadline expiry, best-class selection,
+//!   overflow shedding), closing the first §Engine follow-up hot spot —
+//!   an admission event no longer pays for the queue's length.
 //!
 //! Progress is anchored (see [`super::solver`]): nothing is decremented at
 //! events, so a query whose component an event does not touch costs the
@@ -28,7 +33,7 @@
 //! the in-tree reference and the bench contrast arm.
 
 use std::cmp::Reverse;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use crate::sim::counters::Counters;
 use crate::sim::demand::PhaseDemand;
@@ -76,6 +81,160 @@ impl PartialOrd for Tc {
 impl Ord for Tc {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.0.total_cmp(&other.0)
+    }
+}
+
+/// Arrival-ordered wait cursor (DESIGN.md §Engine). The old engine kept
+/// one `Vec` of waiters and ran three linear scans over it at every
+/// event (deadline expiry, best-effective-class selection, overflow
+/// shedding) — the first hot spot the ROADMAP flags at high concurrency
+/// under admission control. This replaces the scans with cursors:
+///
+/// * one FIFO deque per declared class, in enqueue (= arrival) order.
+///   Arrival times are non-decreasing along enqueue order, so the
+///   aging-promoted waiters of a class always form a *prefix* of its
+///   deque — every selection the scans made is available at a deque end:
+///   the best effective-Interactive waiter is the earliest-enqueued of
+///   the qualifying fronts, the overflow victim is the back of the
+///   worst declared-class deque;
+/// * a lazy-deletion min-heap of `(expiry_ns, seq, qi)` for deadline
+///   expiry: entries for waiters that already started (or were shed)
+///   are skipped on pop, exactly like the completion heap's stamps.
+///
+/// Every mutation is O(log n) or amortized O(1), and an event that
+/// touches no waiter no longer pays for the queue's length.
+struct WaitQueue {
+    /// `[Interactive, Standard, Batch]` FIFO lanes of `(seq, qi)`.
+    classes: [VecDeque<(u64, usize)>; 3],
+    /// Deadline expiry instants, lazily deleted against `is_waiting`.
+    expiry: BinaryHeap<Reverse<(Tc, u64, usize)>>,
+    /// Still queued? Cleared on start/shed; dead entries are pruned from
+    /// the deque ends and skipped on expiry pops.
+    is_waiting: Vec<bool>,
+    seq: u64,
+    live: usize,
+}
+
+fn class_idx(p: Priority) -> usize {
+    match p {
+        Priority::Interactive => 0,
+        Priority::Standard => 1,
+        Priority::Batch => 2,
+    }
+}
+
+impl WaitQueue {
+    fn new(n_queries: usize) -> Self {
+        WaitQueue {
+            classes: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            expiry: BinaryHeap::new(),
+            is_waiting: vec![false; n_queries],
+            seq: 0,
+            live: 0,
+        }
+    }
+
+    /// Live waiter count (dead deque entries excluded).
+    fn len(&self) -> usize {
+        self.live
+    }
+
+    fn push(&mut self, qi: usize, declared: Priority, expiry_ns: Option<f64>) {
+        self.seq += 1;
+        self.classes[class_idx(declared)].push_back((self.seq, qi));
+        if let Some(e) = expiry_ns {
+            self.expiry.push(Reverse((Tc(e), self.seq, qi)));
+        }
+        self.is_waiting[qi] = true;
+        self.live += 1;
+    }
+
+    /// Pop every waiter whose deadline expired by `t`, in enqueue order
+    /// (the order the old linear scan shed them in). Entries for waiters
+    /// that already left the queue are discarded on the way.
+    fn take_expired(&mut self, t: f64) -> Vec<usize> {
+        let mut due: Vec<(u64, usize)> = Vec::new();
+        while let Some(&Reverse((Tc(e), seq, qi))) = self.expiry.peek() {
+            if e > t {
+                break;
+            }
+            self.expiry.pop();
+            if self.is_waiting[qi] {
+                self.is_waiting[qi] = false;
+                self.live -= 1;
+                due.push((seq, qi));
+            }
+        }
+        due.sort_unstable();
+        due.into_iter().map(|(_, qi)| qi).collect()
+    }
+
+    /// The waiter the admission drain would start next: the earliest-
+    /// enqueued of the best effective class (aged Standard/Batch fronts
+    /// compete as Interactive). Returns `(effective class, lane, qi)`.
+    fn peek_best(
+        &mut self,
+        t: f64,
+        age_promote_ns: f64,
+        queries: &[QuerySpec],
+    ) -> Option<(Priority, usize, usize)> {
+        for c in 0..3 {
+            while let Some(&(_, qi)) = self.classes[c].front() {
+                if self.is_waiting[qi] {
+                    break;
+                }
+                self.classes[c].pop_front();
+            }
+        }
+        // Effective-Interactive candidates: the Interactive front plus
+        // any aged Standard/Batch front (the aged waiters of a lane are
+        // a prefix, so a lane's earliest aged waiter IS its front).
+        let mut best: Option<(u64, usize, usize)> = None;
+        for (c, d) in self.classes.iter().enumerate() {
+            if let Some(&(seq, qi)) = d.front() {
+                if c == 0 || t - queries[qi].arrival_ns >= age_promote_ns {
+                    if best.is_none_or(|(bs, _, _)| seq < bs) {
+                        best = Some((seq, c, qi));
+                    }
+                }
+            }
+        }
+        if let Some((_, c, qi)) = best {
+            return Some((Priority::Interactive, c, qi));
+        }
+        // No effective-Interactive waiter: the fronts are unaged, so
+        // declared order decides.
+        for (c, prio) in [(1, Priority::Standard), (2, Priority::Batch)] {
+            if let Some(&(_, qi)) = self.classes[c].front() {
+                return Some((prio, c, qi));
+            }
+        }
+        None
+    }
+
+    /// Dequeue the front of lane `c` (the waiter `peek_best` returned).
+    fn start_front(&mut self, c: usize) -> usize {
+        let (_, qi) = self.classes[c].pop_front().expect("peek_best saw a live front");
+        self.is_waiting[qi] = false;
+        self.live -= 1;
+        qi
+    }
+
+    /// Overflow victim: the newest entry of the worst declared class
+    /// (Batch back, then Standard, then Interactive) — what the old
+    /// `max_by_key` scan's last-maximal pick selected.
+    fn shed_victim(&mut self) -> Option<usize> {
+        for c in [2, 1, 0] {
+            while let Some(&(_, qi)) = self.classes[c].back() {
+                self.classes[c].pop_back();
+                if self.is_waiting[qi] {
+                    self.is_waiting[qi] = false;
+                    self.live -= 1;
+                    return Some(qi);
+                }
+            }
+        }
+        None
     }
 }
 
@@ -147,9 +306,10 @@ impl FlowSim {
         // Query indices whose rate the last solve changed (solver-owned
         // scratch would borrow-lock the solver; the runtime owns it).
         let mut changed: Vec<usize> = Vec::new();
-        // Wait queue in enqueue (= arrival) order; selection scans for the
-        // best effective class, so FIFO-within-class falls out of position.
-        let mut waiting: Vec<usize> = Vec::new();
+        // Wait queue as per-class arrival-ordered cursors (see
+        // [`WaitQueue`]): FIFO within a class, best effective class at
+        // the qualifying fronts, no linear scans.
+        let mut waiting = WaitQueue::new(queries.len());
         let mut rejected: Vec<usize> = Vec::new();
         let mut shed: Vec<usize> = Vec::new();
         let mut in_flight = 0usize;
@@ -167,17 +327,6 @@ impl FlowSim {
         // parks, resumes) — the denominator of the host_ns_per_event
         // bench axis.
         let mut events = 0usize;
-
-        // Effective admission class of a waiter at time `now`: aging
-        // promotes long waiters to the front class.
-        let effective_class = |qi: usize, now: f64| -> Priority {
-            let q = &queries[qi];
-            if now - q.arrival_ns >= adm.age_promote_ns {
-                Priority::Interactive
-            } else {
-                q.priority
-            }
-        };
 
         // Register a freshly-entered phase with the solver and schedule
         // its completion (at rate 1.0 until the next solve says
@@ -272,42 +421,28 @@ impl FlowSim {
                             drop_query!(qi, rejected);
                         }
                     }
-                    OnFull::Queue | OnFull::Shed { .. } => waiting.push(qi),
+                    OnFull::Queue | OnFull::Shed { .. } => {
+                        waiting.push(qi, q.priority, q.deadline_ns.map(|d| q.arrival_ns + d))
+                    }
                 }
             }
 
             // Shed queued queries whose deadline already expired: running
             // them is wasted work.
-            let mut wi = 0;
-            while wi < waiting.len() {
-                let q = &queries[waiting[wi]];
-                if q.deadline_ns.is_some_and(|d| q.arrival_ns + d <= t) {
-                    let qi = waiting.remove(wi);
-                    drop_query!(qi, shed);
-                } else {
-                    wi += 1;
-                }
+            for qi in waiting.take_expired(t) {
+                drop_query!(qi, shed);
             }
 
             // Drain the wait queue in priority order: best effective class
             // first (aging promotes long waiters to the front class), FIFO
             // within a class. Strict head-of-queue blocking: if the best
             // waiter does not fit, nothing behind it starts.
-            loop {
-                let best = waiting
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|&(_, &qi)| effective_class(qi, t))
-                    .map(|(i, _)| i);
-                match best {
-                    Some(i)
-                        if in_flight < cap
-                            && ledger.would_fit(queries[waiting[i]].ctx_bytes) =>
-                    {
-                        let qi = waiting.remove(i);
-                        start_query!(qi, effective_class(qi, t));
-                    }
-                    _ => break,
+            while let Some((eff, lane, qi)) = waiting.peek_best(t, adm.age_promote_ns, queries) {
+                if in_flight < cap && ledger.would_fit(queries[qi].ctx_bytes) {
+                    waiting.start_front(lane);
+                    start_query!(qi, eff);
+                } else {
+                    break;
                 }
             }
 
@@ -321,9 +456,8 @@ impl FlowSim {
                 // The best blocked waiter (the drain above started every
                 // waiter that fits, in priority order, until one did not).
                 let blocked = waiting
-                    .iter()
-                    .map(|&qi| (effective_class(qi, t), qi))
-                    .min_by_key(|&(c, _)| c);
+                    .peek_best(t, adm.age_promote_ns, queries)
+                    .map(|(eff, _, qi)| (eff, qi));
                 match blocked {
                     // The trigger keys on the *declared* class: an
                     // aging-promoted Batch waiter competes as Interactive
@@ -407,15 +541,7 @@ impl FlowSim {
             // a promoted Batch waiter is still the first shedding victim).
             if let OnFull::Shed { max_waiting } = adm.on_full {
                 while waiting.len() > max_waiting {
-                    // max_by_key returns the *last* maximal element: the
-                    // newest entry of the worst class.
-                    let victim = waiting
-                        .iter()
-                        .enumerate()
-                        .max_by_key(|&(_, &qi)| queries[qi].priority)
-                        .map(|(i, _)| i)
-                        .expect("non-empty: len > max_waiting");
-                    let qi = waiting.remove(victim);
+                    let qi = waiting.shed_victim().expect("non-empty: len > max_waiting");
                     drop_query!(qi, shed);
                 }
             }
@@ -1012,6 +1138,24 @@ mod tests {
         let rep = sim.run_admitted(&qs, Admission::byte_budget(100, OnFull::Queue));
         assert_eq!(rep.rejected, vec![1]);
         assert!(rep.timings[0].completed());
+    }
+
+    /// Lazy deletion in the wait cursor's expiry heap: a deadline that
+    /// fires after its query already *started* must not shed it — only
+    /// still-queued work expires.
+    #[test]
+    fn stale_expiry_entries_do_not_shed_started_queries() {
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let long = query(&m, 0, 0.5, 1e6);
+        // Starts at ~1e6 ns (when query 0 finishes), deadline 1.05e6 ns:
+        // the expiry instant passes while the query is RUNNING, and the
+        // next event (its own completion) pops the stale entry.
+        let started = query(&m, 1, 0.5, 1e5).with_deadline_ns(1.05e6);
+        let rep = sim.run_admitted(&[long, started], Admission::capped(1, OnFull::Queue));
+        assert!(rep.shed.is_empty(), "started work never expires: {:?}", rep.shed);
+        assert!(rep.timings[1].completed());
+        assert!(rep.timings[1].start_ns < 1.05e6);
     }
 
     /// A queued query whose deadline expires while waiting is shed, not

@@ -406,3 +406,127 @@ fn weighted_preemption_beats_unweighted_sharing_for_interactive() {
     );
     assert_eq!(stats(&with_deadlines, Priority::Interactive).shed, 0);
 }
+
+/// Batching satellite (DESIGN.md §Batching): when a fused batch is SHED,
+/// every member request's own `QueryRecord` reports `Outcome::Shed` with a
+/// NaN latency, and the per-member dispositions still partition the
+/// original request list exactly — fusion never loses or double-counts a
+/// member.
+#[test]
+fn shed_batch_disposes_every_member_and_partitions_exactly() {
+    use pathfinder_queries::coordinator::{BatchConfig, Outcome};
+
+    let g = rmat(11);
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.ctx_mem_per_node_bytes = 16 << 20; // capacity: 8 default footprints
+    let coord = Coordinator::new(&g, Machine::new(cfg));
+    let batch = BatchConfig { width: 8, window_ns: 1e9 };
+
+    // Three width-8 groups of same-epoch BFS (arrival order = index
+    // order, so group g covers originals 8g..8g+8). Each fused batch
+    // reserves Σ member footprints = the WHOLE context budget: group 0
+    // runs, group 1 waits, and with max_waiting=1 group 2 overflows the
+    // wait queue and is shed whole.
+    let mut queries = planner::bfs_queries(&g, 24, 0x5ED);
+    let arrivals: Vec<f64> = (0..24).map(|i| i as f64 * 1e3).collect();
+    planner::assign_arrivals(&mut queries, &arrivals);
+    let rep = coord
+        .submit_batched(
+            queries,
+            Policy::admitted(OnFull::Shed { max_waiting: 1 }),
+            &batch,
+        )
+        .unwrap();
+
+    assert_eq!(rep.records.len(), 24, "one record per ORIGINAL request");
+    assert_eq!(
+        rep.completed() + rep.sheds() + rep.rejections(),
+        24,
+        "member dispositions must partition the batch"
+    );
+    assert_eq!(rep.sheds(), 8, "a shed batch sheds every member, exactly once");
+    for r in &rep.records[16..24] {
+        assert_eq!(r.outcome, Outcome::Shed, "q{}", r.id);
+        assert!(r.latency_s.is_nan(), "q{}: a shed member never ran", r.id);
+    }
+    // Completed members: per-source latency = fused finish − OWN arrival,
+    // so a group shares one finish and its latencies differ by exactly
+    // the members' arrival spread.
+    for group in [&rep.records[0..8], &rep.records[8..16]] {
+        for r in group {
+            assert_eq!(r.outcome, Outcome::Completed, "q{}", r.id);
+            assert!(
+                (r.finish_s - r.arrival_s - r.latency_s).abs() < 1e-12,
+                "q{}: latency must be fused finish minus member arrival",
+                r.id
+            );
+            assert_eq!(
+                r.finish_s.to_bits(),
+                group[0].finish_s.to_bits(),
+                "q{}: one fused query, one finish",
+                r.id
+            );
+        }
+        let spread = group[0].latency_s - group[7].latency_s;
+        assert!(
+            (spread - 7e3 * 1e-9).abs() < 1e-12,
+            "latency spread {spread} must equal the arrival spread"
+        );
+    }
+}
+
+/// Batching satellite, preemption arm: a fused Batch-class group parked
+/// by checkpoint preemption marks EVERY member `Preempted { resumed }`
+/// — all complete, latencies still fan out per-member from the one fused
+/// timing, and the interactive query that forced the park is untouched.
+#[test]
+fn preempted_batch_marks_every_member_and_completes() {
+    use pathfinder_queries::coordinator::{BatchConfig, Outcome, Priority};
+
+    let g = rmat(11);
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.ctx_mem_per_node_bytes = 16 << 20; // capacity: 8 default footprints
+    let coord = Coordinator::new(&g, Machine::new(cfg));
+    let batch = BatchConfig { width: 8, window_ns: 1e9 };
+
+    // 8 Batch-class BFS fuse into one group holding the whole budget; an
+    // Interactive BFS arrives behind it (its group is full, so it rides
+    // alone) and can only start if the fused batch parks.
+    let mut queries = planner::bfs_queries(&g, 9, 0x9E);
+    for (i, q) in queries.iter_mut().enumerate() {
+        *q = q.clone().with_priority(Priority::Batch).at(i as f64 * 1e3);
+    }
+    queries[8] = queries[8].clone().with_priority(Priority::Interactive).at(2e4);
+    let policy = Policy::ConcurrentAdmitted {
+        on_full: OnFull::Queue,
+        weights: ShareWeights::flat(),
+        preempt: Some(PreemptPolicy::default()),
+    };
+    let rep = coord.submit_batched(queries, policy, &batch).unwrap();
+
+    assert_eq!(rep.records.len(), 9);
+    assert_eq!(rep.completed(), 9, "preemption must not lose fused work");
+    assert_eq!(rep.preempted(), 8, "every member of the parked batch is preempted");
+    assert_eq!(
+        rep.records[8].outcome,
+        Outcome::Completed,
+        "the interactive trigger is never parked"
+    );
+    for r in &rep.records[0..8] {
+        assert_eq!(r.outcome, Outcome::Preempted { resumed: true }, "q{}", r.id);
+        assert_eq!(
+            r.finish_s.to_bits(),
+            rep.records[0].finish_s.to_bits(),
+            "q{}: one fused timing serves the whole group",
+            r.id
+        );
+        assert!(
+            (r.finish_s - r.arrival_s - r.latency_s).abs() < 1e-12,
+            "q{}: latency fans out from the member's own arrival",
+            r.id
+        );
+    }
+    // The park actually bought the interactive query its slot: it
+    // finished while the batch was still in flight.
+    assert!(rep.records[8].finish_s < rep.records[0].finish_s);
+}

@@ -1081,6 +1081,61 @@ fn prop_flow_runs_are_deterministic() {
     }
 }
 
+/// Batching satellite (DESIGN.md §Batching): fused multi-source BFS
+/// levels bit-match k independent single-source runs — on random R-MAT
+/// graphs and on mutated overlay views — at random batch widths (1..=64)
+/// and stripe offsets. The fused sweep shares migrations and edge scans
+/// across the batch, but each member's answer must be EXACTLY what it
+/// would have computed alone.
+#[test]
+fn prop_msbfs_bit_matches_independent_single_source_runs() {
+    use pathfinder_queries::alg::msbfs_run_offset;
+    use pathfinder_queries::config::workload::GraphConfig;
+    use pathfinder_queries::graph::delta::random_batch;
+    use pathfinder_queries::graph::rmat::Rmat;
+    use pathfinder_queries::graph::store::GraphStore;
+
+    let m = m8();
+    for seed in 0..CASES / 2 {
+        let mut rng = SplitMix64::new(seed ^ 0xB47C);
+        let mut cfg = GraphConfig::with_scale(9);
+        cfg.seed = seed;
+        let g = build_undirected_csr(1 << 9, &Rmat::new(cfg).edges());
+        let k = 1 + rng.gen_range(64) as usize;
+        let sources: Vec<u32> =
+            (0..k).map(|_| rng.gen_range(g.n() as u64) as u32).collect();
+        let offset = rng.gen_range(16) as usize;
+
+        let fused = msbfs_run_offset(&g, &m, &sources, offset);
+        assert_eq!(fused.levels.len(), k, "seed {seed}");
+        for (s, &src) in sources.iter().enumerate() {
+            let solo = alg::bfs_run(&g, &m, src);
+            assert_eq!(
+                fused.levels[s], solo.levels,
+                "seed {seed} width {k} src {src}: fused vs independent run"
+            );
+        }
+
+        // Overlaid views (same-epoch batches run on a pinned snapshot):
+        // the fused sweep over a mutated view must bit-match the
+        // single-source oracle on that exact edge set.
+        let mut store = GraphStore::new(&g);
+        for _ in 0..2 {
+            let batch = random_batch(store.view(), 12, 0.4, &mut rng);
+            store.apply_batch(&batch);
+        }
+        let view = store.view();
+        let over = msbfs_run_offset(view, &m, &sources, offset);
+        for (s, &src) in sources.iter().enumerate() {
+            assert_eq!(
+                over.levels[s],
+                oracle::bfs_levels(view, src),
+                "seed {seed} src {src}: fused vs oracle on the overlay view"
+            );
+        }
+    }
+}
+
 /// Epoch refcounting: compaction never retires an overlay any pin still
 /// needs, under randomized interleavings of pin/unpin/apply/compact.
 #[test]
