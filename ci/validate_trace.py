@@ -1,0 +1,109 @@
+#!/usr/bin/env python3
+"""Validate a Chrome trace-event JSON file emitted by `--trace`.
+
+Stdlib-only (CI runs it with a bare python3). Checks the structural
+contract that Perfetto / chrome://tracing relies on and that
+DESIGN.md #Observability promises:
+
+  * top level: an object with a non-empty "traceEvents" array;
+  * every event has a string "name", integer "pid"/"tid", and a phase
+    "ph" in {B, E, i, C, M};
+  * every non-metadata event has a finite, non-negative numeric "ts"
+    (microseconds), and the array is sorted by "ts" (the exporter
+    emits a stable global sort);
+  * B/E spans balance as a LIFO per (pid, tid) track, with matching
+    names, and no E without an open B;
+  * at least one counter ("C") event and at least one instant ("i")
+    or span event exist (a trace with only metadata is vacuous).
+
+Usage: validate_trace.py <trace.json>
+Exit status 0 iff the file validates; problems go to stderr.
+"""
+
+import json
+import math
+import sys
+
+VALID_PH = {"B", "E", "i", "C", "M"}
+
+
+def fail(msg):
+    print(f"validate_trace: {msg}", file=sys.stderr)
+    return 1
+
+
+def validate(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return fail(f"cannot parse {path}: {e}")
+
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return fail("top level must be an object with a traceEvents array")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        return fail("traceEvents must be a non-empty array")
+
+    errors = 0
+    last_ts = -math.inf
+    open_spans = {}  # (pid, tid) -> stack of B names
+    counts = {}
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            errors += fail(f"{where}: not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in VALID_PH:
+            errors += fail(f"{where}: bad ph {ph!r}")
+            continue
+        counts[ph] = counts.get(ph, 0) + 1
+        name = ev.get("name")
+        if not isinstance(name, str) or not name:
+            errors += fail(f"{where}: missing/empty name")
+        if not isinstance(ev.get("pid"), int) or not isinstance(ev.get("tid"), int):
+            errors += fail(f"{where}: pid/tid must be integers")
+        if ph == "M":
+            continue  # metadata carries no timestamp
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts) or ts < 0:
+            errors += fail(f"{where}: ts must be a finite non-negative number, got {ts!r}")
+            continue
+        if ts < last_ts:
+            errors += fail(f"{where}: ts {ts} < previous {last_ts} (not sorted)")
+        last_ts = ts
+        track = (ev["pid"], ev["tid"]) if isinstance(ev.get("pid"), int) else None
+        if ph == "B" and track is not None:
+            open_spans.setdefault(track, []).append(name)
+        elif ph == "E" and track is not None:
+            stack = open_spans.get(track, [])
+            if not stack:
+                errors += fail(f"{where}: E {name!r} on track {track} with no open B")
+            else:
+                opened = stack.pop()
+                if opened != name:
+                    errors += fail(
+                        f"{where}: E {name!r} closes B {opened!r} on track {track} "
+                        "(spans must nest)"
+                    )
+
+    for track, stack in open_spans.items():
+        if stack:
+            errors += fail(f"track {track}: {len(stack)} unclosed B span(s): {stack}")
+
+    if counts.get("C", 0) == 0:
+        errors += fail("no counter (C) events — telemetry series missing")
+    if counts.get("B", 0) == 0 and counts.get("i", 0) == 0:
+        errors += fail("no span (B/E) or instant (i) events — trace is vacuous")
+
+    total = sum(counts.values())
+    by_ph = ", ".join(f"{ph}={counts[ph]}" for ph in sorted(counts))
+    print(f"validate_trace: {path}: {total} events ({by_ph}) — " + ("FAIL" if errors else "OK"))
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 2:
+        sys.exit(fail("usage: validate_trace.py <trace.json>"))
+    sys.exit(validate(sys.argv[1]))

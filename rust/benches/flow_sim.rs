@@ -18,12 +18,13 @@ use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::sim::cluster::Cluster;
 use pathfinder_queries::sim::demand::PhaseDemand;
 use pathfinder_queries::sim::flow::{
-    Admission, FlowSim, OnFull, Priority, QuerySpec, ShareWeights, SolverMode,
+    Admission, FlowReport, FlowSim, OnFull, Priority, QuerySpec, ShareWeights, SolverMode,
 };
 use pathfinder_queries::sim::machine::Machine;
 use pathfinder_queries::util::bench::{black_box, Bench};
 use pathfinder_queries::util::json::Json;
 use pathfinder_queries::util::rng::SplitMix64;
+use pathfinder_queries::util::stats::Quantiles;
 
 /// Synthetic multi-phase query resembling a BFS demand profile.
 fn synth_query(rng: &mut SplitMix64, m: &Machine, id: usize) -> QuerySpec {
@@ -299,7 +300,7 @@ fn host_scaling() -> HostScaling {
 ///   ns` (0.014 s), Standard at 20e6, Batch at 24e6 — mean 0.019333 s.
 ///
 /// `ci/BENCH_baseline.json` checks in exactly these values.
-fn gate_metrics() -> Vec<(&'static str, f64)> {
+fn gate_metrics() -> (Vec<(&'static str, f64)>, Json) {
     let m = Machine::new(MachineConfig::preset("pathfinder-8").unwrap());
     let sim = FlowSim::new(m.clone());
     let specs = gate_specs(&m);
@@ -342,9 +343,8 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
     let bfused_specs = batched_gate_specs(&m, 2);
     let bfused = sim.run_admitted(&bfused_specs, Admission::unlimited());
     // Guard the gate's own validity: the closed forms assume every spec
-    // completes. label/class means return 0.0 when nothing completed,
-    // which the relative check would wave through as an "improvement" —
-    // fail loudly here instead.
+    // completes, and the mean-latency accessors are None otherwise —
+    // fail loudly with scenario names instead of a bare unwrap.
     for (name, rep, len) in [
         ("mixed_mutation/flat", &mflat, mspecs.len()),
         ("mixed_mutation/weighted", &mweighted, mspecs.len()),
@@ -361,13 +361,13 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
     // The PR acceptance bound, enforced in-bench so the gate fails even
     // without a baseline file: fusing 32 same-epoch BFS at width 16 must
     // at least halve the mean latency (the closed forms give 16x).
-    let batched_ratio = bfused.mean_latency_s() / bunbatched.mean_latency_s();
+    let bfused_mean = bfused.mean_latency_s().expect("batched/fused completed");
+    let bunbatched_mean = bunbatched.mean_latency_s().expect("batched/unbatched completed");
+    let batched_ratio = bfused_mean / bunbatched_mean;
     assert!(
         batched_ratio <= 0.5,
-        "batched gate: fused mean latency {} s must be <= 0.5x the unbatched {} s \
-         (ratio {batched_ratio})",
-        bfused.mean_latency_s(),
-        bunbatched.mean_latency_s()
+        "batched gate: fused mean latency {bfused_mean} s must be <= 0.5x the \
+         unbatched {bunbatched_mean} s (ratio {batched_ratio})"
     );
     assert_eq!(
         mflat.label_latencies_s("mutate").len(),
@@ -388,57 +388,119 @@ fn gate_metrics() -> Vec<(&'static str, f64)> {
             "fleet: the {label} class must complete"
         );
     }
-    vec![
-        ("mixed/unweighted/mean_latency_s", flat.mean_latency_s()),
-        ("mixed/weighted/mean_latency_s", weighted.mean_latency_s()),
+    let metrics = vec![
+        ("mixed/unweighted/mean_latency_s", flat.mean_latency_s().expect("mixed/flat")),
+        ("mixed/weighted/mean_latency_s", weighted.mean_latency_s().expect("mixed/weighted")),
         (
             "mixed/weighted/interactive_mean_latency_s",
-            weighted.class_mean_latency_s(Priority::Interactive),
+            weighted.class_mean_latency_s(Priority::Interactive).expect("mixed/weighted"),
         ),
-        ("mixed_mutation/unweighted/mean_latency_s", mflat.mean_latency_s()),
+        (
+            "mixed_mutation/unweighted/mean_latency_s",
+            mflat.mean_latency_s().expect("mixed_mutation/flat"),
+        ),
         (
             "mixed_mutation/weighted/interactive_mean_latency_s",
-            mweighted.class_mean_latency_s(Priority::Interactive),
+            mweighted
+                .class_mean_latency_s(Priority::Interactive)
+                .expect("mixed_mutation/weighted"),
         ),
         (
             "mixed_mutation/weighted/mutate_mean_latency_s",
-            mweighted.label_mean_latency_s("mutate"),
+            mweighted.label_mean_latency_s("mutate").expect("mixed_mutation/mutate lane"),
         ),
-        ("analyses/unweighted/mean_latency_s", aflat.mean_latency_s()),
+        ("analyses/unweighted/mean_latency_s", aflat.mean_latency_s().expect("analyses/flat")),
         (
             "analyses/weighted/pagerank_mean_latency_s",
-            aweighted.label_mean_latency_s("pagerank"),
+            aweighted.label_mean_latency_s("pagerank").expect("analyses/pagerank"),
         ),
         (
             "analyses/weighted/tricount_mean_latency_s",
-            aweighted.label_mean_latency_s("tricount"),
+            aweighted.label_mean_latency_s("tricount").expect("analyses/tricount"),
         ),
-        ("fleet/unweighted/mean_latency_s", fflat.mean_latency_s()),
+        ("fleet/unweighted/mean_latency_s", fflat.mean_latency_s().expect("fleet/flat")),
         (
             "fleet/weighted/bfs_mean_latency_s",
-            fweighted.label_mean_latency_s("bfs"),
+            fweighted.label_mean_latency_s("bfs").expect("fleet/bfs"),
         ),
         (
             "fleet/weighted/cc_mean_latency_s",
-            fweighted.label_mean_latency_s("cc"),
+            fweighted.label_mean_latency_s("cc").expect("fleet/cc"),
         ),
-        ("batched/unbatched/mean_latency_s", bunbatched.mean_latency_s()),
-        ("batched/fused/mean_latency_s", bfused.mean_latency_s()),
+        ("batched/unbatched/mean_latency_s", bunbatched_mean),
+        ("batched/fused/mean_latency_s", bfused_mean),
         ("batched/latency_ratio", batched_ratio),
-    ]
+    ];
+    // The standardized per-scenario class matrix (p50/p95/p99 per priority
+    // class) that rides along in BENCH_pr.json — informational, not gated.
+    let class_matrix = Json::obj(vec![
+        ("mixed/unweighted", class_matrix_row(&flat)),
+        ("mixed/weighted", class_matrix_row(&weighted)),
+        ("mixed_mutation/unweighted", class_matrix_row(&mflat)),
+        ("mixed_mutation/weighted", class_matrix_row(&mweighted)),
+        ("analyses/unweighted", class_matrix_row(&aflat)),
+        ("analyses/weighted", class_matrix_row(&aweighted)),
+        ("fleet/unweighted", class_matrix_row(&fflat)),
+        ("fleet/weighted", class_matrix_row(&fweighted)),
+        ("batched/unbatched", class_matrix_row(&bunbatched)),
+        ("batched/fused", class_matrix_row(&bfused)),
+    ]);
+    (metrics, class_matrix)
+}
+
+/// One class-matrix row: per priority class, completed count + p50/p95/p99
+/// latency (seconds); `null` for a class with no completions.
+fn class_matrix_row(rep: &FlowReport) -> Json {
+    let cell = |p: Priority, name: &str| {
+        let xs = rep.class_latencies_s(p);
+        let v = match Quantiles::try_from_samples(&xs) {
+            None => Json::Null,
+            Some(q) => Json::obj(vec![
+                ("n", Json::Num(xs.len() as f64)),
+                ("p50_s", Json::Num(q.q50)),
+                ("p95_s", Json::Num(q.q95)),
+                ("p99_s", Json::Num(q.q99)),
+            ]),
+        };
+        (name, v)
+    };
+    Json::obj(vec![
+        cell(Priority::Interactive, "interactive"),
+        cell(Priority::Standard, "standard"),
+        cell(Priority::Batch, "batch"),
+    ])
+}
+
+/// The run-environment record written into BENCH_pr.json so any archived
+/// report is attributable: commit, toolchain, host triple, presets, seed.
+fn environment() -> Json {
+    let env_or = |keys: &[&str]| {
+        keys.iter().find_map(|k| std::env::var(k).ok()).map_or(Json::Null, Json::str)
+    };
+    Json::obj(vec![
+        ("git_commit", env_or(&["PFQ_GIT_COMMIT", "GITHUB_SHA"])),
+        ("toolchain", env_or(&["RUSTUP_TOOLCHAIN"])),
+        ("os", Json::str(std::env::consts::OS)),
+        ("arch", Json::str(std::env::consts::ARCH)),
+        ("gate_machine", Json::str("pathfinder-8")),
+        ("synth_seed", Json::Num(7.0)),
+        ("host_scaling_seed", Json::str("0xBEEF ^ level")),
+    ])
 }
 
 /// Emit `$PFQ_BENCH_JSON` and enforce `$PFQ_BENCH_BASELINE`; returns
 /// false when a gated metric regressed beyond the baseline tolerance.
 fn run_gate(bench: &Bench, host: &HostScaling) -> bool {
-    let metrics = gate_metrics();
+    let (metrics, class_matrix) = gate_metrics();
     println!("\n== bench-gate metrics (simulated, deterministic) ==");
     for (k, v) in &metrics {
         println!("  {k} = {v:.9}");
     }
     if let Ok(path) = std::env::var("PFQ_BENCH_JSON") {
         let obj = Json::obj(vec![
-            ("schema", Json::num(1.0)),
+            ("schema", Json::num(2.0)),
+            ("environment", environment()),
+            ("class_matrix", class_matrix),
             (
                 "metrics",
                 Json::Obj(

@@ -294,8 +294,8 @@ impl RunReport {
             shed: rs.iter().filter(|r| r.shed()).count(),
             preempted: rs.iter().filter(|r| r.preempted()).count(),
             promoted: rs.iter().filter(|r| r.promoted()).count(),
-            mean_wait_s: if waits.is_empty() { 0.0 } else { crate::util::stats::mean(&waits) },
-            latency: (!lats.is_empty()).then(|| Quantiles::from_samples(&lats)),
+            mean_wait_s: crate::util::stats::try_mean(&waits).unwrap_or(0.0),
+            latency: Quantiles::try_from_samples(&lats),
         })
     }
 
@@ -317,12 +317,7 @@ impl RunReport {
     /// Quantile summary of per-query latency (s), optionally filtered by
     /// label. None if no completed query matches.
     pub fn latency_quantiles(&self, label: Option<&str>) -> Option<Quantiles> {
-        let xs = self.latencies(label);
-        if xs.is_empty() {
-            None
-        } else {
-            Some(Quantiles::from_samples(&xs))
-        }
+        Quantiles::try_from_samples(&self.latencies(label))
     }
 
     /// Latency quantiles of every class that completed at least one query,
@@ -334,10 +329,10 @@ impl RunReport {
             .collect()
     }
 
-    /// Mean completed-query latency (s).
-    pub fn mean_latency_s(&self) -> f64 {
-        let xs = self.latencies(None);
-        crate::util::stats::mean(&xs)
+    /// Mean completed-query latency (s), or `None` if nothing completed
+    /// (the old version panicked on a fully-shed run).
+    pub fn mean_latency_s(&self) -> Option<f64> {
+        crate::util::stats::try_mean(&self.latencies(None))
     }
 
     /// Completed queries per second of makespan.
@@ -346,6 +341,56 @@ impl RunReport {
             return 0.0;
         }
         self.completed() as f64 / self.makespan_s
+    }
+
+    /// Standardized per-scenario report table (markdown), the repeatable
+    /// format the ROADMAP's reporting item calls for (modeled on
+    /// postgresflow's `docs/BENCHMARKING.md`): one row per analysis
+    /// label with tail quantiles, shed counts and disposition notes.
+    /// `n/a` marks a scenario that completed nothing — distinguishable
+    /// from a true zero-latency run.
+    ///
+    /// ```text
+    /// | scenario | p50 (s) | p95 (s) | p99 (s) | sheds | notes |
+    /// |---|---:|---:|---:|---:|---|
+    /// | bfs | 0.011200 | 0.019800 | 0.021000 | 0 | 24/24 completed |
+    /// ```
+    pub fn report_table(&self) -> String {
+        let mut out = String::from(
+            "| scenario | p50 (s) | p95 (s) | p99 (s) | sheds | notes |\n\
+             |---|---:|---:|---:|---:|---|\n",
+        );
+        let fmt = |x: Option<f64>| match x {
+            Some(v) => format!("{v:.6}"),
+            None => "n/a".to_string(),
+        };
+        for label in self.labels() {
+            let rs: Vec<&QueryRecord> =
+                self.records.iter().filter(|r| r.label == label).collect();
+            let q = self.latency_quantiles(Some(label));
+            let sheds = rs.iter().filter(|r| r.shed()).count();
+            let completed = rs.iter().filter(|r| r.completed()).count();
+            let mut notes = format!("{completed}/{} completed", rs.len());
+            let rejected = rs.iter().filter(|r| r.rejected()).count();
+            if rejected > 0 {
+                notes.push_str(&format!(", {rejected} rejected"));
+            }
+            let preempted = rs.iter().filter(|r| r.preempted()).count();
+            if preempted > 0 {
+                notes.push_str(&format!(", {preempted} preempted"));
+            }
+            let misses = rs.iter().filter(|r| r.missed_deadline()).count();
+            if misses > 0 {
+                notes.push_str(&format!(", {misses} deadline misses"));
+            }
+            out.push_str(&format!(
+                "| {label} | {} | {} | {} | {sheds} | {notes} |\n",
+                fmt(q.map(|q| q.q50)),
+                fmt(q.map(|q| q.q95)),
+                fmt(q.map(|q| q.q99)),
+            ));
+        }
+        out
     }
 }
 
@@ -582,6 +627,42 @@ mod tests {
         let m = machine();
         let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
         assert_eq!(rep.labels(), vec!["bfs", "cc"]);
+    }
+
+    /// Bugfix: a run where nothing completed used to panic in
+    /// `mean_latency_s` (empty mean) — now it reports `None`, and the
+    /// report table renders `n/a` instead of a fake 0.000000.
+    #[test]
+    fn empty_completion_set_reports_none_not_zero() {
+        let (qs, mut flow) = flow_with(&[1e9, 2e9]);
+        for i in [0, 1] {
+            flow.timings[i].finish_ns = f64::NAN;
+            flow.timings[i].start_ns = f64::NAN;
+        }
+        flow.shed = vec![0, 1];
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        assert_eq!(rep.completed(), 0);
+        assert_eq!(rep.mean_latency_s(), None);
+        assert!(rep.latency_quantiles(None).is_none());
+        let table = rep.report_table();
+        assert!(table.contains("| bfs | n/a | n/a | n/a | 2 | 0/2 completed |"), "{table}");
+    }
+
+    #[test]
+    fn report_table_renders_quantiles_and_notes() {
+        let (mut qs, mut flow) = flow_with(&[1e9, 2e9, 3e9, 4e9]);
+        qs[3] = QueryRequest::new(Cc);
+        flow.timings[3].finish_ns = f64::NAN;
+        flow.timings[3].start_ns = f64::NAN;
+        flow.shed = vec![3];
+        let m = machine();
+        let rep = RunReport::from_flow("concurrent", &m, &qs, &flow);
+        let table = rep.report_table();
+        assert!(table.starts_with("| scenario | p50 (s) | p95 (s) | p99 (s) | sheds | notes |"));
+        assert!(table.contains("| bfs | 2.000000 |"), "{table}");
+        assert!(table.contains("| cc | n/a | n/a | n/a | 1 | 0/1 completed |"), "{table}");
+        assert!(table.contains("3/3 completed"), "{table}");
     }
 
     /// Batched fan-out: members of a fused timing keep their own labels,

@@ -39,7 +39,13 @@
 //!   members, rooted traversals priced with explicit per-level cross-shard
 //!   frontier exchange on the fleet interconnect, update batches fanned
 //!   out through one ordered log so every replica of a shard agrees per
-//!   epoch (DESIGN.md §Fleet).
+//!   epoch (DESIGN.md §Fleet);
+//! * [`telemetry`] — the observability layer (`--trace`): replays the
+//!   engine's [`crate::sim::trace::TraceBuffer`] into sampled
+//!   time-series (per-chassis utilization, queue depth per class,
+//!   context bytes in flight), per-class latency quantiles, and two
+//!   artifacts — Perfetto-openable Chrome trace-event JSON plus a
+//!   machine-readable `*.telemetry.json` (DESIGN.md §Observability).
 
 pub mod admission;
 pub mod batch;
@@ -50,6 +56,7 @@ pub mod planner;
 pub mod request;
 pub mod scheduler;
 pub mod service;
+pub mod telemetry;
 
 pub use admission::{ContextExhausted, ContextLedger};
 pub use batch::{BatchConfig, BatchPlan};
@@ -64,6 +71,7 @@ pub use planner::{arrival_times, bfs_queries, mix_queries};
 pub use request::{Priority, QueryRequest};
 pub use scheduler::{Coordinator, Policy};
 pub use service::{
-    GraphService, PriorityMix, ServiceConfig, ServiceReport, SloOutcome, WorkloadClass,
-    WorkloadSpec,
+    GraphService, PriorityMix, ServiceConfig, ServiceReport, SloOutcome, TraceSpec,
+    WorkloadClass, WorkloadSpec,
 };
+pub use telemetry::{Telemetry, TelemetryConfig};

@@ -20,6 +20,7 @@ use crate::sim::demand::PhaseDemand;
 use crate::sim::flow::{FlowSim, OnFull, QuerySpec, ShareWeights};
 use crate::sim::machine::Machine;
 use crate::sim::preempt::PreemptPolicy;
+use crate::sim::trace::{NullSink, TraceSink};
 use std::collections::HashMap;
 
 use super::metrics::RunReport;
@@ -270,10 +271,28 @@ impl<'g> Coordinator<'g> {
         specs: &[QuerySpec],
         policy: Policy,
     ) -> anyhow::Result<RunReport> {
+        self.run_specs_grouped_traced(requests, group_of, fused, specs, policy, &mut NullSink)
+    }
+
+    /// [`Coordinator::run_specs_grouped`] with a [`TraceSink`] receiving
+    /// every engine scheduling event (DESIGN.md §Observability). The
+    /// default path above passes [`NullSink`], which monomorphizes all
+    /// emission sites away — tracing is observation only and the traced
+    /// report is bit-identical to the untraced one (pinned by property
+    /// test).
+    pub fn run_specs_grouped_traced<S: TraceSink>(
+        &self,
+        requests: &[QueryRequest],
+        group_of: &[usize],
+        fused: &[QueryRequest],
+        specs: &[QuerySpec],
+        policy: Policy,
+        sink: &mut S,
+    ) -> anyhow::Result<RunReport> {
         assert_eq!(fused.len(), specs.len());
         assert_eq!(requests.len(), group_of.len());
         let flow = match policy {
-            Policy::Sequential => self.sim.run_sequential(specs),
+            Policy::Sequential => self.sim.run_sequential_traced(specs, sink),
             Policy::Concurrent => {
                 let demand = self.ctx_demand_bytes(fused);
                 let cap = self.ctx_capacity_bytes();
@@ -288,7 +307,7 @@ impl<'g> Coordinator<'g> {
                     cap >> 20,
                     self.capacity()
                 );
-                self.sim.run(specs)
+                self.sim.run_traced(specs, sink)
             }
             Policy::ConcurrentAdmitted { on_full, weights, preempt } => {
                 weights.validate()?;
@@ -307,7 +326,7 @@ impl<'g> Coordinator<'g> {
                 }
                 let mut adm = ledger.policy(on_full).with_weights(weights);
                 adm.preempt = preempt;
-                self.sim.run_admitted(specs, adm)
+                self.sim.run_admitted_traced(specs, adm, sink)
             }
         };
         Ok(RunReport::from_flow_grouped(
@@ -469,17 +488,40 @@ mod tests {
         let f0 = rep.records[0].finish_s;
         assert!(rep.records.iter().all(|r| r.finish_s == f0));
         let unbatched = c.run(&qs, Policy::admitted(OnFull::Queue)).unwrap();
+        let fused_mean = rep.mean_latency_s().expect("all members completed");
+        let unbatched_mean = unbatched.mean_latency_s().expect("all queries completed");
         assert!(
-            rep.mean_latency_s() < unbatched.mean_latency_s(),
-            "fused {} vs unbatched {}",
-            rep.mean_latency_s(),
-            unbatched.mean_latency_s()
+            fused_mean < unbatched_mean,
+            "fused {fused_mean} vs unbatched {unbatched_mean}"
         );
         // Width 1 degenerates to the plain submission path exactly.
         let solo_cfg = BatchConfig { width: 1, window_ns: 1e9 };
         let solo = c.submit_batched(qs.clone(), Policy::admitted(OnFull::Queue), &solo_cfg).unwrap();
         assert_eq!(solo.mean_latency_s(), unbatched.mean_latency_s());
         assert_eq!(solo.makespan_s, unbatched.makespan_s);
+    }
+
+    /// The traced path is observation only: same report, plus a
+    /// non-empty event stream covering the query lifecycle.
+    #[test]
+    fn traced_run_matches_untraced_and_emits_lifecycle() {
+        let g = rmat(9);
+        let c = coord(&g);
+        let qs = planner::bfs_queries(&g, 6, 7);
+        let specs = c.prepare(c.view(), 0, &qs, 0);
+        let identity: Vec<usize> = (0..qs.len()).collect();
+        let mut buf = crate::sim::trace::TraceBuffer::new();
+        let policy = Policy::admitted(OnFull::Queue);
+        let traced = c
+            .run_specs_grouped_traced(&qs, &identity, &qs, &specs, policy, &mut buf)
+            .unwrap();
+        let plain = c.run_specs(&qs, &specs, policy).unwrap();
+        assert_eq!(traced.completed(), plain.completed());
+        assert_eq!(traced.makespan_s, plain.makespan_s);
+        let kinds: Vec<&str> = buf.counts_by_kind().iter().map(|&(k, _)| k).collect();
+        for kind in ["arrival", "admit", "phase_start", "phase_end", "finish", "solve"] {
+            assert!(kinds.contains(&kind), "missing {kind} in {kinds:?}");
+        }
     }
 
     #[test]

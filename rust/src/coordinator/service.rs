@@ -22,12 +22,14 @@ use crate::graph::store::GraphStore;
 use crate::sim::flow::{OnFull, QuerySpec, ShareWeights};
 use crate::sim::machine::Machine;
 use crate::sim::preempt::PreemptPolicy;
+use crate::sim::trace::{TraceBuffer, TraceEvent};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::Quantiles;
 use std::sync::Arc;
 
 use super::planner::arrival_times;
 use super::scheduler::{Coordinator, Policy};
+use super::telemetry::TelemetryConfig;
 
 /// One weighted analysis class of a service workload.
 #[derive(Clone)]
@@ -290,6 +292,49 @@ impl WorkloadSpec {
     }
 }
 
+/// Where `--trace` writes its artifacts (DESIGN.md §Observability).
+#[derive(Debug, Clone)]
+pub struct TraceSpec {
+    /// Chrome trace-event JSON output path (Perfetto-openable); the
+    /// machine-readable telemetry lands next to it as
+    /// `<stem>.telemetry.json`.
+    pub path: std::path::PathBuf,
+    /// Telemetry sample interval (simulated ns); 0 = auto (span/256).
+    pub sample_ns: f64,
+}
+
+impl TraceSpec {
+    pub fn new(path: impl Into<std::path::PathBuf>) -> Self {
+        TraceSpec { path: path.into(), sample_ns: 0.0 }
+    }
+
+    /// Parse the CLI form `PATH[,sample=NS]` (NS = simulated nanoseconds
+    /// between telemetry samples; omitted = auto).
+    pub fn parse(spec: &str) -> anyhow::Result<Self> {
+        let mut parts = spec.split(',');
+        let path = parts
+            .next()
+            .filter(|p| !p.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("--trace needs an output path"))?;
+        let mut out = TraceSpec::new(path);
+        for part in parts {
+            match part.split_once('=') {
+                Some(("sample", ns)) => {
+                    out.sample_ns = ns
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--trace sample={ns:?} is not a number"))?;
+                    anyhow::ensure!(
+                        out.sample_ns > 0.0,
+                        "--trace sample interval must be positive"
+                    );
+                }
+                _ => anyhow::bail!("unknown --trace option {part:?} (want PATH[,sample=NS])"),
+            }
+        }
+        Ok(out)
+    }
+}
+
 /// Service workload description.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -327,6 +372,11 @@ pub struct ServiceConfig {
     /// while each keeps its own latency/SLO record (DESIGN.md §Batching);
     /// None = every query runs solo, the byte-identical fast path.
     pub batch: Option<BatchConfig>,
+    /// Query-lifecycle tracing (`serve --trace out.json[,sample=NS]`):
+    /// record every engine scheduling event plus coordinator spans and
+    /// export Chrome trace JSON + machine-readable telemetry (None = no
+    /// tracing, the zero-cost [`crate::sim::trace::NullSink`] path).
+    pub trace: Option<TraceSpec>,
     /// RNG seed (arrivals, sources, query classes, priorities; the
     /// mutation stream forks an independent sub-stream from it).
     pub seed: u64,
@@ -345,6 +395,7 @@ impl Default for ServiceConfig {
             mutation: None,
             fleet: None,
             batch: None,
+            trace: None,
             seed: 0x5E21,
         }
     }
@@ -402,6 +453,11 @@ impl ServiceConfig {
 
     pub fn with_batch(mut self, batch: BatchConfig) -> Self {
         self.batch = Some(batch);
+        self
+    }
+
+    pub fn with_trace(mut self, trace: TraceSpec) -> Self {
+        self.trace = Some(trace);
         self
     }
 
@@ -561,20 +617,53 @@ impl<'g> GraphService<'g> {
             weights: cfg.weights,
             preempt: cfg.preempt,
         };
+        let mut tracer = cfg.trace.as_ref().map(|_| TraceBuffer::new());
+        let mut coord_events: Vec<TraceEvent> = Vec::new();
         let report = match &cfg.batch {
             // Static graph = one epoch: every compatible request is a
             // fusion candidate, capped only by the width/window budget.
             Some(bcfg) => {
                 let plan = BatchPlan::build(&requests, None, bcfg)?;
                 let specs = self.coord.prepare(self.coord.view(), 0, plan.fused(), 0);
-                self.coord
-                    .run_specs_grouped(&requests, plan.group_of(), plan.fused(), &specs, policy)?
+                if tracer.is_some() {
+                    fusion_events(plan.group_of(), plan.fused(), &mut coord_events);
+                }
+                match tracer.as_mut() {
+                    Some(buf) => self.coord.run_specs_grouped_traced(
+                        &requests,
+                        plan.group_of(),
+                        plan.fused(),
+                        &specs,
+                        policy,
+                        buf,
+                    )?,
+                    None => self.coord.run_specs_grouped(
+                        &requests,
+                        plan.group_of(),
+                        plan.fused(),
+                        &specs,
+                        policy,
+                    )?,
+                }
             }
-            None => self.coord.run(&requests, policy)?,
+            None => match tracer.as_mut() {
+                Some(buf) => {
+                    let specs = self.coord.prepare(self.coord.view(), 0, &requests, 0);
+                    let identity: Vec<usize> = (0..requests.len()).collect();
+                    self.coord
+                        .run_specs_grouped_traced(&requests, &identity, &requests, &specs, policy, buf)?
+                }
+                None => self.coord.run(&requests, policy)?,
+            },
         };
 
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
-        Ok(self.build_report(cfg, &report, first_arrival, None))
+        let out = self.build_report(cfg, &report, first_arrival, None);
+        if let Some(mut buf) = tracer {
+            buf.events.extend(coord_events);
+            self.export_trace(cfg, &buf, self.coord.machine())?;
+        }
+        Ok(out)
     }
 
     /// Build the fleet router when [`ServiceConfig::fleet`] is set:
@@ -619,15 +708,40 @@ impl<'g> GraphService<'g> {
             weights: cfg.weights,
             preempt: cfg.preempt,
         };
-        let report = match &plan {
-            Some(p) => {
+        let mut tracer = cfg.trace.as_ref().map(|_| TraceBuffer::new());
+        let mut coord_events: Vec<TraceEvent> = Vec::new();
+        if tracer.is_some() {
+            if let Some(p) = &plan {
+                fusion_events(p.group_of(), p.fused(), &mut coord_events);
+            }
+            route_events(&fleet, to_prepare, &mut coord_events);
+        }
+        let report = match (&plan, tracer.as_mut()) {
+            (Some(p), Some(buf)) => fleet_coord.run_specs_grouped_traced(
+                &requests,
+                p.group_of(),
+                p.fused(),
+                &specs,
+                policy,
+                buf,
+            )?,
+            (Some(p), None) => {
                 fleet_coord.run_specs_grouped(&requests, p.group_of(), p.fused(), &specs, policy)?
             }
-            None => fleet_coord.run_specs(&requests, &specs, policy)?,
+            (None, Some(buf)) => {
+                let identity: Vec<usize> = (0..requests.len()).collect();
+                fleet_coord
+                    .run_specs_grouped_traced(&requests, &identity, &requests, &specs, policy, buf)?
+            }
+            (None, None) => fleet_coord.run_specs(&requests, &specs, policy)?,
         };
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
         let mut out = self.build_report(cfg, &report, first_arrival, None);
         out.fleet = Some(fleet.stats(&specs, out.duration_s * 1e9));
+        if let Some(mut buf) = tracer {
+            buf.events.extend(coord_events);
+            self.export_trace(cfg, &buf, fleet.machine())?;
+        }
         Ok(out)
     }
 
@@ -685,6 +799,12 @@ impl<'g> GraphService<'g> {
             weights: cfg.weights,
             preempt: cfg.preempt,
         };
+        // Coordinator-level events (epoch applies, compaction folds, batch
+        // fusion, shard routing) collect separately from the engine buffer:
+        // the fold fixed-point below may discard the first engine run, and
+        // these events must survive that re-run.
+        let mut tracer = cfg.trace.as_ref().map(|_| TraceBuffer::new());
+        let mut coord_events: Vec<TraceEvent> = Vec::new();
         // One shared generator with the static path: the query stream for
         // a given seed is draw-for-draw the same with or without mutation.
         let (query_requests, arrivals) = self.build_query_stream(cfg);
@@ -806,6 +926,13 @@ impl<'g> GraphService<'g> {
                     &mut content_rng,
                 ));
                 let bs = store.apply_batch(&updates);
+                if tracer.is_some() {
+                    coord_events.push(TraceEvent::EpochApply {
+                        t_ns: batch_arrivals[bi],
+                        epoch: bs.epoch,
+                        updates: updates.len(),
+                    });
+                }
                 updates_total += updates.len();
                 inserted += bs.inserted;
                 deleted += bs.deleted;
@@ -884,9 +1011,30 @@ impl<'g> GraphService<'g> {
         )?;
         debug_assert!(group_of.iter().all(|&gi| gi != usize::MAX));
 
-        let report = match &fleet_coord {
-            Some(c) => c.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
-            None => self.coord.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
+        if tracer.is_some() {
+            fusion_events(&group_of, &fused, &mut coord_events);
+            if let Some(f) = &fleet {
+                route_events(f, &fused, &mut coord_events);
+            }
+        }
+        let report = match (&fleet_coord, tracer.as_mut()) {
+            (Some(c), Some(buf)) => {
+                c.run_specs_grouped_traced(&requests, &group_of, &fused, &specs, policy(), buf)?
+            }
+            (Some(c), None) => {
+                c.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?
+            }
+            (None, Some(buf)) => self.coord.run_specs_grouped_traced(
+                &requests,
+                &group_of,
+                &fused,
+                &specs,
+                policy(),
+                buf,
+            )?,
+            (None, None) => {
+                self.coord.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?
+            }
         };
 
         // Replay completions: unpin each query's epoch when it finished
@@ -927,6 +1075,11 @@ impl<'g> GraphService<'g> {
         // submitted as Batch-class work at the instant the replay
         // triggered it (method docs). With R fleet replicas every copy of
         // the shard folds its own base, so the volume scales by R.
+        if tracer.is_some() {
+            for &(t_s, _, drained, epoch) in &folds {
+                coord_events.push(TraceEvent::Compaction { t_ns: t_s * 1e9, epoch, drained });
+            }
+        }
         let report = if folds.is_empty() {
             report
         } else {
@@ -950,9 +1103,29 @@ impl<'g> GraphService<'g> {
                 fused.push(req);
                 specs.push(spec);
             }
-            match &fleet_coord {
-                Some(c) => c.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
-                None => self.coord.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?,
+            // The fold-accounting run IS the reported run: restart the
+            // engine trace so the artifact matches the final timeline.
+            if let Some(buf) = tracer.as_mut() {
+                buf.events.clear();
+            }
+            match (&fleet_coord, tracer.as_mut()) {
+                (Some(c), Some(buf)) => {
+                    c.run_specs_grouped_traced(&requests, &group_of, &fused, &specs, policy(), buf)?
+                }
+                (Some(c), None) => {
+                    c.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?
+                }
+                (None, Some(buf)) => self.coord.run_specs_grouped_traced(
+                    &requests,
+                    &group_of,
+                    &fused,
+                    &specs,
+                    policy(),
+                    buf,
+                )?,
+                (None, None) => {
+                    self.coord.run_specs_grouped(&requests, &group_of, &fused, &specs, policy())?
+                }
             }
         };
 
@@ -978,7 +1151,32 @@ impl<'g> GraphService<'g> {
         if let Some(f) = &fleet {
             out.fleet = Some(f.stats(&specs, out.duration_s * 1e9));
         }
+        if let Some(mut buf) = tracer {
+            buf.events.extend(coord_events);
+            let machine = fleet.as_ref().map_or(self.coord.machine(), |f| f.machine());
+            self.export_trace(cfg, &buf, machine)?;
+        }
         Ok(out)
+    }
+
+    /// Write the trace artifacts for a finished traced run: Chrome trace
+    /// JSON at the configured path and `<stem>.telemetry.json` beside it.
+    /// `machine` is the machine the run actually executed on — its
+    /// chassis layout drives the per-chassis utilization series (a fleet
+    /// run passes the flattened cluster machine, whose
+    /// `nodes_per_chassis` is one fleet member).
+    fn export_trace(
+        &self,
+        cfg: &ServiceConfig,
+        buf: &TraceBuffer,
+        machine: &Machine,
+    ) -> anyhow::Result<()> {
+        let spec = cfg.trace.as_ref().expect("trace config present");
+        let tcfg = TelemetryConfig::default()
+            .with_sample_ns(spec.sample_ns)
+            .with_chassis(machine.cfg.nodes_per_chassis, machine.cfg.nodes);
+        super::telemetry::export(buf, &tcfg, &spec.path)?;
+        Ok(())
     }
 
     /// Generate the seeded query stream: sources, Poisson arrivals, and
@@ -1069,6 +1267,44 @@ impl<'g> GraphService<'g> {
             seed: cfg.seed,
             mutation,
             fleet: None,
+        }
+    }
+}
+
+/// One [`TraceEvent::BatchFuse`] per spec that actually coalesced members
+/// (width >= 2), stamped at the fused arrival. `group_of[i]` names the
+/// spec serving original request `i`, exactly as the scheduler consumes
+/// it.
+fn fusion_events(group_of: &[usize], fused: &[QueryRequest], out: &mut Vec<TraceEvent>) {
+    let mut width = vec![0usize; fused.len()];
+    for &gi in group_of {
+        width[gi] += 1;
+    }
+    for (sid, req) in fused.iter().enumerate() {
+        if width[sid] >= 2 {
+            out.push(TraceEvent::BatchFuse {
+                t_ns: req.arrival_ns,
+                id: sid,
+                width: width[sid],
+                label: req.analysis.label(),
+            });
+        }
+    }
+}
+
+/// One [`TraceEvent::ShardRoute`] per rooted engine query: the home shard
+/// of its (first) source and the replica set `id mod R` serving it.
+/// Scatter analyses (and the ingest/fold lanes) span every shard and get
+/// no routing event.
+fn route_events(fleet: &Fleet, fused: &[QueryRequest], out: &mut Vec<TraceEvent>) {
+    for (sid, req) in fused.iter().enumerate() {
+        if let Some(src) = req.analysis.source_set().and_then(|s| s.first().copied()) {
+            out.push(TraceEvent::ShardRoute {
+                t_ns: req.arrival_ns,
+                id: sid,
+                shard: fleet.partition().owner_of(src),
+                replica: fleet.replica_of(sid),
+            });
         }
     }
 }
@@ -1664,5 +1900,99 @@ mod tests {
         let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
         let rep = svc.serve(&built).unwrap();
         assert_eq!(rep.served + rep.rejected + rep.shed, 12);
+    }
+
+    #[test]
+    fn trace_spec_parses_path_and_sample() {
+        let t = TraceSpec::parse("out.json").unwrap();
+        assert_eq!(t.path, std::path::PathBuf::from("out.json"));
+        assert_eq!(t.sample_ns, 0.0);
+        let t = TraceSpec::parse("/tmp/x.json,sample=5e6").unwrap();
+        assert_eq!(t.sample_ns, 5e6);
+        assert!(TraceSpec::parse("").is_err());
+        assert!(TraceSpec::parse("x.json,sample=-1").is_err());
+        assert!(TraceSpec::parse("x.json,bogus=1").is_err());
+    }
+
+    /// The ISSUE 9 acceptance scenario: `serve --fleet --batch --mutate
+    /// --preempt --trace` writes a Chrome trace covering the whole query
+    /// lifecycle (>= 8 event kinds, including coordinator-level batch
+    /// fusion, epoch applies and shard routing) plus a telemetry sidecar
+    /// with non-empty utilization and queue-depth series — and tracing
+    /// changes nothing about the run itself.
+    #[test]
+    fn full_stack_traced_serve_exports_artifacts() {
+        let g = g();
+        let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+        let dir = std::env::temp_dir()
+            .join(format!("pfq-trace-test-{}", std::process::id()));
+        let path = dir.join("out.json");
+        let base = ServiceConfig {
+            queries: 48,
+            arrival_rate_per_s: 2000.0,
+            workload: WorkloadSpec::bfs_cc(0.1),
+            priority_mix: Some(PriorityMix { interactive: 0.3, standard: 0.4, batch: 0.3 }),
+            weights: ShareWeights::priority_weighted(),
+            preempt: Some(PreemptPolicy::default()),
+            mutation: Some(crate::coordinator::mutation::MutationConfig {
+                rate_batches_per_s: 200.0,
+                batch: 16,
+                delete_fraction: 0.2,
+                compact_every: 2,
+            }),
+            fleet: Some(FleetConfig::parse("nodes=2,replicas=2").unwrap()),
+            batch: Some(BatchConfig { width: 8, window_ns: 1e9 }),
+            seed: 3,
+            ..Default::default()
+        };
+        let untraced = svc.serve(&base).unwrap();
+        let traced = svc.serve(&base.clone().with_trace(TraceSpec::new(&path))).unwrap();
+        // Observation only: the traced run is the same run.
+        assert_eq!(traced.served, untraced.served);
+        assert_eq!(traced.duration_s, untraced.duration_s);
+        assert_eq!(traced.peak_concurrency, untraced.peak_concurrency);
+
+        let doc = crate::util::json::Json::parse_file(&path).unwrap();
+        let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let tel = crate::util::json::Json::parse_file(
+            &crate::coordinator::telemetry::telemetry_path(&path),
+        )
+        .unwrap();
+        let counts = tel.get("event_counts").unwrap();
+        let kinds = [
+            "arrival",
+            "admit",
+            "phase_start",
+            "phase_end",
+            "finish",
+            "solve",
+            "batch_fuse",
+            "epoch_apply",
+            "shard_route",
+            "compaction",
+        ];
+        let present: Vec<&str> =
+            kinds.iter().copied().filter(|k| counts.get_opt(k).is_some()).collect();
+        assert!(
+            present.len() >= 8,
+            "want >= 8 lifecycle event kinds, got {present:?}"
+        );
+        let series = tel.get("series").unwrap();
+        assert!(
+            !series.get("t_ns").unwrap().as_arr().unwrap().is_empty(),
+            "sampled time axis present"
+        );
+        assert!(series
+            .get("queue_depth")
+            .unwrap()
+            .get("interactive")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .len()
+            .eq(&series.get("t_ns").unwrap().as_arr().unwrap().len()));
+        assert!(series.get("chassis_utilization").unwrap().get("chassis_0").is_ok());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -17,6 +17,8 @@
 //!                       [--policy sequential|concurrent|queue|reject|shed]
 //!                       [--max-waiting W]
 //!                       [--weights interactive=4,standard=2,batch=1] [--preempt]
+//!                       [--trace out.json[,sample=NS]]   (Chrome trace +
+//!                                      telemetry sidecar; see serve --trace)
 //! pathfinder serve      [--scale N] --machine NAME [--queries K] [--rate Q/S]
 //!                       [--mix bfs=0.7,cc=0.1,pagerank=0.1,tricount=0.1]
 //!                       [--on-full queue|reject|shed] [--max-waiting W]
@@ -40,6 +42,13 @@
 //!                                      sources per fused query, window in
 //!                                      seconds; bare --batch = width=16,
 //!                                      window=0.001)
+//!                       [--trace out.json[,sample=NS]]
+//!                                     (record every scheduling event: writes
+//!                                      Perfetto-openable Chrome trace JSON to
+//!                                      the path plus machine-readable
+//!                                      <stem>.telemetry.json beside it;
+//!                                      sample = telemetry interval in
+//!                                      simulated ns, default auto)
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -59,8 +68,9 @@ use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
-    planner, BatchConfig, Coordinator, FleetConfig, GraphService, MutationConfig, Policy,
-    PreemptPolicy, PriorityMix, QueryRequest, ServiceConfig, ShareWeights, WorkloadSpec,
+    planner, telemetry, BatchConfig, Coordinator, FleetConfig, GraphService, MutationConfig,
+    Policy, PreemptPolicy, PriorityMix, QueryRequest, ServiceConfig, ShareWeights, TraceSpec,
+    WorkloadSpec,
 };
 use pathfinder_queries::graph::builder::build_undirected_csr;
 use pathfinder_queries::graph::csr::Csr;
@@ -366,7 +376,23 @@ fn cmd_run(args: &Args) -> Result<()> {
         bail!("--weights/--preempt need an admitted policy (--policy queue|reject|shed)");
     }
 
-    let rep = coord.run(&queries, policy)?;
+    let trace = args.opt("trace").map(TraceSpec::parse).transpose()?;
+    let rep = match &trace {
+        Some(tspec) => {
+            let mut buf = pathfinder_queries::sim::trace::TraceBuffer::new();
+            let specs = coord.prepare(coord.view(), 0, &queries, 0);
+            let identity: Vec<usize> = (0..queries.len()).collect();
+            let rep = coord
+                .run_specs_grouped_traced(&queries, &identity, &queries, &specs, policy, &mut buf)?;
+            let m = &coord.machine().cfg;
+            let tcfg = telemetry::TelemetryConfig::default()
+                .with_sample_ns(tspec.sample_ns)
+                .with_chassis(m.nodes_per_chassis, m.nodes);
+            telemetry::export(&buf, &tcfg, &tspec.path)?;
+            rep
+        }
+        None => coord.run(&queries, policy)?,
+    };
     let desc: Vec<String> = spec.iter().map(|(l, c)| format!("{c} {l}")).collect();
     println!(
         "{} on {}: {} queries ({})",
@@ -383,7 +409,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         rep.sheds(),
         rep.preempted()
     );
-    println!("  mean latency        {:.4} s", rep.mean_latency_s());
+    match rep.mean_latency_s() {
+        Some(s) => println!("  mean latency        {s:.4} s"),
+        None => println!("  mean latency        n/a (nothing completed)"),
+    }
     println!("  throughput          {:.2} q/s", rep.throughput_qps());
     println!("  peak concurrency    {}", rep.peak_concurrency);
     println!("  channel utilization {:.0}%", rep.mean_channel_utilization * 100.0);
@@ -392,6 +421,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     for s in rep.priority_stats() {
         println!("  {}", s.line());
+    }
+    if let Some(tspec) = &trace {
+        println!(
+            "  trace               {} (+ {})",
+            tspec.path.display(),
+            telemetry::telemetry_path(&tspec.path).display()
+        );
     }
     Ok(())
 }
@@ -443,6 +479,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None if args.has_flag("batch") => Some(BatchConfig::default()),
             None => None,
         },
+        trace: args.opt("trace").map(TraceSpec::parse).transpose()?,
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
     let mix_desc: Vec<String> = cfg
@@ -476,6 +513,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let rep = svc.serve(&cfg)?;
     println!("{}", rep.summary());
+    if let Some(tspec) = &cfg.trace {
+        println!(
+            "trace written: {} (+ {}) — open the first in Perfetto / chrome://tracing",
+            tspec.path.display(),
+            telemetry::telemetry_path(&tspec.path).display()
+        );
+    }
     Ok(())
 }
 

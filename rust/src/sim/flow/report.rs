@@ -95,19 +95,21 @@ pub struct FlowReport {
 }
 
 impl FlowReport {
-    /// Mean completed-query latency (s). Rejected/shed queries carry NaN
-    /// timings and are excluded (they have no latency, and one NaN would
-    /// otherwise poison the mean).
-    pub fn mean_latency_s(&self) -> f64 {
+    /// Mean completed-query latency (s), or `None` if *nothing*
+    /// completed — a fully-shed run has no latency, and the old `0.0`
+    /// return was indistinguishable from a true zero-latency run.
+    /// Rejected/shed queries carry NaN timings and are excluded (they
+    /// have no latency, and one NaN would otherwise poison the mean).
+    pub fn mean_latency_s(&self) -> Option<f64> {
         let (sum, n) = self
             .timings
             .iter()
             .filter(|t| t.completed())
             .fold((0.0, 0usize), |(s, n), t| (s + t.latency_ns(), n + 1));
         if n == 0 {
-            return 0.0;
+            return None;
         }
-        sum / n as f64 * 1e-9
+        Some(sum / n as f64 * 1e-9)
     }
 
     /// Makespan in seconds.
@@ -135,14 +137,14 @@ impl FlowReport {
             .collect()
     }
 
-    /// Mean completed-query latency (s) of one declared priority class;
-    /// 0.0 if the class completed nothing.
-    pub fn class_mean_latency_s(&self, priority: Priority) -> f64 {
+    /// Mean completed-query latency (s) of one declared priority class,
+    /// or `None` if the class completed nothing (e.g. fully shed).
+    pub fn class_mean_latency_s(&self, priority: Priority) -> Option<f64> {
         let xs = self.class_latencies_s(priority);
         if xs.is_empty() {
-            return 0.0;
+            return None;
         }
-        xs.iter().sum::<f64>() / xs.len() as f64
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
     }
 
     /// Completed latencies (s) of one spec label — e.g. the `"mutate"`
@@ -155,13 +157,13 @@ impl FlowReport {
             .collect()
     }
 
-    /// Mean completed latency (s) of one spec label; 0.0 if none
+    /// Mean completed latency (s) of one spec label, or `None` if none
     /// completed.
-    pub fn label_mean_latency_s(&self, label: &str) -> f64 {
+    pub fn label_mean_latency_s(&self, label: &str) -> Option<f64> {
         let xs = self.label_latencies_s(label);
         if xs.is_empty() {
-            return 0.0;
+            return None;
         }
-        xs.iter().sum::<f64>() / xs.len() as f64
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
     }
 }

@@ -40,6 +40,7 @@ use crate::sim::demand::PhaseDemand;
 use crate::sim::ledger::ContextLedger;
 use crate::sim::machine::Machine;
 use crate::sim::preempt::Parker;
+use crate::sim::trace::{NullSink, TraceEvent, TraceSink};
 
 use super::report::{FlowReport, QueryTiming};
 use super::solver::{ActivePhase, IncrementalSolver, UTIL_EPS};
@@ -262,6 +263,12 @@ impl FlowSim {
         self.run_admitted(queries, Admission::unlimited())
     }
 
+    /// [`Self::run`] with a [`TraceSink`] (see
+    /// [`Self::run_admitted_traced`]).
+    pub fn run_traced<S: TraceSink>(&self, queries: &[QuerySpec], sink: &mut S) -> FlowReport {
+        self.run_admitted_traced(queries, Admission::unlimited(), sink)
+    }
+
     /// Run with an admission policy: arrivals beyond `max_in_flight`
     /// concurrent queries or the context byte budget are queued, shed or
     /// rejected per `on_full`. The wait queue is priority-ordered with
@@ -276,6 +283,26 @@ impl FlowSim {
     /// when a blocked Interactive waiter needs its reservation, then
     /// resumed once the pressure clears.
     pub fn run_admitted(&self, queries: &[QuerySpec], adm: Admission) -> FlowReport {
+        self.run_admitted_traced(queries, adm, &mut NullSink)
+    }
+
+    /// [`Self::run_admitted`] with a [`TraceSink`] receiving every
+    /// scheduling event (arrival, admit, queue-enter, shed, reject,
+    /// park/resume, phase start/end, solver re-anchor and flood extent)
+    /// stamped with its simulated time.
+    ///
+    /// Tracing is **observation only**: sinks receive copies of state the
+    /// loop already computed and every emission is gated on
+    /// `S::ENABLED`, so the [`NullSink`] instantiation (what
+    /// [`Self::run_admitted`] delegates to) compiles to the untraced
+    /// loop and a traced run's [`FlowReport`] is bit-identical to the
+    /// untraced one (pinned in `tests/prop_tests.rs`).
+    pub fn run_admitted_traced<S: TraceSink>(
+        &self,
+        queries: &[QuerySpec],
+        adm: Admission,
+        sink: &mut S,
+    ) -> FlowReport {
         adm.weights.validate().expect("invalid fair-share weights");
         let weights = adm.weights;
         let dense = self.mode == SolverMode::Dense;
@@ -336,6 +363,18 @@ impl FlowSim {
                 let ap = $ap;
                 let qi = ap.qi;
                 let tc = Tc(ap.completion_ns());
+                if S::ENABLED {
+                    let p = &queries[qi].phases[ap.phase_idx];
+                    sink.emit(TraceEvent::PhaseStart {
+                        t_ns: t,
+                        id: queries[qi].id,
+                        phase: ap.phase_idx,
+                        solo_ns: ap.solo_ns,
+                        node_offset: p.node_offset,
+                        node_len: p.nodes(),
+                        util_sum: ap.util.iter().map(|&(_, u)| u).sum(),
+                    });
+                }
                 solver.insert(ap);
                 stamps[qi] += 1;
                 heap.push(Reverse((tc, qi, stamps[qi])));
@@ -352,6 +391,16 @@ impl FlowSim {
                 in_flight += 1;
                 events += 1;
                 ledger.admit(qi, q.ctx_bytes).expect("caller checked would_fit");
+                if S::ENABLED {
+                    sink.emit(TraceEvent::Admit {
+                        t_ns: t,
+                        id: q.id,
+                        class: q.priority,
+                        admitted_as: $admitted_as,
+                        wait_ns: t - q.arrival_ns,
+                        ctx_bytes: q.ctx_bytes,
+                    });
+                }
                 timings[qi] = Some(QueryTiming {
                     id: q.id,
                     label: q.label,
@@ -371,6 +420,9 @@ impl FlowSim {
                     timings[qi].as_mut().unwrap().finish_ns = t;
                     in_flight -= 1;
                     ledger.release(qi);
+                    if S::ENABLED {
+                        sink.emit(TraceEvent::Finish { t_ns: t, id: q.id, ctx_bytes: q.ctx_bytes });
+                    }
                 }
                 rates_dirty = true;
             }};
@@ -405,11 +457,27 @@ impl FlowSim {
                 let qi = order[next_arrival];
                 next_arrival += 1;
                 let q = &queries[qi];
+                if S::ENABLED {
+                    sink.emit(TraceEvent::Arrival {
+                        t_ns: q.arrival_ns,
+                        id: q.id,
+                        label: q.label,
+                        class: q.priority,
+                    });
+                }
                 if ledger.check_admissible(q.ctx_bytes).is_err() {
                     // Larger than the whole budget: could never run. The
                     // coordinator pre-checks and raises a typed
                     // ContextExhausted; at the engine level it degrades to
                     // a recorded rejection instead of an eternal wait.
+                    if S::ENABLED {
+                        sink.emit(TraceEvent::Reject {
+                            t_ns: q.arrival_ns,
+                            id: q.id,
+                            class: q.priority,
+                            oversized: true,
+                        });
+                    }
                     drop_query!(qi, rejected);
                     continue;
                 }
@@ -418,11 +486,27 @@ impl FlowSim {
                         if in_flight < cap && ledger.would_fit(q.ctx_bytes) {
                             start_query!(qi, q.priority);
                         } else {
+                            if S::ENABLED {
+                                sink.emit(TraceEvent::Reject {
+                                    t_ns: q.arrival_ns,
+                                    id: q.id,
+                                    class: q.priority,
+                                    oversized: false,
+                                });
+                            }
                             drop_query!(qi, rejected);
                         }
                     }
                     OnFull::Queue | OnFull::Shed { .. } => {
-                        waiting.push(qi, q.priority, q.deadline_ns.map(|d| q.arrival_ns + d))
+                        waiting.push(qi, q.priority, q.deadline_ns.map(|d| q.arrival_ns + d));
+                        if S::ENABLED {
+                            sink.emit(TraceEvent::QueueEnter {
+                                t_ns: q.arrival_ns,
+                                id: q.id,
+                                class: q.priority,
+                                waiting: waiting.len(),
+                            });
+                        }
                     }
                 }
             }
@@ -430,6 +514,15 @@ impl FlowSim {
             // Shed queued queries whose deadline already expired: running
             // them is wasted work.
             for qi in waiting.take_expired(t) {
+                if S::ENABLED {
+                    let q = &queries[qi];
+                    sink.emit(TraceEvent::Shed {
+                        t_ns: t,
+                        id: q.id,
+                        class: q.priority,
+                        expired: true,
+                    });
+                }
                 drop_query!(qi, shed);
             }
 
@@ -518,6 +611,14 @@ impl FlowSim {
                             in_flight += 1;
                             events += 1;
                             ledger.admit(qi, q.ctx_bytes).expect("checked would_fit");
+                            if S::ENABLED {
+                                sink.emit(TraceEvent::Resume {
+                                    t_ns: t,
+                                    id: q.id,
+                                    phase: next_phase,
+                                    ctx_bytes: q.ctx_bytes,
+                                });
+                            }
                             let w = weights.of(q.priority);
                             match self.enter_phase(qi, next_phase, q, w, t, &mut counters) {
                                 Some(ap) => schedule_phase!(ap),
@@ -527,6 +628,13 @@ impl FlowSim {
                                     timings[qi].as_mut().unwrap().finish_ns = t;
                                     in_flight -= 1;
                                     ledger.release(qi);
+                                    if S::ENABLED {
+                                        sink.emit(TraceEvent::Finish {
+                                            t_ns: t,
+                                            id: q.id,
+                                            ctx_bytes: q.ctx_bytes,
+                                        });
+                                    }
                                 }
                             }
                             rates_dirty = true;
@@ -542,6 +650,15 @@ impl FlowSim {
             if let OnFull::Shed { max_waiting } = adm.on_full {
                 while waiting.len() > max_waiting {
                     let qi = waiting.shed_victim().expect("non-empty: len > max_waiting");
+                    if S::ENABLED {
+                        let q = &queries[qi];
+                        sink.emit(TraceEvent::Shed {
+                            t_ns: t,
+                            id: q.id,
+                            class: q.priority,
+                            expired: false,
+                        });
+                    }
                     drop_query!(qi, shed);
                 }
             }
@@ -559,12 +676,19 @@ impl FlowSim {
             }
 
             if rates_dirty {
-                solver.solve_event(t, dense, &mut changed);
+                solver.solve_event_traced(t, dense, &mut changed, sink);
                 // Re-schedule the completions the solve moved: bump the
                 // stamp (staling the old heap entry) and push the new one.
                 for &qi in &changed {
                     stamps[qi] += 1;
                     heap.push(Reverse((Tc(solver.slot(qi).completion_ns()), qi, stamps[qi])));
+                    if S::ENABLED {
+                        sink.emit(TraceEvent::ReAnchor {
+                            t_ns: t,
+                            id: queries[qi].id,
+                            rate: solver.slot(qi).rate,
+                        });
+                    }
                 }
                 rates_dirty = false;
             }
@@ -612,6 +736,9 @@ impl FlowSim {
                 events += 1;
                 let ap = solver.remove(qi);
                 let q = &queries[qi];
+                if S::ENABLED {
+                    sink.emit(TraceEvent::PhaseEnd { t_ns: t, id: q.id, phase: ap.phase_idx });
+                }
                 let next_phase = ap.phase_idx + 1;
                 let draining = parker.as_ref().is_some_and(|p| p.is_draining(qi));
                 if draining
@@ -627,6 +754,14 @@ impl FlowSim {
                     in_flight -= 1;
                     events += 1;
                     ledger.release(qi);
+                    if S::ENABLED {
+                        sink.emit(TraceEvent::Park {
+                            t_ns: t,
+                            id: q.id,
+                            next_phase,
+                            ctx_bytes: q.ctx_bytes,
+                        });
+                    }
                 } else {
                     match self.enter_phase(qi, next_phase, q, ap.weight, t, &mut counters) {
                         Some(next) => schedule_phase!(next),
@@ -636,6 +771,13 @@ impl FlowSim {
                             ledger.release(qi);
                             if let Some(p) = parker.as_mut() {
                                 p.finish(qi);
+                            }
+                            if S::ENABLED {
+                                sink.emit(TraceEvent::Finish {
+                                    t_ns: t,
+                                    id: q.id,
+                                    ctx_bytes: q.ctx_bytes,
+                                });
                             }
                         }
                     }
@@ -681,6 +823,18 @@ impl FlowSim {
     /// "sequential" arm). Exact under the fluid model: a lone query always
     /// runs at rate 1.0, so this is a direct sum of solo times.
     pub fn run_sequential(&self, queries: &[QuerySpec]) -> FlowReport {
+        self.run_sequential_traced(queries, &mut NullSink)
+    }
+
+    /// [`Self::run_sequential`] with a [`TraceSink`]: one
+    /// arrival/admit/finish triple per query plus a phase start/end pair
+    /// per declared phase, same observation-only contract as
+    /// [`Self::run_admitted_traced`].
+    pub fn run_sequential_traced<S: TraceSink>(
+        &self,
+        queries: &[QuerySpec],
+        sink: &mut S,
+    ) -> FlowReport {
         let nodes = self.m.nodes();
         let mut counters = Counters::new(nodes);
         let mut t = 0.0f64;
@@ -690,9 +844,49 @@ impl FlowSim {
             t = t.max(q.arrival_ns);
             let start = t;
             events += 1 + q.phases.len();
-            for p in &q.phases {
+            if S::ENABLED {
+                sink.emit(TraceEvent::Arrival {
+                    t_ns: q.arrival_ns,
+                    id: q.id,
+                    label: q.label,
+                    class: q.priority,
+                });
+                sink.emit(TraceEvent::Admit {
+                    t_ns: start,
+                    id: q.id,
+                    class: q.priority,
+                    admitted_as: q.priority,
+                    wait_ns: start - q.arrival_ns,
+                    ctx_bytes: q.ctx_bytes,
+                });
+            }
+            for (pi, p) in q.phases.iter().enumerate() {
                 charge_counters(&mut counters, p);
-                t += p.solo_ns(&self.m);
+                let solo = p.solo_ns(&self.m);
+                if S::ENABLED {
+                    sink.emit(TraceEvent::PhaseStart {
+                        t_ns: t,
+                        id: q.id,
+                        phase: pi,
+                        solo_ns: solo,
+                        node_offset: p.node_offset,
+                        node_len: p.nodes(),
+                        // Zero-solo phases never enter the allocator, so
+                        // their fractional demand is reported as zero.
+                        util_sum: if solo > 0.0 {
+                            p.flow_resources(&self.m, solo).iter().map(|&(_, u)| u).sum()
+                        } else {
+                            0.0
+                        },
+                    });
+                }
+                t += solo;
+                if S::ENABLED {
+                    sink.emit(TraceEvent::PhaseEnd { t_ns: t, id: q.id, phase: pi });
+                }
+            }
+            if S::ENABLED {
+                sink.emit(TraceEvent::Finish { t_ns: t, id: q.id, ctx_bytes: q.ctx_bytes });
             }
             timings.push(QueryTiming {
                 id: q.id,
@@ -980,8 +1174,9 @@ mod tests {
         let qs: Vec<_> = (0..4).map(|i| query(&m, i, 0.1, 1e6)).collect();
         let rep = sim.run_admitted(&qs, Admission::capped(2, OnFull::Reject));
         assert_eq!(rep.rejected.len(), 2);
-        assert!(rep.mean_latency_s().is_finite());
-        assert!(rep.mean_latency_s() > 0.0);
+        let mean = rep.mean_latency_s().expect("two queries completed");
+        assert!(mean.is_finite());
+        assert!(mean > 0.0);
         let lats = rep.latencies_s();
         assert_eq!(lats.len(), 2, "only completed queries have latencies");
         assert!(lats.iter().all(|l| l.is_finite()));
@@ -1242,8 +1437,10 @@ mod tests {
         // Work conservation: the weighted makespan matches the flat one.
         assert!((weighted.makespan_ns - flat.makespan_ns).abs() / flat.makespan_ns < 0.01);
         // Surfaced through the report: per-class latencies and the weights.
-        assert!(weighted.class_mean_latency_s(Priority::Interactive)
-            < weighted.class_mean_latency_s(Priority::Batch));
+        assert!(
+            weighted.class_mean_latency_s(Priority::Interactive).unwrap()
+                < weighted.class_mean_latency_s(Priority::Batch).unwrap()
+        );
         assert_eq!(weighted.weights, ShareWeights::priority_weighted());
         assert!(weighted.preempted.is_empty() && weighted.parks == 0);
     }

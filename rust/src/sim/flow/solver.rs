@@ -214,6 +214,22 @@ impl IncrementalSolver {
     /// every component is re-solved through the same component solver —
     /// bit-identical by construction, kept as the equivalence reference.
     pub fn solve_event(&mut self, t: f64, dense: bool, changed: &mut Vec<usize>) {
+        self.solve_event_traced(t, dense, changed, &mut crate::sim::trace::NullSink);
+    }
+
+    /// [`Self::solve_event`] with a [`crate::sim::trace::TraceSink`]:
+    /// emits one `Solve` event per re-solved component (member/resource
+    /// counts — the flood extent that attributes host cost per event).
+    /// Emission is observation-only and gated on `S::ENABLED`, so the
+    /// [`crate::sim::trace::NullSink`] instantiation is the untraced
+    /// solve, unchanged.
+    pub fn solve_event_traced<S: crate::sim::trace::TraceSink>(
+        &mut self,
+        t: f64,
+        dense: bool,
+        changed: &mut Vec<usize>,
+        sink: &mut S,
+    ) {
         changed.clear();
         if self.active_count == 0 {
             self.seeds.clear();
@@ -234,6 +250,13 @@ impl IncrementalSolver {
                 members.push(qi);
                 self.flood(&mut members, &mut touched, gen);
                 self.solve_component(&mut members, &mut touched, t, changed);
+                if S::ENABLED {
+                    sink.emit(crate::sim::trace::TraceEvent::Solve {
+                        t_ns: t,
+                        members: members.len(),
+                        resources: touched.len(),
+                    });
+                }
             }
             self.seeds.clear();
         } else {
@@ -259,6 +282,13 @@ impl IncrementalSolver {
                 self.flood(&mut members, &mut touched, gen);
                 if !members.is_empty() {
                     self.solve_component(&mut members, &mut touched, t, changed);
+                    if S::ENABLED {
+                        sink.emit(crate::sim::trace::TraceEvent::Solve {
+                            t_ns: t,
+                            members: members.len(),
+                            resources: touched.len(),
+                        });
+                    }
                 }
             }
             self.seeds = seeds;

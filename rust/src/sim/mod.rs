@@ -41,6 +41,7 @@ pub mod flow;
 pub mod ledger;
 pub mod machine;
 pub mod preempt;
+pub mod trace;
 pub mod views;
 
 pub use cluster::Cluster;
@@ -50,3 +51,4 @@ pub use flow::{FlowSim, Priority, QueryTiming, ShareWeights, SolverMode};
 pub use ledger::{ContextExhausted, ContextLedger};
 pub use machine::Machine;
 pub use preempt::PreemptPolicy;
+pub use trace::{NullSink, TraceBuffer, TraceEvent, TraceSink};

@@ -1,0 +1,302 @@
+//! Query-lifecycle tracing: a typed event stream out of the flow engine.
+//!
+//! The engine's end-of-run aggregates ([`crate::sim::flow::FlowReport`])
+//! answer *what* happened; this module answers *when and why*. Every
+//! scheduling decision the runtime makes — arrival, admission, queueing,
+//! shedding, parking, phase boundaries, solver re-anchoring — is emitted
+//! as a [`TraceEvent`] carrying its simulated timestamp, and the
+//! coordinator layers above add their own events (batch fusion, epoch
+//! apply/compaction, fleet shard routing). The stream is event-sourced:
+//! [`crate::coordinator::telemetry`] replays it to derive time-series
+//! (utilization per chassis, queue depth per class, context bytes in
+//! flight) and to export Chrome trace-event JSON for Perfetto.
+//!
+//! # The observation-only invariant
+//!
+//! Tracing must never branch the simulation. Sinks receive copies of
+//! state the engine already computed; they cannot mutate it, and every
+//! emission site is wrapped in `if S::ENABLED { ... }` so the
+//! [`NullSink`] path (the default for `run`/`run_admitted`) compiles to
+//! the untraced event loop unchanged — event construction included.
+//! `prop_tests.rs` pins both halves: a traced run's `FlowReport` is
+//! bit-identical to the untraced run, and per-type event counts
+//! reconcile exactly with the report's counters.
+
+use crate::sim::flow::Priority;
+
+/// One scheduling event, stamped with simulated time in nanoseconds.
+///
+/// Engine events (emitted by `sim/flow/runtime.rs` / `solver.rs`) carry
+/// the query's stable request id (`QuerySpec::id`), not its slot index,
+/// so they join against [`crate::sim::flow::QueryTiming`] records.
+/// Coordinator events (batch fusion, epochs, routing) are emitted by
+/// `coordinator/service.rs` around the engine run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// A query arrived at the admission boundary.
+    Arrival { t_ns: f64, id: usize, label: &'static str, class: Priority },
+    /// The query could not start and joined the wait queue.
+    QueueEnter { t_ns: f64, id: usize, class: Priority, waiting: usize },
+    /// The query was admitted and started its first phase.
+    /// `admitted_as != class` records an anti-starvation aging
+    /// promotion (an aged front competing as Interactive).
+    Admit {
+        t_ns: f64,
+        id: usize,
+        class: Priority,
+        admitted_as: Priority,
+        wait_ns: f64,
+        ctx_bytes: u64,
+    },
+    /// The query was rejected outright (`oversized` = its context can
+    /// never fit; otherwise the `OnFull::Reject` policy fired).
+    Reject { t_ns: f64, id: usize, class: Priority, oversized: bool },
+    /// The query was shed from the wait queue (`expired` = its deadline
+    /// passed while queued; otherwise it was the overflow victim).
+    Shed { t_ns: f64, id: usize, class: Priority, expired: bool },
+    /// A phase was scheduled onto the machine. `node_offset`/`node_len`
+    /// locate its demand span (chassis attribution); `util_sum` is the
+    /// phase's total fractional resource demand at rate 1.0.
+    PhaseStart {
+        t_ns: f64,
+        id: usize,
+        phase: usize,
+        solo_ns: f64,
+        node_offset: usize,
+        node_len: usize,
+        util_sum: f64,
+    },
+    /// A phase ran to completion.
+    PhaseEnd { t_ns: f64, id: usize, phase: usize },
+    /// The query finished its last phase and released its context.
+    Finish { t_ns: f64, id: usize, ctx_bytes: u64 },
+    /// Checkpoint preemption: the query was parked at a phase boundary
+    /// (its context spilled; `next_phase` resumes later).
+    Park { t_ns: f64, id: usize, next_phase: usize, ctx_bytes: u64 },
+    /// A parked query was resumed (context re-admitted).
+    Resume { t_ns: f64, id: usize, phase: usize, ctx_bytes: u64 },
+    /// The incremental solver re-solved one connected component:
+    /// `members` active phases over `resources` touched machine
+    /// resources. Host-cost attribution for the event-scoped engine.
+    Solve { t_ns: f64, members: usize, resources: usize },
+    /// A query's fair-share rate changed; its progress closed form was
+    /// re-anchored at `t_ns` with the new `rate`.
+    ReAnchor { t_ns: f64, id: usize, rate: f64 },
+    /// Coordinator: compatible queued requests fused into one
+    /// multi-source engine query (`id` = the fused spec's id).
+    BatchFuse { t_ns: f64, id: usize, width: usize, label: &'static str },
+    /// Coordinator: an update batch advanced the graph store to `epoch`.
+    EpochApply { t_ns: f64, epoch: u64, updates: usize },
+    /// Coordinator: compaction folded `drained` overlays at `epoch`.
+    Compaction { t_ns: f64, epoch: u64, drained: usize },
+    /// Coordinator: a fleet request was routed to shard `shard`
+    /// (replica index `replica`).
+    ShardRoute { t_ns: f64, id: usize, shard: usize, replica: usize },
+}
+
+impl TraceEvent {
+    /// Simulated timestamp (ns) of the event.
+    pub fn t_ns(&self) -> f64 {
+        match *self {
+            TraceEvent::Arrival { t_ns, .. }
+            | TraceEvent::QueueEnter { t_ns, .. }
+            | TraceEvent::Admit { t_ns, .. }
+            | TraceEvent::Reject { t_ns, .. }
+            | TraceEvent::Shed { t_ns, .. }
+            | TraceEvent::PhaseStart { t_ns, .. }
+            | TraceEvent::PhaseEnd { t_ns, .. }
+            | TraceEvent::Finish { t_ns, .. }
+            | TraceEvent::Park { t_ns, .. }
+            | TraceEvent::Resume { t_ns, .. }
+            | TraceEvent::Solve { t_ns, .. }
+            | TraceEvent::ReAnchor { t_ns, .. }
+            | TraceEvent::BatchFuse { t_ns, .. }
+            | TraceEvent::EpochApply { t_ns, .. }
+            | TraceEvent::Compaction { t_ns, .. }
+            | TraceEvent::ShardRoute { t_ns, .. } => t_ns,
+        }
+    }
+
+    /// Stable kind label, used for event-count telemetry and the CI
+    /// job-summary table.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Arrival { .. } => "arrival",
+            TraceEvent::QueueEnter { .. } => "queue_enter",
+            TraceEvent::Admit { .. } => "admit",
+            TraceEvent::Reject { .. } => "reject",
+            TraceEvent::Shed { .. } => "shed",
+            TraceEvent::PhaseStart { .. } => "phase_start",
+            TraceEvent::PhaseEnd { .. } => "phase_end",
+            TraceEvent::Finish { .. } => "finish",
+            TraceEvent::Park { .. } => "park",
+            TraceEvent::Resume { .. } => "resume",
+            TraceEvent::Solve { .. } => "solve",
+            TraceEvent::ReAnchor { .. } => "re_anchor",
+            TraceEvent::BatchFuse { .. } => "batch_fuse",
+            TraceEvent::EpochApply { .. } => "epoch_apply",
+            TraceEvent::Compaction { .. } => "compaction",
+            TraceEvent::ShardRoute { .. } => "shard_route",
+        }
+    }
+
+    /// The query id the event is about, when it is about one.
+    pub fn query_id(&self) -> Option<usize> {
+        match *self {
+            TraceEvent::Arrival { id, .. }
+            | TraceEvent::QueueEnter { id, .. }
+            | TraceEvent::Admit { id, .. }
+            | TraceEvent::Reject { id, .. }
+            | TraceEvent::Shed { id, .. }
+            | TraceEvent::PhaseStart { id, .. }
+            | TraceEvent::PhaseEnd { id, .. }
+            | TraceEvent::Finish { id, .. }
+            | TraceEvent::Park { id, .. }
+            | TraceEvent::Resume { id, .. }
+            | TraceEvent::BatchFuse { id, .. }
+            | TraceEvent::ShardRoute { id, .. } => Some(id),
+            TraceEvent::Solve { .. }
+            | TraceEvent::ReAnchor { .. }
+            | TraceEvent::EpochApply { .. }
+            | TraceEvent::Compaction { .. } => None,
+        }
+    }
+}
+
+/// Receiver for the engine's event stream.
+///
+/// `ENABLED` is an associated const so the runtime can wrap every
+/// emission in `if S::ENABLED { ... }`: for [`NullSink`] the branch —
+/// and the `TraceEvent` construction inside it — is dead code after
+/// monomorphization, keeping the untraced hot path at PR 8 cost (the
+/// `host_scaling` bench gate runs on this path).
+pub trait TraceSink {
+    /// Whether emission sites should construct and deliver events.
+    const ENABLED: bool = true;
+    fn emit(&mut self, ev: TraceEvent);
+}
+
+/// The zero-cost default: discards everything at compile time.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    const ENABLED: bool = false;
+    #[inline(always)]
+    fn emit(&mut self, _ev: TraceEvent) {}
+}
+
+/// Records every event in arrival order (the engine emits in
+/// nondecreasing simulated time, so the buffer is time-sorted except
+/// for coordinator events appended around the run).
+#[derive(Debug, Clone, Default)]
+pub struct TraceBuffer {
+    pub events: Vec<TraceEvent>,
+}
+
+impl TraceBuffer {
+    pub fn new() -> Self {
+        TraceBuffer::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Event counts by [`TraceEvent::kind`], sorted by kind label.
+    pub fn counts_by_kind(&self) -> Vec<(&'static str, usize)> {
+        let mut counts: std::collections::BTreeMap<&'static str, usize> =
+            std::collections::BTreeMap::new();
+        for ev in &self.events {
+            *counts.entry(ev.kind()).or_insert(0) += 1;
+        }
+        counts.into_iter().collect()
+    }
+}
+
+impl TraceSink for TraceBuffer {
+    fn emit(&mut self, ev: TraceEvent) {
+        self.events.push(ev);
+    }
+}
+
+/// Forwarding impl so callers can hand a `&mut TraceBuffer` into the
+/// generic engine entry points without giving up the buffer.
+impl<S: TraceSink> TraceSink for &mut S {
+    const ENABLED: bool = S::ENABLED;
+    #[inline(always)]
+    fn emit(&mut self, ev: TraceEvent) {
+        (**self).emit(ev);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn null_sink_is_disabled_buffer_is_enabled() {
+        assert!(!NullSink::ENABLED);
+        assert!(TraceBuffer::ENABLED);
+        assert!(<&mut TraceBuffer as TraceSink>::ENABLED);
+        assert!(!<&mut NullSink as TraceSink>::ENABLED);
+    }
+
+    #[test]
+    fn buffer_records_in_order_and_counts_by_kind() {
+        let mut buf = TraceBuffer::new();
+        buf.emit(TraceEvent::Arrival { t_ns: 0.0, id: 7, label: "bfs", class: Priority::Standard });
+        buf.emit(TraceEvent::Admit {
+            t_ns: 0.0,
+            id: 7,
+            class: Priority::Standard,
+            admitted_as: Priority::Standard,
+            wait_ns: 0.0,
+            ctx_bytes: 64,
+        });
+        buf.emit(TraceEvent::Finish { t_ns: 5.0, id: 7, ctx_bytes: 64 });
+        buf.emit(TraceEvent::Solve { t_ns: 5.0, members: 1, resources: 2 });
+        assert_eq!(buf.len(), 4);
+        assert_eq!(buf.events[0].kind(), "arrival");
+        assert_eq!(buf.events[0].query_id(), Some(7));
+        assert_eq!(buf.events[3].query_id(), None);
+        assert_eq!(
+            buf.counts_by_kind(),
+            vec![("admit", 1), ("arrival", 1), ("finish", 1), ("solve", 1)]
+        );
+    }
+
+    #[test]
+    fn t_ns_covers_every_variant() {
+        let evs = [
+            TraceEvent::QueueEnter { t_ns: 1.0, id: 0, class: Priority::Batch, waiting: 3 },
+            TraceEvent::Reject { t_ns: 2.0, id: 0, class: Priority::Batch, oversized: true },
+            TraceEvent::Shed { t_ns: 3.0, id: 0, class: Priority::Batch, expired: false },
+            TraceEvent::PhaseStart {
+                t_ns: 4.0,
+                id: 0,
+                phase: 0,
+                solo_ns: 1.0,
+                node_offset: 0,
+                node_len: 8,
+                util_sum: 0.5,
+            },
+            TraceEvent::PhaseEnd { t_ns: 5.0, id: 0, phase: 0 },
+            TraceEvent::Park { t_ns: 6.0, id: 0, next_phase: 1, ctx_bytes: 1 },
+            TraceEvent::Resume { t_ns: 7.0, id: 0, phase: 1, ctx_bytes: 1 },
+            TraceEvent::ReAnchor { t_ns: 8.0, id: 0, rate: 0.5 },
+            TraceEvent::BatchFuse { t_ns: 9.0, id: 0, width: 4, label: "bfs" },
+            TraceEvent::EpochApply { t_ns: 10.0, epoch: 1, updates: 32 },
+            TraceEvent::Compaction { t_ns: 11.0, epoch: 1, drained: 2 },
+            TraceEvent::ShardRoute { t_ns: 12.0, id: 0, shard: 1, replica: 0 },
+        ];
+        for (i, ev) in evs.iter().enumerate() {
+            assert_eq!(ev.t_ns(), (i + 1) as f64);
+            assert!(!ev.kind().is_empty());
+        }
+    }
+}

@@ -16,12 +16,21 @@ pub struct Quantiles {
 }
 
 impl Quantiles {
-    /// Compute from unsorted samples. Panics on empty input.
+    /// Compute from unsorted samples. Panics on empty input; reporting
+    /// paths that may legitimately see an empty class (e.g. fully shed)
+    /// should use [`Quantiles::try_from_samples`].
     pub fn from_samples(samples: &[f64]) -> Quantiles {
-        assert!(!samples.is_empty(), "quantiles of empty sample set");
+        Quantiles::try_from_samples(samples).expect("quantiles of empty sample set")
+    }
+
+    /// Non-panicking [`Quantiles::from_samples`]: `None` on empty input.
+    pub fn try_from_samples(samples: &[f64]) -> Option<Quantiles> {
+        if samples.is_empty() {
+            return None;
+        }
         let mut xs = samples.to_vec();
         xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
-        Quantiles {
+        Some(Quantiles {
             q0: quantile_sorted(&xs, 0.0),
             q25: quantile_sorted(&xs, 0.25),
             q50: quantile_sorted(&xs, 0.50),
@@ -29,7 +38,7 @@ impl Quantiles {
             q95: quantile_sorted(&xs, 0.95),
             q99: quantile_sorted(&xs, 0.99),
             q100: quantile_sorted(&xs, 1.0),
-        }
+        })
     }
 
     /// Max-min spread, as discussed for Table I ("the min-max spread is
@@ -63,10 +72,19 @@ pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
     sorted[lo] + (sorted[hi] - sorted[lo]) * frac
 }
 
-/// Arithmetic mean. Panics on empty input.
+/// Arithmetic mean. Panics on empty input; use [`try_mean`] on paths
+/// where an empty sample set is a legitimate outcome.
 pub fn mean(xs: &[f64]) -> f64 {
-    assert!(!xs.is_empty());
-    xs.iter().sum::<f64>() / xs.len() as f64
+    try_mean(xs).expect("mean of empty sample set")
+}
+
+/// Non-panicking [`mean`]: `None` on empty input (a fully-shed class
+/// must not crash report rendering).
+pub fn try_mean(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        return None;
+    }
+    Some(xs.iter().sum::<f64>() / xs.len() as f64)
 }
 
 /// Sample standard deviation (n-1 denominator); 0 for a single sample.
@@ -139,6 +157,17 @@ mod tests {
         assert_eq!(mean(&[2.0, 4.0]), 3.0);
         assert!((stddev(&[2.0, 4.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
         assert_eq!(stddev(&[3.0]), 0.0);
+    }
+
+    #[test]
+    fn try_variants_are_none_on_empty_and_agree_otherwise() {
+        assert_eq!(try_mean(&[]), None);
+        assert_eq!(Quantiles::try_from_samples(&[]), None);
+        assert_eq!(try_mean(&[2.0, 4.0]), Some(3.0));
+        assert_eq!(
+            Quantiles::try_from_samples(&[1.0, 2.0, 3.0]),
+            Some(Quantiles::from_samples(&[1.0, 2.0, 3.0]))
+        );
     }
 
     #[test]

@@ -557,14 +557,15 @@ fn prop_weighted_shares_converge_to_configured_weights() {
         let denom = (counts[0] as f64 * wi + counts[1] as f64 * ws + counts[2] as f64 * wb)
             * drain_ns;
         let expect_int_ns = denom / wi;
-        let got_int_s = rep.class_mean_latency_s(Priority::Interactive);
+        let got_int_s =
+            rep.class_mean_latency_s(Priority::Interactive).expect("interactive completed");
         assert!(
             (got_int_s * 1e9 - expect_int_ns).abs() / expect_int_ns < 0.02,
             "seed {seed}: interactive latency {got_int_s}s vs closed form {expect_int_ns}ns \
              (weights {wi}:{ws}:{wb}, counts {counts:?})"
         );
         // Realized service orders inversely to the weights, strictly.
-        let mean = |p: Priority| rep.class_mean_latency_s(p);
+        let mean = |p: Priority| rep.class_mean_latency_s(p).expect("class completed");
         assert!(
             mean(Priority::Interactive) < mean(Priority::Standard)
                 && mean(Priority::Standard) < mean(Priority::Batch),
@@ -627,7 +628,10 @@ fn prop_preemption_preserves_partition_and_ledger_bounds() {
                 "seed {seed}: only the victim class may be parked"
             );
         }
-        assert!(rep.mean_latency_s().is_finite(), "seed {seed}");
+        assert!(
+            rep.mean_latency_s().is_none_or(|s| s.is_finite()),
+            "seed {seed}"
+        );
     }
 }
 
@@ -674,9 +678,203 @@ fn prop_admission_dispositions_partition_queries() {
             for s in specs.iter().filter(|s| s.ctx_bytes > byte_cap) {
                 assert!(rep.rejected.contains(&s.id), "seed {seed} {on_full:?}");
             }
-            // NaN-free aggregate stats even with rejections/sheds present.
-            assert!(rep.mean_latency_s().is_finite(), "seed {seed} {on_full:?}");
+            // NaN-free aggregate stats even with rejections/sheds present
+            // (None, not a fake 0.0, when nothing completed at all).
+            assert!(
+                rep.mean_latency_s().is_none_or(|s| s.is_finite()),
+                "seed {seed} {on_full:?}"
+            );
             assert!(rep.latencies_s().iter().all(|l| l.is_finite()));
+        }
+    }
+}
+
+/// Random traced-engine workload shared by the observability properties:
+/// mixed classes, multi-phase, jittered arrivals, context footprints, and
+/// an occasional deadline — the same shape the preemption property uses.
+fn trace_prop_specs(rng: &mut SplitMix64, m: &Machine) -> Vec<QuerySpec> {
+    let nq = 2 + rng.gen_range(14) as usize;
+    (0..nq)
+        .map(|id| {
+            let phases = (0..1 + rng.gen_range(3) as usize)
+                .map(|_| {
+                    uniform_phase(m, 0.2 + rng.next_f64() * 0.4, 2e5 + rng.next_f64() * 8e5)
+                })
+                .collect();
+            let mut q = QuerySpec::new(id, "t", phases, rng.next_f64() * 2e6)
+                .with_ctx_bytes(20 + rng.gen_range(60))
+                .with_priority(Priority::ALL[rng.gen_range(3) as usize]);
+            if rng.gen_range(3) == 0 {
+                q = q.with_deadline_ns(rng.next_f64() * 5e6);
+            }
+            q
+        })
+        .collect()
+}
+
+/// Every number in two [`FlowReport`]s compared exactly — f64s via
+/// `to_bits`, so even a NaN-for-NaN or -0.0/+0.0 swap is a failure.
+fn assert_reports_bit_identical(a: &FlowReport, b: &FlowReport, seed: u64) {
+    assert_eq!(a.timings.len(), b.timings.len(), "seed {seed}: timing count");
+    for (x, y) in a.timings.iter().zip(&b.timings) {
+        assert_eq!(x.id, y.id, "seed {seed}");
+        assert_eq!(x.label, y.label, "seed {seed}: label of {}", x.id);
+        assert_eq!(
+            x.arrival_ns.to_bits(),
+            y.arrival_ns.to_bits(),
+            "seed {seed}: arrival of {}",
+            x.id
+        );
+        assert_eq!(
+            x.start_ns.to_bits(),
+            y.start_ns.to_bits(),
+            "seed {seed}: start of {}",
+            x.id
+        );
+        assert_eq!(
+            x.finish_ns.to_bits(),
+            y.finish_ns.to_bits(),
+            "seed {seed}: finish of {}",
+            x.id
+        );
+        assert_eq!(x.phases, y.phases, "seed {seed}");
+        assert_eq!(x.priority, y.priority, "seed {seed}");
+        assert_eq!(x.admitted_as, y.admitted_as, "seed {seed}: admitted_as of {}", x.id);
+    }
+    assert_eq!(
+        a.makespan_ns.to_bits(),
+        b.makespan_ns.to_bits(),
+        "seed {seed}: makespan"
+    );
+    assert_eq!(a.counters, b.counters, "seed {seed}: counters");
+    assert_eq!(a.peak_concurrency, b.peak_concurrency, "seed {seed}");
+    assert_eq!(a.rejected, b.rejected, "seed {seed}: rejected ids");
+    assert_eq!(a.shed, b.shed, "seed {seed}: shed ids");
+    assert_eq!(a.peak_ctx_bytes, b.peak_ctx_bytes, "seed {seed}");
+    assert_eq!(a.preempted, b.preempted, "seed {seed}: preempted ids");
+    assert_eq!(a.parks, b.parks, "seed {seed}");
+    assert_eq!(a.resumes, b.resumes, "seed {seed}");
+    assert_eq!(a.weights, b.weights, "seed {seed}");
+    assert_eq!(a.events, b.events, "seed {seed}: event count");
+}
+
+/// The load-bearing observability invariant (DESIGN.md §Observability):
+/// tracing is observation only. A run recording into a [`TraceBuffer`]
+/// must produce a [`FlowReport`] bit-identical to the same run on the
+/// zero-cost `NullSink` default — across random workloads exercising byte
+/// budgets, weights, preemption, deadlines, and all three overflow modes.
+#[test]
+fn prop_traced_run_is_bit_identical_to_untraced() {
+    use pathfinder_queries::sim::trace::TraceBuffer;
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x7ACE);
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let specs = trace_prop_specs(&mut rng, &m);
+        for on_full in
+            [OnFull::Queue, OnFull::Reject, OnFull::Shed { max_waiting: 1 + seed as usize % 4 }]
+        {
+            let adm = Admission::byte_budget(120, on_full)
+                .with_weights(ShareWeights::priority_weighted())
+                .with_preempt(PreemptPolicy::default());
+            let plain = sim.run_admitted(&specs, adm);
+            let mut buf = TraceBuffer::new();
+            let traced = sim.run_admitted_traced(&specs, adm, &mut buf);
+            assert_reports_bit_identical(&plain, &traced, seed);
+            assert!(!buf.events.is_empty(), "seed {seed}: traced run must record events");
+        }
+        // The sequential baseline path is traced too.
+        let plain = sim.run_sequential(&specs);
+        let mut buf = TraceBuffer::new();
+        let traced = sim.run_sequential_traced(&specs, &mut buf);
+        assert_reports_bit_identical(&plain, &traced, seed);
+    }
+}
+
+/// Trace↔report reconciliation: the event stream and the [`FlowReport`]
+/// are two views of one run, so they must agree exactly — the `events`
+/// counter decomposes into admits + phase retirements + parks + resumes,
+/// shed/rejected id sequences equal the event stream's, every query
+/// reaches exactly one terminal event (finish, shed, or reject) matching
+/// its report disposition, and the preempted set is exactly the ids that
+/// parked.
+#[test]
+fn prop_trace_reconciles_with_flow_report() {
+    use pathfinder_queries::sim::trace::TraceBuffer;
+    for seed in 0..CASES {
+        let mut rng = SplitMix64::new(seed ^ 0x0B5);
+        let m = m8();
+        let sim = FlowSim::new(m.clone());
+        let specs = trace_prop_specs(&mut rng, &m);
+        for on_full in
+            [OnFull::Queue, OnFull::Reject, OnFull::Shed { max_waiting: 1 + seed as usize % 4 }]
+        {
+            let adm = Admission::byte_budget(120, on_full)
+                .with_preempt(PreemptPolicy::default());
+            let mut buf = TraceBuffer::new();
+            let rep = sim.run_admitted_traced(&specs, adm, &mut buf);
+            let counts = buf.counts_by_kind();
+            let n =
+                |k: &str| counts.iter().find(|&&(kk, _)| kk == k).map_or(0, |&(_, c)| c);
+            assert_eq!(
+                n("arrival"),
+                specs.len(),
+                "seed {seed} {on_full:?}: one arrival per submitted query"
+            );
+            assert_eq!(
+                rep.events,
+                n("admit") + n("phase_end") + n("park") + n("resume"),
+                "seed {seed} {on_full:?}: events counter must decompose over the trace"
+            );
+            assert_eq!(rep.parks, n("park"), "seed {seed} {on_full:?}");
+            assert_eq!(rep.resumes, n("resume"), "seed {seed} {on_full:?}");
+            let ids_of = |kind: &str| -> Vec<usize> {
+                buf.events
+                    .iter()
+                    .filter(|e| e.kind() == kind)
+                    .filter_map(|e| e.query_id())
+                    .collect()
+            };
+            // Shed/rejected report sequences ARE the event sequences.
+            assert_eq!(rep.shed, ids_of("shed"), "seed {seed} {on_full:?}: shed ids");
+            assert_eq!(
+                rep.rejected,
+                ids_of("reject"),
+                "seed {seed} {on_full:?}: rejected ids"
+            );
+            // Exactly one terminal event per query, agreeing with the
+            // report's disposition.
+            let mut terminal = vec![0usize; specs.len()];
+            let mut finished = vec![false; specs.len()];
+            for e in &buf.events {
+                match e.kind() {
+                    "finish" => {
+                        let id = e.query_id().unwrap();
+                        terminal[id] += 1;
+                        finished[id] = true;
+                    }
+                    "shed" | "reject" => terminal[e.query_id().unwrap()] += 1,
+                    _ => {}
+                }
+            }
+            for (id, &t) in terminal.iter().enumerate() {
+                assert_eq!(
+                    t, 1,
+                    "seed {seed} {on_full:?}: query {id} must reach exactly one terminal event"
+                );
+                assert_eq!(
+                    rep.timings[id].completed(),
+                    finished[id],
+                    "seed {seed} {on_full:?}: disposition of query {id}"
+                );
+            }
+            // The preempted set is exactly the ids that parked.
+            let mut parked = ids_of("park");
+            parked.sort_unstable();
+            parked.dedup();
+            let mut preempted = rep.preempted.clone();
+            preempted.sort_unstable();
+            assert_eq!(preempted, parked, "seed {seed} {on_full:?}: preempted ids");
         }
     }
 }
