@@ -9,8 +9,10 @@
 
 pub mod experiment;
 pub mod machine;
+pub mod scenario;
 pub mod workload;
 
 pub use experiment::ExperimentConfig;
 pub use machine::{FabricConfig, MachineConfig};
+pub use scenario::{ArrivalProcess, ScenarioSpec, StreamSpec};
 pub use workload::{GraphConfig, WorkloadConfig};

@@ -1,0 +1,840 @@
+//! Declarative open-loop load scenarios (DESIGN.md §Observability,
+//! docs/SCENARIOS.md).
+//!
+//! A [`ScenarioSpec`] describes a multi-tenant arrival pattern as plain
+//! data: named streams, each with its own arrival process, analysis mix,
+//! priority class, SLO and deadline. The spec is *open-loop* — arrival
+//! instants are a pure function of (spec, seed) and never depend on how
+//! fast the service drains them — which is what makes overload scenarios
+//! meaningful: a closed-loop generator slows down exactly when the system
+//! does, hiding the very congestion the scenario exists to produce.
+//!
+//! Four arrival processes cover the paper-motivated load shapes (their
+//! closed-form expected counts are what the scenario property test pins):
+//!
+//! * **constant** — homogeneous Poisson at `rate_per_s`;
+//!   `E[N(T)] = rate * T`.
+//! * **diurnal** — inhomogeneous Poisson,
+//!   `rate(t) = base * (1 + amplitude * sin(2*pi*t/period))`, sampled by
+//!   Lewis–Shedler thinning;
+//!   `E[N(T)] = base*T + base*amplitude*(period/2pi)*(1 - cos(2pi T/period))`.
+//! * **bursty** — two-state Markov-modulated Poisson process: exponential
+//!   on/off dwells (means `mean_on_s`/`mean_off_s`), rate `on_rate_per_s`
+//!   while on and `off_rate_per_s` while off, initial state drawn from the
+//!   stationary distribution; `E[N(T)] = T * (on_rate*mean_on +
+//!   off_rate*mean_off) / (mean_on + mean_off)`.
+//! * **ramp** — linear overload ramp from `start_rate_per_s` to
+//!   `end_rate_per_s` over the scenario duration (also thinned);
+//!   `E[N(T)] = (start + end)/2 * T`.
+//!
+//! The compiler that turns a spec into a merged request timeline lives in
+//! [`crate::coordinator::scenario`]; this module is pure data + math so
+//! specs round-trip through JSON (`ci/scenarios/*.json`) without touching
+//! the graph or the registry.
+
+use anyhow::Result;
+
+use crate::sim::flow::Priority;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// Hard cap on arrivals one stream may generate: a mis-set rate (or a
+/// forgotten `time_compressed`) cannot explode the timeline.
+pub const MAX_STREAM_ARRIVALS: usize = 2_000_000;
+
+/// One stream's arrival process (rates in queries per simulated second).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArrivalProcess {
+    /// Homogeneous Poisson.
+    Constant { rate_per_s: f64 },
+    /// Sinusoidal day/night cycle: `base * (1 + amplitude * sin(2pi t/P))`.
+    Diurnal { base_rate_per_s: f64, amplitude: f64, period_s: f64 },
+    /// Two-state Markov-modulated on/off bursts.
+    Bursty { on_rate_per_s: f64, off_rate_per_s: f64, mean_on_s: f64, mean_off_s: f64 },
+    /// Linear ramp across the scenario duration (the overload shape).
+    Ramp { start_rate_per_s: f64, end_rate_per_s: f64 },
+}
+
+impl ArrivalProcess {
+    pub fn validate(&self) -> Result<()> {
+        let finite_nonneg = |v: f64, what: &str| {
+            anyhow::ensure!(v.is_finite() && v >= 0.0, "{what} must be finite and >= 0, got {v}");
+            Ok(())
+        };
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => {
+                finite_nonneg(rate_per_s, "constant rate_per_s")?;
+                anyhow::ensure!(rate_per_s > 0.0, "constant stream needs a positive rate");
+            }
+            ArrivalProcess::Diurnal { base_rate_per_s, amplitude, period_s } => {
+                finite_nonneg(base_rate_per_s, "diurnal base_rate_per_s")?;
+                anyhow::ensure!(base_rate_per_s > 0.0, "diurnal stream needs a positive base");
+                anyhow::ensure!(
+                    (0.0..=1.0).contains(&amplitude),
+                    "diurnal amplitude must be in [0, 1] (rate must stay non-negative), got \
+                     {amplitude}"
+                );
+                anyhow::ensure!(
+                    period_s.is_finite() && period_s > 0.0,
+                    "diurnal period_s must be positive, got {period_s}"
+                );
+            }
+            ArrivalProcess::Bursty { on_rate_per_s, off_rate_per_s, mean_on_s, mean_off_s } => {
+                finite_nonneg(on_rate_per_s, "bursty on_rate_per_s")?;
+                finite_nonneg(off_rate_per_s, "bursty off_rate_per_s")?;
+                anyhow::ensure!(
+                    on_rate_per_s > 0.0 || off_rate_per_s > 0.0,
+                    "bursty stream needs a positive rate in at least one state"
+                );
+                anyhow::ensure!(
+                    mean_on_s.is_finite() && mean_on_s > 0.0,
+                    "bursty mean_on_s must be positive, got {mean_on_s}"
+                );
+                anyhow::ensure!(
+                    mean_off_s.is_finite() && mean_off_s > 0.0,
+                    "bursty mean_off_s must be positive, got {mean_off_s}"
+                );
+            }
+            ArrivalProcess::Ramp { start_rate_per_s, end_rate_per_s } => {
+                finite_nonneg(start_rate_per_s, "ramp start_rate_per_s")?;
+                finite_nonneg(end_rate_per_s, "ramp end_rate_per_s")?;
+                anyhow::ensure!(
+                    start_rate_per_s > 0.0 || end_rate_per_s > 0.0,
+                    "ramp stream needs a positive rate at one end"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Instantaneous rate at `t_s` into a run of `duration_s` (queries/s).
+    pub fn rate_at(&self, t_s: f64, duration_s: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => rate_per_s,
+            ArrivalProcess::Diurnal { base_rate_per_s, amplitude, period_s } => {
+                base_rate_per_s
+                    * (1.0 + amplitude * (2.0 * std::f64::consts::PI * t_s / period_s).sin())
+            }
+            // The modulating chain is random; this is the stationary mean.
+            ArrivalProcess::Bursty { on_rate_per_s, off_rate_per_s, mean_on_s, mean_off_s } => {
+                (on_rate_per_s * mean_on_s + off_rate_per_s * mean_off_s)
+                    / (mean_on_s + mean_off_s)
+            }
+            ArrivalProcess::Ramp { start_rate_per_s, end_rate_per_s } => {
+                start_rate_per_s + (end_rate_per_s - start_rate_per_s) * (t_s / duration_s)
+            }
+        }
+    }
+
+    /// The thinning envelope: an upper bound on the instantaneous rate
+    /// over the whole run (queries/s).
+    pub fn peak_rate_per_s(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => rate_per_s,
+            ArrivalProcess::Diurnal { base_rate_per_s, amplitude, .. } => {
+                base_rate_per_s * (1.0 + amplitude)
+            }
+            ArrivalProcess::Bursty { on_rate_per_s, off_rate_per_s, .. } => {
+                on_rate_per_s.max(off_rate_per_s)
+            }
+            ArrivalProcess::Ramp { start_rate_per_s, end_rate_per_s } => {
+                start_rate_per_s.max(end_rate_per_s)
+            }
+        }
+    }
+
+    /// Closed-form expected arrival count over `[0, duration_s]` (module
+    /// docs); the scenario property test pins sampled counts to this.
+    pub fn expected_arrivals(&self, duration_s: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => rate_per_s * duration_s,
+            ArrivalProcess::Diurnal { base_rate_per_s, amplitude, period_s } => {
+                let w = 2.0 * std::f64::consts::PI / period_s;
+                base_rate_per_s * duration_s
+                    + base_rate_per_s * amplitude / w * (1.0 - (w * duration_s).cos())
+            }
+            ArrivalProcess::Bursty { .. } => self.rate_at(0.0, duration_s) * duration_s,
+            ArrivalProcess::Ramp { start_rate_per_s, end_rate_per_s } => {
+                (start_rate_per_s + end_rate_per_s) / 2.0 * duration_s
+            }
+        }
+    }
+
+    /// Sample one realization of the process over `[0, duration_s]`:
+    /// sorted arrival instants in simulated **ns**, a pure function of the
+    /// rng state (the open-loop contract). Constant uses plain inversion;
+    /// diurnal/ramp use Lewis–Shedler thinning against
+    /// [`ArrivalProcess::peak_rate_per_s`]; bursty walks the on/off chain
+    /// explicitly (exponential dwells, Poisson arrivals within each dwell
+    /// — truncation at dwell boundaries is exact by memorylessness).
+    pub fn sample_arrivals_ns(&self, duration_s: f64, rng: &mut SplitMix64) -> Vec<f64> {
+        let dur_ns = duration_s * 1e9;
+        let mut out = Vec::new();
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => {
+                poisson_segment(rate_per_s, 0.0, dur_ns, rng, &mut out);
+            }
+            ArrivalProcess::Diurnal { .. } | ArrivalProcess::Ramp { .. } => {
+                let peak = self.peak_rate_per_s();
+                if peak <= 0.0 {
+                    return out;
+                }
+                let mut t = 0.0f64;
+                loop {
+                    let u = rng.next_f64().max(1e-12);
+                    t += -u.ln() / peak * 1e9;
+                    if t >= dur_ns || out.len() >= MAX_STREAM_ARRIVALS {
+                        break;
+                    }
+                    if rng.next_f64() * peak < self.rate_at(t * 1e-9, duration_s) {
+                        out.push(t);
+                    }
+                }
+            }
+            ArrivalProcess::Bursty { on_rate_per_s, off_rate_per_s, mean_on_s, mean_off_s } => {
+                let p_on = mean_on_s / (mean_on_s + mean_off_s);
+                let mut on = rng.next_f64() < p_on;
+                let mut seg_start = 0.0f64;
+                while seg_start < dur_ns && out.len() < MAX_STREAM_ARRIVALS {
+                    let u = rng.next_f64().max(1e-12);
+                    let dwell_ns = -u.ln() * if on { mean_on_s } else { mean_off_s } * 1e9;
+                    let seg_end = (seg_start + dwell_ns).min(dur_ns);
+                    let rate = if on { on_rate_per_s } else { off_rate_per_s };
+                    poisson_segment(rate, seg_start, seg_end, rng, &mut out);
+                    seg_start += dwell_ns;
+                    on = !on;
+                }
+            }
+        }
+        out
+    }
+
+    /// Compact human label, e.g. `ramp(10->600/s)`.
+    pub fn label(&self) -> String {
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => format!("constant({rate_per_s}/s)"),
+            ArrivalProcess::Diurnal { base_rate_per_s, amplitude, period_s } => {
+                format!("diurnal({base_rate_per_s}/s +-{amplitude} over {period_s}s)")
+            }
+            ArrivalProcess::Bursty { on_rate_per_s, off_rate_per_s, mean_on_s, mean_off_s } => {
+                format!(
+                    "bursty(on {on_rate_per_s}/s x{mean_on_s}s, off {off_rate_per_s}/s \
+                     x{mean_off_s}s)"
+                )
+            }
+            ArrivalProcess::Ramp { start_rate_per_s, end_rate_per_s } => {
+                format!("ramp({start_rate_per_s}->{end_rate_per_s}/s)")
+            }
+        }
+    }
+
+    /// Multiply every rate by `f` (the time-compression half lives in
+    /// [`ScenarioSpec::time_compressed`], which also shrinks dwell times
+    /// and the diurnal period so the *shape* is preserved).
+    fn rates_scaled(&self, f: f64) -> Self {
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => {
+                ArrivalProcess::Constant { rate_per_s: rate_per_s * f }
+            }
+            ArrivalProcess::Diurnal { base_rate_per_s, amplitude, period_s } => {
+                ArrivalProcess::Diurnal {
+                    base_rate_per_s: base_rate_per_s * f,
+                    amplitude,
+                    period_s: period_s / f,
+                }
+            }
+            ArrivalProcess::Bursty { on_rate_per_s, off_rate_per_s, mean_on_s, mean_off_s } => {
+                ArrivalProcess::Bursty {
+                    on_rate_per_s: on_rate_per_s * f,
+                    off_rate_per_s: off_rate_per_s * f,
+                    mean_on_s: mean_on_s / f,
+                    mean_off_s: mean_off_s / f,
+                }
+            }
+            ArrivalProcess::Ramp { start_rate_per_s, end_rate_per_s } => ArrivalProcess::Ramp {
+                start_rate_per_s: start_rate_per_s * f,
+                end_rate_per_s: end_rate_per_s * f,
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match *self {
+            ArrivalProcess::Constant { rate_per_s } => Json::obj(vec![
+                ("kind", Json::str("constant")),
+                ("rate_per_s", Json::num(rate_per_s)),
+            ]),
+            ArrivalProcess::Diurnal { base_rate_per_s, amplitude, period_s } => Json::obj(vec![
+                ("kind", Json::str("diurnal")),
+                ("base_rate_per_s", Json::num(base_rate_per_s)),
+                ("amplitude", Json::num(amplitude)),
+                ("period_s", Json::num(period_s)),
+            ]),
+            ArrivalProcess::Bursty { on_rate_per_s, off_rate_per_s, mean_on_s, mean_off_s } => {
+                Json::obj(vec![
+                    ("kind", Json::str("bursty")),
+                    ("on_rate_per_s", Json::num(on_rate_per_s)),
+                    ("off_rate_per_s", Json::num(off_rate_per_s)),
+                    ("mean_on_s", Json::num(mean_on_s)),
+                    ("mean_off_s", Json::num(mean_off_s)),
+                ])
+            }
+            ArrivalProcess::Ramp { start_rate_per_s, end_rate_per_s } => Json::obj(vec![
+                ("kind", Json::str("ramp")),
+                ("start_rate_per_s", Json::num(start_rate_per_s)),
+                ("end_rate_per_s", Json::num(end_rate_per_s)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let kind = v.str_of("kind")?;
+        let p = match kind.as_str() {
+            "constant" => ArrivalProcess::Constant { rate_per_s: v.f64_of("rate_per_s")? },
+            "diurnal" => ArrivalProcess::Diurnal {
+                base_rate_per_s: v.f64_of("base_rate_per_s")?,
+                amplitude: v.f64_of("amplitude")?,
+                period_s: v.f64_of("period_s")?,
+            },
+            "bursty" => ArrivalProcess::Bursty {
+                on_rate_per_s: v.f64_of("on_rate_per_s")?,
+                off_rate_per_s: v.f64_of("off_rate_per_s")?,
+                mean_on_s: v.f64_of("mean_on_s")?,
+                mean_off_s: v.f64_of("mean_off_s")?,
+            },
+            "ramp" => ArrivalProcess::Ramp {
+                start_rate_per_s: v.f64_of("start_rate_per_s")?,
+                end_rate_per_s: v.f64_of("end_rate_per_s")?,
+            },
+            other => anyhow::bail!(
+                "unknown arrival process kind {other:?} (want constant/diurnal/bursty/ramp)"
+            ),
+        };
+        p.validate()?;
+        Ok(p)
+    }
+}
+
+/// Homogeneous Poisson arrivals at `rate_per_s` on `[from_ns, to_ns)`,
+/// appended to `out` (the shared inner loop of every process).
+fn poisson_segment(
+    rate_per_s: f64,
+    from_ns: f64,
+    to_ns: f64,
+    rng: &mut SplitMix64,
+    out: &mut Vec<f64>,
+) {
+    if rate_per_s <= 0.0 {
+        return;
+    }
+    let mut t = from_ns;
+    loop {
+        let u = rng.next_f64().max(1e-12);
+        t += -u.ln() / rate_per_s * 1e9;
+        if t >= to_ns || out.len() >= MAX_STREAM_ARRIVALS {
+            break;
+        }
+        out.push(t);
+    }
+}
+
+/// One tenant stream of a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamSpec {
+    /// Unique stream name. The per-stream RNG seed is derived from the
+    /// *name* (not the position), so reordering streams in a spec cannot
+    /// change any stream's arrivals — see
+    /// [`crate::coordinator::scenario::stream_seed`].
+    pub name: String,
+    pub process: ArrivalProcess,
+    /// Weighted analysis mix (`label -> weight`), resolved against the
+    /// [`crate::alg::AnalysisRegistry`] at compile time. Kept sorted by
+    /// label so JSON round-trips are identity.
+    pub mix: Vec<(String, f64)>,
+    /// Priority class every request of this stream carries; None = each
+    /// workload class's default ([`Priority::Standard`] for registry
+    /// classes).
+    pub priority: Option<Priority>,
+    /// Per-stream p99 latency SLO (s); verdict lands in the report's
+    /// scenario section.
+    pub slo_p99_s: Option<f64>,
+    /// Per-request deadline (s from arrival); expired queued requests are
+    /// shed by admission.
+    pub deadline_s: Option<f64>,
+}
+
+impl StreamSpec {
+    pub fn new(name: impl Into<String>, process: ArrivalProcess, mix: Vec<(String, f64)>) -> Self {
+        let mut s = StreamSpec {
+            name: name.into(),
+            process,
+            mix,
+            priority: None,
+            slo_p99_s: None,
+            deadline_s: None,
+        };
+        s.mix.sort_by(|a, b| a.0.cmp(&b.0));
+        s
+    }
+
+    pub fn with_priority(mut self, p: Priority) -> Self {
+        self.priority = Some(p);
+        self
+    }
+
+    pub fn with_slo_p99_s(mut self, slo: f64) -> Self {
+        self.slo_p99_s = Some(slo);
+        self
+    }
+
+    pub fn with_deadline_s(mut self, d: f64) -> Self {
+        self.deadline_s = Some(d);
+        self
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "stream name must be non-empty");
+        self.process.validate()?;
+        anyhow::ensure!(!self.mix.is_empty(), "stream {:?} needs a non-empty mix", self.name);
+        for (label, w) in &self.mix {
+            anyhow::ensure!(
+                w.is_finite() && *w >= 0.0,
+                "stream {:?} mix weight for {label:?} must be >= 0, got {w}",
+                self.name
+            );
+        }
+        anyhow::ensure!(
+            self.mix.iter().map(|(_, w)| w).sum::<f64>() > 0.0,
+            "stream {:?} needs positive total mix weight",
+            self.name
+        );
+        if let Some(s) = self.slo_p99_s {
+            anyhow::ensure!(s > 0.0, "stream {:?} SLO must be positive", self.name);
+        }
+        if let Some(d) = self.deadline_s {
+            anyhow::ensure!(d > 0.0, "stream {:?} deadline must be positive", self.name);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("name", Json::str(self.name.clone())),
+            ("process", self.process.to_json()),
+            (
+                "mix",
+                Json::Obj(
+                    self.mix.iter().map(|(l, w)| (l.clone(), Json::num(*w))).collect(),
+                ),
+            ),
+        ];
+        if let Some(p) = self.priority {
+            fields.push(("priority", Json::str(priority_name(p))));
+        }
+        if let Some(s) = self.slo_p99_s {
+            fields.push(("slo_p99_s", Json::num(s)));
+        }
+        if let Some(d) = self.deadline_s {
+            fields.push(("deadline_s", Json::num(d)));
+        }
+        Json::obj(fields)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let mix = match v.get("mix")? {
+            Json::Obj(m) => m
+                .iter()
+                .map(|(l, w)| Ok((l.clone(), w.as_f64()?)))
+                .collect::<Result<Vec<_>>>()?,
+            other => anyhow::bail!("stream mix must be an object, got {other:?}"),
+        };
+        let mut s = StreamSpec::new(v.str_of("name")?, ArrivalProcess::from_json(v.get("process")?)?, mix);
+        if let Some(p) = v.get_opt("priority") {
+            s.priority = Some(parse_priority(p.as_str()?)?);
+        }
+        if let Some(x) = v.get_opt("slo_p99_s") {
+            s.slo_p99_s = Some(x.as_f64()?);
+        }
+        if let Some(x) = v.get_opt("deadline_s") {
+            s.deadline_s = Some(x.as_f64()?);
+        }
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+pub fn priority_name(p: Priority) -> &'static str {
+    match p {
+        Priority::Interactive => "interactive",
+        Priority::Standard => "standard",
+        Priority::Batch => "batch",
+    }
+}
+
+pub fn parse_priority(s: &str) -> Result<Priority> {
+    match s {
+        "interactive" => Ok(Priority::Interactive),
+        "standard" => Ok(Priority::Standard),
+        "batch" => Ok(Priority::Batch),
+        other => anyhow::bail!(
+            "unknown priority {other:?} (want interactive/standard/batch)"
+        ),
+    }
+}
+
+/// A whole scenario: named, bounded in time, one or more streams.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    pub name: String,
+    /// Simulated length of the arrival window (s); the run itself lasts
+    /// until the last admitted query drains.
+    pub duration_s: f64,
+    pub streams: Vec<StreamSpec>,
+}
+
+impl ScenarioSpec {
+    pub fn new(name: impl Into<String>, duration_s: f64, streams: Vec<StreamSpec>) -> Self {
+        ScenarioSpec { name: name.into(), duration_s, streams }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.name.is_empty(), "scenario name must be non-empty");
+        anyhow::ensure!(
+            self.duration_s.is_finite() && self.duration_s > 0.0,
+            "scenario duration must be positive, got {}",
+            self.duration_s
+        );
+        anyhow::ensure!(!self.streams.is_empty(), "scenario needs at least one stream");
+        let mut seen = std::collections::BTreeSet::new();
+        for s in &self.streams {
+            s.validate()?;
+            anyhow::ensure!(seen.insert(s.name.as_str()), "duplicate stream name {:?}", s.name);
+        }
+        anyhow::ensure!(
+            self.expected_arrivals() >= 1.0,
+            "scenario {:?} expects fewer than one arrival over {}s",
+            self.name,
+            self.duration_s
+        );
+        Ok(())
+    }
+
+    /// Closed-form expected total arrivals across all streams.
+    pub fn expected_arrivals(&self) -> f64 {
+        self.streams.iter().map(|s| s.process.expected_arrivals(self.duration_s)).sum()
+    }
+
+    /// Play the same scenario `factor`x faster: every rate scales up by
+    /// `factor`, the duration (and the diurnal period / bursty dwells)
+    /// shrinks by it — so the expected arrival *counts* and the load
+    /// *shape* relative to the timeline are invariant while the absolute
+    /// demand in queries/s scales. This is how one catalog serves machines
+    /// of very different capacity (the overload acceptance test compresses
+    /// the ramp to a measured multiple of its machine's throughput).
+    pub fn time_compressed(&self, factor: f64) -> Result<Self> {
+        anyhow::ensure!(
+            factor.is_finite() && factor > 0.0,
+            "compression factor must be positive, got {factor}"
+        );
+        let mut out = self.clone();
+        out.duration_s /= factor;
+        for s in &mut out.streams {
+            s.process = s.process.rates_scaled(factor);
+        }
+        Ok(out)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("duration_s", Json::num(self.duration_s)),
+            ("streams", Json::arr(self.streams.iter().map(|s| s.to_json()))),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self> {
+        let spec = ScenarioSpec {
+            name: v.str_of("name")?,
+            duration_s: v.f64_of("duration_s")?,
+            streams: v
+                .get("streams")?
+                .as_arr()?
+                .iter()
+                .map(StreamSpec::from_json)
+                .collect::<Result<_>>()?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn write_file(&self, path: &std::path::Path) -> Result<()> {
+        self.to_json().write_file(path)
+    }
+
+    /// Resolve a CLI argument: a catalog name first, else a JSON file path.
+    pub fn load(arg: &str) -> Result<Self> {
+        if let Some(spec) = Self::builtin(arg) {
+            return Ok(spec);
+        }
+        let path = std::path::Path::new(arg);
+        anyhow::ensure!(
+            path.exists(),
+            "{arg:?} is neither a catalog scenario ({}) nor a readable file",
+            Self::catalog_names().join(", ")
+        );
+        Self::parse_file(path)
+    }
+
+    /// Names of the checked-in catalog (`ci/scenarios/*.json` mirrors
+    /// these builtins byte-for-byte; a round-trip test pins that).
+    pub fn catalog_names() -> Vec<&'static str> {
+        vec!["steady", "diurnal", "burst", "overload-ramp", "multi-tenant-contention"]
+    }
+
+    /// The full catalog, in [`ScenarioSpec::catalog_names`] order.
+    pub fn catalog() -> Vec<ScenarioSpec> {
+        Self::catalog_names()
+            .into_iter()
+            .map(|n| Self::builtin(n).expect("catalog name"))
+            .collect()
+    }
+
+    /// Look up a catalog scenario by name. Rates are sized for the smoke
+    /// configuration CI runs (scale-11 graph on the full pathfinder-8);
+    /// use [`ScenarioSpec::time_compressed`] to retarget other machines.
+    pub fn builtin(name: &str) -> Option<ScenarioSpec> {
+        let spec = match name {
+            // Baseline: two flat tenants, one latency-sensitive.
+            "steady" => ScenarioSpec::new(
+                "steady",
+                2.0,
+                vec![
+                    StreamSpec::new(
+                        "frontend",
+                        ArrivalProcess::Constant { rate_per_s: 150.0 },
+                        vec![("khop".into(), 1.0)],
+                    )
+                    .with_priority(Priority::Interactive)
+                    .with_slo_p99_s(0.25),
+                    StreamSpec::new(
+                        "analytics",
+                        ArrivalProcess::Constant { rate_per_s: 50.0 },
+                        vec![("bfs".into(), 0.8), ("cc".into(), 0.2)],
+                    )
+                    .with_priority(Priority::Batch),
+                ],
+            ),
+            // Day/night sinusoid over a background batch trickle.
+            "diurnal" => ScenarioSpec::new(
+                "diurnal",
+                2.0,
+                vec![
+                    StreamSpec::new(
+                        "web",
+                        ArrivalProcess::Diurnal {
+                            base_rate_per_s: 200.0,
+                            amplitude: 0.8,
+                            period_s: 1.0,
+                        },
+                        vec![("bfs".into(), 0.7), ("khop".into(), 0.3)],
+                    )
+                    .with_slo_p99_s(0.5),
+                    StreamSpec::new(
+                        "nightly",
+                        ArrivalProcess::Constant { rate_per_s: 25.0 },
+                        vec![("cc".into(), 1.0)],
+                    )
+                    .with_priority(Priority::Batch),
+                ],
+            ),
+            // Markov-modulated on/off spikes against a steady tenant.
+            "burst" => ScenarioSpec::new(
+                "burst",
+                2.0,
+                vec![
+                    StreamSpec::new(
+                        "spiky-tenant",
+                        ArrivalProcess::Bursty {
+                            on_rate_per_s: 1200.0,
+                            off_rate_per_s: 50.0,
+                            mean_on_s: 0.1,
+                            mean_off_s: 0.3,
+                        },
+                        vec![("bfs".into(), 1.0)],
+                    ),
+                    StreamSpec::new(
+                        "steady-tenant",
+                        ArrivalProcess::Constant { rate_per_s: 50.0 },
+                        vec![("khop".into(), 1.0)],
+                    )
+                    .with_priority(Priority::Interactive)
+                    .with_slo_p99_s(0.25),
+                ],
+            ),
+            // Linear overload: Batch demand ramps through capacity while a
+            // flat Interactive tenant must keep its SLO — the scenario that
+            // finally exercises shedding and preemption together.
+            "overload-ramp" => ScenarioSpec::new(
+                "overload-ramp",
+                2.0,
+                vec![
+                    StreamSpec::new(
+                        "interactive-frontend",
+                        ArrivalProcess::Constant { rate_per_s: 40.0 },
+                        vec![("khop".into(), 1.0)],
+                    )
+                    .with_priority(Priority::Interactive)
+                    .with_slo_p99_s(0.25),
+                    StreamSpec::new(
+                        "batch-ingest-ramp",
+                        ArrivalProcess::Ramp { start_rate_per_s: 10.0, end_rate_per_s: 600.0 },
+                        vec![("bfs".into(), 1.0)],
+                    )
+                    .with_priority(Priority::Batch)
+                    .with_deadline_s(0.5),
+                ],
+            ),
+            // Three tenants with distinct shapes, classes and SLOs
+            // contending for one machine.
+            "multi-tenant-contention" => ScenarioSpec::new(
+                "multi-tenant-contention",
+                2.0,
+                vec![
+                    StreamSpec::new(
+                        "tenant-a",
+                        ArrivalProcess::Constant { rate_per_s: 120.0 },
+                        vec![("khop".into(), 1.0)],
+                    )
+                    .with_priority(Priority::Interactive)
+                    .with_slo_p99_s(0.25),
+                    StreamSpec::new(
+                        "tenant-b",
+                        ArrivalProcess::Diurnal {
+                            base_rate_per_s: 100.0,
+                            amplitude: 0.6,
+                            period_s: 0.5,
+                        },
+                        vec![("bfs".into(), 0.9), ("sssp".into(), 0.1)],
+                    ),
+                    StreamSpec::new(
+                        "tenant-c",
+                        ArrivalProcess::Bursty {
+                            on_rate_per_s: 600.0,
+                            off_rate_per_s: 20.0,
+                            mean_on_s: 0.15,
+                            mean_off_s: 0.35,
+                        },
+                        vec![("bfs".into(), 0.7), ("cc".into(), 0.3)],
+                    )
+                    .with_priority(Priority::Batch)
+                    .with_deadline_s(0.75),
+                ],
+            ),
+            _ => return None,
+        };
+        debug_assert!(spec.validate().is_ok(), "builtin {name} must validate");
+        Some(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_builtin_validates_and_round_trips() {
+        for name in ScenarioSpec::catalog_names() {
+            let spec = ScenarioSpec::builtin(name).unwrap();
+            spec.validate().unwrap();
+            assert_eq!(spec.name, name);
+            let back =
+                ScenarioSpec::from_json(&Json::parse(&spec.to_json().render_pretty()).unwrap())
+                    .unwrap();
+            assert_eq!(spec, back, "{name} JSON round-trip");
+        }
+        assert!(ScenarioSpec::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn expected_arrivals_closed_forms() {
+        let c = ArrivalProcess::Constant { rate_per_s: 100.0 };
+        assert!((c.expected_arrivals(2.0) - 200.0).abs() < 1e-9);
+        // A whole number of periods integrates the sinusoid away.
+        let d = ArrivalProcess::Diurnal { base_rate_per_s: 100.0, amplitude: 0.5, period_s: 1.0 };
+        assert!((d.expected_arrivals(2.0) - 200.0).abs() < 1e-6);
+        // Half a period adds the positive lobe: base*T + base*A*P/pi.
+        let half = d.expected_arrivals(0.5);
+        let lobe = 100.0 * 0.5 * 1.0 / std::f64::consts::PI;
+        assert!((half - (50.0 + lobe)).abs() < 1e-6, "{half}");
+        let b = ArrivalProcess::Bursty {
+            on_rate_per_s: 300.0,
+            off_rate_per_s: 100.0,
+            mean_on_s: 0.1,
+            mean_off_s: 0.3,
+        };
+        // Stationary mean: (300*0.1 + 100*0.3)/0.4 = 150/s.
+        assert!((b.expected_arrivals(2.0) - 300.0).abs() < 1e-9);
+        let r = ArrivalProcess::Ramp { start_rate_per_s: 10.0, end_rate_per_s: 600.0 };
+        assert!((r.expected_arrivals(2.0) - 610.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_in_range() {
+        for spec in ScenarioSpec::catalog() {
+            for stream in &spec.streams {
+                let a = stream.process.sample_arrivals_ns(spec.duration_s, &mut SplitMix64::new(9));
+                let b = stream.process.sample_arrivals_ns(spec.duration_s, &mut SplitMix64::new(9));
+                assert_eq!(a.len(), b.len(), "{}/{}", spec.name, stream.name);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "bit-identical replay");
+                }
+                let dur_ns = spec.duration_s * 1e9;
+                assert!(a.windows(2).all(|w| w[0] <= w[1]), "sorted");
+                assert!(a.iter().all(|&t| t >= 0.0 && t < dur_ns), "in window");
+            }
+        }
+    }
+
+    #[test]
+    fn time_compression_preserves_expected_counts() {
+        for spec in ScenarioSpec::catalog() {
+            let fast = spec.time_compressed(8.0).unwrap();
+            assert!((fast.duration_s - spec.duration_s / 8.0).abs() < 1e-12);
+            assert!(
+                (fast.expected_arrivals() - spec.expected_arrivals()).abs()
+                    < 1e-6 * spec.expected_arrivals(),
+                "{}: {} vs {}",
+                spec.name,
+                fast.expected_arrivals(),
+                spec.expected_arrivals()
+            );
+        }
+        assert!(ScenarioSpec::builtin("steady").unwrap().time_compressed(0.0).is_err());
+    }
+
+    #[test]
+    fn validation_rejects_malformed_specs() {
+        let mut spec = ScenarioSpec::builtin("steady").unwrap();
+        spec.duration_s = 0.0;
+        assert!(spec.validate().is_err());
+        let mut spec = ScenarioSpec::builtin("steady").unwrap();
+        spec.streams[1].name = spec.streams[0].name.clone();
+        assert!(spec.validate().is_err(), "duplicate names");
+        let mut spec = ScenarioSpec::builtin("steady").unwrap();
+        spec.streams[0].mix.clear();
+        assert!(spec.validate().is_err(), "empty mix");
+        assert!(ArrivalProcess::Diurnal {
+            base_rate_per_s: 10.0,
+            amplitude: 1.5,
+            period_s: 1.0
+        }
+        .validate()
+        .is_err());
+        assert!(ArrivalProcess::Constant { rate_per_s: 0.0 }.validate().is_err());
+        assert!(parse_priority("realtime").is_err());
+    }
+}

@@ -40,6 +40,12 @@
 //!   frontier exchange on the fleet interconnect, update batches fanned
 //!   out through one ordered log so every replica of a shard agrees per
 //!   epoch (DESIGN.md §Fleet);
+//! * [`scenario`] — the open-loop load harness (`serve --scenario`):
+//!   compiles a declarative [`crate::config::scenario::ScenarioSpec`] —
+//!   per-tenant streams with their own arrival process (constant /
+//!   diurnal / bursty / ramp), mix, priority, SLO and deadline — into one
+//!   merged deterministic timeline served through the paths above
+//!   (docs/SCENARIOS.md);
 //! * [`telemetry`] — the observability layer (`--trace`): replays the
 //!   engine's [`crate::sim::trace::TraceBuffer`] into sampled
 //!   time-series (per-chassis utilization, queue depth per class,
@@ -54,6 +60,7 @@ pub mod metrics;
 pub mod mutation;
 pub mod planner;
 pub mod request;
+pub mod scenario;
 pub mod scheduler;
 pub mod service;
 pub mod telemetry;
@@ -69,6 +76,7 @@ pub use mutation::{
 };
 pub use planner::{arrival_times, bfs_queries, mix_queries};
 pub use request::{Priority, QueryRequest};
+pub use scenario::{compile as compile_scenario, ScenarioStats, StreamStats};
 pub use scheduler::{Coordinator, Policy};
 pub use service::{
     GraphService, PriorityMix, ServiceConfig, ServiceReport, SloOutcome, TraceSpec,

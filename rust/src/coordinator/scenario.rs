@@ -1,0 +1,391 @@
+//! Scenario compiler: a declarative [`ScenarioSpec`] becomes one merged,
+//! deterministic, open-loop arrival timeline (docs/SCENARIOS.md).
+//!
+//! Each stream gets an RNG rooted at [`stream_seed`] — a hash of the
+//! stream *name* mixed with the master seed — so a stream's arrivals,
+//! sources and class draws are a pure function of (spec, master seed,
+//! name). Two consequences the tests pin:
+//!
+//! * **Open loop**: arrival instants are computed here, before the engine
+//!   runs; nothing about service completions can feed back into them.
+//! * **Order independence**: reordering streams inside a spec (or adding
+//!   a new stream) cannot change any existing stream's draws, because no
+//!   stream's RNG depends on another stream's position or consumption.
+//!
+//! Compilation resolves each stream's mix against the
+//! [`AnalysisRegistry`] into the same [`WorkloadSpec`] machinery the flat
+//! `serve` path uses, then merges all streams by arrival instant (ties
+//! broken by stream index, then sequence — total and deterministic). The
+//! k-th *query* record of the run maps back to the k-th compiled request
+//! in every serve path (mutation/compaction records carry their own
+//! labels and are filtered out), which is how [`ScenarioStats`] folds
+//! per-stream outcomes out of a finished run.
+
+use std::sync::Arc;
+
+use crate::alg::AnalysisRegistry;
+use crate::config::scenario::ScenarioSpec;
+use crate::coordinator::metrics::QueryRecord;
+use crate::coordinator::request::QueryRequest;
+use crate::coordinator::service::{WorkloadClass, WorkloadSpec};
+use crate::graph::csr::Csr;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use crate::util::stats::Quantiles;
+
+/// The per-stream RNG seed: FNV-1a of the stream name, XORed with the
+/// master seed, finalized through one SplitMix64 step (names differing in
+/// one byte land far apart). Surfaced per stream in the service report so
+/// any single stream's draw sequence is reproducible from the summary.
+pub fn stream_seed(master_seed: u64, name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    SplitMix64::new(h ^ master_seed).next_u64()
+}
+
+/// One compiled stream's identity in the merged timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledStream {
+    pub name: String,
+    /// The stream's root RNG seed ([`stream_seed`]).
+    pub seed: u64,
+    /// Arrivals this stream contributed.
+    pub arrivals: usize,
+}
+
+/// Maps merged-timeline positions back to streams (what
+/// [`ScenarioStats`] needs from compilation, kept after the request
+/// vector is handed to the engine).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioMap {
+    /// `stream_of[i]` = index into `streams` of the i-th merged request.
+    pub stream_of: Vec<usize>,
+    pub streams: Vec<CompiledStream>,
+}
+
+/// A compiled scenario: the merged request timeline plus the stream map.
+pub struct ScenarioTimeline {
+    /// Requests in arrival order (`requests[i].arrival_ns == arrivals[i]`).
+    pub requests: Vec<QueryRequest>,
+    /// Sorted arrival instants (ns), parallel to `requests`.
+    pub arrivals: Vec<f64>,
+    pub map: ScenarioMap,
+}
+
+/// Compile `spec` against a graph and registry into a merged timeline.
+///
+/// Per stream, the root RNG forks two independent sub-streams: `0xA1`
+/// drives the arrival process and `0xB2` drives the per-request draws
+/// (class, source, nothing else) — so a stream's arrival *instants* are
+/// independent even of its own mix, and the open-loop property test can
+/// compare timelines across serving policies bit-for-bit. Sources are
+/// rejection-sampled non-isolated vertices *with* repeats (arrival counts
+/// are random, so the distinct-source sampler's cardinality precondition
+/// can't be promised here).
+pub fn compile(
+    g: &Csr,
+    registry: &AnalysisRegistry,
+    spec: &ScenarioSpec,
+    master_seed: u64,
+) -> anyhow::Result<ScenarioTimeline> {
+    spec.validate()?;
+    let n = g.n() as u64;
+    anyhow::ensure!(n > 0, "cannot compile a scenario against an empty graph");
+
+    let mut streams = Vec::with_capacity(spec.streams.len());
+    // (arrival ns, stream index, in-stream sequence, request)
+    let mut merged: Vec<(f64, usize, usize, QueryRequest)> = Vec::new();
+    for (si, stream) in spec.streams.iter().enumerate() {
+        let classes = stream
+            .mix
+            .iter()
+            .map(|(label, w)| WorkloadClass::from_registry(registry, label, *w))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let workload = WorkloadSpec::new(classes);
+        workload.validate()?;
+
+        let seed = stream_seed(master_seed, &stream.name);
+        let mut root = SplitMix64::new(seed);
+        let mut arr_rng = root.fork(0xA1);
+        let mut req_rng = root.fork(0xB2);
+        let arrivals = stream.process.sample_arrivals_ns(spec.duration_s, &mut arr_rng);
+        let mut attempts_left = 10_000u64 + 1_000 * arrivals.len() as u64;
+        for (seq, &t) in arrivals.iter().enumerate() {
+            let class = workload.pick(&mut req_rng);
+            let src = loop {
+                anyhow::ensure!(
+                    attempts_left > 0,
+                    "stream {:?}: could not find non-isolated source vertices \
+                     (graph too sparse)",
+                    stream.name
+                );
+                attempts_left -= 1;
+                let v = req_rng.gen_range(n) as u32;
+                if g.degree(v) > 0 {
+                    break v;
+                }
+            };
+            let priority = stream.priority.unwrap_or(class.priority);
+            let mut req =
+                QueryRequest::from_arc(class.build(src)).at(t).with_priority(priority);
+            if let Some(d) = stream.deadline_s.or(class.deadline_s) {
+                req = req.with_deadline_ns(d * 1e9);
+            }
+            merged.push((t, si, seq, req));
+        }
+        streams.push(CompiledStream { name: stream.name.clone(), seed, arrivals: arrivals.len() });
+    }
+    anyhow::ensure!(
+        !merged.is_empty(),
+        "scenario {:?} generated no arrivals with seed {master_seed:#x} \
+         (raise rates or duration, or compress less)",
+        spec.name
+    );
+    anyhow::ensure!(
+        merged.len() <= crate::config::scenario::MAX_STREAM_ARRIVALS,
+        "scenario {:?} generated {} arrivals (cap {}); compress time or lower rates",
+        spec.name,
+        merged.len(),
+        crate::config::scenario::MAX_STREAM_ARRIVALS
+    );
+    // Total order: instant, then stream index, then in-stream sequence.
+    // f64 total_cmp keeps the sort total even at exact ties.
+    merged.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+
+    let arrivals: Vec<f64> = merged.iter().map(|m| m.0).collect();
+    let stream_of: Vec<usize> = merged.iter().map(|m| m.1).collect();
+    let requests: Vec<QueryRequest> = merged.into_iter().map(|m| m.3).collect();
+    Ok(ScenarioTimeline { requests, arrivals, map: ScenarioMap { stream_of, streams } })
+}
+
+/// Per-stream outcome summary of a finished scenario run.
+#[derive(Debug, Clone)]
+pub struct StreamStats {
+    pub name: String,
+    /// Root RNG seed of the stream (reproduce it alone via [`stream_seed`]).
+    pub seed: u64,
+    pub arrivals: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub shed: usize,
+    /// Completed after at least one checkpoint park (subset of `completed`).
+    pub preempted: usize,
+    /// Latency quantiles of the stream's completed queries (s).
+    pub latency: Option<Quantiles>,
+    /// The stream's declared p99 target (s), if any.
+    pub slo_p99_s: Option<f64>,
+    /// SLO verdict: None when no target declared; `Some(false)` when a
+    /// target exists but nothing completed (an SLO cannot pass vacuously
+    /// while its stream is being starved).
+    pub slo_pass: Option<bool>,
+}
+
+impl StreamStats {
+    /// One operator summary line.
+    pub fn line(&self) -> String {
+        let mut out = format!(
+            "stream {:>12} (seed {:#018x}): {} arrivals — {} ok, {} rejected, {} shed, \
+             {} preempted",
+            self.name, self.seed, self.arrivals, self.completed, self.rejected, self.shed,
+            self.preempted,
+        );
+        if let Some(q) = &self.latency {
+            out.push_str(&format!(" | p50={:.3}s p99={:.3}s", q.q50, q.q99));
+        }
+        if let (Some(t), Some(pass)) = (self.slo_p99_s, self.slo_pass) {
+            out.push_str(&format!(
+                " | SLO p99<={t:.3}s: {}",
+                if pass { "PASS" } else { "FAIL" }
+            ));
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let q_or_null = |v: Option<f64>| v.map_or(Json::Null, Json::num);
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("seed", Json::str(format!("{:#x}", self.seed))),
+            ("arrivals", Json::num(self.arrivals as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("preempted", Json::num(self.preempted as f64)),
+            ("p50_s", q_or_null(self.latency.as_ref().map(|q| q.q50))),
+            ("p95_s", q_or_null(self.latency.as_ref().map(|q| q.q95))),
+            ("p99_s", q_or_null(self.latency.as_ref().map(|q| q.q99))),
+            ("slo_p99_s", q_or_null(self.slo_p99_s)),
+            (
+                "slo_pass",
+                self.slo_pass.map_or(Json::Null, Json::Bool),
+            ),
+        ])
+    }
+}
+
+/// Scenario section of a service report: identity plus per-stream stats.
+#[derive(Debug, Clone)]
+pub struct ScenarioStats {
+    pub name: String,
+    /// Arrival-window length (simulated s) after any time compression.
+    pub duration_s: f64,
+    pub streams: Vec<StreamStats>,
+}
+
+impl ScenarioStats {
+    /// Fold per-stream outcomes out of a finished run. `records` must be
+    /// the run's *query* records (mutation/compaction lanes filtered out)
+    /// in original submission order — position k is compiled request k,
+    /// the invariant every serve path maintains.
+    pub fn from_records(
+        spec: &ScenarioSpec,
+        map: &ScenarioMap,
+        records: &[&QueryRecord],
+    ) -> ScenarioStats {
+        assert_eq!(
+            records.len(),
+            map.stream_of.len(),
+            "query records must map 1:1 onto compiled scenario requests"
+        );
+        let mut streams: Vec<StreamStats> = map
+            .streams
+            .iter()
+            .zip(&spec.streams)
+            .map(|(c, s)| {
+                debug_assert_eq!(c.name, s.name, "map and spec streams stay parallel");
+                StreamStats {
+                    name: c.name.clone(),
+                    seed: c.seed,
+                    arrivals: c.arrivals,
+                    completed: 0,
+                    rejected: 0,
+                    shed: 0,
+                    preempted: 0,
+                    latency: None,
+                    slo_p99_s: s.slo_p99_s,
+                    slo_pass: None,
+                }
+            })
+            .collect();
+        let mut latencies: Vec<Vec<f64>> = vec![Vec::new(); streams.len()];
+        for (r, &si) in records.iter().zip(&map.stream_of) {
+            let st = &mut streams[si];
+            if r.completed() {
+                st.completed += 1;
+                latencies[si].push(r.latency_s);
+            }
+            if r.rejected() {
+                st.rejected += 1;
+            }
+            if r.shed() {
+                st.shed += 1;
+            }
+            if r.preempted() {
+                st.preempted += 1;
+            }
+        }
+        for (st, xs) in streams.iter_mut().zip(&latencies) {
+            st.latency = Quantiles::try_from_samples(xs);
+            st.slo_pass = st.slo_p99_s.map(|target| {
+                st.latency.as_ref().is_some_and(|q| q.q99 <= target)
+            });
+        }
+        ScenarioStats { name: spec.name.clone(), duration_s: spec.duration_s, streams }
+    }
+
+    /// Every stream with a declared SLO met it.
+    pub fn slos_pass(&self) -> bool {
+        self.streams.iter().all(|s| s.slo_pass != Some(false))
+    }
+
+    /// Stats of one stream by name.
+    pub fn stream(&self, name: &str) -> Option<&StreamStats> {
+        self.streams.iter().find(|s| s.name == name)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("duration_s", Json::num(self.duration_s)),
+            ("streams", Json::arr(self.streams.iter().map(|s| s.to_json()))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::workload::GraphConfig;
+    use crate::graph::builder::build_undirected_csr;
+    use crate::graph::rmat::Rmat;
+
+    fn g() -> Csr {
+        let r = Rmat::new(GraphConfig::with_scale(10));
+        build_undirected_csr(1 << 10, &r.edges())
+    }
+
+    #[test]
+    fn compile_is_deterministic_and_sorted() {
+        let g = g();
+        let reg = AnalysisRegistry::builtin();
+        let spec = ScenarioSpec::builtin("steady").unwrap();
+        let a = compile(&g, &reg, &spec, 7).unwrap();
+        let b = compile(&g, &reg, &spec, 7).unwrap();
+        assert_eq!(a.arrivals.len(), b.arrivals.len());
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(a.arrivals.windows(2).all(|w| w[0] <= w[1]), "merged timeline sorted");
+        assert_eq!(a.requests.len(), a.map.stream_of.len());
+        assert_eq!(
+            a.map.streams.iter().map(|s| s.arrivals).sum::<usize>(),
+            a.requests.len(),
+            "per-stream counts partition the merged timeline"
+        );
+        // Requests carry their merged arrival instants.
+        for (req, &t) in a.requests.iter().zip(&a.arrivals) {
+            assert_eq!(req.arrival_ns.to_bits(), t.to_bits());
+        }
+        // A different master seed moves the arrivals.
+        let c = compile(&g, &reg, &spec, 8).unwrap();
+        assert_ne!(
+            a.arrivals.iter().map(|t| t.to_bits()).collect::<Vec<_>>(),
+            c.arrivals.iter().map(|t| t.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn stream_seed_depends_on_name_and_master() {
+        assert_ne!(stream_seed(1, "a"), stream_seed(1, "b"));
+        assert_ne!(stream_seed(1, "a"), stream_seed(2, "a"));
+        assert_eq!(stream_seed(1, "a"), stream_seed(1, "a"));
+    }
+
+    #[test]
+    fn streams_carry_their_declared_metadata() {
+        let g = g();
+        let reg = AnalysisRegistry::builtin();
+        let spec = ScenarioSpec::builtin("overload-ramp").unwrap();
+        let tl = compile(&g, &reg, &spec, 11).unwrap();
+        use crate::coordinator::request::Priority;
+        for (req, &si) in tl.requests.iter().zip(&tl.map.stream_of) {
+            let stream = &spec.streams[si];
+            match stream.name.as_str() {
+                "interactive-frontend" => {
+                    assert_eq!(req.priority, Priority::Interactive);
+                    assert_eq!(req.label(), "khop");
+                    assert!(req.deadline_ns.is_none());
+                }
+                "batch-ingest-ramp" => {
+                    assert_eq!(req.priority, Priority::Batch);
+                    assert_eq!(req.label(), "bfs");
+                    assert_eq!(req.deadline_ns, Some(0.5 * 1e9));
+                }
+                other => panic!("unexpected stream {other}"),
+            }
+        }
+    }
+}

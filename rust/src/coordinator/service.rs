@@ -10,6 +10,7 @@
 //! utilization — everything an operator would watch on a dashboard.
 
 use crate::alg::{Analysis, AnalysisFactory, AnalysisRegistry};
+use crate::config::scenario::ScenarioSpec;
 use crate::coordinator::batch::{self, BatchConfig, BatchPlan};
 use crate::coordinator::fleet::{Fleet, FleetConfig, FleetStats};
 use crate::coordinator::mutation::{
@@ -28,8 +29,10 @@ use crate::util::stats::Quantiles;
 use std::sync::Arc;
 
 use super::planner::arrival_times;
+use super::scenario::{ScenarioMap, ScenarioStats};
 use super::scheduler::{Coordinator, Policy};
 use super::telemetry::TelemetryConfig;
+use crate::util::json::Json;
 
 /// One weighted analysis class of a service workload.
 #[derive(Clone)]
@@ -377,6 +380,13 @@ pub struct ServiceConfig {
     /// export Chrome trace JSON + machine-readable telemetry (None = no
     /// tracing, the zero-cost [`crate::sim::trace::NullSink`] path).
     pub trace: Option<TraceSpec>,
+    /// Open-loop multi-stream scenario (`serve --scenario <file|name>`,
+    /// docs/SCENARIOS.md). When set, the arrival timeline is compiled
+    /// from the scenario's per-tenant streams — `queries`,
+    /// `arrival_rate_per_s`, `workload` and `priority_mix` are ignored;
+    /// everything else (on_full, weights, preempt, mutation, fleet,
+    /// batch, trace) composes as usual.
+    pub scenario: Option<ScenarioSpec>,
     /// RNG seed (arrivals, sources, query classes, priorities; the
     /// mutation stream forks an independent sub-stream from it).
     pub seed: u64,
@@ -396,6 +406,7 @@ impl Default for ServiceConfig {
             fleet: None,
             batch: None,
             trace: None,
+            scenario: None,
             seed: 0x5E21,
         }
     }
@@ -461,6 +472,11 @@ impl ServiceConfig {
         self
     }
 
+    pub fn with_scenario(mut self, scenario: ScenarioSpec) -> Self {
+        self.scenario = Some(scenario);
+        self
+    }
+
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
@@ -500,6 +516,11 @@ pub struct ServiceReport {
     pub slo: Vec<SloOutcome>,
     /// Per-priority-class admission summary (waits, sheds, rejections).
     pub priority: Vec<crate::coordinator::metrics::PriorityStats>,
+    /// Per-priority-class completed count + latency quantiles (as
+    /// *admitted*, i.e. after any aging promotion) — the data behind the
+    /// BENCH schema-2 `class_matrix` row [`ServiceReport::to_json`]
+    /// emits. None quantiles = the class completed nothing.
+    pub priority_latency: Vec<(Priority, usize, Option<Quantiles>)>,
     /// Peak simultaneous in-flight queries.
     pub peak_concurrency: usize,
     /// Mean channel utilization over the run.
@@ -512,6 +533,10 @@ pub struct ServiceReport {
     /// Fleet summary (per-shard utilization, interconnect bytes); None
     /// for a single-machine run.
     pub fleet: Option<FleetStats>,
+    /// Per-stream scenario outcomes (arrivals, sheds, per-stream seeds,
+    /// SLO verdicts); None unless the run was driven by
+    /// [`ServiceConfig::scenario`].
+    pub scenario: Option<ScenarioStats>,
 }
 
 impl ServiceReport {
@@ -565,7 +590,92 @@ impl ServiceReport {
         for s in &self.priority {
             out.push_str(&format!("\n  {}", s.line()));
         }
+        if let Some(sc) = &self.scenario {
+            for st in &sc.streams {
+                out.push_str(&format!("\n  {}", st.line()));
+            }
+        }
         out
+    }
+
+    /// Machine-readable report (`serve --report-json`): run identity and
+    /// counts, per-label latency quantiles, SLO verdicts, the scenario
+    /// stream table, and a BENCH schema-2 compatible `class_matrix` row
+    /// keyed `serve/<scenario>` (or `serve` for flat runs) — the exact
+    /// cell shape the flow_sim bench writes, so CI can splice scenario
+    /// rows into BENCH_pr.json without translation.
+    pub fn to_json(&self) -> Json {
+        let cell = |n: usize, q: &Option<Quantiles>| match q {
+            None => Json::Null,
+            Some(q) => Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("p50_s", Json::num(q.q50)),
+                ("p95_s", Json::num(q.q95)),
+                ("p99_s", Json::num(q.q99)),
+            ]),
+        };
+        let row = Json::Obj(
+            self.priority_latency
+                .iter()
+                .map(|(p, n, q)| {
+                    (crate::config::scenario::priority_name(*p).to_string(), cell(*n, q))
+                })
+                .collect(),
+        );
+        let key = match &self.scenario {
+            Some(sc) => format!("serve/{}", sc.name),
+            None => "serve".to_string(),
+        };
+        Json::obj(vec![
+            ("schema", Json::num(2.0)),
+            ("kind", Json::str("serve-report")),
+            ("seed", Json::str(format!("{:#x}", self.seed))),
+            ("served", Json::num(self.served as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("preempted", Json::num(self.preempted as f64)),
+            ("duration_s", Json::num(self.duration_s)),
+            ("throughput_qps", Json::num(self.throughput_qps)),
+            ("peak_concurrency", Json::num(self.peak_concurrency as f64)),
+            ("channel_utilization", Json::num(self.channel_utilization)),
+            (
+                "class_latency",
+                Json::Obj(
+                    self.class_latency
+                        .iter()
+                        .map(|(l, q)| {
+                            (
+                                l.clone(),
+                                Json::obj(vec![
+                                    ("p50_s", Json::num(q.q50)),
+                                    ("p95_s", Json::num(q.q95)),
+                                    ("p99_s", Json::num(q.q99)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "slo",
+                Json::arr(self.slo.iter().map(|s| {
+                    Json::obj(vec![
+                        ("label", Json::str(s.label.clone())),
+                        ("target_p99_s", Json::num(s.target_p99_s)),
+                        (
+                            "actual_p99_s",
+                            s.actual_p99_s.map_or(Json::Null, Json::num),
+                        ),
+                        ("pass", Json::Bool(s.pass)),
+                    ])
+                })),
+            ),
+            ("class_matrix", Json::Obj([(key, row)].into_iter().collect())),
+            (
+                "scenario",
+                self.scenario.as_ref().map_or(Json::Null, |sc| sc.to_json()),
+            ),
+        ])
     }
 }
 
@@ -591,9 +701,15 @@ impl<'g> GraphService<'g> {
     /// otherwise the graph is static and served by one machine — the
     /// byte-identical fast path.
     pub fn serve(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
-        anyhow::ensure!(cfg.queries > 0, "need at least one query");
+        anyhow::ensure!(
+            cfg.scenario.is_some() || cfg.queries > 0,
+            "need at least one query"
+        );
         cfg.workload.validate()?;
         cfg.weights.validate()?;
+        if let Some(spec) = &cfg.scenario {
+            spec.validate()?;
+        }
         if let Some(mix) = &cfg.priority_mix {
             mix.validate()?;
         }
@@ -610,7 +726,7 @@ impl<'g> GraphService<'g> {
         if cfg.fleet.is_some() {
             return self.serve_fleet(cfg);
         }
-        let (requests, arrivals) = self.build_query_stream(cfg);
+        let (requests, arrivals, smap) = self.build_query_stream(cfg)?;
 
         let policy = Policy::ConcurrentAdmitted {
             on_full: cfg.on_full,
@@ -658,7 +774,7 @@ impl<'g> GraphService<'g> {
         };
 
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
-        let out = self.build_report(cfg, &report, first_arrival, None);
+        let out = self.build_report(cfg, &report, first_arrival, None, smap.as_ref());
         if let Some(mut buf) = tracer {
             buf.events.extend(coord_events);
             self.export_trace(cfg, &buf, self.coord.machine())?;
@@ -686,7 +802,7 @@ impl<'g> GraphService<'g> {
     /// [`FleetStats`] section (per-shard utilization, interconnect bytes).
     fn serve_fleet(&self, cfg: &ServiceConfig) -> anyhow::Result<ServiceReport> {
         let fleet = self.build_fleet(cfg)?.expect("fleet config present");
-        let (requests, arrivals) = self.build_query_stream(cfg);
+        let (requests, arrivals, smap) = self.build_query_stream(cfg)?;
         let view = self.coord.view();
         // Batching composes with the fleet: the plan fuses compatible
         // arrivals exactly as on one machine, and each fused request is
@@ -736,7 +852,7 @@ impl<'g> GraphService<'g> {
             (None, None) => fleet_coord.run_specs(&requests, &specs, policy)?,
         };
         let first_arrival = arrivals.first().copied().unwrap_or(0.0) * 1e-9;
-        let mut out = self.build_report(cfg, &report, first_arrival, None);
+        let mut out = self.build_report(cfg, &report, first_arrival, None, smap.as_ref());
         out.fleet = Some(fleet.stats(&specs, out.duration_s * 1e9));
         if let Some(mut buf) = tracer {
             buf.events.extend(coord_events);
@@ -807,7 +923,7 @@ impl<'g> GraphService<'g> {
         let mut coord_events: Vec<TraceEvent> = Vec::new();
         // One shared generator with the static path: the query stream for
         // a given seed is draw-for-draw the same with or without mutation.
-        let (query_requests, arrivals) = self.build_query_stream(cfg);
+        let (query_requests, arrivals, smap) = self.build_query_stream(cfg)?;
 
         // The mutation stream forks an independent, surfaceable seed: one
         // number in the report reproduces the whole run.
@@ -1132,7 +1248,7 @@ impl<'g> GraphService<'g> {
         // Both lists are non-empty here (queries > 0 is enforced; an empty
         // batch stream got a fallback batch above).
         let first_arrival_ns = batch_arrivals[0].min(arrivals[0]);
-        let mut out = self.build_report(cfg, &report, first_arrival_ns * 1e-9, None);
+        let mut out = self.build_report(cfg, &report, first_arrival_ns * 1e-9, None, smap.as_ref());
         // One duration for the whole report: the update throughput shares
         // build_report's denominator by construction.
         out.mutation = Some(MutationStats {
@@ -1181,12 +1297,24 @@ impl<'g> GraphService<'g> {
 
     /// Generate the seeded query stream: sources, Poisson arrivals, and
     /// per-query class/priority/deadline draws, in arrival order. The ONE
-    /// generator both the static and mutating serve paths use — the
+    /// generator all serve paths (static, fleet, mutating) use — the
     /// mutation lane's determinism contract ("same seed, same query
     /// stream") depends on them consuming the rng draw-for-draw
-    /// identically, so there is exactly one copy of this code.
-    fn build_query_stream(&self, cfg: &ServiceConfig) -> (Vec<QueryRequest>, Vec<f64>) {
+    /// identically, so there is exactly one copy of this code. With
+    /// [`ServiceConfig::scenario`] set, the flat Poisson generator is
+    /// replaced wholesale by the scenario compiler
+    /// ([`super::scenario::compile`]) and the returned map ties every
+    /// request back to its tenant stream for per-stream reporting.
+    fn build_query_stream(
+        &self,
+        cfg: &ServiceConfig,
+    ) -> anyhow::Result<(Vec<QueryRequest>, Vec<f64>, Option<ScenarioMap>)> {
         let g = self.coord.graph();
+        if let Some(spec) = &cfg.scenario {
+            let tl =
+                super::scenario::compile(g, &AnalysisRegistry::builtin(), spec, cfg.seed)?;
+            return Ok((tl.requests, tl.arrivals, Some(tl.map)));
+        }
         let mut rng = SplitMix64::new(cfg.seed);
         let sources = crate::graph::sample::bfs_sources(g, cfg.queries, rng.next_u64());
         let arrivals = arrival_times(cfg.queries, cfg.arrival_rate_per_s, rng.next_u64());
@@ -1208,7 +1336,7 @@ impl<'g> GraphService<'g> {
                 req
             })
             .collect();
-        (requests, arrivals)
+        Ok((requests, arrivals, None))
     }
 
     /// Assemble the operator report. `served`/`rejected`/`shed`/
@@ -1220,6 +1348,7 @@ impl<'g> GraphService<'g> {
         report: &crate::coordinator::metrics::RunReport,
         first_arrival_s: f64,
         mutation: Option<MutationStats>,
+        smap: Option<&ScenarioMap>,
     ) -> ServiceReport {
         let duration_s = (report.makespan_s - first_arrival_s).max(f64::MIN_POSITIVE);
         let queries = || {
@@ -1229,6 +1358,27 @@ impl<'g> GraphService<'g> {
                 .filter(|r| r.label != MUTATE_LABEL && r.label != COMPACT_LABEL)
         };
         let served = queries().filter(|r| r.completed()).count();
+        let priority_latency: Vec<(Priority, usize, Option<Quantiles>)> =
+            [Priority::Interactive, Priority::Standard, Priority::Batch]
+                .into_iter()
+                .map(|p| {
+                    let xs: Vec<f64> = queries()
+                        .filter(|r| r.completed() && r.admitted_as == p)
+                        .map(|r| r.latency_s)
+                        .collect();
+                    (p, xs.len(), Quantiles::try_from_samples(&xs))
+                })
+                .collect();
+        // The k-th query record is the k-th compiled scenario request in
+        // every serve path: mutation/compaction lanes carry their own
+        // labels (filtered above) and queries keep submission order.
+        let scenario = match (&cfg.scenario, smap) {
+            (Some(spec), Some(map)) => {
+                let recs: Vec<&crate::coordinator::metrics::QueryRecord> = queries().collect();
+                Some(ScenarioStats::from_records(spec, map, &recs))
+            }
+            _ => None,
+        };
         let class_latency: Vec<(String, Quantiles)> = report
             .per_class_quantiles()
             .into_iter()
@@ -1262,11 +1412,13 @@ impl<'g> GraphService<'g> {
             class_latency,
             slo,
             priority: report.priority_stats(),
+            priority_latency,
             peak_concurrency: report.peak_concurrency,
             channel_utilization: report.mean_channel_utilization,
             seed: cfg.seed,
             mutation,
             fleet: None,
+            scenario,
         }
     }
 }

@@ -49,6 +49,24 @@
 //!                                      <stem>.telemetry.json beside it;
 //!                                      sample = telemetry interval in
 //!                                      simulated ns, default auto)
+//!                       [--scenario <name|file.json>]
+//!                                     (open-loop multi-tenant load scenario:
+//!                                      a catalog name — steady, diurnal,
+//!                                      burst, overload-ramp,
+//!                                      multi-tenant-contention — or a
+//!                                      ScenarioSpec JSON file; replaces
+//!                                      --queries/--rate/--mix/--priority-mix
+//!                                      with per-stream arrival processes;
+//!                                      see docs/SCENARIOS.md)
+//!                       [--scenario-compress F]
+//!                                     (play the scenario F× faster: rates ×F,
+//!                                      duration ÷F — same expected arrivals,
+//!                                      F× the instantaneous load)
+//!                       [--report-json out.json]
+//!                                     (write the machine-readable service
+//!                                      report: counts, per-class latency,
+//!                                      SLO verdicts, per-stream stats, and a
+//!                                      BENCH schema-2 class_matrix row)
 //! pathfinder experiment fig3|fig4|table1|table2|table3|scaling|ablation|all
 //!                       [--scale N] [--results DIR] [--config cfg.json]
 //!                       [--measure-baseline] [--artifacts DIR]
@@ -66,6 +84,7 @@ use pathfinder_queries::bench_harness::{
 };
 use pathfinder_queries::config::experiment::ExperimentConfig;
 use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::scenario::ScenarioSpec;
 use pathfinder_queries::config::workload::GraphConfig;
 use pathfinder_queries::coordinator::{
     planner, telemetry, BatchConfig, Coordinator, FleetConfig, GraphService, MutationConfig,
@@ -480,6 +499,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => None,
         },
         trace: args.opt("trace").map(TraceSpec::parse).transpose()?,
+        scenario: match args.opt("scenario") {
+            Some(arg) => {
+                let spec = ScenarioSpec::load(arg)?;
+                match args.opt_parse::<f64>("scenario-compress")? {
+                    Some(f) => Some(spec.time_compressed(f)?),
+                    None => Some(spec),
+                }
+            }
+            None => {
+                anyhow::ensure!(
+                    args.opt("scenario-compress").is_none(),
+                    "--scenario-compress needs --scenario"
+                );
+                None
+            }
+        },
         seed: args.opt_parse_or("seed", 0x5E21)?,
     };
     let mix_desc: Vec<String> = cfg
@@ -500,17 +535,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(b) => format!(", batching {}", b.label()),
         None => String::new(),
     };
-    println!(
-        "serving {} queries at {:.0} q/s ({}) on {} (seed {:#x}){}{}{}...",
-        cfg.queries,
-        cfg.arrival_rate_per_s,
-        mix_desc.join(","),
-        svc.coordinator().machine().cfg.name,
-        cfg.seed,
-        mutate_desc,
-        fleet_desc,
-        batch_desc
-    );
+    match &cfg.scenario {
+        Some(spec) => {
+            let streams: Vec<String> = spec
+                .streams
+                .iter()
+                .map(|s| format!("{} {}", s.name, s.process.label()))
+                .collect();
+            println!(
+                "serving scenario {:?} over {:.3}s — {} expected arrivals [{}] on {} \
+                 (seed {:#x}){}{}{}...",
+                spec.name,
+                spec.duration_s,
+                spec.expected_arrivals().round() as u64,
+                streams.join("; "),
+                svc.coordinator().machine().cfg.name,
+                cfg.seed,
+                mutate_desc,
+                fleet_desc,
+                batch_desc
+            );
+        }
+        None => println!(
+            "serving {} queries at {:.0} q/s ({}) on {} (seed {:#x}){}{}{}...",
+            cfg.queries,
+            cfg.arrival_rate_per_s,
+            mix_desc.join(","),
+            svc.coordinator().machine().cfg.name,
+            cfg.seed,
+            mutate_desc,
+            fleet_desc,
+            batch_desc
+        ),
+    }
     let rep = svc.serve(&cfg)?;
     println!("{}", rep.summary());
     if let Some(tspec) = &cfg.trace {
@@ -519,6 +576,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             tspec.path.display(),
             telemetry::telemetry_path(&tspec.path).display()
         );
+    }
+    if let Some(path) = args.opt("report-json") {
+        let path = std::path::Path::new(path);
+        rep.to_json().write_file(path)?;
+        println!("report written: {}", path.display());
     }
     Ok(())
 }

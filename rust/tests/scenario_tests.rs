@@ -1,0 +1,518 @@
+//! Scenario-harness regression suite: the open-loop/determinism property
+//! test, the overload-ramp acceptance test (shed + preempt in one run),
+//! golden-trace and telemetry reconciliation against the PR 9 artifact
+//! schemas, stream-seed order independence, and catalog/builtin parity.
+
+use std::collections::BTreeMap;
+
+use pathfinder_queries::alg::AnalysisRegistry;
+use pathfinder_queries::config::machine::MachineConfig;
+use pathfinder_queries::config::scenario::{ArrivalProcess, ScenarioSpec, StreamSpec};
+use pathfinder_queries::config::workload::GraphConfig;
+use pathfinder_queries::coordinator::scenario::{stream_seed, ScenarioTimeline};
+use pathfinder_queries::coordinator::telemetry::telemetry_path;
+use pathfinder_queries::coordinator::{
+    compile_scenario, planner, Coordinator, GraphService, Policy, PreemptPolicy, Priority,
+    ServiceConfig, ShareWeights, TraceSpec,
+};
+use pathfinder_queries::graph::builder::build_undirected_csr;
+use pathfinder_queries::graph::csr::Csr;
+use pathfinder_queries::sim::flow::OnFull;
+use pathfinder_queries::sim::machine::Machine;
+use pathfinder_queries::util::json::Json;
+use pathfinder_queries::util::rng::SplitMix64;
+
+fn rmat(scale: u32) -> Csr {
+    let cfg = GraphConfig::with_scale(scale);
+    build_undirected_csr(1 << scale, &pathfinder_queries::graph::rmat::Rmat::new(cfg).edges())
+}
+
+/// Pathfinder-8 with thread-context memory cut to 8 in-flight queries:
+/// small enough that the catalog's overload shapes actually overload.
+fn capacity8_machine() -> Machine {
+    let mut cfg = MachineConfig::pathfinder_8();
+    cfg.ctx_mem_per_node_bytes = 16 << 20;
+    Machine::new(cfg)
+}
+
+fn repo_path(rel: &str) -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(rel)
+}
+
+/// A deliberately tiny scenario for serve-path tests (~40 arrivals).
+fn mini_spec() -> ScenarioSpec {
+    ScenarioSpec::new(
+        "mini",
+        1.0,
+        vec![
+            StreamSpec::new(
+                "fast",
+                ArrivalProcess::Constant { rate_per_s: 25.0 },
+                vec![("khop".into(), 1.0)],
+            )
+            .with_priority(Priority::Interactive)
+            .with_slo_p99_s(5.0),
+            StreamSpec::new(
+                "bulk",
+                ArrivalProcess::Constant { rate_per_s: 15.0 },
+                vec![("bfs".into(), 1.0)],
+            )
+            .with_priority(Priority::Batch),
+        ],
+    )
+}
+
+/// The structural contract `ci/validate_trace.py` enforces, mirrored in
+/// Rust so the suite guards it even where python3 is unavailable.
+fn assert_trace_contract(doc: &Json) {
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "traceEvents must be non-empty");
+    let mut last_ts = f64::NEG_INFINITY;
+    let mut stacks: BTreeMap<(u64, u64), Vec<String>> = BTreeMap::new();
+    let (mut counters, mut spans_or_instants) = (0usize, 0usize);
+    for ev in events {
+        let ph = ev.str_of("ph").unwrap();
+        assert!(matches!(ph.as_str(), "B" | "E" | "i" | "C" | "M"), "bad ph {ph:?}");
+        assert!(!ev.str_of("name").unwrap().is_empty(), "empty event name");
+        let pid = ev.get("pid").unwrap().as_u64().unwrap();
+        let tid = ev.get("tid").unwrap().as_u64().unwrap();
+        match ph.as_str() {
+            "C" => counters += 1,
+            "B" | "i" => spans_or_instants += 1,
+            _ => {}
+        }
+        if ph == "M" {
+            continue; // metadata carries no timestamp
+        }
+        let ts = ev.get("ts").unwrap().as_f64().unwrap();
+        assert!(ts.is_finite() && ts >= 0.0, "ts must be finite and non-negative, got {ts}");
+        assert!(ts >= last_ts, "events must be globally sorted by ts ({ts} < {last_ts})");
+        last_ts = ts;
+        if ph == "B" {
+            stacks.entry((pid, tid)).or_default().push(ev.str_of("name").unwrap());
+        } else if ph == "E" {
+            let name = ev.str_of("name").unwrap();
+            let opened = stacks.get_mut(&(pid, tid)).and_then(|s| s.pop());
+            assert_eq!(
+                opened.as_deref(),
+                Some(name.as_str()),
+                "B/E spans must nest LIFO per (pid, tid) track"
+            );
+        }
+    }
+    assert!(stacks.values().all(|s| s.is_empty()), "unclosed B spans: {stacks:?}");
+    assert!(counters > 0, "need at least one counter (C) event");
+    assert!(spans_or_instants > 0, "need at least one span (B) or instant (i) event");
+}
+
+/// Run `ci/validate_trace.py` on a trace if python3 exists on this
+/// machine; None = interpreter unavailable, skip silently.
+fn validate_with_python(path: &std::path::Path) -> Option<bool> {
+    std::process::Command::new("python3")
+        .arg(repo_path("ci/validate_trace.py"))
+        .arg(path)
+        .output()
+        .ok()
+        .map(|out| out.status.success())
+}
+
+/// Satellite 1 — the tentpole's core properties:
+/// (a) same seed compiles to a bit-identical merged timeline;
+/// (b) arrival instants are open-loop: the engine records the same
+///     arrivals under wildly different serving policies, so completions
+///     can't feed back into the generator;
+/// (c) per-stream sampled counts track each process's closed-form
+///     expectation.
+#[test]
+fn prop_scenario_streams_are_open_loop_and_deterministic() {
+    let g = rmat(10);
+    let reg = AnalysisRegistry::builtin();
+
+    // Probe-calibrate the engine runs: compress each catalog spec so its
+    // nominal mid-load (200/s units) sits at this machine's measured
+    // drain rate — guaranteeing real contention whatever the absolute
+    // speed of the simulated machine is.
+    let coord = Coordinator::new(&g, capacity8_machine());
+    let probe = coord
+        .run(&planner::bfs_queries(&g, 32, 0xCAFE), Policy::admitted(OnFull::Queue))
+        .unwrap();
+    let f = (32.0 / probe.makespan_s) / 200.0;
+
+    // (a) + (b) on two catalog entries that together cover all four
+    // arrival processes (constant/diurnal/bursty + ramp).
+    for name in ["multi-tenant-contention", "overload-ramp"] {
+        let spec = ScenarioSpec::builtin(name).unwrap().time_compressed(f).unwrap();
+        let a = compile_scenario(&g, &reg, &spec, 0xD1CE).unwrap();
+        let b = compile_scenario(&g, &reg, &spec, 0xD1CE).unwrap();
+        assert_eq!(a.arrivals.len(), b.arrivals.len(), "{name}: same seed, same count");
+        for (x, y) in a.arrivals.iter().zip(&b.arrivals) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}: bit-identical merged timeline");
+        }
+        assert_eq!(a.map, b.map, "{name}: same stream attribution");
+
+        let queue = coord.run(&a.requests, Policy::admitted(OnFull::Queue)).unwrap();
+        let shed = coord
+            .run(&a.requests, Policy::admitted(OnFull::Shed { max_waiting: 1 }))
+            .unwrap();
+        assert_eq!(queue.records.len(), a.requests.len());
+        assert_eq!(shed.records.len(), a.requests.len());
+        assert!(
+            shed.records.iter().filter(|r| r.shed()).count() > 0,
+            "{name}: a one-slot queue must shed under catalog load"
+        );
+        // The two runs dispose of queries very differently, yet every
+        // arrival instant is identical — the open-loop contract.
+        for (q, s) in queue.records.iter().zip(&shed.records) {
+            assert_eq!(
+                q.arrival_s.to_bits(),
+                s.arrival_s.to_bits(),
+                "{name}: arrivals must not depend on the serving policy"
+            );
+        }
+        // And they are exactly the compiled instants.
+        for (r, &t_ns) in queue.records.iter().zip(&a.arrivals) {
+            assert!(
+                (r.arrival_s - t_ns * 1e-9).abs() < 1e-12,
+                "{name}: engine arrival {} != compiled {}",
+                r.arrival_s,
+                t_ns * 1e-9
+            );
+        }
+    }
+
+    // (c) closed-form expectations: the sampled count, averaged over a
+    // fixed seed set, lands near E[N] for every catalog stream. The
+    // bursty streams are doubly stochastic (dwell modulation adds
+    // variance beyond Poisson), hence the generous 20% band; 64 seeds
+    // put the mean's spread at a quarter of that or less.
+    for spec in ScenarioSpec::catalog() {
+        for stream in &spec.streams {
+            let expected = stream.process.expected_arrivals(spec.duration_s);
+            let mut mean = 0.0;
+            const SEEDS: u64 = 64;
+            for s in 0..SEEDS {
+                let mut rng = SplitMix64::new(stream_seed(s, &stream.name));
+                mean +=
+                    stream.process.sample_arrivals_ns(spec.duration_s, &mut rng).len() as f64;
+            }
+            mean /= SEEDS as f64;
+            let tol = (0.2 * expected).max(15.0);
+            assert!(
+                (mean - expected).abs() < tol,
+                "{}/{}: mean sampled count {mean:.1} vs closed-form {expected:.1} (tol {tol:.1})",
+                spec.name,
+                stream.name
+            );
+        }
+    }
+}
+
+/// Satellite 4 — per-stream seeds derive from the stream *name*, so
+/// reordering the streams of a spec changes nothing about any stream's
+/// arrivals or draws.
+#[test]
+fn stream_seeds_are_independent_of_stream_order() {
+    let g = rmat(10);
+    let reg = AnalysisRegistry::builtin();
+    let spec = ScenarioSpec::builtin("steady").unwrap();
+    let mut rev = spec.clone();
+    rev.streams.reverse();
+
+    let a = compile_scenario(&g, &reg, &spec, 42).unwrap();
+    let b = compile_scenario(&g, &reg, &rev, 42).unwrap();
+
+    // Group arrivals per stream name (merged order differs, content must not).
+    let by_name = |tl: &ScenarioTimeline| -> BTreeMap<String, (u64, Vec<u64>)> {
+        let mut m: BTreeMap<String, (u64, Vec<u64>)> = tl
+            .map
+            .streams
+            .iter()
+            .map(|cs| (cs.name.clone(), (cs.seed, Vec::new())))
+            .collect();
+        for (&t, &si) in tl.arrivals.iter().zip(&tl.map.stream_of) {
+            m.get_mut(&tl.map.streams[si].name).unwrap().1.push(t.to_bits());
+        }
+        m
+    };
+    assert_eq!(by_name(&a), by_name(&b), "reordering streams must not move any arrival");
+    // The merged timelines are therefore identical too.
+    let bits = |tl: &ScenarioTimeline| tl.arrivals.iter().map(|t| t.to_bits()).collect::<Vec<_>>();
+    assert_eq!(bits(&a), bits(&b));
+    // And the seeds are exactly the documented name-derived values.
+    for cs in &a.map.streams {
+        assert_eq!(cs.seed, stream_seed(42, &cs.name));
+    }
+}
+
+/// Satellite 4 (report half) — the service report surfaces each stream's
+/// seed, stream counts partition the run, and the JSON form keeps u64
+/// seeds precise as hex strings.
+#[test]
+fn report_surfaces_per_stream_seeds_and_partition() {
+    let g = rmat(10);
+    let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let cfg = ServiceConfig {
+        scenario: Some(mini_spec()),
+        seed: 0xFEED_FACE_CAFE_BEEF,
+        ..Default::default()
+    };
+    let rep = svc.serve(&cfg).unwrap();
+    let sc = rep.scenario.as_ref().expect("scenario runs carry a scenario section");
+    assert_eq!(sc.name, "mini");
+    for st in &sc.streams {
+        assert_eq!(st.seed, stream_seed(cfg.seed, &st.name), "stream {}", st.name);
+        assert_eq!(
+            st.completed + st.rejected + st.shed,
+            st.arrivals,
+            "stream {} outcome partition",
+            st.name
+        );
+    }
+    let arrivals: usize = sc.streams.iter().map(|s| s.arrivals).sum();
+    assert_eq!(arrivals, rep.served + rep.rejected + rep.shed);
+
+    let s = rep.summary();
+    assert!(
+        s.contains(&format!("{:#018x}", sc.streams[0].seed)),
+        "summary must print per-stream seeds:\n{s}"
+    );
+    assert!(s.contains("SLO"), "summary must carry the stream SLO verdict:\n{s}");
+
+    // JSON: seeds as hex strings (Json numbers are f64 — u64 seeds would
+    // silently lose bits), class_matrix keyed by scenario name.
+    let j = rep.to_json();
+    let streams = j.get("scenario").unwrap().get("streams").unwrap().as_arr().unwrap();
+    assert_eq!(streams.len(), 2);
+    for st in streams {
+        let hex = st.str_of("seed").unwrap();
+        assert!(hex.starts_with("0x"), "seed must serialize as hex, got {hex:?}");
+        let parsed = u64::from_str_radix(hex.trim_start_matches("0x"), 16).unwrap();
+        assert_eq!(parsed, stream_seed(cfg.seed, &st.str_of("name").unwrap()));
+    }
+    assert!(j.get("class_matrix").unwrap().get("serve/mini").is_ok(), "BENCH row key");
+}
+
+/// Catalog parity — every checked-in `ci/scenarios/*.json` parses to
+/// exactly its builtin (so docs, CLI names and files can't drift), and
+/// `ScenarioSpec::load` resolves names before paths.
+#[test]
+fn catalog_files_match_builtins() {
+    for name in ScenarioSpec::catalog_names() {
+        let path = repo_path(&format!("ci/scenarios/{name}.json"));
+        let spec =
+            ScenarioSpec::parse_file(&path).unwrap_or_else(|e| panic!("{path:?}: {e:#}"));
+        assert_eq!(
+            spec,
+            ScenarioSpec::builtin(name).unwrap(),
+            "checked-in {name}.json must equal the builtin"
+        );
+        assert_eq!(ScenarioSpec::load(name).unwrap(), spec, "load({name}) resolves the builtin");
+    }
+    assert!(ScenarioSpec::load("no-such-scenario").is_err());
+}
+
+/// Satellite 3 (golden trace) — the checked-in fixture passes both the
+/// Rust mirror of the validator contract and, where python3 exists, the
+/// real `ci/validate_trace.py`. Guards the PR 9 trace schema against
+/// drift: if the exporter's shape changes, regenerate the fixture
+/// deliberately.
+#[test]
+fn golden_trace_fixture_passes_the_validator() {
+    let path = repo_path("ci/fixtures/scenario_golden_trace.json");
+    let doc = Json::parse_file(&path).unwrap();
+    assert_eq!(doc.str_of("displayTimeUnit").unwrap(), "ns");
+    assert_trace_contract(&doc);
+    if let Some(ok) = validate_with_python(&path) {
+        assert!(ok, "ci/validate_trace.py must accept the golden fixture");
+    }
+}
+
+/// Satellite 3 (reconciliation) — a traced scenario run's telemetry
+/// sidecar must agree with the `ServiceReport`: event counts equal the
+/// report's served/shed/rejected partition, and the Chrome trace passes
+/// the validator contract.
+#[test]
+fn traced_scenario_run_reconciles_with_telemetry() {
+    let g = rmat(10);
+    let svc = GraphService::new(&g, Machine::new(MachineConfig::pathfinder_8()));
+    let dir = std::env::temp_dir().join("pfq-scenario-tests");
+    let trace_file = dir.join("mini.trace.json");
+    let cfg = ServiceConfig {
+        scenario: Some(mini_spec()),
+        trace: Some(TraceSpec::new(trace_file.clone())),
+        seed: 0x7ACE,
+        ..Default::default()
+    };
+    let rep = svc.serve(&cfg).unwrap();
+
+    let doc = Json::parse_file(&trace_file).unwrap();
+    assert_eq!(doc.str_of("displayTimeUnit").unwrap(), "ns");
+    assert_trace_contract(&doc);
+    if let Some(ok) = validate_with_python(&trace_file) {
+        assert!(ok, "ci/validate_trace.py must accept a live scenario trace");
+    }
+
+    let tel = Json::parse_file(&telemetry_path(&trace_file)).unwrap();
+    assert_eq!(tel.str_of("schema").unwrap(), "pfq-telemetry-v1");
+    let counts = tel.get("event_counts").unwrap();
+    let count = |k: &str| {
+        counts.get_opt(k).map(|v| v.as_f64().unwrap() as usize).unwrap_or(0)
+    };
+    let total = rep.served + rep.rejected + rep.shed;
+    assert_eq!(count("arrival"), total, "every compiled request must emit an arrival event");
+    assert_eq!(count("finish"), rep.served, "finish events reconcile with served");
+    assert_eq!(count("shed"), rep.shed, "shed events reconcile");
+    assert_eq!(count("reject"), rep.rejected, "reject events reconcile");
+}
+
+/// Satellite 2 — the acceptance test: on the overload-ramp scenario with
+/// shed + preempt enabled, Batch work sheds strictly before Interactive,
+/// no Interactive arrival before the hand-derived ramp knee misses its
+/// SLO, and Completed/Rejected/Shed partition the run exactly — with
+/// both shedding AND preemption demonstrably firing in the same run.
+#[test]
+fn overload_ramp_sheds_batch_before_interactive() {
+    let g = rmat(10);
+    let machine = capacity8_machine();
+    let coord = Coordinator::new(&g, machine.clone());
+
+    // Probe this machine's sustained drain rate: a saturating 32-query
+    // bfs burst (arrivals at t=0) drains in makespan M, so mu ~= 32/M
+    // queries/s is the capacity the ramp must cross.
+    let burst = planner::bfs_queries(&g, 32, 0xCAFE);
+    let probe = coord.run(&burst, Policy::admitted(OnFull::Queue)).unwrap();
+    let mu = 32.0 / probe.makespan_s;
+    assert!(mu.is_finite() && mu > 0.0);
+
+    // Anchor the interactive latency scale: solo khop service time.
+    let solo = coord
+        .run(&planner::khop_queries(&g, 4, 2, 0xBEEF), Policy::Sequential)
+        .unwrap();
+    let solo_khop_s = solo.latencies(None).into_iter().fold(0.0f64, f64::max);
+    assert!(solo_khop_s > 0.0);
+
+    // Retarget the catalog ramp at this machine: the builtin is sized in
+    // nominal units (mean total rate 345/s against the CI smoke box);
+    // compress so its mid-ramp rate sits at the measured capacity. After
+    // compression the offered load is (50 + 590u) * mu/200 for ramp
+    // fraction u — it crosses mu at the knee u* = 150/590, and ends at
+    // 3.2*mu: deep, sustained overload in the back half.
+    let f = mu / 200.0;
+    let mut spec =
+        ScenarioSpec::builtin("overload-ramp").unwrap().time_compressed(f).unwrap();
+    // The catalog's 0.25 s SLO is sized for the CI smoke machine; on this
+    // probe-calibrated run the target is anchored to measured solo
+    // latency so the assertion is about *scheduling*, not machine speed.
+    let slo_s = 25.0 * solo_khop_s;
+    for s in &mut spec.streams {
+        if s.name == "interactive-frontend" {
+            s.slo_p99_s = Some(slo_s);
+        }
+    }
+
+    let on_full = OnFull::Shed { max_waiting: 32 };
+    let weights = ShareWeights::priority_weighted();
+    let svc = GraphService::new(&g, machine.clone());
+    let cfg = ServiceConfig {
+        scenario: Some(spec.clone()),
+        on_full,
+        weights,
+        preempt: Some(PreemptPolicy::default()),
+        seed: 9,
+        ..Default::default()
+    };
+    let rep = svc.serve(&cfg).unwrap();
+
+    // Both overload mechanisms fire in ONE run (the PR acceptance bar).
+    assert!(rep.shed > 0, "the ramp must shed: {}", rep.summary());
+    assert!(rep.preempted > 0, "interactive pressure must preempt batch: {}", rep.summary());
+
+    let sc = rep.scenario.as_ref().expect("scenario section");
+    let inter = sc.stream("interactive-frontend").expect("interactive stream");
+    let batch = sc.stream("batch-ingest-ramp").expect("batch stream");
+    assert!(batch.shed > 0, "overload lands on the Batch stream");
+    assert_eq!(
+        inter.shed + inter.rejected,
+        0,
+        "interactive work is never dropped while batch waiters exist"
+    );
+    for st in &sc.streams {
+        assert_eq!(
+            st.completed + st.rejected + st.shed,
+            st.arrivals,
+            "stream {}: Completed/Rejected/Shed must partition arrivals exactly",
+            st.name
+        );
+    }
+    assert_eq!(rep.served + rep.rejected + rep.shed, inter.arrivals + batch.arrivals);
+
+    // Record-level assertions: replay the identical compiled timeline
+    // through the coordinator (serve's own engine path) for per-query
+    // outcomes and times.
+    let tl = compile_scenario(&g, &AnalysisRegistry::builtin(), &spec, cfg.seed).unwrap();
+    let run = coord
+        .run(
+            &tl.requests,
+            Policy::ConcurrentAdmitted {
+                on_full,
+                weights,
+                preempt: Some(PreemptPolicy::default()),
+            },
+        )
+        .unwrap();
+    assert_eq!(run.records.len(), tl.requests.len());
+    for r in &run.records {
+        let outcomes = [r.completed(), r.rejected(), r.shed()];
+        assert_eq!(
+            outcomes.iter().filter(|&&x| x).count(),
+            1,
+            "query {} must land in exactly one outcome bucket",
+            r.id
+        );
+    }
+    // serve() and the raw coordinator agree on the same timeline+policy.
+    assert_eq!(run.records.iter().filter(|r| r.shed()).count(), rep.shed);
+
+    // Batch sheds strictly before Interactive (vacuously if Interactive
+    // never sheds — which the stream assertion above already pinned).
+    let first_shed_arrival = |p: Priority| {
+        run.records
+            .iter()
+            .filter(|r| r.shed() && r.priority == p)
+            .map(|r| r.arrival_s)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let first_batch = first_shed_arrival(Priority::Batch);
+    assert!(first_batch.is_finite(), "batch work must shed");
+    assert!(
+        first_batch < first_shed_arrival(Priority::Interactive),
+        "batch must shed strictly before any interactive shed"
+    );
+
+    // Hand-derived knee: offered load (50 + 590u)*mu/200 crosses mu at
+    // u* = 150/590 ~ 0.254. Before *half* the knee the machine has ~40%
+    // headroom, so every Interactive arrival there must complete within
+    // the anchored SLO — zero misses until the knee.
+    let knee_u = 150.0 / 590.0;
+    let cutoff_s = 0.5 * knee_u * spec.duration_s;
+    let mut pre_knee = 0usize;
+    for (r, &si) in run.records.iter().zip(&tl.map.stream_of) {
+        if spec.streams[si].name != "interactive-frontend" || r.arrival_s >= cutoff_s {
+            continue;
+        }
+        pre_knee += 1;
+        assert!(
+            r.completed(),
+            "pre-knee interactive arrival at {:.4}s must complete",
+            r.arrival_s
+        );
+        assert!(
+            r.latency_s <= slo_s,
+            "pre-knee interactive at {:.4}s missed SLO: {:.4}s > {:.4}s",
+            r.arrival_s,
+            r.latency_s,
+            slo_s
+        );
+    }
+    assert!(pre_knee > 0, "compression left no interactive arrivals before the knee");
+}
